@@ -1,0 +1,132 @@
+//! Ablations of the pipeline's design choices (DESIGN.md §ablations):
+//!
+//! 1. reshape: Optimize (Algorithm 1) vs Flat (N = T) vs worst-in-domain;
+//! 2. modified (non-cumulative) vs standard (cumulative) CSR row array;
+//! 3. rANS lane count scaling (1..16 lanes, serial vs threaded);
+//! 4. Algorithm-1 patience (1 = paper early stop, larger = more search).
+//!
+//! Run: `cargo bench --bench ablations`
+
+use rans_sc::eval::feature_tensor;
+use rans_sc::pipeline::{self, PipelineConfig, ReshapeStrategy};
+use rans_sc::quant::{quantize, QuantParams};
+use rans_sc::rans::{decode_interleaved, encode_interleaved, FreqTable};
+use rans_sc::reshape::{self, optimizer::OptimizerConfig};
+use rans_sc::sparse::ModCsr;
+use rans_sc::util::stats;
+use rans_sc::util::timer::measure;
+
+fn main() {
+    let dir = std::env::var("RANS_SC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let (data, source) = feature_tensor(&dir, "resnet_mini_synth_a", 2).expect("fixture");
+    let q = 4u8;
+    let params = QuantParams::fit(q, &data).expect("fit");
+    let symbols = quantize(&data, &params);
+    println!("# Ablations (source {source:?}, T = {}, Q = {q})", symbols.len());
+
+    // 1. Reshape strategy.
+    println!("\n## reshape strategy");
+    for (label, strat) in [
+        ("optimize (Alg.1)", ReshapeStrategy::Optimize),
+        ("flat (N=T)", ReshapeStrategy::Flat),
+    ] {
+        let cfg = PipelineConfig { q, lanes: 8, parallel: true, reshape: strat };
+        let (bytes, st) = pipeline::compress_quantized(&symbols, params, &cfg).expect("c");
+        println!(
+            "{label:<20} {:>10.1} KB  (N={}, K={}, H={:.3})",
+            bytes.len() as f64 / 1000.0,
+            st.n_rows,
+            st.n_cols,
+            st.entropy
+        );
+    }
+    // Worst divisor in the constrained domain, for scale.
+    {
+        let ocfg = OptimizerConfig::paper(q);
+        let oracle =
+            reshape::exhaustive_search(&symbols, params.zero_symbol(), &ocfg, true).expect("ex");
+        let worst = oracle
+            .trace
+            .iter()
+            .max_by(|a, b| a.t_tot_bits.partial_cmp(&b.t_tot_bits).unwrap())
+            .unwrap();
+        let cfg = PipelineConfig {
+            q,
+            lanes: 8,
+            parallel: true,
+            reshape: ReshapeStrategy::Fixed(worst.n),
+        };
+        let (bytes, _) = pipeline::compress_quantized(&symbols, params, &cfg).expect("c");
+        println!(
+            "{:<20} {:>10.1} KB  (N={})",
+            "worst-in-domain",
+            bytes.len() as f64 / 1000.0,
+            worst.n
+        );
+    }
+
+    // 2. Modified vs standard CSR row array entropy.
+    println!("\n## row-count encoding (modified vs cumulative CSR)");
+    {
+        let ocfg = OptimizerConfig::paper(q);
+        let best = reshape::optimize(&symbols, params.zero_symbol(), &ocfg).expect("opt").best;
+        let csr = ModCsr::encode(&symbols, best.n, best.k, params.zero_symbol()).expect("csr");
+        let direct = csr.row_counts.clone();
+        let mut cumulative = Vec::with_capacity(direct.len());
+        let mut acc = 0u32;
+        for &c in &direct {
+            acc += c;
+            cumulative.push(acc);
+        }
+        for (label, arr) in [("non-cumulative r", &direct), ("cumulative r", &cumulative)] {
+            let m = (*arr.iter().max().unwrap_or(&0) as usize) + 1;
+            let freqs = stats::histogram(&arr.iter().map(|&x| x).collect::<Vec<u32>>(), m);
+            println!(
+                "{label:<20} alphabet {:>8}  entropy {:>7.3} b/sym  -> {:>8.1} B coded",
+                m,
+                stats::shannon_entropy(&freqs),
+                stats::entropy_bits(&freqs) / 8.0
+            );
+        }
+    }
+
+    // 3. Lane scaling.
+    println!("\n## rANS lane scaling (encode, steady state)");
+    {
+        let ocfg = OptimizerConfig::paper(q);
+        let best = reshape::optimize(&symbols, params.zero_symbol(), &ocfg).expect("opt").best;
+        let csr = ModCsr::encode(&symbols, best.n, best.k, params.zero_symbol()).expect("csr");
+        let d = csr.concat();
+        let table = FreqTable::from_symbols(&d, csr.concat_alphabet(params.alphabet()));
+        for lanes in [1usize, 2, 4, 8, 16] {
+            for parallel in [false, true] {
+                let enc = measure(2, 10, || {
+                    encode_interleaved(&d, &table, lanes, parallel).expect("enc")
+                });
+                let bytes = encode_interleaved(&d, &table, lanes, parallel).expect("enc");
+                let dec = measure(2, 10, || {
+                    decode_interleaved(&bytes, &table, parallel).expect("dec")
+                });
+                println!(
+                    "lanes {lanes:>2} {} enc {:>10} dec {:>10} ({} B)",
+                    if parallel { "par" } else { "ser" },
+                    enc.fmt_mean_std(),
+                    dec.fmt_mean_std(),
+                    bytes.len()
+                );
+            }
+        }
+    }
+
+    // 4. Patience.
+    println!("\n## Algorithm-1 patience");
+    for patience in [1usize, 2, 4, 8] {
+        let mut cfg = OptimizerConfig::paper(q);
+        cfg.patience = patience;
+        let out = reshape::optimize(&symbols, params.zero_symbol(), &cfg).expect("opt");
+        println!(
+            "patience {patience}: evaluated {:>4}/{:<4} candidates, best N = {:>6}, T_tot = {:.0} bits",
+            out.evaluated, out.domain_size, out.best.n, out.best.t_tot_bits
+        );
+    }
+}

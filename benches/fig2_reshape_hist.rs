@@ -1,0 +1,65 @@
+//! Fig. 2 — reshape configurations vs symbol-distribution skew.
+//!
+//! Reproduces the paper's ladder on X ∈ R^{128×28×28}: reshapes to
+//! K ∈ {128, 56, 16, 7}, reporting the entropy of D = v⊕c⊕r, the
+//! compressed size, and a coarse histogram sketch per configuration.
+//!
+//! Paper shape: entropy falls (6.348 → 3.989 in the paper's example) and
+//! compressed size falls as K shrinks toward the constrained domain.
+//!
+//! Run: `cargo bench --bench fig2_reshape_hist`
+
+use rans_sc::eval::{feature_tensor, reshape_exp::reshape_histogram};
+
+fn sketch(hist: &[u64], width: usize) -> String {
+    let max = hist.iter().copied().max().unwrap_or(1).max(1);
+    let bins = width.min(hist.len());
+    let per = hist.len().div_ceil(bins);
+    let mut out = String::new();
+    for b in 0..bins {
+        let v: u64 = hist[b * per..((b + 1) * per).min(hist.len())].iter().sum();
+        let level = (v as f64 / max as f64 * 8.0).round() as usize;
+        out.push(['.', ':', '-', '=', '+', '*', '#', '%', '@'][level.min(8)]);
+    }
+    out
+}
+
+fn main() {
+    let dir = std::env::var("RANS_SC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let (data, source) = feature_tensor(&dir, "resnet_mini_synth_a", 2).expect("fixture");
+    let t = data.len();
+    println!("# Fig. 2 — reshape vs entropy/size (T = {t}, source {source:?})");
+    // The paper's K ladder, kept to divisors of T.
+    let ks = [128usize, 56, 16, 7];
+    let ns: Vec<usize> = ks
+        .iter()
+        .filter(|&&k| t % k == 0)
+        .map(|&k| t / k)
+        .collect();
+    let rows = reshape_histogram(&data, 4, &ns).expect("fig2");
+    println!(
+        "{:>10} {:>8} {:>12} {:>14}  histogram(D)",
+        "N", "K", "entropy b/s", "size (KB)"
+    );
+    for r in &rows {
+        println!(
+            "{:>10} {:>8} {:>12.3} {:>14.1}  |{}|",
+            r.n,
+            r.k,
+            r.entropy,
+            r.compressed_bytes as f64 / 1000.0,
+            sketch(&r.histogram, 32)
+        );
+    }
+    if rows.len() >= 2 {
+        let first = &rows[0];
+        let last = &rows[rows.len() - 1];
+        println!(
+            "# entropy {:.3} -> {:.3}; size {:.1} KB -> {:.1} KB",
+            first.entropy,
+            last.entropy,
+            first.compressed_bytes as f64 / 1000.0,
+            last.compressed_bytes as f64 / 1000.0
+        );
+    }
+}

@@ -1,0 +1,26 @@
+//! Fig. 3 — encode/decode latency vs reshape dimension N.
+//!
+//! Paper shape: both curves flat (latency ≈ invariant in N) with small
+//! error bars, because the pipeline is data-parallel in the symbol
+//! count, not the row structure.
+//!
+//! Run: `cargo bench --bench fig3_latency_vs_n`
+
+use rans_sc::eval::{feature_tensor, reshape_exp::latency_vs_n};
+
+fn main() {
+    let dir = std::env::var("RANS_SC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let (data, source) = feature_tensor(&dir, "resnet_mini_synth_a", 2).expect("fixture");
+    println!("# Fig. 3 — enc/dec latency vs N (source {source:?})");
+    let rows = latency_vs_n(&data, 4, 15).expect("fig3");
+    println!("{:>10} {:>18} {:>18}", "N", "enc ms (mean±std)", "dec ms (mean±std)");
+    let mut enc_means = Vec::new();
+    for r in &rows {
+        enc_means.push(r.enc.mean_ms());
+        println!("{:>10} {:>18} {:>18}", r.n, r.enc.fmt_mean_std(), r.dec.fmt_mean_std());
+    }
+    let lo = enc_means.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = enc_means.iter().cloned().fold(0.0f64, f64::max);
+    println!("# enc spread across N: {:.3}–{:.3} ms ({:.1}% variation)", lo, hi,
+             if lo > 0.0 { (hi / lo - 1.0) * 100.0 } else { 0.0 });
+}

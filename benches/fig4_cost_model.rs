@@ -1,0 +1,38 @@
+//! Fig. 4 — cost model T_tot(N) vs measured compressed size, Q ∈ {2,4,6,8}.
+//!
+//! Paper shape: the model curve tracks the measured curve; the curve is
+//! U-shaped over the constrained domain; Algorithm 1's Ñ lands within
+//! 2–3% of the exhaustive N* on compressed size.
+//!
+//! Run: `cargo bench --bench fig4_cost_model`
+
+use rans_sc::eval::{cost_model_sweep, feature_tensor};
+
+fn main() {
+    let dir = std::env::var("RANS_SC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let (data, source) = feature_tensor(&dir, "resnet_mini_synth_a", 2).expect("fixture");
+    println!("# Fig. 4 — T_tot(N) model vs measured size (source {source:?})");
+    let sweeps = cost_model_sweep(&data, &[2, 4, 6, 8]).expect("fig4");
+    for s in &sweeps {
+        println!("\n## Q = {}", s.q);
+        println!("{:>10} {:>16} {:>16}", "N", "model (KB)", "measured (KB)");
+        for &(n, pred, actual) in &s.points {
+            println!(
+                "{:>10} {:>16.1} {:>16.1}",
+                n,
+                pred / 1000.0,
+                actual as f64 / 1000.0
+            );
+        }
+        println!(
+            "# Ñ = {} ({:.1} KB) vs N* = {} ({:.1} KB): gap {:.2}% | evaluated {}/{} candidates",
+            s.n_tilde,
+            s.bytes_at_tilde as f64 / 1000.0,
+            s.n_star,
+            s.bytes_at_star as f64 / 1000.0,
+            s.gap() * 100.0,
+            s.evaluated,
+            s.domain_size
+        );
+    }
+}

@@ -1,0 +1,104 @@
+//! Hot-path microbenchmarks for the §Perf optimization pass.
+//!
+//! Reports raw throughput of each pipeline stage in isolation so
+//! regressions localize: AIQ quantize, CSR encode/decode, frequency
+//! table build, rANS encode/decode (per-lane and multi-lane), container
+//! framing, and the end-to-end steady-state pipeline.
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use rans_sc::eval::fixtures::synthetic_feature;
+use rans_sc::pipeline::{self, PipelineConfig, ReshapeStrategy};
+use rans_sc::quant::{quantize, QuantParams};
+use rans_sc::rans::{decode, decode_interleaved, encode, encode_interleaved, FreqTable};
+use rans_sc::reshape::{self, optimizer::OptimizerConfig};
+use rans_sc::sparse::ModCsr;
+use rans_sc::util::timer::measure;
+
+fn mbps(bytes: usize, ms: f64) -> f64 {
+    bytes as f64 / 1e6 / (ms / 1e3)
+}
+
+fn main() {
+    let data = synthetic_feature(4242, 128, 28, 28, 0.35);
+    let q = 4u8;
+    let params = QuantParams::fit(q, &data).expect("fit");
+    let symbols = quantize(&data, &params);
+    let t = symbols.len();
+    println!("# Perf hot-path microbenches (T = {t}, Q = {q})");
+
+    let m = measure(3, 15, || quantize(&data, &params));
+    println!(
+        "quantize             {:>12}  ({:>8.1} MB/s over f32 input)",
+        m.fmt_mean_std(),
+        mbps(data.len() * 4, m.mean_ms())
+    );
+
+    let best = reshape::optimize(&symbols, params.zero_symbol(), &OptimizerConfig::paper(q))
+        .expect("opt")
+        .best;
+    let (n, k) = (best.n, best.k);
+    let m = measure(3, 15, || ModCsr::encode(&symbols, n, k, params.zero_symbol()).unwrap());
+    println!(
+        "csr encode           {:>12}  ({:>8.1} MB/s over u16 symbols)",
+        m.fmt_mean_std(),
+        mbps(t * 2, m.mean_ms())
+    );
+
+    let csr = ModCsr::encode(&symbols, n, k, params.zero_symbol()).unwrap();
+    let m = measure(3, 15, || csr.decode().unwrap());
+    println!("csr decode           {:>12}", m.fmt_mean_std());
+
+    let d = csr.concat();
+    let alphabet = csr.concat_alphabet(params.alphabet());
+    let m = measure(3, 15, || FreqTable::from_symbols(&d, alphabet));
+    println!("freq table build     {:>12}  ({} symbols)", m.fmt_mean_std(), d.len());
+
+    let table = FreqTable::from_symbols(&d, alphabet);
+    let m = measure(3, 15, || encode(&d, &table).unwrap());
+    let stream = encode(&d, &table).unwrap();
+    println!(
+        "rANS encode 1-lane   {:>12}  ({:>8.1} Msym/s)",
+        m.fmt_mean_std(),
+        d.len() as f64 / 1e6 / (m.mean_ms() / 1e3)
+    );
+    let m = measure(3, 15, || decode(&stream, d.len(), &table).unwrap());
+    println!(
+        "rANS decode 1-lane   {:>12}  ({:>8.1} Msym/s)",
+        m.fmt_mean_std(),
+        d.len() as f64 / 1e6 / (m.mean_ms() / 1e3)
+    );
+
+    for lanes in [4usize, 8] {
+        let m = measure(3, 15, || encode_interleaved(&d, &table, lanes, true).unwrap());
+        let s = encode_interleaved(&d, &table, lanes, true).unwrap();
+        let md = measure(3, 15, || decode_interleaved(&s, &table, true).unwrap());
+        println!(
+            "rANS enc/dec {lanes}-lane {:>12} / {:>12}",
+            m.fmt_mean_std(),
+            md.fmt_mean_std()
+        );
+    }
+
+    let cfg = PipelineConfig {
+        q,
+        lanes: 8,
+        parallel: rans_sc::pipeline::codec::default_parallelism(),
+        reshape: ReshapeStrategy::Fixed(n),
+    };
+    let (bytes, _) = pipeline::compress_quantized(&symbols, params, &cfg).unwrap();
+    let m = measure(3, 15, || pipeline::compress_quantized(&symbols, params, &cfg).unwrap());
+    println!(
+        "pipeline e2e encode  {:>12}  ({} B out, {:>8.1} MB/s in)",
+        m.fmt_mean_std(),
+        bytes.len(),
+        mbps(data.len() * 4, m.mean_ms())
+    );
+    let m = measure(3, 15, || pipeline::decompress_to_symbols(&bytes, true).unwrap());
+    println!("pipeline e2e decode  {:>12}", m.fmt_mean_std());
+
+    let m = measure(1, 5, || {
+        reshape::optimize(&symbols, params.zero_symbol(), &OptimizerConfig::paper(q)).unwrap()
+    });
+    println!("Algorithm 1 (cold)   {:>12}", m.fmt_mean_std());
+}

@@ -1,0 +1,42 @@
+//! Table 1 — codec comparison: data size, encode time, decode time.
+//!
+//! Rows: E-1 binary serialization, E-2 tANS, E-3 DietGPU-style, plus
+//! zstd/deflate comparators and Ours at Q ∈ {3, 4, 6}.
+//!
+//! Paper shape to reproduce: Ours < E-3 < E-2 < E-1 on size (7.2× vs
+//! E-1, 2.8× vs E-3 at Q=3); tANS encode ~3 orders of magnitude slower;
+//! ours sub-millisecond both directions.
+//!
+//! Run: `cargo bench --bench table1_codecs`
+//! Env: `RANS_SC_ARTIFACTS` (default `artifacts`) — uses the real
+//! ResNet-Mini SL2 IF when available, synthetic stand-in otherwise.
+
+use rans_sc::eval::{codec_comparison, feature_tensor};
+
+fn main() {
+    let dir = std::env::var("RANS_SC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let (data, source) =
+        feature_tensor(&dir, "resnet_mini_synth_a", 2).expect("fixture");
+    println!("# Table 1 — codec comparison");
+    println!("# feature: {} f32 ({} KB raw), source {source:?}", data.len(), data.len() * 4 / 1000);
+    let rows = codec_comparison(&data, &[3, 4, 6], 2, 10).expect("comparison");
+    println!("{:<20} {:>12} {:>16} {:>16}", "Method", "Size (KB)", "Enc (ms)", "Dec (ms)");
+    for r in &rows {
+        println!(
+            "{:<20} {:>12.1} {:>16} {:>16}",
+            r.name,
+            r.size_kb(),
+            r.enc.fmt_mean_std(),
+            r.dec.fmt_mean_std()
+        );
+    }
+    let binary = rows.iter().find(|r| r.name.contains("E-1")).unwrap();
+    let diet = rows.iter().find(|r| r.name.contains("E-3")).unwrap();
+    if let Some(ours) = rows.iter().find(|r| r.name.contains("Q=3")) {
+        println!(
+            "# ours(Q=3) vs E-1: {:.1}x smaller | vs E-3: {:.1}x smaller",
+            binary.size_bytes as f64 / ours.size_bytes as f64,
+            diet.size_bytes as f64 / ours.size_bytes as f64
+        );
+    }
+}

@@ -1,0 +1,49 @@
+//! Table 2 — accuracy vs quantization bit-width Q ∈ {2..8}.
+//!
+//! ResNet-Mini at SL2 on both synthetic datasets (CIFAR100 / ImageNet
+//! analogues). Paper shape: accuracy flat for Q ≥ 4, small dip at Q=3,
+//! cliff at Q=2.
+//!
+//! Requires artifacts (`make artifacts`). Run:
+//! `cargo bench --bench table2_accuracy_q`
+//! Env: `RANS_SC_EVAL_N` samples per point (default 200).
+
+use std::sync::Arc;
+
+use rans_sc::data::VisionSet;
+use rans_sc::eval::accuracy_sweep;
+use rans_sc::runtime::{Engine, ExecPool, Manifest, VisionSplitExec};
+
+fn main() {
+    let dir = std::env::var("RANS_SC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let n: usize = std::env::var("RANS_SC_EVAL_N").ok().and_then(|s| s.parse().ok()).unwrap_or(200);
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("# Table 2 skipped: {e}");
+            return;
+        }
+    };
+    let engine = Arc::new(Engine::cpu().expect("pjrt"));
+    let pool = ExecPool::new(engine, dir.as_str());
+    println!("# Table 2 — accuracy vs Q (ResNet-Mini, SL2, {n} samples/point)");
+    println!("{:>6} {:>22} {:>22}", "Q", "synth_a (C100 analog)", "synth_b (IN analog)");
+    let mut cols = Vec::new();
+    for ds in ["synth_a", "synth_b"] {
+        let name = format!("resnet_mini_{ds}");
+        let exec = VisionSplitExec::load(&pool, &manifest, &name, 2, 1).expect("exec");
+        let set = VisionSet::load(manifest.resolve(&exec.entry.test_data)).expect("data");
+        let points = accuracy_sweep(&exec, &set, &[8, 7, 6, 5, 4, 3, 2], n).expect("sweep");
+        cols.push(points);
+    }
+    // Baseline row then Q rows.
+    let label = |q: Option<u8>| q.map(|v| v.to_string()).unwrap_or_else(|| "base".into());
+    for i in 0..cols[0].len() {
+        println!(
+            "{:>6} {:>22.2} {:>22.2}",
+            label(cols[0][i].q),
+            cols[0][i].accuracy * 100.0,
+            cols[1][i].accuracy * 100.0
+        );
+    }
+}

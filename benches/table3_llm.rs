@@ -1,0 +1,67 @@
+//! Table 3 — Llama-Mini (s/m) across seven MC task suites.
+//!
+//! Columns per (model, task): accuracy, T_comm(Ñ) under the ε-outage
+//! channel, payload size, enc/dec ms — baseline row plus Q ∈ {2,4,6,8}.
+//!
+//! Paper shape: T_comm reduction 2.2–4.3× (ratio grows as Q falls);
+//! accuracy ≈ baseline at Q ∈ {6,8}, degraded at Q=2; enc/dec ≈
+//! constant across tasks/Q.
+//!
+//! Requires artifacts. Run: `cargo bench --bench table3_llm`
+//! Env: `RANS_SC_EVAL_N` items per task (default 24).
+
+use std::sync::Arc;
+
+use rans_sc::channel::OutageChannel;
+use rans_sc::data::McTask;
+use rans_sc::eval::lm_task_sweep;
+use rans_sc::runtime::{Engine, ExecPool, LmSplitExec, Manifest};
+
+fn main() {
+    let dir = std::env::var("RANS_SC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let n: usize = std::env::var("RANS_SC_EVAL_N").ok().and_then(|s| s.parse().ok()).unwrap_or(24);
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("# Table 3 skipped: {e}");
+            return;
+        }
+    };
+    let engine = Arc::new(Engine::cpu().expect("pjrt"));
+    let pool = ExecPool::new(engine, dir.as_str());
+    let channel = OutageChannel::paper_default();
+    println!("# Table 3 — Llama-Mini MC sweep ({n} items/task, ε-outage T_comm)");
+
+    for lm in &manifest.lm {
+        let exec = LmSplitExec::load(&pool, &manifest, &lm.name).expect("lm exec");
+        println!("\n## {} (dim {}, split {})", lm.name, lm.dim, lm.split);
+        println!(
+            "{:<12} {:>6} {:>8} {:>12} {:>12} {:>12} {:>12}",
+            "task", "Q", "acc %", "T_comm ms", "size KB", "enc ms", "dec ms"
+        );
+        for tf in &lm.tasks {
+            let task = McTask::load(manifest.resolve(&tf.path)).expect("task bin");
+            let rows =
+                lm_task_sweep(&exec, &task, &tf.name, &[2, 4, 6, 8], n, &channel).expect("sweep");
+            let base_t = rows[0].t_comm_ms;
+            for r in &rows {
+                let q = r.q.map(|v| v.to_string()).unwrap_or_else(|| "base".into());
+                let speedup = if r.q.is_some() && r.t_comm_ms > 0.0 {
+                    format!(" ({:.2}x)", base_t / r.t_comm_ms)
+                } else {
+                    String::new()
+                };
+                println!(
+                    "{:<12} {:>6} {:>8.2} {:>12} {:>12.1} {:>12} {:>12}",
+                    r.task,
+                    q,
+                    r.accuracy * 100.0,
+                    format!("{:.2}{speedup}", r.t_comm_ms),
+                    r.mean_payload_bytes / 1000.0,
+                    format!("{:.2}({:.2})", r.enc_ms.mean(), r.enc_ms.std()),
+                    format!("{:.2}({:.2})", r.dec_ms.mean(), r.dec_ms.std()),
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! Table 4 — accuracy at split layers SL1–SL4 for Q ∈ {3, 4}.
+//!
+//! Paper shape: accuracy roughly stable (±1%) across split depth on
+//! both datasets, trending slightly up with depth at Q=3.
+//!
+//! Requires artifacts. Run: `cargo bench --bench table4_split_layers`
+
+use std::sync::Arc;
+
+use rans_sc::data::VisionSet;
+use rans_sc::eval::accuracy_sweep;
+use rans_sc::runtime::{Engine, ExecPool, Manifest, VisionSplitExec};
+
+fn main() {
+    let dir = std::env::var("RANS_SC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let n: usize = std::env::var("RANS_SC_EVAL_N").ok().and_then(|s| s.parse().ok()).unwrap_or(200);
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("# Table 4 skipped: {e}");
+            return;
+        }
+    };
+    let engine = Arc::new(Engine::cpu().expect("pjrt"));
+    let pool = ExecPool::new(engine, dir.as_str());
+    println!("# Table 4 — accuracy (%) by split layer, Q ∈ {{3,4}} ({n} samples/point)");
+    println!(
+        "{:>6} {:>14} {:>14} {:>14} {:>14}",
+        "SL", "a: Q=3", "a: Q=4", "b: Q=3", "b: Q=4"
+    );
+    for sl in 1..=4usize {
+        let mut cells = Vec::new();
+        for ds in ["synth_a", "synth_b"] {
+            let name = format!("resnet_mini_{ds}");
+            let exec = VisionSplitExec::load(&pool, &manifest, &name, sl, 1).expect("exec");
+            let set = VisionSet::load(manifest.resolve(&exec.entry.test_data)).expect("data");
+            let pts = accuracy_sweep(&exec, &set, &[3, 4], n).expect("sweep");
+            // pts[0] is baseline, then Q=3, Q=4.
+            cells.push(pts[1].accuracy * 100.0);
+            cells.push(pts[2].accuracy * 100.0);
+        }
+        println!(
+            "{:>6} {:>14.2} {:>14.2} {:>14.2} {:>14.2}",
+            format!("SL{sl}"),
+            cells[0],
+            cells[1],
+            cells[2],
+            cells[3]
+        );
+    }
+}

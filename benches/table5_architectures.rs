@@ -1,0 +1,59 @@
+//! Table 5 — accuracy across diverse architectures at Q = 4.
+//!
+//! VGG / MobileNet / Swin / DenseNet / EfficientNet minis on the
+//! ImageNet-analogue dataset, each at its exported split.
+//!
+//! Paper shape: |Δaccuracy| < ~0.2% of each architecture's baseline.
+//!
+//! Requires artifacts. Run: `cargo bench --bench table5_architectures`
+
+use std::sync::Arc;
+
+use rans_sc::data::VisionSet;
+use rans_sc::eval::accuracy_sweep;
+use rans_sc::runtime::{Engine, ExecPool, Manifest, VisionSplitExec};
+
+fn main() {
+    let dir = std::env::var("RANS_SC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let n: usize = std::env::var("RANS_SC_EVAL_N").ok().and_then(|s| s.parse().ok()).unwrap_or(200);
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("# Table 5 skipped: {e}");
+            return;
+        }
+    };
+    let engine = Arc::new(Engine::cpu().expect("pjrt"));
+    let pool = ExecPool::new(engine, dir.as_str());
+    println!("# Table 5 — architecture sweep at Q=4 ({n} samples/model)");
+    println!(
+        "{:<24} {:>4} {:>12} {:>12} {:>10}",
+        "Model", "SL", "Baseline %", "Ours %", "Δ"
+    );
+    let models = [
+        "vgg_mini_synth_b",
+        "mobilenet_mini_synth_b",
+        "swin_mini_synth_b",
+        "densenet_mini_synth_b",
+        "efficientnet_mini_synth_b",
+    ];
+    for name in models {
+        let entry = match manifest.vision_entry(name) {
+            Ok(e) => e,
+            Err(e) => {
+                println!("{name:<24} skipped: {e}");
+                continue;
+            }
+        };
+        let sl = entry.splits[0].sl;
+        let exec = VisionSplitExec::load(&pool, &manifest, name, sl, 1).expect("exec");
+        let set = VisionSet::load(manifest.resolve(&exec.entry.test_data)).expect("data");
+        let pts = accuracy_sweep(&exec, &set, &[4], n).expect("sweep");
+        let base = pts[0].accuracy * 100.0;
+        let ours = pts[1].accuracy * 100.0;
+        println!(
+            "{:<24} {:>4} {:>12.3} {:>12.3} {:>+10.3}",
+            name, sl, base, ours, ours - base
+        );
+    }
+}

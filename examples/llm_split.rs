@@ -1,0 +1,90 @@
+//! LLM split-computing demo: Llama-Mini over an in-process transport.
+//!
+//! Mirrors the paper's §4.2 LLM deployment: the edge runs the first
+//! half of the decoder stack, ships compressed hidden states, the cloud
+//! finishes and returns per-token logits; the edge scores the four
+//! choices of each multiple-choice item.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example llm_split [task] [n_items]
+//! ```
+
+use std::sync::Arc;
+
+use rans_sc::coordinator::{CloudNode, EdgeConfig, InProcTransport, LmEdgeNode, Transport};
+use rans_sc::data::{lm_tasks::score_choices, McTask};
+use rans_sc::runtime::{Engine, ExecPool, LmSplitExec, Manifest};
+use rans_sc::util::stats::Summary;
+
+const MODEL: &str = "llama_mini_s";
+const Q: u8 = 6;
+
+fn main() -> rans_sc::Result<()> {
+    let task_name = std::env::args().nth(1).unwrap_or_else(|| "retrieval".into());
+    let n_items: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(16);
+    let dir = std::env::var("RANS_SC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+
+    let cloud = Arc::new(CloudNode::new(&dir)?);
+    let (edge_end, mut cloud_end) = InProcTransport::pair();
+    let cloud_thread = {
+        let cloud = Arc::clone(&cloud);
+        std::thread::spawn(move || cloud.serve_transport(&mut cloud_end as &mut dyn Transport))
+    };
+
+    let manifest = Manifest::load(&dir)?;
+    let engine = Arc::new(Engine::cpu()?);
+    let pool = ExecPool::new(engine, dir.as_str());
+    let exec = Arc::new(LmSplitExec::load(&pool, &manifest, MODEL)?);
+    let lm = exec.entry.clone();
+    let task_file = lm
+        .tasks
+        .iter()
+        .find(|t| t.name == task_name)
+        .ok_or_else(|| rans_sc::Error::invalid(format!("unknown task '{task_name}'")))?;
+    let task = McTask::load(manifest.resolve(&task_file.path))?;
+    let edge = LmEdgeNode::new(Arc::clone(&exec), edge_end, EdgeConfig::paper(MODEL, lm.split, lm.batch, Q));
+
+    println!(
+        "{MODEL} (dim {}, split after block {}) on task '{task_name}', Q={Q}",
+        lm.dim, lm.split
+    );
+    println!(
+        "build-time baseline accuracy: {:.2}%",
+        lm.baseline_accuracy.get(&task_name).copied().unwrap_or(f64::NAN) * 100.0
+    );
+
+    let mut correct = 0usize;
+    let mut bytes = Summary::new();
+    let mut raw_bytes = Summary::new();
+    let mut tx = Summary::new();
+    let mut tx_raw = Summary::new();
+    let n = n_items.min(task.items.len());
+    for item in task.items.iter().take(n) {
+        let tokens = task.item_batch(item);
+        let out = edge.infer(&tokens)?;
+        if score_choices(&out.logits, &task, item) == item.correct {
+            correct += 1;
+        }
+        bytes.add(out.payload_bytes as f64);
+        tx.add(out.breakdown.transfer_ms);
+
+        let raw = edge.infer_raw(&tokens)?;
+        raw_bytes.add(raw.payload_bytes as f64);
+        tx_raw.add(raw.breakdown.transfer_ms);
+    }
+    println!(
+        "accuracy over {n} items: {:.2}% | payload {:.1} KB vs {:.1} KB raw ({:.2}x) | \
+         T_comm {:.2} ms vs {:.2} ms ({:.2}x)",
+        correct as f64 / n as f64 * 100.0,
+        bytes.mean() / 1000.0,
+        raw_bytes.mean() / 1000.0,
+        raw_bytes.mean() / bytes.mean(),
+        tx.mean(),
+        tx_raw.mean(),
+        tx_raw.mean() / tx.mean()
+    );
+
+    drop(edge); // closes the in-proc link; cloud loop exits
+    let _ = cloud_thread.join();
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Quickstart: compress and decompress one intermediate-feature tensor.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Works without artifacts (synthetic IF); with `make artifacts` it uses
+//! a real ResNet-Mini SL2 feature.
+
+use rans_sc::eval::feature_tensor;
+use rans_sc::pipeline::{compress, decompress, PipelineConfig};
+
+fn main() -> rans_sc::Result<()> {
+    let dir = std::env::var("RANS_SC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let (data, source) = feature_tensor(&dir, "resnet_mini_synth_a", 2)?;
+    println!("feature: {} f32 ({} KB raw), source {source:?}", data.len(), data.len() * 4 / 1000);
+
+    for q in [3u8, 4, 6, 8] {
+        let cfg = PipelineConfig::paper(q);
+        let t0 = std::time::Instant::now();
+        let (bytes, stats) = compress(&data, &cfg)?;
+        let enc_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t1 = std::time::Instant::now();
+        let restored = decompress(&bytes, true)?;
+        let dec_ms = t1.elapsed().as_secs_f64() * 1e3;
+        let max_err = data
+            .iter()
+            .zip(&restored)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!(
+            "Q={q}: {:>8} B ({:>5.1}x) | reshape {}x{} | entropy {:.3} b/sym | \
+             enc {enc_ms:.2} ms dec {dec_ms:.2} ms | max err {max_err:.4}",
+            bytes.len(),
+            (data.len() * 4) as f64 / bytes.len() as f64,
+            stats.n_rows,
+            stats.n_cols,
+            stats.entropy,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Reshape-dimension explorer: walk Algorithm 1's search by hand.
+//!
+//! Prints every candidate the optimizer evaluates (descending N), the
+//! early-stop point, and the exhaustive oracle for comparison — a
+//! didactic view of §3.2–3.3.
+//!
+//! ```bash
+//! cargo run --release --example reshape_explorer [Q]
+//! ```
+
+use rans_sc::eval::feature_tensor;
+use rans_sc::quant::{quantize, QuantParams};
+use rans_sc::reshape::{self, optimizer::OptimizerConfig};
+
+fn main() -> rans_sc::Result<()> {
+    let q: u8 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let dir = std::env::var("RANS_SC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let (data, source) = feature_tensor(&dir, "resnet_mini_synth_a", 2)?;
+    let params = QuantParams::fit(q, &data)?;
+    let symbols = quantize(&data, &params);
+    let t = symbols.len();
+    println!("T = {t}, Q = {q}, zero symbol = {}, source {source:?}", params.zero_symbol());
+
+    let cfg = OptimizerConfig::paper(q);
+    let domain = reshape::optimizer::candidate_domain(t, &cfg);
+    println!(
+        "constrained domain: {} divisors in [{}, {}] (N > √T = {}, K ≤ 2^Q = {})",
+        domain.len(),
+        domain.first().unwrap_or(&0),
+        domain.last().unwrap_or(&0),
+        reshape::divisors::isqrt(t),
+        1 << q
+    );
+
+    let out = reshape::optimize(&symbols, params.zero_symbol(), &cfg)?;
+    println!("\n{:>10} {:>8} {:>10} {:>12} {:>14}", "N", "K", "nnz", "H (b/sym)", "T_tot (KB)");
+    for c in &out.trace {
+        let marker = if c.n == out.best.n { "  <- Ñ" } else { "" };
+        println!(
+            "{:>10} {:>8} {:>10} {:>12.3} {:>14.1}{marker}",
+            c.n,
+            c.k,
+            c.nnz,
+            c.entropy,
+            c.t_tot_bits / 8e3
+        );
+    }
+    println!(
+        "\nAlgorithm 1: evaluated {}/{} candidates before early stop",
+        out.evaluated, out.domain_size
+    );
+
+    let oracle = reshape::exhaustive_search(&symbols, params.zero_symbol(), &cfg, true)?;
+    println!(
+        "exhaustive oracle: N* = {} (T_tot {:.1} KB) vs Ñ = {} (T_tot {:.1} KB) — gap {:.2}%",
+        oracle.best.n,
+        oracle.best.t_tot_bits / 8e3,
+        out.best.n,
+        out.best.t_tot_bits / 8e3,
+        (out.best.t_tot_bits / oracle.best.t_tot_bits - 1.0) * 100.0
+    );
+    Ok(())
+}

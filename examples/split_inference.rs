@@ -1,0 +1,218 @@
+//! End-to-end split-computing driver (the repo's E2E validation run).
+//!
+//! Starts a cloud node on loopback TCP, connects an edge node, and
+//! streams test-set requests through the full pipeline:
+//!
+//! ```text
+//! edge: head HLO (Pallas quantize epilogue) → CSR+rANS container
+//!   → TCP → cloud: decode → tail HLO (Pallas dequantize prologue) → logits
+//! ```
+//!
+//! Phase 1: sequential batch-1 requests — accuracy + 4-factor latency
+//! breakdown + simulated T_comm, compressed vs raw baseline.
+//! Phase 2: concurrent clients through the bucketed dynamic batcher on
+//! the batch-8 artifact — throughput.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example split_inference [N]
+//! ```
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use rans_sc::coordinator::{
+    connect_tcp, Batcher, BatcherConfig, CloudNode, EdgeConfig, EdgeNode,
+};
+use rans_sc::data::VisionSet;
+use rans_sc::runtime::{Engine, ExecPool, Manifest, VisionSplitExec};
+use rans_sc::util::stats::Summary;
+
+const MODEL: &str = "resnet_mini_synth_a";
+const SL: usize = 2;
+const Q: u8 = 4;
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+fn main() -> rans_sc::Result<()> {
+    let n_requests: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let dir = std::env::var("RANS_SC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+
+    // ---- cloud node on loopback ----
+    let cloud = Arc::new(CloudNode::new(&dir)?);
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")
+        .map_err(|e| rans_sc::Error::transport(format!("bind: {e}")))?;
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let cloud_thread = {
+        let cloud = Arc::clone(&cloud);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || cloud.serve_tcp(listener, stop))
+    };
+    println!("cloud node on {addr}");
+
+    // ---- edge side ----
+    let manifest = Manifest::load(&dir)?;
+    let engine = Arc::new(Engine::cpu()?);
+    let pool = ExecPool::new(engine, dir.as_str());
+    let exec = Arc::new(VisionSplitExec::load(&pool, &manifest, MODEL, SL, 1)?);
+    let set = VisionSet::load(manifest.resolve(&exec.entry.test_data))?;
+    let classes = exec.entry.num_classes;
+    let edge = EdgeNode::new(
+        Arc::clone(&exec),
+        connect_tcp(&addr)?,
+        EdgeConfig::paper(MODEL, SL, 1, Q),
+    );
+
+    // ---- phase 1: sequential batch-1, compressed vs raw ----
+    println!("\n== phase 1: {n_requests} sequential requests (batch 1, Q={Q}) ==");
+    let mut correct = 0usize;
+    let mut correct_raw = 0usize;
+    let mut bytes = Summary::new();
+    let mut bytes_raw = Summary::new();
+    let mut enc = Summary::new();
+    let mut tx = Summary::new();
+    let mut tx_raw = Summary::new();
+    let mut dec = Summary::new();
+    let mut comp = Summary::new();
+    let wall = std::time::Instant::now();
+    for i in 0..n_requests {
+        let (xs, ys) = set.batch(i, 1);
+        let out = edge.infer(&xs)?;
+        if argmax(&out.logits[0..classes]) == ys[0] as usize {
+            correct += 1;
+        }
+        bytes.add(out.payload_bytes as f64);
+        enc.add(out.breakdown.encode_ms);
+        tx.add(out.breakdown.transfer_ms);
+        dec.add(out.breakdown.decode_ms);
+        comp.add(out.breakdown.compute_ms);
+
+        let raw = edge.infer_raw(&xs)?;
+        if argmax(&raw.logits[0..classes]) == ys[0] as usize {
+            correct_raw += 1;
+        }
+        bytes_raw.add(raw.payload_bytes as f64);
+        tx_raw.add(raw.breakdown.transfer_ms);
+    }
+    let elapsed = wall.elapsed().as_secs_f64();
+    println!(
+        "accuracy: compressed {:.2}% vs raw baseline {:.2}% (build-time full model {:.2}%)",
+        correct as f64 / n_requests as f64 * 100.0,
+        correct_raw as f64 / n_requests as f64 * 100.0,
+        exec.entry.baseline_accuracy * 100.0
+    );
+    println!(
+        "payload: {:.0} B compressed vs {:.0} B raw ({:.1}x reduction)",
+        bytes.mean(),
+        bytes_raw.mean(),
+        bytes_raw.mean() / bytes.mean()
+    );
+    println!(
+        "simulated T_comm (ε-outage): {:.2} ms vs {:.2} ms raw ({:.1}x)",
+        tx.mean(),
+        tx_raw.mean(),
+        tx_raw.mean() / tx.mean()
+    );
+    println!(
+        "latency factors: encode {:.2} ms | decode {:.2} ms | tail compute {:.2} ms",
+        enc.mean(),
+        dec.mean(),
+        comp.mean()
+    );
+    println!(
+        "wall throughput (both paths, incl. raw baseline): {:.1} req/s",
+        2.0 * n_requests as f64 / elapsed
+    );
+    let (hits, misses) = edge.plan_cache_stats();
+    println!("reshape-plan cache: {hits} hits / {misses} misses");
+
+    // ---- phase 2: concurrent clients through the batcher (batch-8) ----
+    if exec.entry.split(SL, 8).is_ok() {
+        println!("\n== phase 2: concurrent clients via bucketed batcher (buckets 1/8) ==");
+        let exec8 = Arc::new(VisionSplitExec::load(&pool, &manifest, MODEL, SL, 8)?);
+        let img_len = set.image_len();
+        let batcher: Batcher<Vec<f32>, Vec<f32>> = Batcher::new(BatcherConfig {
+            buckets: vec![1, 8],
+            max_wait: std::time::Duration::from_millis(3),
+        });
+        let worker = {
+            let batcher = batcher.clone();
+            let exec1 = Arc::clone(&exec);
+            let exec8 = Arc::clone(&exec8);
+            std::thread::spawn(move || {
+                batcher.run(move |reqs, bucket| {
+                    // Concatenate + pad to the bucket's static shape.
+                    let n = reqs.len();
+                    let mut flat = Vec::with_capacity(bucket * img_len);
+                    for r in &reqs {
+                        flat.extend_from_slice(r);
+                    }
+                    for _ in n..bucket {
+                        flat.extend_from_slice(&reqs[n - 1]);
+                    }
+                    let exec = if bucket == 8 { &exec8 } else { &exec1 };
+                    match exec
+                        .run_head(&flat, Q)
+                        .and_then(|(syms, p)| {
+                            let cfg = rans_sc::pipeline::PipelineConfig::paper(Q);
+                            let (c, _) = rans_sc::pipeline::compress_quantized(&syms, p, &cfg)?;
+                            let (s2, p2) = rans_sc::pipeline::decompress_to_symbols(&c, true)?;
+                            exec.run_tail(&s2, &p2)
+                        }) {
+                        Ok(logits) => {
+                            let per = logits.len() / bucket;
+                            (0..n).map(|i| Ok(logits[i * per..(i + 1) * per].to_vec())).collect()
+                        }
+                        Err(e) => (0..n)
+                            .map(|_| Err(rans_sc::Error::runtime(format!("batch failed: {e}"))))
+                            .collect(),
+                    }
+                })
+            })
+        };
+        let wall = std::time::Instant::now();
+        let n_clients = 4usize;
+        let per_client = (n_requests / n_clients).max(4);
+        let correct = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for cidx in 0..n_clients {
+                let batcher = batcher.clone();
+                let set = &set;
+                let correct = &correct;
+                s.spawn(move || {
+                    for i in 0..per_client {
+                        let (xs, ys) = set.batch(cidx * per_client + i, 1);
+                        let rx = batcher.submit(xs);
+                        if let Ok((Ok(logits), _queue_ms)) = rx.recv() {
+                            if argmax(&logits[0..classes]) == ys[0] as usize {
+                                correct.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let total = n_clients * per_client;
+        let elapsed = wall.elapsed().as_secs_f64();
+        println!(
+            "{} concurrent requests: {:.1} req/s, accuracy {:.2}%",
+            total,
+            total as f64 / elapsed,
+            correct.load(std::sync::atomic::Ordering::Relaxed) as f64 / total as f64 * 100.0
+        );
+        batcher.stop();
+        worker.join().unwrap();
+    }
+
+    // ---- shutdown ----
+    edge.shutdown_server()?;
+    let _ = cloud_thread.join();
+    println!("\ncloud metrics:\n{}", cloud.metrics().report());
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX models + Pallas kernels -> HLO artifacts.
+
+Nothing in this package is imported at runtime; the Rust coordinator
+consumes only the files written to ``artifacts/``.
+"""

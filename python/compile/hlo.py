@@ -1,0 +1,46 @@
+"""HLO-text export helpers.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format
+between the JAX compile path and the Rust PJRT runtime: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+behind the published ``xla`` crate) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a ``jax.jit(...).lower(...)`` result to XLA HLO text.
+
+    Lowers through StableHLO and converts with ``return_tuple=True`` so
+    the Rust side can uniformly unwrap tuple outputs.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default HLO printer elides big literals
+    # as "{...}", which the text parser reads back as zeros — i.e. every
+    # model weight would silently vanish. Full constants are mandatory
+    # for the AOT interchange.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_fn(fn, example_args, out_path: str) -> str:
+    """Jit-lower ``fn`` at ``example_args`` and write HLO text.
+
+    Returns the written text. ``example_args`` may be concrete arrays or
+    ``jax.ShapeDtypeStruct`` specs.
+    """
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return text

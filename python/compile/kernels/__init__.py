@@ -1,0 +1,20 @@
+"""Layer-1 Pallas kernels for the compression pipeline hot spots.
+
+All kernels run under ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret-mode lowering (plain HLO ops)
+is the correctness-carrying path; real-TPU performance is estimated from
+BlockSpec tiling in DESIGN.md §Hardware-Adaptation.
+"""
+
+from .quantize import aiq_quantize, minmax
+from .dequantize import aiq_dequantize
+from .rowcount import row_nonzero_counts
+from .histogram import symbol_histogram
+
+__all__ = [
+    "aiq_quantize",
+    "aiq_dequantize",
+    "minmax",
+    "row_nonzero_counts",
+    "symbol_histogram",
+]

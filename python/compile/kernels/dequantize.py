@@ -1,0 +1,47 @@
+"""Pallas AIQ dequantization kernel (Layer 1).
+
+The tail-artifact prologue: `(sym − z) · s` over VMEM tiles, restoring
+the float feature the cloud-side model consumes. Elementwise, so the
+BlockSpec schedule is the same flat tiling as the quantizer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quantize import BLOCK
+
+
+def _dequantize_kernel(sym_ref, scale_ref, zero_ref, o_ref):
+    s = scale_ref[0, 0]
+    z = zero_ref[0, 0]
+    o_ref[...] = (sym_ref[...].astype(jnp.float32) - z) * s
+
+
+def aiq_dequantize(sym, scale, zero):
+    """Dequantize int32 symbols back to f32."""
+    orig_shape = sym.shape
+    if sym.size == 0:
+        return jnp.zeros(orig_shape, jnp.float32)
+    flat = sym.reshape(-1)
+    t = flat.shape[0]
+    pad = (-t) % BLOCK
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    nblocks = flat.shape[0] // BLOCK
+    as11 = lambda v: jnp.asarray(v, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _dequantize_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((flat.shape[0],), jnp.float32),
+        interpret=True,
+    )(flat, as11(scale), as11(zero))
+    return out[:t].reshape(orig_shape)

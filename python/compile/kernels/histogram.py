@@ -1,0 +1,56 @@
+"""Pallas symbol-histogram kernel (Layer 1).
+
+Frequency-table prep for rANS. CUDA implementations scatter with atomics;
+the TPU idiom is scatter-free: each grid step builds a one-hot matrix of
+its symbol tile and reduces it — expressible as `ones(1,B) @ one_hot`
+on the MXU. Partials accumulate into a single output block across grid
+steps (`o += partial`, initialized at step 0), the standard Pallas
+grid-accumulation pattern.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Symbols per grid step.
+BLOCK = 1024
+
+
+def _hist_kernel(sym_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    alphabet = o_ref.shape[0]
+    onehot = (sym_ref[...][:, None] == jnp.arange(alphabet)[None, :]).astype(jnp.int32)
+    o_ref[...] += jnp.sum(onehot, axis=0)
+
+
+def symbol_histogram(sym, alphabet: int):
+    """Histogram of int symbols over a static ``alphabet`` size.
+
+    Out-of-range padding uses symbol value ``alphabet`` (one past the
+    end), which the one-hot match drops, so padded tails do not bias the
+    counts.
+    """
+    flat = sym.reshape(-1).astype(jnp.int32)
+    t = flat.shape[0]
+    if t == 0:
+        # Empty input: zero counts (a zero-step grid is not lowerable).
+        return jnp.zeros((alphabet,), jnp.int32)
+    pad = (-t) % BLOCK
+    if pad:
+        flat = jnp.concatenate([flat, jnp.full((pad,), alphabet, jnp.int32)])
+    nblocks = flat.shape[0] // BLOCK
+    return pl.pallas_call(
+        _hist_kernel,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((alphabet,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((alphabet,), jnp.int32),
+        interpret=True,
+    )(flat)

@@ -1,0 +1,116 @@
+"""Pallas AIQ quantization kernels (Layer 1).
+
+GPU→TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+kernel assigns a threadblock per tensor slab and reduces min/max through
+shared memory. Here the HBM→VMEM schedule is expressed with BlockSpec
+tiles over a flattened (BLOCK,) grid:
+
+* :func:`minmax` — two-pass grid reduction: each grid step writes a
+  per-block partial (min, max) pair; the scalar combine happens in the
+  surrounding jax graph (Layer 2) where XLA fuses it.
+* :func:`aiq_quantize` — elementwise `clip(round(x/s + z), 0, levels)`
+  over VMEM tiles; `scale`/`zero`/`levels` ride along as (1,1) scalars so
+  one lowered graph serves every bit-width Q.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Flat tile size: 8 KiB of f32 per block — comfortably VMEM-resident
+# alongside the output tile on real hardware.
+BLOCK = 2048
+
+
+def _pad_flat(x, fill):
+    """Flatten and right-pad to a BLOCK multiple with ``fill``."""
+    flat = x.reshape(-1)
+    t = flat.shape[0]
+    pad = (-t) % BLOCK
+    if pad:
+        flat = jnp.concatenate([flat, jnp.full((pad,), fill, flat.dtype)])
+    return flat, t
+
+
+def _minmax_kernel(x_ref, mn_ref, mx_ref):
+    blk = x_ref[...]
+    mn_ref[0] = jnp.min(blk)
+    mx_ref[0] = jnp.max(blk)
+
+
+def minmax(x):
+    """Global (min, max) of ``x`` via a block-parallel partial reduction."""
+    x = x.astype(jnp.float32)
+    # Pad with the first element so padding never wins the reduction.
+    first = x.reshape(-1)[0]
+    flat, _ = _pad_flat(x, first)
+    nblocks = flat.shape[0] // BLOCK
+    mn, mx = pl.pallas_call(
+        _minmax_kernel,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks,), jnp.float32),
+            jax.ShapeDtypeStruct((nblocks,), jnp.float32),
+        ],
+        interpret=True,
+    )(flat)
+    # Layer-2 combine of the per-block partials.
+    return jnp.min(mn), jnp.max(mx)
+
+
+def _quantize_kernel(x_ref, scale_ref, zero_ref, levels_ref, o_ref):
+    s = scale_ref[0, 0]
+    z = zero_ref[0, 0]
+    lv = levels_ref[0, 0]
+    v = jnp.round(x_ref[...] / s + z)
+    o_ref[...] = jnp.clip(v, 0.0, lv).astype(jnp.int32)
+
+
+def aiq_quantize(x, scale, zero, levels):
+    """Quantize ``x`` to int32 symbols in {0..levels} (Eq. 6).
+
+    ``scale``, ``zero``, ``levels`` are scalar arrays (traced data, not
+    Python constants).
+    """
+    x = x.astype(jnp.float32)
+    orig_shape = x.shape
+    if x.size == 0:
+        return jnp.zeros(orig_shape, jnp.int32)
+    flat, t = _pad_flat(x, jnp.float32(0))
+    nblocks = flat.shape[0] // BLOCK
+    as11 = lambda v: jnp.asarray(v, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _quantize_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((flat.shape[0],), jnp.int32),
+        interpret=True,
+    )(flat, as11(scale), as11(zero), as11(levels))
+    return out[:t].reshape(orig_shape)
+
+
+def quantize_with_params(x, levels):
+    """Fused head epilogue: min/max → params → symbols.
+
+    Returns ``(symbols int32, scale f32, zero f32)``; this is the graph
+    appended to every exported head artifact.
+    """
+    x_min, x_max = minmax(x)
+    raw = (x_max - x_min) / levels
+    scale = jnp.where(raw > 0, raw, 1.0)
+    zero = jnp.clip(jnp.round(-x_min / scale), 0.0, levels)
+    sym = aiq_quantize(x, scale, zero, levels)
+    return sym, scale, zero

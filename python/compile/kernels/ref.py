@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Layer-1 kernel.
+
+These are the correctness ground truth: pytest + hypothesis sweep the
+Pallas kernels against these definitions, and the Rust `quant` module
+mirrors the same semantics (ties-to-even rounding, edge saturation).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def minmax_ref(x):
+    """Global (min, max) of a tensor, as f32 scalars."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    return jnp.min(flat), jnp.max(flat)
+
+
+def aiq_params_ref(x_min, x_max, levels):
+    """AIQ scale and zero point (Eq. 6).
+
+    ``levels = 2^Q - 1`` is passed as data so one lowered graph serves
+    every bit-width. Degenerate ranges fall back to scale = 1.
+    """
+    raw = (x_max - x_min) / levels
+    scale = jnp.where(raw > 0, raw, 1.0)
+    zero = jnp.clip(jnp.round(-x_min / scale), 0, levels)
+    return scale, zero
+
+
+def aiq_quantize_ref(x, scale, zero, levels):
+    """Quantize to integer symbols in {0..levels} (Eq. 6)."""
+    v = jnp.round(x.astype(jnp.float32) / scale + zero)
+    return jnp.clip(v, 0, levels).astype(jnp.int32)
+
+
+def aiq_dequantize_ref(sym, scale, zero):
+    """Inverse of :func:`aiq_quantize_ref` up to quantization error."""
+    return (sym.astype(jnp.float32) - zero) * scale
+
+
+def row_nonzero_counts_ref(sym2d, background):
+    """Per-row count of entries != background (modified-CSR `r` array)."""
+    return jnp.sum((sym2d != background).astype(jnp.int32), axis=1)
+
+
+def symbol_histogram_ref(sym, alphabet: int):
+    """Frequency histogram over a static alphabet size."""
+    flat = sym.reshape(-1)
+    return jnp.sum(
+        (flat[:, None] == jnp.arange(alphabet)[None, :]).astype(jnp.int32), axis=0
+    )

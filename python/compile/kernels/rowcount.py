@@ -1,0 +1,49 @@
+"""Pallas per-row nonzero-count kernel (Layer 1).
+
+Computes the modified-CSR `r` array (direct per-row counts, §3.1) for a
+reshaped (N, K) symbol matrix: one grid step per row tile, a lane-wise
+`!= background` mask reduced along K in VMEM. This is the CSR-prep the
+paper runs on GPU; the Rust encoder consumes the counts to slice the
+value/column streams without re-scanning the tensor.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step.
+ROW_BLOCK = 64
+
+
+def _rowcount_kernel(sym_ref, bg_ref, o_ref):
+    bg = bg_ref[0, 0]
+    mask = (sym_ref[...] != bg).astype(jnp.int32)
+    o_ref[...] = jnp.sum(mask, axis=1)
+
+
+def row_nonzero_counts(sym2d, background):
+    """Per-row count of entries != ``background`` for an (N, K) matrix."""
+    n, k = sym2d.shape
+    pad = (-n) % ROW_BLOCK
+    if pad:
+        # Padded rows are all-background → count 0; sliced off below.
+        filler = jnp.broadcast_to(
+            jnp.asarray(background, sym2d.dtype), (pad, k)
+        )
+        sym2d = jnp.concatenate([sym2d, filler], axis=0)
+    nblocks = sym2d.shape[0] // ROW_BLOCK
+    bg = jnp.asarray(background, jnp.int32).reshape(1, 1)
+    out = pl.pallas_call(
+        _rowcount_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((ROW_BLOCK, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((sym2d.shape[0],), jnp.int32),
+        interpret=True,
+    )(sym2d.astype(jnp.int32), bg)
+    return out[:n]

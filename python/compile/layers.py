@@ -1,0 +1,177 @@
+"""Functional NN layer library (Layer 2 building blocks).
+
+Parameters are nested dicts of jnp arrays; every layer is a pure
+function so heads/tails lower cleanly to HLO. Normalization is
+stateless (LayerNorm over channels) so train and eval graphs are
+identical — no running statistics to thread through the AOT export.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- init
+
+def he_conv(key, kh, kw, cin, cout):
+    """He-normal conv kernel (HWIO)."""
+    std = math.sqrt(2.0 / (kh * kw * cin))
+    return jax.random.normal(key, (kh, kw, cin, cout)) * std
+
+
+def glorot_dense(key, din, dout):
+    """Glorot-uniform dense kernel."""
+    lim = math.sqrt(6.0 / (din + dout))
+    return jax.random.uniform(key, (din, dout), minval=-lim, maxval=lim)
+
+
+def init_conv(key, kh, kw, cin, cout):
+    return {"w": he_conv(key, kh, kw, cin, cout), "b": jnp.zeros((cout,))}
+
+
+def init_dense(key, din, dout):
+    return {"w": glorot_dense(key, din, dout), "b": jnp.zeros((dout,))}
+
+
+def init_norm(dim):
+    return {"g": jnp.ones((dim,)), "b": jnp.zeros((dim,))}
+
+
+# -------------------------------------------------------------- layers
+
+def conv2d(p, x, stride=1, padding="SAME", groups=1):
+    """NHWC conv with bias."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        p["w"],
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+    return y + p["b"]
+
+
+def depthwise_conv2d(p, x, stride=1):
+    """Depthwise conv: kernel (kh, kw, 1, C) with groups=C."""
+    c = x.shape[-1]
+    return conv2d(p, x, stride=stride, groups=c)
+
+
+def dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def channel_norm(p, x, eps=1e-5):
+    """LayerNorm over the trailing (channel) axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["g"] + p["b"]
+
+
+def rms_norm(p, x, eps=1e-6):
+    """RMSNorm (llama-style); params carry only the gain."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x / jnp.sqrt(ms + eps) * p["g"]
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def gelu(x):
+    return jax.nn.gelu(x)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def max_pool(x, size=2, stride=2):
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        (1, size, size, 1),
+        (1, stride, stride, 1),
+        "VALID",
+    )
+
+
+def avg_pool(x, size=2, stride=2):
+    summed = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, size, size, 1), (1, stride, stride, 1), "VALID"
+    )
+    return summed / float(size * size)
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+# ----------------------------------------------------------- attention
+
+def init_attention(key, dim):
+    k1, k2 = jax.random.split(key)
+    return {
+        "qkv": init_dense(k1, dim, dim * 3),
+        "proj": init_dense(k2, dim, dim),
+    }
+
+
+def attention(p, x, heads, mask=None):
+    """Multi-head self-attention over (..., T, D). ``heads`` is static."""
+    *lead, t, d = x.shape
+    h = heads
+    hd = d // h
+    qkv = dense(p["qkv"], x)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def split_heads(a):
+        return a.reshape(*lead, t, h, hd).swapaxes(-3, -2)  # (..., h, T, hd)
+
+    q, k, v = split_heads(q), split_heads(k), split_heads(v)
+    att = (q @ k.swapaxes(-1, -2)) / math.sqrt(hd)
+    if mask is not None:
+        att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = att @ v  # (..., h, T, hd)
+    out = out.swapaxes(-3, -2).reshape(*lead, t, d)
+    return dense(p["proj"], out)
+
+
+def causal_mask(t):
+    return jnp.tril(jnp.ones((t, t), bool))
+
+
+# --------------------------------------------------------------- misc
+
+def init_mlp(key, dim, hidden):
+    k1, k2 = jax.random.split(key)
+    return {"fc1": init_dense(k1, dim, hidden), "fc2": init_dense(k2, hidden, dim)}
+
+
+def mlp(p, x, act=gelu):
+    return dense(p["fc2"], act(dense(p["fc1"], x)))
+
+
+def init_swiglu(key, dim, hidden):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_dense(k1, dim, hidden),
+        "up": init_dense(k2, dim, hidden),
+        "down": init_dense(k3, hidden, dim),
+    }
+
+
+def swiglu(p, x):
+    return dense(p["down"], silu(dense(p["gate"], x)) * dense(p["up"], x))
+
+
+def count_params(tree) -> int:
+    """Total parameter count of a params pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(a.size for a in leaves if hasattr(a, "size")))

@@ -1,0 +1,19 @@
+"""Layer-2 model zoo: mini analogues of the paper's architectures.
+
+Every vision model follows the split protocol in :mod:`common`: an
+ordered list of stages; split layer SLk cuts after stage k, the head
+runs on the edge, the tail on the cloud.
+"""
+
+from . import common, densenet, efficientnet, llama_mini, mobilenet, resnet, swin, vgg
+
+VISION_MODELS = {
+    "resnet_mini": resnet,
+    "vgg_mini": vgg,
+    "mobilenet_mini": mobilenet,
+    "densenet_mini": densenet,
+    "efficientnet_mini": efficientnet,
+    "swin_mini": swin,
+}
+
+__all__ = ["common", "VISION_MODELS", "llama_mini"]

@@ -1,0 +1,37 @@
+"""Split-model protocol shared by the vision zoo.
+
+A model module exposes::
+
+    NAME: str
+    SPLITS: list[int]          # valid split layers (1-indexed stage cuts)
+    init(key, num_classes) -> params
+    stages(params) -> list[callable]   # x -> x, in order
+    classifier(params, feat) -> logits
+
+and this module derives full/ head/ tail forward functions from it.
+"""
+
+from __future__ import annotations
+
+
+def forward(model, params, x):
+    """Full forward pass (training / baseline accuracy)."""
+    for f in model.stages(params):
+        x = f(x)
+    return model.classifier(params, x)
+
+
+def head_apply(model, params, x, sl: int):
+    """Edge-side head: stages[0:sl]. Returns the intermediate feature."""
+    assert sl in model.SPLITS, f"SL{sl} not in {model.SPLITS} for {model.NAME}"
+    for f in model.stages(params)[:sl]:
+        x = f(x)
+    return x
+
+
+def tail_apply(model, params, feat, sl: int):
+    """Cloud-side tail: stages[sl:] + classifier."""
+    assert sl in model.SPLITS, f"SL{sl} not in {model.SPLITS} for {model.NAME}"
+    for f in model.stages(params)[sl:]:
+        feat = f(feat)
+    return model.classifier(params, feat)

@@ -1,0 +1,77 @@
+"""DenseNet-Mini: dense blocks with channel concatenation + transitions
+(DenseNet121 analogue).
+
+Four dense blocks (3 layers, growth 12) separated by 1×1 transition
+convs with average-pool downsampling.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .. import layers as L
+
+NAME = "densenet_mini"
+SPLITS = [1, 2, 3, 4]
+GROWTH = 12
+LAYERS_PER_BLOCK = 3
+STEM = 24
+
+
+def _init_dense_layer(key, cin):
+    return {"n": L.init_norm(cin), "c": L.init_conv(key, 3, 3, cin, GROWTH)}
+
+
+def _dense_layer(p, x):
+    import jax.numpy as jnp
+
+    h = L.relu(L.channel_norm(p["n"], x))
+    h = L.conv2d(p["c"], h)
+    return jnp.concatenate([x, h], axis=-1)
+
+
+def init(key, num_classes):
+    keys = jax.random.split(key, 40)
+    ki = iter(keys)
+    params = {"stem": L.init_conv(next(ki), 3, 3, 3, STEM)}
+    cin = STEM
+    for s in range(4):
+        block = []
+        for _ in range(LAYERS_PER_BLOCK):
+            block.append(_init_dense_layer(next(ki), cin))
+            cin += GROWTH
+        params[f"block{s + 1}"] = block
+        if s < 3:
+            cout = cin // 2
+            params[f"trans{s + 1}"] = {
+                "n": L.init_norm(cin),
+                "c": L.init_conv(next(ki), 1, 1, cin, cout),
+            }
+            cin = cout
+    params["head_norm"] = L.init_norm(cin)
+    params["fc"] = L.init_dense(next(ki), cin, num_classes)
+    return params
+
+
+def stages(params):
+    def make(s):
+        def run(x):
+            if s == 0:
+                x = L.relu(L.conv2d(params["stem"], x))
+            for lp in params[f"block{s + 1}"]:
+                x = _dense_layer(lp, x)
+            if s < 3:
+                tp = params[f"trans{s + 1}"]
+                x = L.conv2d(tp["c"], L.relu(L.channel_norm(tp["n"], x)))
+                x = L.avg_pool(x)
+            return x
+
+        return run
+
+    return [make(s) for s in range(4)]
+
+
+def classifier(params, feat):
+    x = L.channel_norm(params["head_norm"], feat)
+    x = L.global_avg_pool(L.relu(x))
+    return L.dense(params["fc"], x)

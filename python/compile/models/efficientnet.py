@@ -1,0 +1,90 @@
+"""EfficientNet-Mini: MBConv blocks with squeeze-and-excitation
+(EfficientNetB0 analogue).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+
+NAME = "efficientnet_mini"
+SPLITS = [1, 2, 3, 4]
+WIDTHS = [16, 24, 48, 96]
+EXPANSION = 4
+SE_RATIO = 4
+
+
+def _init_mbconv(key, cin, cout):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    hidden = cin * EXPANSION
+    se_dim = max(1, hidden // SE_RATIO)
+    return {
+        "expand": L.init_conv(k1, 1, 1, cin, hidden),
+        "n1": L.init_norm(hidden),
+        "dw": L.init_conv(k2, 3, 3, 1, hidden),
+        "n2": L.init_norm(hidden),
+        "se_reduce": L.init_dense(k3, hidden, se_dim),
+        "se_expand": L.init_dense(k4, se_dim, hidden),
+        "project": L.init_conv(k5, 1, 1, hidden, cout),
+        "n3": L.init_norm(cout),
+    }
+
+
+def _mbconv(p, x, stride):
+    cin = x.shape[-1]
+    h = L.silu(L.channel_norm(p["n1"], L.conv2d(p["expand"], x)))
+    h = L.silu(L.channel_norm(p["n2"], L.depthwise_conv2d(p["dw"], h, stride=stride)))
+    # Squeeze-and-excitation.
+    s = L.global_avg_pool(h)
+    s = L.silu(L.dense(p["se_reduce"], s))
+    s = jax.nn.sigmoid(L.dense(p["se_expand"], s))
+    h = h * s[:, None, None, :]
+    h = L.channel_norm(p["n3"], L.conv2d(p["project"], h))
+    if stride == 1 and cin == h.shape[-1]:
+        h = h + x
+    return h
+
+
+def _stride_of(s: int, b: int) -> int:
+    return 2 if (b == 0 and s > 0) else 1
+
+
+def init(key, num_classes):
+    keys = jax.random.split(key, 24)
+    ki = iter(keys)
+    params = {"stem": L.init_conv(next(ki), 3, 3, 3, WIDTHS[0])}
+    cin = WIDTHS[0]
+    for s, cout in enumerate(WIDTHS):
+        blocks = []
+        for _b in range(2):
+            blocks.append(_init_mbconv(next(ki), cin, cout))
+            cin = cout
+        params[f"stage{s + 1}"] = blocks
+    params["head_norm"] = L.init_norm(WIDTHS[-1])
+    params["fc"] = L.init_dense(next(ki), WIDTHS[-1], num_classes)
+    return params
+
+
+def stages(params):
+    def make(s):
+        def run(x):
+            if s == 0:
+                x = L.silu(L.conv2d(params["stem"], x))
+            for b, bp in enumerate(params[f"stage{s + 1}"]):
+                x = _mbconv(bp, x, _stride_of(s, b))
+            return x
+
+        return run
+
+    return [make(s) for s in range(4)]
+
+
+def classifier(params, feat):
+    x = L.channel_norm(params["head_norm"], feat)
+    x = L.global_avg_pool(x)
+    return L.dense(params["fc"], x)
+
+
+_ = jnp  # silence unused-import lint in minimal builds

@@ -1,0 +1,88 @@
+"""Llama-Mini: decoder-only transformer (Llama2 analogue), two sizes.
+
+RMSNorm, causal multi-head attention with learned positions, SwiGLU
+MLPs — the Llama block structure at toy scale. The split protocol cuts
+the layer stack: the head (embedding + first `sl` blocks) runs on the
+edge, the hidden-state IF `(B, T, D)` is compressed and shipped, the
+tail (remaining blocks + final norm + lm head) runs on the cloud.
+
+Sizes (the paper's 7B/13B pair, scaled): "s" ≈ 0.9 M params, "m" ≈ 2.6 M.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+
+NAME = "llama_mini"
+
+SIZES = {
+    "s": {"dim": 128, "layers": 4, "heads": 4, "hidden": 256},
+    "m": {"dim": 192, "layers": 6, "heads": 6, "hidden": 384},
+}
+VOCAB = 512
+SEQ_LEN = 64
+
+# Split after this many decoder blocks (≈ middle of the stack, the SC
+# operating point for LLM offloading).
+def default_split(size: str) -> int:
+    return SIZES[size]["layers"] // 2
+
+
+def _init_block(key, dim, hidden):
+    k1, k2 = jax.random.split(key)
+    return {
+        "n1": {"g": jnp.ones((dim,))},
+        "attn": L.init_attention(k1, dim),
+        "n2": {"g": jnp.ones((dim,))},
+        "mlp": L.init_swiglu(k2, dim, hidden),
+    }
+
+
+def _block(p, x, heads, mask):
+    h = x + L.attention(p["attn"], L.rms_norm(p["n1"], x), heads=heads, mask=mask)
+    return h + L.swiglu(p["mlp"], L.rms_norm(p["n2"], h))
+
+
+def init(key, size: str):
+    cfg = SIZES[size]
+    keys = jax.random.split(key, cfg["layers"] + 3)
+    params = {
+        "tok_emb": jax.random.normal(keys[0], (VOCAB, cfg["dim"])) * 0.02,
+        "pos_emb": jax.random.normal(keys[1], (SEQ_LEN, cfg["dim"])) * 0.02,
+        "blocks": [
+            _init_block(keys[2 + i], cfg["dim"], cfg["hidden"])
+            for i in range(cfg["layers"])
+        ],
+        "final_norm": {"g": jnp.ones((cfg["dim"],))},
+        "lm_head": L.init_dense(keys[-1], cfg["dim"], VOCAB),
+    }
+    return params
+
+
+def head_apply(params, tokens, size: str, sl: int):
+    """Embedding + first ``sl`` blocks → hidden states (B, T, D)."""
+    cfg = SIZES[size]
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, : tokens.shape[1]]
+    mask = L.causal_mask(tokens.shape[1])
+    for p in params["blocks"][:sl]:
+        x = _block(p, x, cfg["heads"], mask)
+    return x
+
+
+def tail_apply(params, hidden, size: str, sl: int):
+    """Remaining blocks + lm head → logits (B, T, V)."""
+    cfg = SIZES[size]
+    mask = L.causal_mask(hidden.shape[1])
+    x = hidden
+    for p in params["blocks"][sl:]:
+        x = _block(p, x, cfg["heads"], mask)
+    x = L.rms_norm(params["final_norm"], x)
+    return L.dense(params["lm_head"], x)
+
+
+def forward(params, tokens, size: str):
+    sl = default_split(size)
+    return tail_apply(params, head_apply(params, tokens, size, sl), size, sl)

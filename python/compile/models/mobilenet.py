@@ -1,0 +1,79 @@
+"""MobileNet-Mini: inverted residuals + depthwise separable convs
+(MobileNetV2 analogue).
+
+Four stages of two inverted-residual blocks, expansion 4.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .. import layers as L
+
+NAME = "mobilenet_mini"
+SPLITS = [1, 2, 3, 4]
+WIDTHS = [16, 24, 48, 96]
+EXPANSION = 4
+
+
+def _init_ir(key, cin, cout):
+    k1, k2, k3 = jax.random.split(key, 3)
+    hidden = cin * EXPANSION
+    return {
+        "expand": L.init_conv(k1, 1, 1, cin, hidden),
+        "n1": L.init_norm(hidden),
+        "dw": L.init_conv(k2, 3, 3, 1, hidden),  # depthwise: in=1, groups=C
+        "n2": L.init_norm(hidden),
+        "project": L.init_conv(k3, 1, 1, hidden, cout),
+        "n3": L.init_norm(cout),
+    }
+
+
+def _ir_block(p, x, stride):
+    cin = x.shape[-1]
+    h = L.relu(L.channel_norm(p["n1"], L.conv2d(p["expand"], x)))
+    h = L.relu(L.channel_norm(p["n2"], L.depthwise_conv2d(p["dw"], h, stride=stride)))
+    h = L.channel_norm(p["n3"], L.conv2d(p["project"], h))
+    if stride == 1 and cin == h.shape[-1]:
+        h = h + x  # linear bottleneck residual
+    return h
+
+
+def _stride_of(s: int, b: int) -> int:
+    return 2 if (b == 0 and s > 0) else 1
+
+
+def init(key, num_classes):
+    keys = jax.random.split(key, 24)
+    ki = iter(keys)
+    params = {"stem": L.init_conv(next(ki), 3, 3, 3, WIDTHS[0])}
+    cin = WIDTHS[0]
+    for s, cout in enumerate(WIDTHS):
+        blocks = []
+        for _b in range(2):
+            blocks.append(_init_ir(next(ki), cin, cout))
+            cin = cout
+        params[f"stage{s + 1}"] = blocks
+    params["head_norm"] = L.init_norm(WIDTHS[-1])
+    params["fc"] = L.init_dense(next(ki), WIDTHS[-1], num_classes)
+    return params
+
+
+def stages(params):
+    def make(s):
+        def run(x):
+            if s == 0:
+                x = L.relu(L.conv2d(params["stem"], x))
+            for b, bp in enumerate(params[f"stage{s + 1}"]):
+                x = _ir_block(bp, x, _stride_of(s, b))
+            return x
+
+        return run
+
+    return [make(s) for s in range(4)]
+
+
+def classifier(params, feat):
+    x = L.channel_norm(params["head_norm"], feat)
+    x = L.global_avg_pool(x)
+    return L.dense(params["fc"], x)

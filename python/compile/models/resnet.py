@@ -1,0 +1,83 @@
+"""ResNet-Mini: BasicBlock residual stack (ResNet-34/50 analogue).
+
+Four stages of two pre-norm basic blocks each, widths 16/32/64/128,
+stride-2 downsampling between stages. SL1–SL4 cut after each stage —
+the same split-point family Table 4 sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+
+NAME = "resnet_mini"
+SPLITS = [1, 2, 3, 4]
+WIDTHS = [16, 32, 64, 128]
+BLOCKS_PER_STAGE = 2
+
+
+def _init_block(key, cin, cout, stride):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "n1": L.init_norm(cin),
+        "c1": L.init_conv(k1, 3, 3, cin, cout),
+        "n2": L.init_norm(cout),
+        "c2": L.init_conv(k2, 3, 3, cout, cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = L.init_conv(k3, 1, 1, cin, cout)
+    return p
+
+
+def _stride_of(s: int, b: int) -> int:
+    """Stride is structural (stage/block position), kept out of params so
+    jit sees it as static."""
+    return 2 if (b == 0 and s > 0) else 1
+
+
+def _block(p, x, stride):
+    h = L.channel_norm(p["n1"], x)
+    h = L.relu(h)
+    shortcut = L.conv2d(p["proj"], h, stride=stride) if "proj" in p else x
+    h = L.conv2d(p["c1"], h, stride=stride)
+    h = L.relu(L.channel_norm(p["n2"], h))
+    h = L.conv2d(p["c2"], h)
+    return L.relu(shortcut + h)
+
+
+def init(key, num_classes):
+    keys = jax.random.split(key, 32)
+    ki = iter(keys)
+    params = {"stem": L.init_conv(next(ki), 3, 3, 3, WIDTHS[0])}
+    cin = WIDTHS[0]
+    for s, cout in enumerate(WIDTHS):
+        blocks = []
+        for b in range(BLOCKS_PER_STAGE):
+            blocks.append(_init_block(next(ki), cin, cout, _stride_of(s, b)))
+            cin = cout
+        params[f"stage{s + 1}"] = blocks
+    params["head_norm"] = L.init_norm(WIDTHS[-1])
+    params["fc"] = L.init_dense(next(ki), WIDTHS[-1], num_classes)
+    return params
+
+
+def stages(params):
+    def make(s):
+        def run(x):
+            if s == 0:
+                x = L.relu(L.conv2d(params["stem"], x))
+            for b, bp in enumerate(params[f"stage{s + 1}"]):
+                x = _block(bp, x, _stride_of(s, b))
+            return x
+
+        return run
+
+    return [make(s) for s in range(4)]
+
+
+def classifier(params, feat):
+    x = L.channel_norm(params["head_norm"], feat)
+    x = L.global_avg_pool(x)
+    return L.dense(params["fc"], x)

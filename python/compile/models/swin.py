@@ -1,0 +1,115 @@
+"""Swin-Mini: windowed self-attention transformer with patch merging
+(Swin-T analogue).
+
+Patch-embed 4×4 → three stages of window-attention blocks (window 4,
+alternating shifted windows) with patch merging between stages, plus a
+final attention stage at the coarsest resolution. Features stay NHWC at
+the stage boundaries so the split/compress path is identical to the CNNs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+
+NAME = "swin_mini"
+SPLITS = [1, 2, 3, 4]
+EMBED = 48
+WINDOW = 4
+HEADS = 4
+
+
+def _window_partition(x, w):
+    b, h, wd, c = x.shape
+    x = x.reshape(b, h // w, w, wd // w, w, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)  # b, nh, nw, w, w, c
+    return x.reshape(-1, w * w, c)
+
+
+def _window_merge(wins, w, b, h, wd, c):
+    x = wins.reshape(b, h // w, wd // w, w, w, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, h, wd, c)
+
+
+def _init_block(key, dim):
+    k1, k2 = jax.random.split(key)
+    return {
+        "n1": L.init_norm(dim),
+        "attn": L.init_attention(k1, dim),
+        "n2": L.init_norm(dim),
+        "mlp": L.init_mlp(k2, dim, dim * 2),
+    }
+
+
+def _block(p, x, shift):
+    b, h, w, c = x.shape
+    # Effective window shrinks at coarse resolutions; shifting is a no-op
+    # once the window covers the whole feature map.
+    we = min(WINDOW, h, w)
+    do_shift = shift and we < h
+    res = x
+    y = L.channel_norm(p["n1"], x)
+    if do_shift:
+        y = jnp.roll(y, shift=(-we // 2, -we // 2), axis=(1, 2))
+    wins = _window_partition(y, we)
+    wins = L.attention(p["attn"], wins, heads=HEADS)
+    y = _window_merge(wins, we, b, h, w, c)
+    if do_shift:
+        y = jnp.roll(y, shift=(we // 2, we // 2), axis=(1, 2))
+    x = res + y
+    return x + L.mlp(p["mlp"], L.channel_norm(p["n2"], x))
+
+
+def _init_merge(key, dim):
+    return {"n": L.init_norm(dim * 4), "proj": L.init_dense(key, dim * 4, dim * 2)}
+
+
+def _merge(p, x):
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b, h // 2, w // 2, 4 * c)
+    return L.dense(p["proj"], L.channel_norm(p["n"], x))
+
+
+def init(key, num_classes):
+    keys = jax.random.split(key, 24)
+    ki = iter(keys)
+    params = {"embed": L.init_conv(next(ki), 4, 4, 3, EMBED)}
+    dim = EMBED
+    for s in range(4):
+        params[f"stage{s + 1}"] = [
+            _init_block(next(ki), dim),
+            _init_block(next(ki), dim),
+        ]
+        if s < 2:
+            params[f"merge{s + 1}"] = _init_merge(next(ki), dim)
+            dim *= 2
+    params["head_norm"] = L.init_norm(dim)
+    params["fc"] = L.init_dense(next(ki), dim, num_classes)
+    return params
+
+
+def stages(params):
+    def make(s):
+        def run(x):
+            if s == 0:
+                # 32×32×3 → 8×8×EMBED patches.
+                x = L.conv2d(params["embed"], x, stride=4, padding="VALID")
+            for i, bp in enumerate(params[f"stage{s + 1}"]):
+                x = _block(bp, x, shift=(i % 2 == 1))
+            if s < 2:
+                x = _merge(params[f"merge{s + 1}"], x)
+            return x
+
+        return run
+
+    return [make(s) for s in range(4)]
+
+
+def classifier(params, feat):
+    x = L.channel_norm(params["head_norm"], feat)
+    x = jnp.mean(x, axis=(1, 2))
+    return L.dense(params["fc"], x)

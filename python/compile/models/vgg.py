@@ -1,0 +1,52 @@
+"""VGG-Mini: plain conv/pool stack (VGG16 analogue).
+
+Four conv stages (two 3×3 convs + maxpool each), widths 32/64/128/128.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .. import layers as L
+
+NAME = "vgg_mini"
+SPLITS = [1, 2, 3, 4]
+WIDTHS = [32, 64, 128, 128]
+
+
+def init(key, num_classes):
+    keys = jax.random.split(key, 16)
+    ki = iter(keys)
+    params = {}
+    cin = 3
+    for s, cout in enumerate(WIDTHS):
+        params[f"stage{s + 1}"] = {
+            "c1": L.init_conv(next(ki), 3, 3, cin, cout),
+            "n1": L.init_norm(cout),
+            "c2": L.init_conv(next(ki), 3, 3, cout, cout),
+            "n2": L.init_norm(cout),
+        }
+        cin = cout
+    params["fc1"] = L.init_dense(next(ki), WIDTHS[-1] * 2 * 2, 256)
+    params["fc2"] = L.init_dense(next(ki), 256, num_classes)
+    return params
+
+
+def stages(params):
+    def make(s):
+        def run(x):
+            p = params[f"stage{s + 1}"]
+            x = L.relu(L.channel_norm(p["n1"], L.conv2d(p["c1"], x)))
+            x = L.relu(L.channel_norm(p["n2"], L.conv2d(p["c2"], x)))
+            return L.max_pool(x)
+
+        return run
+
+    return [make(s) for s in range(4)]
+
+
+def classifier(params, feat):
+    b = feat.shape[0]
+    x = feat.reshape(b, -1)
+    x = L.relu(L.dense(params["fc1"], x))
+    return L.dense(params["fc2"], x)

@@ -1,0 +1,164 @@
+"""Build-time training loops (Layer 2).
+
+Minimal Adam + cross-entropy, jitted. Vision models train on the
+synthetic grating datasets; Llama-Mini trains next-token on the mixed
+task corpus. Runs once under ``make artifacts``; trained params are
+cached as .npz under ``artifacts/cache`` keyed by a config hash.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from .models import common, llama_mini
+
+
+# ----------------------------------------------------------------- adam
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros(())}
+
+
+def adam_step(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1.0
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def softmax_xent(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[..., None], axis=-1))
+
+
+# --------------------------------------------------------------- vision
+
+def train_vision(model, num_classes, x_tr, y_tr, steps, batch, lr, seed=0, log=print):
+    """Train a split-protocol vision model; returns trained params."""
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key, num_classes)
+
+    def loss_fn(p, xb, yb):
+        return softmax_xent(common.forward(model, p, xb), yb)
+
+    @jax.jit
+    def step(p, opt, xb, yb):
+        loss, grads = jax.value_and_grad(loss_fn)(p, xb, yb)
+        p, opt = adam_step(p, grads, opt, lr)
+        return p, opt, loss
+
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed + 7)
+    n = x_tr.shape[0]
+    for i in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        params, opt, loss = step(params, opt, x_tr[idx], y_tr[idx])
+        if log and (i % max(1, steps // 5) == 0 or i == steps - 1):
+            log(f"    [{model.NAME}] step {i + 1}/{steps} loss {float(loss):.3f}")
+    return params
+
+
+def eval_vision(model, params, x_te, y_te, batch=64) -> float:
+    """Top-1 accuracy of the full (uncompressed) model."""
+    fwd = jax.jit(functools.partial(common.forward, model))
+    correct = 0
+    for i in range(0, x_te.shape[0], batch):
+        logits = fwd(params, x_te[i : i + batch])
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == y_te[i : i + batch]))
+    return correct / x_te.shape[0]
+
+
+# -------------------------------------------------------------- language
+
+def train_lm(size: str, steps, batch, lr, seed=0, corpus_size=4096, log=print):
+    """Train Llama-Mini next-token on the synthetic task corpus."""
+    key = jax.random.PRNGKey(seed + 13)
+    params = llama_mini.init(key, size)
+    corpus = D.gen_training_corpus(corpus_size, seed=seed + 31)
+
+    def loss_fn(p, toks):
+        logits = llama_mini.forward(p, toks[:, :-1], size)
+        labels = toks[:, 1:]
+        mask = (labels != D.PAD).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    @jax.jit
+    def step(p, opt, toks):
+        loss, grads = jax.value_and_grad(loss_fn)(p, toks)
+        p, opt = adam_step(p, grads, opt, lr)
+        return p, opt, loss
+
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed + 77)
+    for i in range(steps):
+        idx = rng.integers(0, corpus.shape[0], size=batch)
+        params, opt, loss = step(params, opt, jnp.asarray(corpus[idx]))
+        if log and (i % max(1, steps // 5) == 0 or i == steps - 1):
+            log(f"    [llama_mini_{size}] step {i + 1}/{steps} loss {float(loss):.3f}")
+    return params
+
+
+def eval_lm_mc(params, size: str, task: str, n_items: int, seed: int) -> float:
+    """Multiple-choice accuracy of the full model (logprob scoring)."""
+    rng = np.random.default_rng(seed)
+    fwd = jax.jit(functools.partial(llama_mini.forward, size=size))
+    correct = 0
+    for _ in range(n_items):
+        choices, starts, lens, gold = D.gen_mc_item(task, rng)
+        toks = jnp.asarray(choices)
+        logits = fwd(params, toks)  # (C, T, V)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        scores = []
+        for c in range(choices.shape[0]):
+            s, ln = int(starts[c]), int(lens[c])
+            # logits at t-1 predict token t.
+            pos = np.arange(s, s + ln)
+            lp = logp[c, pos - 1, choices[c, pos]]
+            scores.append(float(jnp.sum(lp)))
+        if int(np.argmax(scores)) == gold:
+            correct += 1
+    return correct / n_items
+
+
+# ---------------------------------------------------------------- cache
+
+def cache_path(cache_dir: str, name: str) -> str:
+    return os.path.join(cache_dir, f"{name}.npz")
+
+
+def save_params(path: str, params):
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    np.savez_compressed(
+        path, treedef=np.frombuffer(str(treedef).encode(), dtype=np.uint8),
+        **{f"a{i}": np.asarray(x) for i, x in enumerate(flat)},
+    )
+
+
+def load_params(path: str, like):
+    """Load params saved by :func:`save_params`, using ``like`` (a params
+    pytree of the same structure) for the treedef."""
+    if not os.path.exists(path):
+        return None
+    z = np.load(path)
+    flat_like, treedef = jax.tree_util.tree_flatten(like)
+    flat = [jnp.asarray(z[f"a{i}"]) for i in range(len(flat_like))]
+    if any(a.shape != b.shape for a, b in zip(flat, flat_like)):
+        return None  # config changed; retrain
+    return jax.tree_util.tree_unflatten(treedef, flat)

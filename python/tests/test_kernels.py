@@ -1,0 +1,168 @@
+"""Layer-1 Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, value ranges and bit-widths; every kernel must
+match its `ref.py` oracle exactly (integer outputs) or to float
+tolerance (dequantize).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    aiq_dequantize,
+    aiq_quantize,
+    minmax,
+    row_nonzero_counts,
+    symbol_histogram,
+)
+from compile.kernels.quantize import quantize_with_params
+from compile.kernels import ref
+
+import os
+
+SETTINGS = dict(
+    max_examples=int(os.environ.get("RANS_SC_HYP_EXAMPLES", "25")), deadline=None
+)
+
+
+def tensor_strategy(max_elems=6000):
+    """Random-shaped float tensors incl. negative ranges and sparsity."""
+
+    @st.composite
+    def _build(draw):
+        ndim = draw(st.integers(1, 3))
+        dims = [draw(st.integers(1, 24)) for _ in range(ndim)]
+        while int(np.prod(dims)) > max_elems:
+            dims[dims.index(max(dims))] //= 2
+            dims = [max(1, d) for d in dims]
+        seed = draw(st.integers(0, 2**31 - 1))
+        sparsity = draw(st.floats(0.0, 0.9))
+        scale = draw(st.sampled_from([0.01, 1.0, 100.0]))
+        shift = draw(st.sampled_from([-5.0, 0.0, 3.0]))
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=dims).astype(np.float32) * scale + shift
+        mask = rng.random(size=dims) < sparsity
+        x[mask] = 0.0
+        return jnp.asarray(x)
+
+    return _build()
+
+
+@given(x=tensor_strategy())
+@settings(**SETTINGS)
+def test_minmax_matches_ref(x):
+    mn, mx = minmax(x)
+    rmn, rmx = ref.minmax_ref(x)
+    assert np.allclose(mn, rmn)
+    assert np.allclose(mx, rmx)
+
+
+@given(x=tensor_strategy(), q=st.sampled_from([2, 3, 4, 6, 8]))
+@settings(**SETTINGS)
+def test_quantize_matches_ref(x, q):
+    levels = jnp.float32(2**q - 1)
+    mn, mx = ref.minmax_ref(x)
+    scale, zero = ref.aiq_params_ref(mn, mx, levels)
+    got = aiq_quantize(x, scale, zero, levels)
+    want = ref.aiq_quantize_ref(x, scale, zero, levels)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    assert int(jnp.min(got)) >= 0
+    assert int(jnp.max(got)) <= 2**q - 1
+
+
+@given(x=tensor_strategy(), q=st.sampled_from([2, 4, 8]))
+@settings(**SETTINGS)
+def test_dequantize_matches_ref_and_bounds_error(x, q):
+    levels = jnp.float32(2**q - 1)
+    sym, scale, zero = quantize_with_params(x, levels)
+    got = aiq_dequantize(sym, scale, zero)
+    want = ref.aiq_dequantize_ref(sym, scale, zero)
+    assert np.allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+    # Reconstruction error bounded by one quantization step — except for
+    # degenerate ranges (x_max == x_min), where scale falls back to 1 and
+    # constants far from 0 are clamped (Eq. 6 has no information to
+    # reconstruct them; heads never emit such tensors, see ref.py).
+    mn, mx = ref.minmax_ref(x)
+    if float(mx) > float(mn):
+        err = np.abs(np.asarray(got) - np.asarray(x))
+        assert err.max() <= float(scale) * 1.0 + 1e-5
+
+
+@given(x=tensor_strategy(), q=st.sampled_from([2, 4, 8]))
+@settings(**SETTINGS)
+def test_fused_epilogue_consistent(x, q):
+    levels = jnp.float32(2**q - 1)
+    sym, scale, zero = quantize_with_params(x, levels)
+    mn, mx = ref.minmax_ref(x)
+    rscale, rzero = ref.aiq_params_ref(mn, mx, levels)
+    assert np.allclose(scale, rscale)
+    assert np.allclose(zero, rzero)
+    want = ref.aiq_quantize_ref(x, rscale, rzero, levels)
+    assert np.array_equal(np.asarray(sym), np.asarray(want))
+
+
+@given(
+    n=st.integers(1, 80),
+    k=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+    bg=st.integers(0, 15),
+)
+@settings(**SETTINGS)
+def test_rowcount_matches_ref(n, k, seed, bg):
+    rng = np.random.default_rng(seed)
+    m = jnp.asarray(rng.integers(0, 16, size=(n, k)), jnp.int32)
+    got = row_nonzero_counts(m, jnp.int32(bg))
+    want = ref.row_nonzero_counts_ref(m, jnp.int32(bg))
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    length=st.integers(0, 5000),
+    alphabet=st.sampled_from([2, 16, 64, 257]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_histogram_matches_ref(length, alphabet, seed):
+    rng = np.random.default_rng(seed)
+    sym = jnp.asarray(rng.integers(0, alphabet, size=(length,)), jnp.int32)
+    got = symbol_histogram(sym, alphabet)
+    want = ref.symbol_histogram_ref(sym, alphabet)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    assert int(jnp.sum(got)) == length
+
+
+def test_quantize_zero_maps_to_zero_roundtrip():
+    """Post-ReLU zeros must reconstruct exactly (sparsity preservation)."""
+    x = jnp.asarray([0.0, 0.5, 1.25, 0.0, 3.0], jnp.float32)
+    for q in (2, 4, 8):
+        levels = jnp.float32(2**q - 1)
+        sym, scale, zero = quantize_with_params(x, levels)
+        back = aiq_dequantize(sym, scale, zero)
+        assert float(back[0]) == 0.0
+        assert float(back[3]) == 0.0
+
+
+def test_constant_tensor_degenerate_range():
+    x = jnp.full((100,), 2.5, jnp.float32)
+    sym, scale, zero = quantize_with_params(x, jnp.float32(15.0))
+    assert float(scale) == 1.0  # degenerate-range fallback
+    # All symbols identical.
+    assert int(jnp.min(sym)) == int(jnp.max(sym))
+
+
+def test_kernels_lower_to_hlo_text():
+    """The interpret-mode kernels must survive the AOT export path."""
+    from compile.hlo import to_hlo_text
+
+    def fn(x, levels):
+        sym, scale, zero = quantize_with_params(x, levels)
+        return (sym, scale, zero)
+
+    spec = jax.ShapeDtypeStruct((4, 8, 8), jnp.float32)
+    lv = jax.ShapeDtypeStruct((), jnp.float32)
+    text = to_hlo_text(jax.jit(fn).lower(spec, lv))
+    assert "HloModule" in text
+    assert len(text) > 1000

@@ -1,0 +1,89 @@
+"""Model-zoo structural tests: split consistency, shapes, determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.layers import count_params
+from compile.models import VISION_MODELS, common, llama_mini
+
+
+@pytest.fixture(scope="module")
+def img_batch():
+    return jax.random.normal(jax.random.PRNGKey(0), (2, 32, 32, 3))
+
+
+@pytest.mark.parametrize("name", sorted(VISION_MODELS))
+def test_split_equals_full(name, img_batch):
+    """head(sl) ∘ tail(sl) must reproduce the full forward for every SL."""
+    model = VISION_MODELS[name]
+    params = model.init(jax.random.PRNGKey(1), 10)
+    full = common.forward(model, params, img_batch)
+    assert full.shape == (2, 10)
+    for sl in model.SPLITS:
+        feat = common.head_apply(model, params, img_batch, sl)
+        logits = common.tail_apply(model, params, feat, sl)
+        assert np.allclose(np.asarray(full), np.asarray(logits), atol=1e-4), f"SL{sl}"
+
+
+@pytest.mark.parametrize("name", sorted(VISION_MODELS))
+def test_feature_shapes_shrink_spatially(name, img_batch):
+    model = VISION_MODELS[name]
+    params = model.init(jax.random.PRNGKey(2), 10)
+    sizes = []
+    for sl in model.SPLITS:
+        feat = common.head_apply(model, params, img_batch, sl)
+        assert feat.ndim == 4  # NHWC at every split boundary
+        sizes.append(feat.shape[1] * feat.shape[2])
+    assert sizes == sorted(sizes, reverse=True) or len(set(sizes)) > 1 or True
+    # Spatial size never grows with depth.
+    for a, b in zip(sizes, sizes[1:]):
+        assert b <= a
+
+
+@pytest.mark.parametrize("name", sorted(VISION_MODELS))
+def test_deterministic_init_and_forward(name, img_batch):
+    model = VISION_MODELS[name]
+    p1 = model.init(jax.random.PRNGKey(3), 10)
+    p2 = model.init(jax.random.PRNGKey(3), 10)
+    y1 = common.forward(model, p1, img_batch)
+    y2 = common.forward(model, p2, img_batch)
+    assert np.array_equal(np.asarray(y1), np.asarray(y2))
+
+
+@pytest.mark.parametrize("name", sorted(VISION_MODELS))
+def test_param_counts_mini_scale(name):
+    model = VISION_MODELS[name]
+    params = model.init(jax.random.PRNGKey(4), 100)
+    n = count_params(params)
+    assert 10_000 < n < 5_000_000, f"{name}: {n} params out of mini-scale range"
+
+
+@pytest.mark.parametrize("size", ["s", "m"])
+def test_llama_split_equals_full(size):
+    params = llama_mini.init(jax.random.PRNGKey(5), size)
+    toks = jax.random.randint(jax.random.PRNGKey(6), (4, llama_mini.SEQ_LEN), 0, llama_mini.VOCAB)
+    full = llama_mini.forward(params, toks, size)
+    sl = llama_mini.default_split(size)
+    hidden = llama_mini.head_apply(params, toks, size, sl)
+    logits = llama_mini.tail_apply(params, hidden, size, sl)
+    assert np.allclose(np.asarray(full), np.asarray(logits), atol=1e-4)
+    assert full.shape == (4, llama_mini.SEQ_LEN, llama_mini.VOCAB)
+
+
+def test_llama_causality():
+    """Changing a future token must not affect earlier logits."""
+    params = llama_mini.init(jax.random.PRNGKey(7), "s")
+    toks = jax.random.randint(jax.random.PRNGKey(8), (1, llama_mini.SEQ_LEN), 8, llama_mini.VOCAB)
+    toks2 = toks.at[0, -1].set((toks[0, -1] + 1) % llama_mini.VOCAB)
+    l1 = llama_mini.forward(params, toks, "s")
+    l2 = llama_mini.forward(params, toks2, "s")
+    assert np.allclose(np.asarray(l1[0, :-1]), np.asarray(l2[0, :-1]), atol=1e-5)
+    assert not np.allclose(np.asarray(l1[0, -1]), np.asarray(l2[0, -1]), atol=1e-5)
+
+
+def test_llama_sizes_ordered():
+    ps = llama_mini.init(jax.random.PRNGKey(9), "s")
+    pm = llama_mini.init(jax.random.PRNGKey(9), "m")
+    assert count_params(pm) > count_params(ps) * 2

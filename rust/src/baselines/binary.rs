@@ -1,0 +1,81 @@
+//! E-1: binary serialization (no compression).
+//!
+//! The transmission format most SC deployments start from: the raw
+//! little-endian `f32` tensor plus a varint length header. Encode and
+//! decode are memcpy-bound — the paper's Table 1 lists it as the fastest
+//! codec and the largest payload.
+
+use crate::error::{Error, Result};
+use crate::util::varint;
+
+use super::TensorCodec;
+
+/// Plain binary serialization codec.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BinaryCodec;
+
+impl TensorCodec for BinaryCodec {
+    fn name(&self) -> &'static str {
+        "E-1 binary"
+    }
+
+    fn encode(&self, data: &[f32]) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(4 + data.len() * 4);
+        varint::write_usize(&mut out, data.len());
+        for &x in data {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        Ok(out)
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Result<Vec<f32>> {
+        let mut pos = 0usize;
+        let len = varint::read_usize(bytes, &mut pos)?;
+        let need = len
+            .checked_mul(4)
+            .and_then(|n| n.checked_add(pos))
+            .ok_or_else(|| Error::corrupt("length overflow"))?;
+        if bytes.len() != need {
+            return Err(Error::corrupt(format!(
+                "binary payload {} bytes, expected {need}",
+                bytes.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(len);
+        for chunk in bytes[pos..].chunks_exact(4) {
+            out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_is_4n_plus_header() {
+        let data = vec![1.5f32; 1000];
+        let bytes = BinaryCodec.encode(&data).unwrap();
+        assert_eq!(bytes.len(), 2 + 4000); // varint(1000) = 2 bytes
+    }
+
+    #[test]
+    fn preserves_nan_and_inf_bits() {
+        let data = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0];
+        let back = BinaryCodec.decode(&BinaryCodec.encode(&data).unwrap()).unwrap();
+        for (a, b) in data.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let mut bytes = BinaryCodec.encode(&[1.0, 2.0]).unwrap();
+        bytes.pop();
+        assert!(BinaryCodec.decode(&bytes).is_err());
+        bytes.push(0);
+        bytes.push(0);
+        assert!(BinaryCodec.decode(&bytes).is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! General-purpose compressors as extra comparators.
+//!
+//! Not part of the paper's Table 1, but useful context in
+//! EXPERIMENTS.md: how far a tuned entropy pipeline is from what a
+//! deployment would get by simply piping the tensor through zstd or
+//! deflate.
+
+use std::io::{Read, Write};
+
+use crate::error::{Error, Result};
+use crate::util::varint;
+
+use super::TensorCodec;
+
+fn to_bytes(data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * 4);
+    for &x in data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn from_bytes(bytes: &[u8], n: usize) -> Result<Vec<f32>> {
+    if bytes.len() != n * 4 {
+        return Err(Error::corrupt("decompressed payload length mismatch"));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// zstd at a configurable level (default 3, the library default).
+#[derive(Debug, Clone, Copy)]
+pub struct ZstdCodec {
+    /// Compression level (1–22).
+    pub level: i32,
+}
+
+impl Default for ZstdCodec {
+    fn default() -> Self {
+        ZstdCodec { level: 3 }
+    }
+}
+
+impl TensorCodec for ZstdCodec {
+    fn name(&self) -> &'static str {
+        "zstd"
+    }
+
+    fn encode(&self, data: &[f32]) -> Result<Vec<u8>> {
+        let raw = to_bytes(data);
+        let compressed = zstd::bulk::compress(&raw, self.level)
+            .map_err(|e| Error::codec(format!("zstd: {e}")))?;
+        let mut out = Vec::with_capacity(compressed.len() + 8);
+        varint::write_usize(&mut out, data.len());
+        out.extend_from_slice(&compressed);
+        Ok(out)
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Result<Vec<f32>> {
+        let mut pos = 0usize;
+        let n = varint::read_usize(bytes, &mut pos)?;
+        let raw = zstd::bulk::decompress(&bytes[pos..], n * 4 + 64)
+            .map_err(|e| Error::corrupt(format!("zstd: {e}")))?;
+        from_bytes(&raw, n)
+    }
+}
+
+/// DEFLATE via flate2 (zlib format).
+#[derive(Debug, Clone, Copy)]
+pub struct DeflateCodec {
+    /// Compression level (0–9).
+    pub level: u32,
+}
+
+impl Default for DeflateCodec {
+    fn default() -> Self {
+        DeflateCodec { level: 6 }
+    }
+}
+
+impl TensorCodec for DeflateCodec {
+    fn name(&self) -> &'static str {
+        "deflate"
+    }
+
+    fn encode(&self, data: &[f32]) -> Result<Vec<u8>> {
+        let raw = to_bytes(data);
+        let mut enc = flate2::write::ZlibEncoder::new(
+            Vec::new(),
+            flate2::Compression::new(self.level),
+        );
+        enc.write_all(&raw)?;
+        let compressed = enc.finish()?;
+        let mut out = Vec::with_capacity(compressed.len() + 8);
+        varint::write_usize(&mut out, data.len());
+        out.extend_from_slice(&compressed);
+        Ok(out)
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Result<Vec<f32>> {
+        let mut pos = 0usize;
+        let n = varint::read_usize(bytes, &mut pos)?;
+        let mut dec = flate2::read::ZlibDecoder::new(&bytes[pos..]);
+        let mut raw = Vec::with_capacity(n * 4);
+        dec.read_to_end(&mut raw)?;
+        from_bytes(&raw, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::tests::relu_feature;
+
+    #[test]
+    fn zstd_roundtrip_and_compression() {
+        let data = relu_feature(31, 30_000);
+        let codec = ZstdCodec::default();
+        let bytes = codec.encode(&data).unwrap();
+        let back = codec.decode(&bytes).unwrap();
+        assert!(data.iter().zip(&back).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(bytes.len() < data.len() * 4);
+    }
+
+    #[test]
+    fn deflate_roundtrip_and_compression() {
+        let data = relu_feature(32, 30_000);
+        let codec = DeflateCodec::default();
+        let bytes = codec.encode(&data).unwrap();
+        let back = codec.decode(&bytes).unwrap();
+        assert!(data.iter().zip(&back).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(bytes.len() < data.len() * 4);
+    }
+
+    #[test]
+    fn corrupt_zstd_rejected() {
+        let data = relu_feature(33, 1000);
+        let codec = ZstdCodec::default();
+        let mut bytes = codec.encode(&data).unwrap();
+        let mid = bytes.len() / 2;
+        bytes.truncate(mid);
+        assert!(codec.decode(&bytes).is_err());
+    }
+}

@@ -1,0 +1,106 @@
+//! Baseline codecs for Table 1 (E-1, E-2, E-3) plus extra comparators.
+//!
+//! All baselines implement [`TensorCodec`] over raw `f32` intermediate
+//! features so the Table-1 bench can sweep them uniformly:
+//!
+//! * **E-1** [`binary::BinaryCodec`] — plain binary serialization
+//!   (lossless, no compression; the paper's 401 KB reference point).
+//! * **E-2** [`tans_codec::TansTensorCodec`] — table-based ANS over the
+//!   byte stream (lossless; compresses well, encodes slowly).
+//! * **E-3** [`dietgpu_like::DietGpuLikeCodec`] — byte-plane interleaved
+//!   rANS in the style of DietGPU's general float mode (lossless,
+//!   GPU-decomposable; fast but weaker than the quantized pipeline).
+//! * [`general::ZstdCodec`] / [`general::DeflateCodec`] — off-the-shelf
+//!   general-purpose compressors as sanity comparators (not in the
+//!   paper's table; reported alongside in EXPERIMENTS.md).
+
+pub mod binary;
+pub mod dietgpu_like;
+pub mod general;
+pub mod tans_codec;
+
+use crate::error::Result;
+
+/// A whole-tensor codec (baseline interface for Table 1).
+pub trait TensorCodec {
+    /// Display name used in bench output.
+    fn name(&self) -> &'static str;
+    /// Compress the tensor.
+    fn encode(&self, data: &[f32]) -> Result<Vec<u8>>;
+    /// Decompress; must invert `encode` exactly for lossless codecs.
+    fn decode(&self, bytes: &[u8]) -> Result<Vec<f32>>;
+    /// Whether decode(encode(x)) == x bit-exactly.
+    fn lossless(&self) -> bool {
+        true
+    }
+}
+
+/// All paper baselines in Table-1 order.
+pub fn paper_baselines() -> Vec<Box<dyn TensorCodec + Send + Sync>> {
+    vec![
+        Box::new(binary::BinaryCodec),
+        Box::new(tans_codec::TansTensorCodec),
+        Box::new(dietgpu_like::DietGpuLikeCodec::default()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    /// Synthetic post-ReLU IF slab shared by baseline tests.
+    pub(crate) fn relu_feature(seed: u64, len: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..len)
+            .map(|_| {
+                if rng.next_f64() < 0.55 {
+                    0.0
+                } else {
+                    (rng.normal().abs() as f32) * 1.5
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_baselines_roundtrip() {
+        let data = relu_feature(1, 10_000);
+        for codec in paper_baselines() {
+            let bytes = codec.encode(&data).unwrap();
+            let back = codec.decode(&bytes).unwrap();
+            assert_eq!(back.len(), data.len(), "{}", codec.name());
+            if codec.lossless() {
+                assert!(
+                    data.iter().zip(&back).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{} must be bit-exact",
+                    codec.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compressors_beat_binary_on_sparse_data() {
+        let data = relu_feature(2, 50_000);
+        let baselines = paper_baselines();
+        let sizes: Vec<(String, usize)> = baselines
+            .iter()
+            .map(|c| (c.name().to_string(), c.encode(&data).unwrap().len()))
+            .collect();
+        let binary = sizes.iter().find(|(n, _)| n.contains("binary")).unwrap().1;
+        for (name, size) in &sizes {
+            if !name.contains("binary") {
+                assert!(size < &binary, "{name}: {size} !< {binary}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_tensor_roundtrips() {
+        for codec in paper_baselines() {
+            let bytes = codec.encode(&[]).unwrap();
+            assert!(codec.decode(&bytes).unwrap().is_empty(), "{}", codec.name());
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! E-2: tANS over the raw byte stream.
+//!
+//! Matches how the paper benchmarks Duda's table-based ANS as a
+//! whole-tensor baseline: one pass to gather byte statistics, a state
+//! table built from them, then a scalar table-driven encode. The table
+//! build plus the single-threaded walk is what makes E-2's encode time
+//! balloon in Table 1 while its compressed size stays competitive.
+
+use crate::error::Result;
+use crate::rans::FreqTable;
+use crate::tans::{tans_decode, tans_encode};
+use crate::util::varint;
+
+use super::TensorCodec;
+
+/// Whole-tensor tANS baseline.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TansTensorCodec;
+
+impl TensorCodec for TansTensorCodec {
+    fn name(&self) -> &'static str {
+        "E-2 tANS"
+    }
+
+    fn encode(&self, data: &[f32]) -> Result<Vec<u8>> {
+        let symbols: Vec<u32> = data
+            .iter()
+            .flat_map(|x| x.to_le_bytes())
+            .map(|b| b as u32)
+            .collect();
+        let table = FreqTable::from_symbols(&symbols, 256);
+        let mut out = Vec::new();
+        varint::write_usize(&mut out, data.len());
+        table.serialize(&mut out);
+        let stream = tans_encode(&symbols, &table)?;
+        out.extend_from_slice(&stream);
+        Ok(out)
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Result<Vec<f32>> {
+        let mut pos = 0usize;
+        let n = varint::read_usize(bytes, &mut pos)?;
+        let table = FreqTable::deserialize(bytes, &mut pos)?;
+        let symbols = tans_decode(&bytes[pos..], n * 4, &table)?;
+        let mut out = Vec::with_capacity(n);
+        for chunk in symbols.chunks_exact(4) {
+            out.push(f32::from_le_bytes([
+                chunk[0] as u8,
+                chunk[1] as u8,
+                chunk[2] as u8,
+                chunk[3] as u8,
+            ]));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::tests::relu_feature;
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        let data = relu_feature(21, 8_000);
+        let codec = TansTensorCodec;
+        let back = codec.decode(&codec.encode(&data).unwrap()).unwrap();
+        assert!(data.iter().zip(&back).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn compresses_sparse_data() {
+        // Single shared byte table across all four planes: mantissa bytes
+        // of live activations are near-random, so the win comes from the
+        // ~55% exact-zero floats. Expect a solid but not dramatic ratio.
+        let data = relu_feature(22, 50_000);
+        let bytes = TansTensorCodec.encode(&data).unwrap();
+        assert!(bytes.len() < data.len() * 4 * 3 / 4, "{} bytes", bytes.len());
+    }
+}

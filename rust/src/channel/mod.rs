@@ -1,0 +1,11 @@
+//! Wireless channel models for the edge→cloud link.
+//!
+//! The paper reports communication latency `T_comm` via the ε-outage
+//! model of ref. [13] (Yun et al.), not a physical link; this module
+//! implements that analytic model plus a stochastic packet-level
+//! simulator (outage → retransmission) used by the transport layer for
+//! failure-injection tests.
+
+pub mod outage;
+
+pub use outage::{ChannelParams, OutageChannel, TransmitOutcome};

@@ -1,0 +1,204 @@
+//! Configuration system: JSON files + `key=value` overrides.
+//!
+//! The launcher reads an optional JSON config file and applies
+//! dotted-path CLI overrides (`--set channel.gamma_db=20`), so every
+//! experiment in EXPERIMENTS.md is reproducible from a recorded command
+//! line. Defaults mirror the paper's §4.1 setup.
+
+use std::path::Path;
+
+use crate::channel::ChannelParams;
+use crate::error::{Error, Result};
+use crate::util::json::{self, ObjBuilder, Value};
+
+/// Top-level application configuration.
+#[derive(Debug, Clone)]
+pub struct AppConfig {
+    /// Artifact directory (manifest.json root).
+    pub artifacts_dir: String,
+    /// Default model route.
+    pub model: String,
+    /// Split layer.
+    pub sl: usize,
+    /// Artifact batch size.
+    pub batch: usize,
+    /// AIQ bit-width Q.
+    pub q: u8,
+    /// rANS lanes.
+    pub lanes: usize,
+    /// Thread the rANS lanes.
+    pub parallel: bool,
+    /// Cloud listen / connect address.
+    pub addr: String,
+    /// Wireless channel parameters.
+    pub channel: ChannelParams,
+    /// Batcher buckets.
+    pub buckets: Vec<usize>,
+    /// Batcher max wait, microseconds.
+    pub batch_wait_us: u64,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        AppConfig {
+            artifacts_dir: "artifacts".into(),
+            model: "resnet_mini_synth_a".into(),
+            sl: 2,
+            batch: 1,
+            q: 4,
+            lanes: 8,
+            parallel: true,
+            addr: "127.0.0.1:7439".into(),
+            channel: ChannelParams::default(),
+            buckets: vec![1, 8],
+            batch_wait_us: 2000,
+        }
+    }
+}
+
+impl AppConfig {
+    /// Load from a JSON file, falling back to defaults for absent keys.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error::config(format!("{}: {e}", path.as_ref().display())))?;
+        let v = json::parse(&text)?;
+        let mut cfg = AppConfig::default();
+        cfg.apply_json(&v)?;
+        Ok(cfg)
+    }
+
+    /// Merge a JSON object into the config.
+    pub fn apply_json(&mut self, v: &Value) -> Result<()> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| Error::config("config root must be an object"))?;
+        for (k, val) in obj {
+            self.apply_value(k, val)?;
+        }
+        Ok(())
+    }
+
+    fn apply_value(&mut self, key: &str, val: &Value) -> Result<()> {
+        let bad = || Error::config(format!("bad value for '{key}'"));
+        match key {
+            "artifacts_dir" => self.artifacts_dir = val.as_str().ok_or_else(bad)?.into(),
+            "model" => self.model = val.as_str().ok_or_else(bad)?.into(),
+            "sl" => self.sl = val.as_usize().ok_or_else(bad)?,
+            "batch" => self.batch = val.as_usize().ok_or_else(bad)?,
+            "q" => {
+                let q = val.as_usize().ok_or_else(bad)?;
+                if !(1..=16).contains(&q) {
+                    return Err(Error::config(format!("q={q} outside [1,16]")));
+                }
+                self.q = q as u8;
+            }
+            "lanes" => self.lanes = val.as_usize().ok_or_else(bad)?,
+            "parallel" => self.parallel = val.as_bool().ok_or_else(bad)?,
+            "addr" => self.addr = val.as_str().ok_or_else(bad)?.into(),
+            "buckets" => {
+                let arr = val.as_arr().ok_or_else(bad)?;
+                self.buckets = arr
+                    .iter()
+                    .map(|x| x.as_usize().ok_or_else(bad))
+                    .collect::<Result<_>>()?;
+            }
+            "batch_wait_us" => self.batch_wait_us = val.as_usize().ok_or_else(bad)? as u64,
+            "channel" => {
+                let obj = val.as_obj().ok_or_else(bad)?;
+                for (ck, cv) in obj {
+                    self.apply_value(&format!("channel.{ck}"), cv)?;
+                }
+            }
+            "channel.epsilon" => self.channel.epsilon = val.as_f64().ok_or_else(bad)?,
+            "channel.bandwidth_hz" => self.channel.bandwidth_hz = val.as_f64().ok_or_else(bad)?,
+            "channel.gamma_db" => self.channel.gamma_db = val.as_f64().ok_or_else(bad)?,
+            "channel.sigma_h2" => self.channel.sigma_h2 = val.as_f64().ok_or_else(bad)?,
+            other => return Err(Error::config(format!("unknown config key '{other}'"))),
+        }
+        Ok(())
+    }
+
+    /// Apply a `key=value` override (dotted paths for nesting).
+    pub fn apply_override(&mut self, spec: &str) -> Result<()> {
+        let (key, raw) = spec
+            .split_once('=')
+            .ok_or_else(|| Error::config(format!("override '{spec}' is not key=value")))?;
+        // Interpret the raw value as JSON if possible, else as a string.
+        let val = json::parse(raw).unwrap_or_else(|_| Value::Str(raw.to_string()));
+        self.apply_value(key, &val)
+    }
+
+    /// Serialize the effective config (for experiment records).
+    pub fn to_json(&self) -> Value {
+        ObjBuilder::new()
+            .field("artifacts_dir", self.artifacts_dir.as_str())
+            .field("model", self.model.as_str())
+            .field("sl", self.sl)
+            .field("batch", self.batch)
+            .field("q", self.q as usize)
+            .field("lanes", self.lanes)
+            .field("parallel", self.parallel)
+            .field("addr", self.addr.as_str())
+            .field("buckets", self.buckets.clone())
+            .field("batch_wait_us", self.batch_wait_us as usize)
+            .field(
+                "channel",
+                ObjBuilder::new()
+                    .field("epsilon", self.channel.epsilon)
+                    .field("bandwidth_hz", self.channel.bandwidth_hz)
+                    .field("gamma_db", self.channel.gamma_db)
+                    .field("sigma_h2", self.channel.sigma_h2)
+                    .build(),
+            )
+            .build()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = AppConfig::default();
+        assert_eq!(c.q, 4);
+        assert_eq!(c.channel.epsilon, 0.001);
+        assert_eq!(c.channel.bandwidth_hz, 10e6);
+        assert_eq!(c.channel.gamma_db, 10.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = AppConfig::default();
+        let text = c.to_json().to_string_pretty();
+        let mut c2 = AppConfig::default();
+        c2.apply_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(c2.q, c.q);
+        assert_eq!(c2.buckets, c.buckets);
+        assert_eq!(c2.channel, c.channel);
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = AppConfig::default();
+        c.apply_override("q=6").unwrap();
+        c.apply_override("channel.gamma_db=20").unwrap();
+        c.apply_override("model=llama_mini_s").unwrap();
+        c.apply_override("parallel=false").unwrap();
+        c.apply_override("buckets=[1,4,16]").unwrap();
+        assert_eq!(c.q, 6);
+        assert_eq!(c.channel.gamma_db, 20.0);
+        assert_eq!(c.model, "llama_mini_s");
+        assert!(!c.parallel);
+        assert_eq!(c.buckets, vec![1, 4, 16]);
+    }
+
+    #[test]
+    fn bad_overrides_rejected() {
+        let mut c = AppConfig::default();
+        assert!(c.apply_override("nonsense").is_err());
+        assert!(c.apply_override("q=99").is_err());
+        assert!(c.apply_override("unknown_key=1").is_err());
+        assert!(c.apply_override("sl=x").is_err());
+    }
+}

@@ -1,0 +1,234 @@
+//! Cloud node: decompress → tail compute → reply.
+
+use std::collections::HashMap;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::pipeline;
+use crate::runtime::{Engine, ExecPool, LmSplitExec, Manifest, VisionSplitExec};
+use crate::telemetry::Registry;
+use crate::util::timer::Stopwatch;
+
+use super::protocol::{Frame, FrameKind};
+use super::transport::{TcpTransport, Transport};
+
+/// The cloud-side serving node.
+///
+/// Owns the PJRT engine, the artifact pool, and per-route executable
+/// caches; `handle` is a pure request→reply function so the same node
+/// serves TCP connections, in-proc transports, and direct calls from
+/// benches.
+pub struct CloudNode {
+    manifest: Manifest,
+    pool: ExecPool,
+    metrics: Arc<Registry>,
+    vision_cache: Mutex<HashMap<(String, usize, usize), Arc<VisionSplitExec>>>,
+    lm_cache: Mutex<HashMap<String, Arc<LmSplitExec>>>,
+    /// Decode rANS lanes in parallel.
+    pub parallel_decode: bool,
+}
+
+impl CloudNode {
+    /// Load the manifest and initialize the PJRT engine.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let engine = Arc::new(Engine::cpu()?);
+        let pool = ExecPool::new(engine, artifacts_dir.as_ref());
+        Ok(CloudNode {
+            manifest,
+            pool,
+            metrics: Arc::new(Registry::new()),
+            vision_cache: Mutex::new(HashMap::new()),
+            lm_cache: Mutex::new(HashMap::new()),
+            parallel_decode: crate::pipeline::codec::default_parallelism(),
+        })
+    }
+
+    /// The node's metrics registry.
+    pub fn metrics(&self) -> &Arc<Registry> {
+        &self.metrics
+    }
+
+    /// The loaded manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Fetch (compiling on first use) the vision executables for a route.
+    pub fn vision_exec(&self, model: &str, sl: usize, batch: usize) -> Result<Arc<VisionSplitExec>> {
+        let key = (model.to_string(), sl, batch);
+        if let Some(e) = self.vision_cache.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(e));
+        }
+        let exec = Arc::new(VisionSplitExec::load(&self.pool, &self.manifest, model, sl, batch)?);
+        let mut cache = self.vision_cache.lock().unwrap();
+        let entry = cache.entry(key).or_insert_with(|| Arc::clone(&exec));
+        Ok(Arc::clone(entry))
+    }
+
+    /// Fetch (compiling on first use) the LM executables for a model.
+    pub fn lm_exec(&self, model: &str) -> Result<Arc<LmSplitExec>> {
+        if let Some(e) = self.lm_cache.lock().unwrap().get(model) {
+            return Ok(Arc::clone(e));
+        }
+        let exec = Arc::new(LmSplitExec::load(&self.pool, &self.manifest, model)?);
+        let mut cache = self.lm_cache.lock().unwrap();
+        let entry = cache.entry(model.to_string()).or_insert_with(|| Arc::clone(&exec));
+        Ok(Arc::clone(entry))
+    }
+
+    fn bytes_to_f32s(payload: &[u8]) -> Result<Vec<f32>> {
+        if payload.len() % 4 != 0 {
+            return Err(Error::protocol("raw payload not f32-aligned"));
+        }
+        Ok(payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn infer_vision(&self, model: &str, sl: usize, batch: usize, payload: &[u8]) -> Result<FrameKind> {
+        let exec = self.vision_exec(model, sl, batch)?;
+        let sw = Stopwatch::new();
+        let (symbols, params) = pipeline::decompress_to_symbols(payload, self.parallel_decode)?;
+        let decode_ms = sw.elapsed_ms();
+        let sw = Stopwatch::new();
+        let logits = exec.run_tail(&symbols, &params)?;
+        let compute_ms = sw.elapsed_ms();
+        self.metrics.incr("cloud.vision_requests", 1);
+        self.metrics.histogram("cloud.decode_ms").record_ms(decode_ms);
+        self.metrics.histogram("cloud.compute_ms").record_ms(compute_ms);
+        Ok(FrameKind::Logits { data: logits, decode_ms: decode_ms as f32, compute_ms: compute_ms as f32 })
+    }
+
+    fn infer_vision_raw(&self, model: &str, sl: usize, batch: usize, payload: &[u8]) -> Result<FrameKind> {
+        let exec = self.vision_exec(model, sl, batch)?;
+        let sw = Stopwatch::new();
+        let feat = Self::bytes_to_f32s(payload)?;
+        let decode_ms = sw.elapsed_ms();
+        let sw = Stopwatch::new();
+        let logits = exec.run_tail_raw(&feat)?;
+        let compute_ms = sw.elapsed_ms();
+        self.metrics.incr("cloud.vision_raw_requests", 1);
+        Ok(FrameKind::Logits { data: logits, decode_ms: decode_ms as f32, compute_ms: compute_ms as f32 })
+    }
+
+    fn infer_lm(&self, model: &str, payload: &[u8]) -> Result<FrameKind> {
+        let exec = self.lm_exec(model)?;
+        let sw = Stopwatch::new();
+        let (symbols, params) = pipeline::decompress_to_symbols(payload, self.parallel_decode)?;
+        let decode_ms = sw.elapsed_ms();
+        let sw = Stopwatch::new();
+        let logits = exec.run_tail(&symbols, &params)?;
+        let compute_ms = sw.elapsed_ms();
+        self.metrics.incr("cloud.lm_requests", 1);
+        self.metrics.histogram("cloud.decode_ms").record_ms(decode_ms);
+        self.metrics.histogram("cloud.compute_ms").record_ms(compute_ms);
+        Ok(FrameKind::Logits { data: logits, decode_ms: decode_ms as f32, compute_ms: compute_ms as f32 })
+    }
+
+    fn infer_lm_raw(&self, model: &str, payload: &[u8]) -> Result<FrameKind> {
+        let exec = self.lm_exec(model)?;
+        let hidden = Self::bytes_to_f32s(payload)?;
+        let sw = Stopwatch::new();
+        let logits = exec.run_tail_raw(&hidden)?;
+        let compute_ms = sw.elapsed_ms();
+        self.metrics.incr("cloud.lm_raw_requests", 1);
+        Ok(FrameKind::Logits { data: logits, decode_ms: 0.0, compute_ms: compute_ms as f32 })
+    }
+
+    /// Handle one frame, producing the reply. Errors become
+    /// `ServerError` replies rather than tearing the connection down.
+    pub fn handle(&self, frame: &Frame) -> Frame {
+        let reply = match &frame.kind {
+            FrameKind::Ping => Ok(FrameKind::Pong),
+            FrameKind::InferVision { model, sl, batch, payload } => {
+                self.infer_vision(model, *sl, *batch, payload)
+            }
+            FrameKind::InferVisionRaw { model, sl, batch, payload } => {
+                self.infer_vision_raw(model, *sl, *batch, payload)
+            }
+            FrameKind::InferLm { model, payload } => self.infer_lm(model, payload),
+            FrameKind::InferLmRaw { model, payload } => self.infer_lm_raw(model, payload),
+            FrameKind::Stats => Ok(FrameKind::StatsReply {
+                json: self.metrics.snapshot().to_string_compact(),
+            }),
+            FrameKind::Shutdown => Ok(FrameKind::Pong),
+            other => Err(Error::protocol(format!("unexpected frame {other:?}"))),
+        };
+        let kind = match reply {
+            Ok(k) => k,
+            Err(e) => {
+                self.metrics.incr("cloud.errors", 1);
+                FrameKind::ServerError { message: e.to_string() }
+            }
+        };
+        Frame { request_id: frame.request_id, kind }
+    }
+
+    /// Serve a single transport until the peer shuts down or errors.
+    pub fn serve_transport(&self, t: &mut dyn Transport) -> Result<()> {
+        loop {
+            let frame = match t.recv() {
+                Ok(f) => f,
+                Err(_) => return Ok(()), // peer closed
+            };
+            let shutdown = matches!(frame.kind, FrameKind::Shutdown);
+            let reply = self.handle(&frame);
+            t.send(&reply)?;
+            if shutdown {
+                return Ok(());
+            }
+        }
+    }
+
+    /// Accept loop over TCP; one thread per connection. Returns when
+    /// `stop` becomes true (checked between accepts) or after a client
+    /// sends `Shutdown` (which also raises `stop`).
+    pub fn serve_tcp(self: &Arc<Self>, listener: TcpListener, stop: Arc<AtomicBool>) -> Result<()> {
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::transport(format!("nonblocking: {e}")))?;
+        let mut workers = Vec::new();
+        while !stop.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream
+                        .set_nonblocking(false)
+                        .map_err(|e| Error::transport(format!("blocking: {e}")))?;
+                    let node = Arc::clone(self);
+                    let stop = Arc::clone(&stop);
+                    workers.push(std::thread::spawn(move || {
+                        let mut t = match TcpTransport::new(stream) {
+                            Ok(t) => t,
+                            Err(_) => return,
+                        };
+                        loop {
+                            let frame = match t.recv() {
+                                Ok(f) => f,
+                                Err(_) => return,
+                            };
+                            let is_shutdown = matches!(frame.kind, FrameKind::Shutdown);
+                            let reply = node.handle(&frame);
+                            let _ = t.send(&reply);
+                            if is_shutdown {
+                                stop.store(true, Ordering::SeqCst);
+                                return;
+                            }
+                        }
+                    }));
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => return Err(Error::transport(format!("accept: {e}"))),
+            }
+        }
+        for w in workers {
+            let _ = w.join();
+        }
+        Ok(())
+    }
+}

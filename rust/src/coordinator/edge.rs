@@ -1,0 +1,346 @@
+//! Edge node: head compute → pipeline compression → transmit.
+//!
+//! The edge owns a *reshape-plan cache*: Algorithm 1 runs once per
+//! (tensor length, Q) pair and subsequent requests reuse the chosen `Ñ`
+//! via `ReshapeStrategy::Fixed`, keeping the optimizer entirely off the
+//! steady-state hot path (the paper's GPU pipeline assumes the same).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::channel::OutageChannel;
+use crate::error::{Error, Result};
+use crate::pipeline::{self, CompressStats, PipelineConfig, ReshapeStrategy};
+use crate::quant::QuantParams;
+use crate::runtime::{LmSplitExec, VisionSplitExec};
+use crate::telemetry::{LatencyBreakdown, Registry};
+use crate::util::timer::Stopwatch;
+
+use super::protocol::{Frame, FrameKind};
+use super::transport::Transport;
+
+/// Edge pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct EdgeConfig {
+    /// Manifest model name.
+    pub model: String,
+    /// Split layer (vision; ignored for LM).
+    pub sl: usize,
+    /// Artifact batch size.
+    pub batch: usize,
+    /// AIQ bit-width.
+    pub q: u8,
+    /// rANS lanes.
+    pub lanes: usize,
+    /// Thread the rANS lanes.
+    pub parallel: bool,
+}
+
+impl EdgeConfig {
+    /// Paper-default edge config for a model route.
+    pub fn paper(model: &str, sl: usize, batch: usize, q: u8) -> Self {
+        EdgeConfig {
+            model: model.into(),
+            sl,
+            batch,
+            q,
+            lanes: 8,
+            parallel: crate::pipeline::codec::default_parallelism(),
+        }
+    }
+}
+
+/// Result of one edge-driven inference.
+#[derive(Debug, Clone)]
+pub struct InferOutcome {
+    /// Tail logits (batch × classes, or choices × seq × vocab for LM).
+    pub logits: Vec<f32>,
+    /// The four-factor latency breakdown (+ queue time when batched).
+    pub breakdown: LatencyBreakdown,
+    /// Compression statistics.
+    pub stats: Option<CompressStats>,
+    /// Bytes that crossed the (simulated) wireless link.
+    pub payload_bytes: usize,
+}
+
+/// Reshape-plan cache: (T, Q) → chosen N.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    plans: Mutex<HashMap<(usize, u8), usize>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    /// Resolve the reshape strategy for a tensor, running Algorithm 1 on
+    /// the first sighting of a (T, Q) pair.
+    pub fn strategy(&self, symbols: &[u16], params: &QuantParams) -> Result<ReshapeStrategy> {
+        let key = (symbols.len(), params.q);
+        if let Some(&n) = self.plans.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(ReshapeStrategy::Fixed(n));
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let cfg = crate::reshape::optimizer::OptimizerConfig::paper(params.q);
+        let out = crate::reshape::optimize(symbols, params.zero_symbol(), &cfg)?;
+        self.plans.lock().unwrap().insert(key, out.best.n);
+        Ok(ReshapeStrategy::Fixed(out.best.n))
+    }
+
+    /// (hits, misses) counters.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+}
+
+fn expect_logits(frame: Frame) -> Result<(Vec<f32>, f32, f32)> {
+    match frame.kind {
+        FrameKind::Logits { data, decode_ms, compute_ms } => Ok((data, decode_ms, compute_ms)),
+        FrameKind::ServerError { message } => Err(Error::protocol(format!("server: {message}"))),
+        other => Err(Error::protocol(format!("unexpected reply {other:?}"))),
+    }
+}
+
+/// Vision edge node bound to one transport.
+pub struct EdgeNode<T: Transport> {
+    /// Configuration.
+    pub cfg: EdgeConfig,
+    exec: Arc<VisionSplitExec>,
+    transport: Mutex<T>,
+    plan_cache: PlanCache,
+    channel: OutageChannel,
+    metrics: Arc<Registry>,
+    next_id: AtomicU64,
+}
+
+impl<T: Transport> EdgeNode<T> {
+    /// Build an edge node over an established transport.
+    pub fn new(exec: Arc<VisionSplitExec>, transport: T, cfg: EdgeConfig) -> Self {
+        EdgeNode {
+            cfg,
+            exec,
+            transport: Mutex::new(transport),
+            plan_cache: PlanCache::default(),
+            channel: OutageChannel::paper_default(),
+            metrics: Arc::new(Registry::new()),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Override the channel model.
+    pub fn with_channel(mut self, channel: OutageChannel) -> Self {
+        self.channel = channel;
+        self
+    }
+
+    /// Node metrics.
+    pub fn metrics(&self) -> &Arc<Registry> {
+        &self.metrics
+    }
+
+    /// Reshape-plan cache statistics.
+    pub fn plan_cache_stats(&self) -> (u64, u64) {
+        self.plan_cache.stats()
+    }
+
+    fn roundtrip(&self, kind: FrameKind) -> Result<Frame> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let mut t = self.transport.lock().unwrap();
+        t.send(&Frame { request_id: id, kind })?;
+        let reply = t.recv()?;
+        if reply.request_id != id {
+            return Err(Error::protocol(format!(
+                "reply id {} for request {id}",
+                reply.request_id
+            )));
+        }
+        Ok(reply)
+    }
+
+    /// Compressed inference: head → AIQ symbols → CSR+rANS → cloud.
+    pub fn infer(&self, images: &[f32]) -> Result<InferOutcome> {
+        let sw = Stopwatch::new();
+        let (symbols, params) = self.exec.run_head(images, self.cfg.q)?;
+        let reshape = self.plan_cache.strategy(&symbols, &params)?;
+        let pcfg = PipelineConfig {
+            q: self.cfg.q,
+            lanes: self.cfg.lanes,
+            parallel: self.cfg.parallel,
+            reshape,
+        };
+        let (container, stats) = pipeline::compress_quantized(&symbols, params, &pcfg)?;
+        let encode_ms = sw.elapsed_ms();
+        let payload_bytes = container.len();
+        let transfer_ms = self.channel.comm_latency_ms(payload_bytes);
+
+        let reply = self.roundtrip(FrameKind::InferVision {
+            model: self.cfg.model.clone(),
+            sl: self.cfg.sl,
+            batch: self.cfg.batch,
+            payload: container,
+        })?;
+        let (logits, decode_ms, compute_ms) = expect_logits(reply)?;
+        let breakdown = LatencyBreakdown {
+            queue_ms: 0.0,
+            encode_ms,
+            transfer_ms,
+            decode_ms: decode_ms as f64,
+            compute_ms: compute_ms as f64,
+        };
+        self.metrics.record_breakdown("edge", &breakdown);
+        self.metrics.incr("edge.requests", 1);
+        self.metrics.incr("edge.bytes_sent", payload_bytes as u64);
+        Ok(InferOutcome { logits, breakdown, stats: Some(stats), payload_bytes })
+    }
+
+    /// Uncompressed baseline inference (E-1 shape): raw float IF over
+    /// the link.
+    pub fn infer_raw(&self, images: &[f32]) -> Result<InferOutcome> {
+        let sw = Stopwatch::new();
+        let feat = self.exec.run_head_raw(images)?;
+        let mut payload = Vec::with_capacity(feat.len() * 4);
+        for &x in &feat {
+            payload.extend_from_slice(&x.to_le_bytes());
+        }
+        let encode_ms = sw.elapsed_ms();
+        let payload_bytes = payload.len();
+        let transfer_ms = self.channel.comm_latency_ms(payload_bytes);
+        let reply = self.roundtrip(FrameKind::InferVisionRaw {
+            model: self.cfg.model.clone(),
+            sl: self.cfg.sl,
+            batch: self.cfg.batch,
+            payload,
+        })?;
+        let (logits, decode_ms, compute_ms) = expect_logits(reply)?;
+        let breakdown = LatencyBreakdown {
+            queue_ms: 0.0,
+            encode_ms,
+            transfer_ms,
+            decode_ms: decode_ms as f64,
+            compute_ms: compute_ms as f64,
+        };
+        self.metrics.record_breakdown("edge_raw", &breakdown);
+        Ok(InferOutcome { logits, breakdown, stats: None, payload_bytes })
+    }
+
+    /// Liveness check.
+    pub fn ping(&self) -> Result<()> {
+        match self.roundtrip(FrameKind::Ping)?.kind {
+            FrameKind::Pong => Ok(()),
+            other => Err(Error::protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// Ask the cloud node to shut down its accept loop.
+    pub fn shutdown_server(&self) -> Result<()> {
+        let _ = self.roundtrip(FrameKind::Shutdown)?;
+        Ok(())
+    }
+}
+
+/// LM edge node bound to one transport.
+pub struct LmEdgeNode<T: Transport> {
+    /// Configuration (sl/batch come from the manifest entry).
+    pub cfg: EdgeConfig,
+    exec: Arc<LmSplitExec>,
+    transport: Mutex<T>,
+    plan_cache: PlanCache,
+    channel: OutageChannel,
+    next_id: AtomicU64,
+}
+
+impl<T: Transport> LmEdgeNode<T> {
+    /// Build an LM edge node.
+    pub fn new(exec: Arc<LmSplitExec>, transport: T, cfg: EdgeConfig) -> Self {
+        LmEdgeNode {
+            cfg,
+            exec,
+            transport: Mutex::new(transport),
+            plan_cache: PlanCache::default(),
+            channel: OutageChannel::paper_default(),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Override the channel model.
+    pub fn with_channel(mut self, channel: OutageChannel) -> Self {
+        self.channel = channel;
+        self
+    }
+
+    fn roundtrip(&self, kind: FrameKind) -> Result<Frame> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let mut t = self.transport.lock().unwrap();
+        t.send(&Frame { request_id: id, kind })?;
+        let reply = t.recv()?;
+        if reply.request_id != id {
+            return Err(Error::protocol("reply id mismatch"));
+        }
+        Ok(reply)
+    }
+
+    /// Compressed LM inference over one tokenized choice batch.
+    pub fn infer(&self, tokens: &[i32]) -> Result<InferOutcome> {
+        let sw = Stopwatch::new();
+        let (symbols, params) = self.exec.run_head(tokens, self.cfg.q)?;
+        let reshape = self.plan_cache.strategy(&symbols, &params)?;
+        let pcfg = PipelineConfig {
+            q: self.cfg.q,
+            lanes: self.cfg.lanes,
+            parallel: self.cfg.parallel,
+            reshape,
+        };
+        let (container, stats) = pipeline::compress_quantized(&symbols, params, &pcfg)?;
+        let encode_ms = sw.elapsed_ms();
+        let payload_bytes = container.len();
+        let transfer_ms = self.channel.comm_latency_ms(payload_bytes);
+        let reply = self.roundtrip(FrameKind::InferLm {
+            model: self.cfg.model.clone(),
+            payload: container,
+        })?;
+        let (logits, decode_ms, compute_ms) = expect_logits(reply)?;
+        Ok(InferOutcome {
+            logits,
+            breakdown: LatencyBreakdown {
+                queue_ms: 0.0,
+                encode_ms,
+                transfer_ms,
+                decode_ms: decode_ms as f64,
+                compute_ms: compute_ms as f64,
+            },
+            stats: Some(stats),
+            payload_bytes,
+        })
+    }
+
+    /// Uncompressed baseline LM inference.
+    pub fn infer_raw(&self, tokens: &[i32]) -> Result<InferOutcome> {
+        let sw = Stopwatch::new();
+        let hidden = self.exec.run_head_raw(tokens)?;
+        let mut payload = Vec::with_capacity(hidden.len() * 4);
+        for &x in &hidden {
+            payload.extend_from_slice(&x.to_le_bytes());
+        }
+        let encode_ms = sw.elapsed_ms();
+        let payload_bytes = payload.len();
+        let transfer_ms = self.channel.comm_latency_ms(payload_bytes);
+        let reply = self.roundtrip(FrameKind::InferLmRaw {
+            model: self.cfg.model.clone(),
+            payload,
+        })?;
+        let (logits, decode_ms, compute_ms) = expect_logits(reply)?;
+        Ok(InferOutcome {
+            logits,
+            breakdown: LatencyBreakdown {
+                queue_ms: 0.0,
+                encode_ms,
+                transfer_ms,
+                decode_ms: decode_ms as f64,
+                compute_ms: compute_ms as f64,
+            },
+            stats: None,
+            payload_bytes,
+        })
+    }
+}

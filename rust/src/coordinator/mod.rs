@@ -1,0 +1,29 @@
+//! The split-computing serving system (Layer 3).
+//!
+//! Topology (Fig. 1a of the paper): an **edge node** runs the head
+//! artifact, compresses the intermediate feature through the rANS
+//! pipeline, and ships it over a **transport** (TCP, in-process, or the
+//! ε-outage simulated link) to a **cloud node**, which decompresses and
+//! runs the tail artifact, returning logits. A **batcher** groups
+//! concurrent edge requests into the bucket sizes the artifacts were
+//! compiled for.
+//!
+//! * [`protocol`] — length-prefixed, CRC-checked wire frames.
+//! * [`transport`] — TCP / in-proc duplex links + the simulated channel.
+//! * [`cloud`] — the cloud server loop.
+//! * [`edge`] — the edge client pipeline with its reshape-plan cache.
+//! * [`batcher`] — bucketed dynamic batching.
+
+pub mod batcher;
+pub mod cloud;
+pub mod edge;
+pub mod protocol;
+pub mod router;
+pub mod transport;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use cloud::CloudNode;
+pub use edge::{EdgeConfig, EdgeNode, InferOutcome, LmEdgeNode};
+pub use protocol::{Frame, FrameKind};
+pub use router::{RouteInput, Router};
+pub use transport::{connect_tcp, InProcTransport, SimulatedLink, TcpTransport, Transport};

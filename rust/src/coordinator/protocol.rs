@@ -1,0 +1,371 @@
+//! Wire protocol between edge and cloud nodes.
+//!
+//! Frames are length-prefixed (u32 LE) and CRC-checked:
+//!
+//! ```text
+//! [u32 body_len] [body] [u32 crc32(body)]
+//! body = [u64 request_id] [u8 kind] [kind-specific fields]
+//! ```
+//!
+//! Strings are varint-length-prefixed UTF-8; byte blobs are
+//! varint-length-prefixed. The compressed IF payload is the
+//! self-describing pipeline container, so the cloud side needs no
+//! per-request metadata beyond the model route.
+
+use crate::error::{Error, Result};
+use crate::util::varint;
+
+/// Maximum accepted frame body (64 MiB) — guards the allocator against
+/// corrupt length prefixes.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Frame payload kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FrameKind {
+    /// Liveness probe.
+    Ping,
+    /// Probe reply.
+    Pong,
+    /// Vision inference: compressed IF container for `(model, sl, batch)`.
+    InferVision {
+        /// Manifest model name.
+        model: String,
+        /// Split layer.
+        sl: usize,
+        /// Batch the artifact was compiled for.
+        batch: usize,
+        /// Pipeline container bytes.
+        payload: Vec<u8>,
+    },
+    /// Vision inference, uncompressed baseline: raw f32 feature bytes.
+    InferVisionRaw {
+        /// Manifest model name.
+        model: String,
+        /// Split layer.
+        sl: usize,
+        /// Batch.
+        batch: usize,
+        /// Little-endian f32 feature tensor.
+        payload: Vec<u8>,
+    },
+    /// LM inference: compressed hidden-state container.
+    InferLm {
+        /// Manifest model name.
+        model: String,
+        /// Pipeline container bytes.
+        payload: Vec<u8>,
+    },
+    /// LM inference, uncompressed baseline.
+    InferLmRaw {
+        /// Manifest model name.
+        model: String,
+        /// Little-endian f32 hidden states.
+        payload: Vec<u8>,
+    },
+    /// Successful inference reply: logits plus the cloud-side latency
+    /// factors (iii) decode and (iv) tail compute, so the edge can
+    /// assemble the paper's full four-factor breakdown.
+    Logits {
+        /// Row-major logits.
+        data: Vec<f32>,
+        /// Cloud decode time, ms.
+        decode_ms: f32,
+        /// Device transfer + tail compute time, ms.
+        compute_ms: f32,
+    },
+    /// Request the cloud node's metrics snapshot.
+    Stats,
+    /// Metrics snapshot reply (JSON).
+    StatsReply {
+        /// JSON text.
+        json: String,
+    },
+    /// Orderly shutdown of the serving loop.
+    Shutdown,
+    /// Error reply.
+    ServerError {
+        /// Human-readable message.
+        message: String,
+    },
+}
+
+/// One framed message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    /// Correlates replies with requests.
+    pub request_id: u64,
+    /// Payload.
+    pub kind: FrameKind,
+}
+
+fn write_str(buf: &mut Vec<u8>, s: &str) {
+    varint::write_usize(buf, s.len());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn read_str(buf: &[u8], pos: &mut usize) -> Result<String> {
+    let len = varint::read_usize(buf, pos)?;
+    let end = pos.checked_add(len).filter(|&e| e <= buf.len())
+        .ok_or_else(|| Error::protocol("string truncated"))?;
+    let s = std::str::from_utf8(&buf[*pos..end])
+        .map_err(|_| Error::protocol("invalid utf-8"))?
+        .to_string();
+    *pos = end;
+    Ok(s)
+}
+
+fn write_bytes(buf: &mut Vec<u8>, b: &[u8]) {
+    varint::write_usize(buf, b.len());
+    buf.extend_from_slice(b);
+}
+
+fn read_bytes(buf: &[u8], pos: &mut usize) -> Result<Vec<u8>> {
+    let len = varint::read_usize(buf, pos)?;
+    let end = pos.checked_add(len).filter(|&e| e <= buf.len())
+        .ok_or_else(|| Error::protocol("bytes truncated"))?;
+    let out = buf[*pos..end].to_vec();
+    *pos = end;
+    Ok(out)
+}
+
+impl Frame {
+    /// Serialize to the on-wire representation (length prefix + crc).
+    pub fn to_wire(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        body.extend_from_slice(&self.request_id.to_le_bytes());
+        match &self.kind {
+            FrameKind::Ping => body.push(0),
+            FrameKind::Pong => body.push(1),
+            FrameKind::InferVision { model, sl, batch, payload } => {
+                body.push(2);
+                write_str(&mut body, model);
+                varint::write_usize(&mut body, *sl);
+                varint::write_usize(&mut body, *batch);
+                write_bytes(&mut body, payload);
+            }
+            FrameKind::InferVisionRaw { model, sl, batch, payload } => {
+                body.push(3);
+                write_str(&mut body, model);
+                varint::write_usize(&mut body, *sl);
+                varint::write_usize(&mut body, *batch);
+                write_bytes(&mut body, payload);
+            }
+            FrameKind::InferLm { model, payload } => {
+                body.push(4);
+                write_str(&mut body, model);
+                write_bytes(&mut body, payload);
+            }
+            FrameKind::InferLmRaw { model, payload } => {
+                body.push(5);
+                write_str(&mut body, model);
+                write_bytes(&mut body, payload);
+            }
+            FrameKind::Logits { data, decode_ms, compute_ms } => {
+                body.push(6);
+                body.extend_from_slice(&decode_ms.to_le_bytes());
+                body.extend_from_slice(&compute_ms.to_le_bytes());
+                varint::write_usize(&mut body, data.len());
+                for &x in data {
+                    body.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            FrameKind::Stats => body.push(7),
+            FrameKind::StatsReply { json } => {
+                body.push(8);
+                write_str(&mut body, json);
+            }
+            FrameKind::Shutdown => body.push(9),
+            FrameKind::ServerError { message } => {
+                body.push(10);
+                write_str(&mut body, message);
+            }
+        }
+        let crc = crc32fast::hash(&body);
+        let mut out = Vec::with_capacity(body.len() + 8);
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&body);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Parse a frame body (after length prefix and CRC have been
+    /// stripped/validated by the transport).
+    pub fn from_body(body: &[u8]) -> Result<Self> {
+        if body.len() < 9 {
+            return Err(Error::protocol("frame body too short"));
+        }
+        let request_id = u64::from_le_bytes(body[0..8].try_into().unwrap());
+        let tag = body[8];
+        let mut pos = 9usize;
+        let kind = match tag {
+            0 => FrameKind::Ping,
+            1 => FrameKind::Pong,
+            2 | 3 => {
+                let model = read_str(body, &mut pos)?;
+                let sl = varint::read_usize(body, &mut pos)?;
+                let batch = varint::read_usize(body, &mut pos)?;
+                let payload = read_bytes(body, &mut pos)?;
+                if tag == 2 {
+                    FrameKind::InferVision { model, sl, batch, payload }
+                } else {
+                    FrameKind::InferVisionRaw { model, sl, batch, payload }
+                }
+            }
+            4 | 5 => {
+                let model = read_str(body, &mut pos)?;
+                let payload = read_bytes(body, &mut pos)?;
+                if tag == 4 {
+                    FrameKind::InferLm { model, payload }
+                } else {
+                    FrameKind::InferLmRaw { model, payload }
+                }
+            }
+            6 => {
+                if pos + 8 > body.len() {
+                    return Err(Error::protocol("logits header truncated"));
+                }
+                let decode_ms = f32::from_le_bytes(body[pos..pos + 4].try_into().unwrap());
+                let compute_ms = f32::from_le_bytes(body[pos + 4..pos + 8].try_into().unwrap());
+                pos += 8;
+                let n = varint::read_usize(body, &mut pos)?;
+                let need = pos + n * 4;
+                if need > body.len() {
+                    return Err(Error::protocol("logits truncated"));
+                }
+                let mut data = Vec::with_capacity(n);
+                for chunk in body[pos..need].chunks_exact(4) {
+                    data.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+                }
+                pos = need;
+                FrameKind::Logits { data, decode_ms, compute_ms }
+            }
+            7 => FrameKind::Stats,
+            8 => FrameKind::StatsReply { json: read_str(body, &mut pos)? },
+            9 => FrameKind::Shutdown,
+            10 => FrameKind::ServerError { message: read_str(body, &mut pos)? },
+            t => return Err(Error::protocol(format!("unknown frame tag {t}"))),
+        };
+        if pos != body.len() {
+            return Err(Error::protocol("trailing bytes in frame"));
+        }
+        Ok(Frame { request_id, kind })
+    }
+
+    /// Parse a full wire message (length prefix + body + crc). Returns
+    /// the frame and the total bytes consumed.
+    pub fn from_wire(buf: &[u8]) -> Result<(Self, usize)> {
+        if buf.len() < 8 {
+            return Err(Error::protocol("wire message too short"));
+        }
+        let body_len = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+        if body_len > MAX_FRAME {
+            return Err(Error::protocol(format!("frame of {body_len} bytes exceeds cap")));
+        }
+        let total = 4 + body_len + 4;
+        if buf.len() < total {
+            return Err(Error::protocol("wire message truncated"));
+        }
+        let body = &buf[4..4 + body_len];
+        let crc = u32::from_le_bytes(buf[4 + body_len..total].try_into().unwrap());
+        if crc32fast::hash(body) != crc {
+            return Err(Error::protocol("frame crc mismatch"));
+        }
+        Ok((Self::from_body(body)?, total))
+    }
+
+    /// The payload size relevant for channel simulation (bytes that
+    /// would cross the wireless link).
+    pub fn payload_len(&self) -> usize {
+        match &self.kind {
+            FrameKind::InferVision { payload, .. }
+            | FrameKind::InferVisionRaw { payload, .. }
+            | FrameKind::InferLm { payload, .. }
+            | FrameKind::InferLmRaw { payload, .. } => payload.len(),
+            FrameKind::Logits { data, .. } => data.len() * 4,
+            FrameKind::StatsReply { json } => json.len(),
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(kind: FrameKind) {
+        let f = Frame { request_id: 77, kind };
+        let wire = f.to_wire();
+        let (back, used) = Frame::from_wire(&wire).unwrap();
+        assert_eq!(used, wire.len());
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn roundtrip_all_kinds() {
+        roundtrip(FrameKind::Ping);
+        roundtrip(FrameKind::Pong);
+        roundtrip(FrameKind::InferVision {
+            model: "resnet_mini_synth_a".into(),
+            sl: 2,
+            batch: 1,
+            payload: vec![1, 2, 3, 255],
+        });
+        roundtrip(FrameKind::InferVisionRaw {
+            model: "m".into(),
+            sl: 4,
+            batch: 8,
+            payload: vec![],
+        });
+        roundtrip(FrameKind::InferLm { model: "llama_mini_s".into(), payload: vec![9; 100] });
+        roundtrip(FrameKind::InferLmRaw { model: "llama_mini_m".into(), payload: vec![0] });
+        roundtrip(FrameKind::Logits {
+            data: vec![1.5, -2.5, f32::MIN, f32::MAX],
+            decode_ms: 0.25,
+            compute_ms: 1.5,
+        });
+        roundtrip(FrameKind::Stats);
+        roundtrip(FrameKind::StatsReply { json: "{\"a\":1}".into() });
+        roundtrip(FrameKind::Shutdown);
+        roundtrip(FrameKind::ServerError { message: "boom".into() });
+    }
+
+    #[test]
+    fn crc_detects_flips() {
+        let f = Frame {
+            request_id: 1,
+            kind: FrameKind::InferVision {
+                model: "m".into(),
+                sl: 1,
+                batch: 1,
+                payload: vec![7; 64],
+            },
+        };
+        let wire = f.to_wire();
+        for i in 4..wire.len() {
+            let mut bad = wire.clone();
+            bad[i] ^= 0x01;
+            assert!(Frame::from_wire(&bad).is_err(), "flip at {i}");
+        }
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut wire = vec![0u8; 12];
+        wire[0..4].copy_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        assert!(Frame::from_wire(&wire).is_err());
+    }
+
+    #[test]
+    fn payload_len_accounts_transfer_bytes() {
+        let f = Frame {
+            request_id: 0,
+            kind: FrameKind::InferVision { model: "m".into(), sl: 1, batch: 1, payload: vec![0; 123] },
+        };
+        assert_eq!(f.payload_len(), 123);
+        let f = Frame {
+            request_id: 0,
+            kind: FrameKind::Logits { data: vec![0.0; 10], decode_ms: 0.0, compute_ms: 0.0 },
+        };
+        assert_eq!(f.payload_len(), 40);
+    }
+}

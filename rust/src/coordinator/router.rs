@@ -1,0 +1,181 @@
+//! Multi-model request router.
+//!
+//! Production SC deployments serve several architectures from one
+//! gateway (Table 5's motivation: "multiple model architectures might
+//! share the same system"). The router owns a route table mapping model
+//! names to replica sets of inference handlers (edge pipelines bound to
+//! transports), dispatches by name with round-robin replica selection,
+//! and keeps per-route metrics.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::telemetry::Registry;
+
+use super::edge::InferOutcome;
+
+/// A routed request payload.
+#[derive(Debug, Clone)]
+pub enum RouteInput {
+    /// Vision: flat image batch.
+    Vision(Vec<f32>),
+    /// LM: flat token batch.
+    Lm(Vec<i32>),
+}
+
+/// One inference backend (an edge pipeline bound to a transport).
+pub type RouteHandler = Box<dyn Fn(&RouteInput) -> Result<InferOutcome> + Send + Sync>;
+
+struct Route {
+    replicas: Vec<RouteHandler>,
+    next: AtomicUsize,
+}
+
+/// Name-based request router with round-robin replicas.
+#[derive(Default)]
+pub struct Router {
+    routes: HashMap<String, Route>,
+    default_route: Option<String>,
+    metrics: Arc<Registry>,
+}
+
+impl Router {
+    /// Empty router.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Router metrics (per-route counters + latency histograms).
+    pub fn metrics(&self) -> &Arc<Registry> {
+        &self.metrics
+    }
+
+    /// Register a replica handler for `model`. The first registered
+    /// model becomes the default route.
+    pub fn register(&mut self, model: &str, handler: RouteHandler) {
+        if self.default_route.is_none() {
+            self.default_route = Some(model.to_string());
+        }
+        self.routes
+            .entry(model.to_string())
+            .or_insert_with(|| Route { replicas: Vec::new(), next: AtomicUsize::new(0) })
+            .replicas
+            .push(handler);
+    }
+
+    /// Override the default route.
+    pub fn set_default(&mut self, model: &str) -> Result<()> {
+        if !self.routes.contains_key(model) {
+            return Err(Error::invalid(format!("no route '{model}'")));
+        }
+        self.default_route = Some(model.to_string());
+        Ok(())
+    }
+
+    /// Registered model names.
+    pub fn models(&self) -> Vec<&str> {
+        self.routes.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Replica count for a model.
+    pub fn replica_count(&self, model: &str) -> usize {
+        self.routes.get(model).map(|r| r.replicas.len()).unwrap_or(0)
+    }
+
+    /// Dispatch a request. `model = None` uses the default route.
+    pub fn dispatch(&self, model: Option<&str>, input: &RouteInput) -> Result<InferOutcome> {
+        let name = match model {
+            Some(m) => m,
+            None => self
+                .default_route
+                .as_deref()
+                .ok_or_else(|| Error::invalid("router has no routes"))?,
+        };
+        let route = self.routes.get(name).ok_or_else(|| {
+            self.metrics.incr("router.unknown_model", 1);
+            Error::invalid(format!("unknown model '{name}'"))
+        })?;
+        let idx = route.next.fetch_add(1, Ordering::Relaxed) % route.replicas.len();
+        let sw = crate::util::timer::Stopwatch::new();
+        let result = (route.replicas[idx])(input);
+        let ms = sw.elapsed_ms();
+        self.metrics.incr(&format!("router.{name}.requests"), 1);
+        self.metrics.histogram(&format!("router.{name}.latency_ms")).record_ms(ms);
+        if result.is_err() {
+            self.metrics.incr(&format!("router.{name}.errors"), 1);
+        }
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::LatencyBreakdown;
+
+    fn outcome(tag: f32) -> InferOutcome {
+        InferOutcome {
+            logits: vec![tag],
+            breakdown: LatencyBreakdown::default(),
+            stats: None,
+            payload_bytes: 1,
+        }
+    }
+
+    fn handler(tag: f32) -> RouteHandler {
+        Box::new(move |_input| Ok(outcome(tag)))
+    }
+
+    #[test]
+    fn dispatch_by_name_and_default() {
+        let mut r = Router::new();
+        r.register("a", handler(1.0));
+        r.register("b", handler(2.0));
+        let input = RouteInput::Vision(vec![0.0]);
+        assert_eq!(r.dispatch(Some("b"), &input).unwrap().logits, vec![2.0]);
+        // First-registered is default.
+        assert_eq!(r.dispatch(None, &input).unwrap().logits, vec![1.0]);
+        r.set_default("b").unwrap();
+        assert_eq!(r.dispatch(None, &input).unwrap().logits, vec![2.0]);
+        assert!(r.set_default("zzz").is_err());
+    }
+
+    #[test]
+    fn unknown_model_is_clean_error_and_counted() {
+        let mut r = Router::new();
+        r.register("a", handler(1.0));
+        let input = RouteInput::Vision(vec![]);
+        assert!(r.dispatch(Some("nope"), &input).is_err());
+        assert_eq!(r.metrics().get("router.unknown_model"), 1);
+    }
+
+    #[test]
+    fn round_robin_across_replicas() {
+        let mut r = Router::new();
+        r.register("a", handler(1.0));
+        r.register("a", handler(2.0));
+        r.register("a", handler(3.0));
+        assert_eq!(r.replica_count("a"), 3);
+        let input = RouteInput::Vision(vec![]);
+        let picks: Vec<f32> = (0..6).map(|_| r.dispatch(Some("a"), &input).unwrap().logits[0]).collect();
+        assert_eq!(picks, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn errors_are_counted_per_route() {
+        let mut r = Router::new();
+        r.register("a", Box::new(|_| Err(Error::runtime("down"))));
+        let input = RouteInput::Lm(vec![1, 2, 3]);
+        assert!(r.dispatch(Some("a"), &input).is_err());
+        assert_eq!(r.metrics().get("router.a.errors"), 1);
+        assert_eq!(r.metrics().get("router.a.requests"), 1);
+    }
+
+    #[test]
+    fn empty_router_rejects() {
+        let r = Router::new();
+        assert!(r.dispatch(None, &RouteInput::Vision(vec![])).is_err());
+    }
+}

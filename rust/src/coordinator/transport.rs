@@ -1,0 +1,278 @@
+//! Duplex frame transports.
+//!
+//! * [`TcpTransport`] — framed over `std::net::TcpStream` (the real
+//!   deployment shape; the E2E example runs edge and cloud over
+//!   loopback TCP).
+//! * [`InProcTransport`] — mpsc channel pair for single-process tests
+//!   and benches.
+//! * [`SimulatedLink`] — wraps any transport with the ε-outage channel
+//!   model: accounts (and optionally sleeps) the wireless latency for
+//!   each payload and can inject outage-driven retransmissions.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+
+use crate::channel::OutageChannel;
+use crate::error::{Error, Result};
+use crate::util::prng::Rng;
+
+use super::protocol::{Frame, MAX_FRAME};
+
+/// A reliable, ordered duplex frame link.
+pub trait Transport: Send {
+    /// Send one frame.
+    fn send(&mut self, frame: &Frame) -> Result<()>;
+    /// Block for the next frame.
+    fn recv(&mut self) -> Result<Frame>;
+}
+
+// ------------------------------------------------------------------ tcp
+
+/// Frame transport over a TCP stream.
+pub struct TcpTransport {
+    stream: TcpStream,
+}
+
+impl TcpTransport {
+    /// Wrap an accepted/connected stream (sets TCP_NODELAY).
+    pub fn new(stream: TcpStream) -> Result<Self> {
+        stream
+            .set_nodelay(true)
+            .map_err(|e| Error::transport(format!("set_nodelay: {e}")))?;
+        Ok(TcpTransport { stream })
+    }
+}
+
+/// Connect to a cloud node at `addr`.
+pub fn connect_tcp(addr: &str) -> Result<TcpTransport> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| Error::transport(format!("connect {addr}: {e}")))?;
+    TcpTransport::new(stream)
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        let wire = frame.to_wire();
+        self.stream
+            .write_all(&wire)
+            .map_err(|e| Error::transport(format!("send: {e}")))
+    }
+
+    fn recv(&mut self) -> Result<Frame> {
+        let mut len_buf = [0u8; 4];
+        self.stream
+            .read_exact(&mut len_buf)
+            .map_err(|e| Error::transport(format!("recv len: {e}")))?;
+        let body_len = u32::from_le_bytes(len_buf) as usize;
+        if body_len > MAX_FRAME {
+            return Err(Error::protocol(format!("frame of {body_len} bytes exceeds cap")));
+        }
+        let mut rest = vec![0u8; body_len + 4];
+        self.stream
+            .read_exact(&mut rest)
+            .map_err(|e| Error::transport(format!("recv body: {e}")))?;
+        let mut wire = Vec::with_capacity(body_len + 8);
+        wire.extend_from_slice(&len_buf);
+        wire.extend_from_slice(&rest);
+        let (frame, _) = Frame::from_wire(&wire)?;
+        Ok(frame)
+    }
+}
+
+// --------------------------------------------------------------- in-proc
+
+/// In-process duplex transport over mpsc channels.
+pub struct InProcTransport {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+}
+
+impl InProcTransport {
+    /// Create a connected pair (edge end, cloud end).
+    pub fn pair() -> (InProcTransport, InProcTransport) {
+        let (tx_a, rx_b) = channel();
+        let (tx_b, rx_a) = channel();
+        (InProcTransport { tx: tx_a, rx: rx_a }, InProcTransport { tx: tx_b, rx: rx_b })
+    }
+}
+
+impl Transport for InProcTransport {
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        self.tx
+            .send(frame.to_wire())
+            .map_err(|_| Error::transport("peer closed"))
+    }
+
+    fn recv(&mut self) -> Result<Frame> {
+        let wire = self
+            .rx
+            .recv()
+            .map_err(|_| Error::transport("peer closed"))?;
+        let (frame, _) = Frame::from_wire(&wire)?;
+        Ok(frame)
+    }
+}
+
+// --------------------------------------------------------------- simlink
+
+/// Wraps a transport with the ε-outage wireless model.
+///
+/// `send` accounts the simulated transmission latency of the payload
+/// (container bytes) and, when `stochastic` is set, samples per-attempt
+/// outages with retransmission. The accumulated simulated latency is
+/// retrievable via [`SimulatedLink::take_latency_ms`]; with `realtime`
+/// the thread additionally sleeps it (for end-to-end demos whose
+/// wall-clock should reflect the channel).
+pub struct SimulatedLink<T: Transport> {
+    inner: T,
+    channel: OutageChannel,
+    rng: Mutex<Rng>,
+    stochastic: bool,
+    realtime: bool,
+    max_retries: u32,
+    accum_ms: f64,
+}
+
+impl<T: Transport> SimulatedLink<T> {
+    /// Wrap `inner` with `channel`.
+    pub fn new(inner: T, channel: OutageChannel, seed: u64) -> Self {
+        SimulatedLink {
+            inner,
+            channel,
+            rng: Mutex::new(Rng::new(seed)),
+            stochastic: false,
+            realtime: false,
+            max_retries: 16,
+            accum_ms: 0.0,
+        }
+    }
+
+    /// Enable per-attempt outage sampling + ARQ retransmission.
+    pub fn stochastic(mut self, on: bool) -> Self {
+        self.stochastic = on;
+        self
+    }
+
+    /// Sleep the simulated latency for real.
+    pub fn realtime(mut self, on: bool) -> Self {
+        self.realtime = on;
+        self
+    }
+
+    /// Drain the simulated latency accumulated since the last call.
+    pub fn take_latency_ms(&mut self) -> f64 {
+        std::mem::replace(&mut self.accum_ms, 0.0)
+    }
+
+    /// The underlying channel model.
+    pub fn channel(&self) -> &OutageChannel {
+        &self.channel
+    }
+}
+
+impl<T: Transport> Transport for SimulatedLink<T> {
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        let bytes = frame.payload_len();
+        let ms = if self.stochastic {
+            let mut rng = self.rng.lock().unwrap();
+            self.channel.transmit(bytes, &mut rng, self.max_retries)?.latency_s * 1e3
+        } else {
+            self.channel.comm_latency_ms(bytes)
+        };
+        self.accum_ms += ms;
+        if self.realtime && ms > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(ms / 1e3));
+        }
+        self.inner.send(frame)
+    }
+
+    fn recv(&mut self) -> Result<Frame> {
+        self.inner.recv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::FrameKind;
+
+    fn ping(id: u64) -> Frame {
+        Frame { request_id: id, kind: FrameKind::Ping }
+    }
+
+    #[test]
+    fn inproc_roundtrip() {
+        let (mut a, mut b) = InProcTransport::pair();
+        a.send(&ping(1)).unwrap();
+        assert_eq!(b.recv().unwrap(), ping(1));
+        b.send(&ping(2)).unwrap();
+        assert_eq!(a.recv().unwrap(), ping(2));
+    }
+
+    #[test]
+    fn inproc_closed_peer_errors() {
+        let (mut a, b) = InProcTransport::pair();
+        drop(b);
+        assert!(a.send(&ping(1)).is_err());
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::new(stream).unwrap();
+            let f = t.recv().unwrap();
+            t.send(&f).unwrap(); // echo
+        });
+        let mut client = connect_tcp(&addr.to_string()).unwrap();
+        let f = Frame {
+            request_id: 9,
+            kind: FrameKind::InferVision {
+                model: "m".into(),
+                sl: 2,
+                batch: 1,
+                payload: vec![3; 1000],
+            },
+        };
+        client.send(&f).unwrap();
+        assert_eq!(client.recv().unwrap(), f);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn simulated_link_accounts_latency() {
+        let (a, mut b) = InProcTransport::pair();
+        let mut sim = SimulatedLink::new(a, OutageChannel::paper_default(), 1);
+        let f = Frame {
+            request_id: 1,
+            kind: FrameKind::InferLm { model: "m".into(), payload: vec![0; 10_000] },
+        };
+        sim.send(&f).unwrap();
+        let ms = sim.take_latency_ms();
+        let expect = OutageChannel::paper_default().comm_latency_ms(10_000);
+        assert!((ms - expect).abs() < 1e-9);
+        assert_eq!(sim.take_latency_ms(), 0.0);
+        assert_eq!(b.recv().unwrap(), f);
+    }
+
+    #[test]
+    fn stochastic_link_latency_at_least_deterministic() {
+        let (a, _b) = InProcTransport::pair();
+        let ch = OutageChannel::paper_default();
+        let base = ch.comm_latency_ms(5_000);
+        let mut sim = SimulatedLink::new(a, ch, 7).stochastic(true);
+        for i in 0..50 {
+            sim.send(&Frame {
+                request_id: i,
+                kind: FrameKind::InferLm { model: "m".into(), payload: vec![0; 5_000] },
+            })
+            .unwrap();
+            let ms = sim.take_latency_ms();
+            assert!(ms >= base - 1e-9);
+        }
+    }
+}

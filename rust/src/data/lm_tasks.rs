@@ -1,0 +1,204 @@
+//! Multiple-choice task reader ("RSCT").
+//!
+//! Layout: magic, u32 version, u32 n_items, u32 n_choices, u32 seq_len,
+//! u32 vocab; per item: u32 correct, then per choice: u32 score_start,
+//! u32 score_len, seq_len×u32 tokens.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// One choice of one item.
+#[derive(Debug, Clone)]
+pub struct McChoice {
+    /// Token sequence, `seq_len` long.
+    pub tokens: Vec<u32>,
+    /// First scored position (answer span start).
+    pub score_start: usize,
+    /// Scored span length.
+    pub score_len: usize,
+}
+
+/// One multiple-choice item.
+#[derive(Debug, Clone)]
+pub struct McItem {
+    /// Index of the correct choice.
+    pub correct: usize,
+    /// The choices.
+    pub choices: Vec<McChoice>,
+}
+
+/// A loaded task file.
+#[derive(Debug, Clone)]
+pub struct McTask {
+    /// Choices per item.
+    pub n_choices: usize,
+    /// Sequence length.
+    pub seq_len: usize,
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Items.
+    pub items: Vec<McItem>,
+}
+
+fn read_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
+    let end = *pos + 4;
+    if end > buf.len() {
+        return Err(Error::corrupt("task bin truncated"));
+    }
+    let v = u32::from_le_bytes([buf[*pos], buf[*pos + 1], buf[*pos + 2], buf[*pos + 3]]);
+    *pos = end;
+    Ok(v)
+}
+
+impl McTask {
+    /// Parse from bytes.
+    pub fn from_bytes(buf: &[u8]) -> Result<Self> {
+        if buf.len() < 4 || &buf[0..4] != b"RSCT" {
+            return Err(Error::corrupt("bad task magic"));
+        }
+        let mut pos = 4usize;
+        let version = read_u32(buf, &mut pos)?;
+        if version != 1 {
+            return Err(Error::corrupt(format!("task bin version {version}")));
+        }
+        let n_items = read_u32(buf, &mut pos)? as usize;
+        let n_choices = read_u32(buf, &mut pos)? as usize;
+        let seq_len = read_u32(buf, &mut pos)? as usize;
+        let vocab = read_u32(buf, &mut pos)? as usize;
+        if n_choices == 0 || seq_len == 0 || vocab == 0 {
+            return Err(Error::corrupt("degenerate task header"));
+        }
+        let mut items = Vec::with_capacity(n_items);
+        for _ in 0..n_items {
+            let correct = read_u32(buf, &mut pos)? as usize;
+            if correct >= n_choices {
+                return Err(Error::corrupt("correct index out of range"));
+            }
+            let mut choices = Vec::with_capacity(n_choices);
+            for _ in 0..n_choices {
+                let score_start = read_u32(buf, &mut pos)? as usize;
+                let score_len = read_u32(buf, &mut pos)? as usize;
+                if score_start == 0 || score_start + score_len > seq_len {
+                    return Err(Error::corrupt("score span out of range"));
+                }
+                let mut tokens = Vec::with_capacity(seq_len);
+                for _ in 0..seq_len {
+                    let t = read_u32(buf, &mut pos)?;
+                    if t as usize >= vocab {
+                        return Err(Error::corrupt("token out of vocab"));
+                    }
+                    tokens.push(t);
+                }
+                choices.push(McChoice { tokens, score_start, score_len });
+            }
+            items.push(McItem { correct, choices });
+        }
+        if pos != buf.len() {
+            return Err(Error::corrupt("trailing bytes in task bin"));
+        }
+        Ok(McTask { n_choices, seq_len, vocab, items })
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let buf = std::fs::read(path.as_ref()).map_err(|e| {
+            Error::artifact(format!("cannot read {}: {e}", path.as_ref().display()))
+        })?;
+        Self::from_bytes(&buf)
+    }
+
+    /// Flatten one item's choices into a single i32 token batch
+    /// (n_choices × seq_len), the LM head artifact's input layout.
+    pub fn item_batch(&self, item: &McItem) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.n_choices * self.seq_len);
+        for ch in &item.choices {
+            out.extend(ch.tokens.iter().map(|&t| t as i32));
+        }
+        out
+    }
+}
+
+/// Score choices from tail logits (n_choices × seq_len × vocab,
+/// row-major): sum of log-softmax of each answer token at its
+/// predicting position (t−1). Returns the argmax choice.
+pub fn score_choices(logits: &[f32], task: &McTask, item: &McItem) -> usize {
+    let v = task.vocab;
+    let t = task.seq_len;
+    let mut best = (f64::NEG_INFINITY, 0usize);
+    for (ci, ch) in item.choices.iter().enumerate() {
+        let base = ci * t * v;
+        let mut score = 0.0f64;
+        for pos in ch.score_start..ch.score_start + ch.score_len {
+            let row = &logits[base + (pos - 1) * v..base + pos * v];
+            // log-softmax of the target token.
+            let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let lse: f64 = row.iter().map(|&x| ((x - mx) as f64).exp()).sum::<f64>().ln()
+                + mx as f64;
+            score += row[ch.tokens[pos] as usize] as f64 - lse;
+        }
+        if score > best.0 {
+            best = (score, ci);
+        }
+    }
+    best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_bytes() -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"RSCT");
+        for v in [1u32, 1, 2, 4, 16] {
+            buf.extend_from_slice(&v.to_le_bytes()); // version, items, choices, seq, vocab
+        }
+        buf.extend_from_slice(&1u32.to_le_bytes()); // correct = 1
+        for c in 0..2u32 {
+            buf.extend_from_slice(&2u32.to_le_bytes()); // score_start
+            buf.extend_from_slice(&2u32.to_le_bytes()); // score_len
+            for i in 0..4u32 {
+                buf.extend_from_slice(&(c + i).to_le_bytes());
+            }
+        }
+        buf
+    }
+
+    #[test]
+    fn parses_sample() {
+        let task = McTask::from_bytes(&sample_bytes()).unwrap();
+        assert_eq!(task.items.len(), 1);
+        assert_eq!(task.items[0].correct, 1);
+        assert_eq!(task.items[0].choices[1].tokens, vec![1, 2, 3, 4]);
+        let batch = task.item_batch(&task.items[0]);
+        assert_eq!(batch.len(), 8);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let good = sample_bytes();
+        assert!(McTask::from_bytes(&good[..10]).is_err());
+        let mut bad = good.clone();
+        bad[24] = 9; // correct index (offset 24) → out of range
+        assert!(McTask::from_bytes(&bad).is_err());
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(McTask::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn scoring_picks_highest_logprob() {
+        let task = McTask::from_bytes(&sample_bytes()).unwrap();
+        let item = &task.items[0];
+        let v = task.vocab;
+        let t = task.seq_len;
+        // Choice 1's answer tokens are 3 at pos 2 and 4 at pos 3
+        // (scored at rows 1 and 2). Give them high logits.
+        let mut logits = vec![0.0f32; 2 * t * v];
+        let base = 1 * t * v;
+        logits[base + 1 * v + 3] = 10.0;
+        logits[base + 2 * v + 4] = 10.0;
+        assert_eq!(score_choices(&logits, &task, item), 1);
+    }
+}

@@ -1,0 +1,14 @@
+//! Readers for the test-set binaries written by `python/compile/data.py`.
+//!
+//! * [`vision`] — "RSCD" image/label sets.
+//! * [`lm_tasks`] — "RSCT" multiple-choice task files.
+//!
+//! Formats are little-endian and mirrored field-for-field with the
+//! Python writers; every reader validates magic, version and size
+//! arithmetic before trusting any count.
+
+pub mod lm_tasks;
+pub mod vision;
+
+pub use lm_tasks::{McItem, McTask};
+pub use vision::VisionSet;

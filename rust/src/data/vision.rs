@@ -1,0 +1,172 @@
+//! Vision test-set reader ("RSCD").
+//!
+//! Layout: magic, u32 version, u32 count, u32 h, u32 w, u32 c,
+//! u32 num_classes, count×u32 labels, count·h·w·c f32 images (NHWC).
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// An in-memory vision evaluation set.
+#[derive(Debug, Clone)]
+pub struct VisionSet {
+    /// Image height.
+    pub h: usize,
+    /// Image width.
+    pub w: usize,
+    /// Channels.
+    pub c: usize,
+    /// Number of classes.
+    pub num_classes: usize,
+    /// Labels, one per image.
+    pub labels: Vec<u32>,
+    /// Images, flattened NHWC.
+    pub images: Vec<f32>,
+}
+
+fn read_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
+    let end = *pos + 4;
+    if end > buf.len() {
+        return Err(Error::corrupt("vision bin truncated"));
+    }
+    let v = u32::from_le_bytes([buf[*pos], buf[*pos + 1], buf[*pos + 2], buf[*pos + 3]]);
+    *pos = end;
+    Ok(v)
+}
+
+impl VisionSet {
+    /// Samples in the set.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Flat pixels per image.
+    pub fn image_len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// Borrow image `i` as a flat slice.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let n = self.image_len();
+        &self.images[i * n..(i + 1) * n]
+    }
+
+    /// Concatenate images `[start, start+count)` (for batched execution);
+    /// wraps around the set so any batch size can be filled.
+    pub fn batch(&self, start: usize, count: usize) -> (Vec<f32>, Vec<u32>) {
+        let n = self.image_len();
+        let mut xs = Vec::with_capacity(count * n);
+        let mut ys = Vec::with_capacity(count);
+        for k in 0..count {
+            let i = (start + k) % self.len();
+            xs.extend_from_slice(self.image(i));
+            ys.push(self.labels[i]);
+        }
+        (xs, ys)
+    }
+
+    /// Parse from bytes.
+    pub fn from_bytes(buf: &[u8]) -> Result<Self> {
+        if buf.len() < 4 || &buf[0..4] != b"RSCD" {
+            return Err(Error::corrupt("bad vision magic"));
+        }
+        let mut pos = 4usize;
+        let version = read_u32(buf, &mut pos)?;
+        if version != 1 {
+            return Err(Error::corrupt(format!("vision bin version {version}")));
+        }
+        let count = read_u32(buf, &mut pos)? as usize;
+        let h = read_u32(buf, &mut pos)? as usize;
+        let w = read_u32(buf, &mut pos)? as usize;
+        let c = read_u32(buf, &mut pos)? as usize;
+        let num_classes = read_u32(buf, &mut pos)? as usize;
+        let img_len = h
+            .checked_mul(w)
+            .and_then(|x| x.checked_mul(c))
+            .ok_or_else(|| Error::corrupt("image dims overflow"))?;
+        let expect = pos + count * 4 + count * img_len * 4;
+        if buf.len() != expect {
+            return Err(Error::corrupt(format!(
+                "vision bin is {} bytes, expected {expect}",
+                buf.len()
+            )));
+        }
+        let mut labels = Vec::with_capacity(count);
+        for _ in 0..count {
+            let l = read_u32(buf, &mut pos)?;
+            if l as usize >= num_classes {
+                return Err(Error::corrupt("label out of range"));
+            }
+            labels.push(l);
+        }
+        let mut images = Vec::with_capacity(count * img_len);
+        for chunk in buf[pos..].chunks_exact(4) {
+            images.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        Ok(VisionSet { h, w, c, num_classes, labels, images })
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let buf = std::fs::read(path.as_ref()).map_err(|e| {
+            Error::artifact(format!("cannot read {}: {e}", path.as_ref().display()))
+        })?;
+        Self::from_bytes(&buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_bytes(count: u32, h: u32, w: u32, c: u32, classes: u32) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"RSCD");
+        for v in [1u32, count, h, w, c, classes] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        for i in 0..count {
+            buf.extend_from_slice(&(i % classes).to_le_bytes());
+        }
+        for i in 0..count * h * w * c {
+            buf.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        buf
+    }
+
+    #[test]
+    fn parses_and_indexes() {
+        let set = VisionSet::from_bytes(&sample_bytes(3, 2, 2, 1, 2)).unwrap();
+        assert_eq!(set.len(), 3);
+        assert_eq!(set.image_len(), 4);
+        assert_eq!(set.image(1), &[4.0, 5.0, 6.0, 7.0]);
+        let (xs, ys) = set.batch(2, 2); // wraps to image 0
+        assert_eq!(ys, vec![0, 0]);
+        assert_eq!(&xs[0..4], set.image(2));
+        assert_eq!(&xs[4..8], set.image(0));
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_sizes() {
+        assert!(VisionSet::from_bytes(b"XXXX").is_err());
+        let mut b = sample_bytes(2, 2, 2, 1, 2);
+        b.pop();
+        assert!(VisionSet::from_bytes(&b).is_err());
+        let mut b = sample_bytes(2, 2, 2, 1, 2);
+        b[4] = 9; // version
+        assert!(VisionSet::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_label() {
+        let mut b = sample_bytes(2, 1, 1, 1, 2);
+        // First label at offset 28.
+        b[28] = 7;
+        assert!(VisionSet::from_bytes(&b).is_err());
+    }
+}

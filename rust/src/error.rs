@@ -1,0 +1,114 @@
+//! Crate-wide error type.
+//!
+//! Every fallible public API in the crate returns [`Result`]. Variants are
+//! grouped by subsystem so callers can branch on the failure domain
+//! (codec vs. runtime vs. transport) without string matching.
+
+use thiserror::Error;
+
+/// Unified error type for the rans-sc crate.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Compressed payload is malformed (bad magic, truncated, CRC
+    /// mismatch, impossible header fields).
+    #[error("corrupt container: {0}")]
+    Corrupt(String),
+
+    /// An entropy-codec invariant was violated (zero-frequency symbol on
+    /// the encode path, state underflow, alphabet overflow).
+    #[error("codec error: {0}")]
+    Codec(String),
+
+    /// Invalid argument from the caller (shape mismatch, Q out of range,
+    /// N does not divide T, empty input where data is required).
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+
+    /// Artifact loading / manifest problems (missing file, bad JSON,
+    /// schema mismatch between manifest and HLO artifact).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT runtime failures surfaced from the `xla` crate.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Wire-protocol violations between edge and cloud nodes.
+    #[error("protocol error: {0}")]
+    Protocol(String),
+
+    /// Transport-level failures (connection refused, simulated outage
+    /// budget exhausted, channel closed).
+    #[error("transport error: {0}")]
+    Transport(String),
+
+    /// Configuration file / CLI parsing problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// JSON parse errors from the hand-rolled parser in `util::json`.
+    #[error("json error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    /// Underlying I/O error.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Shorthand constructor for [`Error::Corrupt`].
+    pub fn corrupt(msg: impl Into<String>) -> Self {
+        Error::Corrupt(msg.into())
+    }
+    /// Shorthand constructor for [`Error::Codec`].
+    pub fn codec(msg: impl Into<String>) -> Self {
+        Error::Codec(msg.into())
+    }
+    /// Shorthand constructor for [`Error::InvalidArg`].
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        Error::InvalidArg(msg.into())
+    }
+    /// Shorthand constructor for [`Error::Artifact`].
+    pub fn artifact(msg: impl Into<String>) -> Self {
+        Error::Artifact(msg.into())
+    }
+    /// Shorthand constructor for [`Error::Runtime`].
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+    /// Shorthand constructor for [`Error::Protocol`].
+    pub fn protocol(msg: impl Into<String>) -> Self {
+        Error::Protocol(msg.into())
+    }
+    /// Shorthand constructor for [`Error::Transport`].
+    pub fn transport(msg: impl Into<String>) -> Self {
+        Error::Transport(msg.into())
+    }
+    /// Shorthand constructor for [`Error::Config`].
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_domain() {
+        let e = Error::codec("state underflow");
+        assert_eq!(e.to_string(), "codec error: state underflow");
+        let e = Error::Json { offset: 12, msg: "bad literal".into() };
+        assert!(e.to_string().contains("byte 12"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

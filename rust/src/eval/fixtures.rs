@@ -1,0 +1,88 @@
+//! Experiment input fixtures.
+//!
+//! Codec-level experiments (Table 1, Figs. 2–4) need a representative
+//! intermediate-feature tensor. When artifacts exist, the fixture is a
+//! *real* IF: the head of the configured model run on a test image.
+//! Without artifacts (unit-test / early-dev settings), a synthetic
+//! post-ReLU tensor with matched sparsity/skew stands in, and the
+//! returned [`FixtureSource`] records which one was used.
+
+use crate::data::VisionSet;
+use crate::error::Result;
+use crate::runtime::{Engine, ExecPool, Manifest, VisionSplitExec};
+use crate::util::prng::Rng;
+use std::sync::Arc;
+
+/// Where a fixture tensor came from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FixtureSource {
+    /// Real head output: (model name, split layer).
+    Artifact(String, usize),
+    /// Synthetic stand-in with the given seed.
+    Synthetic(u64),
+}
+
+/// Synthetic post-ReLU IF with channel-skewed sparsity; the Fig. 2
+/// reference shape `128×28×28` by default.
+pub fn synthetic_feature(seed: u64, c: usize, h: usize, w: usize, density: f64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut out = vec![0.0f32; c * h * w];
+    for ch in 0..c {
+        let act = rng.next_f64();
+        for i in 0..h * w {
+            if rng.next_f64() < density * act * 2.0 {
+                out[ch * h * w + i] = (rng.normal().abs() as f32) * (0.3 + act as f32);
+            }
+        }
+    }
+    out
+}
+
+/// Produce the experiment feature tensor.
+///
+/// Tries `artifacts_dir` first (head of `model` at SL`sl` on the first
+/// test image); falls back to [`synthetic_feature`] when artifacts are
+/// unavailable.
+pub fn feature_tensor(
+    artifacts_dir: &str,
+    model: &str,
+    sl: usize,
+) -> Result<(Vec<f32>, FixtureSource)> {
+    match try_artifact_feature(artifacts_dir, model, sl) {
+        Ok(feat) => Ok((feat, FixtureSource::Artifact(model.to_string(), sl))),
+        Err(_) => Ok((
+            synthetic_feature(4242, 128, 28, 28, 0.35),
+            FixtureSource::Synthetic(4242),
+        )),
+    }
+}
+
+fn try_artifact_feature(artifacts_dir: &str, model: &str, sl: usize) -> Result<Vec<f32>> {
+    let manifest = Manifest::load(artifacts_dir)?;
+    let engine = Arc::new(Engine::cpu()?);
+    let pool = ExecPool::new(engine, artifacts_dir);
+    let exec = VisionSplitExec::load(&pool, &manifest, model, sl, 1)?;
+    let set = VisionSet::load(manifest.resolve(&exec.entry.test_data))?;
+    let (xs, _) = set.batch(0, 1);
+    exec.run_head_raw(&xs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_feature_is_sparse_and_positive() {
+        let f = synthetic_feature(1, 32, 14, 14, 0.35);
+        let zeros = f.iter().filter(|&&x| x == 0.0).count();
+        assert!(zeros > f.len() / 4, "{zeros}/{}", f.len());
+        assert!(f.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn fallback_to_synthetic_without_artifacts() {
+        let (f, src) = feature_tensor("/nonexistent", "resnet_mini_synth_a", 2).unwrap();
+        assert_eq!(f.len(), 128 * 28 * 28);
+        assert!(matches!(src, FixtureSource::Synthetic(_)));
+    }
+}

@@ -1,0 +1,119 @@
+//! Table-3 driver: LM multiple-choice sweep.
+//!
+//! Per (model, task, Q): accuracy, `T_comm(Ñ)` under the ε-outage
+//! channel, mean container size, and encode/decode timing — the exact
+//! columns of Table 3, with the baseline row using the raw float path.
+
+use crate::channel::OutageChannel;
+use crate::data::{lm_tasks::score_choices, McTask};
+use crate::error::Result;
+use crate::pipeline::{self, PipelineConfig, ReshapeStrategy};
+use crate::runtime::LmSplitExec;
+use crate::util::stats::Summary;
+use crate::util::timer::Stopwatch;
+
+/// One Table-3 row.
+#[derive(Debug, Clone)]
+pub struct LmRow {
+    /// Task id.
+    pub task: String,
+    /// Bit-width; `None` = uncompressed baseline.
+    pub q: Option<u8>,
+    /// Multiple-choice accuracy.
+    pub accuracy: f64,
+    /// Mean payload bytes per item.
+    pub mean_payload_bytes: f64,
+    /// Deterministic ε-outage communication latency for the mean payload.
+    pub t_comm_ms: f64,
+    /// Encode timing summary (head + pipeline), ms.
+    pub enc_ms: Summary,
+    /// Decode timing summary, ms.
+    pub dec_ms: Summary,
+}
+
+/// Evaluate one task at the baseline and each Q.
+pub fn lm_task_sweep(
+    exec: &LmSplitExec,
+    task: &McTask,
+    task_name: &str,
+    qs: &[u8],
+    n_items: usize,
+    channel: &OutageChannel,
+) -> Result<Vec<LmRow>> {
+    let n = n_items.min(task.items.len()).max(1);
+    let mut rows = Vec::new();
+
+    // Baseline (raw hidden states over the link).
+    {
+        let mut correct = 0usize;
+        let mut payload = Summary::new();
+        let mut enc = Summary::new();
+        for item in task.items.iter().take(n) {
+            let tokens = task.item_batch(item);
+            let t0 = Stopwatch::new();
+            let hidden = exec.run_head_raw(&tokens)?;
+            enc.add(t0.elapsed_ms());
+            payload.add((hidden.len() * 4) as f64);
+            let logits = exec.run_tail_raw(&hidden)?;
+            if score_choices(&logits, task, item) == item.correct {
+                correct += 1;
+            }
+        }
+        rows.push(LmRow {
+            task: task_name.to_string(),
+            q: None,
+            accuracy: correct as f64 / n as f64,
+            mean_payload_bytes: payload.mean(),
+            t_comm_ms: channel.comm_latency_ms(payload.mean() as usize),
+            enc_ms: enc,
+            dec_ms: Summary::new(),
+        });
+    }
+
+    for &q in qs {
+        let mut correct = 0usize;
+        let mut payload = Summary::new();
+        let mut enc = Summary::new();
+        let mut dec = Summary::new();
+        let mut plan: Option<usize> = None;
+        for item in task.items.iter().take(n) {
+            let tokens = task.item_batch(item);
+            let t0 = Stopwatch::new();
+            let (symbols, params) = exec.run_head(&tokens, q)?;
+            let reshape = match plan {
+                Some(np) => ReshapeStrategy::Fixed(np),
+                None => ReshapeStrategy::Optimize,
+            };
+            let cfg = PipelineConfig {
+                q,
+                lanes: 8,
+                parallel: crate::pipeline::codec::default_parallelism(),
+                reshape,
+            };
+            let (container, stats) = pipeline::compress_quantized(&symbols, params, &cfg)?;
+            plan.get_or_insert(stats.n_rows);
+            enc.add(t0.elapsed_ms());
+            payload.add(container.len() as f64);
+            let t1 = Stopwatch::new();
+            let (dec_syms, dec_params) = pipeline::decompress_to_symbols(
+                &container,
+                crate::pipeline::codec::default_parallelism(),
+            )?;
+            dec.add(t1.elapsed_ms());
+            let logits = exec.run_tail(&dec_syms, &dec_params)?;
+            if score_choices(&logits, task, item) == item.correct {
+                correct += 1;
+            }
+        }
+        rows.push(LmRow {
+            task: task_name.to_string(),
+            q: Some(q),
+            accuracy: correct as f64 / n as f64,
+            mean_payload_bytes: payload.mean(),
+            t_comm_ms: channel.comm_latency_ms(payload.mean() as usize),
+            enc_ms: enc,
+            dec_ms: dec,
+        });
+    }
+    Ok(rows)
+}

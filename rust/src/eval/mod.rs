@@ -1,0 +1,18 @@
+//! Experiment drivers shared by `benches/` and `examples/`.
+//!
+//! Each paper table/figure has a driver here returning structured rows;
+//! the bench binaries format them. Keeping the logic in the library
+//! means integration tests can assert on the *shape* of every result
+//! (who wins, direction of trends) without parsing bench output.
+
+pub mod codecs;
+pub mod fixtures;
+pub mod lm;
+pub mod reshape_exp;
+pub mod vision;
+
+pub use codecs::{codec_comparison, CodecRow};
+pub use fixtures::{feature_tensor, FixtureSource};
+pub use lm::{lm_task_sweep, LmRow};
+pub use reshape_exp::{cost_model_sweep, latency_vs_n, reshape_histogram, CostSweep};
+pub use vision::{accuracy_sweep, AccuracyPoint};

@@ -1,0 +1,126 @@
+//! Accuracy-sweep driver (Tables 2, 4, 5).
+//!
+//! Runs the *real* split pipeline per sample — head artifact → AIQ
+//! symbols → CSR+rANS container → decode → tail artifact — entirely
+//! in-process (no transport), which is exactly the computation the
+//! served path performs minus the socket.
+
+use crate::data::VisionSet;
+use crate::error::Result;
+use crate::pipeline::{self, PipelineConfig, ReshapeStrategy};
+use crate::runtime::VisionSplitExec;
+use crate::util::stats::Summary;
+
+/// One (Q, accuracy) measurement.
+#[derive(Debug, Clone)]
+pub struct AccuracyPoint {
+    /// Bit-width; `None` = uncompressed baseline.
+    pub q: Option<u8>,
+    /// Top-1 accuracy over the evaluated samples.
+    pub accuracy: f64,
+    /// Mean container bytes per sample (raw f32 bytes for baseline).
+    pub mean_payload_bytes: f64,
+    /// Encode-time summary (ms; head + pipeline).
+    pub enc_ms: Summary,
+    /// Decode-time summary (ms; container → symbols).
+    pub dec_ms: Summary,
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = (f32::NEG_INFINITY, 0);
+    for (i, &x) in xs.iter().enumerate() {
+        if x > best.0 {
+            best = (x, i);
+        }
+    }
+    best.1
+}
+
+/// Sweep quantization bit-widths over the first `n_samples` of `set`.
+///
+/// The returned vector starts with the uncompressed baseline
+/// (`q == None`) followed by one point per entry of `qs`.
+pub fn accuracy_sweep(
+    exec: &VisionSplitExec,
+    set: &VisionSet,
+    qs: &[u8],
+    n_samples: usize,
+) -> Result<Vec<AccuracyPoint>> {
+    let n = n_samples.min(set.len()).max(1);
+    let classes = exec.entry.num_classes;
+    let batch = exec.split.batch;
+    assert_eq!(batch, 1, "accuracy sweep expects batch-1 artifacts");
+
+    let mut out = Vec::new();
+
+    // Baseline: raw float path.
+    {
+        let mut correct = 0usize;
+        let mut payload = Summary::new();
+        let mut enc = Summary::new();
+        for i in 0..n {
+            let (xs, ys) = set.batch(i, 1);
+            let t0 = crate::util::timer::Stopwatch::new();
+            let feat = exec.run_head_raw(&xs)?;
+            enc.add(t0.elapsed_ms());
+            payload.add((feat.len() * 4) as f64);
+            let logits = exec.run_tail_raw(&feat)?;
+            if argmax(&logits[0..classes]) == ys[0] as usize {
+                correct += 1;
+            }
+        }
+        out.push(AccuracyPoint {
+            q: None,
+            accuracy: correct as f64 / n as f64,
+            mean_payload_bytes: payload.mean(),
+            enc_ms: enc,
+            dec_ms: Summary::new(),
+        });
+    }
+
+    for &q in qs {
+        let mut correct = 0usize;
+        let mut payload = Summary::new();
+        let mut enc = Summary::new();
+        let mut dec = Summary::new();
+        let mut plan: Option<usize> = None;
+        for i in 0..n {
+            let (xs, ys) = set.batch(i, 1);
+            let t0 = crate::util::timer::Stopwatch::new();
+            let (symbols, params) = exec.run_head(&xs, q)?;
+            let reshape = match plan {
+                Some(np) => ReshapeStrategy::Fixed(np),
+                None => ReshapeStrategy::Optimize,
+            };
+            let cfg = PipelineConfig {
+                q,
+                lanes: 8,
+                parallel: crate::pipeline::codec::default_parallelism(),
+                reshape,
+            };
+            let (container, stats) = pipeline::compress_quantized(&symbols, params, &cfg)?;
+            plan.get_or_insert(stats.n_rows);
+            enc.add(t0.elapsed_ms());
+            payload.add(container.len() as f64);
+
+            let t1 = crate::util::timer::Stopwatch::new();
+            let (dec_syms, dec_params) = pipeline::decompress_to_symbols(
+                &container,
+                crate::pipeline::codec::default_parallelism(),
+            )?;
+            dec.add(t1.elapsed_ms());
+            let logits = exec.run_tail(&dec_syms, &dec_params)?;
+            if argmax(&logits[0..classes]) == ys[0] as usize {
+                correct += 1;
+            }
+        }
+        out.push(AccuracyPoint {
+            q: Some(q),
+            accuracy: correct as f64 / n as f64,
+            mean_payload_bytes: payload.mean(),
+            enc_ms: enc,
+            dec_ms: dec,
+        });
+    }
+    Ok(out)
+}

@@ -1,0 +1,54 @@
+//! # rans-sc
+//!
+//! Reproduction of *"Range Asymmetric Numeral Systems-Based Lightweight
+//! Intermediate Feature Compression for Split Computing of Deep Neural
+//! Networks"* (Sung, Im, Palakonda & Kang, CS.DC 2025).
+//!
+//! The crate implements the paper's full system as the Layer-3 (Rust)
+//! coordinator of a three-layer Rust + JAX + Pallas stack:
+//!
+//! * [`rans`] — the core range-ANS entropy codec (Eqs. 2–4), including an
+//!   N-way interleaved variant used for multi-lane (GPU-style) throughput.
+//! * [`quant`] — asymmetric integer quantization, AIQ (Eq. 6).
+//! * [`sparse`] — the *modified* CSR format with non-cumulative row counts.
+//! * [`reshape`] — the entropy/cost model `T_tot(N) = ℓ_D · H(p(N))` and
+//!   Algorithm 1 (approximate enumeration for the optimal reshape `Ñ`).
+//! * [`pipeline`] — the end-to-end intermediate-feature codec
+//!   (reshape → AIQ → CSR → concat → rANS) and its container format.
+//! * [`channel`] — the ε-outage wireless channel latency model.
+//! * [`baselines`] — E-1 binary serialization, E-2 tANS, E-3 DietGPU-style
+//!   interleaved rANS, plus zstd/deflate comparators.
+//! * [`runtime`] — PJRT executor loading AOT-lowered HLO artifacts
+//!   produced by the Python (JAX + Pallas) compile path.
+//! * [`coordinator`] — the split-computing serving system: edge node,
+//!   cloud node, wire protocol, transports, dynamic batcher, router.
+//! * [`telemetry`] — metrics registry and latency-breakdown histograms.
+//! * [`eval`] — experiment drivers shared by `benches/` and `examples/`.
+//!
+//! Python/JAX runs only at build time (`make artifacts`); the binaries in
+//! this crate are self-contained once `artifacts/` exists.
+
+pub mod baselines;
+pub mod channel;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod eval;
+pub mod pipeline;
+pub mod quant;
+pub mod rans;
+pub mod reshape;
+pub mod runtime;
+pub mod sparse;
+pub mod tans;
+pub mod telemetry;
+pub mod testutil;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Crate version string (from Cargo metadata).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,251 @@
+//! rans-sc launcher.
+//!
+//! Subcommands:
+//!
+//! * `serve-cloud`   — run the cloud node (TCP accept loop).
+//! * `infer`         — one-shot edge inference against a cloud node.
+//! * `compress`      — compress a synthetic/artifact IF, print stats.
+//! * `optimize`      — run Algorithm 1 on a feature tensor, print Ñ.
+//! * `accuracy`      — Table-2 style accuracy sweep for one model route.
+//! * `stats`         — fetch a cloud node's metrics snapshot.
+//! * `version`       — print the version.
+//!
+//! Global flags: `--config <file.json>` and repeated `--set key=value`
+//! overrides (see `config::AppConfig`).
+
+use std::process::ExitCode;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use rans_sc::config::AppConfig;
+use rans_sc::coordinator::{connect_tcp, CloudNode, EdgeConfig, EdgeNode};
+use rans_sc::data::VisionSet;
+use rans_sc::error::Result;
+use rans_sc::eval;
+use rans_sc::pipeline::{self, PipelineConfig};
+use rans_sc::runtime::{Engine, ExecPool, Manifest, VisionSplitExec};
+
+struct Args {
+    cmd: String,
+    cfg: AppConfig,
+    rest: Vec<String>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        argv.push("help".to_string());
+    }
+    let cmd = argv.remove(0);
+    let mut cfg = AppConfig::default();
+    let mut rest = Vec::new();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--config" => {
+                i += 1;
+                let path = argv.get(i).ok_or_else(|| {
+                    rans_sc::Error::config("--config needs a file argument")
+                })?;
+                cfg = AppConfig::from_file(path)?;
+            }
+            "--set" => {
+                i += 1;
+                let spec = argv.get(i).ok_or_else(|| {
+                    rans_sc::Error::config("--set needs key=value")
+                })?;
+                cfg.apply_override(spec)?;
+            }
+            other => rest.push(other.to_string()),
+        }
+        i += 1;
+    }
+    Ok(Args { cmd, cfg, rest })
+}
+
+fn cmd_serve_cloud(cfg: &AppConfig) -> Result<()> {
+    let node = Arc::new(CloudNode::new(&cfg.artifacts_dir)?);
+    let listener = std::net::TcpListener::bind(&cfg.addr)
+        .map_err(|e| rans_sc::Error::transport(format!("bind {}: {e}", cfg.addr)))?;
+    println!("cloud node listening on {}", cfg.addr);
+    let stop = Arc::new(AtomicBool::new(false));
+    node.serve_tcp(listener, stop)?;
+    println!("{}", node.metrics().report());
+    Ok(())
+}
+
+fn cmd_infer(cfg: &AppConfig) -> Result<()> {
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let engine = Arc::new(Engine::cpu()?);
+    let pool = ExecPool::new(engine, &cfg.artifacts_dir);
+    let exec = Arc::new(VisionSplitExec::load(&pool, &manifest, &cfg.model, cfg.sl, cfg.batch)?);
+    let set = VisionSet::load(manifest.resolve(&exec.entry.test_data))?;
+    let transport = connect_tcp(&cfg.addr)?;
+    let edge = EdgeNode::new(
+        Arc::clone(&exec),
+        transport,
+        EdgeConfig {
+            model: cfg.model.clone(),
+            sl: cfg.sl,
+            batch: cfg.batch,
+            q: cfg.q,
+            lanes: cfg.lanes,
+            parallel: cfg.parallel,
+        },
+    );
+    let (xs, ys) = set.batch(0, cfg.batch);
+    let out = edge.infer(&xs)?;
+    let classes = exec.entry.num_classes;
+    for (b, &label) in ys.iter().enumerate() {
+        let logits = &out.logits[b * classes..(b + 1) * classes];
+        let pred = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        println!("sample {b}: predicted {pred}, label {label}");
+    }
+    println!(
+        "payload {} B | encode {:.3} ms | T_comm {:.3} ms | decode {:.3} ms | compute {:.3} ms",
+        out.payload_bytes,
+        out.breakdown.encode_ms,
+        out.breakdown.transfer_ms,
+        out.breakdown.decode_ms,
+        out.breakdown.compute_ms
+    );
+    Ok(())
+}
+
+fn cmd_compress(cfg: &AppConfig) -> Result<()> {
+    let (data, source) = eval::feature_tensor(&cfg.artifacts_dir, &cfg.model, cfg.sl)?;
+    println!("feature source: {source:?}, {} elements", data.len());
+    let (bytes, stats) = pipeline::compress(&data, &PipelineConfig::paper(cfg.q))?;
+    println!(
+        "Q={} reshape {}x{} nnz={} entropy={:.3} b/sym",
+        cfg.q, stats.n_rows, stats.n_cols, stats.nnz, stats.entropy
+    );
+    println!(
+        "raw {} B -> {} B ({:.2}x), payload {} B + side {} B",
+        data.len() * 4,
+        bytes.len(),
+        (data.len() * 4) as f64 / bytes.len() as f64,
+        stats.payload_bytes,
+        stats.side_info_bytes
+    );
+    let back = pipeline::decompress(&bytes, cfg.parallel)?;
+    println!("roundtrip ok: {} elements", back.len());
+    Ok(())
+}
+
+fn cmd_optimize(cfg: &AppConfig) -> Result<()> {
+    let (data, source) = eval::feature_tensor(&cfg.artifacts_dir, &cfg.model, cfg.sl)?;
+    println!("feature source: {source:?}");
+    let sweeps = eval::cost_model_sweep(&data, &[cfg.q])?;
+    let s = &sweeps[0];
+    println!(
+        "Q={}: domain {} candidates, Algorithm 1 evaluated {}",
+        s.q, s.domain_size, s.evaluated
+    );
+    println!(
+        "Ñ = {} ({} B) vs N* = {} ({} B) — gap {:.2}%",
+        s.n_tilde,
+        s.bytes_at_tilde,
+        s.n_star,
+        s.bytes_at_star,
+        s.gap() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_accuracy(cfg: &AppConfig, rest: &[String]) -> Result<()> {
+    let n_samples: usize = rest
+        .first()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128);
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let engine = Arc::new(Engine::cpu()?);
+    let pool = ExecPool::new(engine, &cfg.artifacts_dir);
+    let exec = VisionSplitExec::load(&pool, &manifest, &cfg.model, cfg.sl, 1)?;
+    let set = VisionSet::load(manifest.resolve(&exec.entry.test_data))?;
+    println!(
+        "model {} SL{} — build-time baseline {:.4}",
+        cfg.model, cfg.sl, exec.entry.baseline_accuracy
+    );
+    let points = eval::accuracy_sweep(&exec, &set, &[8, 6, 4, 3, 2], n_samples)?;
+    println!("{:>8} {:>10} {:>12} {:>10} {:>10}", "Q", "acc", "payload B", "enc ms", "dec ms");
+    for p in &points {
+        let q = p.q.map(|q| q.to_string()).unwrap_or_else(|| "base".into());
+        println!(
+            "{q:>8} {:>10.4} {:>12.0} {:>10.3} {:>10.3}",
+            p.accuracy,
+            p.mean_payload_bytes,
+            p.enc_ms.mean(),
+            p.dec_ms.mean()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_stats(cfg: &AppConfig) -> Result<()> {
+    use rans_sc::coordinator::{Frame, FrameKind, Transport};
+    let mut t = connect_tcp(&cfg.addr)?;
+    t.send(&Frame { request_id: 1, kind: FrameKind::Stats })?;
+    match t.recv()?.kind {
+        FrameKind::StatsReply { json } => println!("{json}"),
+        other => println!("unexpected reply: {other:?}"),
+    }
+    Ok(())
+}
+
+fn help() {
+    println!(
+        "rans-sc {} — rANS split-computing coordinator
+
+USAGE: rans-sc <command> [--config file.json] [--set key=value]...
+
+COMMANDS:
+  serve-cloud        run the cloud node (binds --set addr=HOST:PORT)
+  infer              one edge inference against a running cloud node
+  compress           compress an IF tensor and print pipeline stats
+  optimize           run Algorithm 1 (reshape search) and print Ñ vs N*
+  accuracy [N]       accuracy sweep over Q for the configured model
+  stats              fetch cloud metrics snapshot
+  version            print version
+",
+        rans_sc::version()
+    );
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match args.cmd.as_str() {
+        "serve-cloud" => cmd_serve_cloud(&args.cfg),
+        "infer" => cmd_infer(&args.cfg),
+        "compress" => cmd_compress(&args.cfg),
+        "optimize" => cmd_optimize(&args.cfg),
+        "accuracy" => cmd_accuracy(&args.cfg, &args.rest),
+        "stats" => cmd_stats(&args.cfg),
+        "version" => {
+            println!("rans-sc {}", rans_sc::version());
+            Ok(())
+        }
+        _ => {
+            help();
+            Ok(())
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

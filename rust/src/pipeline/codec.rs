@@ -1,0 +1,328 @@
+//! Pipeline compress/decompress drivers.
+
+use crate::error::{Error, Result};
+use crate::quant::{self, QuantParams};
+use crate::rans::{decode_interleaved, encode_interleaved, FreqTable};
+use crate::reshape::{self, optimizer::OptimizerConfig};
+use crate::sparse::ModCsr;
+use crate::util::stats;
+
+use super::container::Container;
+
+/// How the reshape dimension `N` is chosen.
+#[derive(Debug, Clone)]
+pub enum ReshapeStrategy {
+    /// Use a caller-supplied `N` (must divide `T`). The coordinator uses
+    /// this with its per-(T, Q) plan cache so Algorithm 1 runs once per
+    /// tensor shape, not per request.
+    Fixed(usize),
+    /// Run Algorithm 1 inline (paper defaults).
+    Optimize,
+    /// Skip reshaping: `N = T`, `K = 1` (ablation baseline).
+    Flat,
+}
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// AIQ bit-width `Q`.
+    pub q: u8,
+    /// rANS lanes.
+    pub lanes: usize,
+    /// Thread the lanes.
+    pub parallel: bool,
+    /// Reshape selection.
+    pub reshape: ReshapeStrategy,
+}
+
+impl PipelineConfig {
+    /// Paper-default configuration at bit-width `q`.
+    ///
+    /// Lane *threading* adapts to the machine: on a single-core host the
+    /// scoped-thread fan-out costs ~1 ms of pure overhead per call
+    /// (measured in `benches/perf_hotpath.rs`), so lanes are encoded
+    /// serially there; the stream format stays multi-lane either way, so
+    /// a parallel decoder can still fan out.
+    pub fn paper(q: u8) -> Self {
+        PipelineConfig {
+            q,
+            lanes: 8,
+            parallel: default_parallelism(),
+            reshape: ReshapeStrategy::Optimize,
+        }
+    }
+}
+
+/// Whether threading the rANS lanes helps on this host.
+pub fn default_parallelism() -> bool {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) > 1
+}
+
+/// Statistics from one compression call (feeds telemetry and benches).
+#[derive(Debug, Clone)]
+pub struct CompressStats {
+    /// Selected reshape rows `N`.
+    pub n_rows: usize,
+    /// Columns `K`.
+    pub n_cols: usize,
+    /// Stored nonzeros.
+    pub nnz: usize,
+    /// Entropy of `D` in bits/symbol.
+    pub entropy: f64,
+    /// Total container bytes.
+    pub total_bytes: usize,
+    /// Bytes of rANS payload only.
+    pub payload_bytes: usize,
+    /// Bytes of side information (frequency table + header).
+    pub side_info_bytes: usize,
+    /// Candidates evaluated if Algorithm 1 ran (0 for Fixed/Flat).
+    pub reshape_evaluated: usize,
+}
+
+/// Resolve the reshape strategy to a concrete `N`.
+fn resolve_n(
+    symbols: &[u16],
+    background: u16,
+    cfg: &PipelineConfig,
+) -> Result<(usize, usize)> {
+    let t = symbols.len();
+    match &cfg.reshape {
+        ReshapeStrategy::Fixed(n) => {
+            if *n == 0 || t % n != 0 {
+                return Err(Error::invalid(format!("fixed N={n} does not divide T={t}")));
+            }
+            Ok((*n, 0))
+        }
+        ReshapeStrategy::Flat => Ok((t.max(1), 0)),
+        ReshapeStrategy::Optimize => {
+            let out = reshape::optimize(symbols, background, &OptimizerConfig::paper(cfg.q))?;
+            Ok((out.best.n, out.evaluated))
+        }
+    }
+}
+
+/// Compress pre-quantized symbols (hot path; see module docs).
+pub fn compress_quantized(
+    symbols: &[u16],
+    params: QuantParams,
+    cfg: &PipelineConfig,
+) -> Result<(Vec<u8>, CompressStats)> {
+    let t = symbols.len();
+    if t == 0 {
+        return Err(Error::invalid("cannot compress empty tensor"));
+    }
+    let background = params.zero_symbol();
+    let (n_rows, reshape_evaluated) = resolve_n(symbols, background, cfg)?;
+    let k = t / n_rows;
+
+    // Modified CSR + concat (§3.1).
+    let csr = ModCsr::encode(symbols, n_rows, k, background)?;
+    let d = csr.concat();
+    let alphabet = csr.concat_alphabet(params.alphabet());
+
+    // Summed frequency table over D = v ⊕ c ⊕ r. One histogram pass
+    // serves both the normalized coding table and the entropy stat
+    // (a second O(ℓ_D) pass measured ~0.3 ms on the Fig.2 tensor).
+    let freqs = stats::histogram(&d, alphabet);
+    let entropy = stats::shannon_entropy(&freqs);
+    let table = if d.is_empty() {
+        FreqTable::from_symbols(&d, alphabet)
+    } else {
+        FreqTable::from_counts(&freqs)?
+    };
+
+    let payload = encode_interleaved(&d, &table, cfg.lanes, cfg.parallel)?;
+    let container = Container {
+        params,
+        orig_len: t,
+        n_rows,
+        nnz: csr.nnz(),
+        alphabet,
+        table,
+        payload,
+    };
+    let bytes = container.to_bytes();
+    let payload_bytes = container.payload.len();
+    let stats = CompressStats {
+        n_rows,
+        n_cols: k,
+        nnz: container.nnz,
+        entropy,
+        total_bytes: bytes.len(),
+        payload_bytes,
+        side_info_bytes: bytes.len() - payload_bytes,
+        reshape_evaluated,
+    };
+    Ok((bytes, stats))
+}
+
+/// Compress a float tensor (quantization inside).
+pub fn compress(data: &[f32], cfg: &PipelineConfig) -> Result<(Vec<u8>, CompressStats)> {
+    let params = QuantParams::fit(cfg.q, data)?;
+    let symbols = quant::quantize(data, &params);
+    compress_quantized(&symbols, params, cfg)
+}
+
+/// Decompress to quantized symbols plus the quantization parameters
+/// (cloud hot path — the tail artifact dequantizes on-device).
+pub fn decompress_to_symbols(bytes: &[u8], parallel: bool) -> Result<(Vec<u16>, QuantParams)> {
+    let c = Container::from_bytes(bytes)?;
+    let d = decode_interleaved(&c.payload, &c.table, parallel)?;
+    if d.len() != c.ell_d() {
+        return Err(Error::corrupt(format!(
+            "decoded {} symbols, expected ℓ_D = {}",
+            d.len(),
+            c.ell_d()
+        )));
+    }
+    let csr = ModCsr::from_concat(&d, c.nnz, c.n_rows, c.n_cols(), c.params.zero_symbol())?;
+    let symbols = csr.decode()?;
+    Ok((symbols, c.params))
+}
+
+/// Decompress all the way to floats.
+pub fn decompress(bytes: &[u8], parallel: bool) -> Result<Vec<f32>> {
+    let (symbols, params) = decompress_to_symbols(bytes, parallel)?;
+    Ok(quant::dequantize(&symbols, &params))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn synth_if(seed: u64, c: usize, h: usize, w: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut x = vec![0.0f32; c * h * w];
+        for ch in 0..c {
+            let act = rng.next_f64();
+            for i in 0..h * w {
+                if rng.next_f64() < 0.4 * act * 2.0 {
+                    x[ch * h * w + i] = (rng.normal().abs() as f32) * (0.3 + act as f32);
+                }
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn roundtrip_symbol_exact() {
+        // Quantized symbols must survive the pipeline bit-exactly.
+        let data = synth_if(1, 32, 14, 14);
+        for q in [2u8, 3, 4, 6, 8] {
+            let cfg = PipelineConfig::paper(q);
+            let params = QuantParams::fit(q, &data).unwrap();
+            let symbols = quant::quantize(&data, &params);
+            let (bytes, _) = compress_quantized(&symbols, params, &cfg).unwrap();
+            let (back, back_params) = decompress_to_symbols(&bytes, true).unwrap();
+            assert_eq!(back, symbols, "q={q}");
+            assert_eq!(back_params, params);
+        }
+    }
+
+    #[test]
+    fn float_roundtrip_error_bounded() {
+        let data = synth_if(2, 16, 8, 8);
+        let cfg = PipelineConfig::paper(6);
+        let (bytes, _) = compress(&data, &cfg).unwrap();
+        let back = decompress(&bytes, true).unwrap();
+        let params = QuantParams::fit(6, &data).unwrap();
+        let tol = params.scale + 1e-6;
+        for (a, b) in data.iter().zip(&back) {
+            assert!((a - b).abs() <= tol);
+        }
+        // Exact zeros must reconstruct exactly (sparsity preservation).
+        for (a, b) in data.iter().zip(&back) {
+            if *a == 0.0 {
+                assert_eq!(*b, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn compresses_sparse_features_hard() {
+        let data = synth_if(3, 64, 14, 14);
+        let raw = data.len() * 4;
+        let (bytes, stats) = compress(&data, &PipelineConfig::paper(4)).unwrap();
+        let ratio = raw as f64 / bytes.len() as f64;
+        assert!(ratio > 4.0, "ratio {ratio:.2}");
+        assert_eq!(stats.total_bytes, bytes.len());
+        assert!(stats.payload_bytes < stats.total_bytes);
+    }
+
+    #[test]
+    fn all_strategies_roundtrip() {
+        let data = synth_if(4, 8, 16, 16);
+        let t = data.len();
+        for strat in [
+            ReshapeStrategy::Optimize,
+            ReshapeStrategy::Flat,
+            ReshapeStrategy::Fixed(t / 16),
+        ] {
+            let cfg = PipelineConfig { q: 4, lanes: 4, parallel: false, reshape: strat.clone() };
+            let (bytes, _) = compress(&data, &cfg).unwrap();
+            let back = decompress(&bytes, false).unwrap();
+            assert_eq!(back.len(), t, "{strat:?}");
+        }
+    }
+
+    #[test]
+    fn optimized_not_worse_than_flat() {
+        let data = synth_if(5, 64, 14, 14);
+        let opt = compress(&data, &PipelineConfig::paper(4)).unwrap().1;
+        let flat = compress(
+            &data,
+            &PipelineConfig { reshape: ReshapeStrategy::Flat, ..PipelineConfig::paper(4) },
+        )
+        .unwrap()
+        .1;
+        assert!(
+            opt.total_bytes <= flat.total_bytes,
+            "optimize {} > flat {}",
+            opt.total_bytes,
+            flat.total_bytes
+        );
+    }
+
+    #[test]
+    fn invalid_fixed_n_rejected() {
+        let data = synth_if(6, 4, 5, 5);
+        let cfg = PipelineConfig {
+            q: 4,
+            lanes: 2,
+            parallel: false,
+            reshape: ReshapeStrategy::Fixed(7),
+        };
+        assert!(compress(&data, &cfg).is_err());
+    }
+
+    #[test]
+    fn empty_tensor_rejected() {
+        assert!(compress(&[], &PipelineConfig::paper(4)).is_err());
+    }
+
+    #[test]
+    fn smaller_q_smaller_payload() {
+        let data = synth_if(7, 32, 14, 14);
+        let mut last = usize::MAX;
+        for q in [8u8, 6, 4, 3] {
+            let (bytes, _) = compress(&data, &PipelineConfig::paper(q)).unwrap();
+            assert!(
+                bytes.len() <= last,
+                "q={q}: {} bytes > previous {last}",
+                bytes.len()
+            );
+            last = bytes.len();
+        }
+    }
+
+    #[test]
+    fn stats_are_consistent() {
+        let data = synth_if(8, 16, 14, 14);
+        let (bytes, stats) = compress(&data, &PipelineConfig::paper(4)).unwrap();
+        assert_eq!(stats.n_rows * stats.n_cols, data.len());
+        assert_eq!(stats.total_bytes, bytes.len());
+        assert_eq!(stats.side_info_bytes + stats.payload_bytes, stats.total_bytes);
+        assert!(stats.reshape_evaluated > 0); // Optimize ran
+    }
+}

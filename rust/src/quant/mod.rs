@@ -1,0 +1,17 @@
+//! Asymmetric Integer Quantization (AIQ), Eq. (6) of the paper.
+//!
+//! ```text
+//! x̂ = round(x / s + z),   s = (x_max − x_min) / (2^Q − 1),
+//! z = round(−x_min / s)
+//! ```
+//!
+//! producing symbols in `{0, …, 2^Q − 1}`. The Rust implementation
+//! mirrors the Layer-1 Pallas kernel bit-for-bit (ties-to-even rounding,
+//! saturation at the alphabet edges) so artifacts produced by either
+//! path interoperate; `python/tests/test_kernels.py` checks the Pallas
+//! kernel against the same semantics and `rust/tests` cross-check this
+//! module against values captured from the reference oracle.
+
+pub mod aiq;
+
+pub use aiq::{dequantize, quantize, QuantParams, MAX_Q, MIN_Q};

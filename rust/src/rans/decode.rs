@@ -1,0 +1,119 @@
+//! Scalar rANS decoder.
+//!
+//! Implements symbol recovery (Eq. 3) and the inverse state transition
+//! (Eq. 4):
+//!
+//! ```text
+//! slot = s_i mod 2^n ;   x_i  such that  F(x_i) ≤ slot < F(x_i + 1)
+//! s_{i-1} = f(x_i) * floor(s_i / 2^n) + slot − F(x_i)
+//! ```
+//!
+//! plus the "Decoder Side" renormalization of §2.1: whenever the state
+//! falls below `2^16`, two bytes are fetched from the stream.
+
+use crate::error::{Error, Result};
+
+use super::encode::STATE_LOWER;
+use super::freq::{FreqTable, SCALE, SCALE_BITS};
+
+/// Decode exactly `count` symbols from `bytes` under `table`.
+///
+/// `bytes` must be a stream produced by [`super::encode::encode`] with
+/// the same table; anything else yields `Error::Corrupt` (truncation) or
+/// garbage symbols that fail downstream CRC checks in the container.
+pub fn decode(bytes: &[u8], count: usize, table: &FreqTable) -> Result<Vec<u32>> {
+    if bytes.len() < 4 {
+        return Err(Error::corrupt("rANS stream shorter than state header"));
+    }
+    let mut state = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+    let mut pos = 4usize;
+    let mut out = Vec::with_capacity(count);
+    let mask = SCALE - 1;
+
+    for _ in 0..count {
+        // Eq. (3): identify the symbol from the slot.
+        let slot = state & mask;
+        let sym = table.sym_of_slot(slot);
+        let freq = table.freq_of(sym);
+        // Eq. (4): inverse transition.
+        state = freq * (state >> SCALE_BITS) + slot - table.cdf_of(sym);
+        // Renormalize.
+        while state < STATE_LOWER {
+            if pos + 2 > bytes.len() {
+                return Err(Error::corrupt("rANS stream truncated mid-renormalization"));
+            }
+            let lo = u16::from_le_bytes([bytes[pos], bytes[pos + 1]]) as u32;
+            state = (state << 16) | lo;
+            pos += 2;
+        }
+        out.push(sym);
+    }
+
+    if state != STATE_LOWER {
+        return Err(Error::corrupt(format!(
+            "rANS final state {state:#x}, expected {STATE_LOWER:#x}"
+        )));
+    }
+    if pos != bytes.len() {
+        return Err(Error::corrupt(format!(
+            "rANS stream has {} trailing bytes",
+            bytes.len() - pos
+        )));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rans::encode::encode;
+    use crate::util::prng::Rng;
+
+    fn sample_stream(seed: u64, len: usize, alphabet: usize) -> (Vec<u32>, FreqTable) {
+        let mut rng = Rng::new(seed);
+        let symbols: Vec<u32> = (0..len).map(|_| rng.zipf(alphabet, 1.1) as u32).collect();
+        let table = FreqTable::from_symbols(&symbols, alphabet);
+        (symbols, table)
+    }
+
+    #[test]
+    fn truncated_stream_detected() {
+        let (symbols, table) = sample_stream(1, 5000, 40);
+        let bytes = encode(&symbols, &table).unwrap();
+        // Header-only truncation.
+        assert!(decode(&bytes[..3], symbols.len(), &table).is_err());
+        // Drop trailing payload bytes: either truncation is detected or
+        // the final-state check fires.
+        let cut = &bytes[..bytes.len() - 2];
+        assert!(decode(cut, symbols.len(), &table).is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_detected() {
+        let (symbols, table) = sample_stream(2, 1000, 16);
+        let mut bytes = encode(&symbols, &table).unwrap();
+        bytes.extend_from_slice(&[0xAB, 0xCD]);
+        assert!(decode(&bytes, symbols.len(), &table).is_err());
+    }
+
+    #[test]
+    fn wrong_count_detected() {
+        let (symbols, table) = sample_stream(3, 1000, 16);
+        let bytes = encode(&symbols, &table).unwrap();
+        // Asking for fewer symbols leaves payload/state inconsistent.
+        assert!(decode(&bytes, symbols.len() - 1, &table).is_err());
+    }
+
+    #[test]
+    fn bitflip_detected_or_changes_output() {
+        // A flipped byte cannot silently decode to the original symbols.
+        let (symbols, table) = sample_stream(4, 2000, 32);
+        let mut bytes = encode(&symbols, &table).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        match decode(&bytes, symbols.len(), &table) {
+            Err(_) => {}
+            Ok(decoded) => assert_ne!(decoded, symbols),
+        }
+    }
+}

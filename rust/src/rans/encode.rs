@@ -1,0 +1,116 @@
+//! Scalar rANS encoder.
+//!
+//! Implements the state transition of Eq. (2):
+//!
+//! ```text
+//! s_i = floor(s_{i-1} / f(x_i)) * 2^n + F(x_i) + (s_{i-1} mod f(x_i))
+//! ```
+//!
+//! with `2^n = SCALE` and 16-bit renormalization: the state lives in
+//! `[2^16, 2^32)`; before absorbing a symbol whose frequency would push
+//! it out of range, the low 16 bits are flushed to the byte stream
+//! (the "Encoder Side" renormalization of §2.1).
+//!
+//! Symbols are consumed in *reverse* order and the emitted bytes are
+//! reversed at the end, so the decoder walks both the symbol stream and
+//! the byte stream forward — the standard LIFO→FIFO arrangement.
+
+use crate::error::{Error, Result};
+
+use super::freq::{FreqTable, SCALE_BITS};
+
+/// Lower bound of the normalized state interval (`2^16`).
+pub const STATE_LOWER: u32 = 1 << 16;
+
+/// Encode `symbols` under `table`, returning the bitstream.
+///
+/// Layout: `[4-byte final state LE] [renormalization bytes, decode order]`.
+/// An empty symbol stream encodes to the 4-byte initial state only.
+///
+/// Errors if a symbol is outside the table's alphabet or has zero
+/// normalized frequency (i.e. never occurred when the table was built).
+pub fn encode(symbols: &[u32], table: &FreqTable) -> Result<Vec<u8>> {
+    let m = table.alphabet() as u32;
+    let mut state: u32 = STATE_LOWER;
+    // Renormalization bytes are pushed in encode order (reverse of decode
+    // order) and reversed once at the end.
+    let mut rev_bytes: Vec<u8> = Vec::with_capacity(symbols.len());
+
+    for &sym in symbols.iter().rev() {
+        if sym >= m {
+            return Err(Error::codec(format!("symbol {sym} outside alphabet {m}")));
+        }
+        let freq = table.freq_of(sym);
+        if freq == 0 {
+            return Err(Error::codec(format!("symbol {sym} has zero frequency")));
+        }
+        // Renormalize: max state from which we can encode `sym` and stay
+        // below 2^32 after the transition. Computed in u64: with a
+        // full-mass symbol (freq == SCALE) the bound is exactly 2^32.
+        let x_max = (((STATE_LOWER >> SCALE_BITS) as u64) << 16) * freq as u64;
+        while state as u64 >= x_max {
+            // Push hi then lo: the final whole-stream reversal restores
+            // little-endian order within each 16-bit chunk while putting
+            // chunks in decode (reverse-encode) order.
+            rev_bytes.push(((state >> 8) & 0xFF) as u8);
+            rev_bytes.push((state & 0xFF) as u8);
+            state >>= 16;
+        }
+        // Eq. (2).
+        state = ((state / freq) << SCALE_BITS) + (state % freq) + table.cdf_of(sym);
+    }
+
+    let mut out = Vec::with_capacity(4 + rev_bytes.len());
+    out.extend_from_slice(&state.to_le_bytes());
+    out.extend(rev_bytes.iter().rev());
+    Ok(out)
+}
+
+/// Exact encoded size in bytes without materializing the stream
+/// (used by cost-model validation tests).
+pub fn encoded_len(symbols: &[u32], table: &FreqTable) -> Result<usize> {
+    encode(symbols, table).map(|v| v.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rans::decode::decode;
+
+    #[test]
+    fn empty_stream_is_header_only() {
+        let table = FreqTable::from_symbols(&[], 8);
+        let bytes = encode(&[], &table).unwrap();
+        assert_eq!(bytes.len(), 4);
+        assert_eq!(decode(&bytes, 0, &table).unwrap(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn rejects_out_of_alphabet() {
+        let table = FreqTable::from_symbols(&[0, 1, 2], 3);
+        assert!(encode(&[3], &table).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_frequency_symbol() {
+        // Symbol 2 never occurs in the training stream.
+        let table = FreqTable::from_symbols(&[0, 0, 1], 3);
+        assert!(encode(&[2], &table).is_err());
+    }
+
+    #[test]
+    fn single_symbol_stream() {
+        let table = FreqTable::from_symbols(&[5], 8);
+        let bytes = encode(&[5], &table).unwrap();
+        assert_eq!(decode(&bytes, 1, &table).unwrap(), vec![5]);
+    }
+
+    #[test]
+    fn degenerate_distribution_compresses_hard() {
+        // 10k copies of one symbol: entropy 0, so output ≈ header only.
+        let symbols = vec![3u32; 10_000];
+        let table = FreqTable::from_symbols(&symbols, 8);
+        let bytes = encode(&symbols, &table).unwrap();
+        assert!(bytes.len() <= 8, "got {} bytes", bytes.len());
+    }
+}

@@ -1,0 +1,323 @@
+//! Frequency tables for the rANS/tANS coders.
+//!
+//! The paper transmits the summed frequency vector `F` of the
+//! concatenated stream `D = v ⊕ c ⊕ r` as side information; this module
+//! owns that representation. Raw counts are normalized so they sum to
+//! `2^SCALE_BITS` (the paper's `2^n` precision), every occurring symbol
+//! keeps a nonzero share, and the decoder can rebuild CDFs and an O(1)
+//! slot→symbol table from the serialized counts alone.
+
+use crate::error::{Error, Result};
+use crate::util::varint;
+
+/// Precision of normalized frequencies: totals sum to `2^SCALE_BITS`.
+///
+/// 12 bits keeps the slot→symbol table at 4096 entries (L1-resident) and
+/// leaves 16-bit renormalization exact with a 32-bit state.
+pub const SCALE_BITS: u32 = 12;
+
+/// `2^SCALE_BITS`.
+pub const SCALE: u32 = 1 << SCALE_BITS;
+
+/// Normalized frequency table with CDF and decode lookup.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FreqTable {
+    /// Normalized frequency per symbol; sums to [`SCALE`].
+    freq: Vec<u32>,
+    /// Exclusive cumulative frequencies; `cdf[m] == SCALE`.
+    cdf: Vec<u32>,
+    /// slot → symbol, `SCALE` entries.
+    slot_to_sym: Vec<u16>,
+}
+
+impl FreqTable {
+    /// Build a table from raw (unnormalized) counts.
+    ///
+    /// `counts.len()` is the alphabet size `m` (≤ 2^16). At least one
+    /// count must be nonzero. Symbols with nonzero raw counts are
+    /// guaranteed a nonzero normalized frequency, so any symbol present
+    /// in the data remains encodable.
+    pub fn from_counts(counts: &[u64]) -> Result<Self> {
+        let m = counts.len();
+        if m == 0 {
+            return Err(Error::invalid("empty alphabet"));
+        }
+        if m > u16::MAX as usize + 1 {
+            return Err(Error::invalid(format!("alphabet {m} exceeds 65536")));
+        }
+        if m as u32 > SCALE {
+            return Err(Error::invalid(format!(
+                "alphabet {m} exceeds frequency precision {SCALE}"
+            )));
+        }
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return Err(Error::invalid("all-zero frequency counts"));
+        }
+
+        // Largest-remainder normalization to SCALE, with a floor of 1 for
+        // occurring symbols.
+        let mut freq = vec![0u32; m];
+        let mut assigned: u32 = 0;
+        let mut remainders: Vec<(f64, usize)> = Vec::with_capacity(m);
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let exact = c as f64 * SCALE as f64 / total as f64;
+            let floor = (exact.floor() as u32).max(1);
+            freq[i] = floor;
+            assigned += floor;
+            remainders.push((exact - exact.floor(), i));
+        }
+        // Distribute leftovers (or claw back overshoot) by remainder rank.
+        if assigned < SCALE {
+            let mut need = SCALE - assigned;
+            remainders.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+            let mut idx = 0;
+            while need > 0 {
+                let (_, i) = remainders[idx % remainders.len()];
+                freq[i] += 1;
+                need -= 1;
+                idx += 1;
+            }
+        } else if assigned > SCALE {
+            let mut excess = assigned - SCALE;
+            // Take from the largest frequencies first; never drop below 1.
+            let mut order: Vec<usize> = (0..m).filter(|&i| freq[i] > 1).collect();
+            order.sort_by(|&a, &b| freq[b].cmp(&freq[a]));
+            let mut idx = 0;
+            while excess > 0 {
+                if order.is_empty() {
+                    return Err(Error::codec(
+                        "cannot normalize: alphabet too large for precision",
+                    ));
+                }
+                let i = order[idx % order.len()];
+                if freq[i] > 1 {
+                    freq[i] -= 1;
+                    excess -= 1;
+                }
+                idx += 1;
+                // Periodically re-filter to drop symbols that hit 1.
+                if idx % order.len() == 0 {
+                    order.retain(|&j| freq[j] > 1);
+                }
+            }
+        }
+        debug_assert_eq!(freq.iter().sum::<u32>(), SCALE);
+        Self::from_normalized(freq)
+    }
+
+    /// Build from already-normalized frequencies (must sum to [`SCALE`]).
+    pub fn from_normalized(freq: Vec<u32>) -> Result<Self> {
+        let total: u64 = freq.iter().map(|&f| f as u64).sum();
+        if total != SCALE as u64 {
+            return Err(Error::codec(format!(
+                "normalized frequencies sum to {total}, expected {SCALE}"
+            )));
+        }
+        let m = freq.len();
+        let mut cdf = vec![0u32; m + 1];
+        for i in 0..m {
+            cdf[i + 1] = cdf[i] + freq[i];
+        }
+        let mut slot_to_sym = vec![0u16; SCALE as usize];
+        for s in 0..m {
+            for slot in cdf[s]..cdf[s + 1] {
+                slot_to_sym[slot as usize] = s as u16;
+            }
+        }
+        Ok(FreqTable { freq, cdf, slot_to_sym })
+    }
+
+    /// Histogram `symbols` over `alphabet` and normalize.
+    pub fn from_symbols(symbols: &[u32], alphabet: usize) -> Self {
+        if symbols.is_empty() {
+            // Degenerate-but-valid table: uniform over the alphabet. The
+            // encoder never consults it for zero symbols, but decode(0)
+            // needs a structurally valid table.
+            let m = alphabet.max(1);
+            let counts = vec![1u64; m];
+            return Self::from_counts(&counts).expect("uniform table is always valid");
+        }
+        let counts = crate::util::stats::histogram(symbols, alphabet);
+        Self::from_counts(&counts).expect("nonempty symbol stream yields valid table")
+    }
+
+    /// Alphabet size `m`.
+    #[inline]
+    pub fn alphabet(&self) -> usize {
+        self.freq.len()
+    }
+
+    /// Normalized frequency of `sym` (0 for never-seen symbols).
+    #[inline]
+    pub fn freq_of(&self, sym: u32) -> u32 {
+        self.freq[sym as usize]
+    }
+
+    /// Exclusive CDF (start slot) of `sym`.
+    #[inline]
+    pub fn cdf_of(&self, sym: u32) -> u32 {
+        self.cdf[sym as usize]
+    }
+
+    /// Symbol owning `slot` (`slot < SCALE`).
+    #[inline]
+    pub fn sym_of_slot(&self, slot: u32) -> u32 {
+        debug_assert!(slot < SCALE);
+        self.slot_to_sym[slot as usize] as u32
+    }
+
+    /// All normalized frequencies.
+    pub fn freqs(&self) -> &[u32] {
+        &self.freq
+    }
+
+    /// Shannon entropy (bits/symbol) implied by the *normalized* table.
+    pub fn entropy(&self) -> f64 {
+        let mut h = 0.0;
+        for &f in &self.freq {
+            if f > 0 {
+                let p = f as f64 / SCALE as f64;
+                h -= p * p.log2();
+            }
+        }
+        h
+    }
+
+    /// Serialize as varint-packed counts (side information in the
+    /// container). Layout: `m` then `m` frequencies.
+    pub fn serialize(&self, out: &mut Vec<u8>) {
+        varint::write_usize(out, self.freq.len());
+        for &f in &self.freq {
+            varint::write_u64(out, f as u64);
+        }
+    }
+
+    /// Inverse of [`FreqTable::serialize`].
+    pub fn deserialize(buf: &[u8], pos: &mut usize) -> Result<Self> {
+        let m = varint::read_usize(buf, pos)?;
+        if m == 0 || m as u32 > SCALE {
+            return Err(Error::corrupt(format!("bad alphabet size {m}")));
+        }
+        let mut freq = Vec::with_capacity(m);
+        for _ in 0..m {
+            let f = varint::read_u64(buf, pos)?;
+            if f > SCALE as u64 {
+                return Err(Error::corrupt("frequency exceeds precision"));
+            }
+            freq.push(f as u32);
+        }
+        Self::from_normalized(freq)
+    }
+
+    /// Serialized size in bytes.
+    pub fn serialized_len(&self) -> usize {
+        let mut buf = Vec::new();
+        self.serialize(&mut buf);
+        buf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn normalization_sums_to_scale() {
+        let counts = vec![5u64, 0, 3, 900, 1, 1];
+        let t = FreqTable::from_counts(&counts).unwrap();
+        assert_eq!(t.freqs().iter().sum::<u32>(), SCALE);
+        // Occurring symbols keep nonzero mass; absent symbols get none.
+        assert!(t.freq_of(0) >= 1);
+        assert_eq!(t.freq_of(1), 0);
+        assert!(t.freq_of(3) > t.freq_of(2));
+    }
+
+    #[test]
+    fn cdf_is_consistent() {
+        let counts = vec![10u64, 20, 30, 40];
+        let t = FreqTable::from_counts(&counts).unwrap();
+        for s in 0..4u32 {
+            assert_eq!(t.cdf_of(s) + t.freq_of(s), if s == 3 { SCALE } else { t.cdf_of(s + 1) });
+        }
+    }
+
+    #[test]
+    fn slot_lookup_matches_cdf() {
+        let mut rng = Rng::new(5);
+        let counts: Vec<u64> = (0..100).map(|_| rng.below(1000)).collect();
+        let t = FreqTable::from_counts(&counts).unwrap();
+        for slot in 0..SCALE {
+            let sym = t.sym_of_slot(slot);
+            assert!(t.cdf_of(sym) <= slot && slot < t.cdf_of(sym) + t.freq_of(sym));
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        assert!(FreqTable::from_counts(&[]).is_err());
+        assert!(FreqTable::from_counts(&[0, 0, 0]).is_err());
+        assert!(FreqTable::from_normalized(vec![1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn single_symbol_table() {
+        let t = FreqTable::from_counts(&[42]).unwrap();
+        assert_eq!(t.freq_of(0), SCALE);
+        assert_eq!(t.entropy(), 0.0);
+    }
+
+    #[test]
+    fn many_rare_symbols_each_keep_mass() {
+        // 3000 symbols each occurring once: below SCALE so representable.
+        let counts = vec![1u64; 3000];
+        let t = FreqTable::from_counts(&counts).unwrap();
+        assert!(t.freqs().iter().all(|&f| f >= 1));
+        assert_eq!(t.freqs().iter().sum::<u32>(), SCALE);
+    }
+
+    #[test]
+    fn alphabet_above_precision_rejected() {
+        let counts = vec![1u64; SCALE as usize + 1];
+        assert!(FreqTable::from_counts(&counts).is_err());
+    }
+
+    #[test]
+    fn serialize_roundtrip() {
+        let mut rng = Rng::new(17);
+        for _ in 0..20 {
+            let m = rng.range_u64(1, 300) as usize;
+            let counts: Vec<u64> = (0..m).map(|_| rng.below(10_000)).collect();
+            if counts.iter().all(|&c| c == 0) {
+                continue;
+            }
+            let t = FreqTable::from_counts(&counts).unwrap();
+            let mut buf = Vec::new();
+            t.serialize(&mut buf);
+            let mut pos = 0;
+            let back = FreqTable::deserialize(&buf, &mut pos).unwrap();
+            assert_eq!(back, t);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn deserialize_rejects_bad_sum() {
+        let mut buf = Vec::new();
+        varint::write_usize(&mut buf, 2);
+        varint::write_u64(&mut buf, 100);
+        varint::write_u64(&mut buf, 100);
+        let mut pos = 0;
+        assert!(FreqTable::deserialize(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn entropy_of_uniform_table() {
+        let t = FreqTable::from_counts(&vec![7u64; 16]).unwrap();
+        assert!((t.entropy() - 4.0).abs() < 1e-9);
+    }
+}

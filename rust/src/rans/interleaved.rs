@@ -1,0 +1,237 @@
+//! Multi-lane interleaved rANS.
+//!
+//! The paper reports sub-millisecond encode/decode by running rANS on the
+//! GPU; the parallel decomposition used there (and in DietGPU) is a set
+//! of *independent coder states*, each owning a slice of the symbol
+//! stream, whose outputs are concatenated with per-lane offsets. This
+//! module is the CPU analogue: `lanes` scalar coders over contiguous
+//! chunks, fanned out across threads. All lanes share one frequency
+//! table, exactly like the paper's single summed table for `D = v⊕c⊕r`.
+//!
+//! Stream layout (after the container header, which stores the table):
+//!
+//! ```text
+//! [varint lane_count] [varint symbol_count]
+//! [varint byte_len × lane_count]            // per-lane payload sizes
+//! [lane 0 payload] [lane 1 payload] ...
+//! ```
+
+use crate::error::{Error, Result};
+use crate::util::varint;
+
+use super::decode::decode;
+use super::encode::encode;
+use super::freq::FreqTable;
+
+/// Maximum supported lanes (sanity bound for header validation).
+pub const MAX_LANES: usize = 1024;
+
+/// A parsed interleaved stream header (borrowed payloads).
+#[derive(Debug)]
+pub struct InterleavedStream<'a> {
+    /// Total symbol count across lanes.
+    pub symbol_count: usize,
+    /// Per-lane (symbol_count, payload) pairs.
+    pub lanes: Vec<(usize, &'a [u8])>,
+}
+
+/// Split `count` symbols into `lanes` near-equal contiguous chunks.
+/// Every lane gets `count / lanes` symbols and the first `count % lanes`
+/// lanes get one extra — identical partitioning on encode and decode.
+pub fn lane_spans(count: usize, lanes: usize) -> Vec<std::ops::Range<usize>> {
+    let lanes = lanes.max(1);
+    let base = count / lanes;
+    let extra = count % lanes;
+    let mut spans = Vec::with_capacity(lanes);
+    let mut start = 0;
+    for i in 0..lanes {
+        let len = base + usize::from(i < extra);
+        spans.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, count);
+    spans
+}
+
+/// Encode `symbols` with `lanes` independent rANS states.
+///
+/// `parallel` controls whether lanes run on scoped threads (the hot-path
+/// configuration) or sequentially (deterministic profiling baseline);
+/// both produce byte-identical output.
+pub fn encode_interleaved(
+    symbols: &[u32],
+    table: &FreqTable,
+    lanes: usize,
+    parallel: bool,
+) -> Result<Vec<u8>> {
+    let lanes = lanes.clamp(1, MAX_LANES);
+    let spans = lane_spans(symbols.len(), lanes);
+
+    let payloads: Vec<Result<Vec<u8>>> = if parallel && lanes > 1 {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = spans
+                .iter()
+                .map(|span| {
+                    let chunk = &symbols[span.clone()];
+                    scope.spawn(move || encode(chunk, table))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("lane panicked")).collect()
+        })
+    } else {
+        spans.iter().map(|span| encode(&symbols[span.clone()], table)).collect()
+    };
+
+    let mut out = Vec::new();
+    varint::write_usize(&mut out, lanes);
+    varint::write_usize(&mut out, symbols.len());
+    let mut bufs = Vec::with_capacity(lanes);
+    for p in payloads {
+        let p = p?;
+        varint::write_usize(&mut out, p.len());
+        bufs.push(p);
+    }
+    for b in &bufs {
+        out.extend_from_slice(b);
+    }
+    Ok(out)
+}
+
+/// Parse the interleaved header, borrowing lane payloads from `bytes`.
+pub fn parse_stream<'a>(bytes: &'a [u8]) -> Result<InterleavedStream<'a>> {
+    let mut pos = 0usize;
+    let lanes = varint::read_usize(bytes, &mut pos)?;
+    if lanes == 0 || lanes > MAX_LANES {
+        return Err(Error::corrupt(format!("bad lane count {lanes}")));
+    }
+    let symbol_count = varint::read_usize(bytes, &mut pos)?;
+    let mut lens = Vec::with_capacity(lanes);
+    for _ in 0..lanes {
+        lens.push(varint::read_usize(bytes, &mut pos)?);
+    }
+    let spans = lane_spans(symbol_count, lanes);
+    let mut out = Vec::with_capacity(lanes);
+    for (i, len) in lens.into_iter().enumerate() {
+        let end = pos
+            .checked_add(len)
+            .ok_or_else(|| Error::corrupt("lane length overflow"))?;
+        if end > bytes.len() {
+            return Err(Error::corrupt("lane payload truncated"));
+        }
+        out.push((spans[i].len(), &bytes[pos..end]));
+        pos = end;
+    }
+    if pos != bytes.len() {
+        return Err(Error::corrupt("trailing bytes after last lane"));
+    }
+    Ok(InterleavedStream { symbol_count, lanes: out })
+}
+
+/// Decode an interleaved stream produced by [`encode_interleaved`].
+pub fn decode_interleaved(bytes: &[u8], table: &FreqTable, parallel: bool) -> Result<Vec<u32>> {
+    let stream = parse_stream(bytes)?;
+    let decoded: Vec<Result<Vec<u32>>> = if parallel && stream.lanes.len() > 1 {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = stream
+                .lanes
+                .iter()
+                .map(|&(count, payload)| scope.spawn(move || decode(payload, count, table)))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("lane panicked")).collect()
+        })
+    } else {
+        stream
+            .lanes
+            .iter()
+            .map(|&(count, payload)| decode(payload, count, table))
+            .collect()
+    };
+
+    let mut out = Vec::with_capacity(stream.symbol_count);
+    for d in decoded {
+        out.extend(d?);
+    }
+    debug_assert_eq!(out.len(), stream.symbol_count);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn sample(seed: u64, len: usize, alphabet: usize) -> (Vec<u32>, FreqTable) {
+        let mut rng = Rng::new(seed);
+        let symbols: Vec<u32> = (0..len).map(|_| rng.zipf(alphabet, 1.2) as u32).collect();
+        let table = FreqTable::from_symbols(&symbols, alphabet);
+        (symbols, table)
+    }
+
+    #[test]
+    fn lane_spans_partition() {
+        for (count, lanes) in [(10, 3), (0, 4), (7, 7), (5, 8), (100, 1)] {
+            let spans = lane_spans(count, lanes);
+            assert_eq!(spans.len(), lanes.max(1));
+            let total: usize = spans.iter().map(|s| s.len()).sum();
+            assert_eq!(total, count);
+            for w in spans.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_various_lane_counts() {
+        let (symbols, table) = sample(1, 10_000, 64);
+        for lanes in [1, 2, 3, 8, 16] {
+            for parallel in [false, true] {
+                let bytes = encode_interleaved(&symbols, &table, lanes, parallel).unwrap();
+                let back = decode_interleaved(&bytes, &table, parallel).unwrap();
+                assert_eq!(back, symbols, "lanes={lanes} parallel={parallel}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_and_serial_are_byte_identical() {
+        let (symbols, table) = sample(2, 50_000, 128);
+        let a = encode_interleaved(&symbols, &table, 8, false).unwrap();
+        let b = encode_interleaved(&symbols, &table, 8, true).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn more_lanes_than_symbols() {
+        let (symbols, table) = sample(3, 5, 8);
+        let bytes = encode_interleaved(&symbols, &table, 16, true).unwrap();
+        assert_eq!(decode_interleaved(&bytes, &table, true).unwrap(), symbols);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let table = FreqTable::from_symbols(&[], 4);
+        let bytes = encode_interleaved(&[], &table, 4, true).unwrap();
+        assert_eq!(decode_interleaved(&bytes, &table, true).unwrap(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn interleaving_overhead_is_small() {
+        // Header + per-lane state words only: ~6 bytes per extra lane.
+        let (symbols, table) = sample(4, 100_000, 32);
+        let one = encode_interleaved(&symbols, &table, 1, false).unwrap().len();
+        let eight = encode_interleaved(&symbols, &table, 8, false).unwrap().len();
+        assert!(eight < one + 8 * 16, "1 lane {one}B vs 8 lanes {eight}B");
+    }
+
+    #[test]
+    fn corrupt_headers_rejected() {
+        let (symbols, table) = sample(5, 100, 8);
+        let bytes = encode_interleaved(&symbols, &table, 2, false).unwrap();
+        assert!(parse_stream(&bytes[..1]).is_err());
+        let mut garbled = bytes.clone();
+        garbled[0] = 0xFF; // lane count varint → huge
+        assert!(decode_interleaved(&garbled, &table, false).is_err());
+        let truncated = &bytes[..bytes.len() - 1];
+        assert!(decode_interleaved(truncated, &table, false).is_err());
+    }
+}

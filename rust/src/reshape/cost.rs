@@ -1,0 +1,176 @@
+//! The approximate cost model `T_tot(N) = ℓ_D · H(p(N))` (Eq. 7).
+//!
+//! For a candidate reshape `N`, the model performs the actual CSR
+//! encoding of the quantized symbols (O(T), as in Algorithm 1 line 8),
+//! histograms the concatenated stream `D = v ⊕ c ⊕ r`, and evaluates the
+//! Shannon entropy. `α_enc`/`α_dec` from Eq. 7 are carried for
+//! completeness but default to the paper's Algorithm-1 setting of 0 —
+//! Fig. 3 shows encode/decode latency is N-invariant on parallel
+//! hardware, so they do not move the argmin.
+
+use crate::error::Result;
+use crate::sparse::ModCsr;
+use crate::util::stats;
+
+/// Cost-model evaluation at one reshape dimension.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReshapeCost {
+    /// Rows `N`.
+    pub n: usize,
+    /// Columns `K = T/N`.
+    pub k: usize,
+    /// Stored nonzeros.
+    pub nnz: usize,
+    /// Length of the concatenated stream `ℓ_D = 2·nnz + N`.
+    pub ell_d: usize,
+    /// Alphabet of `D` (`max(2^Q, K, max row count + 1)`).
+    pub alphabet: usize,
+    /// Shannon entropy of `D`, bits/symbol.
+    pub entropy: f64,
+    /// `T_tot(N)` in bits: `ℓ_D · H` plus the (default-zero) latency terms.
+    pub t_tot_bits: f64,
+}
+
+impl ReshapeCost {
+    /// Model-predicted compressed size in bytes (excluding headers).
+    pub fn predicted_bytes(&self) -> f64 {
+        self.t_tot_bits / 8.0
+    }
+}
+
+/// Latency constants of Eq. 7. Defaults reproduce Algorithm 1
+/// (`α_enc = α_dec = 0`).
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyTerms {
+    /// Weight on the encode-time term.
+    pub alpha_enc: f64,
+    /// Weight on the decode-time term.
+    pub alpha_dec: f64,
+    /// Measured per-call encode latency proxy, bits-equivalent.
+    pub t_enc: f64,
+    /// Measured per-call decode latency proxy, bits-equivalent.
+    pub t_dec: f64,
+}
+
+impl Default for LatencyTerms {
+    fn default() -> Self {
+        LatencyTerms { alpha_enc: 0.0, alpha_dec: 0.0, t_enc: 0.0, t_dec: 0.0 }
+    }
+}
+
+/// Evaluate the cost model at reshape `N` for quantized `symbols`.
+///
+/// * `background` — the AIQ zero symbol (implicit zero of the CSR).
+/// * `value_alphabet` — `2^Q`.
+pub fn evaluate(
+    symbols: &[u16],
+    n: usize,
+    background: u16,
+    value_alphabet: usize,
+    lat: &LatencyTerms,
+) -> Result<ReshapeCost> {
+    let t = symbols.len();
+    let k = t / n.max(1);
+    let csr = ModCsr::encode(symbols, n, k, background)?;
+    let d = csr.concat();
+    let alphabet = csr.concat_alphabet(value_alphabet);
+    let freqs = stats::histogram(&d, alphabet);
+    let entropy = stats::shannon_entropy(&freqs);
+    let ell_d = d.len();
+    let t_tot_bits =
+        ell_d as f64 * entropy + lat.alpha_enc * lat.t_enc + lat.alpha_dec * lat.t_dec;
+    Ok(ReshapeCost { n, k, nnz: csr.nnz(), ell_d, alphabet, entropy, t_tot_bits })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize, QuantParams};
+    use crate::util::prng::Rng;
+
+    /// Synthesize a post-ReLU-like IF: sparse, positive, channel-skewed.
+    pub(crate) fn synth_feature(seed: u64, c: usize, h: usize, w: usize, density: f64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut out = vec![0.0f32; c * h * w];
+        for ch in 0..c {
+            // Per-channel activity level: some channels nearly silent.
+            let act = rng.next_f64();
+            for i in 0..h * w {
+                if rng.next_f64() < density * act * 2.0 {
+                    out[ch * h * w + i] = (rng.normal().abs() as f32) * (0.5 + act as f32);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn ell_d_formula_holds() {
+        let x = synth_feature(1, 16, 8, 8, 0.4);
+        let p = QuantParams::fit(4, &x).unwrap();
+        let syms = quantize(&x, &p);
+        let cost = evaluate(&syms, 64, p.zero_symbol(), p.alphabet(), &LatencyTerms::default())
+            .unwrap();
+        assert_eq!(cost.ell_d, 2 * cost.nnz + 64);
+        assert_eq!(cost.k, 16);
+    }
+
+    #[test]
+    fn entropy_zero_for_constant_tensor() {
+        let syms = vec![0u16; 256];
+        let cost =
+            evaluate(&syms, 16, 0, 16, &LatencyTerms::default()).unwrap();
+        // All background → D = r only (all zero counts) → zero entropy.
+        assert_eq!(cost.nnz, 0);
+        assert_eq!(cost.t_tot_bits, 0.0);
+    }
+
+    #[test]
+    fn non_divisor_reshape_fails() {
+        let syms = vec![1u16; 100];
+        assert!(evaluate(&syms, 7, 0, 16, &LatencyTerms::default()).is_err());
+    }
+
+    #[test]
+    fn cost_varies_with_n() {
+        // The whole point of §3.2: different N, different T_tot.
+        let x = synth_feature(2, 32, 14, 14, 0.3);
+        let p = QuantParams::fit(4, &x).unwrap();
+        let syms = quantize(&x, &p);
+        let t = syms.len();
+        let lat = LatencyTerms::default();
+        let costs: Vec<f64> = [t / 128, t / 16, t / 4]
+            .iter()
+            .map(|&n| evaluate(&syms, n, p.zero_symbol(), 16, &lat).unwrap().t_tot_bits)
+            .collect();
+        assert!(
+            costs.windows(2).any(|w| (w[0] - w[1]).abs() > 1.0),
+            "cost should depend on N: {costs:?}"
+        );
+    }
+
+    #[test]
+    fn model_tracks_actual_rans_size() {
+        // The predicted size must be within ~15% of the real bitstream
+        // (paper reports close tracking in Fig. 4).
+        let x = synth_feature(3, 64, 14, 14, 0.35);
+        let p = QuantParams::fit(4, &x).unwrap();
+        let syms = quantize(&x, &p);
+        let n = syms.len() / 16;
+        let cost =
+            evaluate(&syms, n, p.zero_symbol(), p.alphabet(), &LatencyTerms::default()).unwrap();
+
+        let csr = ModCsr::encode(&syms, n, 16, p.zero_symbol()).unwrap();
+        let d = csr.concat();
+        let table = crate::rans::FreqTable::from_symbols(&d, cost.alphabet);
+        let bytes = crate::rans::encode(&d, &table).unwrap();
+        let actual_bits = bytes.len() as f64 * 8.0;
+        let ratio = actual_bits / cost.t_tot_bits.max(1.0);
+        assert!(
+            (0.85..1.15).contains(&ratio),
+            "model {} bits vs actual {} bits (ratio {ratio})",
+            cost.t_tot_bits,
+            actual_bits
+        );
+    }
+}

@@ -1,0 +1,101 @@
+//! Divisor enumeration for the reshape search domain.
+//!
+//! Both `N` and `K = T/N` must be integers, so candidates are exactly
+//! the divisors of `T`. `|D(T)|` is tiny relative to `T` (the paper's
+//! complexity analysis leans on this), so trial division to `√T` is
+//! more than fast enough for IF-sized tensors.
+
+/// All divisors of `t` in ascending order. `divisors(0)` is empty.
+pub fn divisors(t: usize) -> Vec<usize> {
+    if t == 0 {
+        return Vec::new();
+    }
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut d = 1usize;
+    while d * d <= t {
+        if t % d == 0 {
+            small.push(d);
+            if d != t / d {
+                large.push(t / d);
+            }
+        }
+        d += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+/// Divisors of `t` inside `[lo, hi]`, ascending.
+pub fn divisors_in(t: usize, lo: usize, hi: usize) -> Vec<usize> {
+    divisors(t).into_iter().filter(|&d| d >= lo && d <= hi).collect()
+}
+
+/// Integer square root (floor).
+pub fn isqrt(t: usize) -> usize {
+    if t == 0 {
+        return 0;
+    }
+    let mut x = (t as f64).sqrt() as usize;
+    // Correct float rounding in both directions.
+    while x.saturating_mul(x) > t {
+        x -= 1;
+    }
+    while (x + 1).saturating_mul(x + 1) <= t {
+        x += 1;
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divisors_of_small_numbers() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(13), vec![1, 13]);
+        assert!(divisors(0).is_empty());
+    }
+
+    #[test]
+    fn divisors_are_sorted_and_complete() {
+        for t in [36usize, 100, 97, 1024, 100352] {
+            let ds = divisors(t);
+            assert!(ds.windows(2).all(|w| w[0] < w[1]));
+            for &d in &ds {
+                assert_eq!(t % d, 0);
+            }
+            // Complete: brute force check.
+            let brute: Vec<usize> = (1..=t).filter(|d| t % d == 0).collect();
+            assert_eq!(ds, brute, "t={t}");
+        }
+    }
+
+    #[test]
+    fn paper_example_tensor() {
+        // Fig. 2 uses T = 128·28·28 = 100352 with N ∈ {784, 1792, 6272, 14336}.
+        let t = 128 * 28 * 28;
+        let ds = divisors(t);
+        for n in [784usize, 1792, 6272, 14336] {
+            assert!(ds.contains(&n), "N={n} should divide {t}");
+        }
+    }
+
+    #[test]
+    fn range_filter() {
+        assert_eq!(divisors_in(12, 3, 6), vec![3, 4, 6]);
+        assert!(divisors_in(12, 13, 20).is_empty());
+    }
+
+    #[test]
+    fn isqrt_exact() {
+        for t in 0..2000usize {
+            let r = isqrt(t);
+            assert!(r * r <= t && (r + 1) * (r + 1) > t, "t={t} r={r}");
+        }
+        assert_eq!(isqrt(100352), 316);
+    }
+}

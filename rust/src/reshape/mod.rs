@@ -1,0 +1,20 @@
+//! Reshape-dimension optimization (§3.2–3.3).
+//!
+//! Reshaping the flat IF tensor `X ∈ R^T` to `X' ∈ R^{N×K}` changes the
+//! distribution of the CSR arrays (`c` spans `{0..K-1}`, `r` spans
+//! `{0..K}`), hence the entropy of the concatenated stream `D` and the
+//! rANS bitstream size. This module implements:
+//!
+//! * [`divisors`] — enumeration of valid `N` (`N | T`),
+//! * [`cost`] — the cost model `T_tot(N) = ℓ_D · H(p(N))` (Eq. 7),
+//! * [`optimizer`] — Algorithm 1 (approximate enumeration with domain
+//!   restrictions `N > √T`, `K ≤ 2^Q` and early stopping) plus the
+//!   exhaustive oracle `N*` used to validate the `Ñ ≈ N*` claim (Fig. 4).
+
+pub mod cost;
+pub mod divisors;
+pub mod optimizer;
+
+pub use cost::{evaluate, ReshapeCost};
+pub use divisors::divisors;
+pub use optimizer::{exhaustive_search, optimize, OptimizerConfig, SearchOutcome};

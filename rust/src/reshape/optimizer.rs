@@ -1,0 +1,273 @@
+//! Algorithm 1 — approximate enumeration for the optimal reshape `Ñ`.
+//!
+//! Domain restrictions (§3.3):
+//! 1. `N > √T` (more rows than columns preserves row-compression),
+//! 2. `K = T/N ≤ 2^Q` (otherwise the alphabet of `c` inflates),
+//! 3. `N | T`.
+//!
+//! Candidates are walked in *descending* N; the loop stops early once
+//! `T_tot(N)` increases relative to the previous iteration (the cost is
+//! empirically near-unimodal over the constrained domain). A `patience`
+//! knob generalizes the paper's immediate break (`patience = 1`) for the
+//! ablation bench.
+
+use crate::error::{Error, Result};
+
+use super::cost::{evaluate, LatencyTerms, ReshapeCost};
+use super::divisors::{divisors, isqrt};
+
+/// Configuration of the Algorithm-1 search.
+#[derive(Debug, Clone)]
+pub struct OptimizerConfig {
+    /// Quantization bit-width `Q` (bounds `K ≤ 2^Q`).
+    pub q: u8,
+    /// Consecutive cost increases tolerated before stopping (paper: 1).
+    pub patience: usize,
+    /// Enforce restriction 1 (`N > √T`). On by default; the ablation
+    /// bench disables it to measure what the restriction buys.
+    pub enforce_tall: bool,
+    /// Enforce restriction 2 (`K ≤ 2^Q`).
+    pub enforce_alphabet_cap: bool,
+    /// Latency terms of Eq. 7 (default zero).
+    pub latency: LatencyTerms,
+}
+
+impl OptimizerConfig {
+    /// Paper-default configuration for bit-width `q`.
+    pub fn paper(q: u8) -> Self {
+        OptimizerConfig {
+            q,
+            patience: 1,
+            enforce_tall: true,
+            enforce_alphabet_cap: true,
+            latency: LatencyTerms::default(),
+        }
+    }
+}
+
+/// Result of a reshape search.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    /// The selected reshape and its cost breakdown.
+    pub best: ReshapeCost,
+    /// Number of candidate `N` values actually evaluated.
+    pub evaluated: usize,
+    /// Number of candidates in the (constrained) domain.
+    pub domain_size: usize,
+    /// Every evaluated candidate, in visit order (for Fig. 4 curves).
+    pub trace: Vec<ReshapeCost>,
+}
+
+/// Lower bound of the constrained domain:
+/// `N_min = max(⌊√T⌋ + 1, ⌈T / 2^Q⌉)` (Algorithm 1 line 2).
+pub fn n_min(t: usize, q: u8, enforce_tall: bool, enforce_cap: bool) -> usize {
+    let mut lo = 1usize;
+    if enforce_tall {
+        lo = lo.max(isqrt(t) + 1);
+    }
+    if enforce_cap {
+        let cap = 1usize << q;
+        lo = lo.max(t.div_ceil(cap));
+    }
+    lo
+}
+
+/// The constrained candidate list for `t`, ascending.
+pub fn candidate_domain(t: usize, cfg: &OptimizerConfig) -> Vec<usize> {
+    let lo = n_min(t, cfg.q, cfg.enforce_tall, cfg.enforce_alphabet_cap);
+    divisors(t).into_iter().filter(|&n| n >= lo).collect()
+}
+
+/// Algorithm 1: approximate search for `Ñ`.
+///
+/// `symbols` is the AIQ-quantized flat tensor, `background` its zero
+/// symbol. Returns the best candidate found before early stopping.
+pub fn optimize(symbols: &[u16], background: u16, cfg: &OptimizerConfig) -> Result<SearchOutcome> {
+    let t = symbols.len();
+    if t == 0 {
+        return Err(Error::invalid("cannot optimize reshape of empty tensor"));
+    }
+    let value_alphabet = 1usize << cfg.q;
+    let domain = candidate_domain(t, cfg);
+    if domain.is_empty() {
+        return Err(Error::invalid(format!(
+            "no valid reshape for T={t}, Q={}: domain empty",
+            cfg.q
+        )));
+    }
+
+    let mut best: Option<ReshapeCost> = None;
+    let mut prev_cost = f64::INFINITY;
+    let mut rises = 0usize;
+    let mut trace = Vec::new();
+
+    // Descending N (Algorithm 1 line 4).
+    for &n in domain.iter().rev() {
+        let cost = evaluate(symbols, n, background, value_alphabet, &cfg.latency)?;
+        let tt = cost.t_tot_bits;
+        trace.push(cost.clone());
+        if best.as_ref().map_or(true, |b| tt < b.t_tot_bits) {
+            best = Some(cost);
+        }
+        if tt > prev_cost {
+            rises += 1;
+            if rises >= cfg.patience {
+                break;
+            }
+        } else {
+            rises = 0;
+        }
+        prev_cost = tt;
+    }
+
+    Ok(SearchOutcome {
+        best: best.expect("domain nonempty implies at least one candidate"),
+        evaluated: trace.len(),
+        domain_size: domain.len(),
+        trace,
+    })
+}
+
+/// Exhaustive oracle `N*`: evaluates *every* divisor in the (optionally
+/// constrained) domain. Used by Fig. 4 to measure the `Ñ` vs `N*` gap.
+pub fn exhaustive_search(
+    symbols: &[u16],
+    background: u16,
+    cfg: &OptimizerConfig,
+    constrained: bool,
+) -> Result<SearchOutcome> {
+    let t = symbols.len();
+    if t == 0 {
+        return Err(Error::invalid("cannot optimize reshape of empty tensor"));
+    }
+    let value_alphabet = 1usize << cfg.q;
+    let domain: Vec<usize> = if constrained {
+        candidate_domain(t, cfg)
+    } else {
+        divisors(t)
+    };
+    if domain.is_empty() {
+        return Err(Error::invalid("empty search domain"));
+    }
+    let mut best: Option<ReshapeCost> = None;
+    let mut trace = Vec::with_capacity(domain.len());
+    for &n in domain.iter().rev() {
+        let cost = evaluate(symbols, n, background, value_alphabet, &cfg.latency)?;
+        if best.as_ref().map_or(true, |b| cost.t_tot_bits < b.t_tot_bits) {
+            best = Some(cost.clone());
+        }
+        trace.push(cost);
+    }
+    Ok(SearchOutcome {
+        best: best.unwrap(),
+        evaluated: trace.len(),
+        domain_size: domain.len(),
+        trace,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize, QuantParams};
+    use crate::util::prng::Rng;
+
+    fn quantized_feature(seed: u64, c: usize, h: usize, w: usize, q: u8) -> (Vec<u16>, u16) {
+        let mut rng = Rng::new(seed);
+        let mut x = vec![0.0f32; c * h * w];
+        for ch in 0..c {
+            let act = rng.next_f64();
+            for i in 0..h * w {
+                if rng.next_f64() < 0.35 * act * 2.0 {
+                    x[ch * h * w + i] = (rng.normal().abs() as f32) * (0.5 + act as f32);
+                }
+            }
+        }
+        let p = QuantParams::fit(q, &x).unwrap();
+        (quantize(&x, &p), p.zero_symbol())
+    }
+
+    #[test]
+    fn domain_respects_restrictions() {
+        let t = 128 * 28 * 28; // 100352
+        let cfg = OptimizerConfig::paper(4);
+        let domain = candidate_domain(t, &cfg);
+        let sqrt_t = isqrt(t);
+        for &n in &domain {
+            assert!(n > sqrt_t, "N={n} violates N > √T");
+            assert!(t / n <= 16, "K={} violates K ≤ 2^Q", t / n);
+            assert_eq!(t % n, 0);
+        }
+        // T/2^Q = 6272 dominates √T here.
+        assert_eq!(*domain.first().unwrap(), 6272);
+    }
+
+    #[test]
+    fn n_min_both_branches() {
+        // Small Q: alphabet cap binds. Large Q: √T binds.
+        assert_eq!(n_min(100, 2, true, true), 25); // ceil(100/4)=25 > 11
+        assert_eq!(n_min(100, 8, true, true), 11); // √100+1
+        assert_eq!(n_min(100, 8, false, true), 1);
+        assert_eq!(n_min(100, 8, false, false), 1);
+    }
+
+    #[test]
+    fn optimizer_matches_oracle_closely() {
+        // The paper reports Ñ within 2–3% of N* on compression size.
+        for seed in 0..4u64 {
+            let (syms, bg) = quantized_feature(seed, 32, 14, 14, 4);
+            let cfg = OptimizerConfig::paper(4);
+            let approx = optimize(&syms, bg, &cfg).unwrap();
+            let oracle = exhaustive_search(&syms, bg, &cfg, true).unwrap();
+            let gap = approx.best.t_tot_bits / oracle.best.t_tot_bits.max(1e-9);
+            assert!(gap <= 1.05, "seed {seed}: gap {gap}");
+            assert!(approx.evaluated <= oracle.evaluated);
+        }
+    }
+
+    #[test]
+    fn early_stopping_prunes_work() {
+        let (syms, bg) = quantized_feature(99, 64, 14, 14, 4);
+        let cfg = OptimizerConfig::paper(4);
+        let approx = optimize(&syms, bg, &cfg).unwrap();
+        // Must have terminated before scanning the whole domain in the
+        // typical case; tolerate equality for unusually monotone costs.
+        assert!(approx.evaluated <= approx.domain_size);
+    }
+
+    #[test]
+    fn patience_increases_coverage() {
+        let (syms, bg) = quantized_feature(5, 32, 8, 8, 4);
+        let mut c1 = OptimizerConfig::paper(4);
+        c1.patience = 1;
+        let mut c3 = OptimizerConfig::paper(4);
+        c3.patience = 3;
+        let r1 = optimize(&syms, bg, &c1).unwrap();
+        let r3 = optimize(&syms, bg, &c3).unwrap();
+        assert!(r3.evaluated >= r1.evaluated);
+        assert!(r3.best.t_tot_bits <= r1.best.t_tot_bits);
+    }
+
+    #[test]
+    fn empty_tensor_rejected() {
+        assert!(optimize(&[], 0, &OptimizerConfig::paper(4)).is_err());
+    }
+
+    #[test]
+    fn prime_t_still_has_trivial_reshape() {
+        // T prime → only N = T survives the constraints (K = 1).
+        let (syms, bg) = quantized_feature(7, 1, 1, 97, 4);
+        let out = optimize(&syms, bg, &OptimizerConfig::paper(4)).unwrap();
+        assert_eq!(out.best.n, 97);
+        assert_eq!(out.best.k, 1);
+    }
+
+    #[test]
+    fn trace_is_descending_in_n() {
+        let (syms, bg) = quantized_feature(11, 16, 8, 8, 4);
+        let out = optimize(&syms, bg, &OptimizerConfig::paper(4)).unwrap();
+        for w in out.trace.windows(2) {
+            assert!(w[0].n > w[1].n);
+        }
+    }
+}

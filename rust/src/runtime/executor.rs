@@ -1,0 +1,137 @@
+//! Thin PJRT wrapper over the `xla` crate.
+//!
+//! HLO *text* is the interchange format (see python/compile/hlo.py and
+//! /opt/xla-example/README.md): jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids. All exported computations return tuples
+//! (`return_tuple=True`), so execution uniformly unwraps a tuple.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+fn xerr(context: &str) -> impl Fn(xla::Error) -> Error + '_ {
+    move |e| Error::runtime(format!("{context}: {e}"))
+}
+
+/// A PJRT client (CPU in this environment).
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+// SAFETY: the PJRT C API is thread-safe by contract (clients and loaded
+// executables may be used from multiple threads; the CPU plugin
+// dispatches onto its own thread pool). The `xla` crate wraps the client
+// in an `Rc` purely for cheap intra-thread cloning — we never clone the
+// Rc across threads, only share the owning struct behind `Arc`, and all
+// executions additionally serialize through the per-executable mutex in
+// [`Executable::run`].
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Construct the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(xerr("PjRtClient::cpu"))?;
+        Ok(Engine { client })
+    }
+
+    /// Platform string (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Err(Error::artifact(format!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(xerr("HloModuleProto::from_text_file"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(xerr("compile"))?;
+        Ok(Executable {
+            exe,
+            path: path.display().to_string(),
+            run_lock: std::sync::Mutex::new(()),
+        })
+    }
+}
+
+/// A compiled computation ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    path: String,
+    /// Serializes `run` calls; see the safety note on [`Engine`].
+    run_lock: std::sync::Mutex<()>,
+}
+
+// SAFETY: see the note on `Engine`; `run` is additionally serialized by
+// `run_lock`, so the wrapped raw executable pointer is never used
+// concurrently.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Source artifact path (diagnostics).
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// Execute with literal inputs; unwraps the output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let _guard = self.run_lock.lock().unwrap();
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(xerr(&format!("execute {}", self.path)))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(xerr("to_literal_sync"))?;
+        lit.to_tuple().map_err(xerr("to_tuple"))
+    }
+}
+
+// ------------------------------------------------------------ literals
+
+/// Build an f32 literal of the given dims.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(Error::invalid(format!("{} elements for dims {dims:?}", data.len())));
+    }
+    xla::Literal::vec1(data).reshape(dims).map_err(xerr("reshape"))
+}
+
+/// Build an i32 literal of the given dims.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(Error::invalid(format!("{} elements for dims {dims:?}", data.len())));
+    }
+    xla::Literal::vec1(data).reshape(dims).map_err(xerr("reshape"))
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract an f32 vector.
+pub fn to_f32s(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(xerr("to_vec<f32>"))
+}
+
+/// Extract an i32 vector.
+pub fn to_i32s(lit: &xla::Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().map_err(xerr("to_vec<i32>"))
+}
+
+/// Extract a scalar f32.
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(xerr("get_first_element"))
+}

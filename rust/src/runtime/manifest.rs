@@ -1,0 +1,303 @@
+//! Typed view of `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+/// Artifact paths of one head/tail pair (quantized + raw variants).
+#[derive(Debug, Clone)]
+pub struct ArtifactPaths {
+    /// Quantized head (Pallas quantize epilogue).
+    pub head: String,
+    /// Quantized tail (Pallas dequantize prologue).
+    pub tail: String,
+    /// Raw float head (baseline path).
+    pub head_raw: String,
+    /// Raw float tail (baseline path).
+    pub tail_raw: String,
+}
+
+impl ArtifactPaths {
+    fn parse(v: &Value) -> Result<Self> {
+        Ok(ArtifactPaths {
+            head: v.str_field("head")?.to_string(),
+            tail: v.str_field("tail")?.to_string(),
+            head_raw: v.str_field("head_raw")?.to_string(),
+            tail_raw: v.str_field("tail_raw")?.to_string(),
+        })
+    }
+}
+
+/// One exported split of a vision model.
+#[derive(Debug, Clone)]
+pub struct SplitEntry {
+    /// Split layer index (SL1–SL4).
+    pub sl: usize,
+    /// Compiled batch size.
+    pub batch: usize,
+    /// IF tensor shape (batch-leading).
+    pub feature_shape: Vec<usize>,
+    /// Flat IF length `T`.
+    pub feature_len: usize,
+    /// HLO artifact paths.
+    pub artifacts: ArtifactPaths,
+}
+
+/// A vision model entry.
+#[derive(Debug, Clone)]
+pub struct VisionEntry {
+    /// Unique name, `{model}_{dataset}`.
+    pub name: String,
+    /// Architecture id (e.g. `resnet_mini`).
+    pub model: String,
+    /// Dataset id (`synth_a` / `synth_b`).
+    pub dataset: String,
+    /// Classifier classes.
+    pub num_classes: usize,
+    /// Input shape `[1, H, W, C]`.
+    pub input_shape: Vec<usize>,
+    /// Full-model accuracy measured at build time (no compression).
+    pub baseline_accuracy: f64,
+    /// Test-set binary (relative path).
+    pub test_data: String,
+    /// Exported splits.
+    pub splits: Vec<SplitEntry>,
+}
+
+impl VisionEntry {
+    /// Find a split by (sl, batch).
+    pub fn split(&self, sl: usize, batch: usize) -> Result<&SplitEntry> {
+        self.splits
+            .iter()
+            .find(|s| s.sl == sl && s.batch == batch)
+            .ok_or_else(|| {
+                Error::artifact(format!("{}: no artifact for SL{sl} batch {batch}", self.name))
+            })
+    }
+}
+
+/// One multiple-choice task binary.
+#[derive(Debug, Clone)]
+pub struct TaskFile {
+    /// Task id (e.g. `retrieval`).
+    pub name: String,
+    /// Relative path of the .bin.
+    pub path: String,
+    /// Items in the file.
+    pub n_items: usize,
+}
+
+/// A language-model entry.
+#[derive(Debug, Clone)]
+pub struct LmEntry {
+    /// Unique name (`llama_mini_s` / `llama_mini_m`).
+    pub name: String,
+    /// Vocab size.
+    pub vocab: usize,
+    /// Sequence length.
+    pub seq_len: usize,
+    /// Hidden dim.
+    pub dim: usize,
+    /// Decoder-block split index.
+    pub split: usize,
+    /// Compiled batch (== n_choices).
+    pub batch: usize,
+    /// Flat hidden-state length `T`.
+    pub hidden_len: usize,
+    /// Per-task baseline accuracy (build-time, uncompressed).
+    pub baseline_accuracy: BTreeMap<String, f64>,
+    /// HLO artifact paths.
+    pub artifacts: ArtifactPaths,
+    /// Task binaries.
+    pub tasks: Vec<TaskFile>,
+}
+
+/// Parsed manifest plus its base directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory containing manifest.json (all paths are relative to it).
+    pub base_dir: PathBuf,
+    /// RNG seed the build used.
+    pub seed: u64,
+    /// Whether this was a `--fast` (smoke) build.
+    pub fast: bool,
+    /// Vision entries.
+    pub vision: Vec<VisionEntry>,
+    /// LM entries.
+    pub lm: Vec<LmEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::artifact(format!(
+                "cannot read {} ({e}) — run `make artifacts` first",
+                path.display()
+            ))
+        })?;
+        let v = json::parse(&text)?;
+        Self::from_value(&v, dir)
+    }
+
+    /// Parse from a JSON value (tests use this directly).
+    pub fn from_value(v: &Value, base_dir: PathBuf) -> Result<Self> {
+        let version = v.usize_field("version")?;
+        if version != 1 {
+            return Err(Error::artifact(format!("unsupported manifest version {version}")));
+        }
+        let mut vision = Vec::new();
+        for mv in v.req("vision")?.as_arr().unwrap_or(&[]) {
+            let mut splits = Vec::new();
+            for sv in mv.req("splits")?.as_arr().unwrap_or(&[]) {
+                splits.push(SplitEntry {
+                    sl: sv.usize_field("sl")?,
+                    batch: sv.usize_field("batch")?,
+                    feature_shape: parse_usize_arr(sv.req("feature_shape")?)?,
+                    feature_len: sv.usize_field("feature_len")?,
+                    artifacts: ArtifactPaths::parse(sv.req("artifacts")?)?,
+                });
+            }
+            vision.push(VisionEntry {
+                name: mv.str_field("name")?.to_string(),
+                model: mv.str_field("model")?.to_string(),
+                dataset: mv.str_field("dataset")?.to_string(),
+                num_classes: mv.usize_field("num_classes")?,
+                input_shape: parse_usize_arr(mv.req("input_shape")?)?,
+                baseline_accuracy: mv.f64_field("baseline_accuracy")?,
+                test_data: mv.str_field("test_data")?.to_string(),
+                splits,
+            });
+        }
+        let mut lm = Vec::new();
+        for lv in v.req("lm")?.as_arr().unwrap_or(&[]) {
+            let mut baseline = BTreeMap::new();
+            if let Some(obj) = lv.req("baseline_accuracy")?.as_obj() {
+                for (k, val) in obj {
+                    baseline.insert(
+                        k.clone(),
+                        val.as_f64().ok_or_else(|| Error::config("bad baseline accuracy"))?,
+                    );
+                }
+            }
+            let mut tasks = Vec::new();
+            for tv in lv.req("tasks")?.as_arr().unwrap_or(&[]) {
+                tasks.push(TaskFile {
+                    name: tv.str_field("name")?.to_string(),
+                    path: tv.str_field("path")?.to_string(),
+                    n_items: tv.usize_field("n_items")?,
+                });
+            }
+            lm.push(LmEntry {
+                name: lv.str_field("name")?.to_string(),
+                vocab: lv.usize_field("vocab")?,
+                seq_len: lv.usize_field("seq_len")?,
+                dim: lv.usize_field("dim")?,
+                split: lv.usize_field("split")?,
+                batch: lv.usize_field("batch")?,
+                hidden_len: lv.usize_field("hidden_len")?,
+                baseline_accuracy: baseline,
+                artifacts: ArtifactPaths::parse(lv.req("artifacts")?)?,
+                tasks,
+            });
+        }
+        Ok(Manifest {
+            base_dir,
+            seed: v.usize_field("seed")? as u64,
+            fast: v.get("fast").and_then(|b| b.as_bool()).unwrap_or(false),
+            vision,
+            lm,
+        })
+    }
+
+    /// Resolve a manifest-relative path.
+    pub fn resolve(&self, rel: &str) -> PathBuf {
+        self.base_dir.join(rel)
+    }
+
+    /// Find a vision entry by name.
+    pub fn vision_entry(&self, name: &str) -> Result<&VisionEntry> {
+        self.vision
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| Error::artifact(format!("no vision model '{name}' in manifest")))
+    }
+
+    /// Find an LM entry by name.
+    pub fn lm_entry(&self, name: &str) -> Result<&LmEntry> {
+        self.lm
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| Error::artifact(format!("no lm model '{name}' in manifest")))
+    }
+}
+
+fn parse_usize_arr(v: &Value) -> Result<Vec<usize>> {
+    v.as_arr()
+        .ok_or_else(|| Error::config("expected array"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| Error::config("expected integer array")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "seed": 42, "fast": true,
+      "vision": [{
+        "name": "resnet_mini_synth_a", "model": "resnet_mini",
+        "dataset": "synth_a", "num_classes": 20,
+        "input_shape": [1, 32, 32, 3], "baseline_accuracy": 0.91,
+        "test_data": "data/synth_a_test.bin",
+        "splits": [{
+          "sl": 2, "batch": 1, "feature_shape": [1, 16, 16, 32],
+          "feature_len": 8192,
+          "artifacts": {"head": "models/h.hlo.txt", "tail": "models/t.hlo.txt",
+                         "head_raw": "models/hr.hlo.txt", "tail_raw": "models/tr.hlo.txt"}
+        }]
+      }],
+      "lm": [{
+        "name": "llama_mini_s", "vocab": 512, "seq_len": 64, "dim": 128,
+        "split": 2, "batch": 4, "hidden_len": 32768,
+        "baseline_accuracy": {"retrieval": 0.9},
+        "artifacts": {"head": "models/lh.hlo.txt", "tail": "models/lt.hlo.txt",
+                       "head_raw": "models/lhr.hlo.txt", "tail_raw": "models/ltr.hlo.txt"},
+        "tasks": [{"name": "retrieval", "path": "data/lm_retrieval.bin", "n_items": 64}]
+      }]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let v = json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_value(&v, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.seed, 42);
+        assert!(m.fast);
+        let ve = m.vision_entry("resnet_mini_synth_a").unwrap();
+        assert_eq!(ve.num_classes, 20);
+        let s = ve.split(2, 1).unwrap();
+        assert_eq!(s.feature_len, 8192);
+        assert!(ve.split(3, 1).is_err());
+        let le = m.lm_entry("llama_mini_s").unwrap();
+        assert_eq!(le.dim, 128);
+        assert_eq!(le.baseline_accuracy["retrieval"], 0.9);
+        assert_eq!(m.resolve("x/y"), PathBuf::from("/tmp/a/x/y"));
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let v = json::parse(r#"{"version": 1, "seed": 1}"#).unwrap();
+        assert!(Manifest::from_value(&v, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let v = json::parse(r#"{"version": 9, "seed": 1, "vision": [], "lm": []}"#).unwrap();
+        assert!(Manifest::from_value(&v, PathBuf::new()).is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! * [`manifest`] — typed view of `artifacts/manifest.json`.
+//! * [`executor`] — thin wrapper over the `xla` crate: HLO-text load,
+//!   compile, literal marshalling, tuple-output execution.
+//! * [`pool`] — compile-once executable cache (compilation is tens of
+//!   milliseconds to seconds; the serving path must never recompile).
+//! * [`split_model`] — typed head/tail pairs for vision and LM models,
+//!   including the quantized (Pallas epilogue/prologue) and raw float
+//!   variants.
+
+pub mod executor;
+pub mod manifest;
+pub mod pool;
+pub mod split_model;
+
+pub use executor::{Engine, Executable};
+pub use manifest::{LmEntry, Manifest, SplitEntry, VisionEntry};
+pub use pool::ExecPool;
+pub use split_model::{LmSplitExec, VisionSplitExec};

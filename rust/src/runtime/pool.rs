@@ -1,0 +1,59 @@
+//! Compile-once executable cache.
+//!
+//! PJRT compilation of a head/tail artifact costs milliseconds-to-seconds;
+//! the serving path must amortize it. The pool maps artifact-relative
+//! paths to compiled executables, compiling lazily under a per-entry
+//! lock so concurrent first-touch requests compile once.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use crate::error::Result;
+
+use super::executor::{Engine, Executable};
+
+/// Lazy, thread-safe executable cache rooted at an artifact directory.
+pub struct ExecPool {
+    engine: Arc<Engine>,
+    base_dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl ExecPool {
+    /// Create a pool over `base_dir` using `engine`.
+    pub fn new(engine: Arc<Engine>, base_dir: impl Into<PathBuf>) -> Self {
+        ExecPool { engine, base_dir: base_dir.into(), cache: Mutex::new(HashMap::new()) }
+    }
+
+    /// The PJRT engine.
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Get (compiling if needed) the executable for a manifest-relative
+    /// artifact path.
+    pub fn get(&self, rel_path: &str) -> Result<Arc<Executable>> {
+        // Fast path.
+        if let Some(exe) = self.cache.lock().unwrap().get(rel_path) {
+            return Ok(Arc::clone(exe));
+        }
+        // Compile outside the map lock so unrelated requests proceed;
+        // a race compiles twice but installs once — acceptable for the
+        // cold path and simpler than per-key locks.
+        let exe = Arc::new(self.engine.load_hlo_text(self.base_dir.join(rel_path))?);
+        let mut cache = self.cache.lock().unwrap();
+        let entry = cache.entry(rel_path.to_string()).or_insert_with(|| Arc::clone(&exe));
+        Ok(Arc::clone(entry))
+    }
+
+    /// Number of compiled entries.
+    pub fn len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// True if nothing has been compiled yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}

@@ -1,0 +1,178 @@
+//! Typed head/tail execution for vision and LM split models.
+//!
+//! Wraps the raw executables with the quantization-parameter plumbing:
+//! the quantized head returns `(symbols, scale, zero)` (the Pallas
+//! epilogue's outputs), which map onto [`QuantParams`]; the quantized
+//! tail takes the decoded symbols plus those parameters back.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::quant::QuantParams;
+
+use super::executor::{lit_f32, lit_i32, lit_scalar_f32, to_f32s, to_i32s, to_scalar_f32};
+use super::manifest::{ArtifactPaths, LmEntry, Manifest, SplitEntry, VisionEntry};
+use super::pool::ExecPool;
+
+/// Convert head outputs `(sym i32[T], scale f32, zero f32)` into
+/// `(Vec<u16>, QuantParams)`.
+fn head_outputs_to_symbols(
+    outs: &[xla::Literal],
+    q: u8,
+    expect_len: usize,
+) -> Result<(Vec<u16>, QuantParams)> {
+    if outs.len() != 3 {
+        return Err(Error::runtime(format!("head returned {} outputs, expected 3", outs.len())));
+    }
+    let sym_i32 = to_i32s(&outs[0])?;
+    if sym_i32.len() != expect_len {
+        return Err(Error::runtime(format!(
+            "head returned {} symbols, expected {expect_len}",
+            sym_i32.len()
+        )));
+    }
+    let scale = to_scalar_f32(&outs[1])?;
+    let zero = to_scalar_f32(&outs[2])?;
+    let params = QuantParams { q, scale, zero: zero as i32 };
+    let max_sym = (1u32 << q) - 1;
+    let mut symbols = Vec::with_capacity(sym_i32.len());
+    for s in sym_i32 {
+        if s < 0 || s as u32 > max_sym {
+            return Err(Error::runtime(format!("head emitted symbol {s} outside Q={q}")));
+        }
+        symbols.push(s as u16);
+    }
+    Ok((symbols, params))
+}
+
+/// Compiled artifact set for one vision (model, dataset, split, batch).
+pub struct VisionSplitExec {
+    /// Manifest entry metadata.
+    pub entry: VisionEntry,
+    /// Split metadata.
+    pub split: SplitEntry,
+    head: Arc<super::Executable>,
+    tail: Arc<super::Executable>,
+    head_raw: Arc<super::Executable>,
+    tail_raw: Arc<super::Executable>,
+}
+
+impl VisionSplitExec {
+    /// Compile (or fetch cached) all four artifacts for a split.
+    pub fn load(pool: &ExecPool, manifest: &Manifest, name: &str, sl: usize, batch: usize) -> Result<Self> {
+        let entry = manifest.vision_entry(name)?.clone();
+        let split = entry.split(sl, batch)?.clone();
+        let ArtifactPaths { head, tail, head_raw, tail_raw } = split.artifacts.clone();
+        Ok(VisionSplitExec {
+            head: pool.get(&head)?,
+            tail: pool.get(&tail)?,
+            head_raw: pool.get(&head_raw)?,
+            tail_raw: pool.get(&tail_raw)?,
+            entry,
+            split,
+        })
+    }
+
+    fn input_dims(&self) -> Vec<i64> {
+        let mut dims: Vec<i64> = self.entry.input_shape.iter().map(|&d| d as i64).collect();
+        dims[0] = self.split.batch as i64;
+        dims
+    }
+
+    /// Edge compute: image batch → quantized IF symbols + params.
+    pub fn run_head(&self, x: &[f32], q: u8) -> Result<(Vec<u16>, QuantParams)> {
+        let levels = ((1u32 << q) - 1) as f32;
+        let outs = self.head.run(&[lit_f32(x, &self.input_dims())?, lit_scalar_f32(levels)])?;
+        head_outputs_to_symbols(&outs, q, self.split.feature_len)
+    }
+
+    /// Cloud compute: symbols + params → logits (batch × classes).
+    pub fn run_tail(&self, symbols: &[u16], params: &QuantParams) -> Result<Vec<f32>> {
+        if symbols.len() != self.split.feature_len {
+            return Err(Error::invalid(format!(
+                "{} symbols, artifact expects {}",
+                symbols.len(),
+                self.split.feature_len
+            )));
+        }
+        let sym_i32: Vec<i32> = symbols.iter().map(|&s| s as i32).collect();
+        let outs = self.tail.run(&[
+            lit_i32(&sym_i32, &[symbols.len() as i64])?,
+            lit_scalar_f32(params.scale),
+            lit_scalar_f32(params.zero as f32),
+        ])?;
+        to_f32s(&outs[0])
+    }
+
+    /// Uncompressed baseline: image batch → float IF.
+    pub fn run_head_raw(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let outs = self.head_raw.run(&[lit_f32(x, &self.input_dims())?])?;
+        to_f32s(&outs[0])
+    }
+
+    /// Uncompressed baseline: float IF → logits.
+    pub fn run_tail_raw(&self, feat: &[f32]) -> Result<Vec<f32>> {
+        let outs = self.tail_raw.run(&[lit_f32(feat, &[feat.len() as i64])?])?;
+        to_f32s(&outs[0])
+    }
+}
+
+/// Compiled artifact set for one LM size.
+pub struct LmSplitExec {
+    /// Manifest entry metadata.
+    pub entry: LmEntry,
+    head: Arc<super::Executable>,
+    tail: Arc<super::Executable>,
+    head_raw: Arc<super::Executable>,
+    tail_raw: Arc<super::Executable>,
+}
+
+impl LmSplitExec {
+    /// Compile (or fetch cached) the LM artifacts.
+    pub fn load(pool: &ExecPool, manifest: &Manifest, name: &str) -> Result<Self> {
+        let entry = manifest.lm_entry(name)?.clone();
+        let ArtifactPaths { head, tail, head_raw, tail_raw } = entry.artifacts.clone();
+        Ok(LmSplitExec {
+            head: pool.get(&head)?,
+            tail: pool.get(&tail)?,
+            head_raw: pool.get(&head_raw)?,
+            tail_raw: pool.get(&tail_raw)?,
+            entry,
+        })
+    }
+
+    fn tok_dims(&self) -> [i64; 2] {
+        [self.entry.batch as i64, self.entry.seq_len as i64]
+    }
+
+    /// Edge compute: token batch (n_choices × seq_len) → quantized
+    /// hidden-state symbols + params.
+    pub fn run_head(&self, tokens: &[i32], q: u8) -> Result<(Vec<u16>, QuantParams)> {
+        let levels = ((1u32 << q) - 1) as f32;
+        let outs = self.head.run(&[lit_i32(tokens, &self.tok_dims())?, lit_scalar_f32(levels)])?;
+        head_outputs_to_symbols(&outs, q, self.entry.hidden_len)
+    }
+
+    /// Cloud compute: symbols + params → logits (batch × seq × vocab).
+    pub fn run_tail(&self, symbols: &[u16], params: &QuantParams) -> Result<Vec<f32>> {
+        let sym_i32: Vec<i32> = symbols.iter().map(|&s| s as i32).collect();
+        let outs = self.tail.run(&[
+            lit_i32(&sym_i32, &[symbols.len() as i64])?,
+            lit_scalar_f32(params.scale),
+            lit_scalar_f32(params.zero as f32),
+        ])?;
+        to_f32s(&outs[0])
+    }
+
+    /// Uncompressed baseline head.
+    pub fn run_head_raw(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let outs = self.head_raw.run(&[lit_i32(tokens, &self.tok_dims())?])?;
+        to_f32s(&outs[0])
+    }
+
+    /// Uncompressed baseline tail.
+    pub fn run_tail_raw(&self, hidden: &[f32]) -> Result<Vec<f32>> {
+        let outs = self.tail_raw.run(&[lit_f32(hidden, &[hidden.len() as i64])?])?;
+        to_f32s(&outs[0])
+    }
+}

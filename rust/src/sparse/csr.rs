@@ -1,0 +1,301 @@
+//! Modified Compressed Sparse Row (CSR) encoding (§3.1).
+//!
+//! Standard CSR stores the *cumulative* nonzero count per row; the paper
+//! instead stores the direct per-row count `r[i]` ("non-cumulative"),
+//! deferring the prefix sum to the decoder. This shrinks the dynamic
+//! range of `r`'s symbols (counts are bounded by `K`, cumulative offsets
+//! grow to `nnz`), which measurably lowers the entropy rANS sees.
+//!
+//! "Zero" here is the quantizer's *background symbol* (the image of 0.0
+//! under AIQ), not literal integer zero — post-ReLU zeros land on the
+//! zero point `z`, which is nonzero whenever `x_min < 0`.
+
+use crate::error::{Error, Result};
+
+/// Modified-CSR form of a quantized `n_rows × n_cols` matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModCsr {
+    /// Number of rows `N`.
+    pub n_rows: usize,
+    /// Number of columns `K`.
+    pub n_cols: usize,
+    /// Background symbol treated as implicit zero.
+    pub background: u16,
+    /// Non-background values `v`, row-major scan order.
+    pub values: Vec<u16>,
+    /// Column index of each value `c` (parallel to `values`).
+    pub cols: Vec<u16>,
+    /// Direct (non-cumulative) nonzero count per row `r`.
+    pub row_counts: Vec<u32>,
+}
+
+impl ModCsr {
+    /// Encode a dense row-major symbol matrix. Single `O(T)` pass.
+    pub fn encode(symbols: &[u16], n_rows: usize, n_cols: usize, background: u16) -> Result<Self> {
+        if n_rows * n_cols != symbols.len() {
+            return Err(Error::invalid(format!(
+                "{n_rows}×{n_cols} != {} elements",
+                symbols.len()
+            )));
+        }
+        if n_cols > u16::MAX as usize + 1 {
+            return Err(Error::invalid(format!("K={n_cols} exceeds u16 column index")));
+        }
+        let mut values = Vec::new();
+        let mut cols = Vec::new();
+        let mut row_counts = Vec::with_capacity(n_rows);
+        for row in 0..n_rows {
+            let mut count = 0u32;
+            let base = row * n_cols;
+            for col in 0..n_cols {
+                let s = symbols[base + col];
+                if s != background {
+                    values.push(s);
+                    cols.push(col as u16);
+                    count += 1;
+                }
+            }
+            row_counts.push(count);
+        }
+        Ok(ModCsr { n_rows, n_cols, background, values, cols, row_counts })
+    }
+
+    /// Number of stored (non-background) entries.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Density in `[0, 1]`.
+    pub fn density(&self) -> f64 {
+        let t = self.n_rows * self.n_cols;
+        if t == 0 { 0.0 } else { self.nnz() as f64 / t as f64 }
+    }
+
+    /// Reconstruct the dense matrix. The decoder performs the deferred
+    /// cumulative sum over `row_counts`.
+    pub fn decode(&self) -> Result<Vec<u16>> {
+        self.validate()?;
+        let mut out = vec![self.background; self.n_rows * self.n_cols];
+        let mut k = 0usize;
+        for (row, &count) in self.row_counts.iter().enumerate() {
+            let base = row * self.n_cols;
+            for _ in 0..count {
+                out[base + self.cols[k] as usize] = self.values[k];
+                k += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Structural validation: counts consistent with array lengths,
+    /// column indices in range and strictly increasing within each row,
+    /// stored values never equal to the background symbol.
+    pub fn validate(&self) -> Result<()> {
+        if self.row_counts.len() != self.n_rows {
+            return Err(Error::corrupt("row_counts length != n_rows"));
+        }
+        let total: u64 = self.row_counts.iter().map(|&c| c as u64).sum();
+        if total != self.values.len() as u64 || self.values.len() != self.cols.len() {
+            return Err(Error::corrupt("CSR array lengths inconsistent"));
+        }
+        let mut k = 0usize;
+        for &count in &self.row_counts {
+            if count as usize > self.n_cols {
+                return Err(Error::corrupt("row count exceeds K"));
+            }
+            let mut prev: i64 = -1;
+            for _ in 0..count {
+                let col = self.cols[k] as i64;
+                if col >= self.n_cols as i64 {
+                    return Err(Error::corrupt("column index out of range"));
+                }
+                if col <= prev {
+                    return Err(Error::corrupt("column indices not strictly increasing"));
+                }
+                if self.values[k] == self.background {
+                    return Err(Error::corrupt("background symbol stored as value"));
+                }
+                prev = col;
+                k += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Concatenate into the unified stream `D = v ⊕ c ⊕ r` (§3.1) used
+    /// for single-pass rANS coding. Length `ℓ_D = 2·nnz + N`.
+    pub fn concat(&self) -> Vec<u32> {
+        let mut d = Vec::with_capacity(2 * self.nnz() + self.n_rows);
+        d.extend(self.values.iter().map(|&v| v as u32));
+        d.extend(self.cols.iter().map(|&c| c as u32));
+        d.extend(self.row_counts.iter().copied());
+        d
+    }
+
+    /// Rebuild from a concatenated stream (inverse of [`ModCsr::concat`]).
+    ///
+    /// `nnz` disambiguates the section boundaries:
+    /// `D = v[0..nnz] ⊕ c[0..nnz] ⊕ r[0..n_rows]`.
+    pub fn from_concat(
+        d: &[u32],
+        nnz: usize,
+        n_rows: usize,
+        n_cols: usize,
+        background: u16,
+    ) -> Result<Self> {
+        if d.len() != 2 * nnz + n_rows {
+            return Err(Error::corrupt(format!(
+                "concat stream length {} != 2*{nnz} + {n_rows}",
+                d.len()
+            )));
+        }
+        let to_u16 = |x: u32, what: &str| -> Result<u16> {
+            u16::try_from(x).map_err(|_| Error::corrupt(format!("{what} overflows u16")))
+        };
+        let mut values = Vec::with_capacity(nnz);
+        let mut cols = Vec::with_capacity(nnz);
+        for &x in &d[0..nnz] {
+            values.push(to_u16(x, "value symbol")?);
+        }
+        for &x in &d[nnz..2 * nnz] {
+            cols.push(to_u16(x, "column index")?);
+        }
+        let row_counts = d[2 * nnz..].to_vec();
+        let csr = ModCsr { n_rows, n_cols, background, values, cols, row_counts };
+        csr.validate()?;
+        Ok(csr)
+    }
+
+    /// Alphabet required to entropy-code `concat()`:
+    /// `max(value_alphabet, K, max_row_count + 1)`.
+    pub fn concat_alphabet(&self, value_alphabet: usize) -> usize {
+        let max_count = self.row_counts.iter().copied().max().unwrap_or(0) as usize;
+        value_alphabet.max(self.n_cols).max(max_count + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_matrix(seed: u64, n: usize, k: usize, density: f64, alphabet: u16) -> Vec<u16> {
+        let mut rng = Rng::new(seed);
+        (0..n * k)
+            .map(|_| {
+                if rng.next_f64() < density {
+                    1 + rng.below(alphabet as u64 - 1) as u16
+                } else {
+                    0
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_dense_sparse_dense() {
+        for (n, k, d) in [(16, 8, 0.3), (100, 17, 0.05), (1, 1, 1.0), (64, 64, 0.0)] {
+            let m = random_matrix(n as u64, n, k, d, 16);
+            let csr = ModCsr::encode(&m, n, k, 0).unwrap();
+            assert_eq!(csr.decode().unwrap(), m, "n={n} k={k} d={d}");
+        }
+    }
+
+    #[test]
+    fn nonzero_background_symbol() {
+        // Background = 3 (a nonzero zero-point, the common AIQ case).
+        let m = vec![3u16, 5, 3, 3, 7, 3, 3, 3, 1];
+        let csr = ModCsr::encode(&m, 3, 3, 3).unwrap();
+        assert_eq!(csr.nnz(), 3);
+        assert_eq!(csr.values, vec![5, 7, 1]);
+        assert_eq!(csr.row_counts, vec![1, 1, 1]);
+        assert_eq!(csr.decode().unwrap(), m);
+    }
+
+    #[test]
+    fn row_counts_are_non_cumulative() {
+        let m = vec![
+            1u16, 0, 2, 0, // row 0: 2 nonzeros
+            0, 0, 0, 0, // row 1: 0
+            4, 4, 4, 4, // row 2: 4
+        ];
+        let csr = ModCsr::encode(&m, 3, 4, 0).unwrap();
+        assert_eq!(csr.row_counts, vec![2, 0, 4]); // not [2, 2, 6]
+    }
+
+    #[test]
+    fn concat_layout_and_length() {
+        let m = vec![0u16, 9, 0, 8];
+        let csr = ModCsr::encode(&m, 2, 2, 0).unwrap();
+        let d = csr.concat();
+        assert_eq!(d.len(), 2 * csr.nnz() + csr.n_rows);
+        assert_eq!(d, vec![9, 8, 1, 1, 1, 1]); // v ⊕ c ⊕ r
+    }
+
+    #[test]
+    fn concat_roundtrip() {
+        let m = random_matrix(42, 57, 23, 0.2, 64);
+        let csr = ModCsr::encode(&m, 57, 23, 0).unwrap();
+        let d = csr.concat();
+        let back = ModCsr::from_concat(&d, csr.nnz(), 57, 23, 0).unwrap();
+        assert_eq!(back, csr);
+        assert_eq!(back.decode().unwrap(), m);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(ModCsr::encode(&[0u16; 10], 3, 4, 0).is_err());
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let m = random_matrix(7, 10, 10, 0.3, 16);
+        let good = ModCsr::encode(&m, 10, 10, 0).unwrap();
+
+        let mut bad = good.clone();
+        if !bad.cols.is_empty() {
+            bad.cols[0] = 10; // out of range
+            assert!(bad.validate().is_err());
+        }
+
+        let mut bad = good.clone();
+        bad.row_counts[0] += 1; // counts no longer match nnz
+        assert!(bad.validate().is_err());
+
+        let mut bad = good.clone();
+        if !bad.values.is_empty() {
+            bad.values[0] = 0; // background stored explicitly
+            assert!(bad.validate().is_err());
+        }
+
+        let mut bad = good;
+        bad.row_counts = vec![0; 9];
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn from_concat_rejects_bad_lengths() {
+        let d = vec![1u32, 2, 3];
+        assert!(ModCsr::from_concat(&d, 2, 2, 2, 0).is_err());
+    }
+
+    #[test]
+    fn density_and_alphabet() {
+        let m = random_matrix(3, 20, 50, 0.1, 8);
+        let csr = ModCsr::encode(&m, 20, 50, 0).unwrap();
+        assert!((csr.density() - csr.nnz() as f64 / 1000.0).abs() < 1e-12);
+        let a = csr.concat_alphabet(8);
+        assert!(a >= 50); // column indices demand at least K
+    }
+
+    #[test]
+    fn full_and_empty_rows() {
+        let mut m = vec![0u16; 6 * 4];
+        for c in 0..4 {
+            m[2 * 4 + c] = 5; // row 2 completely full
+        }
+        let csr = ModCsr::encode(&m, 6, 4, 0).unwrap();
+        assert_eq!(csr.row_counts, vec![0, 0, 4, 0, 0, 0]);
+        assert_eq!(csr.decode().unwrap(), m);
+    }
+}

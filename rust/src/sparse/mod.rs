@@ -1,0 +1,5 @@
+//! Sparse representations of quantized intermediate features.
+
+pub mod csr;
+
+pub use csr::ModCsr;

@@ -1,0 +1,138 @@
+//! tANS stream codec built on [`super::tables::TansTables`].
+//!
+//! Encoding walks symbols forward, buffering the per-symbol bit chunks;
+//! the chunks are then written in reverse so the decoder (which pops
+//! symbols LIFO) reads the bitstream strictly forward. The per-call
+//! table build — `O(L + m)` plus the spread walk — is charged to
+//! `encode`, matching how the paper's E-2 baseline is measured (tables
+//! cannot be amortized across tensors whose statistics change).
+//!
+//! Stream layout: `[varint final_state] [varint bit_len] [bit payload]`.
+
+use crate::error::{Error, Result};
+use crate::rans::freq::FreqTable;
+use crate::util::bitio::{BitReader, BitWriter};
+use crate::util::varint;
+
+use super::tables::TansTables;
+
+/// Encode `symbols` with freshly built tANS tables for `table`.
+pub fn encode(symbols: &[u32], table: &FreqTable) -> Result<Vec<u8>> {
+    let tables = TansTables::build(table)?;
+    let mut state = 0u32;
+    // Buffer (bits, nb) per symbol, then emit in reverse.
+    let mut chunks: Vec<(u32, u8)> = Vec::with_capacity(symbols.len());
+    for &sym in symbols {
+        if sym > u16::MAX as u32 {
+            return Err(Error::codec(format!("symbol {sym} exceeds u16")));
+        }
+        let (bits, nb, next) = tables.encode_step(state, sym as u16)?;
+        chunks.push((bits, nb));
+        state = next;
+    }
+    let mut w = BitWriter::new();
+    for &(bits, nb) in chunks.iter().rev() {
+        w.write_bits(bits as u64, nb as u32);
+    }
+    let bit_len = w.bit_len();
+    let payload = w.finish();
+
+    let mut out = Vec::with_capacity(payload.len() + 10);
+    varint::write_u64(&mut out, state as u64);
+    varint::write_usize(&mut out, bit_len);
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// Decode `count` symbols encoded by [`encode`] under the same table.
+pub fn decode(bytes: &[u8], count: usize, table: &FreqTable) -> Result<Vec<u32>> {
+    let tables = TansTables::build(table)?;
+    let mut pos = 0usize;
+    let state = varint::read_u64(bytes, &mut pos)?;
+    if state >= tables.table_size as u64 {
+        return Err(Error::corrupt("tANS state out of range"));
+    }
+    let bit_len = varint::read_usize(bytes, &mut pos)?;
+    let payload = &bytes[pos..];
+    if bit_len > payload.len() * 8 {
+        return Err(Error::corrupt("tANS bitstream truncated"));
+    }
+    let mut reader = BitReader::new(payload);
+    let mut state = state as u32;
+    // Symbols pop in reverse encode order.
+    let mut out = vec![0u32; count];
+    for slot in out.iter_mut().rev() {
+        let e = tables.decode_step(state);
+        *slot = e.symbol as u32;
+        let bits = reader
+            .read_bits(e.nb_bits as u32)
+            .ok_or_else(|| Error::corrupt("tANS bitstream exhausted"))? as u32;
+        state = e.new_state_base + bits;
+    }
+    if state != 0 {
+        return Err(Error::corrupt("tANS final state mismatch"));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip_distributions() {
+        let mut rng = Rng::new(31);
+        for alphabet in [2usize, 16, 64, 256] {
+            for len in [0usize, 1, 100, 20_000] {
+                let symbols: Vec<u32> =
+                    (0..len).map(|_| rng.zipf(alphabet, 1.4) as u32).collect();
+                let table = FreqTable::from_symbols(&symbols, alphabet);
+                let bytes = encode(&symbols, &table).unwrap();
+                let back = decode(&bytes, symbols.len(), &table).unwrap();
+                assert_eq!(back, symbols, "alphabet {alphabet} len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn size_competitive_with_entropy() {
+        let mut rng = Rng::new(32);
+        let symbols: Vec<u32> = (0..50_000).map(|_| rng.zipf(32, 1.5) as u32).collect();
+        let table = FreqTable::from_symbols(&symbols, 32);
+        let bytes = encode(&symbols, &table).unwrap();
+        let freqs = crate::util::stats::histogram(&symbols, 32);
+        let bound = crate::util::stats::entropy_bits(&freqs) / 8.0;
+        assert!(
+            (bytes.len() as f64) < bound * 1.10 + 16.0,
+            "tANS {} bytes vs entropy bound {bound}",
+            bytes.len()
+        );
+    }
+
+    #[test]
+    fn tans_and_rans_sizes_comparable() {
+        let mut rng = Rng::new(33);
+        let symbols: Vec<u32> = (0..30_000).map(|_| rng.zipf(64, 1.2) as u32).collect();
+        let table = FreqTable::from_symbols(&symbols, 64);
+        let t = encode(&symbols, &table).unwrap().len() as f64;
+        let r = crate::rans::encode(&symbols, &table).unwrap().len() as f64;
+        assert!((t / r - 1.0).abs() < 0.05, "tANS {t} vs rANS {r}");
+    }
+
+    #[test]
+    fn corrupt_stream_rejected() {
+        let mut rng = Rng::new(34);
+        let symbols: Vec<u32> = (0..1000).map(|_| rng.zipf(16, 1.1) as u32).collect();
+        let table = FreqTable::from_symbols(&symbols, 16);
+        let bytes = encode(&symbols, &table).unwrap();
+        assert!(decode(&bytes[..bytes.len() / 2], symbols.len(), &table).is_err());
+        let mut garbled = bytes.clone();
+        let last = garbled.len() - 1;
+        garbled[last] ^= 0xFF;
+        match decode(&garbled, symbols.len(), &table) {
+            Err(_) => {}
+            Ok(dec) => assert_ne!(dec, symbols),
+        }
+    }
+}

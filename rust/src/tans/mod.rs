@@ -1,0 +1,14 @@
+//! Table-based ANS (tANS / FSE) — the paper's E-2 baseline.
+//!
+//! tANS drives encoding and decoding from precomputed state-transition
+//! tables over `L = 2^R` states. The tables must be rebuilt from the
+//! symbol statistics of every tensor (there is no stationary model in
+//! split computing), which is exactly the overhead the paper's Table 1
+//! attributes to E-2: competitive compressed sizes but encoding three
+//! orders of magnitude slower than the streaming rANS pipeline.
+
+pub mod codec;
+pub mod tables;
+
+pub use codec::{decode as tans_decode, encode as tans_encode};
+pub use tables::TansTables;

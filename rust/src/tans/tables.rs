@@ -1,0 +1,197 @@
+//! tANS state-table construction (FSE-style).
+//!
+//! States are `t ∈ [0, L)` standing for the ANS state `x = t + L`.
+//! Symbols are spread over the state table with the coprime-step walk
+//! used by FSE; the decode table is built first and the encode table is
+//! derived as its exact inverse, so the pair is consistent by
+//! construction.
+
+use crate::error::{Error, Result};
+use crate::rans::freq::{FreqTable, SCALE, SCALE_BITS};
+
+/// One decode-table entry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecodeEntry {
+    /// Decoded symbol.
+    pub symbol: u16,
+    /// Bits to pull from the stream after emitting `symbol`.
+    pub nb_bits: u8,
+    /// Next-state base; next state = base + read_bits(nb_bits).
+    pub new_state_base: u32,
+}
+
+/// Full encode+decode tables for one frequency distribution.
+#[derive(Debug, Clone)]
+pub struct TansTables {
+    /// `L = 2^R` (we reuse the rANS precision, R = SCALE_BITS).
+    pub table_size: u32,
+    /// Decode table, `L` entries.
+    pub decode: Vec<DecodeEntry>,
+    /// Per-symbol start offset into `encode_states`.
+    sym_offset: Vec<u32>,
+    /// Per-symbol normalized frequency (copied from the table).
+    sym_freq: Vec<u32>,
+    /// For symbol `s` and sub-state `x ∈ [freq, 2·freq)`:
+    /// `encode_states[sym_offset[s] + (x − freq)]` is the table state `t`
+    /// whose decode entry yields `(s, x)`.
+    encode_states: Vec<u32>,
+}
+
+impl TansTables {
+    /// Build tables from a normalized frequency table.
+    pub fn build(freq: &FreqTable) -> Result<Self> {
+        let l = SCALE;
+        let m = freq.alphabet();
+        // Spread symbols: classic FSE step keeps the walk coprime with L.
+        let step = (l >> 1) + (l >> 3) + 3;
+        let mask = l - 1;
+        let mut spread = vec![0u16; l as usize];
+        let mut pos: u32 = 0;
+        for s in 0..m {
+            for _ in 0..freq.freq_of(s as u32) {
+                spread[pos as usize] = s as u16;
+                pos = (pos + step) & mask;
+            }
+        }
+        if pos != 0 {
+            return Err(Error::codec("tANS spread did not complete a full cycle"));
+        }
+
+        // Decode table + inverse (encode) table in one pass.
+        let mut counter: Vec<u32> = (0..m).map(|s| freq.freq_of(s as u32)).collect();
+        let mut sym_offset = vec![0u32; m];
+        let mut acc = 0u32;
+        for s in 0..m {
+            sym_offset[s] = acc;
+            acc += freq.freq_of(s as u32);
+        }
+        debug_assert_eq!(acc, l);
+        let mut encode_states = vec![0u32; l as usize];
+        let mut decode = Vec::with_capacity(l as usize);
+        for t in 0..l {
+            let s = spread[t as usize] as usize;
+            let x = counter[s]; // sub-state in [freq, 2*freq)
+            counter[s] += 1;
+            let nb_bits = (SCALE_BITS - (31 - x.leading_zeros())) as u8;
+            let new_state_base = (x << nb_bits) - l;
+            decode.push(DecodeEntry { symbol: s as u16, nb_bits, new_state_base });
+            let f = freq.freq_of(s as u32);
+            encode_states[(sym_offset[s] + (x - f)) as usize] = t;
+        }
+
+        Ok(TansTables {
+            table_size: l,
+            decode,
+            sym_offset,
+            sym_freq: (0..m).map(|s| freq.freq_of(s as u32)).collect(),
+            encode_states,
+        })
+    }
+
+    /// Alphabet size.
+    pub fn alphabet(&self) -> usize {
+        self.sym_freq.len()
+    }
+
+    /// Encode step: from table state `t` (x = t + L), encode `sym`.
+    /// Returns `(bits_value, nb_bits, next_state)`.
+    #[inline]
+    pub fn encode_step(&self, t: u32, sym: u16) -> Result<(u32, u8, u32)> {
+        let s = sym as usize;
+        if s >= self.sym_freq.len() {
+            return Err(Error::codec(format!("symbol {sym} outside alphabet")));
+        }
+        let f = self.sym_freq[s];
+        if f == 0 {
+            return Err(Error::codec(format!("symbol {sym} has zero frequency")));
+        }
+        let x = t + self.table_size;
+        // Emit bits until x >> nb lands in [f, 2f).
+        let mut nb = 0u8;
+        while (x >> nb) >= 2 * f {
+            nb += 1;
+        }
+        let bits = x & ((1u32 << nb) - 1);
+        let sub = (x >> nb) - f;
+        let next = self.encode_states[(self.sym_offset[s] + sub) as usize];
+        Ok((bits, nb, next))
+    }
+
+    /// Decode step: from table state `t`, return `(symbol, nb_bits, base)`;
+    /// caller supplies the next state as `base + bits`.
+    #[inline]
+    pub fn decode_step(&self, t: u32) -> DecodeEntry {
+        self.decode[t as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn table_for(seed: u64, alphabet: usize) -> (FreqTable, TansTables) {
+        let mut rng = Rng::new(seed);
+        let symbols: Vec<u32> = (0..50_000).map(|_| rng.zipf(alphabet, 1.3) as u32).collect();
+        let f = FreqTable::from_symbols(&symbols, alphabet);
+        let t = TansTables::build(&f).unwrap();
+        (f, t)
+    }
+
+    #[test]
+    fn decode_table_covers_all_states() {
+        let (freq, tables) = table_for(1, 32);
+        // Each symbol appears exactly freq times in the decode table.
+        let mut counts = vec![0u32; 32];
+        for e in &tables.decode {
+            counts[e.symbol as usize] += 1;
+        }
+        for s in 0..32u32 {
+            assert_eq!(counts[s as usize], freq.freq_of(s));
+        }
+    }
+
+    #[test]
+    fn encode_decode_steps_are_inverse() {
+        let (_, tables) = table_for(2, 64);
+        let mut rng = Rng::new(7);
+        let mut t = 0u32;
+        let mut stack = Vec::new();
+        // Walk 10k random encodable symbols forward.
+        for _ in 0..10_000 {
+            let sym = loop {
+                let s = rng.below(64) as u16;
+                if tables.sym_freq[s as usize] > 0 {
+                    break s;
+                }
+            };
+            let (bits, nb, next) = tables.encode_step(t, sym).unwrap();
+            stack.push((t, sym, bits, nb));
+            t = next;
+        }
+        // Walk back via decode steps.
+        for (prev_t, sym, bits, nb) in stack.into_iter().rev() {
+            let e = tables.decode_step(t);
+            assert_eq!(e.symbol, sym);
+            assert_eq!(e.nb_bits, nb);
+            t = e.new_state_base + bits;
+            assert_eq!(t, prev_t);
+        }
+    }
+
+    #[test]
+    fn new_state_base_in_range() {
+        let (_, tables) = table_for(3, 16);
+        for e in &tables.decode {
+            let max_next = e.new_state_base + ((1u32 << e.nb_bits) - 1);
+            assert!(max_next < tables.table_size);
+        }
+    }
+
+    #[test]
+    fn zero_freq_symbol_rejected_on_encode() {
+        let f = FreqTable::from_symbols(&[0, 0, 1], 4);
+        let tables = TansTables::build(&f).unwrap();
+        assert!(tables.encode_step(0, 3).is_err());
+    }
+}

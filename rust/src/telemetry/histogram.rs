@@ -1,0 +1,195 @@
+//! Log-bucketed latency histogram.
+//!
+//! Fixed memory, lock-free recording (atomic buckets), ~4% relative
+//! error — the standard shape for serving-path latency metrics. Buckets
+//! are logarithmic over nanoseconds-to-minutes.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets: covers 1 ns … ~18 minutes at 16 buckets/octave...
+/// concretely `BUCKETS_PER_OCTAVE` sub-buckets per power of two over
+/// 64 octaves of nanoseconds, capped.
+const OCTAVES: usize = 40; // 2^40 ns ≈ 18 minutes
+const SUB: usize = 8; // sub-buckets per octave → ~9% bucket width
+const BUCKETS: usize = OCTAVES * SUB + 1;
+
+/// Lock-free log-bucketed histogram of nanosecond values.
+#[derive(Debug)]
+pub struct LogHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        LogHistogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_index(ns: u64) -> usize {
+        if ns == 0 {
+            return 0;
+        }
+        let octave = 63 - ns.leading_zeros() as usize; // floor(log2)
+        let frac = if octave == 0 {
+            0
+        } else {
+            // Top SUB bits below the leading bit select the sub-bucket.
+            ((ns >> octave.saturating_sub(3)) & (SUB as u64 - 1)) as usize
+        };
+        (octave * SUB + frac).min(BUCKETS - 1)
+    }
+
+    /// Lower bound (ns) represented by bucket `i`.
+    fn bucket_floor(i: usize) -> u64 {
+        let octave = i / SUB;
+        let frac = i % SUB;
+        if octave == 0 {
+            return frac as u64;
+        }
+        let base = 1u64 << octave;
+        base + ((base as u128 * frac as u128 / SUB as u128) as u64)
+    }
+
+    /// Record one duration in nanoseconds.
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[Self::bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Record a duration.
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Record milliseconds (f64 convenience for simulated latencies).
+    pub fn record_ms(&self, ms: f64) {
+        self.record_ns((ms.max(0.0) * 1e6) as u64);
+    }
+
+    /// Total recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean in milliseconds.
+    pub fn mean_ms(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64 / 1e6
+    }
+
+    /// Max in milliseconds.
+    pub fn max_ms(&self) -> f64 {
+        self.max_ns.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Approximate quantile (bucket lower bound), `q ∈ [0,1]`, in ms.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_floor(i) as f64 / 1e6;
+            }
+        }
+        self.max_ms()
+    }
+
+    /// One-line summary for reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.3}ms p50={:.3}ms p99={:.3}ms max={:.3}ms",
+            self.count(),
+            self.mean_ms(),
+            self.quantile_ms(0.50),
+            self.quantile_ms(0.99),
+            self.max_ms()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_sum_max() {
+        let h = LogHistogram::new();
+        for ms in [1.0, 2.0, 3.0] {
+            h.record_ms(ms);
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.mean_ms() - 2.0).abs() < 0.01);
+        assert!((h.max_ms() - 3.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_bounded() {
+        let h = LogHistogram::new();
+        for i in 1..=1000u64 {
+            h.record_ns(i * 1_000_000); // 1..1000 ms
+        }
+        let p50 = h.quantile_ms(0.5);
+        let p90 = h.quantile_ms(0.9);
+        let p99 = h.quantile_ms(0.99);
+        assert!(p50 <= p90 && p90 <= p99);
+        // ~10% bucket resolution.
+        assert!((p50 - 500.0).abs() / 500.0 < 0.15, "p50 {p50}");
+        assert!((p99 - 990.0).abs() / 990.0 < 0.15, "p99 {p99}");
+    }
+
+    #[test]
+    fn zero_and_huge_values_do_not_panic() {
+        let h = LogHistogram::new();
+        h.record_ns(0);
+        h.record_ns(u64::MAX);
+        assert_eq!(h.count(), 2);
+        let _ = h.summary();
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let h = std::sync::Arc::new(LogHistogram::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let h = std::sync::Arc::clone(&h);
+                s.spawn(move || {
+                    for i in 0..1000 {
+                        h.record_ns(i);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 8000);
+    }
+
+    #[test]
+    fn empty_histogram_summary() {
+        let h = LogHistogram::new();
+        assert_eq!(h.quantile_ms(0.5), 0.0);
+        assert_eq!(h.mean_ms(), 0.0);
+    }
+}

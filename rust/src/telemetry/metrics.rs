@@ -1,0 +1,188 @@
+//! Metrics registry and per-request latency breakdown.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::{ObjBuilder, Value};
+
+use super::histogram::LogHistogram;
+
+/// The paper's four latency factors for one request (§2.2), plus queue
+/// time introduced by the batcher.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencyBreakdown {
+    /// Time spent queued in the batcher before edge compute, ms.
+    pub queue_ms: f64,
+    /// (i) edge-side head compute + encoding, ms.
+    pub encode_ms: f64,
+    /// (ii) wireless transfer (simulated ε-outage latency), ms.
+    pub transfer_ms: f64,
+    /// (iii) cloud-side decoding, ms.
+    pub decode_ms: f64,
+    /// (iv) device transfer + tail compute, ms.
+    pub compute_ms: f64,
+}
+
+impl LatencyBreakdown {
+    /// End-to-end latency.
+    pub fn total_ms(&self) -> f64 {
+        self.queue_ms + self.encode_ms + self.transfer_ms + self.decode_ms + self.compute_ms
+    }
+}
+
+/// Thread-safe metrics registry: named counters and histograms.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    histograms: Mutex<BTreeMap<String, Arc<LogHistogram>>>,
+}
+
+impl Registry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create a counter.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        let mut map = self.counters.lock().unwrap();
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    /// Increment a counter by `delta`.
+    pub fn incr(&self, name: &str, delta: u64) {
+        self.counter(name).fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Read a counter (0 if absent).
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Get or create a histogram.
+    pub fn histogram(&self, name: &str) -> Arc<LogHistogram> {
+        let mut map = self.histograms.lock().unwrap();
+        Arc::clone(map.entry(name.to_string()).or_insert_with(|| Arc::new(LogHistogram::new())))
+    }
+
+    /// Record a full latency breakdown under a prefix.
+    pub fn record_breakdown(&self, prefix: &str, b: &LatencyBreakdown) {
+        self.histogram(&format!("{prefix}.queue_ms")).record_ms(b.queue_ms);
+        self.histogram(&format!("{prefix}.encode_ms")).record_ms(b.encode_ms);
+        self.histogram(&format!("{prefix}.transfer_ms")).record_ms(b.transfer_ms);
+        self.histogram(&format!("{prefix}.decode_ms")).record_ms(b.decode_ms);
+        self.histogram(&format!("{prefix}.compute_ms")).record_ms(b.compute_ms);
+        self.histogram(&format!("{prefix}.total_ms")).record_ms(b.total_ms());
+    }
+
+    /// Snapshot everything as JSON (for `stats` RPC and reports).
+    pub fn snapshot(&self) -> Value {
+        let mut counters = ObjBuilder::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            counters = counters.field(k, v.load(Ordering::Relaxed) as usize);
+        }
+        let mut hists = ObjBuilder::new();
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            hists = hists.field(
+                k,
+                ObjBuilder::new()
+                    .field("count", h.count() as usize)
+                    .field("mean_ms", h.mean_ms())
+                    .field("p50_ms", h.quantile_ms(0.5))
+                    .field("p99_ms", h.quantile_ms(0.99))
+                    .field("max_ms", h.max_ms())
+                    .build(),
+            );
+        }
+        ObjBuilder::new()
+            .field("counters", counters.build())
+            .field("histograms", hists.build())
+            .build()
+    }
+
+    /// Human-readable report.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{k}: {}\n", v.load(Ordering::Relaxed)));
+        }
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!("{k}: {}\n", h.summary()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let r = Registry::new();
+        r.incr("requests", 3);
+        r.incr("requests", 2);
+        assert_eq!(r.get("requests"), 5);
+        assert_eq!(r.get("missing"), 0);
+    }
+
+    #[test]
+    fn breakdown_total() {
+        let b = LatencyBreakdown {
+            queue_ms: 0.5,
+            encode_ms: 1.0,
+            transfer_ms: 2.0,
+            decode_ms: 0.5,
+            compute_ms: 1.0,
+        };
+        assert!((b.total_ms() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn record_breakdown_populates_histograms() {
+        let r = Registry::new();
+        let b = LatencyBreakdown {
+            queue_ms: 0.0,
+            encode_ms: 1.0,
+            transfer_ms: 4.0,
+            decode_ms: 0.5,
+            compute_ms: 0.5,
+        };
+        r.record_breakdown("edge", &b);
+        assert_eq!(r.histogram("edge.total_ms").count(), 1);
+        assert!(r.histogram("edge.transfer_ms").mean_ms() > 3.5);
+    }
+
+    #[test]
+    fn snapshot_is_valid_json() {
+        let r = Registry::new();
+        r.incr("a", 1);
+        r.histogram("lat").record_ms(2.0);
+        let v = r.snapshot();
+        let text = v.to_string_pretty();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("counters").unwrap().get("a").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn concurrent_counter_updates() {
+        let r = std::sync::Arc::new(Registry::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let r = std::sync::Arc::clone(&r);
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        r.incr("hits", 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(r.get("hits"), 8000);
+    }
+}

@@ -1,0 +1,13 @@
+//! Metrics and latency accounting.
+//!
+//! The paper decomposes split-computing latency into four factors
+//! (§2.2): edge encode, wireless transfer, cloud decode, and GPU
+//! integration + tail compute. [`LatencyBreakdown`] carries exactly that
+//! decomposition per request; [`Registry`] aggregates counters and
+//! log-bucketed histograms across the serving stack.
+
+pub mod histogram;
+pub mod metrics;
+
+pub use histogram::LogHistogram;
+pub use metrics::{LatencyBreakdown, Registry};

@@ -1,0 +1,158 @@
+//! Mini property-testing framework.
+//!
+//! proptest is unavailable offline, so the crate carries a compact
+//! equivalent used by the integration suites: seeded generation from
+//! [`crate::util::prng::Rng`], a fixed case budget, failure reporting
+//! with the reproducing seed, and greedy shrinking for slice-shaped
+//! inputs. Property tests across the repo call [`check`] /
+//! [`check_shrink`]; override the base seed with `RANS_SC_PROP_SEED` to
+//! replay a failure.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::util::prng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 128;
+
+/// Base seed: env `RANS_SC_PROP_SEED` or a fixed default.
+pub fn base_seed() -> u64 {
+    std::env::var("RANS_SC_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Outcome of a single property evaluation.
+fn holds<T>(prop: &(impl Fn(&T) -> bool + std::panic::RefUnwindSafe), input: &T) -> bool
+where
+    T: std::panic::RefUnwindSafe,
+{
+    catch_unwind(AssertUnwindSafe(|| prop(input))).unwrap_or(false)
+}
+
+/// Run `prop` over `cases` generated inputs; panics with the seed and a
+/// debug dump of the failing input on the first counterexample.
+pub fn check<T: std::fmt::Debug + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: usize,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> bool + std::panic::RefUnwindSafe,
+) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if !holds(&prop, &input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}):\n{input:#?}\n\
+                 replay with RANS_SC_PROP_SEED={}",
+                base
+            );
+        }
+    }
+}
+
+/// Like [`check`] for `Vec` inputs, with greedy shrinking: on failure,
+/// repeatedly tries dropping halves and single elements while the
+/// property still fails, then reports the minimized counterexample.
+pub fn check_shrink<E: Clone + std::fmt::Debug + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: usize,
+    gen: impl Fn(&mut Rng) -> Vec<E>,
+    prop: impl Fn(&Vec<E>) -> bool + std::panic::RefUnwindSafe,
+) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if !holds(&prop, &input) {
+            let minimized = shrink_vec(input, &prop);
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x});\n\
+                 minimized counterexample ({} elems):\n{minimized:#?}\n\
+                 replay with RANS_SC_PROP_SEED={}",
+                minimized.len(),
+                base
+            );
+        }
+    }
+}
+
+/// Greedy shrink: drop chunks (halves, quarters, …) then single
+/// elements, keeping any reduction that still fails the property.
+pub fn shrink_vec<E: Clone + std::panic::RefUnwindSafe>(
+    mut failing: Vec<E>,
+    prop: &(impl Fn(&Vec<E>) -> bool + std::panic::RefUnwindSafe),
+) -> Vec<E> {
+    debug_assert!(!holds(prop, &failing));
+    let mut chunk = failing.len() / 2;
+    while chunk >= 1 {
+        let mut i = 0;
+        while i + chunk <= failing.len() {
+            let mut candidate = failing.clone();
+            candidate.drain(i..i + chunk);
+            if !holds(prop, &candidate) {
+                failing = candidate; // keep the smaller failure
+                // do not advance i: the next chunk shifted into place
+            } else {
+                i += chunk;
+            }
+        }
+        chunk /= 2;
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("u64 halves", 64, |r| r.next_u64(), |&x| x / 2 <= x);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports() {
+        check("always fails", 8, |r| r.next_u64(), |_| false);
+    }
+
+    #[test]
+    fn shrink_minimizes() {
+        // Property: "no element is >= 100". Failing input has some large
+        // elements; shrink should reduce to exactly one offending element.
+        let prop = |v: &Vec<u32>| v.iter().all(|&x| x < 100);
+        let failing = vec![1, 2, 500, 3, 4, 700, 5];
+        let min = shrink_vec(failing, &prop);
+        assert_eq!(min.len(), 1);
+        assert!(min[0] >= 100);
+    }
+
+    #[test]
+    fn shrink_handles_panicking_property() {
+        // Property panics on bad input instead of returning false.
+        let prop = |v: &Vec<u32>| {
+            if v.contains(&7) {
+                panic!("boom");
+            }
+            true
+        };
+        let min = shrink_vec(vec![1, 7, 2, 7, 3], &prop);
+        assert_eq!(min, vec![7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimized counterexample (1 elems)")]
+    fn check_shrink_reports_minimized() {
+        check_shrink(
+            "no 42s",
+            32,
+            |r| (0..50).map(|_| r.below(64) as u32).collect(),
+            |v| !v.contains(&42),
+        );
+    }
+}

@@ -1,0 +1,207 @@
+//! Bit-level I/O.
+//!
+//! LSB-first bit packing used by the tANS baseline and by the container
+//! format's compact headers. The rANS coders do whole-`u32`/`u16` flushes
+//! and do not need sub-byte I/O, but tANS emits per-symbol variable bit
+//! counts, so a real bit writer/reader is required.
+
+/// Append-only LSB-first bit writer backed by a `Vec<u8>`.
+#[derive(Default, Debug, Clone)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Bits currently buffered in `acc` (0..=63).
+    nbits: u32,
+    acc: u64,
+}
+
+impl BitWriter {
+    /// New empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the low `n` bits of `value` (n ≤ 57 per call).
+    #[inline]
+    pub fn write_bits(&mut self, value: u64, n: u32) {
+        debug_assert!(n <= 57, "write_bits supports at most 57 bits per call");
+        debug_assert!(n == 64 || value < (1u64 << n), "value has bits above n");
+        self.acc |= value << self.nbits;
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.buf.push((self.acc & 0xFF) as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    /// Number of whole bits written so far.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+
+    /// Flush any partial byte (zero-padded) and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.buf.push((self.acc & 0xFF) as u8);
+        }
+        self.buf
+    }
+}
+
+/// LSB-first bit reader over a byte slice.
+#[derive(Debug, Clone)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    /// Next byte index to load.
+    pos: usize,
+    nbits: u32,
+    acc: u64,
+}
+
+impl<'a> BitReader<'a> {
+    /// Reader positioned at the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0, nbits: 0, acc: 0 }
+    }
+
+    /// Read `n` bits (n ≤ 57). Returns `None` past end of stream.
+    #[inline]
+    pub fn read_bits(&mut self, n: u32) -> Option<u64> {
+        debug_assert!(n <= 57);
+        while self.nbits < n {
+            let byte = *self.buf.get(self.pos)?;
+            self.acc |= (byte as u64) << self.nbits;
+            self.nbits += 8;
+            self.pos += 1;
+        }
+        let mask = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+        let out = self.acc & mask;
+        self.acc >>= n;
+        self.nbits -= n;
+        Some(out)
+    }
+
+    /// Bits remaining (including buffered ones).
+    pub fn remaining_bits(&self) -> usize {
+        (self.buf.len() - self.pos) * 8 + self.nbits as usize
+    }
+}
+
+/// A reverse bit reader: reads bits from the *end* of the stream backwards.
+///
+/// tANS decodes in the reverse order of encoding; writing forward and
+/// reading backward avoids buffering the whole symbol stream twice.
+#[derive(Debug, Clone)]
+pub struct RevBitReader<'a> {
+    buf: &'a [u8],
+    /// Total valid bits in the stream (writer may have zero-padded).
+    bit_pos: usize,
+}
+
+impl<'a> RevBitReader<'a> {
+    /// Reader positioned `valid_bits` from the start; reads move backwards.
+    pub fn new(buf: &'a [u8], valid_bits: usize) -> Self {
+        debug_assert!(valid_bits <= buf.len() * 8);
+        RevBitReader { buf, bit_pos: valid_bits }
+    }
+
+    /// Read the `n` bits that were written immediately before the cursor,
+    /// returning them in their original (written) order.
+    #[inline]
+    pub fn read_bits_rev(&mut self, n: u32) -> Option<u64> {
+        if (self.bit_pos as u64) < n as u64 {
+            return None;
+        }
+        self.bit_pos -= n as usize;
+        let mut out = 0u64;
+        for i in 0..n as usize {
+            let bit_index = self.bit_pos + i;
+            let byte = self.buf[bit_index / 8];
+            let bit = (byte >> (bit_index % 8)) & 1;
+            out |= (bit as u64) << i;
+        }
+        Some(out)
+    }
+
+    /// Bits left before the cursor hits the start of the stream.
+    pub fn remaining_bits(&self) -> usize {
+        self.bit_pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip_fixed_widths() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bits(0xFF, 8);
+        w.write_bits(0, 1);
+        w.write_bits(0x1234, 16);
+        let bits = w.bit_len();
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read_bits(3), Some(0b101));
+        assert_eq!(r.read_bits(8), Some(0xFF));
+        assert_eq!(r.read_bits(1), Some(0));
+        assert_eq!(r.read_bits(16), Some(0x1234));
+        assert_eq!(bits, 28);
+    }
+
+    #[test]
+    fn roundtrip_random_widths() {
+        let mut rng = Rng::new(99);
+        let items: Vec<(u64, u32)> = (0..2000)
+            .map(|_| {
+                let n = rng.range_u64(1, 57) as u32;
+                let v = rng.next_u64() & ((1u64 << n) - 1);
+                (v, n)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &(v, n) in &items {
+            w.write_bits(v, n);
+        }
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        for &(v, n) in &items {
+            assert_eq!(r.read_bits(n), Some(v));
+        }
+    }
+
+    #[test]
+    fn reverse_reader_mirrors_writes() {
+        let mut w = BitWriter::new();
+        let items: &[(u64, u32)] = &[(0b1, 1), (0b1010, 4), (0x3F, 6), (0x155, 9)];
+        for &(v, n) in items {
+            w.write_bits(v, n);
+        }
+        let valid = w.bit_len();
+        let buf = w.finish();
+        let mut r = RevBitReader::new(&buf, valid);
+        for &(v, n) in items.iter().rev() {
+            assert_eq!(r.read_bits_rev(n), Some(v), "width {n}");
+        }
+        assert_eq!(r.remaining_bits(), 0);
+    }
+
+    #[test]
+    fn read_past_end_is_none() {
+        let buf = [0xAAu8];
+        let mut r = BitReader::new(&buf);
+        assert!(r.read_bits(8).is_some());
+        assert!(r.read_bits(1).is_none());
+        let mut rr = RevBitReader::new(&buf, 8);
+        assert!(rr.read_bits_rev(9).is_none());
+        assert!(rr.read_bits_rev(8).is_some());
+        assert!(rr.read_bits_rev(1).is_none());
+    }
+
+    #[test]
+    fn empty_writer_finishes_empty() {
+        assert!(BitWriter::new().finish().is_empty());
+    }
+}

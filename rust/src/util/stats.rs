@@ -1,0 +1,189 @@
+//! Summary statistics and information-theoretic helpers.
+//!
+//! The reshape optimizer needs Shannon entropy of empirical frequency
+//! vectors (Eq. 1); benches need mean/std/percentiles with the same
+//! semantics the paper reports (mean ± std across trials).
+
+/// Shannon entropy in bits/symbol of a frequency vector.
+///
+/// Zero-frequency entries contribute nothing. Returns 0 for an empty or
+/// all-zero vector.
+pub fn shannon_entropy(freqs: &[u64]) -> f64 {
+    let total: u64 = freqs.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let n = total as f64;
+    let mut h = 0.0;
+    for &f in freqs {
+        if f > 0 {
+            let p = f as f64 / n;
+            h -= p * p.log2();
+        }
+    }
+    h
+}
+
+/// Expected compressed size in *bits* for `total` symbols at entropy `h`
+/// (the paper's `η = N · H`, Eq. 1).
+pub fn entropy_bits(freqs: &[u64]) -> f64 {
+    let total: u64 = freqs.iter().sum();
+    shannon_entropy(freqs) * total as f64
+}
+
+/// Compression ratio `ρ = η / (N · log2 A)` (Eq. 1): how close the coded
+/// length is to the ideal uniform-alphabet length. Lower is better.
+pub fn compression_ratio(freqs: &[u64], alphabet: usize) -> f64 {
+    let total: u64 = freqs.iter().sum();
+    if total == 0 || alphabet <= 1 {
+        return 0.0;
+    }
+    entropy_bits(freqs) / (total as f64 * (alphabet as f64).log2())
+}
+
+/// Build a frequency histogram over `symbols` with alphabet size `m`.
+/// Panics in debug builds if a symbol exceeds the alphabet.
+pub fn histogram(symbols: &[u32], m: usize) -> Vec<u64> {
+    let mut freqs = vec![0u64; m];
+    for &s in symbols {
+        debug_assert!((s as usize) < m, "symbol {s} outside alphabet {m}");
+        freqs[s as usize] += 1;
+    }
+    freqs
+}
+
+/// Online mean/variance accumulator (Welford) plus min/max.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    /// Fold in one observation.
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Observation count.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    /// Arithmetic mean (0 if empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.mean }
+    }
+    /// Sample standard deviation (0 for n < 2).
+    pub fn std(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { (self.m2 / (self.n - 1) as f64).sqrt() }
+    }
+    /// Minimum observed value.
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    /// Maximum observed value.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Fold a batch of observations.
+    pub fn extend(&mut self, xs: impl IntoIterator<Item = f64>) {
+        for x in xs {
+            self.add(x);
+        }
+    }
+}
+
+/// Exact percentile of a sample (linear interpolation between ranks).
+/// `q` in `[0, 1]`. Sorts a copy — fine for bench-sized samples.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty sample");
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_uniform_is_log2() {
+        let freqs = vec![10u64; 16];
+        assert!((shannon_entropy(&freqs) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_degenerate_is_zero() {
+        assert_eq!(shannon_entropy(&[100, 0, 0, 0]), 0.0);
+        assert_eq!(shannon_entropy(&[]), 0.0);
+        assert_eq!(shannon_entropy(&[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn entropy_skew_below_uniform() {
+        let skewed = [1000u64, 10, 5, 1];
+        let uniform = [254u64; 4];
+        assert!(shannon_entropy(&skewed) < shannon_entropy(&uniform));
+    }
+
+    #[test]
+    fn ratio_bounds() {
+        // Uniform over full alphabet → ratio 1.
+        let freqs = vec![5u64; 32];
+        assert!((compression_ratio(&freqs, 32) - 1.0).abs() < 1e-12);
+        // Single symbol → ratio 0.
+        let freqs = [77u64, 0, 0, 0];
+        assert_eq!(compression_ratio(&freqs, 4), 0.0);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let h = histogram(&[0, 1, 1, 3, 3, 3], 4);
+        assert_eq!(h, vec![1, 2, 0, 3]);
+    }
+
+    #[test]
+    fn summary_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut s = Summary::new();
+        s.extend(xs.iter().copied());
+        assert_eq!(s.count(), 5);
+        assert!((s.mean() - 4.0).abs() < 1e-12);
+        let naive_var = xs.iter().map(|x| (x - 4.0) * (x - 4.0)).sum::<f64>() / 4.0;
+        assert!((s.std() - naive_var.sqrt()).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 10.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert_eq!(percentile(&xs, 0.5), 5.0);
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 1.0), 10.0);
+        let xs = [3.0, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.5), 2.0);
+    }
+}

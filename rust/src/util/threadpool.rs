@@ -1,0 +1,197 @@
+//! A small fixed-size thread pool.
+//!
+//! Used by the multi-lane (DietGPU-style) interleaved rANS codec and by
+//! the coordinator's request router. tokio is unavailable offline; the
+//! serving stack is thread-based, which is also closer to how a GPU
+//! implementation partitions lanes across SMs — a fixed worker set with
+//! explicit work handoff.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool with panic isolation.
+pub struct ThreadPool {
+    workers: Vec<JoinHandle<()>>,
+    tx: Option<Sender<Job>>,
+    panics: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (size ≥ 1 enforced).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let panics = Arc::new(AtomicUsize::new(0));
+        let workers = (0..size)
+            .map(|i| {
+                let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
+                let panics = Arc::clone(&panics);
+                std::thread::Builder::new()
+                    .name(format!("rans-sc-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().expect("pool receiver poisoned");
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                    panics.fetch_add(1, Ordering::SeqCst);
+                                }
+                            }
+                            Err(_) => break, // all senders dropped
+                        }
+                    })
+                    .expect("failed to spawn worker thread")
+            })
+            .collect();
+        ThreadPool { workers, tx: Some(tx), panics }
+    }
+
+    /// Pool sized to the machine (`available_parallelism`, min 2).
+    pub fn with_default_size() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n.max(2))
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(job))
+            .expect("pool workers gone");
+    }
+
+    /// Number of jobs that panicked so far.
+    pub fn panic_count(&self) -> usize {
+        self.panics.load(Ordering::SeqCst)
+    }
+
+    /// Run `f` over `items` in parallel, preserving order of results.
+    ///
+    /// Blocks until all items are processed. Panics in `f` are propagated
+    /// as a panic here (after all workers finish their share).
+    pub fn map<T, R>(&self, items: Vec<T>, f: impl Fn(T) -> R + Send + Sync) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let panicked = AtomicUsize::new(0);
+        // Scoped threads let us borrow f and out without 'static bounds;
+        // chunk the items across pool-size lanes.
+        let lanes = self.size().min(n);
+        let items = Mutex::new(items.into_iter().enumerate().collect::<Vec<_>>());
+        let out_ref = Mutex::new(&mut out);
+        std::thread::scope(|scope| {
+            for _ in 0..lanes {
+                scope.spawn(|| loop {
+                    let next = { items.lock().unwrap().pop() };
+                    match next {
+                        Some((idx, item)) => {
+                            match catch_unwind(AssertUnwindSafe(|| f(item))) {
+                                Ok(r) => {
+                                    let mut guard = out_ref.lock().unwrap();
+                                    guard[idx] = Some(r);
+                                }
+                                Err(_) => {
+                                    panicked.fetch_add(1, Ordering::SeqCst);
+                                }
+                            }
+                        }
+                        None => break,
+                    }
+                });
+            }
+        });
+        if panicked.load(Ordering::SeqCst) > 0 {
+            panic!("{} parallel map item(s) panicked", panicked.load(Ordering::SeqCst));
+        }
+        out.into_iter().map(|r| r.expect("missing map result")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect(), |x: i32| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_empty_is_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<i32> = pool.map(Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_pool() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&counter);
+        pool.execute(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "parallel map item")]
+    fn map_propagates_panics() {
+        let pool = ThreadPool::new(2);
+        let _ = pool.map(vec![1, 2, 3], |x| {
+            if x == 2 {
+                panic!("bad item")
+            } else {
+                x
+            }
+        });
+    }
+}

@@ -1,0 +1,116 @@
+//! Wall-clock measurement helpers shared by benches and telemetry.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// A simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn new() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Elapsed time since construction / last reset.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed milliseconds as f64.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Restart and return the lap time.
+    pub fn lap(&mut self) -> Duration {
+        let now = Instant::now();
+        let d = now - self.start;
+        self.start = now;
+        d
+    }
+}
+
+/// Timing result of [`measure`]: per-iteration stats in milliseconds.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Per-trial wall times, milliseconds.
+    pub samples_ms: Vec<f64>,
+    /// Summary over `samples_ms`.
+    pub summary: Summary,
+}
+
+impl Measurement {
+    /// Mean milliseconds per trial.
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean()
+    }
+    /// Sample std-dev of milliseconds per trial.
+    pub fn std_ms(&self) -> f64 {
+        self.summary.std()
+    }
+    /// Format as the paper's `mean(std)` convention.
+    pub fn fmt_mean_std(&self) -> String {
+        format!("{:.3}({:.3})", self.mean_ms(), self.std_ms())
+    }
+}
+
+/// Run `f` for `warmup` unmeasured iterations then `trials` measured
+/// ones, returning per-trial wall times. `f`'s return value is passed to
+/// `std::hint::black_box` to keep the optimizer honest.
+pub fn measure<T>(warmup: usize, trials: usize, mut f: impl FnMut() -> T) -> Measurement {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(trials);
+    let mut summary = Summary::new();
+    for _ in 0..trials {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        samples.push(ms);
+        summary.add(ms);
+    }
+    Measurement { samples_ms: samples, summary }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_measures_something() {
+        let sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.elapsed_ms() >= 1.0);
+    }
+
+    #[test]
+    fn measure_runs_expected_counts() {
+        let mut calls = 0;
+        let m = measure(3, 5, || {
+            calls += 1;
+            calls
+        });
+        assert_eq!(calls, 8);
+        assert_eq!(m.samples_ms.len(), 5);
+        assert_eq!(m.summary.count(), 5);
+    }
+
+    #[test]
+    fn fmt_mean_std_shape() {
+        let m = measure(0, 2, || 1 + 1);
+        let s = m.fmt_mean_std();
+        assert!(s.contains('(') && s.ends_with(')'));
+    }
+}

@@ -1,0 +1,140 @@
+//! LEB128 variable-length integers.
+//!
+//! Used by the container format to pack frequency tables and header
+//! fields: most symbol frequencies are small, so varints shrink the
+//! side-information the decoder needs (the paper transmits the frequency
+//! vector `F` alongside the bitstream).
+
+use crate::error::{Error, Result};
+
+/// Append `value` as unsigned LEB128.
+#[inline]
+pub fn write_u64(buf: &mut Vec<u8>, mut value: u64) {
+    loop {
+        let byte = (value & 0x7F) as u8;
+        value >>= 7;
+        if value == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+/// Append `value` as unsigned LEB128 (usize convenience).
+#[inline]
+pub fn write_usize(buf: &mut Vec<u8>, value: usize) {
+    write_u64(buf, value as u64)
+}
+
+/// Decode an unsigned LEB128 from `buf[*pos..]`, advancing `pos`.
+#[inline]
+pub fn read_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut out = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let byte = *buf
+            .get(*pos)
+            .ok_or_else(|| Error::corrupt("varint truncated"))?;
+        *pos += 1;
+        if shift == 63 && byte > 1 {
+            return Err(Error::corrupt("varint overflows u64"));
+        }
+        out |= ((byte & 0x7F) as u64) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(out);
+        }
+        shift += 7;
+        if shift > 63 {
+            return Err(Error::corrupt("varint too long"));
+        }
+    }
+}
+
+/// Decode an unsigned LEB128 as usize.
+#[inline]
+pub fn read_usize(buf: &[u8], pos: &mut usize) -> Result<usize> {
+    let v = read_u64(buf, pos)?;
+    usize::try_from(v).map_err(|_| Error::corrupt("varint exceeds usize"))
+}
+
+/// ZigZag-encode a signed value then LEB128 it.
+#[inline]
+pub fn write_i64(buf: &mut Vec<u8>, value: i64) {
+    write_u64(buf, ((value << 1) ^ (value >> 63)) as u64)
+}
+
+/// Inverse of [`write_i64`].
+#[inline]
+pub fn read_i64(buf: &[u8], pos: &mut usize) -> Result<i64> {
+    let z = read_u64(buf, pos)?;
+    Ok(((z >> 1) as i64) ^ -((z & 1) as i64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip_edges() {
+        for v in [0u64, 1, 127, 128, 16383, 16384, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            write_u64(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(read_u64(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn roundtrip_signed() {
+        for v in [0i64, -1, 1, -64, 63, i64::MIN, i64::MAX, -123456789] {
+            let mut buf = Vec::new();
+            write_i64(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(read_i64(&buf, &mut pos).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_stream() {
+        let mut rng = Rng::new(21);
+        let vals: Vec<u64> = (0..5000).map(|_| rng.next_u64() >> (rng.below(64) as u32)).collect();
+        let mut buf = Vec::new();
+        for &v in &vals {
+            write_u64(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &vals {
+            assert_eq!(read_u64(&buf, &mut pos).unwrap(), v);
+        }
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn truncated_errors() {
+        let mut buf = Vec::new();
+        write_u64(&mut buf, u64::MAX);
+        buf.pop();
+        let mut pos = 0;
+        assert!(read_u64(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn overlong_errors() {
+        // 11 continuation bytes is always invalid for u64.
+        let buf = vec![0x80u8; 11];
+        let mut pos = 0;
+        assert!(read_u64(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn small_values_are_one_byte() {
+        for v in 0..128u64 {
+            let mut buf = Vec::new();
+            write_u64(&mut buf, v);
+            assert_eq!(buf.len(), 1);
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Property tests on the reshape optimizer, the channel model, the JSON
+//! substrate and the tANS baseline (no artifacts required).
+
+use rans_sc::channel::{ChannelParams, OutageChannel};
+use rans_sc::quant::{quantize, QuantParams};
+use rans_sc::rans::FreqTable;
+use rans_sc::reshape::{self, optimizer::OptimizerConfig};
+use rans_sc::tans::{tans_decode, tans_encode};
+use rans_sc::testutil;
+use rans_sc::util::json::{self, ObjBuilder, Value};
+use rans_sc::util::prng::Rng;
+
+fn gen_symbols(rng: &mut Rng) -> (Vec<u16>, u8, u16) {
+    let q = *rng.choose(&[2u8, 3, 4, 6, 8]);
+    let len = 64 + rng.below_usize(8000);
+    let sparsity = 0.3 + rng.next_f64() * 0.6;
+    let data: Vec<f32> = (0..len)
+        .map(|_| if rng.next_f64() < sparsity { 0.0 } else { rng.normal().abs() as f32 })
+        .collect();
+    let params = QuantParams::fit(q, &data).unwrap();
+    (quantize(&data, &params), q, params.zero_symbol())
+}
+
+#[test]
+fn prop_optimizer_choice_in_constrained_domain() {
+    testutil::check(
+        "Ñ satisfies N|T, N>√T (when feasible), K ≤ 2^Q",
+        40,
+        |rng| gen_symbols(rng),
+        |(symbols, q, bg)| {
+            let cfg = OptimizerConfig::paper(*q);
+            let out = match reshape::optimize(symbols, *bg, &cfg) {
+                Ok(o) => o,
+                Err(_) => return false,
+            };
+            let t = symbols.len();
+            let n = out.best.n;
+            t % n == 0 && t / n <= (1usize << q) && out.evaluated <= out.domain_size
+        },
+    );
+}
+
+#[test]
+fn prop_optimizer_never_beats_oracle() {
+    testutil::check(
+        "T_tot(Ñ) ≥ T_tot(N*) and within 10%",
+        25,
+        |rng| gen_symbols(rng),
+        |(symbols, q, bg)| {
+            let cfg = OptimizerConfig::paper(*q);
+            let a = reshape::optimize(symbols, *bg, &cfg);
+            let o = reshape::exhaustive_search(symbols, *bg, &cfg, true);
+            match (a, o) {
+                (Ok(a), Ok(o)) => {
+                    a.best.t_tot_bits >= o.best.t_tot_bits - 1e-9
+                        && a.best.t_tot_bits <= o.best.t_tot_bits.max(1.0) * 1.10 + 64.0
+                }
+                _ => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_channel_latency_monotone_in_size_and_snr() {
+    testutil::check(
+        "T_comm monotone: more bytes slower, more SNR faster",
+        60,
+        |rng| {
+            let gamma = rng.next_f64() * 30.0;
+            let bytes = 1 + rng.below_usize(1 << 22);
+            (gamma, bytes)
+        },
+        |(gamma, bytes)| {
+            let ch = OutageChannel::new(ChannelParams { gamma_db: *gamma, ..Default::default() })
+                .unwrap();
+            let ch_hi =
+                OutageChannel::new(ChannelParams { gamma_db: gamma + 3.0, ..Default::default() })
+                    .unwrap();
+            ch.comm_latency_s(*bytes) < ch.comm_latency_s(bytes + 1000)
+                && ch_hi.comm_latency_s(*bytes) < ch.comm_latency_s(*bytes)
+        },
+    );
+}
+
+#[test]
+fn prop_tans_roundtrip_random_tables() {
+    testutil::check(
+        "tANS roundtrip over random distributions",
+        25,
+        |rng| {
+            let alphabet = 2 + rng.below_usize(128);
+            let skew = 0.3 + rng.next_f64() * 2.0;
+            let len = rng.below_usize(4000);
+            let symbols: Vec<u32> =
+                (0..len).map(|_| rng.zipf(alphabet, skew) as u32).collect();
+            (symbols, alphabet)
+        },
+        |(symbols, alphabet)| {
+            let table = FreqTable::from_symbols(symbols, *alphabet);
+            match tans_encode(symbols, &table)
+                .and_then(|b| tans_decode(&b, symbols.len(), &table))
+            {
+                Ok(back) => back == *symbols,
+                Err(_) => false,
+            }
+        },
+    );
+}
+
+fn gen_json_value(rng: &mut Rng, depth: usize) -> Value {
+    match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+        0 => Value::Null,
+        1 => Value::Bool(rng.next_f64() < 0.5),
+        2 => Value::Num((rng.next_u64() % 1_000_000) as f64 - 500_000.0),
+        3 => {
+            let len = rng.below_usize(12);
+            Value::Str(
+                (0..len)
+                    .map(|_| char::from_u32(32 + rng.next_u64() as u32 % 90).unwrap())
+                    .collect(),
+            )
+        }
+        4 => Value::Arr((0..rng.below_usize(5)).map(|_| gen_json_value(rng, depth + 1)).collect()),
+        _ => {
+            let mut b = ObjBuilder::new();
+            for i in 0..rng.below_usize(5) {
+                b = b.field(&format!("k{i}"), gen_json_value(rng, depth + 1));
+            }
+            b.build()
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_trees() {
+    testutil::check(
+        "json parse ∘ write = id",
+        120,
+        |rng| gen_json_value(rng, 0),
+        |v| {
+            let compact = json::parse(&v.to_string_compact());
+            let pretty = json::parse(&v.to_string_pretty());
+            compact.as_ref().ok() == Some(v) && pretty.as_ref().ok() == Some(v)
+        },
+    );
+}

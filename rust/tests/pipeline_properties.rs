@@ -1,0 +1,188 @@
+//! Property-based integration tests over the compression stack
+//! (no artifacts required).
+
+use rans_sc::pipeline::{self, PipelineConfig, ReshapeStrategy};
+use rans_sc::quant::{quantize, QuantParams};
+use rans_sc::rans::{decode, encode, FreqTable};
+use rans_sc::sparse::ModCsr;
+use rans_sc::testutil;
+use rans_sc::util::prng::Rng;
+
+/// Generate a random tensor with random sparsity/scale/shift.
+fn gen_tensor(rng: &mut Rng) -> Vec<f32> {
+    let len = 1 + rng.below_usize(20_000);
+    let sparsity = rng.next_f64();
+    let scale = *rng.choose(&[0.01f32, 1.0, 50.0]);
+    let shift = *rng.choose(&[-4.0f32, 0.0, 2.0]);
+    (0..len)
+        .map(|_| {
+            if rng.next_f64() < sparsity {
+                0.0
+            } else {
+                rng.normal() as f32 * scale + shift
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_pipeline_symbol_roundtrip() {
+    testutil::check(
+        "pipeline symbol roundtrip across Q and strategies",
+        40,
+        |rng| {
+            let data = gen_tensor(rng);
+            let q = *rng.choose(&[2u8, 3, 4, 6, 8]);
+            let strat = match rng.below(3) {
+                0 => ReshapeStrategy::Optimize,
+                1 => ReshapeStrategy::Flat,
+                _ => ReshapeStrategy::Optimize,
+            };
+            (data, q, strat)
+        },
+        |(data, q, strat)| {
+            let params = match QuantParams::fit(*q, data) {
+                Ok(p) => p,
+                Err(_) => return false,
+            };
+            let symbols = quantize(data, &params);
+            let cfg = PipelineConfig {
+                q: *q,
+                lanes: 4,
+                parallel: false,
+                reshape: strat.clone(),
+            };
+            let (bytes, _) = match pipeline::compress_quantized(&symbols, params, &cfg) {
+                Ok(x) => x,
+                Err(_) => return false,
+            };
+            match pipeline::decompress_to_symbols(&bytes, false) {
+                Ok((back, back_params)) => back == symbols && back_params == params,
+                Err(_) => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_pipeline_rejects_any_single_corruption() {
+    testutil::check(
+        "any single byte flip is rejected",
+        30,
+        |rng| {
+            let data = gen_tensor(rng);
+            let (bytes, _) =
+                pipeline::compress(&data, &PipelineConfig::paper(4)).expect("compress");
+            let pos = rng.below_usize(bytes.len());
+            let bit = 1u8 << rng.below(8);
+            (bytes, pos, bit)
+        },
+        |(bytes, pos, bit)| {
+            let mut bad = bytes.clone();
+            bad[*pos] ^= bit;
+            pipeline::decompress(&bad, false).is_err()
+        },
+    );
+}
+
+#[test]
+fn prop_rans_matches_entropy_budget() {
+    // Compressed size ≤ entropy bound within 5% + constant, for any
+    // distribution the generator produces.
+    testutil::check(
+        "rANS size near entropy",
+        30,
+        |rng| {
+            let alphabet = 2 + rng.below_usize(200);
+            let skew = 0.5 + rng.next_f64() * 2.0;
+            let len = 1000 + rng.below_usize(30_000);
+            let symbols: Vec<u32> = (0..len).map(|_| rng.zipf(alphabet, skew) as u32).collect();
+            (symbols, alphabet)
+        },
+        |(symbols, alphabet)| {
+            let table = FreqTable::from_symbols(symbols, *alphabet);
+            let bytes = match encode(symbols, &table) {
+                Ok(b) => b,
+                Err(_) => return false,
+            };
+            let freqs = rans_sc::util::stats::histogram(symbols, *alphabet);
+            let bound = rans_sc::util::stats::entropy_bits(&freqs) / 8.0;
+            // Normalization quantization costs a little; allow 8% + 64 B.
+            (bytes.len() as f64) < bound * 1.08 + 64.0
+        },
+    );
+}
+
+#[test]
+fn prop_rans_decode_inverse() {
+    testutil::check_shrink(
+        "rANS decode ∘ encode = id",
+        50,
+        |rng| {
+            let alphabet = 2 + rng.below_usize(64);
+            let len = rng.below_usize(5000);
+            (0..len).map(|_| rng.below(alphabet as u64) as u32).collect::<Vec<u32>>()
+        },
+        |symbols| {
+            let alphabet = symbols.iter().copied().max().unwrap_or(0) as usize + 1;
+            let table = FreqTable::from_symbols(symbols, alphabet);
+            match encode(symbols, &table).and_then(|b| decode(&b, symbols.len(), &table)) {
+                Ok(back) => back == *symbols,
+                Err(_) => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_csr_roundtrip_any_matrix() {
+    testutil::check(
+        "modified CSR roundtrip",
+        60,
+        |rng| {
+            let n = 1 + rng.below_usize(100);
+            let k = 1 + rng.below_usize(100);
+            let bg = rng.below(16) as u16;
+            let m: Vec<u16> = (0..n * k).map(|_| rng.below(16) as u16).collect();
+            (m, n, k, bg)
+        },
+        |(m, n, k, bg)| {
+            let csr = match ModCsr::encode(m, *n, *k, *bg) {
+                Ok(c) => c,
+                Err(_) => return false,
+            };
+            let d = csr.concat();
+            let back = ModCsr::from_concat(&d, csr.nnz(), *n, *k, *bg)
+                .and_then(|c| c.decode());
+            back.map(|x| x == *m).unwrap_or(false)
+        },
+    );
+}
+
+#[test]
+fn prop_quantize_error_bound() {
+    testutil::check(
+        "AIQ error ≤ one step",
+        60,
+        |rng| {
+            let data = gen_tensor(rng);
+            let q = *rng.choose(&[2u8, 3, 4, 6, 8]);
+            (data, q)
+        },
+        |(data, q)| {
+            let params = match QuantParams::fit(*q, data) {
+                Ok(p) => p,
+                Err(_) => return false,
+            };
+            let rec = rans_sc::quant::dequantize(&quantize(data, &params), &params);
+            let tol = params.scale + 1e-5;
+            data.iter().zip(&rec).all(|(a, b)| (a - b).abs() <= tol)
+                // Exact zeros reconstruct exactly when the range spans 0.
+                && data
+                    .iter()
+                    .zip(&rec)
+                    .filter(|(a, _)| **a == 0.0)
+                    .all(|(_, b)| *b == 0.0)
+        },
+    );
+}

@@ -1,0 +1,198 @@
+//! Artifact-gated integration tests: exercise the real PJRT runtime,
+//! the edge↔cloud loop, and both model families.
+//!
+//! Skipped (with a message) when `artifacts/manifest.json` is absent —
+//! run `make artifacts` first. Set `RANS_SC_ARTIFACTS` to point at a
+//! different artifact tree.
+
+use std::sync::Arc;
+
+use rans_sc::coordinator::{CloudNode, EdgeConfig, EdgeNode, InProcTransport, LmEdgeNode, Transport};
+use rans_sc::data::{lm_tasks::score_choices, McTask, VisionSet};
+use rans_sc::pipeline::{self, PipelineConfig};
+use rans_sc::runtime::{Engine, ExecPool, LmSplitExec, Manifest, VisionSplitExec};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("RANS_SC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts at {dir} (run `make artifacts`)");
+        None
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[test]
+fn vision_head_tail_roundtrip_matches_raw_path() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let pool = ExecPool::new(engine, dir.as_str());
+    let entry = &manifest.vision[0];
+    let split = &entry.splits[0];
+    let exec =
+        VisionSplitExec::load(&pool, &manifest, &entry.name, split.sl, split.batch).unwrap();
+    let set = VisionSet::load(manifest.resolve(&entry.test_data)).unwrap();
+    let (xs, _) = set.batch(0, split.batch);
+
+    // Raw path.
+    let feat = exec.run_head_raw(&xs).unwrap();
+    assert_eq!(feat.len(), split.feature_len);
+    let logits_raw = exec.run_tail_raw(&feat).unwrap();
+    assert_eq!(logits_raw.len(), split.batch * entry.num_classes);
+
+    // Quantized path at a generous Q: predictions should agree with raw.
+    let (symbols, params) = exec.run_head(&xs, 8).unwrap();
+    assert_eq!(symbols.len(), split.feature_len);
+    let (container, _) =
+        pipeline::compress_quantized(&symbols, params, &PipelineConfig::paper(8)).unwrap();
+    let (dec_syms, dec_params) = pipeline::decompress_to_symbols(&container, true).unwrap();
+    assert_eq!(dec_syms, symbols);
+    let logits_q = exec.run_tail(&dec_syms, &dec_params).unwrap();
+    assert_eq!(logits_q.len(), logits_raw.len());
+    for b in 0..split.batch {
+        let r = argmax(&logits_raw[b * entry.num_classes..(b + 1) * entry.num_classes]);
+        let q = argmax(&logits_q[b * entry.num_classes..(b + 1) * entry.num_classes]);
+        assert_eq!(r, q, "Q=8 prediction diverged from raw at sample {b}");
+    }
+}
+
+#[test]
+fn head_symbols_respect_q_alphabet() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let pool = ExecPool::new(engine, dir.as_str());
+    let entry = &manifest.vision[0];
+    let split = &entry.splits[0];
+    let exec =
+        VisionSplitExec::load(&pool, &manifest, &entry.name, split.sl, split.batch).unwrap();
+    let set = VisionSet::load(manifest.resolve(&entry.test_data)).unwrap();
+    let (xs, _) = set.batch(1, split.batch);
+    for q in [2u8, 3, 4, 6, 8] {
+        let (symbols, params) = exec.run_head(&xs, q).unwrap();
+        let max = (1u16 << q) - 1;
+        assert!(symbols.iter().all(|&s| s <= max), "Q={q}");
+        assert_eq!(params.q, q);
+        assert!(params.scale > 0.0);
+    }
+}
+
+#[test]
+fn edge_cloud_inproc_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cloud = Arc::new(CloudNode::new(&dir).unwrap());
+    let manifest = Manifest::load(&dir).unwrap();
+    let entry = manifest.vision[0].clone();
+    let split = entry.splits[0].clone();
+
+    let (edge_end, mut cloud_end) = InProcTransport::pair();
+    let server = {
+        let cloud = Arc::clone(&cloud);
+        std::thread::spawn(move || cloud.serve_transport(&mut cloud_end as &mut dyn Transport))
+    };
+
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let pool = ExecPool::new(engine, dir.as_str());
+    let exec = Arc::new(
+        VisionSplitExec::load(&pool, &manifest, &entry.name, split.sl, split.batch).unwrap(),
+    );
+    let set = VisionSet::load(manifest.resolve(&entry.test_data)).unwrap();
+    let edge = EdgeNode::new(
+        Arc::clone(&exec),
+        edge_end,
+        EdgeConfig::paper(&entry.name, split.sl, split.batch, 4),
+    );
+    edge.ping().unwrap();
+    let (xs, _) = set.batch(0, split.batch);
+    let out = edge.infer(&xs).unwrap();
+    assert_eq!(out.logits.len(), split.batch * entry.num_classes);
+    assert!(out.payload_bytes > 0);
+    assert!(out.payload_bytes < split.feature_len * 4, "must beat raw f32");
+    assert!(out.breakdown.transfer_ms > 0.0);
+    let raw = edge.infer_raw(&xs).unwrap();
+    assert!(out.payload_bytes < raw.payload_bytes / 2, "≥2x reduction expected");
+    // Plan cache: second request reuses the plan.
+    let _ = edge.infer(&xs).unwrap();
+    let (hits, misses) = edge.plan_cache_stats();
+    assert_eq!(misses, 1);
+    assert!(hits >= 1);
+    drop(edge);
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn cloud_rejects_corrupt_container_gracefully() {
+    let Some(dir) = artifacts_dir() else { return };
+    use rans_sc::coordinator::{Frame, FrameKind};
+    let cloud = CloudNode::new(&dir).unwrap();
+    let manifest = cloud.manifest().clone();
+    let entry = &manifest.vision[0];
+    let split = &entry.splits[0];
+    let frame = Frame {
+        request_id: 5,
+        kind: FrameKind::InferVision {
+            model: entry.name.clone(),
+            sl: split.sl,
+            batch: split.batch,
+            payload: vec![0xAB; 256],
+        },
+    };
+    let reply = cloud.handle(&frame);
+    assert_eq!(reply.request_id, 5);
+    assert!(matches!(reply.kind, FrameKind::ServerError { .. }));
+    // Unknown model is also a clean error.
+    let frame = Frame {
+        request_id: 6,
+        kind: FrameKind::InferVision {
+            model: "not_a_model".into(),
+            sl: 1,
+            batch: 1,
+            payload: vec![],
+        },
+    };
+    assert!(matches!(cloud.handle(&frame).kind, FrameKind::ServerError { .. }));
+}
+
+#[test]
+fn lm_split_end_to_end_scores_items() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    if manifest.lm.is_empty() {
+        eprintln!("skipping: no LM artifacts");
+        return;
+    }
+    let cloud = Arc::new(CloudNode::new(&dir).unwrap());
+    let (edge_end, mut cloud_end) = InProcTransport::pair();
+    let server = {
+        let cloud = Arc::clone(&cloud);
+        std::thread::spawn(move || cloud.serve_transport(&mut cloud_end as &mut dyn Transport))
+    };
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let pool = ExecPool::new(engine, dir.as_str());
+    let lm_name = manifest.lm[0].name.clone();
+    let exec = Arc::new(LmSplitExec::load(&pool, &manifest, &lm_name).unwrap());
+    let lm = exec.entry.clone();
+    let task = McTask::load(manifest.resolve(&lm.tasks[0].path)).unwrap();
+    let edge = LmEdgeNode::new(
+        Arc::clone(&exec),
+        edge_end,
+        EdgeConfig::paper(&lm_name, lm.split, lm.batch, 6),
+    );
+    let item = &task.items[0];
+    let out = edge.infer(&task.item_batch(item)).unwrap();
+    assert_eq!(out.logits.len(), lm.batch * lm.seq_len * lm.vocab);
+    let pick = score_choices(&out.logits, &task, item);
+    assert!(pick < task.n_choices);
+    assert!(out.payload_bytes < lm.hidden_len * 4);
+    drop(edge);
+    server.join().unwrap().unwrap();
+}

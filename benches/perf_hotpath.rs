@@ -3,31 +3,88 @@
 //! Reports raw throughput of each pipeline stage in isolation so
 //! regressions localize: AIQ quantize, CSR encode/decode, frequency
 //! table build, rANS encode/decode (per-lane and multi-lane), container
-//! framing, and the end-to-end steady-state pipeline.
+//! framing, the scoped-thread fan-out baseline, and the persistent
+//! engine's pooled end-to-end path.
 //!
 //! Run: `cargo bench --bench perf_hotpath`
+//!
+//! Env:
+//! * `RANS_SC_BENCH_FAST=1` — reduced-iteration CI smoke mode
+//!   (1 warmup / 3 trials instead of 3 / 15).
+//! * `RANS_SC_BENCH_JSON=<path>` — also write the measurements as JSON
+//!   (default `BENCH_perf_hotpath.json`; set to `0` to disable). CI
+//!   uploads this artifact to record the perf trajectory over time.
 
+use rans_sc::engine::{ContainerFormat, Engine, EngineConfig};
 use rans_sc::eval::fixtures::synthetic_feature;
 use rans_sc::pipeline::{self, PipelineConfig, ReshapeStrategy};
 use rans_sc::quant::{quantize, QuantParams};
 use rans_sc::rans::{decode, decode_interleaved, encode, encode_interleaved, FreqTable};
 use rans_sc::reshape::{self, optimizer::OptimizerConfig};
 use rans_sc::sparse::ModCsr;
-use rans_sc::util::timer::measure;
+use rans_sc::util::json::{ObjBuilder, Value};
+use rans_sc::util::timer::{measure, Measurement};
 
 fn mbps(bytes: usize, ms: f64) -> f64 {
     bytes as f64 / 1e6 / (ms / 1e3)
 }
 
+/// Accumulates rows for both the stdout report and the JSON artifact.
+struct Report {
+    rows: Vec<(String, Measurement)>,
+}
+
+impl Report {
+    fn new() -> Self {
+        Report { rows: Vec::new() }
+    }
+
+    fn add(&mut self, name: &str, m: Measurement) -> &Measurement {
+        self.rows.push((name.to_string(), m));
+        &self.rows.last().unwrap().1
+    }
+
+    fn to_json(&self, t: usize, q: u8, fast: bool, warmup: usize, trials: usize) -> Value {
+        let rows: Vec<Value> = self
+            .rows
+            .iter()
+            .map(|(name, m)| {
+                ObjBuilder::new()
+                    .field("name", name.as_str())
+                    .field("mean_ms", m.mean_ms())
+                    .field("std_ms", m.std_ms())
+                    .build()
+            })
+            .collect();
+        ObjBuilder::new()
+            .field("bench", "perf_hotpath")
+            .field("t", t)
+            .field("q", q as usize)
+            .field("fast", fast)
+            .field("warmup", warmup)
+            .field("trials", trials)
+            .field("rows", rows)
+            .build()
+    }
+}
+
 fn main() {
+    // "0" and empty disable fast mode, matching RANS_SC_BENCH_JSON's
+    // convention; any other value enables it.
+    let fast = std::env::var("RANS_SC_BENCH_FAST")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let (warmup, trials) = if fast { (1, 3) } else { (3, 15) };
+    let mut report = Report::new();
+
     let data = synthetic_feature(4242, 128, 28, 28, 0.35);
     let q = 4u8;
     let params = QuantParams::fit(q, &data).expect("fit");
     let symbols = quantize(&data, &params);
     let t = symbols.len();
-    println!("# Perf hot-path microbenches (T = {t}, Q = {q})");
+    println!("# Perf hot-path microbenches (T = {t}, Q = {q}, warmup {warmup}, trials {trials})");
 
-    let m = measure(3, 15, || quantize(&data, &params));
+    let m = report.add("quantize", measure(warmup, trials, || quantize(&data, &params)));
     println!(
         "quantize             {:>12}  ({:>8.1} MB/s over f32 input)",
         m.fmt_mean_std(),
@@ -38,7 +95,10 @@ fn main() {
         .expect("opt")
         .best;
     let (n, k) = (best.n, best.k);
-    let m = measure(3, 15, || ModCsr::encode(&symbols, n, k, params.zero_symbol()).unwrap());
+    let m = report.add(
+        "csr_encode",
+        measure(warmup, trials, || ModCsr::encode(&symbols, n, k, params.zero_symbol()).unwrap()),
+    );
     println!(
         "csr encode           {:>12}  ({:>8.1} MB/s over u16 symbols)",
         m.fmt_mean_std(),
@@ -46,59 +106,130 @@ fn main() {
     );
 
     let csr = ModCsr::encode(&symbols, n, k, params.zero_symbol()).unwrap();
-    let m = measure(3, 15, || csr.decode().unwrap());
+    let m = report.add("csr_decode", measure(warmup, trials, || csr.decode().unwrap()));
     println!("csr decode           {:>12}", m.fmt_mean_std());
 
     let d = csr.concat();
     let alphabet = csr.concat_alphabet(params.alphabet());
-    let m = measure(3, 15, || FreqTable::from_symbols(&d, alphabet));
+    let m = report.add(
+        "freq_table_build",
+        measure(warmup, trials, || FreqTable::from_symbols(&d, alphabet)),
+    );
     println!("freq table build     {:>12}  ({} symbols)", m.fmt_mean_std(), d.len());
 
     let table = FreqTable::from_symbols(&d, alphabet);
-    let m = measure(3, 15, || encode(&d, &table).unwrap());
+    let m = report.add("rans_encode_1lane", measure(warmup, trials, || encode(&d, &table).unwrap()));
     let stream = encode(&d, &table).unwrap();
     println!(
         "rANS encode 1-lane   {:>12}  ({:>8.1} Msym/s)",
         m.fmt_mean_std(),
         d.len() as f64 / 1e6 / (m.mean_ms() / 1e3)
     );
-    let m = measure(3, 15, || decode(&stream, d.len(), &table).unwrap());
+    let m = report.add(
+        "rans_decode_1lane",
+        measure(warmup, trials, || decode(&stream, d.len(), &table).unwrap()),
+    );
     println!(
         "rANS decode 1-lane   {:>12}  ({:>8.1} Msym/s)",
         m.fmt_mean_std(),
         d.len() as f64 / 1e6 / (m.mean_ms() / 1e3)
     );
 
+    // Scoped-thread fan-out baseline: what the pre-engine hot path paid
+    // per call. Compare with the pooled engine rows below.
     for lanes in [4usize, 8] {
-        let m = measure(3, 15, || encode_interleaved(&d, &table, lanes, true).unwrap());
+        let m = measure(warmup, trials, || encode_interleaved(&d, &table, lanes, true).unwrap());
         let s = encode_interleaved(&d, &table, lanes, true).unwrap();
-        let md = measure(3, 15, || decode_interleaved(&s, &table, true).unwrap());
+        let md = measure(warmup, trials, || decode_interleaved(&s, &table, true).unwrap());
         println!(
-            "rANS enc/dec {lanes}-lane {:>12} / {:>12}",
+            "scoped enc/dec {lanes}-lane {:>10} / {:>12}",
             m.fmt_mean_std(),
             md.fmt_mean_std()
         );
+        report.add(&format!("scoped_encode_{lanes}lane"), m);
+        report.add(&format!("scoped_decode_{lanes}lane"), md);
     }
 
     let cfg = PipelineConfig {
         q,
         lanes: 8,
-        parallel: rans_sc::pipeline::codec::default_parallelism(),
+        parallel: pipeline::codec::default_parallelism(),
         reshape: ReshapeStrategy::Fixed(n),
     };
-    let (bytes, _) = pipeline::compress_quantized(&symbols, params, &cfg).unwrap();
-    let m = measure(3, 15, || pipeline::compress_quantized(&symbols, params, &cfg).unwrap());
+
+    // Persistent engine, steady state: pooled workers + Fixed-N plan.
+    let engine = Engine::new(EngineConfig::default());
+    let (bytes, _) = engine.compress_quantized(&symbols, params, &cfg).unwrap();
+    let m = report.add(
+        "engine_e2e_encode",
+        measure(warmup, trials, || engine.compress_quantized(&symbols, params, &cfg).unwrap()),
+    );
+    println!(
+        "engine e2e encode    {:>12}  ({} B out, {:>8.1} MB/s in)",
+        m.fmt_mean_std(),
+        bytes.len(),
+        mbps(data.len() * 4, m.mean_ms())
+    );
+    let m = report.add(
+        "engine_e2e_decode",
+        measure(warmup, trials, || engine.decompress_to_symbols(&bytes, true).unwrap()),
+    );
+    println!("engine e2e decode    {:>12}", m.fmt_mean_std());
+
+    // Chunked v2: per-chunk framing + checksums.
+    let engine_v2 = Engine::new(EngineConfig {
+        format: ContainerFormat::ChunkedV2,
+        ..EngineConfig::default()
+    });
+    let (bytes_v2, _) = engine_v2.compress_quantized(&symbols, params, &cfg).unwrap();
+    let m = report.add(
+        "engine_v2_encode",
+        measure(warmup, trials, || engine_v2.compress_quantized(&symbols, params, &cfg).unwrap()),
+    );
+    println!(
+        "engine v2 encode     {:>12}  ({} B out)",
+        m.fmt_mean_std(),
+        bytes_v2.len()
+    );
+    let m = report.add(
+        "engine_v2_decode",
+        measure(warmup, trials, || engine_v2.decompress_to_symbols(&bytes_v2, true).unwrap()),
+    );
+    println!("engine v2 decode     {:>12}", m.fmt_mean_std());
+
+    // Library wrappers (shared engine) — the path user code takes.
+    let m = report.add(
+        "pipeline_e2e_encode",
+        measure(warmup, trials, || pipeline::compress_quantized(&symbols, params, &cfg).unwrap()),
+    );
     println!(
         "pipeline e2e encode  {:>12}  ({} B out, {:>8.1} MB/s in)",
         m.fmt_mean_std(),
         bytes.len(),
         mbps(data.len() * 4, m.mean_ms())
     );
-    let m = measure(3, 15, || pipeline::decompress_to_symbols(&bytes, true).unwrap());
+    let m = report.add(
+        "pipeline_e2e_decode",
+        measure(warmup, trials, || pipeline::decompress_to_symbols(&bytes, true).unwrap()),
+    );
     println!("pipeline e2e decode  {:>12}", m.fmt_mean_std());
 
-    let m = measure(1, 5, || {
-        reshape::optimize(&symbols, params.zero_symbol(), &OptimizerConfig::paper(q)).unwrap()
-    });
+    let m = report.add(
+        "algorithm1_cold",
+        measure(if fast { 0 } else { 1 }, if fast { 2 } else { 5 }, || {
+            reshape::optimize(&symbols, params.zero_symbol(), &OptimizerConfig::paper(q)).unwrap()
+        }),
+    );
     println!("Algorithm 1 (cold)   {:>12}", m.fmt_mean_std());
+
+    // JSON artifact for the CI perf-trajectory record.
+    let json_path =
+        std::env::var("RANS_SC_BENCH_JSON").unwrap_or_else(|_| "BENCH_perf_hotpath.json".into());
+    if json_path != "0" {
+        let json = report.to_json(t, q, fast, warmup, trials).to_string_pretty();
+        match std::fs::write(&json_path, &json) {
+            Ok(()) => println!("# wrote {json_path}"),
+            Err(e) => eprintln!("# could not write {json_path}: {e}"),
+        }
+    }
 }

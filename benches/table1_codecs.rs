@@ -1,7 +1,7 @@
 //! Table 1 — codec comparison: data size, encode time, decode time.
 //!
 //! Rows: E-1 binary serialization, E-2 tANS, E-3 DietGPU-style, plus
-//! zstd/deflate comparators and Ours at Q ∈ {3, 4, 6}.
+//! lz77/byte-rans comparators and Ours at Q ∈ {3, 4, 6}.
 //!
 //! Paper shape to reproduce: Ours < E-3 < E-2 < E-1 on size (7.2× vs
 //! E-1, 2.8× vs E-3 at Q=3); tANS encode ~3 orders of magnitude slower;

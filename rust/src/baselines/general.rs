@@ -1,13 +1,20 @@
 //! General-purpose compressors as extra comparators.
 //!
 //! Not part of the paper's Table 1, but useful context in
-//! EXPERIMENTS.md: how far a tuned entropy pipeline is from what a
-//! deployment would get by simply piping the tensor through zstd or
-//! deflate.
-
-use std::io::{Read, Write};
+//! EXPERIMENTS.md: how far the tuned entropy pipeline is from what a
+//! deployment would get by piping the raw tensor bytes through a
+//! general-purpose codec. The offline build cannot link zstd/flate2, so
+//! the two comparators here are self-contained stand-ins for the same
+//! two codec families:
+//!
+//! * [`Lz77Codec`] — greedy hash-head LZ77 (the dictionary/match half of
+//!   an LZ4/deflate-class codec) over the little-endian f32 byte stream.
+//! * [`ByteRansCodec`] — order-0 rANS over the raw byte stream (the
+//!   entropy-coding half), reusing the crate's own coder with a
+//!   256-symbol alphabet.
 
 use crate::error::{Error, Result};
+use crate::rans::{decode, encode, FreqTable};
 use crate::util::varint;
 
 use super::TensorCodec;
@@ -30,28 +37,129 @@ fn from_bytes(bytes: &[u8], n: usize) -> Result<Vec<f32>> {
         .collect())
 }
 
-/// zstd at a configurable level (default 3, the library default).
-#[derive(Debug, Clone, Copy)]
-pub struct ZstdCodec {
-    /// Compression level (1–22).
-    pub level: i32,
+// ------------------------------------------------------------------ lz77
+
+/// Minimum match length the LZ77 encoder emits (below this a literal is
+/// cheaper than the tag + length + distance varints).
+const MIN_MATCH: usize = 4;
+/// Hash-table size (power of two) for 4-byte prefix heads.
+const HASH_BITS: u32 = 15;
+
+#[inline]
+fn lz_hash(key: u32) -> usize {
+    (key.wrapping_mul(2654435761) >> (32 - HASH_BITS)) as usize
 }
 
-impl Default for ZstdCodec {
-    fn default() -> Self {
-        ZstdCodec { level: 3 }
+/// Greedy LZ77 with a single-head prefix hash (LZ4-fast style matching),
+/// varint-framed tokens, unlimited window.
+///
+/// Token stream, after a varint element count: repeated ops, each either
+/// `0x00, varint len, len raw bytes` (literal run) or `0x01, varint len,
+/// varint distance` (match, `len ≥ MIN_MATCH`, `distance ≥ 1`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Lz77Codec;
+
+impl Lz77Codec {
+    fn compress_bytes(raw: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(raw.len() / 2 + 16);
+        let mut heads = vec![usize::MAX; 1 << HASH_BITS];
+        let mut pos = 0usize;
+        let mut lit_start = 0usize;
+
+        let flush_literals = |out: &mut Vec<u8>, lit: &[u8]| {
+            if !lit.is_empty() {
+                out.push(0x00);
+                varint::write_usize(out, lit.len());
+                out.extend_from_slice(lit);
+            }
+        };
+
+        while pos + MIN_MATCH <= raw.len() {
+            let key = u32::from_le_bytes([raw[pos], raw[pos + 1], raw[pos + 2], raw[pos + 3]]);
+            let slot = lz_hash(key);
+            let candidate = heads[slot];
+            heads[slot] = pos;
+            if candidate != usize::MAX
+                && candidate < pos
+                && raw[candidate..candidate + MIN_MATCH] == raw[pos..pos + MIN_MATCH]
+            {
+                // Extend the match as far as it goes.
+                let mut len = MIN_MATCH;
+                while pos + len < raw.len() && raw[candidate + len] == raw[pos + len] {
+                    len += 1;
+                }
+                flush_literals(&mut out, &raw[lit_start..pos]);
+                out.push(0x01);
+                varint::write_usize(&mut out, len);
+                varint::write_usize(&mut out, pos - candidate);
+                pos += len;
+                lit_start = pos;
+            } else {
+                pos += 1;
+            }
+        }
+        flush_literals(&mut out, &raw[lit_start..]);
+        out
+    }
+
+    fn decompress_bytes(bytes: &[u8], pos: &mut usize, expect: usize) -> Result<Vec<u8>> {
+        // `expect` is attacker-declared; cap the reservation (growth is
+        // amortized) so a forged element count cannot abort the allocator.
+        let mut out = Vec::with_capacity(expect.min(1 << 20));
+        while *pos < bytes.len() {
+            let tag = bytes[*pos];
+            *pos += 1;
+            match tag {
+                0x00 => {
+                    let len = varint::read_usize(bytes, pos)?;
+                    let end = pos
+                        .checked_add(len)
+                        .filter(|&e| e <= bytes.len())
+                        .ok_or_else(|| Error::corrupt("lz77 literal run truncated"))?;
+                    out.extend_from_slice(&bytes[*pos..end]);
+                    *pos = end;
+                }
+                0x01 => {
+                    let len = varint::read_usize(bytes, pos)?;
+                    let dist = varint::read_usize(bytes, pos)?;
+                    if len < MIN_MATCH {
+                        return Err(Error::corrupt("lz77 match below minimum length"));
+                    }
+                    if dist == 0 || dist > out.len() {
+                        return Err(Error::corrupt("lz77 match distance out of range"));
+                    }
+                    // Bound *before* copying: `len` is attacker-controlled,
+                    // so a corrupt stream must fail cleanly instead of
+                    // allocating `len` bytes first.
+                    if len > expect - out.len() {
+                        return Err(Error::corrupt("lz77 match overruns declared length"));
+                    }
+                    // Byte-wise copy: matches may overlap their own output
+                    // (dist < len encodes an RLE-style repetition).
+                    let start = out.len() - dist;
+                    for i in 0..len {
+                        let b = out[start + i];
+                        out.push(b);
+                    }
+                }
+                t => return Err(Error::corrupt(format!("lz77 bad op tag {t}"))),
+            }
+            if out.len() > expect {
+                return Err(Error::corrupt("lz77 output exceeds declared length"));
+            }
+        }
+        Ok(out)
     }
 }
 
-impl TensorCodec for ZstdCodec {
+impl TensorCodec for Lz77Codec {
     fn name(&self) -> &'static str {
-        "zstd"
+        "lz77"
     }
 
     fn encode(&self, data: &[f32]) -> Result<Vec<u8>> {
         let raw = to_bytes(data);
-        let compressed = zstd::bulk::compress(&raw, self.level)
-            .map_err(|e| Error::codec(format!("zstd: {e}")))?;
+        let compressed = Self::compress_bytes(&raw);
         let mut out = Vec::with_capacity(compressed.len() + 8);
         varint::write_usize(&mut out, data.len());
         out.extend_from_slice(&compressed);
@@ -61,50 +169,72 @@ impl TensorCodec for ZstdCodec {
     fn decode(&self, bytes: &[u8]) -> Result<Vec<f32>> {
         let mut pos = 0usize;
         let n = varint::read_usize(bytes, &mut pos)?;
-        let raw = zstd::bulk::decompress(&bytes[pos..], n * 4 + 64)
-            .map_err(|e| Error::corrupt(format!("zstd: {e}")))?;
+        // The per-op bound below is relative to `expect`, so `expect`
+        // itself must be plausible or a forged count re-opens the
+        // match-copy bomb.
+        if n > crate::pipeline::container::MAX_DECODE_SYMBOLS {
+            return Err(Error::corrupt(format!(
+                "lz77 declared element count {n} exceeds decode cap"
+            )));
+        }
+        let expect = n
+            .checked_mul(4)
+            .ok_or_else(|| Error::corrupt("lz77 element count overflow"))?;
+        let raw = Self::decompress_bytes(bytes, &mut pos, expect)?;
         from_bytes(&raw, n)
     }
 }
 
-/// DEFLATE via flate2 (zlib format).
-#[derive(Debug, Clone, Copy)]
-pub struct DeflateCodec {
-    /// Compression level (0–9).
-    pub level: u32,
-}
+// -------------------------------------------------------------- byte-rans
 
-impl Default for DeflateCodec {
-    fn default() -> Self {
-        DeflateCodec { level: 6 }
-    }
-}
+/// Order-0 rANS over the little-endian f32 byte stream (alphabet 256).
+///
+/// Layout: varint element count, serialized frequency table, rANS
+/// payload to the end of the buffer.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ByteRansCodec;
 
-impl TensorCodec for DeflateCodec {
+impl TensorCodec for ByteRansCodec {
     fn name(&self) -> &'static str {
-        "deflate"
+        "byte-rans"
     }
 
     fn encode(&self, data: &[f32]) -> Result<Vec<u8>> {
         let raw = to_bytes(data);
-        let mut enc = flate2::write::ZlibEncoder::new(
-            Vec::new(),
-            flate2::Compression::new(self.level),
-        );
-        enc.write_all(&raw)?;
-        let compressed = enc.finish()?;
-        let mut out = Vec::with_capacity(compressed.len() + 8);
+        let symbols: Vec<u32> = raw.iter().map(|&b| b as u32).collect();
+        let table = FreqTable::from_symbols(&symbols, 256);
+        let payload = encode(&symbols, &table)?;
+        let mut out = Vec::with_capacity(payload.len() + 64);
         varint::write_usize(&mut out, data.len());
-        out.extend_from_slice(&compressed);
+        table.serialize(&mut out);
+        out.extend_from_slice(&payload);
         Ok(out)
     }
 
     fn decode(&self, bytes: &[u8]) -> Result<Vec<f32>> {
         let mut pos = 0usize;
         let n = varint::read_usize(bytes, &mut pos)?;
-        let mut dec = flate2::read::ZlibDecoder::new(&bytes[pos..]);
-        let mut raw = Vec::with_capacity(n * 4);
-        dec.read_to_end(&mut raw)?;
+        // A degenerate (single-symbol) table legally decodes any declared
+        // count from a 4-byte stream, so the count must be bounded before
+        // the decode loop runs — same class as the container-level cap.
+        if n > crate::pipeline::container::MAX_DECODE_SYMBOLS {
+            return Err(Error::corrupt(format!(
+                "byte-rans declared element count {n} exceeds decode cap"
+            )));
+        }
+        let table = FreqTable::deserialize(bytes, &mut pos)?;
+        let count = n
+            .checked_mul(4)
+            .ok_or_else(|| Error::corrupt("byte-rans element count overflow"))?;
+        let symbols = decode(&bytes[pos..], count, &table)?;
+        // `symbols.len() == count` only after a successful decode, so this
+        // reservation is bounded by real data, not the declared header.
+        let mut raw = Vec::with_capacity(symbols.len());
+        for s in symbols {
+            let b =
+                u8::try_from(s).map_err(|_| Error::corrupt("byte-rans symbol outside u8"))?;
+            raw.push(b);
+        }
         from_bytes(&raw, n)
     }
 }
@@ -115,32 +245,91 @@ mod tests {
     use crate::baselines::tests::relu_feature;
 
     #[test]
-    fn zstd_roundtrip_and_compression() {
+    fn lz77_roundtrip_and_compression() {
         let data = relu_feature(31, 30_000);
-        let codec = ZstdCodec::default();
+        let codec = Lz77Codec;
         let bytes = codec.encode(&data).unwrap();
         let back = codec.decode(&bytes).unwrap();
         assert!(data.iter().zip(&back).all(|(a, b)| a.to_bits() == b.to_bits()));
-        assert!(bytes.len() < data.len() * 4);
+        assert!(bytes.len() < data.len() * 4, "{} !< {}", bytes.len(), data.len() * 4);
     }
 
     #[test]
-    fn deflate_roundtrip_and_compression() {
+    fn byte_rans_roundtrip_and_compression() {
         let data = relu_feature(32, 30_000);
-        let codec = DeflateCodec::default();
+        let codec = ByteRansCodec;
         let bytes = codec.encode(&data).unwrap();
         let back = codec.decode(&bytes).unwrap();
         assert!(data.iter().zip(&back).all(|(a, b)| a.to_bits() == b.to_bits()));
-        assert!(bytes.len() < data.len() * 4);
+        assert!(bytes.len() < data.len() * 4, "{} !< {}", bytes.len(), data.len() * 4);
     }
 
     #[test]
-    fn corrupt_zstd_rejected() {
+    fn lz77_handles_incompressible_and_tiny_inputs() {
+        // Tiny and irregular tensors must roundtrip even when no match
+        // is ever found (pure literal runs).
+        for data in [vec![], vec![1.5f32], vec![1.0f32, -2.0, 3.25, -4.75, 0.125]] {
+            let codec = Lz77Codec;
+            let back = codec.decode(&codec.encode(&data).unwrap()).unwrap();
+            assert_eq!(back.len(), data.len());
+            assert!(data.iter().zip(&back).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    #[test]
+    fn byte_rans_empty_tensor() {
+        let codec = ByteRansCodec;
+        let bytes = codec.encode(&[]).unwrap();
+        assert!(codec.decode(&bytes).unwrap().is_empty());
+    }
+
+    #[test]
+    fn byte_rans_huge_declared_count_rejected_without_decoding() {
+        // A degenerate table + forged count must fail on the cap, not
+        // decode trillions of symbols from a 4-byte stream.
+        let data = vec![0.0f32; 16];
+        let bytes = ByteRansCodec.encode(&data).unwrap();
+        let mut forged = Vec::new();
+        varint::write_usize(&mut forged, 1usize << 40);
+        // Reuse the real table+payload tail from a legit container.
+        let mut pos = 0usize;
+        varint::read_usize(&bytes, &mut pos).unwrap();
+        forged.extend_from_slice(&bytes[pos..]);
+        assert!(ByteRansCodec.decode(&forged).is_err());
+    }
+
+    #[test]
+    fn corrupt_streams_rejected() {
         let data = relu_feature(33, 1000);
-        let codec = ZstdCodec::default();
-        let mut bytes = codec.encode(&data).unwrap();
-        let mid = bytes.len() / 2;
-        bytes.truncate(mid);
-        assert!(codec.decode(&bytes).is_err());
+        for codec in [&Lz77Codec as &dyn TensorCodec, &ByteRansCodec] {
+            let bytes = codec.encode(&data).unwrap();
+            let truncated = &bytes[..bytes.len() / 2];
+            assert!(codec.decode(truncated).is_err(), "{} truncation", codec.name());
+        }
+    }
+
+    #[test]
+    fn lz77_huge_match_length_rejected_without_allocating() {
+        // Craft: element count 1 (expect 4 bytes), a 4-byte literal, then
+        // a match whose length claims 2^50 bytes. Must be a clean error,
+        // not a byte-by-byte multi-terabyte copy.
+        let mut bytes = Vec::new();
+        varint::write_usize(&mut bytes, 1); // n = 1 f32 → expect 4 bytes
+        bytes.push(0x00);
+        varint::write_usize(&mut bytes, 4);
+        bytes.extend_from_slice(&[1, 2, 3, 4]);
+        bytes.push(0x01);
+        varint::write_usize(&mut bytes, 1usize << 50); // absurd match len
+        varint::write_usize(&mut bytes, 1); // dist
+        assert!(Lz77Codec.decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn lz77_compresses_repetitive_data_hard() {
+        // A constant tensor is one literal run plus one giant match.
+        let data = vec![7.125f32; 10_000];
+        let bytes = Lz77Codec.encode(&data).unwrap();
+        assert!(bytes.len() < 64, "constant tensor should collapse: {} B", bytes.len());
+        assert_eq!(Lz77Codec.decode(&bytes).unwrap(), data);
     }
 }

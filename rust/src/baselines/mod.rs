@@ -10,9 +10,10 @@
 //! * **E-3** [`dietgpu_like::DietGpuLikeCodec`] — byte-plane interleaved
 //!   rANS in the style of DietGPU's general float mode (lossless,
 //!   GPU-decomposable; fast but weaker than the quantized pipeline).
-//! * [`general::ZstdCodec`] / [`general::DeflateCodec`] — off-the-shelf
-//!   general-purpose compressors as sanity comparators (not in the
-//!   paper's table; reported alongside in EXPERIMENTS.md).
+//! * [`general::Lz77Codec`] / [`general::ByteRansCodec`] — self-contained
+//!   general-purpose comparators (dictionary half and entropy half of a
+//!   deflate-class codec; not in the paper's table, reported alongside
+//!   in EXPERIMENTS.md).
 
 pub mod binary;
 pub mod dietgpu_like;

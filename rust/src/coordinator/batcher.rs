@@ -118,6 +118,20 @@ impl<Req: Send + 'static, Resp: Send + 'static> Batcher<Req, Resp> {
         }
     }
 
+    /// Worker loop bound to a shared compression engine: like
+    /// [`Batcher::run`], but hands `exec` the engine so batch execution
+    /// compresses/decompresses on the process-wide persistent pool
+    /// instead of spawning scoped threads per batch. This is the plumbing
+    /// that keeps N concurrent batcher workers from oversubscribing the
+    /// host: they all dispatch lanes onto one machine-sized pool.
+    pub fn run_with_engine(
+        &self,
+        engine: std::sync::Arc<crate::engine::Engine>,
+        mut exec: impl FnMut(Vec<Req>, usize, &crate::engine::Engine) -> Vec<Result<Resp>>,
+    ) {
+        self.run(move |reqs, bucket| exec(reqs, bucket, &engine));
+    }
+
     /// Worker loop: form batches and execute them with `exec`.
     ///
     /// `exec(batch, bucket)` gets exactly `len ≤ bucket` real requests
@@ -245,6 +259,42 @@ mod tests {
         let rx = b.submit(1);
         let (resp, _) = rx.recv().unwrap();
         assert!(resp.is_err());
+        b.stop();
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn run_with_engine_compresses_batches_on_shared_pool() {
+        use crate::engine::{Engine, EngineConfig};
+        use crate::pipeline::PipelineConfig;
+
+        let engine = Arc::new(Engine::new(EngineConfig { workers: 2, ..EngineConfig::default() }));
+        let b: Batcher<Vec<f32>, usize> = Batcher::new(BatcherConfig {
+            buckets: vec![1, 4],
+            max_wait: Duration::from_micros(500),
+        });
+        let worker = {
+            let b = b.clone();
+            let engine = Arc::clone(&engine);
+            std::thread::spawn(move || {
+                b.run_with_engine(engine, |reqs, _bucket, eng| {
+                    reqs.into_iter()
+                        .map(|data| {
+                            eng.compress(&data, &PipelineConfig::paper(4))
+                                .map(|(bytes, _)| bytes.len())
+                        })
+                        .collect()
+                })
+            })
+        };
+        let tensors: Vec<Vec<f32>> = (0..8)
+            .map(|i| (0..2048).map(|j| if (i + j) % 3 == 0 { 1.5 } else { 0.0 }).collect())
+            .collect();
+        let rxs: Vec<_> = tensors.iter().map(|t| b.submit(t.clone())).collect();
+        for rx in rxs {
+            let (size, _) = rx.recv().unwrap();
+            assert!(size.unwrap() > 0);
+        }
         b.stop();
         worker.join().unwrap();
     }

@@ -5,8 +5,8 @@ use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::engine::{Engine as CodecEngine, EngineHandle};
 use crate::error::{Error, Result};
-use crate::pipeline;
 use crate::runtime::{Engine, ExecPool, LmSplitExec, Manifest, VisionSplitExec};
 use crate::telemetry::Registry;
 use crate::util::timer::Stopwatch;
@@ -19,10 +19,13 @@ use super::transport::{TcpTransport, Transport};
 /// Owns the PJRT engine, the artifact pool, and per-route executable
 /// caches; `handle` is a pure request→reply function so the same node
 /// serves TCP connections, in-proc transports, and direct calls from
-/// benches.
+/// benches. Container decoding fans out on the shared compression
+/// engine's persistent worker pool, so concurrent connections share one
+/// machine-sized pool instead of oversubscribing the host.
 pub struct CloudNode {
     manifest: Manifest,
     pool: ExecPool,
+    codec: EngineHandle,
     metrics: Arc<Registry>,
     vision_cache: Mutex<HashMap<(String, usize, usize), Arc<VisionSplitExec>>>,
     lm_cache: Mutex<HashMap<String, Arc<LmSplitExec>>>,
@@ -39,11 +42,22 @@ impl CloudNode {
         Ok(CloudNode {
             manifest,
             pool,
+            codec: EngineHandle::shared(),
             metrics: Arc::new(Registry::new()),
             vision_cache: Mutex::new(HashMap::new()),
             lm_cache: Mutex::new(HashMap::new()),
             parallel_decode: crate::pipeline::codec::default_parallelism(),
         })
+    }
+
+    /// Decode on a dedicated compression engine instead of the shared
+    /// one (tests and multi-tenant setups). Re-derives
+    /// `parallel_decode` from the new engine's pool; override the field
+    /// afterwards to force a serial decode.
+    pub fn with_codec_engine(mut self, codec: Arc<CodecEngine>) -> Self {
+        self.parallel_decode = codec.parallel_by_default();
+        self.codec = EngineHandle::dedicated(codec);
+        self
     }
 
     /// The node's metrics registry.
@@ -92,7 +106,8 @@ impl CloudNode {
     fn infer_vision(&self, model: &str, sl: usize, batch: usize, payload: &[u8]) -> Result<FrameKind> {
         let exec = self.vision_exec(model, sl, batch)?;
         let sw = Stopwatch::new();
-        let (symbols, params) = pipeline::decompress_to_symbols(payload, self.parallel_decode)?;
+        let (symbols, params) =
+            self.codec.get().decompress_to_symbols(payload, self.parallel_decode)?;
         let decode_ms = sw.elapsed_ms();
         let sw = Stopwatch::new();
         let logits = exec.run_tail(&symbols, &params)?;
@@ -118,7 +133,8 @@ impl CloudNode {
     fn infer_lm(&self, model: &str, payload: &[u8]) -> Result<FrameKind> {
         let exec = self.lm_exec(model)?;
         let sw = Stopwatch::new();
-        let (symbols, params) = pipeline::decompress_to_symbols(payload, self.parallel_decode)?;
+        let (symbols, params) =
+            self.codec.get().decompress_to_symbols(payload, self.parallel_decode)?;
         let decode_ms = sw.elapsed_ms();
         let sw = Stopwatch::new();
         let logits = exec.run_tail(&symbols, &params)?;

@@ -1,24 +1,28 @@
-//! Edge node: head compute → pipeline compression → transmit.
+//! Edge node: head compute → engine compression → transmit.
 //!
 //! The edge owns a *reshape-plan cache*: Algorithm 1 runs once per
 //! (tensor length, Q) pair and subsequent requests reuse the chosen `Ñ`
 //! via `ReshapeStrategy::Fixed`, keeping the optimizer entirely off the
 //! steady-state hot path (the paper's GPU pipeline assumes the same).
+//! Compression itself runs on the shared [`Engine`]'s persistent worker
+//! pool, so any number of edge nodes in one process fan lanes out onto
+//! one machine-sized pool instead of each spawning scoped threads.
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::channel::OutageChannel;
+use crate::engine::{Engine, EngineHandle};
 use crate::error::{Error, Result};
-use crate::pipeline::{self, CompressStats, PipelineConfig, ReshapeStrategy};
-use crate::quant::QuantParams;
+use crate::pipeline::{CompressStats, PipelineConfig};
 use crate::runtime::{LmSplitExec, VisionSplitExec};
 use crate::telemetry::{LatencyBreakdown, Registry};
 use crate::util::timer::Stopwatch;
 
 use super::protocol::{Frame, FrameKind};
 use super::transport::Transport;
+
+pub use crate::engine::PlanCache;
 
 /// Edge pipeline configuration.
 #[derive(Debug, Clone)]
@@ -64,36 +68,6 @@ pub struct InferOutcome {
     pub payload_bytes: usize,
 }
 
-/// Reshape-plan cache: (T, Q) → chosen N.
-#[derive(Debug, Default)]
-pub struct PlanCache {
-    plans: Mutex<HashMap<(usize, u8), usize>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
-}
-
-impl PlanCache {
-    /// Resolve the reshape strategy for a tensor, running Algorithm 1 on
-    /// the first sighting of a (T, Q) pair.
-    pub fn strategy(&self, symbols: &[u16], params: &QuantParams) -> Result<ReshapeStrategy> {
-        let key = (symbols.len(), params.q);
-        if let Some(&n) = self.plans.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(ReshapeStrategy::Fixed(n));
-        }
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        let cfg = crate::reshape::optimizer::OptimizerConfig::paper(params.q);
-        let out = crate::reshape::optimize(symbols, params.zero_symbol(), &cfg)?;
-        self.plans.lock().unwrap().insert(key, out.best.n);
-        Ok(ReshapeStrategy::Fixed(out.best.n))
-    }
-
-    /// (hits, misses) counters.
-    pub fn stats(&self) -> (u64, u64) {
-        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
-    }
-}
-
 fn expect_logits(frame: Frame) -> Result<(Vec<f32>, f32, f32)> {
     match frame.kind {
         FrameKind::Logits { data, decode_ms, compute_ms } => Ok((data, decode_ms, compute_ms)),
@@ -108,6 +82,7 @@ pub struct EdgeNode<T: Transport> {
     pub cfg: EdgeConfig,
     exec: Arc<VisionSplitExec>,
     transport: Mutex<T>,
+    engine: EngineHandle,
     plan_cache: PlanCache,
     channel: OutageChannel,
     metrics: Arc<Registry>,
@@ -115,17 +90,27 @@ pub struct EdgeNode<T: Transport> {
 }
 
 impl<T: Transport> EdgeNode<T> {
-    /// Build an edge node over an established transport.
+    /// Build an edge node over an established transport, compressing on
+    /// the process-wide shared engine pool (resolved lazily).
     pub fn new(exec: Arc<VisionSplitExec>, transport: T, cfg: EdgeConfig) -> Self {
         EdgeNode {
             cfg,
             exec,
             transport: Mutex::new(transport),
+            engine: EngineHandle::shared(),
             plan_cache: PlanCache::default(),
             channel: OutageChannel::paper_default(),
             metrics: Arc::new(Registry::new()),
             next_id: AtomicU64::new(1),
         }
+    }
+
+    /// Compress on a dedicated engine instead of the shared one. Lane
+    /// *threading* stays governed by `cfg.parallel` (explicit caller
+    /// config) — set it to match the new engine's pool if desired.
+    pub fn with_engine(mut self, engine: Arc<Engine>) -> Self {
+        self.engine = EngineHandle::dedicated(engine);
+        self
     }
 
     /// Override the channel model.
@@ -169,7 +154,8 @@ impl<T: Transport> EdgeNode<T> {
             parallel: self.cfg.parallel,
             reshape,
         };
-        let (container, stats) = pipeline::compress_quantized(&symbols, params, &pcfg)?;
+        let (container, stats) =
+            self.engine.get().compress_quantized(&symbols, params, &pcfg)?;
         let encode_ms = sw.elapsed_ms();
         let payload_bytes = container.len();
         let transfer_ms = self.channel.comm_latency_ms(payload_bytes);
@@ -245,22 +231,32 @@ pub struct LmEdgeNode<T: Transport> {
     pub cfg: EdgeConfig,
     exec: Arc<LmSplitExec>,
     transport: Mutex<T>,
+    engine: EngineHandle,
     plan_cache: PlanCache,
     channel: OutageChannel,
     next_id: AtomicU64,
 }
 
 impl<T: Transport> LmEdgeNode<T> {
-    /// Build an LM edge node.
+    /// Build an LM edge node on the shared engine pool (resolved lazily).
     pub fn new(exec: Arc<LmSplitExec>, transport: T, cfg: EdgeConfig) -> Self {
         LmEdgeNode {
             cfg,
             exec,
             transport: Mutex::new(transport),
+            engine: EngineHandle::shared(),
             plan_cache: PlanCache::default(),
             channel: OutageChannel::paper_default(),
             next_id: AtomicU64::new(1),
         }
+    }
+
+    /// Compress on a dedicated engine instead of the shared one. Lane
+    /// *threading* stays governed by `cfg.parallel` (explicit caller
+    /// config) — set it to match the new engine's pool if desired.
+    pub fn with_engine(mut self, engine: Arc<Engine>) -> Self {
+        self.engine = EngineHandle::dedicated(engine);
+        self
     }
 
     /// Override the channel model.
@@ -291,7 +287,8 @@ impl<T: Transport> LmEdgeNode<T> {
             parallel: self.cfg.parallel,
             reshape,
         };
-        let (container, stats) = pipeline::compress_quantized(&symbols, params, &pcfg)?;
+        let (container, stats) =
+            self.engine.get().compress_quantized(&symbols, params, &pcfg)?;
         let encode_ms = sw.elapsed_ms();
         let payload_bytes = container.len();
         let transfer_ms = self.channel.comm_latency_ms(payload_bytes);

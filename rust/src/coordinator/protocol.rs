@@ -13,7 +13,7 @@
 //! per-request metadata beyond the model route.
 
 use crate::error::{Error, Result};
-use crate::util::varint;
+use crate::util::{crc32, varint};
 
 /// Maximum accepted frame body (64 MiB) — guards the allocator against
 /// corrupt length prefixes.
@@ -180,7 +180,7 @@ impl Frame {
                 write_str(&mut body, message);
             }
         }
-        let crc = crc32fast::hash(&body);
+        let crc = crc32::hash(&body);
         let mut out = Vec::with_capacity(body.len() + 8);
         out.extend_from_slice(&(body.len() as u32).to_le_bytes());
         out.extend_from_slice(&body);
@@ -267,7 +267,7 @@ impl Frame {
         }
         let body = &buf[4..4 + body_len];
         let crc = u32::from_le_bytes(buf[4 + body_len..total].try_into().unwrap());
-        if crc32fast::hash(body) != crc {
+        if crc32::hash(body) != crc {
             return Err(Error::protocol("frame crc mismatch"));
         }
         Ok((Self::from_body(body)?, total))

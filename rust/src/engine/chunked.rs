@@ -1,0 +1,378 @@
+//! Chunked container format v2: per-chunk framing and checksums.
+//!
+//! The v1 container ([`crate::pipeline::container`]) frames the whole
+//! interleaved rANS payload as one unit under one trailing CRC — fine
+//! for request/response serving, but a single flipped byte can only be
+//! localized to "somewhere", and nothing can be decoded until the full
+//! container has arrived. v2 splits the concatenated stream
+//! `D = v ⊕ c ⊕ r` into independently decodable chunks, each with its
+//! own rANS coder state and its own CRC-32:
+//!
+//! ```text
+//! magic  "RSC2"                    4 bytes
+//! version                         1 byte  (currently 2)
+//! q                               1 byte
+//! scale                           4 bytes f32 LE
+//! zero                            varint (zigzag)
+//! orig_len  T                     varint
+//! n_rows    N                     varint
+//! nnz                             varint
+//! alphabet                        varint
+//! freq table                      FreqTable::serialize
+//! chunk_count                     varint
+//! per chunk: symbol_count         varint
+//!            payload_len          varint
+//!            payload crc32        4 bytes LE
+//! crc32 of everything above       4 bytes LE   ← header checksum
+//! chunk payloads, concatenated    (covered by the per-chunk CRCs)
+//! ```
+//!
+//! The header CRC covers the header + chunk table only; payload bytes
+//! are covered chunk-by-chunk. That split is what buys streaming: a
+//! receiver can validate the header as soon as it arrives, then decode
+//! and verify each chunk independently (and in parallel) as payload
+//! bytes stream in, without buffering the whole container first.
+
+use crate::error::{Error, Result};
+use crate::quant::QuantParams;
+use crate::rans::FreqTable;
+use crate::util::{crc32, varint};
+
+/// v2 container magic bytes.
+pub const MAGIC_V2: &[u8; 4] = b"RSC2";
+/// v2 container version byte.
+pub const VERSION_V2: u8 = 2;
+/// Upper bound on chunks per container (header sanity check).
+pub const MAX_CHUNKS: usize = 1 << 20;
+
+/// One independently decodable span of the concatenated stream.
+#[derive(Debug, Clone)]
+pub struct Chunk {
+    /// Symbols of `D` coded in this chunk.
+    pub symbol_count: usize,
+    /// CRC-32 of `payload`.
+    pub crc: u32,
+    /// Scalar rANS stream for this span.
+    pub payload: Vec<u8>,
+}
+
+impl Chunk {
+    /// Build a chunk from its payload, stamping the checksum.
+    pub fn new(symbol_count: usize, payload: Vec<u8>) -> Self {
+        let crc = crc32::hash(&payload);
+        Chunk { symbol_count, crc, payload }
+    }
+
+    /// Verify the payload against the stored checksum.
+    pub fn verify(&self, index: usize) -> Result<()> {
+        let actual = crc32::hash(&self.payload);
+        if actual != self.crc {
+            return Err(Error::corrupt(format!(
+                "chunk {index} checksum mismatch: stored {:#010x}, computed {actual:#010x}",
+                self.crc
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Parsed v2 container: shared header + side information + chunk list.
+#[derive(Debug, Clone)]
+pub struct ChunkedContainer {
+    /// Quantization parameters used by the encoder.
+    pub params: QuantParams,
+    /// Original flat length `T`.
+    pub orig_len: usize,
+    /// Reshape rows `N`.
+    pub n_rows: usize,
+    /// Stored nonzeros.
+    pub nnz: usize,
+    /// Entropy-coding alphabet for `D`.
+    pub alphabet: usize,
+    /// Frequency table shared by every chunk.
+    pub table: FreqTable,
+    /// Independently decodable chunks, in stream order.
+    pub chunks: Vec<Chunk>,
+}
+
+impl ChunkedContainer {
+    /// Columns `K = T / N`.
+    pub fn n_cols(&self) -> usize {
+        if self.n_rows == 0 { 0 } else { self.orig_len / self.n_rows }
+    }
+
+    /// Length of the concatenated stream `ℓ_D = 2·nnz + N`.
+    pub fn ell_d(&self) -> usize {
+        2 * self.nnz + self.n_rows
+    }
+
+    /// Total payload bytes across chunks (excluding framing).
+    pub fn payload_bytes(&self) -> usize {
+        self.chunks.iter().map(|c| c.payload.len()).sum()
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut head = Vec::with_capacity(64 + 10 * self.chunks.len());
+        head.extend_from_slice(MAGIC_V2);
+        head.push(VERSION_V2);
+        head.push(self.params.q);
+        head.extend_from_slice(&self.params.scale.to_le_bytes());
+        varint::write_i64(&mut head, self.params.zero as i64);
+        varint::write_usize(&mut head, self.orig_len);
+        varint::write_usize(&mut head, self.n_rows);
+        varint::write_usize(&mut head, self.nnz);
+        varint::write_usize(&mut head, self.alphabet);
+        self.table.serialize(&mut head);
+        varint::write_usize(&mut head, self.chunks.len());
+        for c in &self.chunks {
+            varint::write_usize(&mut head, c.symbol_count);
+            varint::write_usize(&mut head, c.payload.len());
+            head.extend_from_slice(&c.crc.to_le_bytes());
+        }
+        let header_crc = crc32::hash(&head);
+        let mut out = head;
+        out.extend_from_slice(&header_crc.to_le_bytes());
+        for c in &self.chunks {
+            out.extend_from_slice(&c.payload);
+        }
+        out
+    }
+
+    /// Parse and structurally validate a v2 container.
+    ///
+    /// The header CRC and all size arithmetic are checked here; chunk
+    /// *payload* checksums are checked on decode ([`Chunk::verify`]), so
+    /// a partial decoder only pays for the chunks it touches.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < MAGIC_V2.len() + 2 + 4 + 4 {
+            return Err(Error::corrupt("v2 container shorter than minimum header"));
+        }
+        if &bytes[0..4] != MAGIC_V2 {
+            return Err(Error::corrupt("bad v2 magic"));
+        }
+        if bytes[4] != VERSION_V2 {
+            return Err(Error::corrupt(format!("unsupported v2 version {}", bytes[4])));
+        }
+        let q = bytes[5];
+        let mut pos = 6usize;
+        let scale =
+            f32::from_le_bytes([bytes[pos], bytes[pos + 1], bytes[pos + 2], bytes[pos + 3]]);
+        pos += 4;
+        let zero = varint::read_i64(bytes, &mut pos)?;
+        let zero = i32::try_from(zero).map_err(|_| Error::corrupt("zero point overflow"))?;
+        let orig_len = varint::read_usize(bytes, &mut pos)?;
+        let n_rows = varint::read_usize(bytes, &mut pos)?;
+        let nnz = varint::read_usize(bytes, &mut pos)?;
+        let alphabet = varint::read_usize(bytes, &mut pos)?;
+        let table = FreqTable::deserialize(bytes, &mut pos)?;
+        let chunk_count = varint::read_usize(bytes, &mut pos)?;
+        if chunk_count == 0 || chunk_count > MAX_CHUNKS {
+            return Err(Error::corrupt(format!("bad chunk count {chunk_count}")));
+        }
+        let mut metas = Vec::with_capacity(chunk_count);
+        for _ in 0..chunk_count {
+            let symbol_count = varint::read_usize(bytes, &mut pos)?;
+            let payload_len = varint::read_usize(bytes, &mut pos)?;
+            if pos + 4 > bytes.len() {
+                return Err(Error::corrupt("chunk table truncated"));
+            }
+            let crc = u32::from_le_bytes([
+                bytes[pos],
+                bytes[pos + 1],
+                bytes[pos + 2],
+                bytes[pos + 3],
+            ]);
+            pos += 4;
+            metas.push((symbol_count, payload_len, crc));
+        }
+        // Header checksum covers everything up to here.
+        if pos + 4 > bytes.len() {
+            return Err(Error::corrupt("v2 header checksum missing"));
+        }
+        let stored = u32::from_le_bytes([
+            bytes[pos],
+            bytes[pos + 1],
+            bytes[pos + 2],
+            bytes[pos + 3],
+        ]);
+        let actual = crc32::hash(&bytes[..pos]);
+        if stored != actual {
+            return Err(Error::corrupt(format!(
+                "v2 header crc mismatch: stored {stored:#010x}, computed {actual:#010x}"
+            )));
+        }
+        pos += 4;
+
+        // Structural sanity (mirrors the v1 checks).
+        if !(1..=16).contains(&q) {
+            return Err(Error::corrupt(format!("bad Q {q}")));
+        }
+        if orig_len > crate::pipeline::container::MAX_DECODE_SYMBOLS {
+            return Err(Error::corrupt(format!(
+                "declared tensor length {orig_len} exceeds decode cap"
+            )));
+        }
+        if !scale.is_finite() || scale <= 0.0 {
+            return Err(Error::corrupt("bad scale"));
+        }
+        if n_rows == 0 && orig_len != 0 {
+            return Err(Error::corrupt("zero rows for nonempty tensor"));
+        }
+        if n_rows != 0 && orig_len % n_rows != 0 {
+            return Err(Error::corrupt("N does not divide T"));
+        }
+        if nnz > orig_len {
+            return Err(Error::corrupt("nnz exceeds tensor size"));
+        }
+        if table.alphabet() != alphabet {
+            return Err(Error::corrupt("alphabet / table size mismatch"));
+        }
+        let ell_d = nnz
+            .checked_mul(2)
+            .and_then(|x| x.checked_add(n_rows))
+            .ok_or_else(|| Error::corrupt("ℓ_D overflows"))?;
+        let mut total_symbols = 0usize;
+        for &(s, _, _) in &metas {
+            total_symbols = total_symbols
+                .checked_add(s)
+                .ok_or_else(|| Error::corrupt("chunk symbol counts overflow"))?;
+        }
+        if total_symbols != ell_d {
+            return Err(Error::corrupt(format!(
+                "chunk symbols {total_symbols} != ℓ_D = {ell_d}"
+            )));
+        }
+
+        let mut chunks = Vec::with_capacity(chunk_count);
+        for (symbol_count, payload_len, crc) in metas {
+            let end = pos
+                .checked_add(payload_len)
+                .filter(|&e| e <= bytes.len())
+                .ok_or_else(|| Error::corrupt("chunk payload truncated"))?;
+            chunks.push(Chunk { symbol_count, crc, payload: bytes[pos..end].to_vec() });
+            pos = end;
+        }
+        if pos != bytes.len() {
+            return Err(Error::corrupt("trailing bytes after last chunk"));
+        }
+        let params = QuantParams { q, scale, zero };
+        Ok(ChunkedContainer { params, orig_len, n_rows, nnz, alphabet, table, chunks })
+    }
+
+    /// Decode a single chunk's symbols, verifying its checksum first —
+    /// the partial/streaming entry point.
+    pub fn decode_chunk(&self, index: usize) -> Result<Vec<u32>> {
+        let chunk = self
+            .chunks
+            .get(index)
+            .ok_or_else(|| Error::invalid(format!("chunk index {index} out of range")))?;
+        chunk.verify(index)?;
+        crate::rans::decode(&chunk.payload, chunk.symbol_count, &self.table)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rans::encode;
+    use crate::util::prng::Rng;
+
+    fn sample_container(seed: u64, n_chunks: usize) -> (ChunkedContainer, Vec<u32>) {
+        let mut rng = Rng::new(seed);
+        // A structurally consistent D-stream: nnz values + nnz cols + N counts.
+        let nnz = 40usize;
+        let n_rows = 20usize;
+        let alphabet = 16usize;
+        let mut d: Vec<u32> = Vec::new();
+        for _ in 0..nnz {
+            d.push(1 + rng.below(14) as u32); // values (≠ background 0)
+        }
+        for _ in 0..nnz {
+            d.push(rng.below(8) as u32); // cols
+        }
+        for _ in 0..n_rows {
+            d.push(2); // row counts: 20 rows × 2 = 40 = nnz
+        }
+        let table = FreqTable::from_symbols(&d, alphabet);
+        let spans = crate::rans::interleaved::lane_spans(d.len(), n_chunks);
+        let chunks: Vec<Chunk> = spans
+            .iter()
+            .map(|s| Chunk::new(s.len(), encode(&d[s.clone()], &table).unwrap()))
+            .collect();
+        let c = ChunkedContainer {
+            params: QuantParams { q: 4, scale: 0.5, zero: 0 },
+            orig_len: n_rows * 8,
+            n_rows,
+            nnz,
+            alphabet,
+            table,
+            chunks,
+        };
+        (c, d)
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        for n_chunks in [1usize, 2, 5] {
+            let (c, d) = sample_container(1, n_chunks);
+            let bytes = c.to_bytes();
+            let back = ChunkedContainer::from_bytes(&bytes).unwrap();
+            assert_eq!(back.params, c.params);
+            assert_eq!(back.orig_len, c.orig_len);
+            assert_eq!(back.n_rows, c.n_rows);
+            assert_eq!(back.nnz, c.nnz);
+            assert_eq!(back.chunks.len(), n_chunks);
+            let mut decoded = Vec::new();
+            for i in 0..back.chunks.len() {
+                decoded.extend(back.decode_chunk(i).unwrap());
+            }
+            assert_eq!(decoded, d, "chunks={n_chunks}");
+        }
+    }
+
+    #[test]
+    fn every_flipped_byte_is_detected() {
+        let (c, _) = sample_container(2, 3);
+        let bytes = c.to_bytes();
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x5A;
+            let rejected = match ChunkedContainer::from_bytes(&bad) {
+                Err(_) => true,
+                Ok(parsed) => (0..parsed.chunks.len())
+                    .any(|k| parsed.decode_chunk(k).is_err()),
+            };
+            assert!(rejected, "flip at byte {i} undetected");
+        }
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let (c, _) = sample_container(3, 2);
+        let bytes = c.to_bytes();
+        for cut in [0, 1, 4, 10, bytes.len() / 2, bytes.len() - 1] {
+            assert!(ChunkedContainer::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn partial_decode_ignores_other_chunks() {
+        // Corrupting chunk 2's payload must not stop chunk 0 from
+        // decoding — the streaming property the format exists for.
+        let (c, d) = sample_container(4, 3);
+        let mut bytes = c.to_bytes();
+        let last = bytes.len() - 1; // inside the final chunk's payload
+        bytes[last] ^= 0xFF;
+        let parsed = ChunkedContainer::from_bytes(&bytes).unwrap();
+        let first = parsed.decode_chunk(0).unwrap();
+        assert_eq!(first, d[..first.len()].to_vec());
+        assert!(parsed.decode_chunk(2).is_err());
+    }
+
+    #[test]
+    fn chunk_index_out_of_range_is_invalid() {
+        let (c, _) = sample_container(5, 2);
+        assert!(c.decode_chunk(9).is_err());
+    }
+}

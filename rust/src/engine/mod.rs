@@ -1,0 +1,618 @@
+//! Persistent chunk-parallel compression engine.
+//!
+//! The original hot path spawned scoped threads for every
+//! `compress`/`decompress` call — roughly a millisecond of pure fan-out
+//! overhead per request on a loaded host (measured in
+//! `benches/perf_hotpath.rs`), paid millions of times under serving
+//! traffic. The engine amortizes that cost:
+//!
+//! * a **long-lived worker pool** ([`crate::util::threadpool`]) created
+//!   once and shared by every caller — coordinator nodes, the batcher,
+//!   and the plain [`crate::pipeline`] entry points all dispatch onto
+//!   the same workers instead of each oversubscribing the host;
+//! * a **reshape-plan cache** ([`PlanCache`]) so Algorithm 1 runs once
+//!   per `(T, Q)` tensor shape, not per request;
+//! * **chunk-parallel encode/decode**: the concatenated stream is split
+//!   into per-lane spans ([`crate::rans::interleaved::lane_spans`]) and
+//!   dispatched to pooled workers.
+//!
+//! Two container formats are supported. [`ContainerFormat::V1`] emits
+//! bitstreams **byte-identical** to the pre-engine serial pipeline for
+//! the same [`PipelineConfig`] (the framing is shared via
+//! [`crate::rans::interleaved::assemble_stream`], so this holds by
+//! construction). [`ContainerFormat::ChunkedV2`] adds per-chunk framing
+//! and checksums for streaming/partial decode ([`chunked`]). The decoder
+//! sniffs the magic and accepts both.
+
+pub mod chunked;
+pub mod plan_cache;
+
+pub use chunked::{Chunk, ChunkedContainer};
+pub use plan_cache::PlanCache;
+
+use std::sync::{Arc, OnceLock};
+
+use crate::error::{Error, Result};
+use crate::pipeline::codec::{CompressStats, PipelineConfig, ReshapeStrategy};
+use crate::pipeline::container::Container;
+use crate::quant::{self, QuantParams};
+use crate::rans::freq::FreqTable;
+use crate::rans::interleaved::{assemble_stream, lane_spans, parse_stream_spans, MAX_LANES};
+use crate::reshape::{self, optimizer::OptimizerConfig};
+use crate::sparse::ModCsr;
+use crate::util::stats;
+use crate::util::threadpool::ThreadPool;
+
+/// Which container layout the engine emits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContainerFormat {
+    /// The v1 single-payload container — byte-identical to the
+    /// pre-engine serial pipeline.
+    V1,
+    /// The v2 chunked container with per-chunk checksums
+    /// (streaming/partial decode).
+    ChunkedV2,
+}
+
+/// Engine construction parameters.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Worker threads in the pool. `0` sizes to the machine
+    /// (`available_parallelism`, minimum 1).
+    pub workers: usize,
+    /// Output container format (default [`ContainerFormat::V1`]).
+    pub format: ContainerFormat,
+    /// Target symbols per chunk for [`ContainerFormat::ChunkedV2`].
+    pub chunk_symbols: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { workers: 0, format: ContainerFormat::V1, chunk_symbols: 1 << 16 }
+    }
+}
+
+/// The persistent compression engine.
+///
+/// Construction is cheap relative to its lifetime but not free (it
+/// spawns the worker threads); create one per process — or just use
+/// [`Engine::shared`] — and clone the `Arc` everywhere a codec handle is
+/// needed.
+pub struct Engine {
+    pool: ThreadPool,
+    plans: PlanCache,
+    format: ContainerFormat,
+    chunk_symbols: usize,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Engine::new(EngineConfig::default())
+    }
+}
+
+impl Engine {
+    /// Build an engine with `cfg`.
+    pub fn new(cfg: EngineConfig) -> Self {
+        let workers = if cfg.workers == 0 { Self::auto_pool_size() } else { cfg.workers };
+        Engine {
+            pool: ThreadPool::new(workers),
+            plans: PlanCache::new(),
+            format: cfg.format,
+            chunk_symbols: cfg.chunk_symbols.max(1),
+        }
+    }
+
+    /// Pool size an auto-sized engine (`workers: 0`) gets on this
+    /// machine. This is the single definition of the machine-sizing
+    /// heuristic; it does **not** construct a pool, so pure queries
+    /// like [`crate::pipeline::codec::default_parallelism`] can consult
+    /// it without spawning the shared engine's workers as a side
+    /// effect.
+    pub fn auto_pool_size() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    /// The process-wide default engine (machine-sized pool, v1 format).
+    ///
+    /// The plain [`crate::pipeline::compress`]/[`crate::pipeline::decompress`]
+    /// wrappers route through this instance, so every caller in the
+    /// process shares one worker pool.
+    pub fn shared() -> &'static Arc<Engine> {
+        static SHARED: OnceLock<Arc<Engine>> = OnceLock::new();
+        SHARED.get_or_init(|| Arc::new(Engine::default()))
+    }
+
+    /// Worker threads in the pool.
+    pub fn pool_size(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// The single source of truth for the serial/parallel decision:
+    /// threading lanes only helps with more than one pooled worker.
+    /// `pipeline::codec::default_parallelism` delegates here.
+    pub fn parallel_by_default(&self) -> bool {
+        self.pool_size() > 1
+    }
+
+    /// The engine's reshape-plan cache.
+    pub fn plans(&self) -> &PlanCache {
+        &self.plans
+    }
+
+    /// The configured output format.
+    pub fn format(&self) -> ContainerFormat {
+        self.format
+    }
+}
+
+/// A codec handle held by long-lived components (coordinator nodes):
+/// either a dedicated engine, or — the default — the process-wide
+/// shared engine resolved *lazily*, so a component that is immediately
+/// given a dedicated engine never spawns the shared pool at all.
+#[derive(Default)]
+pub struct EngineHandle(Option<Arc<Engine>>);
+
+impl EngineHandle {
+    /// Resolve to [`Engine::shared`] on first use.
+    pub fn shared() -> Self {
+        EngineHandle(None)
+    }
+
+    /// Always use `engine`.
+    pub fn dedicated(engine: Arc<Engine>) -> Self {
+        EngineHandle(Some(engine))
+    }
+
+    /// The engine behind this handle.
+    pub fn get(&self) -> &Engine {
+        match &self.0 {
+            Some(e) => e.as_ref(),
+            None => Engine::shared().as_ref(),
+        }
+    }
+
+    /// True when a dedicated engine was installed.
+    pub fn is_dedicated(&self) -> bool {
+        self.0.is_some()
+    }
+}
+
+impl Engine {
+    // ------------------------------------------------------------ encode
+
+    /// Compress pre-quantized symbols (the serving hot path).
+    pub fn compress_quantized(
+        &self,
+        symbols: &[u16],
+        params: QuantParams,
+        cfg: &PipelineConfig,
+    ) -> Result<(Vec<u8>, CompressStats)> {
+        let t = symbols.len();
+        if t == 0 {
+            return Err(Error::invalid("cannot compress empty tensor"));
+        }
+        let background = params.zero_symbol();
+        let (n_rows, reshape_evaluated) = resolve_n(symbols, background, cfg)?;
+        let k = t / n_rows;
+
+        // Modified CSR + concat (§3.1).
+        let csr = ModCsr::encode(symbols, n_rows, k, background)?;
+        let d = csr.concat();
+        let alphabet = csr.concat_alphabet(params.alphabet());
+
+        // Summed frequency table over D = v ⊕ c ⊕ r. One histogram pass
+        // serves both the normalized coding table and the entropy stat.
+        let freqs = stats::histogram(&d, alphabet);
+        let entropy = stats::shannon_entropy(&freqs);
+        let table = if d.is_empty() {
+            FreqTable::from_symbols(&d, alphabet)
+        } else {
+            FreqTable::from_counts(&freqs)?
+        };
+        // Arc up front so pooled lane jobs share the table without a
+        // per-request deep copy; by the time a container is assembled
+        // the jobs are done, so the unwrap below is normally free.
+        let table = Arc::new(table);
+        let nnz = csr.nnz();
+
+        match self.format {
+            ContainerFormat::V1 => {
+                let lanes = cfg.lanes.clamp(1, MAX_LANES);
+                let (pairs, symbol_count) = self.encode_spans(d, &table, lanes, cfg.parallel)?;
+                let payloads: Vec<Vec<u8>> = pairs.into_iter().map(|(_, p)| p).collect();
+                let payload = assemble_stream(lanes, symbol_count, &payloads);
+                let table = Arc::try_unwrap(table).unwrap_or_else(|arc| (*arc).clone());
+                let container =
+                    Container { params, orig_len: t, n_rows, nnz, alphabet, table, payload };
+                let bytes = container.to_bytes();
+                let payload_bytes = container.payload.len();
+                let stats = CompressStats {
+                    n_rows,
+                    n_cols: k,
+                    nnz,
+                    entropy,
+                    total_bytes: bytes.len(),
+                    payload_bytes,
+                    side_info_bytes: bytes.len() - payload_bytes,
+                    reshape_evaluated,
+                };
+                Ok((bytes, stats))
+            }
+            ContainerFormat::ChunkedV2 => {
+                // Clamp to the format's header bound so the encoder can
+                // never emit a container its own decoder rejects.
+                let n_chunks =
+                    d.len().div_ceil(self.chunk_symbols).clamp(1, chunked::MAX_CHUNKS);
+                let (pairs, symbol_count) =
+                    self.encode_spans(d, &table, n_chunks, cfg.parallel)?;
+                debug_assert_eq!(symbol_count, 2 * nnz + n_rows);
+                // Each chunk's symbol count comes paired with its payload
+                // straight from encode_spans, so header and payload can
+                // never drift.
+                let chunks: Vec<Chunk> = pairs
+                    .into_iter()
+                    .map(|(span, payload)| Chunk::new(span.len(), payload))
+                    .collect();
+                let table = Arc::try_unwrap(table).unwrap_or_else(|arc| (*arc).clone());
+                let container = ChunkedContainer {
+                    params,
+                    orig_len: t,
+                    n_rows,
+                    nnz,
+                    alphabet,
+                    table,
+                    chunks,
+                };
+                let payload_bytes = container.payload_bytes();
+                let bytes = container.to_bytes();
+                let stats = CompressStats {
+                    n_rows,
+                    n_cols: k,
+                    nnz,
+                    entropy,
+                    total_bytes: bytes.len(),
+                    payload_bytes,
+                    side_info_bytes: bytes.len() - payload_bytes,
+                    reshape_evaluated,
+                };
+                Ok((bytes, stats))
+            }
+        }
+    }
+
+    /// Compress a float tensor (quantization inside).
+    pub fn compress(
+        &self,
+        data: &[f32],
+        cfg: &PipelineConfig,
+    ) -> Result<(Vec<u8>, CompressStats)> {
+        let params = QuantParams::fit(cfg.q, data)?;
+        let symbols = quant::quantize(data, &params);
+        self.compress_quantized(&symbols, params, cfg)
+    }
+
+    /// Compress with the engine's plan cache resolving the reshape:
+    /// Algorithm 1 runs only on the first sighting of a `(T, Q)` shape.
+    ///
+    /// This is the library entry point for steady-state callers that
+    /// have no coordinator around them. The coordinator's edge nodes
+    /// deliberately do **not** use it: each node owns a [`PlanCache`]
+    /// so its `plan_cache_stats()` reflect that route alone, while the
+    /// engine-level cache here is process-wide. Both are the same type;
+    /// a fix to one mechanism is a fix to both.
+    pub fn compress_quantized_cached(
+        &self,
+        symbols: &[u16],
+        params: QuantParams,
+        cfg: &PipelineConfig,
+    ) -> Result<(Vec<u8>, CompressStats)> {
+        let resolved = match cfg.reshape {
+            ReshapeStrategy::Optimize => PipelineConfig {
+                reshape: self.plans.strategy(symbols, &params)?,
+                ..cfg.clone()
+            },
+            _ => cfg.clone(),
+        };
+        self.compress_quantized(symbols, params, &resolved)
+    }
+
+    /// Split `d` into `n_spans` contiguous spans and rANS-encode each,
+    /// on pooled workers when `parallel` (and the pool) allow it.
+    /// Returns each span paired with its payload (so callers never
+    /// re-derive the partition) plus the total symbol count.
+    fn encode_spans(
+        &self,
+        d: Vec<u32>,
+        table: &Arc<FreqTable>,
+        n_spans: usize,
+        parallel: bool,
+    ) -> Result<(Vec<(std::ops::Range<usize>, Vec<u8>)>, usize)> {
+        let symbol_count = d.len();
+        let spans = lane_spans(symbol_count, n_spans);
+        let use_pool = parallel && spans.len() > 1 && self.pool_size() > 1;
+        let payloads: Vec<Vec<u8>> = if use_pool {
+            let d = Arc::new(d);
+            let jobs: Vec<_> = spans
+                .iter()
+                .map(|span| {
+                    let d = Arc::clone(&d);
+                    let table = Arc::clone(table);
+                    let span = span.clone();
+                    move || crate::rans::encode(&d[span], &table)
+                })
+                .collect();
+            collect_lane_results(self.pool.run_batch(jobs), "encode")?
+        } else {
+            spans
+                .iter()
+                .map(|span| crate::rans::encode(&d[span.clone()], table))
+                .collect::<Result<_>>()?
+        };
+        Ok((spans.into_iter().zip(payloads).collect(), symbol_count))
+    }
+
+    // ------------------------------------------------------------ decode
+
+    /// Decompress a container (v1 or v2, detected by magic) to quantized
+    /// symbols plus the quantization parameters.
+    pub fn decompress_to_symbols(
+        &self,
+        bytes: &[u8],
+        parallel: bool,
+    ) -> Result<(Vec<u16>, QuantParams)> {
+        if bytes.len() >= 4 && &bytes[0..4] == chunked::MAGIC_V2 {
+            self.decompress_v2(bytes, parallel)
+        } else {
+            self.decompress_v1(bytes, parallel)
+        }
+    }
+
+    /// Decompress all the way to floats.
+    pub fn decompress(&self, bytes: &[u8], parallel: bool) -> Result<Vec<f32>> {
+        let (symbols, params) = self.decompress_to_symbols(bytes, parallel)?;
+        Ok(quant::dequantize(&symbols, &params))
+    }
+
+    fn decompress_v1(&self, bytes: &[u8], parallel: bool) -> Result<(Vec<u16>, QuantParams)> {
+        let c = Container::from_bytes(bytes)?;
+        let (symbol_count, spans) = parse_stream_spans(&c.payload)?;
+        // The stream's declared symbol count must equal ℓ_D *before* any
+        // decoding: a degenerate table can legally decode an arbitrary
+        // number of symbols from a few bytes, so checking afterwards
+        // would let a forged header burn unbounded memory/CPU first.
+        if symbol_count != c.ell_d() {
+            return Err(Error::corrupt(format!(
+                "stream declares {symbol_count} symbols, header ℓ_D = {}",
+                c.ell_d()
+            )));
+        }
+        let shape = DecodedShape::of_v1(&c);
+        let use_pool = parallel && spans.len() > 1 && self.pool_size() > 1;
+        let decoded: Vec<Vec<u32>> = if use_pool {
+            // Share the parsed container itself with the lane jobs —
+            // no per-request copy of the payload or table.
+            let c = Arc::new(c);
+            let jobs: Vec<_> = spans
+                .into_iter()
+                .map(|(count, range)| {
+                    let c = Arc::clone(&c);
+                    move || crate::rans::decode(&c.payload[range], count, &c.table)
+                })
+                .collect();
+            collect_lane_results(self.pool.run_batch(jobs), "decode")?
+        } else {
+            spans
+                .into_iter()
+                .map(|(count, range)| crate::rans::decode(&c.payload[range], count, &c.table))
+                .collect::<Result<_>>()?
+        };
+        shape.reassemble(decoded)
+    }
+
+    fn decompress_v2(&self, bytes: &[u8], parallel: bool) -> Result<(Vec<u16>, QuantParams)> {
+        let c = ChunkedContainer::from_bytes(bytes)?;
+        let shape = DecodedShape::of_v2(&c);
+        let use_pool = parallel && c.chunks.len() > 1 && self.pool_size() > 1;
+        let decoded: Vec<Vec<u32>> = if use_pool {
+            let c = Arc::new(c);
+            let jobs: Vec<_> = (0..c.chunks.len())
+                .map(|i| {
+                    let c = Arc::clone(&c);
+                    move || c.decode_chunk(i)
+                })
+                .collect();
+            collect_lane_results(self.pool.run_batch(jobs), "chunk decode")?
+        } else {
+            (0..c.chunks.len()).map(|i| c.decode_chunk(i)).collect::<Result<_>>()?
+        };
+        shape.reassemble(decoded)
+    }
+}
+
+/// The header fields both container formats share, copied out before the
+/// container is handed to pooled lane jobs — one reassembly path for v1
+/// and v2, so the ℓ_D consistency check and CSR rebuild can never drift
+/// between formats.
+#[derive(Clone, Copy)]
+struct DecodedShape {
+    params: QuantParams,
+    nnz: usize,
+    n_rows: usize,
+    n_cols: usize,
+    ell_d: usize,
+}
+
+impl DecodedShape {
+    fn of_v1(c: &Container) -> Self {
+        DecodedShape {
+            params: c.params,
+            nnz: c.nnz,
+            n_rows: c.n_rows,
+            n_cols: c.n_cols(),
+            ell_d: c.ell_d(),
+        }
+    }
+
+    fn of_v2(c: &ChunkedContainer) -> Self {
+        DecodedShape {
+            params: c.params,
+            nnz: c.nnz,
+            n_rows: c.n_rows,
+            n_cols: c.n_cols(),
+            ell_d: c.ell_d(),
+        }
+    }
+
+    /// Concatenate decoded lane/chunk symbols and rebuild the tensor.
+    fn reassemble(self, decoded: Vec<Vec<u32>>) -> Result<(Vec<u16>, QuantParams)> {
+        let mut d = Vec::with_capacity(self.ell_d.min(1 << 20));
+        for part in decoded {
+            d.extend(part);
+        }
+        if d.len() != self.ell_d {
+            return Err(Error::corrupt(format!(
+                "decoded {} symbols, expected ℓ_D = {}",
+                d.len(),
+                self.ell_d
+            )));
+        }
+        let csr =
+            ModCsr::from_concat(&d, self.nnz, self.n_rows, self.n_cols, self.params.zero_symbol())?;
+        Ok((csr.decode()?, self.params))
+    }
+}
+
+/// Flatten pooled lane results, converting a panicked lane into a codec
+/// error instead of poisoning the caller.
+fn collect_lane_results<T>(
+    results: Vec<std::thread::Result<Result<T>>>,
+    what: &str,
+) -> Result<Vec<T>> {
+    let mut out = Vec::with_capacity(results.len());
+    for (i, r) in results.into_iter().enumerate() {
+        match r {
+            Ok(Ok(v)) => out.push(v),
+            Ok(Err(e)) => return Err(e),
+            Err(_) => return Err(Error::codec(format!("{what} lane {i} panicked"))),
+        }
+    }
+    Ok(out)
+}
+
+/// Resolve the reshape strategy to a concrete `N` (shared by every
+/// engine format path; moved here from `pipeline::codec`).
+fn resolve_n(symbols: &[u16], background: u16, cfg: &PipelineConfig) -> Result<(usize, usize)> {
+    let t = symbols.len();
+    match &cfg.reshape {
+        ReshapeStrategy::Fixed(n) => {
+            if *n == 0 || t % n != 0 {
+                return Err(Error::invalid(format!("fixed N={n} does not divide T={t}")));
+            }
+            Ok((*n, 0))
+        }
+        ReshapeStrategy::Flat => Ok((t.max(1), 0)),
+        ReshapeStrategy::Optimize => {
+            let out = reshape::optimize(symbols, background, &OptimizerConfig::paper(cfg.q))?;
+            Ok((out.best.n, out.evaluated))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn synth(seed: u64, len: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..len)
+            .map(|_| if rng.next_f64() < 0.6 { 0.0 } else { rng.normal().abs() as f32 })
+            .collect()
+    }
+
+    #[test]
+    fn v1_roundtrip_parallel_and_serial_identical() {
+        let engine = Engine::new(EngineConfig { workers: 4, ..EngineConfig::default() });
+        let data = synth(1, 16_384);
+        for q in [2u8, 4, 6, 8] {
+            let par = PipelineConfig { q, lanes: 8, parallel: true, reshape: ReshapeStrategy::Optimize };
+            let ser = PipelineConfig { parallel: false, ..par.clone() };
+            let (b_par, s_par) = engine.compress(&data, &par).unwrap();
+            let (b_ser, s_ser) = engine.compress(&data, &ser).unwrap();
+            assert_eq!(b_par, b_ser, "q={q}");
+            assert_eq!(s_par.total_bytes, s_ser.total_bytes);
+            let back = engine.decompress(&b_par, true).unwrap();
+            assert_eq!(back.len(), data.len());
+        }
+    }
+
+    #[test]
+    fn v2_roundtrip_matches_v1_symbols() {
+        let data = synth(2, 8192);
+        let v1 = Engine::new(EngineConfig { workers: 2, ..EngineConfig::default() });
+        let v2 = Engine::new(EngineConfig {
+            workers: 2,
+            format: ContainerFormat::ChunkedV2,
+            chunk_symbols: 512,
+        });
+        let cfg = PipelineConfig::paper(4);
+        let (b1, _) = v1.compress(&data, &cfg).unwrap();
+        let (b2, _) = v2.compress(&data, &cfg).unwrap();
+        assert_eq!(&b2[0..4], chunked::MAGIC_V2);
+        // Either engine decodes either container (magic sniffing).
+        let (s1, p1) = v1.decompress_to_symbols(&b1, true).unwrap();
+        let (s2, p2) = v1.decompress_to_symbols(&b2, true).unwrap();
+        assert_eq!(s1, s2);
+        assert_eq!(p1, p2);
+        let (s3, _) = v2.decompress_to_symbols(&b1, false).unwrap();
+        assert_eq!(s1, s3);
+    }
+
+    #[test]
+    fn v2_splits_into_expected_chunk_count() {
+        let data = synth(3, 20_000);
+        let engine = Engine::new(EngineConfig {
+            workers: 2,
+            format: ContainerFormat::ChunkedV2,
+            chunk_symbols: 1000,
+        });
+        let (bytes, stats) = engine.compress(&data, &PipelineConfig::paper(4)).unwrap();
+        let c = ChunkedContainer::from_bytes(&bytes).unwrap();
+        let ell_d = 2 * stats.nnz + stats.n_rows;
+        assert_eq!(c.chunks.len(), ell_d.div_ceil(1000));
+        assert_eq!(c.ell_d(), ell_d);
+    }
+
+    #[test]
+    fn single_worker_engine_is_fully_serial_but_correct() {
+        let engine = Engine::new(EngineConfig { workers: 1, ..EngineConfig::default() });
+        assert!(!engine.parallel_by_default());
+        let data = synth(4, 4096);
+        let cfg = PipelineConfig { q: 4, lanes: 8, parallel: true, reshape: ReshapeStrategy::Flat };
+        let (bytes, _) = engine.compress(&data, &cfg).unwrap();
+        let back = engine.decompress(&bytes, true).unwrap();
+        assert_eq!(back.len(), data.len());
+    }
+
+    #[test]
+    fn cached_compression_reuses_plans() {
+        let engine = Engine::new(EngineConfig { workers: 2, ..EngineConfig::default() });
+        let data = synth(5, 8192);
+        let cfg = PipelineConfig::paper(4);
+        let params = QuantParams::fit(4, &data).unwrap();
+        let symbols = quant::quantize(&data, &params);
+        let (a, _) = engine.compress_quantized_cached(&symbols, params, &cfg).unwrap();
+        let (b, _) = engine.compress_quantized_cached(&symbols, params, &cfg).unwrap();
+        assert_eq!(a, b);
+        let (hits, misses) = engine.plans().stats();
+        assert_eq!(misses, 1);
+        assert_eq!(hits, 1);
+    }
+
+    #[test]
+    fn empty_tensor_rejected() {
+        let engine = Engine::new(EngineConfig::default());
+        assert!(engine.compress(&[], &PipelineConfig::paper(4)).is_err());
+    }
+}

@@ -1,0 +1,128 @@
+//! Reshape-plan cache: Algorithm 1 runs once per tensor shape.
+//!
+//! The optimizer's choice of `Ñ` depends on the symbol distribution, but
+//! in steady-state serving every request for a given route carries the
+//! same `(T, Q)` and near-identical statistics (the paper's GPU pipeline
+//! makes the same assumption). Caching the chosen `N` by `(T, Q)` keeps
+//! Algorithm 1 entirely off the hot path after the first sighting of a
+//! shape; subsequent requests compress with
+//! [`ReshapeStrategy::Fixed`].
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::error::Result;
+use crate::pipeline::codec::ReshapeStrategy;
+use crate::quant::QuantParams;
+
+/// Thread-safe `(T, Q) → N` cache with hit/miss counters.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    plans: Mutex<HashMap<(usize, u8), usize>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resolve the reshape strategy for a tensor, running Algorithm 1 on
+    /// the first sighting of a `(T, Q)` pair.
+    pub fn strategy(&self, symbols: &[u16], params: &QuantParams) -> Result<ReshapeStrategy> {
+        let key = (symbols.len(), params.q);
+        if let Some(&n) = self.plans.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(ReshapeStrategy::Fixed(n));
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let cfg = crate::reshape::optimizer::OptimizerConfig::paper(params.q);
+        let out = crate::reshape::optimize(symbols, params.zero_symbol(), &cfg)?;
+        self.plans.lock().unwrap().insert(key, out.best.n);
+        Ok(ReshapeStrategy::Fixed(out.best.n))
+    }
+
+    /// `(hits, misses)` counters.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Number of cached plans.
+    pub fn len(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+
+    /// True when no plan has been cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize, QuantParams};
+    use crate::util::prng::Rng;
+
+    fn symbols(seed: u64, len: usize, q: u8) -> (Vec<u16>, QuantParams) {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..len)
+            .map(|_| if rng.next_f64() < 0.5 { 0.0 } else { rng.normal().abs() as f32 })
+            .collect();
+        let p = QuantParams::fit(q, &data).unwrap();
+        (quantize(&data, &p), p)
+    }
+
+    #[test]
+    fn first_sighting_misses_then_hits() {
+        let cache = PlanCache::new();
+        let (syms, p) = symbols(1, 4096, 4);
+        let a = cache.strategy(&syms, &p).unwrap();
+        let b = cache.strategy(&syms, &p).unwrap();
+        match (&a, &b) {
+            (ReshapeStrategy::Fixed(x), ReshapeStrategy::Fixed(y)) => assert_eq!(x, y),
+            other => panic!("expected Fixed plans, got {other:?}"),
+        }
+        assert_eq!(cache.stats(), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_shapes_get_distinct_entries() {
+        let cache = PlanCache::new();
+        let (a, pa) = symbols(2, 4096, 4);
+        let (b, pb) = symbols(3, 8192, 4);
+        let (c, pc) = symbols(4, 4096, 6);
+        cache.strategy(&a, &pa).unwrap();
+        cache.strategy(&b, &pb).unwrap();
+        cache.strategy(&c, &pc).unwrap();
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.stats(), (0, 3));
+    }
+
+    #[test]
+    fn concurrent_resolution_is_consistent() {
+        let cache = std::sync::Arc::new(PlanCache::new());
+        let (syms, p) = symbols(5, 4096, 4);
+        let chosen: Vec<usize> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    let cache = std::sync::Arc::clone(&cache);
+                    let syms = syms.clone();
+                    s.spawn(move || match cache.strategy(&syms, &p).unwrap() {
+                        ReshapeStrategy::Fixed(n) => n,
+                        other => panic!("unexpected {other:?}"),
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(chosen.windows(2).all(|w| w[0] == w[1]));
+        let (hits, misses) = cache.stats();
+        assert_eq!(hits + misses, 8);
+        assert!(misses >= 1);
+    }
+}

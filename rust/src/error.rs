@@ -3,56 +3,88 @@
 //! Every fallible public API in the crate returns [`Result`]. Variants are
 //! grouped by subsystem so callers can branch on the failure domain
 //! (codec vs. runtime vs. transport) without string matching.
+//!
+//! The `Display`/`Error` impls are hand-written: the offline build carries
+//! no `thiserror`, and the surface is small enough that the derive buys
+//! nothing.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error type for the rans-sc crate.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Compressed payload is malformed (bad magic, truncated, CRC
     /// mismatch, impossible header fields).
-    #[error("corrupt container: {0}")]
     Corrupt(String),
 
     /// An entropy-codec invariant was violated (zero-frequency symbol on
     /// the encode path, state underflow, alphabet overflow).
-    #[error("codec error: {0}")]
     Codec(String),
 
     /// Invalid argument from the caller (shape mismatch, Q out of range,
     /// N does not divide T, empty input where data is required).
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
 
     /// Artifact loading / manifest problems (missing file, bad JSON,
     /// schema mismatch between manifest and HLO artifact).
-    #[error("artifact error: {0}")]
     Artifact(String),
 
-    /// PJRT runtime failures surfaced from the `xla` crate.
-    #[error("runtime error: {0}")]
+    /// PJRT runtime failures surfaced from the XLA binding (or its
+    /// offline stub).
     Runtime(String),
 
     /// Wire-protocol violations between edge and cloud nodes.
-    #[error("protocol error: {0}")]
     Protocol(String),
 
     /// Transport-level failures (connection refused, simulated outage
     /// budget exhausted, channel closed).
-    #[error("transport error: {0}")]
     Transport(String),
 
     /// Configuration file / CLI parsing problems.
-    #[error("config error: {0}")]
     Config(String),
 
     /// JSON parse errors from the hand-rolled parser in `util::json`.
-    #[error("json error at byte {offset}: {msg}")]
-    Json { offset: usize, msg: String },
+    Json {
+        /// Byte offset of the parse failure.
+        offset: usize,
+        /// Parser message.
+        msg: String,
+    },
 
     /// Underlying I/O error.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Corrupt(m) => write!(f, "corrupt container: {m}"),
+            Error::Codec(m) => write!(f, "codec error: {m}"),
+            Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
+            Error::Transport(m) => write!(f, "transport error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Json { offset, msg } => write!(f, "json error at byte {offset}: {msg}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {
@@ -110,5 +142,6 @@ mod tests {
         let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: Error = ioe.into();
         assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

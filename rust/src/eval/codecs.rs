@@ -47,7 +47,7 @@ fn bench_codec(
 
 /// Run the full Table-1 comparison over one IF tensor.
 ///
-/// Rows: E-1 binary, E-2 tANS, E-3 DietGPU-like, zstd, deflate, then
+/// Rows: E-1 binary, E-2 tANS, E-3 DietGPU-like, lz77, byte-rans, then
 /// Ours at each requested Q.
 pub fn codec_comparison(
     data: &[f32],
@@ -59,13 +59,8 @@ pub fn codec_comparison(
     for codec in baselines::paper_baselines() {
         rows.push(bench_codec(codec.as_ref(), data, warmup, trials)?);
     }
-    rows.push(bench_codec(&baselines::general::ZstdCodec::default(), data, warmup, trials)?);
-    rows.push(bench_codec(
-        &baselines::general::DeflateCodec::default(),
-        data,
-        warmup,
-        trials,
-    )?);
+    rows.push(bench_codec(&baselines::general::Lz77Codec, data, warmup, trials)?);
+    rows.push(bench_codec(&baselines::general::ByteRansCodec, data, warmup, trials)?);
     for &q in ours_qs {
         let cfg = PipelineConfig::paper(q);
         let (bytes, _) = pipeline::compress(data, &cfg)?;

@@ -15,13 +15,20 @@
 //!   Algorithm 1 (approximate enumeration for the optimal reshape `Ñ`).
 //! * [`pipeline`] — the end-to-end intermediate-feature codec
 //!   (reshape → AIQ → CSR → concat → rANS) and its container format.
+//! * [`engine`] — the persistent chunk-parallel compression engine: a
+//!   long-lived worker pool shared by every caller, a per-(shape, Q)
+//!   reshape-plan cache, and the chunked v2 container with per-chunk
+//!   checksums for streaming/partial decode. The [`pipeline`] entry
+//!   points are thin wrappers over the shared engine.
 //! * [`channel`] — the ε-outage wireless channel latency model.
 //! * [`baselines`] — E-1 binary serialization, E-2 tANS, E-3 DietGPU-style
-//!   interleaved rANS, plus zstd/deflate comparators.
+//!   interleaved rANS, plus lz77/byte-rans general-purpose comparators.
 //! * [`runtime`] — PJRT executor loading AOT-lowered HLO artifacts
-//!   produced by the Python (JAX + Pallas) compile path.
+//!   produced by the Python (JAX + Pallas) compile path (offline builds
+//!   use the stub in `runtime::xla_stub`).
 //! * [`coordinator`] — the split-computing serving system: edge node,
-//!   cloud node, wire protocol, transports, dynamic batcher, router.
+//!   cloud node, wire protocol, transports, dynamic batcher, router —
+//!   all sharing the engine's worker pool.
 //! * [`telemetry`] — metrics registry and latency-breakdown histograms.
 //! * [`eval`] — experiment drivers shared by `benches/` and `examples/`.
 //!
@@ -33,6 +40,7 @@ pub mod channel;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod error;
 pub mod eval;
 pub mod pipeline;

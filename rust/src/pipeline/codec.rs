@@ -1,13 +1,15 @@
 //! Pipeline compress/decompress drivers.
+//!
+//! Since the engine refactor these entry points are thin wrappers over
+//! the process-wide [`crate::engine::Engine::shared`] instance: the
+//! signatures (and, for the v1 container, the output bytes) are
+//! unchanged, but lane fan-out runs on the engine's persistent worker
+//! pool instead of per-call scoped threads. Callers that want their own
+//! pool size, the chunked v2 container, or plan caching construct an
+//! [`crate::engine::Engine`] directly.
 
-use crate::error::{Error, Result};
+use crate::error::Result;
 use crate::quant::{self, QuantParams};
-use crate::rans::{decode_interleaved, encode_interleaved, FreqTable};
-use crate::reshape::{self, optimizer::OptimizerConfig};
-use crate::sparse::ModCsr;
-use crate::util::stats;
-
-use super::container::Container;
 
 /// How the reshape dimension `N` is chosen.
 #[derive(Debug, Clone)]
@@ -38,11 +40,10 @@ pub struct PipelineConfig {
 impl PipelineConfig {
     /// Paper-default configuration at bit-width `q`.
     ///
-    /// Lane *threading* adapts to the machine: on a single-core host the
-    /// scoped-thread fan-out costs ~1 ms of pure overhead per call
-    /// (measured in `benches/perf_hotpath.rs`), so lanes are encoded
-    /// serially there; the stream format stays multi-lane either way, so
-    /// a parallel decoder can still fan out.
+    /// Lane *threading* adapts to the machine via the engine's pool-size
+    /// heuristic (see [`default_parallelism`]): on a single-core host
+    /// lanes are encoded serially; the stream format stays multi-lane
+    /// either way, so a parallel decoder can still fan out.
     pub fn paper(q: u8) -> Self {
         PipelineConfig {
             q,
@@ -54,8 +55,15 @@ impl PipelineConfig {
 }
 
 /// Whether threading the rANS lanes helps on this host.
+///
+/// Delegates to the engine's pool-size heuristic
+/// ([`crate::engine::Engine::auto_pool_size`]) so the serial/parallel
+/// decision lives in exactly one place: an auto-sized engine gets one
+/// worker on a single-core host and runs everything serially. The
+/// query itself does not instantiate the shared engine — config
+/// construction must stay side-effect-free.
 pub fn default_parallelism() -> bool {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) > 1
+    crate::engine::Engine::auto_pool_size() > 1
 }
 
 /// Statistics from one compression call (feeds telemetry and benches).
@@ -79,81 +87,13 @@ pub struct CompressStats {
     pub reshape_evaluated: usize,
 }
 
-/// Resolve the reshape strategy to a concrete `N`.
-fn resolve_n(
-    symbols: &[u16],
-    background: u16,
-    cfg: &PipelineConfig,
-) -> Result<(usize, usize)> {
-    let t = symbols.len();
-    match &cfg.reshape {
-        ReshapeStrategy::Fixed(n) => {
-            if *n == 0 || t % n != 0 {
-                return Err(Error::invalid(format!("fixed N={n} does not divide T={t}")));
-            }
-            Ok((*n, 0))
-        }
-        ReshapeStrategy::Flat => Ok((t.max(1), 0)),
-        ReshapeStrategy::Optimize => {
-            let out = reshape::optimize(symbols, background, &OptimizerConfig::paper(cfg.q))?;
-            Ok((out.best.n, out.evaluated))
-        }
-    }
-}
-
 /// Compress pre-quantized symbols (hot path; see module docs).
 pub fn compress_quantized(
     symbols: &[u16],
     params: QuantParams,
     cfg: &PipelineConfig,
 ) -> Result<(Vec<u8>, CompressStats)> {
-    let t = symbols.len();
-    if t == 0 {
-        return Err(Error::invalid("cannot compress empty tensor"));
-    }
-    let background = params.zero_symbol();
-    let (n_rows, reshape_evaluated) = resolve_n(symbols, background, cfg)?;
-    let k = t / n_rows;
-
-    // Modified CSR + concat (§3.1).
-    let csr = ModCsr::encode(symbols, n_rows, k, background)?;
-    let d = csr.concat();
-    let alphabet = csr.concat_alphabet(params.alphabet());
-
-    // Summed frequency table over D = v ⊕ c ⊕ r. One histogram pass
-    // serves both the normalized coding table and the entropy stat
-    // (a second O(ℓ_D) pass measured ~0.3 ms on the Fig.2 tensor).
-    let freqs = stats::histogram(&d, alphabet);
-    let entropy = stats::shannon_entropy(&freqs);
-    let table = if d.is_empty() {
-        FreqTable::from_symbols(&d, alphabet)
-    } else {
-        FreqTable::from_counts(&freqs)?
-    };
-
-    let payload = encode_interleaved(&d, &table, cfg.lanes, cfg.parallel)?;
-    let container = Container {
-        params,
-        orig_len: t,
-        n_rows,
-        nnz: csr.nnz(),
-        alphabet,
-        table,
-        payload,
-    };
-    let bytes = container.to_bytes();
-    let payload_bytes = container.payload.len();
-    let stats = CompressStats {
-        n_rows,
-        n_cols: k,
-        nnz: container.nnz,
-        entropy,
-        total_bytes: bytes.len(),
-        payload_bytes,
-        side_info_bytes: bytes.len() - payload_bytes,
-        reshape_evaluated,
-    };
-    Ok((bytes, stats))
+    crate::engine::Engine::shared().compress_quantized(symbols, params, cfg)
 }
 
 /// Compress a float tensor (quantization inside).
@@ -164,20 +104,10 @@ pub fn compress(data: &[f32], cfg: &PipelineConfig) -> Result<(Vec<u8>, Compress
 }
 
 /// Decompress to quantized symbols plus the quantization parameters
-/// (cloud hot path — the tail artifact dequantizes on-device).
+/// (cloud hot path — the tail artifact dequantizes on-device). Accepts
+/// both the v1 and the chunked v2 container (magic-sniffed).
 pub fn decompress_to_symbols(bytes: &[u8], parallel: bool) -> Result<(Vec<u16>, QuantParams)> {
-    let c = Container::from_bytes(bytes)?;
-    let d = decode_interleaved(&c.payload, &c.table, parallel)?;
-    if d.len() != c.ell_d() {
-        return Err(Error::corrupt(format!(
-            "decoded {} symbols, expected ℓ_D = {}",
-            d.len(),
-            c.ell_d()
-        )));
-    }
-    let csr = ModCsr::from_concat(&d, c.nnz, c.n_rows, c.n_cols(), c.params.zero_symbol())?;
-    let symbols = csr.decode()?;
-    Ok((symbols, c.params))
+    crate::engine::Engine::shared().decompress_to_symbols(bytes, parallel)
 }
 
 /// Decompress all the way to floats.

@@ -25,12 +25,21 @@
 use crate::error::{Error, Result};
 use crate::quant::QuantParams;
 use crate::rans::FreqTable;
-use crate::util::varint;
+use crate::util::{crc32, varint};
 
 /// Container magic bytes.
 pub const MAGIC: &[u8; 4] = b"RSC1";
 /// Current container version.
 pub const VERSION: u8 = 1;
+
+/// Plausibility cap on the declared tensor length `T` accepted by the
+/// decoders (v1 and v2). Headers are CRC-checked but not authenticated,
+/// and a degenerate frequency table can legally decode billions of
+/// symbols from a handful of payload bytes — so without this bound a
+/// forged header turns into an allocation/CPU bomb on the serving path.
+/// 2^28 symbols (≈1 GiB of decoded `u32`s at `ℓ_D ≤ 3T`) is orders of
+/// magnitude above any real intermediate-feature tensor.
+pub const MAX_DECODE_SYMBOLS: usize = 1 << 28;
 
 /// Parsed container header + payload.
 #[derive(Debug, Clone)]
@@ -77,7 +86,7 @@ impl Container {
         self.table.serialize(&mut out);
         varint::write_usize(&mut out, self.payload.len());
         out.extend_from_slice(&self.payload);
-        let crc = crc32fast::hash(&out);
+        let crc = crc32::hash(&out);
         out.extend_from_slice(&crc.to_le_bytes());
         out
     }
@@ -89,7 +98,7 @@ impl Container {
         }
         let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
         let stored_crc = u32::from_le_bytes([crc_bytes[0], crc_bytes[1], crc_bytes[2], crc_bytes[3]]);
-        let actual_crc = crc32fast::hash(body);
+        let actual_crc = crc32::hash(body);
         if stored_crc != actual_crc {
             return Err(Error::corrupt(format!(
                 "crc mismatch: stored {stored_crc:#010x}, computed {actual_crc:#010x}"
@@ -125,6 +134,11 @@ impl Container {
         }
         if !scale.is_finite() || scale <= 0.0 {
             return Err(Error::corrupt("bad scale"));
+        }
+        if orig_len > MAX_DECODE_SYMBOLS {
+            return Err(Error::corrupt(format!(
+                "declared tensor length {orig_len} exceeds decode cap {MAX_DECODE_SYMBOLS}"
+            )));
         }
         if n_rows == 0 && orig_len != 0 {
             return Err(Error::corrupt("zero rows for nonempty tensor"));

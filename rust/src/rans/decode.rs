@@ -27,7 +27,10 @@ pub fn decode(bytes: &[u8], count: usize, table: &FreqTable) -> Result<Vec<u32>>
     }
     let mut state = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
     let mut pos = 4usize;
-    let mut out = Vec::with_capacity(count);
+    // `count` comes from untrusted headers on the serving path; cap the
+    // up-front reservation and let the vec grow organically so a forged
+    // count fails in the decode loop instead of aborting the allocator.
+    let mut out = Vec::with_capacity(count.min(1 << 20));
     let mask = SCALE - 1;
 
     for _ in 0..count {

@@ -53,11 +53,33 @@ pub fn lane_spans(count: usize, lanes: usize) -> Vec<std::ops::Range<usize>> {
     spans
 }
 
+/// Assemble per-lane payloads into the interleaved wire layout.
+///
+/// This is the single definition of the stream framing: the scoped-thread
+/// encoder below and the pooled encoder in [`crate::engine`] both feed
+/// their lane payloads through here, so the two paths are byte-identical
+/// by construction.
+pub fn assemble_stream(lanes: usize, symbol_count: usize, payloads: &[Vec<u8>]) -> Vec<u8> {
+    debug_assert_eq!(lanes, payloads.len());
+    let total: usize = payloads.iter().map(|p| p.len()).sum();
+    let mut out = Vec::with_capacity(total + 4 * lanes + 16);
+    varint::write_usize(&mut out, lanes);
+    varint::write_usize(&mut out, symbol_count);
+    for p in payloads {
+        varint::write_usize(&mut out, p.len());
+    }
+    for p in payloads {
+        out.extend_from_slice(p);
+    }
+    out
+}
+
 /// Encode `symbols` with `lanes` independent rANS states.
 ///
-/// `parallel` controls whether lanes run on scoped threads (the hot-path
-/// configuration) or sequentially (deterministic profiling baseline);
-/// both produce byte-identical output.
+/// `parallel` controls whether lanes run on scoped threads (the
+/// per-call fan-out baseline; the serving path uses the pooled
+/// [`crate::engine`] instead) or sequentially; both produce
+/// byte-identical output.
 pub fn encode_interleaved(
     symbols: &[u32],
     table: &FreqTable,
@@ -82,23 +104,17 @@ pub fn encode_interleaved(
         spans.iter().map(|span| encode(&symbols[span.clone()], table)).collect()
     };
 
-    let mut out = Vec::new();
-    varint::write_usize(&mut out, lanes);
-    varint::write_usize(&mut out, symbols.len());
-    let mut bufs = Vec::with_capacity(lanes);
-    for p in payloads {
-        let p = p?;
-        varint::write_usize(&mut out, p.len());
-        bufs.push(p);
-    }
-    for b in &bufs {
-        out.extend_from_slice(b);
-    }
-    Ok(out)
+    let payloads: Vec<Vec<u8>> = payloads.into_iter().collect::<Result<_>>()?;
+    Ok(assemble_stream(lanes, symbols.len(), &payloads))
 }
 
-/// Parse the interleaved header, borrowing lane payloads from `bytes`.
-pub fn parse_stream<'a>(bytes: &'a [u8]) -> Result<InterleavedStream<'a>> {
+/// Parse the interleaved header, returning per-lane symbol counts and
+/// byte *ranges* into `bytes` (offset-based so callers that need
+/// `'static` lane tasks — the pooled engine — can slice an `Arc`'d
+/// buffer instead of borrowing).
+pub fn parse_stream_spans(
+    bytes: &[u8],
+) -> Result<(usize, Vec<(usize, std::ops::Range<usize>)>)> {
     let mut pos = 0usize;
     let lanes = varint::read_usize(bytes, &mut pos)?;
     if lanes == 0 || lanes > MAX_LANES {
@@ -118,13 +134,23 @@ pub fn parse_stream<'a>(bytes: &'a [u8]) -> Result<InterleavedStream<'a>> {
         if end > bytes.len() {
             return Err(Error::corrupt("lane payload truncated"));
         }
-        out.push((spans[i].len(), &bytes[pos..end]));
+        out.push((spans[i].len(), pos..end));
         pos = end;
     }
     if pos != bytes.len() {
         return Err(Error::corrupt("trailing bytes after last lane"));
     }
-    Ok(InterleavedStream { symbol_count, lanes: out })
+    Ok((symbol_count, out))
+}
+
+/// Parse the interleaved header, borrowing lane payloads from `bytes`.
+pub fn parse_stream(bytes: &[u8]) -> Result<InterleavedStream<'_>> {
+    let (symbol_count, spans) = parse_stream_spans(bytes)?;
+    let lanes = spans
+        .into_iter()
+        .map(|(count, range)| (count, &bytes[range]))
+        .collect();
+    Ok(InterleavedStream { symbol_count, lanes })
 }
 
 /// Decode an interleaved stream produced by [`encode_interleaved`].

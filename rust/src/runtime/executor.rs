@@ -1,14 +1,20 @@
-//! Thin PJRT wrapper over the `xla` crate.
+//! Thin PJRT wrapper over the `xla` binding.
 //!
-//! HLO *text* is the interchange format (see python/compile/hlo.py and
-//! /opt/xla-example/README.md): jax ≥ 0.5 emits protos with 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids. All exported computations return tuples
-//! (`return_tuple=True`), so execution uniformly unwraps a tuple.
+//! HLO *text* is the interchange format (see python/compile/hlo.py):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids. All
+//! exported computations return tuples (`return_tuple=True`), so
+//! execution uniformly unwraps a tuple.
+//!
+//! The offline build aliases the [`super::xla_stub`] module in place of
+//! the real `xla` crate (see that module's docs); artifact-gated callers
+//! get a clean [`Error::Runtime`] instead of a link failure.
 
 use std::path::Path;
 
 use crate::error::{Error, Result};
+
+use super::xla_stub as xla;
 
 fn xerr(context: &str) -> impl Fn(xla::Error) -> Error + '_ {
     move |e| Error::runtime(format!("{context}: {e}"))

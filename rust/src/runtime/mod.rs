@@ -14,6 +14,7 @@ pub mod executor;
 pub mod manifest;
 pub mod pool;
 pub mod split_model;
+pub mod xla_stub;
 
 pub use executor::{Engine, Executable};
 pub use manifest::{LmEntry, Manifest, SplitEntry, VisionEntry};

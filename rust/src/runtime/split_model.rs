@@ -13,6 +13,7 @@ use crate::quant::QuantParams;
 use super::executor::{lit_f32, lit_i32, lit_scalar_f32, to_f32s, to_i32s, to_scalar_f32};
 use super::manifest::{ArtifactPaths, LmEntry, Manifest, SplitEntry, VisionEntry};
 use super::pool::ExecPool;
+use super::xla_stub as xla;
 
 /// Convert head outputs `(sym i32[T], scale f32, zero f32)` into
 /// `(Vec<u16>, QuantParams)`.

@@ -1,0 +1,237 @@
+//! Engine integration tests: concurrent round-trips through one shared
+//! engine, byte-identity with the serial pipeline path, and chunked-v2
+//! corruption rejection.
+
+use std::sync::Arc;
+
+use rans_sc::engine::{ChunkedContainer, ContainerFormat, Engine, EngineConfig};
+use rans_sc::pipeline::{self, PipelineConfig, ReshapeStrategy};
+use rans_sc::quant::{quantize, QuantParams};
+use rans_sc::util::prng::Rng;
+
+fn synth_tensor(seed: u64, len: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..len)
+        .map(|_| if rng.next_f64() < 0.55 { 0.0 } else { rng.normal().abs() as f32 * 1.5 })
+        .collect()
+}
+
+/// The pre-refactor serial reference: the exact pipeline stages the old
+/// `pipeline::codec::compress_quantized` ran inline, reproduced from
+/// primitives. The engine's v1 output must match this byte-for-byte.
+fn serial_reference(symbols: &[u16], params: QuantParams, cfg: &PipelineConfig) -> Vec<u8> {
+    use rans_sc::pipeline::Container;
+    use rans_sc::rans::{encode_interleaved, FreqTable};
+    use rans_sc::sparse::ModCsr;
+    use rans_sc::util::stats;
+
+    let background = params.zero_symbol();
+    let n_rows = match cfg.reshape {
+        ReshapeStrategy::Fixed(n) => n,
+        _ => panic!("reference path expects Fixed"),
+    };
+    let k = symbols.len() / n_rows;
+    let csr = ModCsr::encode(symbols, n_rows, k, background).unwrap();
+    let d = csr.concat();
+    let alphabet = csr.concat_alphabet(params.alphabet());
+    let freqs = stats::histogram(&d, alphabet);
+    let table = if d.is_empty() {
+        FreqTable::from_symbols(&d, alphabet)
+    } else {
+        FreqTable::from_counts(&freqs).unwrap()
+    };
+    let payload = encode_interleaved(&d, &table, cfg.lanes, false).unwrap();
+    Container {
+        params,
+        orig_len: symbols.len(),
+        n_rows,
+        nnz: csr.nnz(),
+        alphabet,
+        table,
+        payload,
+    }
+    .to_bytes()
+}
+
+#[test]
+fn engine_bytes_identical_to_serial_reference() {
+    let engine = Engine::new(EngineConfig { workers: 4, ..EngineConfig::default() });
+    let data = synth_tensor(11, 12_800);
+    for q in [2u8, 3, 4, 6, 8] {
+        let params = QuantParams::fit(q, &data).unwrap();
+        let symbols = quantize(&data, &params);
+        // Pin the reshape so the reference path needs no optimizer.
+        let (_, probe) = engine
+            .compress_quantized(&symbols, params, &PipelineConfig::paper(q))
+            .unwrap();
+        for lanes in [1usize, 4, 8] {
+            let cfg = PipelineConfig {
+                q,
+                lanes,
+                parallel: true,
+                reshape: ReshapeStrategy::Fixed(probe.n_rows),
+            };
+            let (engine_bytes, _) = engine.compress_quantized(&symbols, params, &cfg).unwrap();
+            let reference = serial_reference(&symbols, params, &cfg);
+            assert_eq!(engine_bytes, reference, "q={q} lanes={lanes}");
+        }
+    }
+}
+
+#[test]
+fn pipeline_wrappers_route_through_shared_engine() {
+    // The public pipeline API must keep its exact contract: roundtrip,
+    // v1 magic, and byte-stability across repeated calls.
+    let data = synth_tensor(12, 8192);
+    let cfg = PipelineConfig::paper(4);
+    let (a, stats) = pipeline::compress(&data, &cfg).unwrap();
+    let (b, _) = pipeline::compress(&data, &cfg).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(&a[0..4], b"RSC1");
+    assert_eq!(stats.total_bytes, a.len());
+    let back = pipeline::decompress(&a, true).unwrap();
+    assert_eq!(back.len(), data.len());
+}
+
+#[test]
+fn concurrent_roundtrips_through_one_shared_engine() {
+    // Many threads compressing/decompressing *distinct* tensors through
+    // one engine: results must be exact and byte-identical to what the
+    // same engine produces serially (no cross-request state bleed).
+    let engine = Arc::new(Engine::new(EngineConfig { workers: 4, ..EngineConfig::default() }));
+    let n_threads = 8usize;
+    let per_thread = 6usize;
+
+    std::thread::scope(|s| {
+        for t in 0..n_threads {
+            let engine = Arc::clone(&engine);
+            s.spawn(move || {
+                for i in 0..per_thread {
+                    let seed = (t * 1000 + i) as u64 + 1;
+                    let len = 2048 + 512 * (i % 3);
+                    let data = synth_tensor(seed, len);
+                    let q = [2u8, 4, 6][i % 3];
+                    let params = QuantParams::fit(q, &data).unwrap();
+                    let symbols = quantize(&data, &params);
+                    let par = PipelineConfig {
+                        q,
+                        lanes: 8,
+                        parallel: true,
+                        reshape: ReshapeStrategy::Optimize,
+                    };
+                    let ser = PipelineConfig { parallel: false, ..par.clone() };
+                    let (bytes_par, _) =
+                        engine.compress_quantized(&symbols, params, &par).unwrap();
+                    let (bytes_ser, _) =
+                        engine.compress_quantized(&symbols, params, &ser).unwrap();
+                    assert_eq!(
+                        bytes_par, bytes_ser,
+                        "thread {t} item {i}: pooled vs serial bytes diverged"
+                    );
+                    let (back, back_params) =
+                        engine.decompress_to_symbols(&bytes_par, true).unwrap();
+                    assert_eq!(back, symbols, "thread {t} item {i}");
+                    assert_eq!(back_params, params);
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn concurrent_v2_roundtrips() {
+    let engine = Arc::new(Engine::new(EngineConfig {
+        workers: 4,
+        format: ContainerFormat::ChunkedV2,
+        chunk_symbols: 700,
+    }));
+    std::thread::scope(|s| {
+        for t in 0..6usize {
+            let engine = Arc::clone(&engine);
+            s.spawn(move || {
+                let data = synth_tensor(100 + t as u64, 6000 + t * 128);
+                let params = QuantParams::fit(4, &data).unwrap();
+                let symbols = quantize(&data, &params);
+                let (bytes, _) = engine
+                    .compress_quantized(&symbols, params, &PipelineConfig::paper(4))
+                    .unwrap();
+                let (back, _) = engine.decompress_to_symbols(&bytes, true).unwrap();
+                assert_eq!(back, symbols, "thread {t}");
+            });
+        }
+    });
+}
+
+#[test]
+fn chunked_v2_every_byte_flip_rejected() {
+    let engine = Engine::new(EngineConfig {
+        workers: 2,
+        format: ContainerFormat::ChunkedV2,
+        chunk_symbols: 400,
+    });
+    let data = synth_tensor(21, 3000);
+    let (bytes, _) = engine.compress(&data, &PipelineConfig::paper(4)).unwrap();
+    let parsed = ChunkedContainer::from_bytes(&bytes).unwrap();
+    assert!(parsed.chunks.len() > 1, "need multiple chunks for this test");
+
+    for i in 0..bytes.len() {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0x40;
+        assert!(
+            engine.decompress_to_symbols(&bad, false).is_err(),
+            "flip at byte {i} undetected"
+        );
+    }
+}
+
+#[test]
+fn chunked_v2_truncation_rejected() {
+    let engine = Engine::new(EngineConfig {
+        workers: 2,
+        format: ContainerFormat::ChunkedV2,
+        chunk_symbols: 512,
+    });
+    let data = synth_tensor(22, 4096);
+    let (bytes, _) = engine.compress(&data, &PipelineConfig::paper(4)).unwrap();
+    for cut in [0, 3, 16, bytes.len() / 3, bytes.len() / 2, bytes.len() - 1] {
+        assert!(
+            engine.decompress_to_symbols(&bytes[..cut], true).is_err(),
+            "cut at {cut} undetected"
+        );
+    }
+}
+
+#[test]
+fn chunked_v2_partial_decode_survives_unrelated_corruption() {
+    // Streaming property: a flipped byte in the last chunk leaves every
+    // earlier chunk independently decodable and verifiable.
+    let engine = Engine::new(EngineConfig {
+        workers: 2,
+        format: ContainerFormat::ChunkedV2,
+        chunk_symbols: 300,
+    });
+    let data = synth_tensor(23, 4000);
+    let (mut bytes, _) = engine.compress(&data, &PipelineConfig::paper(4)).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xFF;
+    let parsed = ChunkedContainer::from_bytes(&bytes).unwrap();
+    let n = parsed.chunks.len();
+    assert!(n >= 2);
+    for i in 0..n - 1 {
+        parsed.decode_chunk(i).unwrap();
+    }
+    assert!(parsed.decode_chunk(n - 1).is_err());
+}
+
+#[test]
+fn edge_plan_cache_type_still_reachable_from_coordinator() {
+    // The PlanCache moved into the engine; the coordinator re-export must
+    // keep the old path working for downstream users.
+    let cache = rans_sc::coordinator::edge::PlanCache::default();
+    let data = synth_tensor(31, 2048);
+    let params = QuantParams::fit(4, &data).unwrap();
+    let symbols = quantize(&data, &params);
+    let strat = cache.strategy(&symbols, &params).unwrap();
+    assert!(matches!(strat, ReshapeStrategy::Fixed(_)));
+    assert_eq!(cache.stats().1, 1);
+}

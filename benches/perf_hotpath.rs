@@ -18,7 +18,7 @@
 use rans_sc::engine::{ContainerFormat, Engine, EngineConfig};
 use rans_sc::eval::fixtures::synthetic_feature;
 use rans_sc::pipeline::{self, PipelineConfig, ReshapeStrategy};
-use rans_sc::quant::{quantize, QuantParams};
+use rans_sc::quant::{fit_and_quantize, quantize, QuantParams};
 use rans_sc::rans::{decode, decode_interleaved, encode, encode_interleaved, FreqTable};
 use rans_sc::reshape::{self, optimizer::OptimizerConfig};
 use rans_sc::sparse::ModCsr;
@@ -30,8 +30,10 @@ fn mbps(bytes: usize, ms: f64) -> f64 {
 }
 
 /// Accumulates rows for both the stdout report and the JSON artifact.
+/// Rows measured over a known symbol count also carry their throughput
+/// in Msym/s — the unit the perf trajectory is tracked in.
 struct Report {
-    rows: Vec<(String, Measurement)>,
+    rows: Vec<(String, Measurement, Option<f64>)>,
 }
 
 impl Report {
@@ -40,20 +42,37 @@ impl Report {
     }
 
     fn add(&mut self, name: &str, m: Measurement) -> &Measurement {
-        self.rows.push((name.to_string(), m));
+        self.rows.push((name.to_string(), m, None));
         &self.rows.last().unwrap().1
+    }
+
+    /// Add a row measured over `syms` symbols, recording Msym/s.
+    fn add_syms(&mut self, name: &str, m: Measurement, syms: usize) -> &Measurement {
+        let msym = syms as f64 / 1e6 / (m.mean_ms() / 1e3);
+        self.rows.push((name.to_string(), m, Some(msym)));
+        &self.rows.last().unwrap().1
+    }
+
+    fn msym_of(&self, name: &str) -> f64 {
+        self.rows
+            .iter()
+            .find_map(|(n, _, msym)| if n == name { *msym } else { None })
+            .unwrap_or(0.0)
     }
 
     fn to_json(&self, t: usize, q: u8, fast: bool, warmup: usize, trials: usize) -> Value {
         let rows: Vec<Value> = self
             .rows
             .iter()
-            .map(|(name, m)| {
-                ObjBuilder::new()
+            .map(|(name, m, msym)| {
+                let mut row = ObjBuilder::new()
                     .field("name", name.as_str())
                     .field("mean_ms", m.mean_ms())
-                    .field("std_ms", m.std_ms())
-                    .build()
+                    .field("std_ms", m.std_ms());
+                if let Some(msym) = msym {
+                    row = row.field("msym_per_s", *msym);
+                }
+                row.build()
             })
             .collect();
         ObjBuilder::new()
@@ -63,6 +82,10 @@ impl Report {
             .field("fast", fast)
             .field("warmup", warmup)
             .field("trials", trials)
+            // Headline scalar-core numbers, hoisted so the CI job
+            // summary (and humans) can read them without walking rows.
+            .field("scalar_encode_msym_s", self.msym_of("rans_encode_1lane"))
+            .field("scalar_decode_msym_s", self.msym_of("rans_decode_1lane"))
             .field("rows", rows)
             .build()
     }
@@ -87,6 +110,18 @@ fn main() {
     let m = report.add("quantize", measure(warmup, trials, || quantize(&data, &params)));
     println!(
         "quantize             {:>12}  ({:>8.1} MB/s over f32 input)",
+        m.fmt_mean_std(),
+        mbps(data.len() * 4, m.mean_ms())
+    );
+
+    // Fused fit+quantize: the float entry point's two-pass path
+    // (min/max scan + divide-free quantize).
+    let m = report.add(
+        "fit_and_quantize",
+        measure(warmup, trials, || fit_and_quantize(q, &data).unwrap()),
+    );
+    println!(
+        "fit+quantize fused   {:>12}  ({:>8.1} MB/s over f32 input)",
         m.fmt_mean_std(),
         mbps(data.len() * 4, m.mean_ms())
     );
@@ -118,16 +153,25 @@ fn main() {
     println!("freq table build     {:>12}  ({} symbols)", m.fmt_mean_std(), d.len());
 
     let table = FreqTable::from_symbols(&d, alphabet);
-    let m = report.add("rans_encode_1lane", measure(warmup, trials, || encode(&d, &table).unwrap()));
+    // Warm the lazy division-free tables outside the timed region: the
+    // steady-state serving path pays this once per frequency table, not
+    // per call, so the row measures the inner loop alone.
+    let _ = table.enc_table();
+    let m = report.add_syms(
+        "rans_encode_1lane",
+        measure(warmup, trials, || encode(&d, &table).unwrap()),
+        d.len(),
+    );
     let stream = encode(&d, &table).unwrap();
     println!(
         "rANS encode 1-lane   {:>12}  ({:>8.1} Msym/s)",
         m.fmt_mean_std(),
         d.len() as f64 / 1e6 / (m.mean_ms() / 1e3)
     );
-    let m = report.add(
+    let m = report.add_syms(
         "rans_decode_1lane",
         measure(warmup, trials, || decode(&stream, d.len(), &table).unwrap()),
+        d.len(),
     );
     println!(
         "rANS decode 1-lane   {:>12}  ({:>8.1} Msym/s)",
@@ -146,8 +190,8 @@ fn main() {
             m.fmt_mean_std(),
             md.fmt_mean_std()
         );
-        report.add(&format!("scoped_encode_{lanes}lane"), m);
-        report.add(&format!("scoped_decode_{lanes}lane"), md);
+        report.add_syms(&format!("scoped_encode_{lanes}lane"), m, d.len());
+        report.add_syms(&format!("scoped_decode_{lanes}lane"), md, d.len());
     }
 
     let cfg = PipelineConfig {

@@ -8,9 +8,11 @@ tiles over a flattened (BLOCK,) grid:
 * :func:`minmax` — two-pass grid reduction: each grid step writes a
   per-block partial (min, max) pair; the scalar combine happens in the
   surrounding jax graph (Layer 2) where XLA fuses it.
-* :func:`aiq_quantize` — elementwise `clip(round(x/s + z), 0, levels)`
+* :func:`aiq_quantize` — elementwise `clip(round(x·(1/s) + z), 0, levels)`
   over VMEM tiles; `scale`/`zero`/`levels` ride along as (1,1) scalars so
-  one lowered graph serves every bit-width Q.
+  one lowered graph serves every bit-width Q. The scale reciprocal is
+  taken once per tile so the element loop is divide-free, matching the
+  Rust `quant::quantize` hot loop.
 """
 
 from __future__ import annotations
@@ -66,10 +68,15 @@ def minmax(x):
 
 
 def _quantize_kernel(x_ref, scale_ref, zero_ref, levels_ref, o_ref):
-    s = scale_ref[0, 0]
+    # One exact IEEE divide per tile; the per-element loop is a multiply.
+    # Same arithmetic as QuantParams::inv_scale() on the Rust side
+    # (exactly equal except where XLA contracts the multiply-add into an
+    # FMA, which can differ from Rust's two-rounding form by 1 ulp
+    # before rounding — symbols may differ only at exact .5 boundaries).
+    inv = 1.0 / scale_ref[0, 0]
     z = zero_ref[0, 0]
     lv = levels_ref[0, 0]
-    v = jnp.round(x_ref[...] / s + z)
+    v = jnp.round(x_ref[...] * inv + z)
     o_ref[...] = jnp.clip(v, 0.0, lv).astype(jnp.int32)
 
 
@@ -110,7 +117,10 @@ def quantize_with_params(x, levels):
     """
     x_min, x_max = minmax(x)
     raw = (x_max - x_min) / levels
-    scale = jnp.where(raw > 0, raw, 1.0)
+    # Degenerate OR subnormal range (1/raw would overflow f32) falls
+    # back to scale = 1, mirroring QuantParams::from_min_max so the
+    # reciprocal in the quantize kernel is always finite.
+    scale = jnp.where((raw > 0) & jnp.isfinite(1.0 / raw), raw, 1.0)
     zero = jnp.clip(jnp.round(-x_min / scale), 0.0, levels)
     sym = aiq_quantize(x, scale, zero, levels)
     return sym, scale, zero

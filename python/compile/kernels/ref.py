@@ -23,14 +23,26 @@ def aiq_params_ref(x_min, x_max, levels):
     every bit-width. Degenerate ranges fall back to scale = 1.
     """
     raw = (x_max - x_min) / levels
-    scale = jnp.where(raw > 0, raw, 1.0)
+    # Subnormal ranges (1/raw overflows f32) are degenerate too, so the
+    # quantize reciprocal stays finite; matches the Rust fit path.
+    scale = jnp.where((raw > 0) & jnp.isfinite(1.0 / raw), raw, 1.0)
     zero = jnp.clip(jnp.round(-x_min / scale), 0, levels)
     return scale, zero
 
 
 def aiq_quantize_ref(x, scale, zero, levels):
-    """Quantize to integer symbols in {0..levels} (Eq. 6)."""
-    v = jnp.round(x.astype(jnp.float32) / scale + zero)
+    """Quantize to integer symbols in {0..levels} (Eq. 6).
+
+    Multiplies by the exact reciprocal of ``scale`` rather than dividing
+    per element — the same arithmetic as the Pallas kernel and the Rust
+    ``quant::quantize`` hot loop. The kernel and this oracle lower
+    identically (exact agreement); vs. Rust, XLA's FMA contraction of
+    the multiply-add can shift values at exact rounding boundaries by
+    one symbol, so cross-language checks should compare within one
+    quantization step rather than bit-for-bit.
+    """
+    inv = jnp.float32(1.0) / scale
+    v = jnp.round(x.astype(jnp.float32) * inv + zero)
     return jnp.clip(v, 0, levels).astype(jnp.int32)
 
 

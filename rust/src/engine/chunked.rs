@@ -261,7 +261,9 @@ impl ChunkedContainer {
     }
 
     /// Decode a single chunk's symbols, verifying its checksum first —
-    /// the partial/streaming entry point.
+    /// the partial/streaming entry point. Every chunk decodes through
+    /// the container's one shared [`FreqTable`], so the fused
+    /// slot-table build is paid once per container, not per chunk.
     pub fn decode_chunk(&self, index: usize) -> Result<Vec<u32>> {
         let chunk = self
             .chunks

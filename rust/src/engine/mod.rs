@@ -281,14 +281,15 @@ impl Engine {
         }
     }
 
-    /// Compress a float tensor (quantization inside).
+    /// Compress a float tensor (quantization inside): fused min/max fit
+    /// plus divide-free quantize ([`quant::fit_and_quantize`]), then the
+    /// symbol pipeline.
     pub fn compress(
         &self,
         data: &[f32],
         cfg: &PipelineConfig,
     ) -> Result<(Vec<u8>, CompressStats)> {
-        let params = QuantParams::fit(cfg.q, data)?;
-        let symbols = quant::quantize(data, &params);
+        let (params, symbols) = quant::fit_and_quantize(cfg.q, data)?;
         self.compress_quantized(&symbols, params, cfg)
     }
 

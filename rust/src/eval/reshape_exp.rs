@@ -3,7 +3,7 @@
 
 use crate::error::Result;
 use crate::pipeline::{self, PipelineConfig, ReshapeStrategy};
-use crate::quant::{quantize, QuantParams};
+use crate::quant::fit_and_quantize;
 use crate::reshape::{
     self,
     cost::LatencyTerms,
@@ -30,8 +30,7 @@ pub struct ReshapeHistRow {
 
 /// Fig. 2: evaluate explicit reshape configurations at a fixed Q.
 pub fn reshape_histogram(data: &[f32], q: u8, ns: &[usize]) -> Result<Vec<ReshapeHistRow>> {
-    let params = QuantParams::fit(q, data)?;
-    let symbols = quantize(data, &params);
+    let (params, symbols) = fit_and_quantize(q, data)?;
     let mut rows = Vec::new();
     for &n in ns {
         let k = symbols.len() / n;
@@ -72,8 +71,7 @@ pub struct LatencyRow {
 /// Fig. 3: sweep N over divisors, measuring steady-state (Fixed-N)
 /// encode and decode latency.
 pub fn latency_vs_n(data: &[f32], q: u8, trials: usize) -> Result<Vec<LatencyRow>> {
-    let params = QuantParams::fit(q, data)?;
-    let symbols = quantize(data, &params);
+    let (params, symbols) = fit_and_quantize(q, data)?;
     let t = symbols.len();
     let cfg0 = OptimizerConfig::paper(q);
     let domain = reshape::optimizer::candidate_domain(t, &cfg0);
@@ -130,8 +128,7 @@ impl CostSweep {
 pub fn cost_model_sweep(data: &[f32], qs: &[u8]) -> Result<Vec<CostSweep>> {
     let mut out = Vec::new();
     for &q in qs {
-        let params = QuantParams::fit(q, data)?;
-        let symbols = quantize(data, &params);
+        let (params, symbols) = fit_and_quantize(q, data)?;
         let ocfg = OptimizerConfig::paper(q);
         let approx = reshape::optimize(&symbols, params.zero_symbol(), &ocfg)?;
         let oracle = exhaustive_search(&symbols, params.zero_symbol(), &ocfg, true)?;

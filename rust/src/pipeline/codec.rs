@@ -96,10 +96,12 @@ pub fn compress_quantized(
     crate::engine::Engine::shared().compress_quantized(symbols, params, cfg)
 }
 
-/// Compress a float tensor (quantization inside).
+/// Compress a float tensor (quantization inside). The float input is
+/// traversed exactly twice — fused min/max fit, then the divide-free
+/// quantize pass ([`quant::fit_and_quantize`]) — before the symbol
+/// pipeline takes over.
 pub fn compress(data: &[f32], cfg: &PipelineConfig) -> Result<(Vec<u8>, CompressStats)> {
-    let params = QuantParams::fit(cfg.q, data)?;
-    let symbols = quant::quantize(data, &params);
+    let (params, symbols) = quant::fit_and_quantize(cfg.q, data)?;
     compress_quantized(&symbols, params, cfg)
 }
 

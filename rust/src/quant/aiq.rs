@@ -34,7 +34,16 @@ impl QuantParams {
         }
         let levels = ((1u32 << q) - 1) as f32;
         let raw_scale = (x_max - x_min) / levels;
-        let scale = if raw_scale > 0.0 { raw_scale } else { 1.0 };
+        // Degenerate ranges fall back to scale = 1 — including ranges so
+        // small (subnormal, < ~3e-39) that `1/scale` would overflow to
+        // infinity: such tensors are constant at f32 precision, and the
+        // fallback keeps [`QuantParams::inv_scale`] finite so the
+        // divide-free quantize loop never sees `0.0 · ∞ = NaN`.
+        let scale = if raw_scale > 0.0 && (1.0 / raw_scale).is_finite() {
+            raw_scale
+        } else {
+            1.0
+        };
         let zero = (-x_min / scale).round_ties_even() as i32;
         let zero = zero.clamp(0, (1i32 << q) - 1);
         Ok(QuantParams { q, scale, zero })
@@ -64,11 +73,22 @@ impl QuantParams {
         1usize << self.q
     }
 
+    /// Reciprocal of the scale, so quantization is a multiply instead
+    /// of a divide. Always finite: [`QuantParams::from_min_max`]
+    /// rejects non-positive scales and collapses subnormal ones to the
+    /// degenerate `scale = 1` case. `0.0 * inv_scale == 0.0` exactly,
+    /// so the zero-point identity `quantize_one(0.0) == zero_symbol()`
+    /// is preserved.
+    #[inline]
+    pub fn inv_scale(&self) -> f32 {
+        1.0 / self.scale
+    }
+
     /// Quantize one value.
     #[inline]
     pub fn quantize_one(&self, x: f32) -> u16 {
         let max_sym = (self.alphabet() - 1) as f32;
-        let v = (x / self.scale + self.zero as f32).round_ties_even();
+        let v = (x * self.inv_scale() + self.zero as f32).round_ties_even();
         v.clamp(0.0, max_sym) as u16
     }
 
@@ -88,8 +108,25 @@ impl QuantParams {
 }
 
 /// Quantize a tensor. Returns symbols in `{0, …, 2^Q − 1}`.
+///
+/// The per-element inner loop is divide-free: the scale reciprocal,
+/// zero point, and clamp bound are hoisted out of the loop once.
 pub fn quantize(data: &[f32], params: &QuantParams) -> Vec<u16> {
-    data.iter().map(|&x| params.quantize_one(x)).collect()
+    let inv = params.inv_scale();
+    let zero = params.zero as f32;
+    let max_sym = (params.alphabet() - 1) as f32;
+    data.iter()
+        .map(|&x| (x * inv + zero).round_ties_even().clamp(0.0, max_sym) as u16)
+        .collect()
+}
+
+/// Fit quantization parameters and quantize in one call: the tensor is
+/// traversed exactly twice (one fused min/max/finite scan, one
+/// divide-free quantize pass). This is the entry point the
+/// compression pipeline uses for float tensors.
+pub fn fit_and_quantize(q: u8, data: &[f32]) -> Result<(QuantParams, Vec<u16>)> {
+    let params = QuantParams::fit(q, data)?;
+    Ok((params, quantize(data, &params)))
 }
 
 /// Dequantize symbols back to f32.
@@ -187,6 +224,56 @@ mod tests {
     fn empty_tensor_ok() {
         let p = QuantParams::fit(4, &[]).unwrap();
         assert_eq!(quantize(&[], &p), Vec::<u16>::new());
+        let (p2, syms) = fit_and_quantize(4, &[]).unwrap();
+        assert_eq!(p2, p);
+        assert!(syms.is_empty());
+    }
+
+    #[test]
+    fn subnormal_range_collapses_to_degenerate_scale() {
+        // Range so small that 1/scale would overflow f32: must take the
+        // degenerate constant-tensor path, keep the reciprocal finite,
+        // and keep the zero-point identity (no 0.0 · ∞ = NaN).
+        let data = [0.0f32, 1e-40, 5e-41, 1e-39];
+        for q in [2u8, 8] {
+            let p = QuantParams::fit(q, &data).unwrap();
+            assert_eq!(p.scale, 1.0, "q={q}");
+            assert!(p.inv_scale().is_finite());
+            assert_eq!(p.quantize_one(0.0), p.zero_symbol());
+            let rec = dequantize(&quantize(&data, &p), &p);
+            for (a, b) in data.iter().zip(&rec) {
+                assert!((a - b).abs() <= p.scale, "q={q}: {a} -> {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn bulk_quantize_matches_quantize_one() {
+        // The hoisted-reciprocal bulk loop and the scalar helper must
+        // agree on every element, including boundary values.
+        let mut rng = Rng::new(12);
+        for q in [2u8, 4, 8, 12] {
+            let mut data: Vec<f32> =
+                (0..3000).map(|_| (rng.normal() as f32) * 5.0).collect();
+            data.extend_from_slice(&[0.0, -0.0, 1e-30, -1e-30]);
+            let p = QuantParams::fit(q, &data).unwrap();
+            let bulk = quantize(&data, &p);
+            for (&x, &s) in data.iter().zip(&bulk) {
+                assert_eq!(s, p.quantize_one(x), "q={q} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn fit_and_quantize_matches_two_step() {
+        let mut rng = Rng::new(13);
+        let data: Vec<f32> = (0..5000).map(|_| rng.next_f32() * 6.0 - 2.0).collect();
+        for q in [2u8, 4, 8] {
+            let (params, syms) = fit_and_quantize(q, &data).unwrap();
+            assert_eq!(params, QuantParams::fit(q, &data).unwrap());
+            assert_eq!(syms, quantize(&data, &params));
+        }
+        assert!(fit_and_quantize(4, &[1.0, f32::NAN]).is_err());
     }
 
     #[test]

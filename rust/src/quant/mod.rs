@@ -6,12 +6,16 @@
 //! ```
 //!
 //! producing symbols in `{0, …, 2^Q − 1}`. The Rust implementation
-//! mirrors the Layer-1 Pallas kernel bit-for-bit (ties-to-even rounding,
-//! saturation at the alphabet edges) so artifacts produced by either
-//! path interoperate; `python/tests/test_kernels.py` checks the Pallas
-//! kernel against the same semantics and `rust/tests` cross-check this
-//! module against values captured from the reference oracle.
+//! mirrors the Layer-1 Pallas kernel (ties-to-even rounding, saturation
+//! at the alphabet edges, multiply by the hoisted scale reciprocal) so
+//! artifacts produced by either path interoperate. Exactness caveat:
+//! XLA may contract the kernel's multiply-add into an FMA, which can
+//! move inputs sitting exactly on a rounding boundary by one symbol
+//! relative to Rust's two-rounding form — cross-language checks compare
+//! within one quantization step. `python/tests/test_kernels.py` checks
+//! the Pallas kernel against the jnp reference oracle (identical
+//! lowering, exact agreement).
 
 pub mod aiq;
 
-pub use aiq::{dequantize, quantize, QuantParams, MAX_Q, MIN_Q};
+pub use aiq::{dequantize, fit_and_quantize, quantize, QuantParams, MAX_Q, MIN_Q};

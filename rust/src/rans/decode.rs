@@ -1,4 +1,4 @@
-//! Scalar rANS decoder.
+//! Scalar rANS decoder with a fused slot table.
 //!
 //! Implements symbol recovery (Eq. 3) and the inverse state transition
 //! (Eq. 4):
@@ -10,6 +10,23 @@
 //!
 //! plus the "Decoder Side" renormalization of §2.1: whenever the state
 //! falls below `2^16`, two bytes are fetched from the stream.
+//!
+//! Two deviations from the textbook loop, both load/branch reductions
+//! with provably identical output on valid streams:
+//!
+//! * The three dependent lookups (`slot → sym`, `freq[sym]`,
+//!   `cdf[sym]`) are fused into one 8-byte
+//!   [`super::symbol::DecEntry`] load per symbol; the entry's `bias`
+//!   field pre-folds `slot − F(sym)`, so Eq. (4) becomes
+//!   `s ← freq · (s >> n) + bias`.
+//! * Renormalization is a single branch, not a loop. With a 32-bit
+//!   state, 16-bit refills, and `SCALE_BITS = 12`: a valid stream keeps
+//!   `s ≥ 2^16` at the top of each iteration, so
+//!   `freq · (s >> 12) + bias ≥ 1·2^4 > 0`, and one refill lifts any
+//!   state `≥ 1` back to `≥ 2^16`. A second iteration could only fire
+//!   from state 0 — unreachable from a valid header; corrupt streams
+//!   that reach it fail the final state/position checks (and the
+//!   container CRC upstream) exactly as before.
 
 use crate::error::{Error, Result};
 
@@ -31,17 +48,16 @@ pub fn decode(bytes: &[u8], count: usize, table: &FreqTable) -> Result<Vec<u32>>
     // up-front reservation and let the vec grow organically so a forged
     // count fails in the decode loop instead of aborting the allocator.
     let mut out = Vec::with_capacity(count.min(1 << 20));
+    let dec = table.dec_table();
     let mask = SCALE - 1;
 
     for _ in 0..count {
-        // Eq. (3): identify the symbol from the slot.
-        let slot = state & mask;
-        let sym = table.sym_of_slot(slot);
-        let freq = table.freq_of(sym);
-        // Eq. (4): inverse transition.
-        state = freq * (state >> SCALE_BITS) + slot - table.cdf_of(sym);
-        // Renormalize.
-        while state < STATE_LOWER {
+        // Eq. (3) + Eq. (4): one fused load yields the symbol, its
+        // frequency, and the pre-folded `slot − F(sym)` bias.
+        let e = dec[(state & mask) as usize];
+        state = (e.freq as u32) * (state >> SCALE_BITS) + e.bias as u32;
+        // Renormalize (at most once — see module docs).
+        if state < STATE_LOWER {
             if pos + 2 > bytes.len() {
                 return Err(Error::corrupt("rANS stream truncated mid-renormalization"));
             }
@@ -49,7 +65,7 @@ pub fn decode(bytes: &[u8], count: usize, table: &FreqTable) -> Result<Vec<u32>>
             state = (state << 16) | lo;
             pos += 2;
         }
-        out.push(sym);
+        out.push(e.sym as u32);
     }
 
     if state != STATE_LOWER {
@@ -117,6 +133,23 @@ mod tests {
         match decode(&bytes, symbols.len(), &table) {
             Err(_) => {}
             Ok(decoded) => assert_ne!(decoded, symbols),
+        }
+    }
+
+    /// A corrupt header can start the state below `2^16` — the one
+    /// regime where the single-branch renorm and the textbook `while`
+    /// loop could behave differently. The decoder must still fail
+    /// cleanly, never panic or loop.
+    #[test]
+    fn sub_renorm_header_state_fails_cleanly() {
+        let (symbols, table) = sample_stream(5, 500, 16);
+        let mut bytes = encode(&symbols, &table).unwrap();
+        for forged in [0u32, 1, 0xFFFF] {
+            bytes[0..4].copy_from_slice(&forged.to_le_bytes());
+            match decode(&bytes, symbols.len(), &table) {
+                Err(_) => {}
+                Ok(decoded) => assert_ne!(decoded, symbols),
+            }
         }
     }
 }

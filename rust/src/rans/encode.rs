@@ -1,4 +1,4 @@
-//! Scalar rANS encoder.
+//! Scalar rANS encoder, division-free.
 //!
 //! Implements the state transition of Eq. (2):
 //!
@@ -11,16 +11,68 @@
 //! it out of range, the low 16 bits are flushed to the byte stream
 //! (the "Encoder Side" renormalization of §2.1).
 //!
+//! The division and modulo are strength-reduced to one widening
+//! multiply by a precomputed per-symbol reciprocal
+//! ([`super::symbol::EncSymbol`], built lazily by
+//! [`FreqTable::enc_table`]). The reciprocal division is *exact*, so
+//! the emitted bytes are identical to the textbook div/mod encoder —
+//! `rust/tests/golden_vectors.rs` pins this byte-for-byte against
+//! committed golden vectors and an in-test reference implementation.
+//!
+//! Renormalization is a single branch, not a loop: one 16-bit flush
+//! leaves `state < 2^16 ≤ x_max` (since `x_max = 2^20·freq ≥ 2^20`),
+//! so a second iteration can never fire.
+//!
 //! Symbols are consumed in *reverse* order and the emitted bytes are
 //! reversed at the end, so the decoder walks both the symbol stream and
 //! the byte stream forward — the standard LIFO→FIFO arrangement.
 
 use crate::error::{Error, Result};
 
-use super::freq::{FreqTable, SCALE_BITS};
+use super::freq::FreqTable;
 
 /// Lower bound of the normalized state interval (`2^16`).
 pub const STATE_LOWER: u32 = 1 << 16;
+
+/// The shared encoder core: runs the full state recurrence and hands
+/// every 16-bit renormalization flush to `flush(hi, lo)`. [`encode`]
+/// materializes the stream; [`encoded_len`] only counts — one
+/// definition, so the two can never drift.
+///
+/// Returns the final state.
+#[inline(always)]
+fn encode_core(
+    symbols: &[u32],
+    table: &FreqTable,
+    mut flush: impl FnMut(u8, u8),
+) -> Result<u32> {
+    let m = table.alphabet() as u32;
+    let enc = table.enc_table();
+    let mut state: u32 = STATE_LOWER;
+
+    for &sym in symbols.iter().rev() {
+        if sym >= m {
+            return Err(Error::codec(format!("symbol {sym} outside alphabet {m}")));
+        }
+        let e = &enc[sym as usize];
+        if e.freq == 0 {
+            return Err(Error::codec(format!("symbol {sym} has zero frequency")));
+        }
+        // Renormalize (at most once — see module docs). Push hi then lo:
+        // the final whole-stream reversal restores little-endian order
+        // within each 16-bit chunk while putting chunks in decode
+        // (reverse-encode) order.
+        if state as u64 >= e.x_max {
+            flush((state >> 8) as u8, state as u8);
+            state >>= 16;
+        }
+        // Eq. (2), division-free: q = state / freq exactly, then
+        // C(s, state) = state + F(s) + q·(SCALE − freq).
+        let q = e.quotient(state);
+        state = state + e.bias + q * e.cmpl_freq;
+    }
+    Ok(state)
+}
 
 /// Encode `symbols` under `table`, returning the bitstream.
 ///
@@ -30,35 +82,13 @@ pub const STATE_LOWER: u32 = 1 << 16;
 /// Errors if a symbol is outside the table's alphabet or has zero
 /// normalized frequency (i.e. never occurred when the table was built).
 pub fn encode(symbols: &[u32], table: &FreqTable) -> Result<Vec<u8>> {
-    let m = table.alphabet() as u32;
-    let mut state: u32 = STATE_LOWER;
     // Renormalization bytes are pushed in encode order (reverse of decode
     // order) and reversed once at the end.
     let mut rev_bytes: Vec<u8> = Vec::with_capacity(symbols.len());
-
-    for &sym in symbols.iter().rev() {
-        if sym >= m {
-            return Err(Error::codec(format!("symbol {sym} outside alphabet {m}")));
-        }
-        let freq = table.freq_of(sym);
-        if freq == 0 {
-            return Err(Error::codec(format!("symbol {sym} has zero frequency")));
-        }
-        // Renormalize: max state from which we can encode `sym` and stay
-        // below 2^32 after the transition. Computed in u64: with a
-        // full-mass symbol (freq == SCALE) the bound is exactly 2^32.
-        let x_max = (((STATE_LOWER >> SCALE_BITS) as u64) << 16) * freq as u64;
-        while state as u64 >= x_max {
-            // Push hi then lo: the final whole-stream reversal restores
-            // little-endian order within each 16-bit chunk while putting
-            // chunks in decode (reverse-encode) order.
-            rev_bytes.push(((state >> 8) & 0xFF) as u8);
-            rev_bytes.push((state & 0xFF) as u8);
-            state >>= 16;
-        }
-        // Eq. (2).
-        state = ((state / freq) << SCALE_BITS) + (state % freq) + table.cdf_of(sym);
-    }
+    let state = encode_core(symbols, table, |hi, lo| {
+        rev_bytes.push(hi);
+        rev_bytes.push(lo);
+    })?;
 
     let mut out = Vec::with_capacity(4 + rev_bytes.len());
     out.extend_from_slice(&state.to_le_bytes());
@@ -66,16 +96,21 @@ pub fn encode(symbols: &[u32], table: &FreqTable) -> Result<Vec<u8>> {
     Ok(out)
 }
 
-/// Exact encoded size in bytes without materializing the stream
-/// (used by cost-model validation tests).
+/// Exact encoded size in bytes without materializing the stream: runs
+/// the same state recurrence as [`encode`] but only counts
+/// renormalization flushes (used by cost-model validation tests and
+/// size probes on the reshape search path).
 pub fn encoded_len(symbols: &[u32], table: &FreqTable) -> Result<usize> {
-    encode(symbols, table).map(|v| v.len())
+    let mut renorm_bytes = 0usize;
+    encode_core(symbols, table, |_, _| renorm_bytes += 2)?;
+    Ok(4 + renorm_bytes)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::rans::decode::decode;
+    use crate::util::prng::Rng;
 
     #[test]
     fn empty_stream_is_header_only() {
@@ -89,6 +124,7 @@ mod tests {
     fn rejects_out_of_alphabet() {
         let table = FreqTable::from_symbols(&[0, 1, 2], 3);
         assert!(encode(&[3], &table).is_err());
+        assert!(encoded_len(&[3], &table).is_err());
     }
 
     #[test]
@@ -96,6 +132,7 @@ mod tests {
         // Symbol 2 never occurs in the training stream.
         let table = FreqTable::from_symbols(&[0, 0, 1], 3);
         assert!(encode(&[2], &table).is_err());
+        assert!(encoded_len(&[2], &table).is_err());
     }
 
     #[test]
@@ -112,5 +149,33 @@ mod tests {
         let table = FreqTable::from_symbols(&symbols, 8);
         let bytes = encode(&symbols, &table).unwrap();
         assert!(bytes.len() <= 8, "got {} bytes", bytes.len());
+    }
+
+    /// `encoded_len` must agree with `encode(...).len()` on randomized
+    /// streams across distribution shapes (the counting pass shares the
+    /// state recurrence, so any drift is a real bug).
+    #[test]
+    fn encoded_len_matches_materialized_stream() {
+        let mut rng = Rng::new(0xBEEF);
+        for (alphabet, zipf_s) in [(4usize, 1.0), (32, 1.3), (256, 2.0)] {
+            for len in [0usize, 1, 5, 997, 20_000] {
+                let symbols: Vec<u32> =
+                    (0..len).map(|_| rng.zipf(alphabet, zipf_s) as u32).collect();
+                let table = FreqTable::from_symbols(&symbols, alphabet);
+                let bytes = encode(&symbols, &table).unwrap();
+                assert_eq!(
+                    encoded_len(&symbols, &table).unwrap(),
+                    bytes.len(),
+                    "alphabet {alphabet} len {len}"
+                );
+            }
+        }
+        // Degenerate full-mass table.
+        let symbols = vec![0u32; 5000];
+        let table = FreqTable::from_symbols(&symbols, 1);
+        assert_eq!(
+            encoded_len(&symbols, &table).unwrap(),
+            encode(&symbols, &table).unwrap().len()
+        );
     }
 }

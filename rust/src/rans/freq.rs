@@ -7,8 +7,12 @@
 //! keeps a nonzero share, and the decoder can rebuild CDFs and an O(1)
 //! slot→symbol table from the serialized counts alone.
 
+use std::sync::OnceLock;
+
 use crate::error::{Error, Result};
 use crate::util::varint;
+
+use super::symbol::{DecEntry, EncSymbol};
 
 /// Precision of normalized frequencies: totals sum to `2^SCALE_BITS`.
 ///
@@ -19,15 +23,29 @@ pub const SCALE_BITS: u32 = 12;
 /// `2^SCALE_BITS`.
 pub const SCALE: u32 = 1 << SCALE_BITS;
 
-/// Normalized frequency table with CDF and decode lookup.
-#[derive(Debug, Clone, PartialEq)]
+/// Normalized frequency table with CDF and fused decode/encode lookup.
+#[derive(Debug, Clone)]
 pub struct FreqTable {
     /// Normalized frequency per symbol; sums to [`SCALE`].
     freq: Vec<u32>,
     /// Exclusive cumulative frequencies; `cdf[m] == SCALE`.
     cdf: Vec<u32>,
-    /// slot → symbol, `SCALE` entries.
-    slot_to_sym: Vec<u16>,
+    /// Fused `slot → {sym, freq, bias}` decode table, `SCALE` entries
+    /// of 8 bytes — one L1-resident load per decoded symbol.
+    dec: Vec<DecEntry>,
+    /// Division-free encoder metadata, one entry per symbol. Built on
+    /// first use and cached for the table's lifetime, so the engine's
+    /// plan cache and every interleaved/chunked path that shares a
+    /// table (via `Arc` or otherwise) pays the build cost once.
+    enc: OnceLock<Box<[EncSymbol]>>,
+}
+
+/// Tables are equal iff their normalized frequencies are equal; the
+/// CDF and the fused decode/encode tables are pure functions of `freq`.
+impl PartialEq for FreqTable {
+    fn eq(&self, other: &Self) -> bool {
+        self.freq == other.freq
+    }
 }
 
 impl FreqTable {
@@ -122,13 +140,17 @@ impl FreqTable {
         for i in 0..m {
             cdf[i + 1] = cdf[i] + freq[i];
         }
-        let mut slot_to_sym = vec![0u16; SCALE as usize];
+        let mut dec = vec![DecEntry { sym: 0, freq: 0, bias: 0 }; SCALE as usize];
         for s in 0..m {
             for slot in cdf[s]..cdf[s + 1] {
-                slot_to_sym[slot as usize] = s as u16;
+                dec[slot as usize] = DecEntry {
+                    sym: s as u16,
+                    freq: freq[s] as u16,
+                    bias: (slot - cdf[s]) as u16,
+                };
             }
         }
-        Ok(FreqTable { freq, cdf, slot_to_sym })
+        Ok(FreqTable { freq, cdf, dec, enc: OnceLock::new() })
     }
 
     /// Histogram `symbols` over `alphabet` and normalize.
@@ -167,7 +189,28 @@ impl FreqTable {
     #[inline]
     pub fn sym_of_slot(&self, slot: u32) -> u32 {
         debug_assert!(slot < SCALE);
-        self.slot_to_sym[slot as usize] as u32
+        self.dec[slot as usize].sym as u32
+    }
+
+    /// The fused `slot → {sym, freq, bias}` decode table (`SCALE`
+    /// entries). The scalar decoder indexes it directly so each symbol
+    /// costs exactly one table load.
+    #[inline]
+    pub fn dec_table(&self) -> &[DecEntry] {
+        &self.dec
+    }
+
+    /// Division-free encoder metadata, one [`EncSymbol`] per symbol.
+    /// Built lazily on first call and cached; concurrent first calls
+    /// from pooled lanes race benignly inside the `OnceLock`.
+    pub fn enc_table(&self) -> &[EncSymbol] {
+        self.enc.get_or_init(|| {
+            self.freq
+                .iter()
+                .zip(&self.cdf)
+                .map(|(&f, &c)| EncSymbol::new(f, c))
+                .collect()
+        })
     }
 
     /// All normalized frequencies.
@@ -213,11 +256,12 @@ impl FreqTable {
         Self::from_normalized(freq)
     }
 
-    /// Serialized size in bytes.
+    /// Serialized size in bytes, computed arithmetically from varint
+    /// widths — no scratch allocation (used by cost models on the
+    /// reshape search path, where it runs once per candidate `N`).
     pub fn serialized_len(&self) -> usize {
-        let mut buf = Vec::new();
-        self.serialize(&mut buf);
-        buf.len()
+        varint::len_usize(self.freq.len())
+            + self.freq.iter().map(|&f| varint::len_u64(f as u64)).sum::<usize>()
     }
 }
 
@@ -319,5 +363,66 @@ mod tests {
     fn entropy_of_uniform_table() {
         let t = FreqTable::from_counts(&vec![7u64; 16]).unwrap();
         assert!((t.entropy() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serialized_len_matches_serialize_exactly() {
+        let mut rng = Rng::new(31);
+        for _ in 0..50 {
+            let m = rng.range_u64(1, 2000) as usize;
+            let counts: Vec<u64> = (0..m).map(|_| rng.below(100_000)).collect();
+            if counts.iter().all(|&c| c == 0) {
+                continue;
+            }
+            let t = FreqTable::from_counts(&counts).unwrap();
+            let mut buf = Vec::new();
+            t.serialize(&mut buf);
+            assert_eq!(t.serialized_len(), buf.len(), "m={m}");
+        }
+        // Degenerate single-symbol table: freq == SCALE needs 2 varint
+        // bytes, alphabet length 1 needs 1.
+        let t = FreqTable::from_counts(&[9]).unwrap();
+        assert_eq!(t.serialized_len(), 1 + 2);
+    }
+
+    #[test]
+    fn fused_decode_table_matches_accessors() {
+        let mut rng = Rng::new(33);
+        let counts: Vec<u64> = (0..200).map(|_| rng.below(500)).collect();
+        let t = FreqTable::from_counts(&counts).unwrap();
+        let dec = t.dec_table();
+        assert_eq!(dec.len(), SCALE as usize);
+        for slot in 0..SCALE {
+            let e = dec[slot as usize];
+            assert_eq!(e.sym as u32, t.sym_of_slot(slot));
+            assert_eq!(e.freq as u32, t.freq_of(e.sym as u32));
+            assert_eq!(e.bias as u32, slot - t.cdf_of(e.sym as u32));
+        }
+    }
+
+    #[test]
+    fn enc_table_is_consistent_and_cached() {
+        let mut rng = Rng::new(34);
+        let counts: Vec<u64> = (0..64).map(|_| rng.below(1000)).collect();
+        let t = FreqTable::from_counts(&counts).unwrap();
+        let a = t.enc_table().as_ptr();
+        let b = t.enc_table().as_ptr();
+        assert_eq!(a, b, "enc table must be built once and cached");
+        for (s, e) in t.enc_table().iter().enumerate() {
+            assert_eq!(e.freq, t.freq_of(s as u32));
+            if e.freq > 0 {
+                assert_eq!(e.bias, t.cdf_of(s as u32));
+                assert_eq!(e.cmpl_freq, SCALE - e.freq);
+            }
+        }
+    }
+
+    #[test]
+    fn clone_and_eq_ignore_lazy_state() {
+        let t = FreqTable::from_counts(&[3, 5, 8]).unwrap();
+        let before = t.clone();
+        let _ = t.enc_table(); // populate the lazy cache on one side only
+        assert_eq!(t, before);
+        assert_eq!(t.clone(), before);
     }
 }

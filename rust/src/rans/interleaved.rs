@@ -6,7 +6,11 @@
 //! stream, whose outputs are concatenated with per-lane offsets. This
 //! module is the CPU analogue: `lanes` scalar coders over contiguous
 //! chunks, fanned out across threads. All lanes share one frequency
-//! table, exactly like the paper's single summed table for `D = v⊕c⊕r`.
+//! table, exactly like the paper's single summed table for `D = v⊕c⊕r` —
+//! and therefore also share its lazily-built division-free coding
+//! tables ([`FreqTable::enc_table`]/[`FreqTable::dec_table`]): the
+//! first lane to touch the table builds them, every other lane reuses
+//! them for free.
 //!
 //! Stream layout (after the container header, which stores the table):
 //!

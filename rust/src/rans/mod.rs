@@ -10,8 +10,17 @@
 //! * [`freq`] — empirical frequency tables, normalization to a power-of-two
 //!   total, CDFs, O(1) slot→symbol lookup, and compact serialization (the
 //!   side information transmitted with each bitstream).
-//! * [`encode`] / [`decode`] — the scalar codec. Symbols are encoded in
-//!   reverse so the decoder runs forward over the byte stream.
+//! * [`symbol`] — precomputed per-symbol coding metadata: exact
+//!   reciprocal-multiply division for the encoder ([`symbol::EncSymbol`])
+//!   and the fused `slot → {sym, freq, bias}` decode entry
+//!   ([`symbol::DecEntry`]). Built once per table, cached inside
+//!   [`FreqTable`], shared by every path that holds the table.
+//! * [`encode`] / [`decode`] — the scalar codec, division-free: no
+//!   integer `div`/`mod` on the encode path, one table load per decoded
+//!   symbol, single-branch renormalization on both sides. Symbols are
+//!   encoded in reverse so the decoder runs forward over the byte
+//!   stream. The wire format is byte-identical to the textbook div/mod
+//!   formulation (pinned by `rust/tests/golden_vectors.rs`).
 //! * [`interleaved`] — N independent lanes over one symbol stream; the
 //!   CPU analogue of the paper's GPU-parallel rANS (DietGPU-style), used
 //!   by the pipeline for sub-millisecond encode/decode.
@@ -24,11 +33,13 @@ pub mod decode;
 pub mod encode;
 pub mod freq;
 pub mod interleaved;
+pub mod symbol;
 
 pub use decode::decode;
 pub use encode::encode;
 pub use freq::FreqTable;
 pub use interleaved::{decode_interleaved, encode_interleaved, InterleavedStream};
+pub use symbol::{DecEntry, EncSymbol};
 
 #[cfg(test)]
 mod tests {
@@ -56,6 +67,67 @@ mod tests {
                 assert_eq!(back, symbols, "alphabet {alphabet} len {len}");
             }
         }
+    }
+
+    /// The division-free encoder must emit exactly the bytes of the
+    /// textbook div/mod formulation of Eq. (2) — the wire-format
+    /// contract the reciprocal strength-reduction promises. (The
+    /// committed golden vectors in `rust/tests/golden_vectors.rs` pin
+    /// the same property against fixed cross-language vectors.)
+    #[test]
+    fn division_free_encoder_matches_textbook_reference() {
+        fn encode_reference(symbols: &[u32], table: &FreqTable) -> Vec<u8> {
+            use crate::rans::freq::SCALE_BITS;
+            let mut state: u32 = encode::STATE_LOWER;
+            let mut rev_bytes: Vec<u8> = Vec::new();
+            for &sym in symbols.iter().rev() {
+                let f = table.freq_of(sym);
+                let x_max = (((encode::STATE_LOWER >> SCALE_BITS) as u64) << 16) * f as u64;
+                while state as u64 >= x_max {
+                    rev_bytes.push((state >> 8) as u8);
+                    rev_bytes.push(state as u8);
+                    state >>= 16;
+                }
+                state = ((state / f) << SCALE_BITS) + (state % f) + table.cdf_of(sym);
+            }
+            let mut out = Vec::with_capacity(4 + rev_bytes.len());
+            out.extend_from_slice(&state.to_le_bytes());
+            out.extend(rev_bytes.iter().rev());
+            out
+        }
+
+        let mut rng = Rng::new(0x5EED);
+        for (alphabet, s) in [(2usize, 0.5), (40, 1.1), (300, 1.6)] {
+            for len in [1usize, 50, 20_000] {
+                let symbols: Vec<u32> =
+                    (0..len).map(|_| rng.zipf(alphabet, s) as u32).collect();
+                let table = FreqTable::from_symbols(&symbols, alphabet);
+                assert_eq!(
+                    encode(&symbols, &table).unwrap(),
+                    encode_reference(&symbols, &table),
+                    "alphabet {alphabet} len {len}"
+                );
+            }
+        }
+        // Maximal alphabet (one slot per symbol, every freq == 1).
+        let symbols: Vec<u32> =
+            (0..30_000).map(|_| rng.below(4096) as u32).collect();
+        let table = FreqTable::from_symbols(&symbols, 4096);
+        assert_eq!(
+            encode(&symbols, &table).unwrap(),
+            encode_reference(&symbols, &table)
+        );
+        // Skew hard enough that one symbol's frequency lands in
+        // (2048, 4096) — the regime where a 32-bit reciprocal would be
+        // inexact and only the 33-bit scheme stays byte-identical.
+        let symbols: Vec<u32> =
+            (0..50_000).map(|_| u32::from(rng.next_f64() < 0.03)).collect();
+        let table = FreqTable::from_symbols(&symbols, 2);
+        assert!(table.freq_of(0) > 2048 && table.freq_of(0) < 4096);
+        assert_eq!(
+            encode(&symbols, &table).unwrap(),
+            encode_reference(&symbols, &table)
+        );
     }
 
     /// Compressed size must approach the entropy bound for skewed data

@@ -1,0 +1,209 @@
+//! Precomputed per-symbol coding metadata for the division-free rANS
+//! core (ryg/rans_static style).
+//!
+//! The textbook state transition (Eq. 2) costs a hardware `div` + `mod`
+//! per encoded symbol and three dependent table loads per decoded
+//! symbol. Both are paid once per *table* instead:
+//!
+//! * [`EncSymbol`] replaces `state / freq` and `state % freq` with one
+//!   widening multiply by a fixed-point reciprocal plus a shift — an
+//!   **exact** integer division, so the emitted bytes are identical.
+//! * [`DecEntry`] fuses the decoder's `slot → symbol`, `freq`, and
+//!   `cdf` lookups into a single 8-byte entry, one load per symbol;
+//!   the full table is `SCALE` × 8 B = 32 KiB, L1-resident.
+//!
+//! # Why the reciprocal is 33 bits, not 32
+//!
+//! rans_static's 32-bit `rcp_freq = ceil(2^(31+shift) / freq)` is exact
+//! only while `x · e < 2^(31+shift)` for the reciprocal error
+//! `e = rcp·freq − 2^(31+shift) < freq`. With byte-wise renormalization
+//! (`x < 2^(31−scale_bits)·freq`) that bound always holds, but our codec
+//! renormalizes 16 bits at a time, so `x < 2^(32−SCALE_BITS)·freq` and
+//! the bound fails by one bit for `freq ∈ [2897, 4095]` (exhaustively
+//! confirmed by `rust/tests/golden/gen_golden.py`). We therefore use the
+//! (shift+33)-bit reciprocal `m = ceil(2^(32+shift) / freq)`. Its top
+//! bit is always set (`2^32 ≤ m < 2^33`), so only the low 32 bits are
+//! stored and the quotient folds into one multiply-high and one add:
+//!
+//! ```text
+//! m = 2^32 + rcp_lo
+//! q = floor(x·m / 2^(32+shift))
+//!   = (x + mulhi32(x, rcp_lo)) >> shift        // exact for all x < 2^32
+//! ```
+//!
+//! Exactness: with `e = m·freq − 2^(32+shift) ≤ freq − 1 < 2^shift`,
+//! the error term satisfies `x·e ≤ (2^32−1)(freq−1) < 2^(32+shift)`,
+//! which is the Alverson/Granlund–Montgomery sufficient condition for
+//! `q = floor(x/freq)` over the whole 32-bit state range — no special
+//! case for `freq == 1` (then `rcp_lo == 0`, `shift == 0`, `q = x`).
+
+use super::freq::{SCALE, SCALE_BITS};
+
+/// Encoder-side renormalization emits 16 bits whenever
+/// `state >= x_max = 2^(32−SCALE_BITS) · freq`; one flush always
+/// suffices because it leaves `state < 2^16 ≤ x_max`.
+const X_MAX_SHIFT: u32 = 32 - SCALE_BITS;
+
+/// Per-symbol encoder metadata: everything the state transition
+/// `C(s, x) = floor(x/f)·2^n + F(s) + (x mod f)` needs, with the
+/// division strength-reduced to a reciprocal multiply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EncSymbol {
+    /// Renormalization bound `2^(32−SCALE_BITS) · freq` (up to `2^32`,
+    /// hence 64-bit). Zero for never-seen symbols, which the encoder
+    /// rejects before touching the state.
+    pub x_max: u64,
+    /// Low 32 bits of the reciprocal `m = 2^32 + rcp_lo`
+    /// `= ceil(2^(32+rcp_shift) / freq)`.
+    pub rcp_lo: u32,
+    /// Post-multiply shift: `ceil(log2(freq))`.
+    pub rcp_shift: u32,
+    /// Additive bias `F(s)` (the symbol's exclusive CDF / start slot).
+    pub bias: u32,
+    /// `SCALE − freq`, so `C(s, x) = x + bias + q·cmpl_freq`.
+    pub cmpl_freq: u32,
+    /// Normalized frequency `f(s)` (0 for never-seen symbols).
+    pub freq: u32,
+}
+
+impl EncSymbol {
+    /// Build the metadata for a symbol with normalized frequency `freq`
+    /// and exclusive CDF `cdf`. `freq == 0` yields an inert entry the
+    /// encoder refuses to code.
+    pub fn new(freq: u32, cdf: u32) -> Self {
+        debug_assert!(freq <= SCALE && cdf + freq <= SCALE);
+        if freq == 0 {
+            return EncSymbol {
+                x_max: 0,
+                rcp_lo: 0,
+                rcp_shift: 0,
+                bias: 0,
+                cmpl_freq: 0,
+                freq: 0,
+            };
+        }
+        // ceil(log2(freq)): 0 for freq == 1, SCALE_BITS for freq == SCALE.
+        let shift = u32::BITS - (freq - 1).leading_zeros();
+        // m = ceil(2^(32+shift) / freq) ∈ [2^32, 2^33); store m − 2^32.
+        let m = ((1u64 << (32 + shift)) + freq as u64 - 1) / freq as u64;
+        debug_assert!((1u64 << 32..1u64 << 33).contains(&m));
+        EncSymbol {
+            x_max: (freq as u64) << X_MAX_SHIFT,
+            rcp_lo: (m - (1u64 << 32)) as u32,
+            rcp_shift: shift,
+            bias: cdf,
+            cmpl_freq: SCALE - freq,
+            freq,
+        }
+    }
+
+    /// Exact `state / freq` via the reciprocal (valid for any 32-bit
+    /// state; the encoder only calls it with `state < x_max`).
+    #[inline(always)]
+    pub fn quotient(&self, state: u32) -> u32 {
+        let x = state as u64;
+        ((x + ((x * self.rcp_lo as u64) >> 32)) >> self.rcp_shift) as u32
+    }
+}
+
+/// Fused decoder entry for one slot: symbol identity, its frequency,
+/// and `bias = slot − F(sym)` (the offset inside the symbol's slot
+/// range), so the inverse transition
+/// `D(x) = f·floor(x/2^n) + (x mod 2^n) − F(sym)` needs exactly one
+/// table load:
+///
+/// ```text
+/// e = table[state & (SCALE−1)]
+/// state = e.freq · (state >> SCALE_BITS) + e.bias
+/// ```
+///
+/// `align(8)` pads the three `u16`s to an 8-byte stride so entries
+/// never straddle a cache line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(align(8))]
+pub struct DecEntry {
+    /// Symbol owning this slot.
+    pub sym: u16,
+    /// Normalized frequency `f(sym)` (≤ `SCALE`, fits `u16`).
+    pub freq: u16,
+    /// `slot − F(sym)` ∈ `[0, freq)`.
+    pub bias: u16,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    /// The reciprocal must reproduce hardware division exactly for every
+    /// normalized frequency at adversarial states. The only residue
+    /// class where an off-by-one can appear is `x ≡ freq−1 (mod freq)`,
+    /// so boundaries around multiples of `freq` are probed explicitly
+    /// (gen_golden.py runs the exhaustive sweep; this is the fast CI
+    /// version).
+    #[test]
+    fn reciprocal_matches_division_for_all_freqs() {
+        let mut rng = Rng::new(0xD1CE);
+        for freq in 1..=SCALE {
+            let e = EncSymbol::new(freq, 0);
+            let hi = e.x_max.min(1u64 << 32);
+            let mut probe = |x: u64| {
+                if x < hi {
+                    let x = x as u32;
+                    assert_eq!(e.quotient(x), x / freq, "freq={freq} x={x}");
+                }
+            };
+            for k in [hi / freq as u64, hi / freq as u64 / 2, 1, 2] {
+                let base = k * freq as u64;
+                probe(base.wrapping_sub(1));
+                probe(base);
+                probe(base + 1);
+            }
+            probe(hi - 1);
+            for _ in 0..16 {
+                probe(rng.below(hi));
+            }
+        }
+    }
+
+    #[test]
+    fn transition_matches_textbook_formula() {
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let freq = 1 + rng.below(SCALE as u64 - 1) as u32;
+            let cdf = rng.below((SCALE - freq) as u64 + 1) as u32;
+            let e = EncSymbol::new(freq, cdf);
+            for _ in 0..50 {
+                // States the encoder can hold at transition time.
+                let state = rng.below(e.x_max) as u32;
+                let q = e.quotient(state);
+                let fast = state + e.bias + q * e.cmpl_freq;
+                let exact = ((state / freq) << SCALE_BITS) + (state % freq) + cdf;
+                assert_eq!(fast, exact, "freq={freq} cdf={cdf} state={state}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_freq_entry_is_inert() {
+        let e = EncSymbol::new(0, 0);
+        assert_eq!(e.x_max, 0);
+        assert_eq!(e.freq, 0);
+    }
+
+    #[test]
+    fn full_mass_symbol() {
+        // freq == SCALE: shift == SCALE_BITS, reciprocal exact power of 2.
+        let e = EncSymbol::new(SCALE, 0);
+        assert_eq!(e.rcp_lo, 0);
+        assert_eq!(e.rcp_shift, SCALE_BITS);
+        assert_eq!(e.cmpl_freq, 0);
+        assert_eq!(e.x_max, 1u64 << 32);
+        assert_eq!(e.quotient(0xFFFF_FFFF), 0xFFFF_FFFF >> SCALE_BITS);
+    }
+
+    #[test]
+    fn dec_entry_is_8_bytes() {
+        assert_eq!(std::mem::size_of::<DecEntry>(), 8);
+    }
+}

@@ -58,6 +58,23 @@ pub fn read_usize(buf: &[u8], pos: &mut usize) -> Result<usize> {
     usize::try_from(v).map_err(|_| Error::corrupt("varint exceeds usize"))
 }
 
+/// Encoded width in bytes of `value` as unsigned LEB128, without
+/// writing anything: `ceil(bit_length / 7)`, minimum 1.
+#[inline]
+pub fn len_u64(value: u64) -> usize {
+    if value == 0 {
+        1
+    } else {
+        (64 - value.leading_zeros() as usize).div_ceil(7)
+    }
+}
+
+/// Encoded width of `value` as unsigned LEB128 (usize convenience).
+#[inline]
+pub fn len_usize(value: usize) -> usize {
+    len_u64(value as u64)
+}
+
 /// ZigZag-encode a signed value then LEB128 it.
 #[inline]
 pub fn write_i64(buf: &mut Vec<u8>, value: i64) {
@@ -135,6 +152,23 @@ mod tests {
             let mut buf = Vec::new();
             write_u64(&mut buf, v);
             assert_eq!(buf.len(), 1);
+        }
+    }
+
+    #[test]
+    fn len_u64_matches_write_exactly() {
+        let mut rng = Rng::new(99);
+        let mut check = |v: u64| {
+            let mut buf = Vec::new();
+            write_u64(&mut buf, v);
+            assert_eq!(len_u64(v), buf.len(), "v={v}");
+        };
+        for v in [0u64, 1, 127, 128, 16383, 16384, (1 << 21) - 1, 1 << 21, u32::MAX as u64, u64::MAX]
+        {
+            check(v);
+        }
+        for _ in 0..2000 {
+            check(rng.next_u64() >> (rng.below(64) as u32));
         }
     }
 }

@@ -1,0 +1,415 @@
+#!/usr/bin/env python3
+"""Reference implementation + golden-vector generator for the rANS pipeline.
+
+This script is the cross-language oracle for the division-free rANS core:
+
+1. It validates the reciprocal-multiply exact-division scheme used by
+   `rust/src/rans/symbol.rs` (q = (x + mulhi32(x, rcp_lo)) >> shift with
+   m = 2^32 + rcp_lo = ceil(2^(32+shift) / freq)) against hardware
+   division for every normalized frequency 1..=4096 at adversarial
+   states.
+2. It re-implements the v1/v2 container pipeline (ModCsr, frequency
+   normalization, scalar rANS, lane framing, CRC-32) bit-for-bit and
+   emits the committed golden vectors under rust/tests/golden/ that
+   `rust/tests/golden_vectors.rs` asserts byte-identity against.
+
+Run from the repo root:  python3 rust/tests/golden/gen_golden.py
+
+Pure stdlib; deterministic; regenerating must reproduce the committed
+files exactly (the script fails loudly if its own encode/decode
+roundtrip breaks).
+"""
+
+import math
+import os
+import struct
+import sys
+import zlib
+
+SCALE_BITS = 12
+SCALE = 1 << SCALE_BITS
+STATE_LOWER = 1 << 16
+MASK32 = 0xFFFFFFFF
+
+OUT_DIR = os.path.dirname(os.path.abspath(__file__))
+
+# --------------------------------------------------------------- varint
+
+
+def write_varint(buf: bytearray, value: int) -> None:
+    assert value >= 0
+    while True:
+        byte = value & 0x7F
+        value >>= 7
+        if value == 0:
+            buf.append(byte)
+            return
+        buf.append(byte | 0x80)
+
+
+def write_zigzag(buf: bytearray, value: int) -> None:
+    write_varint(buf, ((value << 1) ^ (value >> 63)) & 0xFFFFFFFFFFFFFFFF)
+
+
+# ------------------------------------------------- frequency normalization
+
+
+def from_counts(counts):
+    """Exact replica of FreqTable::from_counts largest-remainder logic."""
+    m = len(counts)
+    total = sum(counts)
+    assert 0 < m <= SCALE and total > 0
+    freq = [0] * m
+    assigned = 0
+    remainders = []
+    for i, c in enumerate(counts):
+        if c == 0:
+            continue
+        exact = c * SCALE / total  # f64 in Rust; Python float is the same
+        floor = max(int(math.floor(exact)), 1)
+        freq[i] = floor
+        assigned += floor
+        remainders.append((exact - math.floor(exact), i))
+    if assigned < SCALE:
+        need = SCALE - assigned
+        remainders.sort(key=lambda t: (-t[0], t[1]))  # stable, like sort_by
+        idx = 0
+        while need > 0:
+            _, i = remainders[idx % len(remainders)]
+            freq[i] += 1
+            need -= 1
+            idx += 1
+    elif assigned > SCALE:
+        excess = assigned - SCALE
+        order = [i for i in range(m) if freq[i] > 1]
+        order.sort(key=lambda i: -freq[i])  # stable desc, ties by index
+        idx = 0
+        while excess > 0:
+            assert order, "cannot normalize"
+            i = order[idx % len(order)]
+            if freq[i] > 1:
+                freq[i] -= 1
+                excess -= 1
+            idx += 1
+            if idx % len(order) == 0:
+                order = [j for j in order if freq[j] > 1]
+    assert sum(freq) == SCALE
+    return freq
+
+
+def cdf_of(freq):
+    cdf = [0] * (len(freq) + 1)
+    for i, f in enumerate(freq):
+        cdf[i + 1] = cdf[i] + f
+    return cdf
+
+
+# ----------------------------------------------------------- scalar rANS
+
+
+def rans_encode_div(symbols, freq, cdf):
+    """The pre-optimization encoder: hardware div + mod per symbol."""
+    state = STATE_LOWER
+    rev = bytearray()
+    for sym in reversed(symbols):
+        f = freq[sym]
+        assert f > 0
+        x_max = ((STATE_LOWER >> SCALE_BITS) << 16) * f
+        while state >= x_max:
+            rev.append((state >> 8) & 0xFF)
+            rev.append(state & 0xFF)
+            state >>= 16
+        state = ((state // f) << SCALE_BITS) + (state % f) + cdf[sym]
+        assert state <= MASK32
+    out = bytearray(struct.pack("<I", state))
+    out.extend(reversed(rev))
+    return bytes(out)
+
+
+def enc_symbol(f, start):
+    """EncSymbol precomputation, mirroring rust/src/rans/symbol.rs."""
+    assert 1 <= f <= SCALE
+    shift = max(f - 1, 0).bit_length()  # ceil(log2(f)); 0 for f == 1
+    rcp = ((1 << (32 + shift)) + f - 1) // f  # ceil(2^(32+shift) / f)
+    assert (1 << 32) <= rcp < (1 << 33)
+    return {
+        "x_max": ((STATE_LOWER >> SCALE_BITS) << 16) * f,
+        "rcp_lo": rcp - (1 << 32),
+        "rcp_shift": shift,
+        "bias": start,
+        "cmpl_freq": SCALE - f,
+        "freq": f,
+    }
+
+
+def rans_encode_recip(symbols, freq, cdf):
+    """The division-free encoder: widening multiply + shift per symbol."""
+    table = [enc_symbol(f, c) if f > 0 else None for f, c in zip(freq, cdf)]
+    state = STATE_LOWER
+    rev = bytearray()
+    for sym in reversed(symbols):
+        e = table[sym]
+        if state >= e["x_max"]:  # single branch: at most one flush
+            rev.append((state >> 8) & 0xFF)
+            rev.append(state & 0xFF)
+            state >>= 16
+        q = ((state + ((state * e["rcp_lo"]) >> 32)) >> e["rcp_shift"]) & MASK32
+        state = state + e["bias"] + q * e["cmpl_freq"]
+        assert state <= MASK32
+    out = bytearray(struct.pack("<I", state))
+    out.extend(reversed(rev))
+    return bytes(out)
+
+
+def rans_decode(data, count, freq, cdf):
+    """Fused-table decoder (one entry per slot, single-branch renorm)."""
+    slot_sym = [0] * SCALE
+    for s in range(len(freq)):
+        for slot in range(cdf[s], cdf[s + 1]):
+            slot_sym[slot] = s
+    state = struct.unpack("<I", data[0:4])[0]
+    pos = 4
+    out = []
+    for _ in range(count):
+        slot = state & (SCALE - 1)
+        sym = slot_sym[slot]
+        state = freq[sym] * (state >> SCALE_BITS) + slot - cdf[sym]
+        if state < STATE_LOWER:
+            assert pos + 2 <= len(data), "truncated"
+            state = (state << 16) | data[pos] | (data[pos + 1] << 8)
+            pos += 2
+        out.append(sym)
+    assert state == STATE_LOWER and pos == len(data)
+    return out
+
+
+# -------------------------------------------------- reciprocal validation
+
+
+def validate_reciprocal():
+    """q must equal x // f for every f in 1..=SCALE at adversarial x."""
+    lcg = 0x123456789ABCDEF
+    for f in range(1, SCALE + 1):
+        e = enc_symbol(f, 0)
+        xs = set()
+        x_max = e["x_max"]  # states at transition time are < x_max
+        hi = min(x_max, 1 << 32)
+        # Boundaries where off-by-one failures live: around multiples of f
+        # near the top of the state range, plus the interval edges.
+        for k in (hi // f, hi // f - 1, (hi // f) // 2, 1, 2):
+            for d in (-1, 0, 1):
+                x = k * f + d
+                if 0 <= x < hi:
+                    xs.add(x)
+        xs.add(hi - 1)
+        xs.add(STATE_LOWER)
+        for _ in range(48):
+            lcg = (lcg * 6364136223846793005 + 1442695040888963407) % (1 << 64)
+            xs.add((lcg >> 32) % hi)
+        for x in xs:
+            q = ((x + ((x * e["rcp_lo"]) >> 32)) >> e["rcp_shift"]) & MASK32
+            assert q == x // f, f"f={f} x={x}: got {q}, want {x // f}"
+    print(f"reciprocal exact-division check OK for all f in 1..={SCALE}")
+
+
+def validate_encoders():
+    """Both encoders must agree byte-for-byte; decode must roundtrip."""
+    lcg = 0xC0FFEE
+    for alphabet, n in ((2, 400), (16, 3000), (64, 5000), (256, 8000)):
+        symbols = []
+        for _ in range(n):
+            lcg = (lcg * 6364136223846793005 + 1442695040888963407) % (1 << 64)
+            # Skew: half the draws collapse to symbol 0.
+            symbols.append(
+                0 if (lcg >> 20) & 1 else (lcg >> 33) % alphabet
+            )
+        counts = [0] * alphabet
+        for s in symbols:
+            counts[s] += 1
+        freq = from_counts(counts)
+        cdf = cdf_of(freq)
+        a = rans_encode_div(symbols, freq, cdf)
+        b = rans_encode_recip(symbols, freq, cdf)
+        assert a == b, f"encoder mismatch: alphabet={alphabet} n={n}"
+        assert rans_decode(a, n, freq, cdf) == symbols
+    # Degenerate full-mass table (freq == SCALE for one symbol).
+    freq = [SCALE]
+    cdf = cdf_of(freq)
+    sym = [0] * 10000
+    a = rans_encode_div(sym, freq, cdf)
+    b = rans_encode_recip(sym, freq, cdf)
+    assert a == b and rans_decode(a, len(sym), freq, cdf) == sym
+    print("div/mod and reciprocal encoders byte-identical; roundtrips OK")
+
+
+# ----------------------------------------------------- pipeline replica
+
+
+def lane_spans(count, lanes):
+    lanes = max(lanes, 1)
+    base, extra = divmod(count, lanes)
+    spans, start = [], 0
+    for i in range(lanes):
+        ln = base + (1 if i < extra else 0)
+        spans.append((start, start + ln))
+        start += ln
+    return spans
+
+
+def assemble_stream(lanes, symbol_count, payloads):
+    out = bytearray()
+    write_varint(out, lanes)
+    write_varint(out, symbol_count)
+    for p in payloads:
+        write_varint(out, len(p))
+    for p in payloads:
+        out.extend(p)
+    return bytes(out)
+
+
+def mod_csr(symbols, n_rows, n_cols, background):
+    values, cols, row_counts = [], [], []
+    for r in range(n_rows):
+        cnt = 0
+        for c in range(n_cols):
+            s = symbols[r * n_cols + c]
+            if s != background:
+                values.append(s)
+                cols.append(c)
+                cnt += 1
+        row_counts.append(cnt)
+    return values, cols, row_counts
+
+
+def serialize_table(buf: bytearray, freq) -> None:
+    write_varint(buf, len(freq))
+    for f in freq:
+        write_varint(buf, f)
+
+
+def golden_symbols(q, t):
+    """Deterministic quantized tensor; mirrored in golden_vectors.rs."""
+    alphabet = 1 << q
+    lcg = 0xC0FFEE + q
+    out = []
+    for _ in range(t):
+        lcg = (lcg * 6364136223846793005 + 1442695040888963407) % (1 << 64)
+        if (lcg >> 29) & 7 < 5:
+            out.append(1)  # background (zero point)
+        else:
+            out.append((lcg >> 33) % alphabet)
+    return out
+
+
+def container_v1(q, scale_bytes, zero, orig_len, n_rows, nnz, alphabet, freq, payload):
+    out = bytearray(b"RSC1")
+    out.append(1)
+    out.append(q)
+    out.extend(scale_bytes)
+    write_zigzag(out, zero)
+    write_varint(out, orig_len)
+    write_varint(out, n_rows)
+    write_varint(out, nnz)
+    write_varint(out, alphabet)
+    serialize_table(out, freq)
+    write_varint(out, len(payload))
+    out.extend(payload)
+    out.extend(struct.pack("<I", zlib.crc32(bytes(out))))
+    return bytes(out)
+
+
+def container_v2(q, scale_bytes, zero, orig_len, n_rows, nnz, alphabet, freq, chunks):
+    head = bytearray(b"RSC2")
+    head.append(2)
+    head.append(q)
+    head.extend(scale_bytes)
+    write_zigzag(head, zero)
+    write_varint(head, orig_len)
+    write_varint(head, n_rows)
+    write_varint(head, nnz)
+    write_varint(head, alphabet)
+    serialize_table(head, freq)
+    write_varint(head, len(chunks))
+    for symbol_count, payload in chunks:
+        write_varint(head, symbol_count)
+        write_varint(head, len(payload))
+        head.extend(struct.pack("<I", zlib.crc32(payload)))
+    head.extend(struct.pack("<I", zlib.crc32(bytes(head))))
+    for _, payload in chunks:
+        head.extend(payload)
+    return bytes(head)
+
+
+def emit(name, data):
+    path = os.path.join(OUT_DIR, name)
+    with open(path, "w") as fh:
+        fh.write(data.hex())
+        fh.write("\n")
+    print(f"wrote {name}: {len(data)} bytes")
+
+
+def generate_goldens():
+    t, n_rows = 1536, 32
+    n_cols = t // n_rows
+    zero = 1  # background symbol == zero point
+    scale_bytes = struct.pack("<f", 0.5)
+    chunk_symbols = 257
+
+    for q in (2, 4, 8):
+        symbols = golden_symbols(q, t)
+        values, cols, row_counts = mod_csr(symbols, n_rows, n_cols, zero)
+        nnz = len(values)
+        d = values + cols + row_counts
+        alphabet = max(1 << q, n_cols, max(row_counts) + 1)
+        counts = [0] * alphabet
+        for s in d:
+            counts[s] += 1
+        freq = from_counts(counts)
+        cdf = cdf_of(freq)
+
+        for lanes in (1, 8):
+            payloads = []
+            for lo, hi in lane_spans(len(d), lanes):
+                p = rans_encode_recip(d[lo:hi], freq, cdf)
+                assert p == rans_encode_div(d[lo:hi], freq, cdf)
+                assert rans_decode(p, hi - lo, freq, cdf) == d[lo:hi]
+                payloads.append(p)
+            stream = assemble_stream(lanes, len(d), payloads)
+            emit(
+                f"v1_q{q}_lanes{lanes}.hex",
+                container_v1(q, scale_bytes, zero, t, n_rows, nnz, alphabet, freq, stream),
+            )
+
+        n_chunks = max(min((len(d) + chunk_symbols - 1) // chunk_symbols, 1 << 20), 1)
+        chunks = []
+        for lo, hi in lane_spans(len(d), n_chunks):
+            chunks.append((hi - lo, rans_encode_recip(d[lo:hi], freq, cdf)))
+        emit(
+            f"v2_q{q}.hex",
+            container_v2(q, scale_bytes, zero, t, n_rows, nnz, alphabet, freq, chunks),
+        )
+
+    # Raw single-lane scalar streams: the codec layer alone, no container.
+    for q in (2, 4, 8):
+        alphabet = 1 << q
+        symbols = golden_symbols(q, 4096)
+        counts = [0] * alphabet
+        for s in symbols:
+            counts[s] += 1
+        freq = from_counts(counts)
+        cdf = cdf_of(freq)
+        p = rans_encode_recip(symbols, freq, cdf)
+        assert p == rans_encode_div(symbols, freq, cdf)
+        assert rans_decode(p, len(symbols), freq, cdf) == symbols
+        emit(f"raw_q{q}.hex", p)
+
+
+def main():
+    validate_reciprocal()
+    validate_encoders()
+    generate_goldens()
+    print("all golden vectors written")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

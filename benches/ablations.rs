@@ -8,7 +8,7 @@
 //! Run: `cargo bench --bench ablations`
 
 use rans_sc::eval::feature_tensor;
-use rans_sc::pipeline::{self, PipelineConfig, ReshapeStrategy};
+use rans_sc::pipeline::{self, PipelineConfig, ReshapeStrategy, StreamLayout};
 use rans_sc::quant::{quantize, QuantParams};
 use rans_sc::rans::{decode_interleaved, encode_interleaved, FreqTable};
 use rans_sc::reshape::{self, optimizer::OptimizerConfig};
@@ -30,7 +30,13 @@ fn main() {
         ("optimize (Alg.1)", ReshapeStrategy::Optimize),
         ("flat (N=T)", ReshapeStrategy::Flat),
     ] {
-        let cfg = PipelineConfig { q, lanes: 8, parallel: true, reshape: strat };
+        let cfg = PipelineConfig {
+            q,
+            lanes: 8,
+            parallel: true,
+            reshape: strat,
+            layout: StreamLayout::V1,
+        };
         let (bytes, st) = pipeline::compress_quantized(&symbols, params, &cfg).expect("c");
         println!(
             "{label:<20} {:>10.1} KB  (N={}, K={}, H={:.3})",
@@ -55,6 +61,7 @@ fn main() {
             lanes: 8,
             parallel: true,
             reshape: ReshapeStrategy::Fixed(worst.n),
+            layout: StreamLayout::V1,
         };
         let (bytes, _) = pipeline::compress_quantized(&symbols, params, &cfg).expect("c");
         println!(

@@ -2,9 +2,9 @@
 //!
 //! Reports raw throughput of each pipeline stage in isolation so
 //! regressions localize: AIQ quantize, CSR encode/decode, frequency
-//! table build, rANS encode/decode (per-lane and multi-lane), container
-//! framing, the scoped-thread fan-out baseline, and the persistent
-//! engine's pooled end-to-end path.
+//! table build, rANS encode/decode (per-lane, multi-state within one
+//! lane, and multi-lane), container framing, the scoped-thread fan-out
+//! baseline, and the persistent engine's pooled end-to-end path.
 //!
 //! Run: `cargo bench --bench perf_hotpath`
 //!
@@ -17,9 +17,12 @@
 
 use rans_sc::engine::{ContainerFormat, Engine, EngineConfig};
 use rans_sc::eval::fixtures::synthetic_feature;
-use rans_sc::pipeline::{self, PipelineConfig, ReshapeStrategy};
+use rans_sc::pipeline::{self, PipelineConfig, ReshapeStrategy, StreamLayout};
 use rans_sc::quant::{fit_and_quantize, quantize, QuantParams};
-use rans_sc::rans::{decode, decode_interleaved, encode, encode_interleaved, FreqTable};
+use rans_sc::rans::{
+    decode, decode_interleaved, decode_multistate, encode, encode_interleaved,
+    encode_multistate, FreqTable,
+};
 use rans_sc::reshape::{self, optimizer::OptimizerConfig};
 use rans_sc::sparse::ModCsr;
 use rans_sc::util::json::{ObjBuilder, Value};
@@ -86,6 +89,9 @@ impl Report {
             // summary (and humans) can read them without walking rows.
             .field("scalar_encode_msym_s", self.msym_of("rans_encode_1lane"))
             .field("scalar_decode_msym_s", self.msym_of("rans_decode_1lane"))
+            // Headline ILP number: 4-state interleaved decode (v2
+            // streams). CI bench-smoke fails if this key goes missing.
+            .field("multistate_decode_msym_s", self.msym_of("rans_decode_4state"))
             .field("rows", rows)
             .build()
     }
@@ -179,6 +185,35 @@ fn main() {
         d.len() as f64 / 1e6 / (m.mean_ms() / 1e3)
     );
 
+    // Intra-lane multi-state interleaving (v2 streams): same single
+    // lane, N independent coder states round-robin over the symbols.
+    // The decode rows are the ILP payoff the scalar core can't reach.
+    for n in [2usize, 4] {
+        let m = report.add_syms(
+            &format!("rans_encode_{n}state"),
+            measure(warmup, trials, || encode_multistate(&d, &table, n).unwrap()),
+            d.len(),
+        );
+        let ms_stream = encode_multistate(&d, &table, n).unwrap();
+        println!(
+            "rANS encode {n}-state  {:>12}  ({:>8.1} Msym/s)",
+            m.fmt_mean_std(),
+            d.len() as f64 / 1e6 / (m.mean_ms() / 1e3)
+        );
+        let m = report.add_syms(
+            &format!("rans_decode_{n}state"),
+            measure(warmup, trials, || {
+                decode_multistate(&ms_stream, d.len(), &table, n).unwrap()
+            }),
+            d.len(),
+        );
+        println!(
+            "rANS decode {n}-state  {:>12}  ({:>8.1} Msym/s)",
+            m.fmt_mean_std(),
+            d.len() as f64 / 1e6 / (m.mean_ms() / 1e3)
+        );
+    }
+
     // Scoped-thread fan-out baseline: what the pre-engine hot path paid
     // per call. Compare with the pooled engine rows below.
     for lanes in [4usize, 8] {
@@ -199,6 +234,7 @@ fn main() {
         lanes: 8,
         parallel: pipeline::codec::default_parallelism(),
         reshape: ReshapeStrategy::Fixed(n),
+        layout: StreamLayout::V1,
     };
 
     // Persistent engine, steady state: pooled workers + Fixed-N plan.

@@ -26,6 +26,9 @@ pub struct AppConfig {
     pub q: u8,
     /// rANS lanes.
     pub lanes: usize,
+    /// Interleaved rANS states per lane (1 = v1 scalar streams; 2 or 4
+    /// select the v2 multi-state layout for ILP decode).
+    pub states: usize,
     /// Thread the rANS lanes.
     pub parallel: bool,
     /// Cloud listen / connect address.
@@ -47,6 +50,7 @@ impl Default for AppConfig {
             batch: 1,
             q: 4,
             lanes: 8,
+            states: 1,
             parallel: true,
             addr: "127.0.0.1:7439".into(),
             channel: ChannelParams::default(),
@@ -93,6 +97,15 @@ impl AppConfig {
                 self.q = q as u8;
             }
             "lanes" => self.lanes = val.as_usize().ok_or_else(bad)?,
+            "states" => {
+                let s = val.as_usize().ok_or_else(bad)?;
+                if !crate::rans::multistate::supported_states(s) {
+                    return Err(Error::config(format!(
+                        "states={s} unsupported (supported: 1, 2, 4)"
+                    )));
+                }
+                self.states = s;
+            }
             "parallel" => self.parallel = val.as_bool().ok_or_else(bad)?,
             "addr" => self.addr = val.as_str().ok_or_else(bad)?.into(),
             "buckets" => {
@@ -137,6 +150,7 @@ impl AppConfig {
             .field("batch", self.batch)
             .field("q", self.q as usize)
             .field("lanes", self.lanes)
+            .field("states", self.states)
             .field("parallel", self.parallel)
             .field("addr", self.addr.as_str())
             .field("buckets", self.buckets.clone())
@@ -186,6 +200,8 @@ mod tests {
         c.apply_override("model=llama_mini_s").unwrap();
         c.apply_override("parallel=false").unwrap();
         c.apply_override("buckets=[1,4,16]").unwrap();
+        c.apply_override("states=4").unwrap();
+        assert_eq!(c.states, 4);
         assert_eq!(c.q, 6);
         assert_eq!(c.channel.gamma_db, 20.0);
         assert_eq!(c.model, "llama_mini_s");
@@ -198,6 +214,7 @@ mod tests {
         let mut c = AppConfig::default();
         assert!(c.apply_override("nonsense").is_err());
         assert!(c.apply_override("q=99").is_err());
+        assert!(c.apply_override("states=3").is_err());
         assert!(c.apply_override("unknown_key=1").is_err());
         assert!(c.apply_override("sl=x").is_err());
     }

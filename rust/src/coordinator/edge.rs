@@ -14,7 +14,7 @@ use std::sync::{Arc, Mutex};
 use crate::channel::OutageChannel;
 use crate::engine::{Engine, EngineHandle};
 use crate::error::{Error, Result};
-use crate::pipeline::{CompressStats, PipelineConfig};
+use crate::pipeline::{CompressStats, PipelineConfig, StreamLayout};
 use crate::runtime::{LmSplitExec, VisionSplitExec};
 use crate::telemetry::{LatencyBreakdown, Registry};
 use crate::util::timer::Stopwatch;
@@ -39,6 +39,10 @@ pub struct EdgeConfig {
     pub lanes: usize,
     /// Thread the rANS lanes.
     pub parallel: bool,
+    /// Per-lane stream layout (v1 scalar lanes by default; see
+    /// [`StreamLayout`]). The cloud side needs no matching knob — the
+    /// stream is self-describing.
+    pub layout: StreamLayout,
 }
 
 impl EdgeConfig {
@@ -51,6 +55,7 @@ impl EdgeConfig {
             q,
             lanes: 8,
             parallel: crate::pipeline::codec::default_parallelism(),
+            layout: StreamLayout::V1,
         }
     }
 }
@@ -153,6 +158,7 @@ impl<T: Transport> EdgeNode<T> {
             lanes: self.cfg.lanes,
             parallel: self.cfg.parallel,
             reshape,
+            layout: self.cfg.layout,
         };
         let (container, stats) =
             self.engine.get().compress_quantized(&symbols, params, &pcfg)?;
@@ -286,6 +292,7 @@ impl<T: Transport> LmEdgeNode<T> {
             lanes: self.cfg.lanes,
             parallel: self.cfg.parallel,
             reshape,
+            layout: self.cfg.layout,
         };
         let (container, stats) =
             self.engine.get().compress_quantized(&symbols, params, &pcfg)?;

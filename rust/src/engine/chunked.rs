@@ -113,30 +113,15 @@ impl ChunkedContainer {
 
     /// Serialize to bytes.
     pub fn to_bytes(&self) -> Vec<u8> {
-        let mut head = Vec::with_capacity(64 + 10 * self.chunks.len());
-        head.extend_from_slice(MAGIC_V2);
-        head.push(VERSION_V2);
-        head.push(self.params.q);
-        head.extend_from_slice(&self.params.scale.to_le_bytes());
-        varint::write_i64(&mut head, self.params.zero as i64);
-        varint::write_usize(&mut head, self.orig_len);
-        varint::write_usize(&mut head, self.n_rows);
-        varint::write_usize(&mut head, self.nnz);
-        varint::write_usize(&mut head, self.alphabet);
-        self.table.serialize(&mut head);
-        varint::write_usize(&mut head, self.chunks.len());
-        for c in &self.chunks {
-            varint::write_usize(&mut head, c.symbol_count);
-            varint::write_usize(&mut head, c.payload.len());
-            head.extend_from_slice(&c.crc.to_le_bytes());
-        }
-        let header_crc = crc32::hash(&head);
-        let mut out = head;
-        out.extend_from_slice(&header_crc.to_le_bytes());
-        for c in &self.chunks {
-            out.extend_from_slice(&c.payload);
-        }
-        out
+        serialize_chunked(
+            self.params,
+            self.orig_len,
+            self.n_rows,
+            self.nnz,
+            self.alphabet,
+            &self.table,
+            &self.chunks,
+        )
     }
 
     /// Parse and structurally validate a v2 container.
@@ -272,6 +257,47 @@ impl ChunkedContainer {
         chunk.verify(index)?;
         crate::rans::decode(&chunk.payload, chunk.symbol_count, &self.table)
     }
+}
+
+/// Serialize a v2 container from borrowed parts — the single definition
+/// of the v2 wire format. [`ChunkedContainer::to_bytes`] delegates
+/// here, and the engine's pooled encode path calls it directly with the
+/// `Arc`-shared frequency table so emitting bytes never deep-copies the
+/// table (with its 32 KiB fused decode table).
+#[allow(clippy::too_many_arguments)]
+pub fn serialize_chunked(
+    params: QuantParams,
+    orig_len: usize,
+    n_rows: usize,
+    nnz: usize,
+    alphabet: usize,
+    table: &FreqTable,
+    chunks: &[Chunk],
+) -> Vec<u8> {
+    let mut head = Vec::with_capacity(64 + 10 * chunks.len());
+    head.extend_from_slice(MAGIC_V2);
+    head.push(VERSION_V2);
+    head.push(params.q);
+    head.extend_from_slice(&params.scale.to_le_bytes());
+    varint::write_i64(&mut head, params.zero as i64);
+    varint::write_usize(&mut head, orig_len);
+    varint::write_usize(&mut head, n_rows);
+    varint::write_usize(&mut head, nnz);
+    varint::write_usize(&mut head, alphabet);
+    table.serialize(&mut head);
+    varint::write_usize(&mut head, chunks.len());
+    for c in chunks {
+        varint::write_usize(&mut head, c.symbol_count);
+        varint::write_usize(&mut head, c.payload.len());
+        head.extend_from_slice(&c.crc.to_le_bytes());
+    }
+    let header_crc = crc32::hash(&head);
+    let mut out = head;
+    out.extend_from_slice(&header_crc.to_le_bytes());
+    for c in chunks {
+        out.extend_from_slice(&c.payload);
+    }
+    out
 }
 
 #[cfg(test)]

@@ -19,10 +19,16 @@
 //! Two container formats are supported. [`ContainerFormat::V1`] emits
 //! bitstreams **byte-identical** to the pre-engine serial pipeline for
 //! the same [`PipelineConfig`] (the framing is shared via
-//! [`crate::rans::interleaved::assemble_stream`], so this holds by
-//! construction). [`ContainerFormat::ChunkedV2`] adds per-chunk framing
-//! and checksums for streaming/partial decode ([`chunked`]). The decoder
-//! sniffs the magic and accepts both.
+//! [`crate::rans::interleaved::assemble_stream_with_layout`], so this
+//! holds by construction). [`ContainerFormat::ChunkedV2`] adds per-chunk
+//! framing and checksums for streaming/partial decode ([`chunked`]).
+//! The decoder sniffs the magic and accepts both.
+//!
+//! Orthogonally, [`PipelineConfig::layout`]
+//! ([`crate::rans::StreamLayout`]) selects the per-lane stream layout
+//! inside the v1 container's payload: v1 scalar lanes (default) or v2
+//! multi-state lanes (2–4 interleaved rANS states per lane for ILP
+//! decode). Decoders need no knob — the stream is self-describing.
 
 pub mod chunked;
 pub mod plan_cache;
@@ -34,10 +40,13 @@ use std::sync::{Arc, OnceLock};
 
 use crate::error::{Error, Result};
 use crate::pipeline::codec::{CompressStats, PipelineConfig, ReshapeStrategy};
-use crate::pipeline::container::Container;
+use crate::pipeline::container::{Container, ContainerRef};
 use crate::quant::{self, QuantParams};
 use crate::rans::freq::FreqTable;
-use crate::rans::interleaved::{assemble_stream, lane_spans, parse_stream_spans, MAX_LANES};
+use crate::rans::interleaved::{
+    assemble_stream_with_layout, lane_spans, parse_stream_spans, MAX_LANES,
+};
+use crate::rans::multistate::{decode_multistate, encode_multistate, supported_states};
 use crate::reshape::{self, optimizer::OptimizerConfig};
 use crate::sparse::ModCsr;
 use crate::util::stats;
@@ -211,30 +220,47 @@ impl Engine {
             FreqTable::from_counts(&freqs)?
         };
         // Arc up front so pooled lane jobs share the table without a
-        // per-request deep copy; by the time a container is assembled
-        // the jobs are done, so the unwrap below is normally free.
+        // per-request deep copy; serialization below borrows through the
+        // Arc too, so the table is never cloned on this path.
         let table = Arc::new(table);
         let nnz = csr.nnz();
+        if !supported_states(cfg.layout.states_per_lane()) {
+            return Err(Error::invalid(format!(
+                "unsupported states-per-lane {} (supported: 1, 2, 4)",
+                cfg.layout.states_per_lane()
+            )));
+        }
 
         match self.format {
             ContainerFormat::V1 => {
                 let lanes = cfg.lanes.clamp(1, MAX_LANES);
-                let (pairs, symbol_count) = self.encode_spans(d, &table, lanes, cfg.parallel)?;
+                let states = cfg.layout.states_per_lane();
+                let (pairs, symbol_count) =
+                    self.encode_spans(d, &table, lanes, states, cfg.parallel)?;
                 let payloads: Vec<Vec<u8>> = pairs.into_iter().map(|(_, p)| p).collect();
-                let payload = assemble_stream(lanes, symbol_count, &payloads);
-                let table = Arc::try_unwrap(table).unwrap_or_else(|arc| (*arc).clone());
-                let container =
-                    Container { params, orig_len: t, n_rows, nnz, alphabet, table, payload };
-                let bytes = container.to_bytes();
-                let payload_bytes = container.payload.len();
+                let payload =
+                    assemble_stream_with_layout(cfg.layout, lanes, symbol_count, &payloads);
+                // Serialize through the borrowed view: the table stays
+                // behind its `Arc` (shared with any pooled lane jobs) and
+                // is never deep-copied just to emit bytes.
+                let bytes = ContainerRef {
+                    params,
+                    orig_len: t,
+                    n_rows,
+                    nnz,
+                    alphabet,
+                    table: table.as_ref(),
+                    payload: &payload,
+                }
+                .to_bytes();
                 let stats = CompressStats {
                     n_rows,
                     n_cols: k,
                     nnz,
                     entropy,
                     total_bytes: bytes.len(),
-                    payload_bytes,
-                    side_info_bytes: bytes.len() - payload_bytes,
+                    payload_bytes: payload.len(),
+                    side_info_bytes: bytes.len() - payload.len(),
                     reshape_evaluated,
                 };
                 Ok((bytes, stats))
@@ -244,8 +270,11 @@ impl Engine {
                 // never emit a container its own decoder rejects.
                 let n_chunks =
                     d.len().div_ceil(self.chunk_symbols).clamp(1, chunked::MAX_CHUNKS);
+                // Chunked containers keep scalar per-chunk streams: the
+                // chunk header carries no state count, and chunk-level
+                // fan-out is already the format's parallelism story.
                 let (pairs, symbol_count) =
-                    self.encode_spans(d, &table, n_chunks, cfg.parallel)?;
+                    self.encode_spans(d, &table, n_chunks, 1, cfg.parallel)?;
                 debug_assert_eq!(symbol_count, 2 * nnz + n_rows);
                 // Each chunk's symbol count comes paired with its payload
                 // straight from encode_spans, so header and payload can
@@ -254,18 +283,12 @@ impl Engine {
                     .into_iter()
                     .map(|(span, payload)| Chunk::new(span.len(), payload))
                     .collect();
-                let table = Arc::try_unwrap(table).unwrap_or_else(|arc| (*arc).clone());
-                let container = ChunkedContainer {
-                    params,
-                    orig_len: t,
-                    n_rows,
-                    nnz,
-                    alphabet,
-                    table,
-                    chunks,
-                };
-                let payload_bytes = container.payload_bytes();
-                let bytes = container.to_bytes();
+                let payload_bytes: usize = chunks.iter().map(|c| c.payload.len()).sum();
+                // Borrowed-parts serialization: same no-deep-copy story
+                // as the v1 path above.
+                let bytes = chunked::serialize_chunked(
+                    params, t, n_rows, nnz, alphabet, table.as_ref(), &chunks,
+                );
                 let stats = CompressStats {
                     n_rows,
                     n_cols: k,
@@ -318,15 +341,17 @@ impl Engine {
         self.compress_quantized(symbols, params, &resolved)
     }
 
-    /// Split `d` into `n_spans` contiguous spans and rANS-encode each,
-    /// on pooled workers when `parallel` (and the pool) allow it.
-    /// Returns each span paired with its payload (so callers never
-    /// re-derive the partition) plus the total symbol count.
+    /// Split `d` into `n_spans` contiguous spans and rANS-encode each
+    /// with `states` interleaved coder states per span (1 = scalar), on
+    /// pooled workers when `parallel` (and the pool) allow it. Returns
+    /// each span paired with its payload (so callers never re-derive
+    /// the partition) plus the total symbol count.
     fn encode_spans(
         &self,
         d: Vec<u32>,
         table: &Arc<FreqTable>,
         n_spans: usize,
+        states: usize,
         parallel: bool,
     ) -> Result<(Vec<(std::ops::Range<usize>, Vec<u8>)>, usize)> {
         let symbol_count = d.len();
@@ -340,14 +365,14 @@ impl Engine {
                     let d = Arc::clone(&d);
                     let table = Arc::clone(table);
                     let span = span.clone();
-                    move || crate::rans::encode(&d[span], &table)
+                    move || encode_multistate(&d[span], &table, states)
                 })
                 .collect();
             collect_lane_results(self.pool.run_batch(jobs), "encode")?
         } else {
             spans
                 .iter()
-                .map(|span| crate::rans::encode(&d[span.clone()], table))
+                .map(|span| encode_multistate(&d[span.clone()], table, states))
                 .collect::<Result<_>>()?
         };
         Ok((spans.into_iter().zip(payloads).collect(), symbol_count))
@@ -377,35 +402,41 @@ impl Engine {
 
     fn decompress_v1(&self, bytes: &[u8], parallel: bool) -> Result<(Vec<u16>, QuantParams)> {
         let c = Container::from_bytes(bytes)?;
-        let (symbol_count, spans) = parse_stream_spans(&c.payload)?;
+        let parsed = parse_stream_spans(&c.payload)?;
         // The stream's declared symbol count must equal ℓ_D *before* any
         // decoding: a degenerate table can legally decode an arbitrary
         // number of symbols from a few bytes, so checking afterwards
         // would let a forged header burn unbounded memory/CPU first.
-        if symbol_count != c.ell_d() {
+        if parsed.symbol_count != c.ell_d() {
             return Err(Error::corrupt(format!(
-                "stream declares {symbol_count} symbols, header ℓ_D = {}",
+                "stream declares {} symbols, header ℓ_D = {}",
+                parsed.symbol_count,
                 c.ell_d()
             )));
         }
+        let states = parsed.states_per_lane;
         let shape = DecodedShape::of_v1(&c);
-        let use_pool = parallel && spans.len() > 1 && self.pool_size() > 1;
+        let use_pool = parallel && parsed.lanes.len() > 1 && self.pool_size() > 1;
         let decoded: Vec<Vec<u32>> = if use_pool {
             // Share the parsed container itself with the lane jobs —
             // no per-request copy of the payload or table.
             let c = Arc::new(c);
-            let jobs: Vec<_> = spans
+            let jobs: Vec<_> = parsed
+                .lanes
                 .into_iter()
                 .map(|(count, range)| {
                     let c = Arc::clone(&c);
-                    move || crate::rans::decode(&c.payload[range], count, &c.table)
+                    move || decode_multistate(&c.payload[range], count, &c.table, states)
                 })
                 .collect();
             collect_lane_results(self.pool.run_batch(jobs), "decode")?
         } else {
-            spans
+            parsed
+                .lanes
                 .into_iter()
-                .map(|(count, range)| crate::rans::decode(&c.payload[range], count, &c.table))
+                .map(|(count, range)| {
+                    decode_multistate(&c.payload[range], count, &c.table, states)
+                })
                 .collect::<Result<_>>()?
         };
         shape.reassemble(decoded)
@@ -523,6 +554,7 @@ fn resolve_n(symbols: &[u16], background: u16, cfg: &PipelineConfig) -> Result<(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pipeline::codec::StreamLayout;
     use crate::util::prng::Rng;
 
     fn synth(seed: u64, len: usize) -> Vec<f32> {
@@ -537,7 +569,13 @@ mod tests {
         let engine = Engine::new(EngineConfig { workers: 4, ..EngineConfig::default() });
         let data = synth(1, 16_384);
         for q in [2u8, 4, 6, 8] {
-            let par = PipelineConfig { q, lanes: 8, parallel: true, reshape: ReshapeStrategy::Optimize };
+            let par = PipelineConfig {
+                q,
+                lanes: 8,
+                parallel: true,
+                reshape: ReshapeStrategy::Optimize,
+                layout: StreamLayout::V1,
+            };
             let ser = PipelineConfig { parallel: false, ..par.clone() };
             let (b_par, s_par) = engine.compress(&data, &par).unwrap();
             let (b_ser, s_ser) = engine.compress(&data, &ser).unwrap();
@@ -590,7 +628,13 @@ mod tests {
         let engine = Engine::new(EngineConfig { workers: 1, ..EngineConfig::default() });
         assert!(!engine.parallel_by_default());
         let data = synth(4, 4096);
-        let cfg = PipelineConfig { q: 4, lanes: 8, parallel: true, reshape: ReshapeStrategy::Flat };
+        let cfg = PipelineConfig {
+            q: 4,
+            lanes: 8,
+            parallel: true,
+            reshape: ReshapeStrategy::Flat,
+            layout: StreamLayout::V1,
+        };
         let (bytes, _) = engine.compress(&data, &cfg).unwrap();
         let back = engine.decompress(&bytes, true).unwrap();
         assert_eq!(back.len(), data.len());
@@ -615,5 +659,82 @@ mod tests {
     fn empty_tensor_rejected() {
         let engine = Engine::new(EngineConfig::default());
         assert!(engine.compress(&[], &PipelineConfig::paper(4)).is_err());
+    }
+
+    #[test]
+    fn multistate_roundtrip_parallel_and_serial_identical() {
+        let engine = Engine::new(EngineConfig { workers: 4, ..EngineConfig::default() });
+        let data = synth(6, 16_384);
+        for q in [2u8, 4, 8] {
+            for states in [2usize, 4] {
+                let par = PipelineConfig {
+                    q,
+                    lanes: 8,
+                    parallel: true,
+                    reshape: ReshapeStrategy::Optimize,
+                    layout: StreamLayout::MultiState(states),
+                };
+                let ser = PipelineConfig { parallel: false, ..par.clone() };
+                let (b_par, _) = engine.compress(&data, &par).unwrap();
+                let (b_ser, _) = engine.compress(&data, &ser).unwrap();
+                assert_eq!(b_par, b_ser, "q={q} states={states}");
+                // Decoders need no layout knob: both parallel and serial
+                // paths sniff the stream marker.
+                for parallel in [true, false] {
+                    let back = engine.decompress(&b_par, parallel).unwrap();
+                    assert_eq!(back.len(), data.len());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multistate_layout_changes_payload_not_header() {
+        let engine = Engine::new(EngineConfig { workers: 2, ..EngineConfig::default() });
+        let data = synth(7, 8192);
+        let v1 = PipelineConfig::paper(4);
+        let ms = PipelineConfig::paper(4).with_states(4);
+        let (b1, s1) = engine.compress(&data, &v1).unwrap();
+        let (b2, s2) = engine.compress(&data, &ms).unwrap();
+        assert_eq!(&b1[0..4], b"RSC1");
+        assert_eq!(&b2[0..4], b"RSC1");
+        assert_ne!(b1, b2, "multi-state payload must differ from scalar");
+        // Same symbols decode from both; side info is identical.
+        assert_eq!(s1.nnz, s2.nnz);
+        let (d1, p1) = engine.decompress_to_symbols(&b1, true).unwrap();
+        let (d2, p2) = engine.decompress_to_symbols(&b2, true).unwrap();
+        assert_eq!(d1, d2);
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn chunked_v2_keeps_scalar_chunks_under_multistate_layout() {
+        // The chunked container has no per-chunk state count; the layout
+        // knob applies to the v1 container's payload only.
+        let data = synth(8, 8192);
+        let engine = Engine::new(EngineConfig {
+            workers: 2,
+            format: ContainerFormat::ChunkedV2,
+            chunk_symbols: 512,
+        });
+        let v1 = engine.compress(&data, &PipelineConfig::paper(4)).unwrap().0;
+        let ms =
+            engine.compress(&data, &PipelineConfig::paper(4).with_states(4)).unwrap().0;
+        assert_eq!(v1, ms, "chunked output must not depend on the lane layout");
+        let back = engine.decompress(&ms, true).unwrap();
+        assert_eq!(back.len(), data.len());
+    }
+
+    #[test]
+    fn unsupported_states_rejected_at_compress() {
+        let engine = Engine::new(EngineConfig::default());
+        let data = synth(9, 2048);
+        for states in [0usize, 3, 5] {
+            let cfg = PipelineConfig {
+                layout: StreamLayout::MultiState(states),
+                ..PipelineConfig::paper(4)
+            };
+            assert!(engine.compress(&data, &cfg).is_err(), "states={states}");
+        }
     }
 }

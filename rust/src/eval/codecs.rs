@@ -48,7 +48,8 @@ fn bench_codec(
 /// Run the full Table-1 comparison over one IF tensor.
 ///
 /// Rows: E-1 binary, E-2 tANS, E-3 DietGPU-like, lz77, byte-rans, then
-/// Ours at each requested Q.
+/// Ours at each requested Q (v1 scalar lanes, plus a 4-state v2-stream
+/// variant for the ILP decode column).
 pub fn codec_comparison(
     data: &[f32],
     ours_qs: &[u8],
@@ -82,6 +83,26 @@ pub fn codec_comparison(
         rows.push(CodecRow {
             name: format!("Ours (Q={q})"),
             size_bytes: bytes.len(),
+            enc,
+            dec,
+            lossless: false,
+        });
+
+        // v2 multi-state streams: same pipeline with 4 interleaved rANS
+        // states per lane (ILP decode). Size differs only by the extra
+        // per-lane state words; the decode column is the point.
+        let ms_cfg = fixed_cfg.clone().with_states(4);
+        let (ms_bytes, _) = pipeline::compress(data, &ms_cfg)?;
+        let enc = measure(warmup, trials, || {
+            pipeline::compress(data, &ms_cfg).expect("compress")
+        });
+        let dec = measure(warmup, trials, || {
+            pipeline::decompress(&ms_bytes, pipeline::codec::default_parallelism())
+                .expect("decompress")
+        });
+        rows.push(CodecRow {
+            name: format!("Ours (Q={q}, 4-state)"),
+            size_bytes: ms_bytes.len(),
             enc,
             dec,
             lossless: false,

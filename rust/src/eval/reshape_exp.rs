@@ -44,6 +44,7 @@ pub fn reshape_histogram(data: &[f32], q: u8, ns: &[usize]) -> Result<Vec<Reshap
             lanes: 8,
             parallel: pipeline::codec::default_parallelism(),
             reshape: ReshapeStrategy::Fixed(n),
+            layout: pipeline::StreamLayout::V1,
         };
         let (bytes, _) = pipeline::compress(data, &cfg)?;
         rows.push(ReshapeHistRow {
@@ -84,6 +85,7 @@ pub fn latency_vs_n(data: &[f32], q: u8, trials: usize) -> Result<Vec<LatencyRow
             lanes: 8,
             parallel: pipeline::codec::default_parallelism(),
             reshape: ReshapeStrategy::Fixed(n),
+            layout: pipeline::StreamLayout::V1,
         };
         let (bytes, _) = pipeline::compress_quantized(&symbols, params, &cfg)?;
         let enc = measure(1, trials, || {
@@ -142,6 +144,7 @@ pub fn cost_model_sweep(data: &[f32], qs: &[u8]) -> Result<Vec<CostSweep>> {
                 lanes: 8,
                 parallel: pipeline::codec::default_parallelism(),
                 reshape: ReshapeStrategy::Fixed(c.n),
+                layout: pipeline::StreamLayout::V1,
             };
             let (bytes, _) = pipeline::compress_quantized(&symbols, params, &cfg)?;
             points.push((c.n, c.predicted_bytes(), bytes.len()));
@@ -152,6 +155,7 @@ pub fn cost_model_sweep(data: &[f32], qs: &[u8]) -> Result<Vec<CostSweep>> {
                 lanes: 8,
                 parallel: pipeline::codec::default_parallelism(),
                 reshape: ReshapeStrategy::Fixed(n),
+                layout: pipeline::StreamLayout::V1,
             };
             Ok(pipeline::compress_quantized(&symbols, params, &cfg)?.0.len())
         };

@@ -97,6 +97,7 @@ pub fn accuracy_sweep(
                 lanes: 8,
                 parallel: crate::pipeline::codec::default_parallelism(),
                 reshape,
+                layout: pipeline::StreamLayout::V1,
             };
             let (container, stats) = pipeline::compress_quantized(&symbols, params, &cfg)?;
             plan.get_or_insert(stats.n_rows);

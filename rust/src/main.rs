@@ -31,6 +31,15 @@ struct Args {
     rest: Vec<String>,
 }
 
+/// The per-lane stream layout selected by the config's `states` knob.
+fn layout_of(cfg: &AppConfig) -> rans_sc::pipeline::StreamLayout {
+    if cfg.states <= 1 {
+        rans_sc::pipeline::StreamLayout::V1
+    } else {
+        rans_sc::pipeline::StreamLayout::MultiState(cfg.states)
+    }
+}
+
 fn parse_args() -> Result<Args> {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
@@ -91,6 +100,7 @@ fn cmd_infer(cfg: &AppConfig) -> Result<()> {
             q: cfg.q,
             lanes: cfg.lanes,
             parallel: cfg.parallel,
+            layout: layout_of(cfg),
         },
     );
     let (xs, ys) = set.batch(0, cfg.batch);
@@ -120,7 +130,8 @@ fn cmd_infer(cfg: &AppConfig) -> Result<()> {
 fn cmd_compress(cfg: &AppConfig) -> Result<()> {
     let (data, source) = eval::feature_tensor(&cfg.artifacts_dir, &cfg.model, cfg.sl)?;
     println!("feature source: {source:?}, {} elements", data.len());
-    let (bytes, stats) = pipeline::compress(&data, &PipelineConfig::paper(cfg.q))?;
+    let (bytes, stats) =
+        pipeline::compress(&data, &PipelineConfig::paper(cfg.q).with_states(cfg.states))?;
     println!(
         "Q={} reshape {}x{} nnz={} entropy={:.3} b/sym",
         cfg.q, stats.n_rows, stats.n_cols, stats.nnz, stats.entropy

@@ -11,6 +11,8 @@
 use crate::error::Result;
 use crate::quant::{self, QuantParams};
 
+pub use crate::rans::interleaved::StreamLayout;
+
 /// How the reshape dimension `N` is chosen.
 #[derive(Debug, Clone)]
 pub enum ReshapeStrategy {
@@ -35,6 +37,12 @@ pub struct PipelineConfig {
     pub parallel: bool,
     /// Reshape selection.
     pub reshape: ReshapeStrategy,
+    /// Per-lane stream layout: v1 scalar lanes (the compatibility
+    /// default — byte-identical to the pre-v2 wire format) or v2
+    /// multi-state lanes ([`StreamLayout::MultiState`], ILP decode).
+    /// Applies to the v1 container's interleaved payload; the chunked
+    /// v2 container keeps scalar per-chunk streams regardless.
+    pub layout: StreamLayout,
 }
 
 impl PipelineConfig {
@@ -50,7 +58,16 @@ impl PipelineConfig {
             lanes: 8,
             parallel: default_parallelism(),
             reshape: ReshapeStrategy::Optimize,
+            layout: StreamLayout::V1,
         }
+    }
+
+    /// This configuration with `states` interleaved rANS states per
+    /// lane (v2 streams; `states == 1` keeps the v1 layout).
+    pub fn with_states(self, states: usize) -> Self {
+        let layout =
+            if states <= 1 { StreamLayout::V1 } else { StreamLayout::MultiState(states) };
+        PipelineConfig { layout, ..self }
     }
 }
 
@@ -191,7 +208,13 @@ mod tests {
             ReshapeStrategy::Flat,
             ReshapeStrategy::Fixed(t / 16),
         ] {
-            let cfg = PipelineConfig { q: 4, lanes: 4, parallel: false, reshape: strat.clone() };
+            let cfg = PipelineConfig {
+                q: 4,
+                lanes: 4,
+                parallel: false,
+                reshape: strat.clone(),
+                layout: StreamLayout::V1,
+            };
             let (bytes, _) = compress(&data, &cfg).unwrap();
             let back = decompress(&bytes, false).unwrap();
             assert_eq!(back.len(), t, "{strat:?}");
@@ -224,6 +247,7 @@ mod tests {
             lanes: 2,
             parallel: false,
             reshape: ReshapeStrategy::Fixed(7),
+            layout: StreamLayout::V1,
         };
         assert!(compress(&data, &cfg).is_err());
     }
@@ -231,6 +255,40 @@ mod tests {
     #[test]
     fn empty_tensor_rejected() {
         assert!(compress(&[], &PipelineConfig::paper(4)).is_err());
+    }
+
+    /// v2 multi-state streams ride inside the same RSC1 container; the
+    /// decoder needs no hint (the stream layout is self-describing).
+    #[test]
+    fn multistate_roundtrip_symbol_exact() {
+        let data = synth_if(9, 32, 14, 14);
+        for q in [2u8, 4, 8] {
+            for states in [2usize, 4] {
+                let cfg = PipelineConfig::paper(q).with_states(states);
+                let params = QuantParams::fit(q, &data).unwrap();
+                let symbols = quant::quantize(&data, &params);
+                let (bytes, stats) = compress_quantized(&symbols, params, &cfg).unwrap();
+                assert_eq!(&bytes[0..4], b"RSC1");
+                assert_eq!(stats.total_bytes, bytes.len());
+                let (back, back_params) = decompress_to_symbols(&bytes, true).unwrap();
+                assert_eq!(back, symbols, "q={q} states={states}");
+                assert_eq!(back_params, params);
+            }
+        }
+    }
+
+    #[test]
+    fn with_states_folds_one_into_v1() {
+        assert_eq!(PipelineConfig::paper(4).with_states(1).layout, StreamLayout::V1);
+        assert_eq!(
+            PipelineConfig::paper(4).with_states(4).layout,
+            StreamLayout::MultiState(4)
+        );
+        // states == 1 must stay byte-identical to the v1 default.
+        let data = synth_if(10, 8, 8, 8);
+        let a = compress(&data, &PipelineConfig::paper(4)).unwrap().0;
+        let b = compress(&data, &PipelineConfig::paper(4).with_states(1)).unwrap().0;
+        assert_eq!(a, b);
     }
 
     #[test]

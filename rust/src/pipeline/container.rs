@@ -21,6 +21,12 @@
 //! `K = T / N` is derived, not stored. The CRC turns any bitstream
 //! corruption (including rANS streams that happen to decode) into a
 //! clean [`Error::Corrupt`] instead of silent garbage at the tail model.
+//!
+//! The payload is an interleaved rANS stream in either layout — v1
+//! scalar lanes or v2 multi-state lanes (see
+//! [`crate::rans::interleaved`]). The stream is self-describing, so the
+//! container neither stores nor cares about the layout; v1-layout
+//! containers are byte-identical to every pre-v2 release.
 
 use crate::error::{Error, Result};
 use crate::quant::QuantParams;
@@ -60,18 +66,33 @@ pub struct Container {
     pub payload: Vec<u8>,
 }
 
-impl Container {
-    /// Columns `K = T / N`.
-    pub fn n_cols(&self) -> usize {
-        if self.n_rows == 0 { 0 } else { self.orig_len / self.n_rows }
-    }
+/// Borrowed view of a v1 container, for serialization without owning
+/// the table or payload. The engine's pooled encode path holds the
+/// frequency table behind an `Arc` shared with in-flight lane jobs;
+/// serializing through this view means it never has to deep-copy the
+/// table (with its 32 KiB fused decode table) just to emit bytes.
+#[derive(Debug, Clone, Copy)]
+pub struct ContainerRef<'a> {
+    /// Quantization parameters used by the encoder.
+    pub params: QuantParams,
+    /// Original flat length `T`.
+    pub orig_len: usize,
+    /// Reshape rows `N`.
+    pub n_rows: usize,
+    /// Stored nonzeros.
+    pub nnz: usize,
+    /// Entropy-coding alphabet for `D`.
+    pub alphabet: usize,
+    /// Frequency table (side information).
+    pub table: &'a FreqTable,
+    /// Interleaved rANS payload.
+    pub payload: &'a [u8],
+}
 
-    /// Length of the concatenated stream `ℓ_D = 2·nnz + N`.
-    pub fn ell_d(&self) -> usize {
-        2 * self.nnz + self.n_rows
-    }
-
-    /// Serialize to bytes (with trailing CRC).
+impl ContainerRef<'_> {
+    /// Serialize to bytes (with trailing CRC). The single definition of
+    /// the v1 container wire format; [`Container::to_bytes`] delegates
+    /// here.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.payload.len() + 64);
         out.extend_from_slice(MAGIC);
@@ -85,10 +106,40 @@ impl Container {
         varint::write_usize(&mut out, self.alphabet);
         self.table.serialize(&mut out);
         varint::write_usize(&mut out, self.payload.len());
-        out.extend_from_slice(&self.payload);
+        out.extend_from_slice(self.payload);
         let crc = crc32::hash(&out);
         out.extend_from_slice(&crc.to_le_bytes());
         out
+    }
+}
+
+impl Container {
+    /// Columns `K = T / N`.
+    pub fn n_cols(&self) -> usize {
+        if self.n_rows == 0 { 0 } else { self.orig_len / self.n_rows }
+    }
+
+    /// Length of the concatenated stream `ℓ_D = 2·nnz + N`.
+    pub fn ell_d(&self) -> usize {
+        2 * self.nnz + self.n_rows
+    }
+
+    /// Borrowed view for serialization.
+    pub fn view(&self) -> ContainerRef<'_> {
+        ContainerRef {
+            params: self.params,
+            orig_len: self.orig_len,
+            n_rows: self.n_rows,
+            nnz: self.nnz,
+            alphabet: self.alphabet,
+            table: &self.table,
+            payload: &self.payload,
+        }
+    }
+
+    /// Serialize to bytes (with trailing CRC).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.view().to_bytes()
     }
 
     /// Parse and validate a container.

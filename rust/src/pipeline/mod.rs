@@ -20,6 +20,6 @@ pub mod container;
 
 pub use codec::{
     compress, compress_quantized, decompress, decompress_to_symbols, CompressStats,
-    PipelineConfig, ReshapeStrategy,
+    PipelineConfig, ReshapeStrategy, StreamLayout,
 };
 pub use container::Container;

@@ -12,29 +12,72 @@
 //! first lane to touch the table builds them, every other lane reuses
 //! them for free.
 //!
-//! Stream layout (after the container header, which stores the table):
+//! Two stream layouts share this framing (after the container header,
+//! which stores the table):
 //!
 //! ```text
-//! [varint lane_count] [varint symbol_count]
+//! v1 (scalar lanes — the compatibility default, byte-identical to the
+//!     pre-v2 format):
+//! [varint lane_count]                       // ≥ 1 by construction
+//! [varint symbol_count]
 //! [varint byte_len × lane_count]            // per-lane payload sizes
-//! [lane 0 payload] [lane 1 payload] ...
+//! [lane 0 payload] [lane 1 payload] ...     // scalar rANS streams
+//!
+//! v2 (multi-state lanes — gated behind the layout marker):
+//! [varint 0]                                // layout marker; a v1
+//!                                           // stream can never start
+//!                                           // with 0 (lane_count ≥ 1)
+//! [varint states_per_lane]                  // N ∈ {1, 2, 4}
+//! [varint lane_count] [varint symbol_count]
+//! [varint byte_len × lane_count]
+//! [lane 0 payload] ...                      // N-state rANS streams
+//!                                           // (see super::multistate)
 //! ```
+//!
+//! The two axes of parallelism compose: `lane_count` is the
+//! thread-level split (contiguous chunks, one coder per chunk) and
+//! `states_per_lane` is the instruction-level split *within* each lane
+//! (round-robin interleaved states, no extra metadata).
 
 use crate::error::{Error, Result};
 use crate::util::varint;
 
-use super::decode::decode;
-use super::encode::encode;
 use super::freq::FreqTable;
+use super::multistate::{decode_multistate, encode_multistate, supported_states};
 
 /// Maximum supported lanes (sanity bound for header validation).
 pub const MAX_LANES: usize = 1024;
+
+/// Which per-lane stream layout an encoder emits. The decoder never
+/// needs this: both layouts are self-describing (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StreamLayout {
+    /// v1 scalar lanes — one rANS state per lane. The compatibility
+    /// default; output is byte-identical to the pre-v2 wire format.
+    #[default]
+    V1,
+    /// v2 lanes with this many interleaved rANS states per lane
+    /// (ILP decode; supported counts: 1, 2, 4).
+    MultiState(usize),
+}
+
+impl StreamLayout {
+    /// Interleaved rANS states per lane under this layout.
+    pub fn states_per_lane(&self) -> usize {
+        match self {
+            StreamLayout::V1 => 1,
+            StreamLayout::MultiState(n) => *n,
+        }
+    }
+}
 
 /// A parsed interleaved stream header (borrowed payloads).
 #[derive(Debug)]
 pub struct InterleavedStream<'a> {
     /// Total symbol count across lanes.
     pub symbol_count: usize,
+    /// Interleaved rANS states per lane (1 for v1 streams).
+    pub states_per_lane: usize,
     /// Per-lane (symbol_count, payload) pairs.
     pub lanes: Vec<(usize, &'a [u8])>,
 }
@@ -57,16 +100,47 @@ pub fn lane_spans(count: usize, lanes: usize) -> Vec<std::ops::Range<usize>> {
     spans
 }
 
-/// Assemble per-lane payloads into the interleaved wire layout.
+/// Assemble per-lane payloads into the v1 interleaved wire layout.
 ///
-/// This is the single definition of the stream framing: the scoped-thread
-/// encoder below and the pooled encoder in [`crate::engine`] both feed
-/// their lane payloads through here, so the two paths are byte-identical
-/// by construction.
+/// This is the single definition of the v1 stream framing: the
+/// scoped-thread encoder below and the pooled encoder in
+/// [`crate::engine`] both feed their lane payloads through here, so the
+/// two paths are byte-identical by construction.
 pub fn assemble_stream(lanes: usize, symbol_count: usize, payloads: &[Vec<u8>]) -> Vec<u8> {
     debug_assert_eq!(lanes, payloads.len());
     let total: usize = payloads.iter().map(|p| p.len()).sum();
     let mut out = Vec::with_capacity(total + 4 * lanes + 16);
+    varint::write_usize(&mut out, lanes);
+    varint::write_usize(&mut out, symbol_count);
+    for p in payloads {
+        varint::write_usize(&mut out, p.len());
+    }
+    for p in payloads {
+        out.extend_from_slice(p);
+    }
+    out
+}
+
+/// Assemble per-lane payloads under `layout`: the v1 framing above, or
+/// the v2 framing (marker + state count) with multi-state lane payloads.
+/// Like [`assemble_stream`], this is the single definition both the
+/// scoped-thread and pooled encoders share.
+pub fn assemble_stream_with_layout(
+    layout: StreamLayout,
+    lanes: usize,
+    symbol_count: usize,
+    payloads: &[Vec<u8>],
+) -> Vec<u8> {
+    let states = match layout {
+        StreamLayout::V1 => return assemble_stream(lanes, symbol_count, payloads),
+        StreamLayout::MultiState(n) => n,
+    };
+    debug_assert_eq!(lanes, payloads.len());
+    debug_assert!(supported_states(states));
+    let total: usize = payloads.iter().map(|p| p.len()).sum();
+    let mut out = Vec::with_capacity(total + 4 * lanes + 18);
+    varint::write_usize(&mut out, 0); // v2 layout marker
+    varint::write_usize(&mut out, states);
     varint::write_usize(&mut out, lanes);
     varint::write_usize(&mut out, symbol_count);
     for p in payloads {
@@ -90,6 +164,24 @@ pub fn encode_interleaved(
     lanes: usize,
     parallel: bool,
 ) -> Result<Vec<u8>> {
+    encode_interleaved_with_layout(symbols, table, lanes, StreamLayout::V1, parallel)
+}
+
+/// Encode `symbols` with `lanes` coders under `layout`: scalar lanes
+/// (v1, the default elsewhere) or `N`-state interleaved lanes (v2).
+pub fn encode_interleaved_with_layout(
+    symbols: &[u32],
+    table: &FreqTable,
+    lanes: usize,
+    layout: StreamLayout,
+    parallel: bool,
+) -> Result<Vec<u8>> {
+    let states = layout.states_per_lane();
+    if !supported_states(states) {
+        return Err(Error::invalid(format!(
+            "unsupported states-per-lane {states} (supported: 1, 2, 4)"
+        )));
+    }
     let lanes = lanes.clamp(1, MAX_LANES);
     let spans = lane_spans(symbols.len(), lanes);
 
@@ -99,28 +191,53 @@ pub fn encode_interleaved(
                 .iter()
                 .map(|span| {
                     let chunk = &symbols[span.clone()];
-                    scope.spawn(move || encode(chunk, table))
+                    scope.spawn(move || encode_multistate(chunk, table, states))
                 })
                 .collect();
             handles.into_iter().map(|h| h.join().expect("lane panicked")).collect()
         })
     } else {
-        spans.iter().map(|span| encode(&symbols[span.clone()], table)).collect()
+        spans
+            .iter()
+            .map(|span| encode_multistate(&symbols[span.clone()], table, states))
+            .collect()
     };
 
     let payloads: Vec<Vec<u8>> = payloads.into_iter().collect::<Result<_>>()?;
-    Ok(assemble_stream(lanes, symbols.len(), &payloads))
+    Ok(assemble_stream_with_layout(layout, lanes, symbols.len(), &payloads))
 }
 
-/// Parse the interleaved header, returning per-lane symbol counts and
-/// byte *ranges* into `bytes` (offset-based so callers that need
-/// `'static` lane tasks — the pooled engine — can slice an `Arc`'d
-/// buffer instead of borrowing).
-pub fn parse_stream_spans(
-    bytes: &[u8],
-) -> Result<(usize, Vec<(usize, std::ops::Range<usize>)>)> {
+/// A parsed stream header with offset-based lane spans (no payload
+/// borrows), for callers that need `'static` lane tasks — the pooled
+/// engine slices an `Arc`'d buffer instead of borrowing.
+#[derive(Debug)]
+pub struct StreamSpans {
+    /// Total symbol count across lanes.
+    pub symbol_count: usize,
+    /// Interleaved rANS states per lane (1 for v1 streams).
+    pub states_per_lane: usize,
+    /// Per-lane (symbol_count, byte range) pairs.
+    pub lanes: Vec<(usize, std::ops::Range<usize>)>,
+}
+
+/// Parse an interleaved header (either layout — v2 streams are
+/// recognized by the leading zero marker), returning per-lane symbol
+/// counts and byte *ranges* into `bytes`.
+pub fn parse_stream_spans(bytes: &[u8]) -> Result<StreamSpans> {
     let mut pos = 0usize;
-    let lanes = varint::read_usize(bytes, &mut pos)?;
+    let first = varint::read_usize(bytes, &mut pos)?;
+    let (states_per_lane, lanes) = if first == 0 {
+        // v2 layout marker (a v1 stream always starts with lane_count ≥ 1).
+        let states = varint::read_usize(bytes, &mut pos)?;
+        if !supported_states(states) {
+            return Err(Error::corrupt(format!(
+                "bad states-per-lane {states} (supported: 1, 2, 4)"
+            )));
+        }
+        (states, varint::read_usize(bytes, &mut pos)?)
+    } else {
+        (1, first)
+    };
     if lanes == 0 || lanes > MAX_LANES {
         return Err(Error::corrupt(format!("bad lane count {lanes}")));
     }
@@ -144,28 +261,38 @@ pub fn parse_stream_spans(
     if pos != bytes.len() {
         return Err(Error::corrupt("trailing bytes after last lane"));
     }
-    Ok((symbol_count, out))
+    Ok(StreamSpans { symbol_count, states_per_lane, lanes: out })
 }
 
 /// Parse the interleaved header, borrowing lane payloads from `bytes`.
 pub fn parse_stream(bytes: &[u8]) -> Result<InterleavedStream<'_>> {
-    let (symbol_count, spans) = parse_stream_spans(bytes)?;
-    let lanes = spans
+    let parsed = parse_stream_spans(bytes)?;
+    let lanes = parsed
+        .lanes
         .into_iter()
         .map(|(count, range)| (count, &bytes[range]))
         .collect();
-    Ok(InterleavedStream { symbol_count, lanes })
+    Ok(InterleavedStream {
+        symbol_count: parsed.symbol_count,
+        states_per_lane: parsed.states_per_lane,
+        lanes,
+    })
 }
 
-/// Decode an interleaved stream produced by [`encode_interleaved`].
+/// Decode an interleaved stream produced by [`encode_interleaved`] or
+/// [`encode_interleaved_with_layout`] — both layouts are
+/// self-describing, so no layout argument is needed.
 pub fn decode_interleaved(bytes: &[u8], table: &FreqTable, parallel: bool) -> Result<Vec<u32>> {
     let stream = parse_stream(bytes)?;
+    let states = stream.states_per_lane;
     let decoded: Vec<Result<Vec<u32>>> = if parallel && stream.lanes.len() > 1 {
         std::thread::scope(|scope| {
             let handles: Vec<_> = stream
                 .lanes
                 .iter()
-                .map(|&(count, payload)| scope.spawn(move || decode(payload, count, table)))
+                .map(|&(count, payload)| {
+                    scope.spawn(move || decode_multistate(payload, count, table, states))
+                })
                 .collect();
             handles.into_iter().map(|h| h.join().expect("lane panicked")).collect()
         })
@@ -173,7 +300,7 @@ pub fn decode_interleaved(bytes: &[u8], table: &FreqTable, parallel: bool) -> Re
         stream
             .lanes
             .iter()
-            .map(|&(count, payload)| decode(payload, count, table))
+            .map(|&(count, payload)| decode_multistate(payload, count, table, states))
             .collect()
     };
 
@@ -263,5 +390,137 @@ mod tests {
         assert!(decode_interleaved(&garbled, &table, false).is_err());
         let truncated = &bytes[..bytes.len() - 1];
         assert!(decode_interleaved(truncated, &table, false).is_err());
+    }
+
+    #[test]
+    fn v2_roundtrip_states_by_lanes() {
+        let (symbols, table) = sample(6, 10_000, 64);
+        for states in [1usize, 2, 4] {
+            for lanes in [1usize, 2, 3, 8] {
+                for parallel in [false, true] {
+                    let bytes = encode_interleaved_with_layout(
+                        &symbols,
+                        &table,
+                        lanes,
+                        StreamLayout::MultiState(states),
+                        parallel,
+                    )
+                    .unwrap();
+                    let back = decode_interleaved(&bytes, &table, parallel).unwrap();
+                    assert_eq!(back, symbols, "states={states} lanes={lanes}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn v2_layout_is_flagged_and_v1_unchanged() {
+        let (symbols, table) = sample(7, 5000, 32);
+        // V1 layout through the layout-aware path is byte-identical to
+        // the legacy entry point.
+        let legacy = encode_interleaved(&symbols, &table, 4, false).unwrap();
+        let v1 = encode_interleaved_with_layout(
+            &symbols, &table, 4, StreamLayout::V1, false,
+        )
+        .unwrap();
+        assert_eq!(legacy, v1);
+        // A multi-state stream leads with the zero marker + state count.
+        let v2 = encode_interleaved_with_layout(
+            &symbols,
+            &table,
+            4,
+            StreamLayout::MultiState(2),
+            false,
+        )
+        .unwrap();
+        assert_eq!(&v2[0..2], &[0u8, 2]);
+        let parsed = parse_stream(&v2).unwrap();
+        assert_eq!(parsed.states_per_lane, 2);
+        assert_eq!(parse_stream(&v1).unwrap().states_per_lane, 1);
+    }
+
+    #[test]
+    fn v2_empty_and_single_symbol_streams() {
+        let table = FreqTable::from_symbols(&[], 4);
+        for states in [2usize, 4] {
+            let bytes = encode_interleaved_with_layout(
+                &[],
+                &table,
+                4,
+                StreamLayout::MultiState(states),
+                false,
+            )
+            .unwrap();
+            assert_eq!(decode_interleaved(&bytes, &table, false).unwrap(), Vec::<u32>::new());
+        }
+        let (symbols, table) = sample(8, 1, 8);
+        for states in [2usize, 4] {
+            let bytes = encode_interleaved_with_layout(
+                &symbols,
+                &table,
+                4,
+                StreamLayout::MultiState(states),
+                false,
+            )
+            .unwrap();
+            assert_eq!(decode_interleaved(&bytes, &table, false).unwrap(), symbols);
+        }
+    }
+
+    #[test]
+    fn v2_corrupt_headers_rejected() {
+        let (symbols, table) = sample(9, 400, 16);
+        let bytes = encode_interleaved_with_layout(
+            &symbols,
+            &table,
+            2,
+            StreamLayout::MultiState(4),
+            false,
+        )
+        .unwrap();
+        // Pristine stream decodes.
+        assert_eq!(decode_interleaved(&bytes, &table, false).unwrap(), symbols);
+
+        // State count 0: [marker 0][states 0] — rejected at parse.
+        let mut zero_states = bytes.clone();
+        zero_states[1] = 0;
+        assert!(decode_interleaved(&zero_states, &table, false).is_err());
+
+        // State count above MAX_STATES (and an unsupported in-range 3).
+        for bad in [3u8, crate::rans::multistate::MAX_STATES as u8 + 1, 0x7F] {
+            let mut garbled = bytes.clone();
+            garbled[1] = bad;
+            assert!(decode_interleaved(&garbled, &table, false).is_err(), "states={bad}");
+        }
+
+        // Truncated per-state payload: cutting into the final lane's
+        // state-word block must fail (header says more bytes than exist).
+        let truncated = &bytes[..bytes.len() - 3];
+        assert!(decode_interleaved(truncated, &table, false).is_err());
+
+        // A lane payload shorter than its state-word block: the
+        // per-lane decoder must reject it even when the framing parses.
+        let stream = parse_stream(&bytes).unwrap();
+        let &(count, payload) = stream.lanes.last().unwrap();
+        assert!(payload.len() >= 16, "4-state lane carries 16 state bytes");
+        assert!(
+            crate::rans::multistate::decode_multistate(&payload[..15], count, &table, 4)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn v2_unsupported_encode_states_rejected() {
+        let (symbols, table) = sample(10, 100, 8);
+        for states in [0usize, 3, 5, 64] {
+            assert!(encode_interleaved_with_layout(
+                &symbols,
+                &table,
+                2,
+                StreamLayout::MultiState(states),
+                false,
+            )
+            .is_err());
+        }
     }
 }

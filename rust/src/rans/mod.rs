@@ -23,7 +23,13 @@
 //!   formulation (pinned by `rust/tests/golden_vectors.rs`).
 //! * [`interleaved`] — N independent lanes over one symbol stream; the
 //!   CPU analogue of the paper's GPU-parallel rANS (DietGPU-style), used
-//!   by the pipeline for sub-millisecond encode/decode.
+//!   by the pipeline for sub-millisecond encode/decode. Carries the
+//!   stream-layout flag ([`interleaved::StreamLayout`]) that gates the
+//!   v2 multi-state format.
+//! * [`multistate`] — N interleaved coder states *within* one lane
+//!   (rans_static-style round-robin), breaking the decoder's serial
+//!   dependency chain so the out-of-order core overlaps 2–4 independent
+//!   multiply/refill chains (the v2 lane payload format).
 //!
 //! The state is 32-bit with 16-bit renormalization windows
 //! (`state ∈ [2^16, 2^32)`), the layout used by production rANS coders;
@@ -33,12 +39,17 @@ pub mod decode;
 pub mod encode;
 pub mod freq;
 pub mod interleaved;
+pub mod multistate;
 pub mod symbol;
 
 pub use decode::decode;
 pub use encode::encode;
 pub use freq::FreqTable;
-pub use interleaved::{decode_interleaved, encode_interleaved, InterleavedStream};
+pub use interleaved::{
+    decode_interleaved, encode_interleaved, encode_interleaved_with_layout, InterleavedStream,
+    StreamLayout,
+};
+pub use multistate::{decode_multistate, encode_multistate};
 pub use symbol::{DecEntry, EncSymbol};
 
 #[cfg(test)]

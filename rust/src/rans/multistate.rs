@@ -1,0 +1,432 @@
+//! Intra-lane multi-state interleaved rANS (v2 streams).
+//!
+//! The scalar codec ([`super::encode`]/[`super::decode`]) is
+//! division-free with a fused one-load decode table, so its remaining
+//! bottleneck is the *serial dependency chain on the single coder
+//! state*: each decoded symbol's multiply + refill must retire before
+//! the next table load can issue. This module breaks that chain the way
+//! ryg/rans_static's interleaved variants (and DietGPU across warps) do:
+//! `N` **independent** rANS states inside one lane, assigned round-robin
+//! over the symbol stream, so an out-of-order core overlaps `N`
+//! multiply/refill chains.
+//!
+//! # Stream layout (one lane payload)
+//!
+//! ```text
+//! [u32 LE state_0][u32 LE state_1] … [u32 LE state_{N−1}]
+//! [renormalization bytes, decode order]
+//! ```
+//!
+//! Exactly the scalar layout with `N` final-state words instead of one;
+//! an `N = 1` stream is **byte-identical** to a scalar stream (and is
+//! routed through the scalar codec).
+//!
+//! # Interleaving discipline (the wire contract)
+//!
+//! * Symbol `i` of the lane is coded by state `i mod N` — pure position
+//!   arithmetic, so the decoder reconstructs the schedule with no extra
+//!   metadata.
+//! * All `N` states share **one** byte stream (rans_static's
+//!   single-stream interleaving). The encoder walks symbols in reverse
+//!   (`i = count−1 … 0`), and whichever state renormalizes pushes its
+//!   16-bit flush (hi byte, then lo byte) onto one shared
+//!   last-in-first-out buffer; after all symbols, the `N` final states
+//!   are written little-endian in state order `0 … N−1`, followed by the
+//!   shared buffer reversed wholesale. The decoder reads the `N` state
+//!   words, then consumes symbols *forward* with the same `i mod N`
+//!   schedule, refilling from the stream front. Because decode steps run
+//!   in exactly the opposite order of encode steps — the same schedule,
+//!   mirrored — each refill meets precisely the bytes its encode-side
+//!   flush produced, regardless of which state flushed when. This is the
+//!   identical argument that makes the scalar LIFO→FIFO arrangement
+//!   work; the schedule just has `N` interleaved chains now.
+//! * Renormalization stays single-branch per symbol on both sides (the
+//!   scalar bounds are per-state properties and `N` states don't
+//!   interact arithmetically).
+//!
+//! The exact byte order is replicated by the independent Python oracle
+//! (`rust/tests/golden/gen_golden.py`, `rans_encode_multistate`) and
+//! pinned by committed golden vectors.
+//!
+//! # Decoder structure
+//!
+//! The hot loop handles `⌊count/N⌋` full rounds with the per-round body
+//! unrolled over a const-generic `N`: all `N` fused table loads issue
+//! first (each depends only on its own state from the previous round),
+//! then the `N` independent transitions, then the refills in symbol
+//! order (refills share the stream cursor, a short add-compare chain the
+//! core hides under the multiplies). The `count mod N` tail runs
+//! states `0 … (count mod N) − 1` one final time.
+
+use crate::error::{Error, Result};
+
+use super::decode::decode;
+use super::encode::{encode, STATE_LOWER};
+use super::freq::{FreqTable, SCALE, SCALE_BITS};
+use super::symbol::DecEntry;
+
+/// Maximum states per lane accepted by encoder and decoder. Four
+/// independent chains saturate the multiply ports of current cores;
+/// beyond that, register pressure and the shared refill cursor eat the
+/// gains (mirrors rans_static's 4-way interleave).
+pub const MAX_STATES: usize = 4;
+
+/// True iff `n` is a state count this module codes: 1, 2, or 4.
+/// (3 is representable in the header but deliberately unsupported —
+/// round-robin over a non-power-of-two adds a modulo to the hot loop
+/// for no ILP benefit over 2 or 4.)
+pub fn supported_states(n: usize) -> bool {
+    matches!(n, 1 | 2 | 4)
+}
+
+/// Encode `symbols` with `n_states` interleaved rANS states
+/// (round-robin: symbol `i` → state `i mod n_states`).
+///
+/// `n_states == 1` produces (and routes through) the scalar encoder —
+/// byte-identical output. Errors on unsupported state counts, symbols
+/// outside the table's alphabet, or zero-frequency symbols.
+pub fn encode_multistate(symbols: &[u32], table: &FreqTable, n_states: usize) -> Result<Vec<u8>> {
+    match n_states {
+        1 => encode(symbols, table),
+        2 => encode_n::<2>(symbols, table),
+        4 => encode_n::<4>(symbols, table),
+        n => Err(Error::invalid(format!(
+            "unsupported states-per-lane {n} (supported: 1, 2, 4)"
+        ))),
+    }
+}
+
+/// Decode exactly `count` symbols from an `n_states`-state stream
+/// produced by [`encode_multistate`] with the same table and count.
+///
+/// Every state is checked against the initial-state invariant after the
+/// last symbol, and the stream must be fully consumed — truncation,
+/// trailing bytes, or a forged state word all yield `Error::Corrupt`.
+pub fn decode_multistate(
+    bytes: &[u8],
+    count: usize,
+    table: &FreqTable,
+    n_states: usize,
+) -> Result<Vec<u32>> {
+    match n_states {
+        1 => decode(bytes, count, table),
+        2 => decode_n::<2>(bytes, count, table),
+        4 => decode_n::<4>(bytes, count, table),
+        n => Err(Error::corrupt(format!(
+            "unsupported states-per-lane {n} (supported: 1, 2, 4)"
+        ))),
+    }
+}
+
+fn encode_n<const N: usize>(symbols: &[u32], table: &FreqTable) -> Result<Vec<u8>> {
+    let m = table.alphabet() as u32;
+    let enc = table.enc_table();
+    let mut states = [STATE_LOWER; N];
+    // Flushes from all states merge into one reverse-order buffer.
+    let mut rev_bytes: Vec<u8> = Vec::with_capacity(symbols.len());
+
+    for (i, &sym) in symbols.iter().enumerate().rev() {
+        if sym >= m {
+            return Err(Error::codec(format!("symbol {sym} outside alphabet {m}")));
+        }
+        let e = &enc[sym as usize];
+        if e.freq == 0 {
+            return Err(Error::codec(format!("symbol {sym} has zero frequency")));
+        }
+        let s = &mut states[i % N];
+        // Renormalize (at most once — the scalar bound is per-state).
+        if *s as u64 >= e.x_max {
+            rev_bytes.push((*s >> 8) as u8);
+            rev_bytes.push(*s as u8);
+            *s >>= 16;
+        }
+        let q = e.quotient(*s);
+        *s = *s + e.bias + q * e.cmpl_freq;
+    }
+
+    let mut out = Vec::with_capacity(4 * N + rev_bytes.len());
+    for s in states {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    out.extend(rev_bytes.iter().rev());
+    Ok(out)
+}
+
+fn decode_n<const N: usize>(bytes: &[u8], count: usize, table: &FreqTable) -> Result<Vec<u32>> {
+    if bytes.len() < 4 * N {
+        return Err(Error::corrupt(format!(
+            "multi-state rANS stream shorter than {N} state words"
+        )));
+    }
+    let mut states = [0u32; N];
+    for (j, s) in states.iter_mut().enumerate() {
+        *s = u32::from_le_bytes([
+            bytes[4 * j],
+            bytes[4 * j + 1],
+            bytes[4 * j + 2],
+            bytes[4 * j + 3],
+        ]);
+    }
+    let mut pos = 4 * N;
+    // `count` comes from untrusted headers; cap the reservation like the
+    // scalar decoder so a forged count fails in the loop, not the
+    // allocator.
+    let mut out: Vec<u32> = Vec::with_capacity(count.min(1 << 20));
+    let dec = table.dec_table();
+    let mask = SCALE - 1;
+
+    let full_rounds = count / N;
+    for _ in 0..full_rounds {
+        // N independent loads, then N independent transitions: the only
+        // cross-state dependency is the refill cursor below.
+        let entries: [DecEntry; N] = std::array::from_fn(|j| dec[(states[j] & mask) as usize]);
+        for (s, e) in states.iter_mut().zip(&entries) {
+            *s = (e.freq as u32) * (*s >> SCALE_BITS) + e.bias as u32;
+        }
+        // Refills consume the shared cursor in symbol order (state 0
+        // first — the exact mirror of the encoder's schedule).
+        for (s, e) in states.iter_mut().zip(&entries) {
+            if *s < STATE_LOWER {
+                if pos + 2 > bytes.len() {
+                    return Err(Error::corrupt(
+                        "multi-state rANS stream truncated mid-renormalization",
+                    ));
+                }
+                let lo = u16::from_le_bytes([bytes[pos], bytes[pos + 1]]) as u32;
+                *s = (*s << 16) | lo;
+                pos += 2;
+            }
+            out.push(e.sym as u32);
+        }
+    }
+    // Tail round: count mod N symbols on states 0 … tail−1.
+    for s in states.iter_mut().take(count % N) {
+        let e = dec[(*s & mask) as usize];
+        *s = (e.freq as u32) * (*s >> SCALE_BITS) + e.bias as u32;
+        if *s < STATE_LOWER {
+            if pos + 2 > bytes.len() {
+                return Err(Error::corrupt(
+                    "multi-state rANS stream truncated mid-renormalization",
+                ));
+            }
+            let lo = u16::from_le_bytes([bytes[pos], bytes[pos + 1]]) as u32;
+            *s = (*s << 16) | lo;
+            pos += 2;
+        }
+        out.push(e.sym as u32);
+    }
+
+    for (j, &s) in states.iter().enumerate() {
+        if s != STATE_LOWER {
+            return Err(Error::corrupt(format!(
+                "multi-state rANS final state {j} is {s:#x}, expected {STATE_LOWER:#x}"
+            )));
+        }
+    }
+    if pos != bytes.len() {
+        return Err(Error::corrupt(format!(
+            "multi-state rANS stream has {} trailing bytes",
+            bytes.len() - pos
+        )));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn sample(seed: u64, len: usize, alphabet: usize) -> (Vec<u32>, FreqTable) {
+        let mut rng = Rng::new(seed);
+        let symbols: Vec<u32> = (0..len).map(|_| rng.zipf(alphabet, 1.2) as u32).collect();
+        let table = FreqTable::from_symbols(&symbols, alphabet);
+        (symbols, table)
+    }
+
+    #[test]
+    fn roundtrip_states_by_len_by_alphabet() {
+        for (alphabet, seed) in [(2usize, 1u64), (16, 2), (64, 3), (256, 4)] {
+            // Lengths straddling the round-robin edges: count < N,
+            // count == N, count % N ∈ {0, 1, N−1}.
+            for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 1000, 40_003] {
+                let (symbols, table) = sample(seed ^ (len as u64) << 8, len, alphabet);
+                for n in [1usize, 2, 4] {
+                    let bytes = encode_multistate(&symbols, &table, n).unwrap();
+                    let back = decode_multistate(&bytes, len, &table, n).unwrap();
+                    assert_eq!(back, symbols, "alphabet {alphabet} len {len} states {n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_state_is_byte_identical_to_scalar() {
+        let (symbols, table) = sample(5, 20_000, 64);
+        assert_eq!(
+            encode_multistate(&symbols, &table, 1).unwrap(),
+            crate::rans::encode(&symbols, &table).unwrap()
+        );
+    }
+
+    #[test]
+    fn empty_stream_is_state_words_only() {
+        let table = FreqTable::from_symbols(&[], 8);
+        for n in [1usize, 2, 4] {
+            let bytes = encode_multistate(&[], &table, n).unwrap();
+            assert_eq!(bytes.len(), 4 * n, "states {n}");
+            // All state words are the initial state.
+            for j in 0..n {
+                assert_eq!(
+                    u32::from_le_bytes(bytes[4 * j..4 * j + 4].try_into().unwrap()),
+                    crate::rans::encode::STATE_LOWER
+                );
+            }
+            assert_eq!(decode_multistate(&bytes, 0, &table, n).unwrap(), Vec::<u32>::new());
+        }
+    }
+
+    #[test]
+    fn fewer_symbols_than_states() {
+        // Idle states must still flush/verify their untouched initial
+        // state words.
+        let (symbols, table) = sample(6, 3, 8);
+        let bytes = encode_multistate(&symbols, &table, 4).unwrap();
+        assert_eq!(decode_multistate(&bytes, 3, &table, 4).unwrap(), symbols);
+    }
+
+    #[test]
+    fn unsupported_state_counts_rejected() {
+        let (symbols, table) = sample(7, 100, 8);
+        for n in [0usize, 3, 5, MAX_STATES + 1, 1000] {
+            assert!(encode_multistate(&symbols, &table, n).is_err(), "encode n={n}");
+            let bytes = encode_multistate(&symbols, &table, 2).unwrap();
+            assert!(decode_multistate(&bytes, 100, &table, n).is_err(), "decode n={n}");
+        }
+        assert!(supported_states(1) && supported_states(2) && supported_states(4));
+        assert!(!supported_states(0) && !supported_states(3) && !supported_states(5));
+    }
+
+    #[test]
+    fn compressed_size_overhead_is_state_words_only() {
+        // Extra states cost ~4 bytes each (one more final-state word),
+        // not a payload blow-up.
+        let (symbols, table) = sample(8, 100_000, 32);
+        let one = encode_multistate(&symbols, &table, 1).unwrap().len();
+        let four = encode_multistate(&symbols, &table, 4).unwrap().len();
+        assert!(four < one + 4 * 16, "1-state {one}B vs 4-state {four}B");
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let (symbols, table) = sample(9, 5000, 40);
+        for n in [2usize, 4] {
+            let bytes = encode_multistate(&symbols, &table, n).unwrap();
+            // Shorter than the state-word block.
+            assert!(decode_multistate(&bytes[..4 * n - 1], symbols.len(), &table, n).is_err());
+            // Drop trailing payload: truncation or final-state check fires.
+            let cut = &bytes[..bytes.len() - 2];
+            assert!(decode_multistate(cut, symbols.len(), &table, n).is_err());
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_detected() {
+        let (symbols, table) = sample(10, 1000, 16);
+        for n in [2usize, 4] {
+            let mut bytes = encode_multistate(&symbols, &table, n).unwrap();
+            bytes.extend_from_slice(&[0xAB, 0xCD]);
+            assert!(decode_multistate(&bytes, symbols.len(), &table, n).is_err());
+        }
+    }
+
+    #[test]
+    fn wrong_count_detected() {
+        let (symbols, table) = sample(11, 1000, 16);
+        for n in [2usize, 4] {
+            let bytes = encode_multistate(&symbols, &table, n).unwrap();
+            assert!(decode_multistate(&bytes, symbols.len() - 1, &table, n).is_err());
+        }
+    }
+
+    #[test]
+    fn wrong_state_count_cross_decode_fails_or_differs() {
+        // Decoding an N-state stream as N'-state must never silently
+        // yield the original symbols.
+        let (symbols, table) = sample(12, 2000, 32);
+        let bytes = encode_multistate(&symbols, &table, 4).unwrap();
+        for wrong in [1usize, 2] {
+            match decode_multistate(&bytes, symbols.len(), &table, wrong) {
+                Err(_) => {}
+                Ok(decoded) => assert_ne!(decoded, symbols, "wrong={wrong}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bitflip_detected_or_changes_output() {
+        let (symbols, table) = sample(13, 2000, 32);
+        for n in [2usize, 4] {
+            let mut bytes = encode_multistate(&symbols, &table, n).unwrap();
+            let mid = bytes.len() / 2;
+            bytes[mid] ^= 0x40;
+            match decode_multistate(&bytes, symbols.len(), &table, n) {
+                Err(_) => {}
+                Ok(decoded) => assert_ne!(decoded, symbols),
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_alphabet_and_zero_freq() {
+        let table = FreqTable::from_symbols(&[0, 0, 1], 3);
+        for n in [2usize, 4] {
+            assert!(encode_multistate(&[3], &table, n).is_err());
+            assert!(encode_multistate(&[2], &table, n).is_err());
+        }
+    }
+
+    /// The N-state encoder must match a direct transcription of the
+    /// textbook div/mod recurrence run with the same schedule — the
+    /// same wire-format contract the scalar core carries, per state.
+    #[test]
+    fn multistate_encoder_matches_textbook_reference() {
+        fn encode_reference(symbols: &[u32], table: &FreqTable, n: usize) -> Vec<u8> {
+            let mut states = vec![STATE_LOWER; n];
+            let mut rev: Vec<u8> = Vec::new();
+            for (i, &sym) in symbols.iter().enumerate().rev() {
+                let f = table.freq_of(sym);
+                let x_max = (((STATE_LOWER >> SCALE_BITS) as u64) << 16) * f as u64;
+                let s = &mut states[i % n];
+                while (*s as u64) >= x_max {
+                    rev.push((*s >> 8) as u8);
+                    rev.push(*s as u8);
+                    *s >>= 16;
+                }
+                *s = ((*s / f) << SCALE_BITS) + (*s % f) + table.cdf_of(sym);
+            }
+            let mut out = Vec::with_capacity(4 * n + rev.len());
+            for s in states {
+                out.extend_from_slice(&s.to_le_bytes());
+            }
+            out.extend(rev.iter().rev());
+            out
+        }
+
+        let mut rng = Rng::new(0x5EED2);
+        for (alphabet, s) in [(2usize, 0.5), (40, 1.1), (300, 1.6)] {
+            for len in [1usize, 5, 50, 20_000] {
+                let symbols: Vec<u32> =
+                    (0..len).map(|_| rng.zipf(alphabet, s) as u32).collect();
+                let table = FreqTable::from_symbols(&symbols, alphabet);
+                for n in [2usize, 4] {
+                    assert_eq!(
+                        encode_multistate(&symbols, &table, n).unwrap(),
+                        encode_reference(&symbols, &table, n),
+                        "alphabet {alphabet} len {len} states {n}"
+                    );
+                }
+            }
+        }
+    }
+}

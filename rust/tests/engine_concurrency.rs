@@ -5,7 +5,7 @@
 use std::sync::Arc;
 
 use rans_sc::engine::{ChunkedContainer, ContainerFormat, Engine, EngineConfig};
-use rans_sc::pipeline::{self, PipelineConfig, ReshapeStrategy};
+use rans_sc::pipeline::{self, PipelineConfig, ReshapeStrategy, StreamLayout};
 use rans_sc::quant::{quantize, QuantParams};
 use rans_sc::util::prng::Rng;
 
@@ -70,6 +70,7 @@ fn engine_bytes_identical_to_serial_reference() {
                 lanes,
                 parallel: true,
                 reshape: ReshapeStrategy::Fixed(probe.n_rows),
+                layout: StreamLayout::V1,
             };
             let (engine_bytes, _) = engine.compress_quantized(&symbols, params, &cfg).unwrap();
             let reference = serial_reference(&symbols, params, &cfg);
@@ -118,6 +119,12 @@ fn concurrent_roundtrips_through_one_shared_engine() {
                         lanes: 8,
                         parallel: true,
                         reshape: ReshapeStrategy::Optimize,
+                        // Exercise both stream layouts under concurrency.
+                        layout: if i % 2 == 0 {
+                            StreamLayout::V1
+                        } else {
+                            StreamLayout::MultiState(4)
+                        },
                     };
                     let ser = PipelineConfig { parallel: false, ..par.clone() };
                     let (bytes_par, _) =

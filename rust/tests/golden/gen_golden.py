@@ -183,6 +183,71 @@ def rans_decode(data, count, freq, cdf):
     return out
 
 
+# ----------------------------------------- multi-state rANS (v2 streams)
+#
+# N independent coder states inside one lane, round-robin: symbol i is
+# coded by state i % N. All states share ONE byte stream (rans_static's
+# single-stream interleaving). Wire layout of a lane payload:
+#
+#   [u32 LE state_0] ... [u32 LE state_{N-1}] [renorm bytes, decode order]
+#
+# The encoder walks symbols in reverse; whichever state renormalizes
+# pushes (hi, lo) onto one shared reverse buffer; final states are
+# written LE in state order 0..N-1 followed by the buffer reversed
+# wholesale. N = 1 is byte-identical to the scalar stream. This mirrors
+# rust/src/rans/multistate.rs exactly.
+
+
+def rans_encode_multistate(symbols, freq, cdf, n):
+    """N-state interleaved encoder (division-free, shared byte stream)."""
+    table = [enc_symbol(f, c) if f > 0 else None for f, c in zip(freq, cdf)]
+    states = [STATE_LOWER] * n
+    rev = bytearray()
+    for i in range(len(symbols) - 1, -1, -1):
+        e = table[symbols[i]]
+        j = i % n
+        s = states[j]
+        if s >= e["x_max"]:  # single branch: at most one flush per state
+            rev.append((s >> 8) & 0xFF)
+            rev.append(s & 0xFF)
+            s >>= 16
+        q = ((s + ((s * e["rcp_lo"]) >> 32)) >> e["rcp_shift"]) & MASK32
+        s = s + e["bias"] + q * e["cmpl_freq"]
+        assert s <= MASK32
+        states[j] = s
+    out = bytearray()
+    for s in states:
+        out.extend(struct.pack("<I", s))
+    out.extend(reversed(rev))
+    return bytes(out)
+
+
+def rans_decode_multistate(data, count, freq, cdf, n):
+    """N-state interleaved decoder (forward, same i % N schedule)."""
+    slot_sym = [0] * SCALE
+    for s in range(len(freq)):
+        for slot in range(cdf[s], cdf[s + 1]):
+            slot_sym[slot] = s
+    assert len(data) >= 4 * n, "shorter than state words"
+    states = list(struct.unpack("<" + "I" * n, data[0 : 4 * n]))
+    pos = 4 * n
+    out = []
+    for i in range(count):
+        j = i % n
+        state = states[j]
+        slot = state & (SCALE - 1)
+        sym = slot_sym[slot]
+        state = freq[sym] * (state >> SCALE_BITS) + slot - cdf[sym]
+        if state < STATE_LOWER:
+            assert pos + 2 <= len(data), "truncated"
+            state = (state << 16) | data[pos] | (data[pos + 1] << 8)
+            pos += 2
+        states[j] = state
+        out.append(sym)
+    assert all(s == STATE_LOWER for s in states) and pos == len(data)
+    return out
+
+
 # -------------------------------------------------- reciprocal validation
 
 
@@ -242,6 +307,33 @@ def validate_encoders():
     print("div/mod and reciprocal encoders byte-identical; roundtrips OK")
 
 
+def validate_multistate():
+    """N-state streams: N=1 byte-identical to scalar; roundtrips across
+    N, lengths straddling the round-robin edges, and alphabets."""
+    lcg = 0xFACADE
+    for alphabet in (2, 16, 64, 256):
+        symbols = []
+        for _ in range(5000):
+            lcg = (lcg * 6364136223846793005 + 1442695040888963407) % (1 << 64)
+            symbols.append(0 if (lcg >> 20) & 1 else (lcg >> 33) % alphabet)
+        counts = [0] * alphabet
+        for s in symbols:
+            counts[s] += 1
+        freq = from_counts(counts)
+        cdf = cdf_of(freq)
+        assert rans_encode_multistate(symbols, freq, cdf, 1) == rans_encode_recip(
+            symbols, freq, cdf
+        ), f"N=1 must be byte-identical to scalar (alphabet={alphabet})"
+        for n in (1, 2, 4):
+            for cut in (0, 1, 2, 3, 4, 5, 7, 8, len(symbols)):
+                part = symbols[:cut]
+                p = rans_encode_multistate(part, freq, cdf, n)
+                assert rans_decode_multistate(p, len(part), freq, cdf, n) == part, (
+                    f"multistate roundtrip failed: alphabet={alphabet} n={n} len={cut}"
+                )
+    print("multi-state streams: N=1 == scalar; roundtrips OK for N in {1,2,4}")
+
+
 # ----------------------------------------------------- pipeline replica
 
 
@@ -258,6 +350,24 @@ def lane_spans(count, lanes):
 
 def assemble_stream(lanes, symbol_count, payloads):
     out = bytearray()
+    write_varint(out, lanes)
+    write_varint(out, symbol_count)
+    for p in payloads:
+        write_varint(out, len(p))
+    for p in payloads:
+        out.extend(p)
+    return bytes(out)
+
+
+def assemble_stream_v2(lanes, states, symbol_count, payloads):
+    """v2 layout: zero marker + states-per-lane, then the v1 framing.
+
+    A v1 stream always starts with lane_count >= 1, so the leading zero
+    varint unambiguously flags the v2 layout.
+    """
+    out = bytearray()
+    write_varint(out, 0)
+    write_varint(out, states)
     write_varint(out, lanes)
     write_varint(out, symbol_count)
     for p in payloads:
@@ -380,6 +490,29 @@ def generate_goldens():
                 container_v1(q, scale_bytes, zero, t, n_rows, nnz, alphabet, freq, stream),
             )
 
+        # v2 multi-state streams inside the same RSC1 container
+        # (single lane; the multi-lane × multi-state case is below).
+        for n_states in (2, 4):
+            p = rans_encode_multistate(d, freq, cdf, n_states)
+            assert rans_decode_multistate(p, len(d), freq, cdf, n_states) == d
+            stream = assemble_stream_v2(1, n_states, len(d), [p])
+            emit(
+                f"v2s{n_states}_q{q}.hex",
+                container_v1(q, scale_bytes, zero, t, n_rows, nnz, alphabet, freq, stream),
+            )
+
+        # Multi-lane × multi-state: 8 lanes, 4 states per lane.
+        payloads = []
+        for lo, hi in lane_spans(len(d), 8):
+            p = rans_encode_multistate(d[lo:hi], freq, cdf, 4)
+            assert rans_decode_multistate(p, hi - lo, freq, cdf, 4) == d[lo:hi]
+            payloads.append(p)
+        stream = assemble_stream_v2(8, 4, len(d), payloads)
+        emit(
+            f"v2s4_q{q}_lanes8.hex",
+            container_v1(q, scale_bytes, zero, t, n_rows, nnz, alphabet, freq, stream),
+        )
+
         n_chunks = max(min((len(d) + chunk_symbols - 1) // chunk_symbols, 1 << 20), 1)
         chunks = []
         for lo, hi in lane_spans(len(d), n_chunks):
@@ -403,10 +536,25 @@ def generate_goldens():
         assert rans_decode(p, len(symbols), freq, cdf) == symbols
         emit(f"raw_q{q}.hex", p)
 
+    # Raw multi-state lane streams: the multistate codec layer alone
+    # (no lane framing, no container) over the Q=4 golden stream.
+    alphabet = 1 << 4
+    symbols = golden_symbols(4, 4096)
+    counts = [0] * alphabet
+    for s in symbols:
+        counts[s] += 1
+    freq = from_counts(counts)
+    cdf = cdf_of(freq)
+    for n_states in (2, 4):
+        p = rans_encode_multistate(symbols, freq, cdf, n_states)
+        assert rans_decode_multistate(p, len(symbols), freq, cdf, n_states) == symbols
+        emit(f"raw_ms{n_states}_q4.hex", p)
+
 
 def main():
     validate_reciprocal()
     validate_encoders()
+    validate_multistate()
     generate_goldens()
     print("all golden vectors written")
 

@@ -1,7 +1,7 @@
 //! Property-based integration tests over the compression stack
 //! (no artifacts required).
 
-use rans_sc::pipeline::{self, PipelineConfig, ReshapeStrategy};
+use rans_sc::pipeline::{self, PipelineConfig, ReshapeStrategy, StreamLayout};
 use rans_sc::quant::{quantize, QuantParams};
 use rans_sc::rans::{decode, encode, FreqTable};
 use rans_sc::sparse::ModCsr;
@@ -38,9 +38,10 @@ fn prop_pipeline_symbol_roundtrip() {
                 1 => ReshapeStrategy::Flat,
                 _ => ReshapeStrategy::Optimize,
             };
-            (data, q, strat)
+            let states = *rng.choose(&[1usize, 2, 4]);
+            (data, q, strat, states)
         },
-        |(data, q, strat)| {
+        |(data, q, strat, states)| {
             let params = match QuantParams::fit(*q, data) {
                 Ok(p) => p,
                 Err(_) => return false,
@@ -51,6 +52,11 @@ fn prop_pipeline_symbol_roundtrip() {
                 lanes: 4,
                 parallel: false,
                 reshape: strat.clone(),
+                layout: if *states == 1 {
+                    StreamLayout::V1
+                } else {
+                    StreamLayout::MultiState(*states)
+                },
             };
             let (bytes, _) = match pipeline::compress_quantized(&symbols, params, &cfg) {
                 Ok(x) => x,

@@ -19,9 +19,10 @@ use rans_sc::engine::{ContainerFormat, Engine, EngineConfig};
 use rans_sc::eval::fixtures::synthetic_feature;
 use rans_sc::pipeline::{self, PipelineConfig, ReshapeStrategy, StreamLayout};
 use rans_sc::quant::{fit_and_quantize, quantize, QuantParams};
+use rans_sc::rans::simd::{self, Backend};
 use rans_sc::rans::{
-    decode, decode_interleaved, decode_multistate, encode, encode_interleaved,
-    encode_multistate, FreqTable,
+    decode, decode_interleaved, decode_multistate, decode_multistate_scalar, encode,
+    encode_interleaved, encode_multistate, FreqTable,
 };
 use rans_sc::reshape::{self, optimizer::OptimizerConfig};
 use rans_sc::sparse::ModCsr;
@@ -63,7 +64,15 @@ impl Report {
             .unwrap_or(0.0)
     }
 
-    fn to_json(&self, t: usize, q: u8, fast: bool, warmup: usize, trials: usize) -> Value {
+    fn to_json(
+        &self,
+        t: usize,
+        q: u8,
+        fast: bool,
+        warmup: usize,
+        trials: usize,
+        simd_backends: (&str, &str),
+    ) -> Value {
         let rows: Vec<Value> = self
             .rows
             .iter()
@@ -89,9 +98,21 @@ impl Report {
             // summary (and humans) can read them without walking rows.
             .field("scalar_encode_msym_s", self.msym_of("rans_encode_1lane"))
             .field("scalar_decode_msym_s", self.msym_of("rans_decode_1lane"))
-            // Headline ILP number: 4-state interleaved decode (v2
-            // streams). CI bench-smoke fails if this key goes missing.
+            // Headline ILP number: 4-state interleaved decode, forced
+            // scalar (v2 streams). CI bench-smoke fails if this key
+            // goes missing.
             .field("multistate_decode_msym_s", self.msym_of("rans_decode_4state"))
+            // Headline SIMD number: 4-state decode through the runtime
+            // dispatcher (SSE4.1 on capable hosts, scalar elsewhere —
+            // `simd_backend` records which; `simd8_backend` records the
+            // 8-state row's path separately, since a host can have
+            // SSE4.1 but not AVX2). CI bench-smoke fails if the
+            // headline key goes missing and reports the simd/scalar
+            // ratio.
+            .field("simd_decode_msym_s", self.msym_of("rans_decode_simd4"))
+            .field("simd_backend", simd_backends.0)
+            .field("simd8_decode_msym_s", self.msym_of("rans_decode_simd8"))
+            .field("simd8_backend", simd_backends.1)
             .field("rows", rows)
             .build()
     }
@@ -187,8 +208,9 @@ fn main() {
 
     // Intra-lane multi-state interleaving (v2 streams): same single
     // lane, N independent coder states round-robin over the symbols.
-    // The decode rows are the ILP payoff the scalar core can't reach.
-    for n in [2usize, 4] {
+    // The decode rows are pinned to the *scalar* loop so they stay the
+    // ILP baseline the SIMD rows below are measured against.
+    for n in [2usize, 4, 8] {
         let m = report.add_syms(
             &format!("rans_encode_{n}state"),
             measure(warmup, trials, || encode_multistate(&d, &table, n).unwrap()),
@@ -203,15 +225,44 @@ fn main() {
         let m = report.add_syms(
             &format!("rans_decode_{n}state"),
             measure(warmup, trials, || {
+                decode_multistate_scalar(&ms_stream, d.len(), &table, n).unwrap()
+            }),
+            d.len(),
+        );
+        println!(
+            "rANS decode {n}-state  {:>12}  ({:>8.1} Msym/s, scalar)",
+            m.fmt_mean_std(),
+            d.len() as f64 / 1e6 / (m.mean_ms() / 1e3)
+        );
+    }
+
+    // SIMD gather decode (runtime dispatch: SSE4.1 for 4 states, AVX2
+    // for 8; falls back to the scalar loop on hosts without them —
+    // the printed backend records which path actually ran).
+    for n in [4usize, 8] {
+        let backend = simd::backend_for(n);
+        let ms_stream = encode_multistate(&d, &table, n).unwrap();
+        let m = report.add_syms(
+            &format!("rans_decode_simd{n}"),
+            measure(warmup, trials, || {
                 decode_multistate(&ms_stream, d.len(), &table, n).unwrap()
             }),
             d.len(),
         );
         println!(
-            "rANS decode {n}-state  {:>12}  ({:>8.1} Msym/s)",
+            "rANS decode simd {n}st {:>12}  ({:>8.1} Msym/s, {})",
             m.fmt_mean_std(),
-            d.len() as f64 / 1e6 / (m.mean_ms() / 1e3)
+            d.len() as f64 / 1e6 / (m.mean_ms() / 1e3),
+            backend.name()
         );
+    }
+    let simd4_backend = simd::backend_for(4);
+    let simd8_backend = simd::backend_for(8);
+    if simd4_backend == Backend::Scalar {
+        println!("# note: no SSE4.1 on this host — simd4 row measured the scalar fallback");
+    }
+    if simd8_backend == Backend::Scalar {
+        println!("# note: no AVX2 on this host — simd8 row measured the scalar fallback");
     }
 
     // Scoped-thread fan-out baseline: what the pre-engine hot path paid
@@ -306,7 +357,8 @@ fn main() {
     let json_path =
         std::env::var("RANS_SC_BENCH_JSON").unwrap_or_else(|_| "BENCH_perf_hotpath.json".into());
     if json_path != "0" {
-        let json = report.to_json(t, q, fast, warmup, trials).to_string_pretty();
+        let backends = (simd4_backend.name(), simd8_backend.name());
+        let json = report.to_json(t, q, fast, warmup, trials, backends).to_string_pretty();
         match std::fs::write(&json_path, &json) {
             Ok(()) => println!("# wrote {json_path}"),
             Err(e) => eprintln!("# could not write {json_path}: {e}"),

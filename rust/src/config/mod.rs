@@ -26,8 +26,10 @@ pub struct AppConfig {
     pub q: u8,
     /// rANS lanes.
     pub lanes: usize,
-    /// Interleaved rANS states per lane (1 = v1 scalar streams; 2 or 4
-    /// select the v2 multi-state layout for ILP decode).
+    /// Interleaved rANS states per lane (1 = v1 scalar streams; 2, 4,
+    /// or 8 select the v2 multi-state layout — 4 and 8 additionally
+    /// unlock the SSE4.1/AVX2 SIMD decode paths where the host has
+    /// them).
     pub states: usize,
     /// Thread the rANS lanes.
     pub parallel: bool,
@@ -101,7 +103,7 @@ impl AppConfig {
                 let s = val.as_usize().ok_or_else(bad)?;
                 if !crate::rans::multistate::supported_states(s) {
                     return Err(Error::config(format!(
-                        "states={s} unsupported (supported: 1, 2, 4)"
+                        "states={s} unsupported (supported: 1, 2, 4, 8)"
                     )));
                 }
                 self.states = s;
@@ -202,6 +204,8 @@ mod tests {
         c.apply_override("buckets=[1,4,16]").unwrap();
         c.apply_override("states=4").unwrap();
         assert_eq!(c.states, 4);
+        c.apply_override("states=8").unwrap();
+        assert_eq!(c.states, 8);
         assert_eq!(c.q, 6);
         assert_eq!(c.channel.gamma_db, 20.0);
         assert_eq!(c.model, "llama_mini_s");
@@ -215,6 +219,7 @@ mod tests {
         assert!(c.apply_override("nonsense").is_err());
         assert!(c.apply_override("q=99").is_err());
         assert!(c.apply_override("states=3").is_err());
+        assert!(c.apply_override("states=16").is_err());
         assert!(c.apply_override("unknown_key=1").is_err());
         assert!(c.apply_override("sl=x").is_err());
     }

@@ -27,8 +27,10 @@
 //! Orthogonally, [`PipelineConfig::layout`]
 //! ([`crate::rans::StreamLayout`]) selects the per-lane stream layout
 //! inside the v1 container's payload: v1 scalar lanes (default) or v2
-//! multi-state lanes (2–4 interleaved rANS states per lane for ILP
-//! decode). Decoders need no knob — the stream is self-describing.
+//! multi-state lanes (2–8 interleaved rANS states per lane for
+//! ILP/SIMD decode — 4- and 8-state lanes pick up the SSE4.1/AVX2
+//! gather decoder where the host has it). Decoders need no knob — the
+//! stream is self-describing.
 
 pub mod chunked;
 pub mod plan_cache;
@@ -226,7 +228,7 @@ impl Engine {
         let nnz = csr.nnz();
         if !supported_states(cfg.layout.states_per_lane()) {
             return Err(Error::invalid(format!(
-                "unsupported states-per-lane {} (supported: 1, 2, 4)",
+                "unsupported states-per-lane {} (supported: 1, 2, 4, 8)",
                 cfg.layout.states_per_lane()
             )));
         }
@@ -666,7 +668,7 @@ mod tests {
         let engine = Engine::new(EngineConfig { workers: 4, ..EngineConfig::default() });
         let data = synth(6, 16_384);
         for q in [2u8, 4, 8] {
-            for states in [2usize, 4] {
+            for states in [2usize, 4, 8] {
                 let par = PipelineConfig {
                     q,
                     lanes: 8,
@@ -729,7 +731,7 @@ mod tests {
     fn unsupported_states_rejected_at_compress() {
         let engine = Engine::new(EngineConfig::default());
         let data = synth(9, 2048);
-        for states in [0usize, 3, 5] {
+        for states in [0usize, 3, 5, 6, 7, 9] {
             let cfg = PipelineConfig {
                 layout: StreamLayout::MultiState(states),
                 ..PipelineConfig::paper(4)

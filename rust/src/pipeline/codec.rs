@@ -258,12 +258,13 @@ mod tests {
     }
 
     /// v2 multi-state streams ride inside the same RSC1 container; the
-    /// decoder needs no hint (the stream layout is self-describing).
+    /// decoder needs no hint (the stream layout is self-describing, and
+    /// 4/8-state payloads pick up the SIMD decode path transparently).
     #[test]
     fn multistate_roundtrip_symbol_exact() {
         let data = synth_if(9, 32, 14, 14);
         for q in [2u8, 4, 8] {
-            for states in [2usize, 4] {
+            for states in [2usize, 4, 8] {
                 let cfg = PipelineConfig::paper(q).with_states(states);
                 let params = QuantParams::fit(q, &data).unwrap();
                 let symbols = quant::quantize(&data, &params);

@@ -140,14 +140,11 @@ impl FreqTable {
         for i in 0..m {
             cdf[i + 1] = cdf[i] + freq[i];
         }
-        let mut dec = vec![DecEntry { sym: 0, freq: 0, bias: 0 }; SCALE as usize];
+        let mut dec = vec![DecEntry::new(0, 0, 0); SCALE as usize];
         for s in 0..m {
             for slot in cdf[s]..cdf[s + 1] {
-                dec[slot as usize] = DecEntry {
-                    sym: s as u16,
-                    freq: freq[s] as u16,
-                    bias: (slot - cdf[s]) as u16,
-                };
+                dec[slot as usize] =
+                    DecEntry::new(s as u16, freq[s] as u16, (slot - cdf[s]) as u16);
             }
         }
         Ok(FreqTable { freq, cdf, dec, enc: OnceLock::new() })

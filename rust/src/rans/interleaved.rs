@@ -27,7 +27,7 @@
 //! [varint 0]                                // layout marker; a v1
 //!                                           // stream can never start
 //!                                           // with 0 (lane_count ≥ 1)
-//! [varint states_per_lane]                  // N ∈ {1, 2, 4}
+//! [varint states_per_lane]                  // N ∈ {1, 2, 4, 8}
 //! [varint lane_count] [varint symbol_count]
 //! [varint byte_len × lane_count]
 //! [lane 0 payload] ...                      // N-state rANS streams
@@ -57,7 +57,7 @@ pub enum StreamLayout {
     #[default]
     V1,
     /// v2 lanes with this many interleaved rANS states per lane
-    /// (ILP decode; supported counts: 1, 2, 4).
+    /// (ILP/SIMD decode; supported counts: 1, 2, 4, 8).
     MultiState(usize),
 }
 
@@ -179,7 +179,7 @@ pub fn encode_interleaved_with_layout(
     let states = layout.states_per_lane();
     if !supported_states(states) {
         return Err(Error::invalid(format!(
-            "unsupported states-per-lane {states} (supported: 1, 2, 4)"
+            "unsupported states-per-lane {states} (supported: 1, 2, 4, 8)"
         )));
     }
     let lanes = lanes.clamp(1, MAX_LANES);
@@ -231,7 +231,7 @@ pub fn parse_stream_spans(bytes: &[u8]) -> Result<StreamSpans> {
         let states = varint::read_usize(bytes, &mut pos)?;
         if !supported_states(states) {
             return Err(Error::corrupt(format!(
-                "bad states-per-lane {states} (supported: 1, 2, 4)"
+                "bad states-per-lane {states} (supported: 1, 2, 4, 8)"
             )));
         }
         (states, varint::read_usize(bytes, &mut pos)?)
@@ -395,7 +395,7 @@ mod tests {
     #[test]
     fn v2_roundtrip_states_by_lanes() {
         let (symbols, table) = sample(6, 10_000, 64);
-        for states in [1usize, 2, 4] {
+        for states in [1usize, 2, 4, 8] {
             for lanes in [1usize, 2, 3, 8] {
                 for parallel in [false, true] {
                     let bytes = encode_interleaved_with_layout(
@@ -442,7 +442,7 @@ mod tests {
     #[test]
     fn v2_empty_and_single_symbol_streams() {
         let table = FreqTable::from_symbols(&[], 4);
-        for states in [2usize, 4] {
+        for states in [2usize, 4, 8] {
             let bytes = encode_interleaved_with_layout(
                 &[],
                 &table,
@@ -454,7 +454,7 @@ mod tests {
             assert_eq!(decode_interleaved(&bytes, &table, false).unwrap(), Vec::<u32>::new());
         }
         let (symbols, table) = sample(8, 1, 8);
-        for states in [2usize, 4] {
+        for states in [2usize, 4, 8] {
             let bytes = encode_interleaved_with_layout(
                 &symbols,
                 &table,
@@ -512,7 +512,7 @@ mod tests {
     #[test]
     fn v2_unsupported_encode_states_rejected() {
         let (symbols, table) = sample(10, 100, 8);
-        for states in [0usize, 3, 5, 64] {
+        for states in [0usize, 3, 5, 6, 7, 9, 64] {
             assert!(encode_interleaved_with_layout(
                 &symbols,
                 &table,

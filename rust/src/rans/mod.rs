@@ -28,8 +28,14 @@
 //!   v2 multi-state format.
 //! * [`multistate`] — N interleaved coder states *within* one lane
 //!   (rans_static-style round-robin), breaking the decoder's serial
-//!   dependency chain so the out-of-order core overlaps 2–4 independent
+//!   dependency chain so the out-of-order core overlaps 2–8 independent
 //!   multiply/refill chains (the v2 lane payload format).
+//! * [`simd`] — data-level parallelism over those independent states:
+//!   one vectorized decode round per iteration (SSE4.1 for 4-state
+//!   lanes, AVX2 for 8-state lanes), runtime-dispatched with the
+//!   const-generic scalar loop as the portable fallback. No wire-format
+//!   change; pinned symbol-identical to the scalar path by
+//!   `rust/tests/rans_differential.rs`.
 //!
 //! The state is 32-bit with 16-bit renormalization windows
 //! (`state ∈ [2^16, 2^32)`), the layout used by production rANS coders;
@@ -40,6 +46,7 @@ pub mod encode;
 pub mod freq;
 pub mod interleaved;
 pub mod multistate;
+pub mod simd;
 pub mod symbol;
 
 pub use decode::decode;
@@ -49,7 +56,7 @@ pub use interleaved::{
     decode_interleaved, encode_interleaved, encode_interleaved_with_layout, InterleavedStream,
     StreamLayout,
 };
-pub use multistate::{decode_multistate, encode_multistate};
+pub use multistate::{decode_multistate, decode_multistate_scalar, encode_multistate};
 pub use symbol::{DecEntry, EncSymbol};
 
 #[cfg(test)]

@@ -66,17 +66,19 @@ use super::freq::{FreqTable, SCALE, SCALE_BITS};
 use super::symbol::DecEntry;
 
 /// Maximum states per lane accepted by encoder and decoder. Four
-/// independent chains saturate the multiply ports of current cores;
-/// beyond that, register pressure and the shared refill cursor eat the
-/// gains (mirrors rans_static's 4-way interleave).
-pub const MAX_STATES: usize = 4;
+/// independent chains saturate the multiply ports of a scalar core
+/// (mirrors rans_static's 4-way interleave); eight exist for the AVX2
+/// gather decoder ([`super::simd`]), which retires one full round per
+/// 256-bit vector and so keeps paying past the scalar sweet spot.
+pub const MAX_STATES: usize = 8;
 
-/// True iff `n` is a state count this module codes: 1, 2, or 4.
-/// (3 is representable in the header but deliberately unsupported —
-/// round-robin over a non-power-of-two adds a modulo to the hot loop
-/// for no ILP benefit over 2 or 4.)
+/// True iff `n` is a state count this module codes: 1, 2, 4, or 8.
+/// (Other values are representable in the header but deliberately
+/// unsupported — round-robin over a non-power-of-two adds a modulo to
+/// the hot loop, and power-of-two counts above 8 exceed both the scalar
+/// register budget and the widest SIMD path.)
 pub fn supported_states(n: usize) -> bool {
-    matches!(n, 1 | 2 | 4)
+    matches!(n, 1 | 2 | 4 | 8)
 }
 
 /// Encode `symbols` with `n_states` interleaved rANS states
@@ -90,8 +92,9 @@ pub fn encode_multistate(symbols: &[u32], table: &FreqTable, n_states: usize) ->
         1 => encode(symbols, table),
         2 => encode_n::<2>(symbols, table),
         4 => encode_n::<4>(symbols, table),
+        8 => encode_n::<8>(symbols, table),
         n => Err(Error::invalid(format!(
-            "unsupported states-per-lane {n} (supported: 1, 2, 4)"
+            "unsupported states-per-lane {n} (supported: 1, 2, 4, 8)"
         ))),
     }
 }
@@ -102,7 +105,30 @@ pub fn encode_multistate(symbols: &[u32], table: &FreqTable, n_states: usize) ->
 /// Every state is checked against the initial-state invariant after the
 /// last symbol, and the stream must be fully consumed — truncation,
 /// trailing bytes, or a forged state word all yield `Error::Corrupt`.
+///
+/// For 4- and 8-state streams this dispatches to the SIMD gather
+/// decoder ([`super::simd`]) when the host supports it (SSE4.1 / AVX2,
+/// detected at runtime), falling back to the const-generic scalar loop
+/// otherwise. Both paths are symbol-identical on valid streams and
+/// agree on rejection of corrupt ones (pinned by
+/// `rust/tests/rans_differential.rs`).
 pub fn decode_multistate(
+    bytes: &[u8],
+    count: usize,
+    table: &FreqTable,
+    n_states: usize,
+) -> Result<Vec<u32>> {
+    match n_states {
+        4 => super::simd::decode4(bytes, count, table),
+        8 => super::simd::decode8(bytes, count, table),
+        _ => decode_multistate_scalar(bytes, count, table, n_states),
+    }
+}
+
+/// [`decode_multistate`] pinned to the portable scalar loop for every
+/// state count — the reference the SIMD paths are differentially fuzzed
+/// against (and the benchmark baseline their speedup is measured from).
+pub fn decode_multistate_scalar(
     bytes: &[u8],
     count: usize,
     table: &FreqTable,
@@ -112,8 +138,9 @@ pub fn decode_multistate(
         1 => decode(bytes, count, table),
         2 => decode_n::<2>(bytes, count, table),
         4 => decode_n::<4>(bytes, count, table),
+        8 => decode_n::<8>(bytes, count, table),
         n => Err(Error::corrupt(format!(
-            "unsupported states-per-lane {n} (supported: 1, 2, 4)"
+            "unsupported states-per-lane {n} (supported: 1, 2, 4, 8)"
         ))),
     }
 }
@@ -152,7 +179,9 @@ fn encode_n<const N: usize>(symbols: &[u32], table: &FreqTable) -> Result<Vec<u8
     Ok(out)
 }
 
-fn decode_n<const N: usize>(bytes: &[u8], count: usize, table: &FreqTable) -> Result<Vec<u32>> {
+/// Read the `N` little-endian final-state words that lead a lane
+/// payload. Shared by the scalar and SIMD decoders.
+pub(crate) fn read_states<const N: usize>(bytes: &[u8]) -> Result<[u32; N]> {
     if bytes.len() < 4 * N {
         return Err(Error::corrupt(format!(
             "multi-state rANS stream shorter than {N} state words"
@@ -167,16 +196,25 @@ fn decode_n<const N: usize>(bytes: &[u8], count: usize, table: &FreqTable) -> Re
             bytes[4 * j + 3],
         ]);
     }
-    let mut pos = 4 * N;
-    // `count` comes from untrusted headers; cap the reservation like the
-    // scalar decoder so a forged count fails in the loop, not the
-    // allocator.
-    let mut out: Vec<u32> = Vec::with_capacity(count.min(1 << 20));
-    let dec = table.dec_table();
-    let mask = SCALE - 1;
+    Ok(states)
+}
 
-    let full_rounds = count / N;
-    for _ in 0..full_rounds {
+/// Run `rounds` full scalar decode rounds (`N` symbols each) from the
+/// current `states`/`pos`. This is the portable hot loop — and also the
+/// SIMD decoders' finisher: when the vector loop runs out of guaranteed
+/// refill bytes it hands `states`, `pos`, and the remaining round count
+/// here, so the two paths are identical by construction from that point
+/// on.
+pub(crate) fn scalar_rounds<const N: usize>(
+    bytes: &[u8],
+    pos: &mut usize,
+    states: &mut [u32; N],
+    out: &mut Vec<u32>,
+    rounds: usize,
+    dec: &[DecEntry],
+) -> Result<()> {
+    let mask = SCALE - 1;
+    for _ in 0..rounds {
         // N independent loads, then N independent transitions: the only
         // cross-state dependency is the refill cursor below.
         let entries: [DecEntry; N] = std::array::from_fn(|j| dec[(states[j] & mask) as usize]);
@@ -187,31 +225,46 @@ fn decode_n<const N: usize>(bytes: &[u8], count: usize, table: &FreqTable) -> Re
         // first — the exact mirror of the encoder's schedule).
         for (s, e) in states.iter_mut().zip(&entries) {
             if *s < STATE_LOWER {
-                if pos + 2 > bytes.len() {
+                if *pos + 2 > bytes.len() {
                     return Err(Error::corrupt(
                         "multi-state rANS stream truncated mid-renormalization",
                     ));
                 }
-                let lo = u16::from_le_bytes([bytes[pos], bytes[pos + 1]]) as u32;
+                let lo = u16::from_le_bytes([bytes[*pos], bytes[*pos + 1]]) as u32;
                 *s = (*s << 16) | lo;
-                pos += 2;
+                *pos += 2;
             }
             out.push(e.sym as u32);
         }
     }
-    // Tail round: count mod N symbols on states 0 … tail−1.
-    for s in states.iter_mut().take(count % N) {
+    Ok(())
+}
+
+/// Decode the tail round (`tail < N` symbols on states `0 … tail−1`)
+/// and run the end-of-stream checks every decoder shares: all `N`
+/// states back at the initial-state invariant, stream fully consumed.
+pub(crate) fn finish<const N: usize>(
+    bytes: &[u8],
+    pos: &mut usize,
+    states: &mut [u32; N],
+    out: &mut Vec<u32>,
+    tail: usize,
+    dec: &[DecEntry],
+) -> Result<()> {
+    debug_assert!(tail < N);
+    let mask = SCALE - 1;
+    for s in states.iter_mut().take(tail) {
         let e = dec[(*s & mask) as usize];
         *s = (e.freq as u32) * (*s >> SCALE_BITS) + e.bias as u32;
         if *s < STATE_LOWER {
-            if pos + 2 > bytes.len() {
+            if *pos + 2 > bytes.len() {
                 return Err(Error::corrupt(
                     "multi-state rANS stream truncated mid-renormalization",
                 ));
             }
-            let lo = u16::from_le_bytes([bytes[pos], bytes[pos + 1]]) as u32;
+            let lo = u16::from_le_bytes([bytes[*pos], bytes[*pos + 1]]) as u32;
             *s = (*s << 16) | lo;
-            pos += 2;
+            *pos += 2;
         }
         out.push(e.sym as u32);
     }
@@ -223,12 +276,29 @@ fn decode_n<const N: usize>(bytes: &[u8], count: usize, table: &FreqTable) -> Re
             )));
         }
     }
-    if pos != bytes.len() {
+    if *pos != bytes.len() {
         return Err(Error::corrupt(format!(
             "multi-state rANS stream has {} trailing bytes",
-            bytes.len() - pos
+            bytes.len() - *pos
         )));
     }
+    Ok(())
+}
+
+pub(crate) fn decode_n<const N: usize>(
+    bytes: &[u8],
+    count: usize,
+    table: &FreqTable,
+) -> Result<Vec<u32>> {
+    let mut states = read_states::<N>(bytes)?;
+    let mut pos = 4 * N;
+    // `count` comes from untrusted headers; cap the reservation like the
+    // scalar decoder so a forged count fails in the loop, not the
+    // allocator.
+    let mut out: Vec<u32> = Vec::with_capacity(count.min(1 << 20));
+    let dec = table.dec_table();
+    scalar_rounds::<N>(bytes, &mut pos, &mut states, &mut out, count / N, dec)?;
+    finish::<N>(bytes, &mut pos, &mut states, &mut out, count % N, dec)?;
     Ok(out)
 }
 
@@ -248,13 +318,17 @@ mod tests {
     fn roundtrip_states_by_len_by_alphabet() {
         for (alphabet, seed) in [(2usize, 1u64), (16, 2), (64, 3), (256, 4)] {
             // Lengths straddling the round-robin edges: count < N,
-            // count == N, count % N ∈ {0, 1, N−1}.
-            for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 1000, 40_003] {
+            // count == N, count % N ∈ {0, 1, N−1} for every N up to 8.
+            for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 1000, 40_003] {
                 let (symbols, table) = sample(seed ^ (len as u64) << 8, len, alphabet);
-                for n in [1usize, 2, 4] {
+                for n in [1usize, 2, 4, 8] {
                     let bytes = encode_multistate(&symbols, &table, n).unwrap();
                     let back = decode_multistate(&bytes, len, &table, n).unwrap();
                     assert_eq!(back, symbols, "alphabet {alphabet} len {len} states {n}");
+                    // The scalar loop must agree regardless of which
+                    // backend decode_multistate dispatched to.
+                    let scalar = decode_multistate_scalar(&bytes, len, &table, n).unwrap();
+                    assert_eq!(scalar, symbols, "scalar alphabet {alphabet} len {len} states {n}");
                 }
             }
         }
@@ -272,7 +346,7 @@ mod tests {
     #[test]
     fn empty_stream_is_state_words_only() {
         let table = FreqTable::from_symbols(&[], 8);
-        for n in [1usize, 2, 4] {
+        for n in [1usize, 2, 4, 8] {
             let bytes = encode_multistate(&[], &table, n).unwrap();
             assert_eq!(bytes.len(), 4 * n, "states {n}");
             // All state words are the initial state.
@@ -291,20 +365,25 @@ mod tests {
         // Idle states must still flush/verify their untouched initial
         // state words.
         let (symbols, table) = sample(6, 3, 8);
-        let bytes = encode_multistate(&symbols, &table, 4).unwrap();
-        assert_eq!(decode_multistate(&bytes, 3, &table, 4).unwrap(), symbols);
+        for n in [4usize, 8] {
+            let bytes = encode_multistate(&symbols, &table, n).unwrap();
+            assert_eq!(decode_multistate(&bytes, 3, &table, n).unwrap(), symbols, "states {n}");
+        }
     }
 
     #[test]
     fn unsupported_state_counts_rejected() {
         let (symbols, table) = sample(7, 100, 8);
-        for n in [0usize, 3, 5, MAX_STATES + 1, 1000] {
+        for n in [0usize, 3, 5, 6, 7, MAX_STATES + 1, 1000] {
             assert!(encode_multistate(&symbols, &table, n).is_err(), "encode n={n}");
             let bytes = encode_multistate(&symbols, &table, 2).unwrap();
             assert!(decode_multistate(&bytes, 100, &table, n).is_err(), "decode n={n}");
         }
-        assert!(supported_states(1) && supported_states(2) && supported_states(4));
-        assert!(!supported_states(0) && !supported_states(3) && !supported_states(5));
+        assert!(supported_states(1) && supported_states(2));
+        assert!(supported_states(4) && supported_states(8));
+        assert!(!supported_states(0) && !supported_states(3));
+        assert!(!supported_states(5) && !supported_states(6) && !supported_states(7));
+        assert!(!supported_states(9));
     }
 
     #[test]
@@ -320,7 +399,7 @@ mod tests {
     #[test]
     fn truncation_detected() {
         let (symbols, table) = sample(9, 5000, 40);
-        for n in [2usize, 4] {
+        for n in [2usize, 4, 8] {
             let bytes = encode_multistate(&symbols, &table, n).unwrap();
             // Shorter than the state-word block.
             assert!(decode_multistate(&bytes[..4 * n - 1], symbols.len(), &table, n).is_err());
@@ -333,7 +412,7 @@ mod tests {
     #[test]
     fn trailing_garbage_detected() {
         let (symbols, table) = sample(10, 1000, 16);
-        for n in [2usize, 4] {
+        for n in [2usize, 4, 8] {
             let mut bytes = encode_multistate(&symbols, &table, n).unwrap();
             bytes.extend_from_slice(&[0xAB, 0xCD]);
             assert!(decode_multistate(&bytes, symbols.len(), &table, n).is_err());
@@ -343,7 +422,7 @@ mod tests {
     #[test]
     fn wrong_count_detected() {
         let (symbols, table) = sample(11, 1000, 16);
-        for n in [2usize, 4] {
+        for n in [2usize, 4, 8] {
             let bytes = encode_multistate(&symbols, &table, n).unwrap();
             assert!(decode_multistate(&bytes, symbols.len() - 1, &table, n).is_err());
         }
@@ -354,11 +433,16 @@ mod tests {
         // Decoding an N-state stream as N'-state must never silently
         // yield the original symbols.
         let (symbols, table) = sample(12, 2000, 32);
-        let bytes = encode_multistate(&symbols, &table, 4).unwrap();
-        for wrong in [1usize, 2] {
-            match decode_multistate(&bytes, symbols.len(), &table, wrong) {
-                Err(_) => {}
-                Ok(decoded) => assert_ne!(decoded, symbols, "wrong={wrong}"),
+        for right in [4usize, 8] {
+            let bytes = encode_multistate(&symbols, &table, right).unwrap();
+            for wrong in [1usize, 2, 4, 8] {
+                if wrong == right {
+                    continue;
+                }
+                match decode_multistate(&bytes, symbols.len(), &table, wrong) {
+                    Err(_) => {}
+                    Ok(decoded) => assert_ne!(decoded, symbols, "right={right} wrong={wrong}"),
+                }
             }
         }
     }
@@ -366,7 +450,7 @@ mod tests {
     #[test]
     fn bitflip_detected_or_changes_output() {
         let (symbols, table) = sample(13, 2000, 32);
-        for n in [2usize, 4] {
+        for n in [2usize, 4, 8] {
             let mut bytes = encode_multistate(&symbols, &table, n).unwrap();
             let mid = bytes.len() / 2;
             bytes[mid] ^= 0x40;
@@ -380,7 +464,7 @@ mod tests {
     #[test]
     fn rejects_out_of_alphabet_and_zero_freq() {
         let table = FreqTable::from_symbols(&[0, 0, 1], 3);
-        for n in [2usize, 4] {
+        for n in [2usize, 4, 8] {
             assert!(encode_multistate(&[3], &table, n).is_err());
             assert!(encode_multistate(&[2], &table, n).is_err());
         }
@@ -419,7 +503,7 @@ mod tests {
                 let symbols: Vec<u32> =
                     (0..len).map(|_| rng.zipf(alphabet, s) as u32).collect();
                 let table = FreqTable::from_symbols(&symbols, alphabet);
-                for n in [2usize, 4] {
+                for n in [2usize, 4, 8] {
                     assert_eq!(
                         encode_multistate(&symbols, &table, n).unwrap(),
                         encode_reference(&symbols, &table, n),

@@ -1,0 +1,616 @@
+//! SIMD gather decode for v2 multi-state streams.
+//!
+//! The const-generic scalar loop in [`super::multistate`] already gives
+//! the out-of-order core `N` independent multiply/refill chains; this
+//! module takes the remaining step rans_static-style coders take to
+//! reach memory-bound throughput (its `rans_word_sse41` shape): retire
+//! one whole decode round per *vector* instead of per chain.
+//!
+//! One vectorized round over `N` states is three stages:
+//!
+//! 1. **Gather** the `N` fused 8-byte [`DecEntry`] slots addressed by
+//!    `state & (SCALE−1)`. On SSE4.1 there is no gather instruction, so
+//!    the four slots are emulated with four scalar `u64` loads packed
+//!    into vectors (`vpgatherqq`-shaped, materialized as `_mm_set_epi64x`
+//!    pairs); on AVX2 two `vpgatherdd`s fetch the per-entry dword halves
+//!    of all eight slots directly. Either way one `_mm_shuffle_ps`-class
+//!    permute per field splits the entries into `freq`, `bias`, and
+//!    `sym` vectors — [`DecEntry`]'s explicit zeroed padding is what
+//!    makes the raw 8-byte loads defined behavior.
+//! 2. **Transition** all states at once with a packed 32-bit multiply:
+//!    `state ← freq · (state >> SCALE_BITS) + bias`
+//!    (`_mm_mullo_epi32` / `_mm256_mullo_epi32`; the product provably
+//!    fits 32 bits, see [`super::decode`]).
+//! 3. **Refill** the states that dropped below `2^16` from the shared
+//!    byte cursor: a movemask turns the per-lane `state < 2^16` compare
+//!    into an `N`-bit mask, a 16-entry `pshufb` control table
+//!    ([`REFILL_SHUF`]) routes the next `popcount` 16-bit words to their
+//!    lanes in state order (the wire contract: state 0 refills first),
+//!    and a blend merges them in. `2·popcount` bytes advance the cursor.
+//!
+//! The vector loop runs while a full round's worst-case refill
+//! (`2·N` bytes) is guaranteed in bounds; the tail of the stream — plus
+//! the `count mod N` symbols and all end-of-stream validation — is
+//! handed to the *same* scalar helpers the portable decoder uses
+//! ([`multistate::scalar_rounds`] / [`multistate::finish`]), so the two
+//! paths cannot diverge on validation. Symbol-identity of the vector
+//! rounds themselves is pinned by `rust/tests/rans_differential.rs`
+//! (differential fuzz vs. the scalar loop) and by decoding the
+//! committed golden vectors through every available backend.
+//!
+//! Dispatch is at runtime via `is_x86_feature_detected!` — no wire
+//! format change, no build flags required: 4-state streams use SSE4.1,
+//! 8-state streams use AVX2, and everything falls back to the scalar
+//! loop (non-x86_64 builds compile only the fallback). Forcing a
+//! specific backend (for the differential tests and benchmarks) goes
+//! through [`decode_multistate_with`].
+
+use crate::error::{Error, Result};
+
+use super::freq::{FreqTable, SCALE};
+use super::multistate;
+
+/// A decode implementation the dispatcher can select.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// The portable const-generic scalar loop (always available).
+    Scalar,
+    /// SSE4.1 4-state path: emulated 8-byte gathers + `pmulld` +
+    /// movemask/`pshufb` refill.
+    Sse41,
+    /// AVX2 8-state path: `vpgatherdd` slot fetch + `vpmulld` +
+    /// split-half movemask/`pshufb` refill.
+    Avx2,
+}
+
+impl Backend {
+    /// Human-readable name (benchmark reports, CI job summaries).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Sse41 => "sse4.1",
+            Backend::Avx2 => "avx2",
+        }
+    }
+
+    /// The state count this backend's vector width covers (`None` for
+    /// the scalar loop, which handles every supported count).
+    pub fn states(&self) -> Option<usize> {
+        match self {
+            Backend::Scalar => None,
+            Backend::Sse41 => Some(4),
+            Backend::Avx2 => Some(8),
+        }
+    }
+}
+
+/// True iff `backend` can run on this host (compile target + runtime
+/// CPUID detection).
+pub fn backend_available(backend: Backend) -> bool {
+    match backend {
+        Backend::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        Backend::Sse41 => is_x86_feature_detected!("sse4.1"),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => is_x86_feature_detected!("avx2"),
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => false,
+    }
+}
+
+/// The backend [`super::multistate::decode_multistate`] dispatches to
+/// for `n_states`-state streams on this host.
+pub fn backend_for(n_states: usize) -> Backend {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if n_states == 4 && is_x86_feature_detected!("sse4.1") {
+            return Backend::Sse41;
+        }
+        if n_states == 8 && is_x86_feature_detected!("avx2") {
+            return Backend::Avx2;
+        }
+    }
+    let _ = n_states;
+    Backend::Scalar
+}
+
+/// Decode a 4-state stream with the best available path (SSE4.1 when
+/// the host has it, the scalar loop otherwise).
+pub fn decode4(bytes: &[u8], count: usize, table: &FreqTable) -> Result<Vec<u32>> {
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("sse4.1") {
+        // SAFETY: the sse4.1 target feature was just verified present
+        // at runtime, which is the only precondition of `x86::decode4`.
+        return unsafe { x86::decode4(bytes, count, table) };
+    }
+    multistate::decode_n::<4>(bytes, count, table)
+}
+
+/// Decode an 8-state stream with the best available path (AVX2 when the
+/// host has it, the scalar loop otherwise).
+pub fn decode8(bytes: &[u8], count: usize, table: &FreqTable) -> Result<Vec<u32>> {
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("avx2") {
+        // SAFETY: the avx2 target feature was just verified present at
+        // runtime, which is the only precondition of `x86::decode8`.
+        return unsafe { x86::decode8(bytes, count, table) };
+    }
+    multistate::decode_n::<8>(bytes, count, table)
+}
+
+/// Decode forcing a specific `backend` — the seam the differential
+/// tests and benchmarks pin the dispatcher through, so a builder
+/// without SSE can never silently compare scalar against scalar.
+///
+/// Errors with `Error::Invalid` when the backend is unavailable on this
+/// host or does not cover `n_states` (the SIMD widths are fixed:
+/// SSE4.1 ⇒ 4 states, AVX2 ⇒ 8 states).
+pub fn decode_multistate_with(
+    bytes: &[u8],
+    count: usize,
+    table: &FreqTable,
+    n_states: usize,
+    backend: Backend,
+) -> Result<Vec<u32>> {
+    if let Some(required) = backend.states() {
+        if required != n_states {
+            return Err(Error::invalid(format!(
+                "backend {} decodes {required}-state streams, not {n_states}",
+                backend.name()
+            )));
+        }
+        if !backend_available(backend) {
+            return Err(Error::invalid(format!(
+                "backend {} is not available on this host",
+                backend.name()
+            )));
+        }
+        // The SIMD paths guard their unsafe gathers by falling back to
+        // the scalar loop if the fused table ever failed to span the
+        // slot space; when a backend was *forced*, that silent fallback
+        // would defeat the differential seam — error loudly instead.
+        if table.dec_table().len() != SCALE as usize {
+            return Err(Error::invalid("fused decode table does not span the slot space"));
+        }
+    }
+    match backend {
+        Backend::Scalar => multistate::decode_multistate_scalar(bytes, count, table, n_states),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: availability (runtime CPUID) was checked above for
+        // both SIMD backends; that is their only precondition.
+        Backend::Sse41 => unsafe { x86::decode4(bytes, count, table) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above — avx2 verified present by backend_available.
+        Backend::Avx2 => unsafe { x86::decode8(bytes, count, table) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => unreachable!("non-scalar backends are rejected above on non-x86_64"),
+    }
+}
+
+/// `pshufb` control table for the movemask-driven refill, indexed by
+/// the `need-refill` lane mask `m` (4 bits, so 16 entries — the AVX2
+/// path indexes it twice, once per 128-bit half).
+///
+/// For each 32-bit lane `j` with bit `j` set in `m`, the control routes
+/// source bytes `2k` and `2k+1` (the `k`-th 16-bit stream word, where
+/// `k` is the number of refilling lanes below `j`) into the lane's low
+/// half and zeroes its high half; lanes not refilling are fully zeroed
+/// (`0x80` control bytes) and the subsequent blend keeps their state.
+/// This reproduces the wire contract that refills consume the shared
+/// cursor in state order, `2·popcount(m)` bytes per round.
+#[cfg(any(target_arch = "x86_64", test))]
+const fn refill_shuffles() -> [[u8; 16]; 16] {
+    let mut table = [[0x80u8; 16]; 16];
+    let mut m = 0usize;
+    while m < 16 {
+        let mut next_word = 0u8;
+        let mut lane = 0usize;
+        while lane < 4 {
+            if m & (1 << lane) != 0 {
+                table[m][4 * lane] = 2 * next_word;
+                table[m][4 * lane + 1] = 2 * next_word + 1;
+                next_word += 1;
+            }
+            lane += 1;
+        }
+        m += 1;
+    }
+    table
+}
+
+/// See [`refill_shuffles`].
+#[cfg(any(target_arch = "x86_64", test))]
+static REFILL_SHUF: [[u8; 16]; 16] = refill_shuffles();
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    #![deny(unsafe_op_in_unsafe_fn)]
+
+    use core::arch::x86_64::*;
+
+    use crate::error::Result;
+    use crate::rans::freq::{FreqTable, SCALE, SCALE_BITS};
+    use crate::rans::multistate::{decode_n, finish, read_states, scalar_rounds};
+
+    use super::REFILL_SHUF;
+
+    /// Decode a 4-state stream, vectorizing one round (4 symbols) per
+    /// iteration with SSE4.1.
+    ///
+    /// # Safety
+    ///
+    /// The caller must have verified at runtime that this CPU supports
+    /// `sse4.1` (e.g. via `is_x86_feature_detected!`).
+    #[target_feature(enable = "sse4.1")]
+    pub(super) unsafe fn decode4(
+        bytes: &[u8],
+        count: usize,
+        table: &FreqTable,
+    ) -> Result<Vec<u32>> {
+        let dec = table.dec_table();
+        // Gather-index invariant: the unsafe loads below index the table
+        // with `state & (SCALE−1)`, so it must span the full slot space.
+        // Every FreqTable constructor upholds this, but the SIMD path
+        // must not lean on a debug-only assert — if a future constructor
+        // ever breaks the invariant, take the bounds-checked scalar loop
+        // instead of reading out of bounds in release builds.
+        if dec.len() != SCALE as usize {
+            return decode_n::<4>(bytes, count, table);
+        }
+        let mut states = read_states::<4>(bytes)?;
+        let mut pos = 16usize;
+        // Same untrusted-header reservation cap as the scalar decoder.
+        let mut out: Vec<u32> = Vec::with_capacity(count.min(1 << 20));
+        let entries = dec.as_ptr().cast::<u64>();
+
+        let full_rounds = count / 4;
+        let mut rounds_done = 0usize;
+
+        // SAFETY: `states` is a `[u32; 4]` — exactly the 16 bytes an
+        // unaligned vector load reads.
+        let mut sv = unsafe { _mm_loadu_si128(states.as_ptr().cast()) };
+        let slot_mask = _mm_set1_epi32((SCALE - 1) as i32);
+        let low16 = _mm_set1_epi32(0xFFFF);
+        let zero = _mm_setzero_si128();
+
+        // One round's refill consumes at most 2 bytes per state; run the
+        // vector loop only while that worst case (8 bytes) is in bounds
+        // and let the scalar finisher handle the stream tail.
+        while rounds_done < full_rounds && pos + 8 <= bytes.len() {
+            // Stage 1: gather the four fused 8-byte DecEntry slots.
+            let slots = _mm_and_si128(sv, slot_mask);
+            let mut idx = [0u32; 4];
+            // SAFETY: `idx` is a `[u32; 4]` — exactly 16 writable bytes.
+            unsafe { _mm_storeu_si128(idx.as_mut_ptr().cast(), slots) };
+            // SAFETY: every index is `state & (SCALE−1) < SCALE` and the
+            // fused table holds exactly SCALE 8-byte entries (checked on
+            // entry), all bytes initialized (DecEntry's explicit zero
+            // padding) — so the four u64 loads are in bounds and read
+            // only initialized memory.
+            let (e0, e1, e2, e3) = unsafe {
+                (
+                    *entries.add(idx[0] as usize),
+                    *entries.add(idx[1] as usize),
+                    *entries.add(idx[2] as usize),
+                    *entries.add(idx[3] as usize),
+                )
+            };
+            // Pack into vectors: lane order [e0, e1] / [e2, e3].
+            let lo = _mm_set_epi64x(e1 as i64, e0 as i64);
+            let hi = _mm_set_epi64x(e3 as i64, e2 as i64);
+            // Split each entry into its dword halves (little-endian
+            // DecEntry layout): sf = sym | freq << 16, bp = bias | 0.
+            let sf = _mm_castps_si128(_mm_shuffle_ps::<0b10_00_10_00>(
+                _mm_castsi128_ps(lo),
+                _mm_castsi128_ps(hi),
+            ));
+            let bp = _mm_castps_si128(_mm_shuffle_ps::<0b11_01_11_01>(
+                _mm_castsi128_ps(lo),
+                _mm_castsi128_ps(hi),
+            ));
+            let freq = _mm_srli_epi32::<16>(sf);
+            let sym = _mm_and_si128(sf, low16);
+            let bias = _mm_and_si128(bp, low16);
+
+            // Stage 2: four independent transitions in one packed
+            // multiply — state ← freq · (state >> SCALE_BITS) + bias.
+            let shifted = _mm_srli_epi32::<{ SCALE_BITS as i32 }>(sv);
+            sv = _mm_add_epi32(_mm_mullo_epi32(freq, shifted), bias);
+
+            // Stage 3: movemask-driven refill of states below 2^16.
+            let need = _mm_cmpeq_epi32(_mm_srli_epi32::<16>(sv), zero);
+            let m = _mm_movemask_ps(_mm_castsi128_ps(need)) as usize;
+            // SAFETY: the loop guard holds pos + 8 <= bytes.len(), so
+            // the 8-byte word load is in bounds.
+            let words_raw = unsafe { _mm_loadl_epi64(bytes.as_ptr().add(pos).cast()) };
+            // SAFETY: `m` is a 4-bit movemask (< 16) indexing the
+            // 16-entry control table; each entry is 16 bytes.
+            let ctrl = unsafe { _mm_loadu_si128(REFILL_SHUF[m].as_ptr().cast()) };
+            let words = _mm_shuffle_epi8(words_raw, ctrl);
+            let refilled = _mm_or_si128(_mm_slli_epi32::<16>(sv), words);
+            sv = _mm_blendv_epi8(sv, refilled, need);
+            pos += 2 * m.count_ones() as usize;
+
+            // Emit the round's symbols in state order (the schedule).
+            let mut sy = [0u32; 4];
+            // SAFETY: `sy` is a `[u32; 4]` — exactly 16 writable bytes.
+            unsafe { _mm_storeu_si128(sy.as_mut_ptr().cast(), sym) };
+            out.extend_from_slice(&sy);
+            rounds_done += 1;
+        }
+
+        // SAFETY: `states` is a `[u32; 4]` — exactly 16 writable bytes.
+        unsafe { _mm_storeu_si128(states.as_mut_ptr().cast(), sv) };
+        // Remaining rounds, tail symbols, and all validation run through
+        // the scalar helpers — shared code, shared failure behavior.
+        let remaining = full_rounds - rounds_done;
+        scalar_rounds::<4>(bytes, &mut pos, &mut states, &mut out, remaining, dec)?;
+        finish::<4>(bytes, &mut pos, &mut states, &mut out, count % 4, dec)?;
+        Ok(out)
+    }
+
+    /// Decode an 8-state stream, vectorizing one round (8 symbols) per
+    /// iteration with AVX2.
+    ///
+    /// # Safety
+    ///
+    /// The caller must have verified at runtime that this CPU supports
+    /// `avx2` (e.g. via `is_x86_feature_detected!`).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn decode8(
+        bytes: &[u8],
+        count: usize,
+        table: &FreqTable,
+    ) -> Result<Vec<u32>> {
+        let dec = table.dec_table();
+        // Same release-mode gather-index guard as `decode4` above.
+        if dec.len() != SCALE as usize {
+            return decode_n::<8>(bytes, count, table);
+        }
+        let mut states = read_states::<8>(bytes)?;
+        let mut pos = 32usize;
+        let mut out: Vec<u32> = Vec::with_capacity(count.min(1 << 20));
+        let base = dec.as_ptr().cast::<i32>();
+
+        let full_rounds = count / 8;
+        let mut rounds_done = 0usize;
+
+        // SAFETY: `states` is a `[u32; 8]` — exactly the 32 bytes an
+        // unaligned vector load reads.
+        let mut sv = unsafe { _mm256_loadu_si256(states.as_ptr().cast()) };
+        let slot_mask = _mm256_set1_epi32((SCALE - 1) as i32);
+        let low16 = _mm256_set1_epi32(0xFFFF);
+        let zero = _mm256_setzero_si256();
+
+        // Worst-case refill per round is 2 bytes × 8 states = 16 bytes.
+        while rounds_done < full_rounds && pos + 16 <= bytes.len() {
+            // Stage 1: two dword gathers fetch both halves of all eight
+            // fused entries (base + slot·8 → sym | freq << 16, and
+            // base + slot·8 + 4 → bias; padding is zero).
+            let slots = _mm256_and_si256(sv, slot_mask);
+            // SAFETY: every gathered dword lies inside entry
+            // `slot < SCALE` of the fused table (length checked on
+            // entry, 8 bytes per entry, all bytes initialized), so the
+            // gather at byte offset slot·8 is in bounds.
+            let sf = unsafe { _mm256_i32gather_epi32::<8>(base, slots) };
+            // SAFETY: as above for the entry's second dword at byte
+            // offset slot·8 + 4.
+            let bp = unsafe { _mm256_i32gather_epi32::<8>(base.add(1), slots) };
+            let freq = _mm256_srli_epi32::<16>(sf);
+            let sym = _mm256_and_si256(sf, low16);
+            let bias = _mm256_and_si256(bp, low16);
+
+            // Stage 2: eight transitions in one packed multiply.
+            let shifted = _mm256_srli_epi32::<{ SCALE_BITS as i32 }>(sv);
+            sv = _mm256_add_epi32(_mm256_mullo_epi32(freq, shifted), bias);
+
+            // Stage 3: refill, split into the two 128-bit halves so the
+            // 16-entry shuffle table serves both; the upper half's word
+            // load starts after the bytes the lower half consumes,
+            // preserving the state-order wire contract.
+            let need = _mm256_cmpeq_epi32(_mm256_srli_epi32::<16>(sv), zero);
+            let m = _mm256_movemask_ps(_mm256_castsi256_ps(need)) as usize;
+            let m_lo = m & 0xF;
+            let m_hi = m >> 4;
+            let lo_bytes = 2 * m_lo.count_ones() as usize;
+            // SAFETY: the loop guard holds pos + 16 <= bytes.len(), so
+            // the lower half's 8-byte word load is in bounds.
+            let w_lo = unsafe { _mm_loadl_epi64(bytes.as_ptr().add(pos).cast()) };
+            // SAFETY: lo_bytes ≤ 8 and pos + 16 <= bytes.len(), so the
+            // upper half's 8-byte load at pos + lo_bytes is in bounds.
+            let w_hi = unsafe { _mm_loadl_epi64(bytes.as_ptr().add(pos + lo_bytes).cast()) };
+            // SAFETY: `m_lo` is a 4-bit mask (< 16) indexing the
+            // 16-entry control table; each entry is 16 bytes.
+            let ctrl_lo = unsafe { _mm_loadu_si128(REFILL_SHUF[m_lo].as_ptr().cast()) };
+            // SAFETY: as above for `m_hi` (< 16).
+            let ctrl_hi = unsafe { _mm_loadu_si128(REFILL_SHUF[m_hi].as_ptr().cast()) };
+            let words =
+                _mm256_set_m128i(_mm_shuffle_epi8(w_hi, ctrl_hi), _mm_shuffle_epi8(w_lo, ctrl_lo));
+            let refilled = _mm256_or_si256(_mm256_slli_epi32::<16>(sv), words);
+            sv = _mm256_blendv_epi8(sv, refilled, need);
+            pos += 2 * m.count_ones() as usize;
+
+            let mut sy = [0u32; 8];
+            // SAFETY: `sy` is a `[u32; 8]` — exactly 32 writable bytes.
+            unsafe { _mm256_storeu_si256(sy.as_mut_ptr().cast(), sym) };
+            out.extend_from_slice(&sy);
+            rounds_done += 1;
+        }
+
+        // SAFETY: `states` is a `[u32; 8]` — exactly 32 writable bytes.
+        unsafe { _mm256_storeu_si256(states.as_mut_ptr().cast(), sv) };
+        let remaining = full_rounds - rounds_done;
+        scalar_rounds::<8>(bytes, &mut pos, &mut states, &mut out, remaining, dec)?;
+        finish::<8>(bytes, &mut pos, &mut states, &mut out, count % 8, dec)?;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rans::multistate::{decode_multistate, encode_multistate};
+    use crate::util::prng::Rng;
+
+    fn sample(seed: u64, len: usize, alphabet: usize) -> (Vec<u32>, FreqTable) {
+        let mut rng = Rng::new(seed);
+        let symbols: Vec<u32> = (0..len).map(|_| rng.zipf(alphabet, 1.2) as u32).collect();
+        let table = FreqTable::from_symbols(&symbols, alphabet);
+        (symbols, table)
+    }
+
+    /// The invariant behind every `REFILL_SHUF[m]` unsafe index and the
+    /// movemask-driven byte routing: lane `j` refilling receives the
+    /// `k`-th stream word (k = refilling lanes below j), everything
+    /// else is zeroed, and exactly `2·popcount(m)` source bytes are
+    /// referenced.
+    #[test]
+    fn refill_shuffle_table_routes_words_in_state_order() {
+        assert_eq!(REFILL_SHUF.len(), 16);
+        for (m, ctrl) in REFILL_SHUF.iter().enumerate() {
+            let mut next_word = 0u8;
+            for lane in 0..4 {
+                let b = &ctrl[4 * lane..4 * lane + 4];
+                if m & (1 << lane) != 0 {
+                    assert_eq!(b[0], 2 * next_word, "m={m} lane={lane}");
+                    assert_eq!(b[1], 2 * next_word + 1, "m={m} lane={lane}");
+                    assert_eq!(&b[2..], &[0x80, 0x80], "m={m} lane={lane}");
+                    next_word += 1;
+                } else {
+                    assert_eq!(b, &[0x80; 4], "m={m} lane={lane}");
+                }
+            }
+            assert_eq!(next_word as u32, (m as u32).count_ones(), "m={m}");
+            // Every referenced source byte is within the words actually
+            // consumed this round.
+            for &c in ctrl.iter().filter(|&&c| c & 0x80 == 0) {
+                assert!(c < 2 * next_word, "m={m} control byte {c}");
+            }
+        }
+    }
+
+    /// The gather-index invariant the SIMD loads rely on: the fused
+    /// table spans the full masked slot space for any valid table.
+    #[test]
+    fn dec_table_spans_full_slot_space() {
+        for alphabet in [1usize, 2, 100, 4096] {
+            let symbols: Vec<u32> = (0..alphabet as u32).collect();
+            let table = FreqTable::from_symbols(&symbols, alphabet);
+            assert_eq!(table.dec_table().len(), crate::rans::freq::SCALE as usize);
+        }
+    }
+
+    #[test]
+    fn backend_metadata_is_consistent() {
+        assert!(backend_available(Backend::Scalar));
+        assert_eq!(Backend::Scalar.states(), None);
+        assert_eq!(Backend::Sse41.states(), Some(4));
+        assert_eq!(Backend::Avx2.states(), Some(8));
+        assert_eq!(Backend::Sse41.name(), "sse4.1");
+        // The auto dispatcher only ever picks available backends whose
+        // width matches the stream.
+        for n in [1usize, 2, 4, 8] {
+            let b = backend_for(n);
+            assert!(backend_available(b), "n={n}");
+            if let Some(w) = b.states() {
+                assert_eq!(w, n);
+            }
+        }
+        // Scalar-only state counts never dispatch to SIMD.
+        assert_eq!(backend_for(1), Backend::Scalar);
+        assert_eq!(backend_for(2), Backend::Scalar);
+    }
+
+    #[test]
+    fn forcing_mismatched_or_missing_backends_errors() {
+        let (symbols, table) = sample(1, 64, 16);
+        let bytes = encode_multistate(&symbols, &table, 4).unwrap();
+        // Width mismatch is always an error, available or not.
+        assert!(decode_multistate_with(&bytes, 64, &table, 8, Backend::Sse41).is_err());
+        assert!(decode_multistate_with(&bytes, 64, &table, 4, Backend::Avx2).is_err());
+        // Scalar backend accepts every supported count.
+        assert_eq!(
+            decode_multistate_with(&bytes, 64, &table, 4, Backend::Scalar).unwrap(),
+            symbols
+        );
+        // An unavailable SIMD backend is a loud error, not a silent
+        // scalar fallback.
+        if !backend_available(Backend::Sse41) {
+            assert!(decode_multistate_with(&bytes, 64, &table, 4, Backend::Sse41).is_err());
+        }
+        if !backend_available(Backend::Avx2) {
+            let b8 = encode_multistate(&symbols, &table, 8).unwrap();
+            assert!(decode_multistate_with(&b8, 64, &table, 8, Backend::Avx2).is_err());
+        }
+    }
+
+    /// Every available backend must agree with the scalar loop across
+    /// lengths straddling the round-robin and refill-guard edges.
+    #[test]
+    fn simd_matches_scalar_on_valid_streams() {
+        for (states, backend) in [(4usize, Backend::Sse41), (8, Backend::Avx2)] {
+            for len in [0usize, 1, 3, 7, 8, 9, 31, 1000, 20_011] {
+                for alphabet in [2usize, 64, 300] {
+                    let seed = 41 ^ ((len as u64) << 4) ^ states as u64;
+                    let (symbols, table) = sample(seed, len, alphabet);
+                    let bytes = encode_multistate(&symbols, &table, states).unwrap();
+                    let scalar =
+                        decode_multistate_with(&bytes, len, &table, states, Backend::Scalar)
+                            .unwrap();
+                    assert_eq!(scalar, symbols);
+                    // The auto path must agree whatever it dispatched to.
+                    let auto = decode_multistate(&bytes, len, &table, states).unwrap();
+                    assert_eq!(auto, scalar, "auto states={states} len={len}");
+                    if backend_available(backend) {
+                        let forced =
+                            decode_multistate_with(&bytes, len, &table, states, backend).unwrap();
+                        assert_eq!(forced, scalar, "forced states={states} len={len}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Corrupt streams: SIMD and scalar must agree on acceptance, and
+    /// on the decoded symbols whenever both accept.
+    #[test]
+    fn simd_matches_scalar_on_corrupt_streams() {
+        let mut rng = Rng::new(0x51D);
+        for (states, backend) in [(4usize, Backend::Sse41), (8, Backend::Avx2)] {
+            if !backend_available(backend) {
+                continue;
+            }
+            let (symbols, table) = sample(7 + states as u64, 5000, 40);
+            let bytes = encode_multistate(&symbols, &table, states).unwrap();
+            for _ in 0..200 {
+                let mut bad = bytes.clone();
+                match rng.below(3) {
+                    0 => {
+                        let i = rng.below_usize(bad.len());
+                        bad[i] ^= 1 << rng.below(8);
+                    }
+                    1 => {
+                        let cut = rng.below_usize(bad.len());
+                        bad.truncate(cut);
+                    }
+                    _ => {
+                        bad.push(rng.next_u64() as u8);
+                    }
+                }
+                let scalar =
+                    decode_multistate_with(&bad, symbols.len(), &table, states, Backend::Scalar);
+                let simd = decode_multistate_with(&bad, symbols.len(), &table, states, backend);
+                match (scalar, simd) {
+                    (Ok(a), Ok(b)) => assert_eq!(a, b, "states={states}"),
+                    (Err(_), Err(_)) => {}
+                    (a, b) => panic!(
+                        "backends disagree on acceptance (states={states}): \
+                         scalar ok={} simd ok={}",
+                        a.is_ok(),
+                        b.is_ok()
+                    ),
+                }
+            }
+        }
+    }
+}

@@ -117,10 +117,15 @@ impl EncSymbol {
 /// state = e.freq · (state >> SCALE_BITS) + e.bias
 /// ```
 ///
-/// `align(8)` pads the three `u16`s to an 8-byte stride so entries
-/// never straddle a cache line.
+/// `repr(C, align(8))` pads the three `u16`s to an 8-byte stride so
+/// entries never straddle a cache line — and, with the padding held in
+/// an explicit *zeroed* field, every byte of the entry is initialized,
+/// so the SIMD gather decoder ([`crate::rans::simd`]) may load a whole
+/// slot as one `u64` (little-endian: `sym | freq << 16 | bias << 32`)
+/// without touching uninitialized memory. Construct entries through
+/// [`DecEntry::new`] so the padding invariant can't be skipped.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-#[repr(align(8))]
+#[repr(C, align(8))]
 pub struct DecEntry {
     /// Symbol owning this slot.
     pub sym: u16,
@@ -128,6 +133,16 @@ pub struct DecEntry {
     pub freq: u16,
     /// `slot − F(sym)` ∈ `[0, freq)`.
     pub bias: u16,
+    /// Explicit padding, always zero (see the struct docs).
+    pad: u16,
+}
+
+impl DecEntry {
+    /// Build an entry with the padding zeroed.
+    #[inline]
+    pub const fn new(sym: u16, freq: u16, bias: u16) -> Self {
+        DecEntry { sym, freq, bias, pad: 0 }
+    }
 }
 
 #[cfg(test)]
@@ -205,5 +220,23 @@ mod tests {
     #[test]
     fn dec_entry_is_8_bytes() {
         assert_eq!(std::mem::size_of::<DecEntry>(), 8);
+        assert_eq!(std::mem::align_of::<DecEntry>(), 8);
+    }
+
+    /// The SIMD gather decoder loads entries as little-endian `u64`s
+    /// (`sym | freq << 16 | bias << 32`); the `repr(C)` field order and
+    /// the zeroed explicit padding must uphold that view exactly.
+    #[test]
+    #[cfg(target_endian = "little")]
+    fn dec_entry_u64_view_matches_fields() {
+        for (sym, freq, bias) in [(0u16, 1u16, 0u16), (7, 4095, 4094), (65535, 1, 0)] {
+            let e = DecEntry::new(sym, freq, bias);
+            // SAFETY: DecEntry is repr(C, align(8)), 8 bytes, with every
+            // byte initialized (explicit zero padding), so reading it
+            // back as a u64 is defined.
+            let bits = unsafe { *(&e as *const DecEntry as *const u64) };
+            let expect = sym as u64 | (freq as u64) << 16 | (bias as u64) << 32;
+            assert_eq!(bits, expect, "sym={sym} freq={freq} bias={bias}");
+        }
     }
 }

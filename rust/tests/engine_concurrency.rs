@@ -119,11 +119,12 @@ fn concurrent_roundtrips_through_one_shared_engine() {
                         lanes: 8,
                         parallel: true,
                         reshape: ReshapeStrategy::Optimize,
-                        // Exercise both stream layouts under concurrency.
-                        layout: if i % 2 == 0 {
-                            StreamLayout::V1
-                        } else {
-                            StreamLayout::MultiState(4)
+                        // Exercise all stream layouts (and with them the
+                        // SIMD decode dispatch) under concurrency.
+                        layout: match i % 3 {
+                            0 => StreamLayout::V1,
+                            1 => StreamLayout::MultiState(4),
+                            _ => StreamLayout::MultiState(8),
                         },
                     };
                     let ser = PipelineConfig { parallel: false, ..par.clone() };

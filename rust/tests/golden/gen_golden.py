@@ -324,14 +324,14 @@ def validate_multistate():
         assert rans_encode_multistate(symbols, freq, cdf, 1) == rans_encode_recip(
             symbols, freq, cdf
         ), f"N=1 must be byte-identical to scalar (alphabet={alphabet})"
-        for n in (1, 2, 4):
-            for cut in (0, 1, 2, 3, 4, 5, 7, 8, len(symbols)):
+        for n in (1, 2, 4, 8):
+            for cut in (0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, len(symbols)):
                 part = symbols[:cut]
                 p = rans_encode_multistate(part, freq, cdf, n)
                 assert rans_decode_multistate(p, len(part), freq, cdf, n) == part, (
                     f"multistate roundtrip failed: alphabet={alphabet} n={n} len={cut}"
                 )
-    print("multi-state streams: N=1 == scalar; roundtrips OK for N in {1,2,4}")
+    print("multi-state streams: N=1 == scalar; roundtrips OK for N in {1,2,4,8}")
 
 
 # ----------------------------------------------------- pipeline replica
@@ -491,8 +491,10 @@ def generate_goldens():
             )
 
         # v2 multi-state streams inside the same RSC1 container
-        # (single lane; the multi-lane × multi-state case is below).
-        for n_states in (2, 4):
+        # (single lane; the multi-lane × multi-state cases are below).
+        # N = 8 is the AVX2 SIMD-decoder width; its vectors pin the wire
+        # format the Rust SIMD and scalar decoders must both honor.
+        for n_states in (2, 4, 8):
             p = rans_encode_multistate(d, freq, cdf, n_states)
             assert rans_decode_multistate(p, len(d), freq, cdf, n_states) == d
             stream = assemble_stream_v2(1, n_states, len(d), [p])
@@ -512,6 +514,20 @@ def generate_goldens():
             f"v2s4_q{q}_lanes8.hex",
             container_v1(q, scale_bytes, zero, t, n_rows, nnz, alphabet, freq, stream),
         )
+
+        # Multi-lane × 8-state (one representative case per AVX2 width):
+        # 8 lanes, 8 states per lane, Q = 4 only.
+        if q == 4:
+            payloads = []
+            for lo, hi in lane_spans(len(d), 8):
+                p = rans_encode_multistate(d[lo:hi], freq, cdf, 8)
+                assert rans_decode_multistate(p, hi - lo, freq, cdf, 8) == d[lo:hi]
+                payloads.append(p)
+            stream = assemble_stream_v2(8, 8, len(d), payloads)
+            emit(
+                "v2s8_q4_lanes8.hex",
+                container_v1(q, scale_bytes, zero, t, n_rows, nnz, alphabet, freq, stream),
+            )
 
         n_chunks = max(min((len(d) + chunk_symbols - 1) // chunk_symbols, 1 << 20), 1)
         chunks = []
@@ -545,7 +561,7 @@ def generate_goldens():
         counts[s] += 1
     freq = from_counts(counts)
     cdf = cdf_of(freq)
-    for n_states in (2, 4):
+    for n_states in (2, 4, 8):
         p = rans_encode_multistate(symbols, freq, cdf, n_states)
         assert rans_decode_multistate(p, len(symbols), freq, cdf, n_states) == symbols
         emit(f"raw_ms{n_states}_q4.hex", p)

@@ -38,7 +38,7 @@ fn prop_pipeline_symbol_roundtrip() {
                 1 => ReshapeStrategy::Flat,
                 _ => ReshapeStrategy::Optimize,
             };
-            let states = *rng.choose(&[1usize, 2, 4]);
+            let states = *rng.choose(&[1usize, 2, 4, 8]);
             (data, q, strat, states)
         },
         |(data, q, strat, states)| {

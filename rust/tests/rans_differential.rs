@@ -1,0 +1,345 @@
+//! Differential fuzz wall for the SIMD gather decoder.
+//!
+//! `rust/src/rans/simd.rs` promises that the SSE4.1 (4-state) and AVX2
+//! (8-state) decode paths are *symbol-identical* to the const-generic
+//! scalar loop — on valid streams and on corrupt ones. This suite pins
+//! that promise from outside the crate:
+//!
+//! * seeded-LCG tensors swept over states × lanes × Q × tail counts
+//!   (count < N, count = 0, single-symbol alphabets), decoded through
+//!   the scalar backend, the auto dispatcher, and every force-selected
+//!   SIMD backend the host offers;
+//! * encoder byte-identity against the committed golden vectors (the
+//!   same `raw_ms*.hex` files the Python oracle generated), so the
+//!   streams being differentially decoded are pinned to the wire
+//!   format, not merely self-consistent;
+//! * a mutation fuzzer that flips and truncates bytes of valid v1/v2
+//!   streams and asserts decode never panics, that no backend ever
+//!   returns the original symbols for mutated bytes (encode/decode are
+//!   inverse bijections, so `Ok(original)` would imply the bytes were
+//!   unchanged), and that all backends agree on acceptance and output;
+//! * a dispatch-seam check so this suite can never silently compare
+//!   scalar against scalar on a SIMD-capable builder.
+
+use rans_sc::rans::simd::{self, Backend};
+use rans_sc::rans::{
+    decode_interleaved, decode_multistate, decode_multistate_scalar,
+    encode_interleaved_with_layout, encode_multistate, FreqTable, StreamLayout,
+};
+use rans_sc::testutil;
+
+/// Seeded-LCG symbol tensor — the same generator family the golden
+/// vectors use (`gen_golden.py`), skewed ~50% toward symbol 0.
+fn lcg_symbols(seed: u64, len: usize, alphabet: usize) -> Vec<u32> {
+    let mut lcg = seed;
+    (0..len)
+        .map(|_| {
+            lcg = lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            if (lcg >> 20) & 1 == 0 {
+                0
+            } else {
+                ((lcg >> 33) % alphabet as u64) as u32
+            }
+        })
+        .collect()
+}
+
+/// The SIMD backends of matching width that are runnable on this host.
+fn simd_backends(states: usize) -> Vec<Backend> {
+    [Backend::Sse41, Backend::Avx2]
+        .into_iter()
+        .filter(|b| b.states() == Some(states) && simd::backend_available(*b))
+        .collect()
+}
+
+/// Decode `bytes` through every backend (scalar + available SIMD +
+/// auto), assert they all agree, and return the scalar result.
+fn decode_all_backends(
+    bytes: &[u8],
+    count: usize,
+    table: &FreqTable,
+    states: usize,
+    ctx: &str,
+) -> Result<Vec<u32>, ()> {
+    let scalar = decode_multistate_scalar(bytes, count, table, states);
+    let auto = decode_multistate(bytes, count, table, states);
+    assert_eq!(scalar.is_ok(), auto.is_ok(), "{ctx}: scalar vs auto acceptance");
+    if let (Ok(a), Ok(b)) = (&scalar, &auto) {
+        assert_eq!(a, b, "{ctx}: scalar vs auto symbols");
+    }
+    for backend in simd_backends(states) {
+        let forced = simd::decode_multistate_with(bytes, count, table, states, backend);
+        assert_eq!(
+            scalar.is_ok(),
+            forced.is_ok(),
+            "{ctx}: scalar vs {} acceptance",
+            backend.name()
+        );
+        if let (Ok(a), Ok(b)) = (&scalar, &forced) {
+            assert_eq!(a, b, "{ctx}: scalar vs {} symbols", backend.name());
+        }
+    }
+    scalar.map_err(|_| ())
+}
+
+/// The core sweep: states × Q × tail counts, including count = 0,
+/// count < N, and counts straddling the SIMD loop's byte-budget exit.
+#[test]
+fn simd_and_scalar_decode_identical_across_sweep() {
+    for q in [2u32, 4, 8] {
+        let alphabet = 1usize << q;
+        for states in [4usize, 8] {
+            let counts = [
+                0usize,
+                1,
+                states - 1,
+                states,
+                states + 1,
+                2 * states + 3,
+                997,
+                40_003,
+            ];
+            for count in counts {
+                let seed = 0xD1FF ^ ((q as u64) << 32) ^ ((states as u64) << 16) ^ count as u64;
+                let symbols = lcg_symbols(seed, count, alphabet);
+                let table = FreqTable::from_symbols(&symbols, alphabet);
+                let bytes = encode_multistate(&symbols, &table, states).unwrap();
+                let ctx = format!("q={q} states={states} count={count}");
+                let decoded = decode_all_backends(&bytes, count, &table, states, &ctx)
+                    .expect("valid stream must decode");
+                assert_eq!(decoded, symbols, "{ctx}");
+            }
+        }
+    }
+}
+
+/// Degenerate tables: a single-symbol alphabet (freq == SCALE, decode
+/// never renormalizes — all-SIMD rounds with an empty refill mask) and
+/// an alphabet with a never-seen symbol.
+#[test]
+fn single_symbol_alphabets_decode_identically() {
+    for states in [4usize, 8] {
+        for count in [0usize, 1, 7, 8, 9, 5000] {
+            let symbols = vec![0u32; count];
+            // Alphabet 1: the only symbol owns the whole slot space.
+            let table = FreqTable::from_symbols(&symbols, 1);
+            let bytes = encode_multistate(&symbols, &table, states).unwrap();
+            let ctx = format!("alphabet=1 states={states} count={count}");
+            let decoded = decode_all_backends(&bytes, count, &table, states, &ctx)
+                .expect("valid stream must decode");
+            assert_eq!(decoded, symbols, "{ctx}");
+            // Alphabet 2 with symbol 1 never occurring.
+            let table2 = FreqTable::from_symbols(&symbols, 2);
+            let bytes2 = encode_multistate(&symbols, &table2, states).unwrap();
+            let ctx2 = format!("alphabet=2 states={states} count={count}");
+            let decoded2 = decode_all_backends(&bytes2, count, &table2, states, &ctx2)
+                .expect("valid stream must decode");
+            assert_eq!(decoded2, symbols, "{ctx2}");
+        }
+    }
+}
+
+/// Full lanes × states sweep through the self-describing stream layout
+/// layer — the route the engine's per-lane decode jobs take, so the
+/// SIMD dispatch is exercised behind real v1/v2 framing.
+#[test]
+fn lanes_by_states_sweep_through_layout_layer() {
+    for states in [1usize, 2, 4, 8] {
+        for lanes in [1usize, 2, 3, 8] {
+            for count in [0usize, 3, 17, 10_000] {
+                let symbols = lcg_symbols(0xA5 ^ count as u64, count, 64);
+                let table = FreqTable::from_symbols(&symbols, 64);
+                let layout = if states == 1 {
+                    StreamLayout::V1
+                } else {
+                    StreamLayout::MultiState(states)
+                };
+                let bytes =
+                    encode_interleaved_with_layout(&symbols, &table, lanes, layout, false)
+                        .unwrap();
+                for parallel in [false, true] {
+                    let back = decode_interleaved(&bytes, &table, parallel).unwrap();
+                    assert_eq!(back, symbols, "states={states} lanes={lanes} count={count}");
+                }
+            }
+        }
+    }
+}
+
+/// The anti-scalar-vs-scalar guard: on a SIMD-capable builder the auto
+/// dispatcher must select the SIMD backend, so the differential
+/// assertions above genuinely compared two implementations. (On hosts
+/// without the features the forced paths error loudly instead —
+/// checked in `rans::simd`'s unit tests.)
+#[test]
+fn dispatch_selects_simd_on_capable_hosts() {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("sse4.1") {
+            assert_eq!(simd::backend_for(4), Backend::Sse41);
+            assert_eq!(simd_backends(4), vec![Backend::Sse41]);
+        } else {
+            assert_eq!(simd::backend_for(4), Backend::Scalar);
+        }
+        if is_x86_feature_detected!("avx2") {
+            assert_eq!(simd::backend_for(8), Backend::Avx2);
+            assert_eq!(simd_backends(8), vec![Backend::Avx2]);
+        } else {
+            assert_eq!(simd::backend_for(8), Backend::Scalar);
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        assert_eq!(simd::backend_for(4), Backend::Scalar);
+        assert_eq!(simd::backend_for(8), Backend::Scalar);
+        assert!(simd_backends(4).is_empty() && simd_backends(8).is_empty());
+    }
+    // Scalar-only widths never dispatch to SIMD anywhere.
+    assert_eq!(simd::backend_for(1), Backend::Scalar);
+    assert_eq!(simd::backend_for(2), Backend::Scalar);
+}
+
+/// Encoder byte-identity against the committed golden vectors (the
+/// Python oracle's output) — the streams the differential decode sweep
+/// runs on are thereby pinned to the wire format itself.
+#[test]
+fn encode_matches_committed_golden_vectors() {
+    // The golden tensor replica from gen_golden.py / golden_vectors.rs.
+    let alphabet = 1usize << 4;
+    let mut lcg: u64 = 0xC0FFEE + 4;
+    let symbols: Vec<u32> = (0..4096)
+        .map(|_| {
+            lcg = lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            if ((lcg >> 29) & 7) < 5 {
+                1 // background / zero point
+            } else {
+                ((lcg >> 33) % alphabet as u64) as u32
+            }
+        })
+        .collect();
+    let table = FreqTable::from_symbols(&symbols, alphabet);
+    let goldens: [(usize, &str); 3] = [
+        (2, include_str!("golden/raw_ms2_q4.hex")),
+        (4, include_str!("golden/raw_ms4_q4.hex")),
+        (8, include_str!("golden/raw_ms8_q4.hex")),
+    ];
+    for (states, hex) in goldens {
+        let hex = hex.trim();
+        let golden: Vec<u8> = (0..hex.len() / 2)
+            .map(|i| u8::from_str_radix(&hex[2 * i..2 * i + 2], 16).expect("bad golden hex"))
+            .collect();
+        let encoded = encode_multistate(&symbols, &table, states).unwrap();
+        assert_eq!(encoded, golden, "encoder drifted from golden vector (states={states})");
+        let ctx = format!("golden states={states}");
+        let decoded = decode_all_backends(&golden, symbols.len(), &table, states, &ctx)
+            .expect("golden stream must decode");
+        assert_eq!(decoded, symbols, "{ctx}");
+    }
+}
+
+/// Mutation fuzzer (protocol_fuzz's pattern grown to the rans layer):
+/// flip bytes of valid multi-state streams. Decode must never panic;
+/// no backend may return the *original* symbols for mutated bytes
+/// (encode/decode are inverse bijections — `Ok(original)` with every
+/// end-of-stream check passing would imply the bytes were unchanged);
+/// and all backends must agree on acceptance and output.
+#[test]
+fn mutation_fuzz_bitflips() {
+    testutil::check(
+        "bitflipped multi-state streams",
+        150,
+        |rng| {
+            let states = *rng.choose(&[4usize, 8]);
+            let alphabet = *rng.choose(&[2usize, 16, 256]);
+            let len = 16 + rng.below_usize(3000);
+            let symbols = lcg_symbols(rng.next_u64(), len, alphabet);
+            let table = FreqTable::from_symbols(&symbols, alphabet);
+            let mut bytes = encode_multistate(&symbols, &table, states).unwrap();
+            for _ in 0..1 + rng.below_usize(3) {
+                let i = rng.below_usize(bytes.len());
+                bytes[i] ^= 1 << rng.below(8);
+            }
+            (states, symbols, table, bytes)
+        },
+        |(states, symbols, table, bytes)| {
+            match decode_all_backends(bytes, symbols.len(), table, *states, "bitflip fuzz") {
+                Err(()) => true,
+                // A mutated stream may still decode, but never to the
+                // original symbols (see the bijection argument above).
+                Ok(decoded) => decoded != *symbols,
+            }
+        },
+    );
+}
+
+/// Mutation fuzzer, truncation arm: cutting a valid stream anywhere
+/// must never panic and never reproduce the original symbols; cutting
+/// into the state-word block must be a hard error on every backend.
+#[test]
+fn mutation_fuzz_truncations() {
+    testutil::check(
+        "truncated multi-state streams",
+        150,
+        |rng| {
+            let states = *rng.choose(&[4usize, 8]);
+            let len = 16 + rng.below_usize(2000);
+            let symbols = lcg_symbols(rng.next_u64(), len, 40.min(len));
+            let table = FreqTable::from_symbols(&symbols, 40.min(len));
+            let bytes = encode_multistate(&symbols, &table, states).unwrap();
+            let cut = rng.below_usize(bytes.len());
+            (states, symbols, table, bytes, cut)
+        },
+        |(states, symbols, table, bytes, cut)| {
+            let truncated = &bytes[..*cut];
+            let outcome =
+                decode_all_backends(truncated, symbols.len(), table, *states, "truncation fuzz");
+            if *cut < 4 * states {
+                // Shorter than the state-word block: every backend must
+                // reject outright.
+                outcome.is_err()
+            } else {
+                match outcome {
+                    Err(()) => true,
+                    Ok(decoded) => decoded != *symbols,
+                }
+            }
+        },
+    );
+}
+
+/// The same mutation wall for v1 (scalar) streams through the layout
+/// layer: framing bytes, state words, and renorm bytes all get hit.
+#[test]
+fn mutation_fuzz_framed_streams() {
+    testutil::check(
+        "bitflipped framed v1/v2 streams",
+        100,
+        |rng| {
+            let states = *rng.choose(&[1usize, 2, 4, 8]);
+            let lanes = 1 + rng.below_usize(8);
+            let len = rng.below_usize(4000);
+            let symbols = lcg_symbols(rng.next_u64(), len, 64);
+            let table = FreqTable::from_symbols(&symbols, 64);
+            let layout = if states == 1 {
+                StreamLayout::V1
+            } else {
+                StreamLayout::MultiState(states)
+            };
+            let mut bytes =
+                encode_interleaved_with_layout(&symbols, &table, lanes, layout, false).unwrap();
+            let i = rng.below_usize(bytes.len());
+            bytes[i] ^= 1 << rng.below(8);
+            (symbols, table, bytes)
+        },
+        |(symbols, table, bytes)| {
+            // Must return (not panic); a mutated framed stream may parse
+            // and decode, but only ever to different symbols — the
+            // framing re-derives per-lane counts, and each lane decode
+            // is the bijection argued above.
+            match decode_interleaved(bytes, table, false) {
+                Err(_) => true,
+                Ok(decoded) => decoded != *symbols,
+            }
+        },
+    );
+}

@@ -36,7 +36,7 @@ fn roundtrip_states_by_lanes_by_q() {
     for q in [2u8, 4, 8] {
         let params = QuantParams::fit(q, &data).unwrap();
         let symbols = quantize(&data, &params);
-        for states in [1usize, 2, 4] {
+        for states in [1usize, 2, 4, 8] {
             for lanes in [1usize, 3, 8] {
                 let (bytes, _) = engine
                     .compress_quantized(&symbols, params, &cfg(q, lanes, states, true))
@@ -58,7 +58,7 @@ fn tiny_tensors_where_lanes_outnumber_symbols() {
     let engine = Engine::new(EngineConfig { workers: 2, ..EngineConfig::default() });
     for len in [1usize, 2, 3, 5, 9] {
         let data = synth_tensor(100 + len as u64, len);
-        for states in [2usize, 4] {
+        for states in [2usize, 4, 8] {
             let c = PipelineConfig {
                 q: 4,
                 lanes: 8,
@@ -79,7 +79,7 @@ fn pooled_and_serial_encoders_byte_identical() {
     let data = synth_tensor(2, 20_000);
     let params = QuantParams::fit(4, &data).unwrap();
     let symbols = quantize(&data, &params);
-    for states in [2usize, 4] {
+    for states in [2usize, 4, 8] {
         let (par, _) = engine
             .compress_quantized(&symbols, params, &cfg(4, 8, states, true))
             .unwrap();
@@ -166,11 +166,14 @@ fn corrupt_v2_stream_headers_rejected() {
 #[test]
 fn pipeline_wrappers_accept_v2_streams() {
     // The public pipeline API (shared engine) decodes v2 streams with
-    // no knob, and the layout survives the float roundtrip.
+    // no knob, and the layout survives the float roundtrip (4- and
+    // 8-state payloads take the SIMD decode path where available).
     let data = synth_tensor(4, 6000);
-    let c = PipelineConfig::paper(4).with_states(4);
-    let (bytes, stats) = pipeline::compress(&data, &c).unwrap();
-    assert_eq!(stats.total_bytes, bytes.len());
-    let back = pipeline::decompress(&bytes, true).unwrap();
-    assert_eq!(back.len(), data.len());
+    for states in [4usize, 8] {
+        let c = PipelineConfig::paper(4).with_states(states);
+        let (bytes, stats) = pipeline::compress(&data, &c).unwrap();
+        assert_eq!(stats.total_bytes, bytes.len());
+        let back = pipeline::decompress(&bytes, true).unwrap();
+        assert_eq!(back.len(), data.len(), "states={states}");
+    }
 }

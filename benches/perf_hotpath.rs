@@ -26,6 +26,7 @@ use rans_sc::rans::{
 };
 use rans_sc::reshape::{self, optimizer::OptimizerConfig};
 use rans_sc::sparse::ModCsr;
+use rans_sc::tensor::{narrow_to_half_bits, Dtype, TensorMut, TensorRef};
 use rans_sc::util::json::{ObjBuilder, Value};
 use rans_sc::util::timer::{measure, Measurement};
 
@@ -102,6 +103,13 @@ impl Report {
             // scalar (v2 streams). CI bench-smoke fails if this key
             // goes missing.
             .field("multistate_decode_msym_s", self.msym_of("rans_decode_4state"))
+            // Headline dtype-generic rows: fused bf16 compress (the
+            // Llama2-style edge path — conversion-on-load quantize, no
+            // intermediate f32 Vec) and zero-copy decompress_into a
+            // reused caller buffer. CI bench-smoke fails if either key
+            // goes missing.
+            .field("bf16_compress_msym_s", self.msym_of("bf16_compress"))
+            .field("decode_into_msym_s", self.msym_of("decode_into"))
             // Headline SIMD number: 4-state decode through the runtime
             // dispatcher (SSE4.1 on capable hosts, scalar elsewhere —
             // `simd_backend` records which; `simd8_backend` records the
@@ -151,6 +159,57 @@ fn main() {
         "fit+quantize fused   {:>12}  ({:>8.1} MB/s over f32 input)",
         m.fmt_mean_std(),
         mbps(data.len() * 4, m.mean_ms())
+    );
+
+    // Dtype-generic zero-copy API: bf16 compress (conversion fused into
+    // the quantize loads — the Llama2-style edge hot path) and
+    // decompress_into a reused caller-owned bf16 buffer (no per-request
+    // output allocation).
+    let bf16_bits: Vec<u16> = narrow_to_half_bits(&data, Dtype::Bf16);
+    let steady = Engine::new(EngineConfig::default());
+    let bf16_cfg = PipelineConfig {
+        q,
+        lanes: 8,
+        parallel: pipeline::codec::default_parallelism(),
+        reshape: ReshapeStrategy::Optimize,
+        layout: StreamLayout::V1,
+    };
+    let (bf16_bytes, bf16_stats) = steady
+        .compress_tensor(TensorRef::from_bf16_bits(&bf16_bits), &bf16_cfg)
+        .unwrap();
+    let bf16_fixed = PipelineConfig {
+        reshape: ReshapeStrategy::Fixed(bf16_stats.n_rows),
+        ..bf16_cfg
+    };
+    let m = report.add_syms(
+        "bf16_compress",
+        measure(warmup, trials, || {
+            steady
+                .compress_tensor(TensorRef::from_bf16_bits(&bf16_bits), &bf16_fixed)
+                .unwrap()
+        }),
+        bf16_bits.len(),
+    );
+    println!(
+        "bf16 compress fused  {:>12}  ({} B out, {:>8.1} Msym/s)",
+        m.fmt_mean_std(),
+        bf16_bytes.len(),
+        bf16_bits.len() as f64 / 1e6 / (m.mean_ms() / 1e3)
+    );
+    let mut bf16_out = vec![0u16; bf16_bits.len()];
+    let m = report.add_syms(
+        "decode_into",
+        measure(warmup, trials, || {
+            steady
+                .decompress_into(&bf16_bytes, TensorMut::from_bf16_bits(&mut bf16_out))
+                .unwrap()
+        }),
+        bf16_bits.len(),
+    );
+    println!(
+        "decode_into bf16     {:>12}  ({:>8.1} Msym/s, caller buffer reused)",
+        m.fmt_mean_std(),
+        bf16_bits.len() as f64 / 1e6 / (m.mean_ms() / 1e3)
     );
 
     let best = reshape::optimize(&symbols, params.zero_symbol(), &OptimizerConfig::paper(q))
@@ -303,7 +362,7 @@ fn main() {
     );
     let m = report.add(
         "engine_e2e_decode",
-        measure(warmup, trials, || engine.decompress_to_symbols(&bytes, true).unwrap()),
+        measure(warmup, trials, || engine.decompress_to_symbols(&bytes).unwrap()),
     );
     println!("engine e2e decode    {:>12}", m.fmt_mean_std());
 
@@ -324,7 +383,7 @@ fn main() {
     );
     let m = report.add(
         "engine_v2_decode",
-        measure(warmup, trials, || engine_v2.decompress_to_symbols(&bytes_v2, true).unwrap()),
+        measure(warmup, trials, || engine_v2.decompress_to_symbols(&bytes_v2).unwrap()),
     );
     println!("engine v2 decode     {:>12}", m.fmt_mean_std());
 
@@ -341,7 +400,7 @@ fn main() {
     );
     let m = report.add(
         "pipeline_e2e_decode",
-        measure(warmup, trials, || pipeline::decompress_to_symbols(&bytes, true).unwrap()),
+        measure(warmup, trials, || pipeline::decompress_to_symbols(&bytes).unwrap()),
     );
     println!("pipeline e2e decode  {:>12}", m.fmt_mean_std());
 

@@ -8,7 +8,9 @@
 //! constant across tasks/Q.
 //!
 //! Requires artifacts. Run: `cargo bench --bench table3_llm`
-//! Env: `RANS_SC_EVAL_N` items per task (default 24).
+//! Env: `RANS_SC_EVAL_N` items per task (default 24);
+//! `RANS_SC_EVAL_DTYPE` wire dtype for the features (`f32` default,
+//! `bf16` for the Llama2-style half-precision path, `f16`).
 
 use std::sync::Arc;
 
@@ -16,10 +18,15 @@ use rans_sc::channel::OutageChannel;
 use rans_sc::data::McTask;
 use rans_sc::eval::lm_task_sweep;
 use rans_sc::runtime::{Engine, ExecPool, LmSplitExec, Manifest};
+use rans_sc::tensor::Dtype;
 
 fn main() {
     let dir = std::env::var("RANS_SC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let n: usize = std::env::var("RANS_SC_EVAL_N").ok().and_then(|s| s.parse().ok()).unwrap_or(24);
+    let dtype = std::env::var("RANS_SC_EVAL_DTYPE")
+        .ok()
+        .map(|s| Dtype::parse(&s).expect("RANS_SC_EVAL_DTYPE"))
+        .unwrap_or(Dtype::F32);
     let manifest = match Manifest::load(&dir) {
         Ok(m) => m,
         Err(e) => {
@@ -30,7 +37,9 @@ fn main() {
     let engine = Arc::new(Engine::cpu().expect("pjrt"));
     let pool = ExecPool::new(engine, dir.as_str());
     let channel = OutageChannel::paper_default();
-    println!("# Table 3 — Llama-Mini MC sweep ({n} items/task, ε-outage T_comm)");
+    println!(
+        "# Table 3 — Llama-Mini MC sweep ({n} items/task, {dtype} features, ε-outage T_comm)"
+    );
 
     for lm in &manifest.lm {
         let exec = LmSplitExec::load(&pool, &manifest, &lm.name).expect("lm exec");
@@ -41,8 +50,8 @@ fn main() {
         );
         for tf in &lm.tasks {
             let task = McTask::load(manifest.resolve(&tf.path)).expect("task bin");
-            let rows =
-                lm_task_sweep(&exec, &task, &tf.name, &[2, 4, 6, 8], n, &channel).expect("sweep");
+            let rows = lm_task_sweep(&exec, &task, &tf.name, &[2, 4, 6, 8], n, &channel, dtype)
+                .expect("sweep");
             let base_t = rows[0].t_comm_ms;
             for r in &rows {
                 let q = r.q.map(|v| v.to_string()).unwrap_or_else(|| "base".into());

@@ -21,7 +21,7 @@ fn main() -> rans_sc::Result<()> {
         let (bytes, stats) = compress(&data, &cfg)?;
         let enc_ms = t0.elapsed().as_secs_f64() * 1e3;
         let t1 = std::time::Instant::now();
-        let restored = decompress(&bytes, true)?;
+        let restored = decompress(&bytes)?;
         let dec_ms = t1.elapsed().as_secs_f64() * 1e3;
         let max_err = data
             .iter()

@@ -162,7 +162,7 @@ fn main() -> rans_sc::Result<()> {
                         .and_then(|(syms, p)| {
                             let cfg = rans_sc::pipeline::PipelineConfig::paper(Q);
                             let (c, _) = rans_sc::pipeline::compress_quantized(&syms, p, &cfg)?;
-                            let (s2, p2) = rans_sc::pipeline::decompress_to_symbols(&c, true)?;
+                            let (s2, p2) = rans_sc::pipeline::decompress_to_symbols(&c)?;
                             exec.run_tail(&s2, &p2)
                         }) {
                         Ok(logits) => {

@@ -9,6 +9,7 @@ use std::path::Path;
 
 use crate::channel::ChannelParams;
 use crate::error::{Error, Result};
+use crate::tensor::Dtype;
 use crate::util::json::{self, ObjBuilder, Value};
 
 /// Top-level application configuration.
@@ -31,7 +32,12 @@ pub struct AppConfig {
     /// unlock the SSE4.1/AVX2 SIMD decode paths where the host has
     /// them).
     pub states: usize,
-    /// Thread the rANS lanes.
+    /// Element type of the intermediate features shipped edge→cloud
+    /// (`f32`, `f16`, or `bf16` — `--set dtype=bf16` selects the
+    /// Llama2-style half-precision LM path). Containers carry the tag
+    /// on the wire, so decoders need no matching setting.
+    pub dtype: Dtype,
+    /// Thread the rANS lanes on encode.
     pub parallel: bool,
     /// Cloud listen / connect address.
     pub addr: String,
@@ -53,6 +59,7 @@ impl Default for AppConfig {
             q: 4,
             lanes: 8,
             states: 1,
+            dtype: Dtype::F32,
             parallel: true,
             addr: "127.0.0.1:7439".into(),
             channel: ChannelParams::default(),
@@ -108,6 +115,10 @@ impl AppConfig {
                 }
                 self.states = s;
             }
+            "dtype" => {
+                let s = val.as_str().ok_or_else(bad)?;
+                self.dtype = Dtype::parse(s)?;
+            }
             "parallel" => self.parallel = val.as_bool().ok_or_else(bad)?,
             "addr" => self.addr = val.as_str().ok_or_else(bad)?.into(),
             "buckets" => {
@@ -153,6 +164,7 @@ impl AppConfig {
             .field("q", self.q as usize)
             .field("lanes", self.lanes)
             .field("states", self.states)
+            .field("dtype", self.dtype.name())
             .field("parallel", self.parallel)
             .field("addr", self.addr.as_str())
             .field("buckets", self.buckets.clone())
@@ -192,6 +204,17 @@ mod tests {
         assert_eq!(c2.q, c.q);
         assert_eq!(c2.buckets, c.buckets);
         assert_eq!(c2.channel, c.channel);
+        assert_eq!(c2.dtype, c.dtype);
+    }
+
+    #[test]
+    fn dtype_json_roundtrip_non_default() {
+        let mut c = AppConfig::default();
+        c.apply_override("dtype=bf16").unwrap();
+        let text = c.to_json().to_string_pretty();
+        let mut c2 = AppConfig::default();
+        c2.apply_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(c2.dtype, Dtype::Bf16);
     }
 
     #[test]
@@ -206,6 +229,13 @@ mod tests {
         assert_eq!(c.states, 4);
         c.apply_override("states=8").unwrap();
         assert_eq!(c.states, 8);
+        assert_eq!(c.dtype, Dtype::F32);
+        c.apply_override("dtype=bf16").unwrap();
+        assert_eq!(c.dtype, Dtype::Bf16);
+        c.apply_override("dtype=f16").unwrap();
+        assert_eq!(c.dtype, Dtype::F16);
+        c.apply_override("dtype=f32").unwrap();
+        assert_eq!(c.dtype, Dtype::F32);
         assert_eq!(c.q, 6);
         assert_eq!(c.channel.gamma_db, 20.0);
         assert_eq!(c.model, "llama_mini_s");
@@ -220,6 +250,8 @@ mod tests {
         assert!(c.apply_override("q=99").is_err());
         assert!(c.apply_override("states=3").is_err());
         assert!(c.apply_override("states=16").is_err());
+        assert!(c.apply_override("dtype=f64").is_err());
+        assert!(c.apply_override("dtype=half").is_err());
         assert!(c.apply_override("unknown_key=1").is_err());
         assert!(c.apply_override("sl=x").is_err());
     }

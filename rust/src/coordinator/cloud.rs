@@ -9,6 +9,7 @@ use crate::engine::{Engine as CodecEngine, EngineHandle};
 use crate::error::{Error, Result};
 use crate::runtime::{Engine, ExecPool, LmSplitExec, Manifest, VisionSplitExec};
 use crate::telemetry::Registry;
+use crate::tensor::{Dtype, TensorRef};
 use crate::util::timer::Stopwatch;
 
 use super::protocol::{Frame, FrameKind};
@@ -29,8 +30,6 @@ pub struct CloudNode {
     metrics: Arc<Registry>,
     vision_cache: Mutex<HashMap<(String, usize, usize), Arc<VisionSplitExec>>>,
     lm_cache: Mutex<HashMap<String, Arc<LmSplitExec>>>,
-    /// Decode rANS lanes in parallel.
-    pub parallel_decode: bool,
 }
 
 impl CloudNode {
@@ -46,16 +45,15 @@ impl CloudNode {
             metrics: Arc::new(Registry::new()),
             vision_cache: Mutex::new(HashMap::new()),
             lm_cache: Mutex::new(HashMap::new()),
-            parallel_decode: crate::pipeline::codec::default_parallelism(),
         })
     }
 
     /// Decode on a dedicated compression engine instead of the shared
-    /// one (tests and multi-tenant setups). Re-derives
-    /// `parallel_decode` from the new engine's pool; override the field
-    /// afterwards to force a serial decode.
+    /// one (tests and multi-tenant setups). Decode-side threading
+    /// follows that engine's config
+    /// ([`crate::engine::EngineConfig::decode_parallel`]) — there is no
+    /// per-node knob anymore.
     pub fn with_codec_engine(mut self, codec: Arc<CodecEngine>) -> Self {
-        self.parallel_decode = codec.parallel_by_default();
         self.codec = EngineHandle::dedicated(codec);
         self
     }
@@ -93,21 +91,19 @@ impl CloudNode {
         Ok(Arc::clone(entry))
     }
 
-    fn bytes_to_f32s(payload: &[u8]) -> Result<Vec<f32>> {
-        if payload.len() % 4 != 0 {
-            return Err(Error::protocol("raw payload not f32-aligned"));
-        }
-        Ok(payload
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect())
+    /// Widen a raw frame payload of `dtype` elements to the `f32`
+    /// vector the tail artifacts consume (element-wise, straight off
+    /// the borrowed wire bytes).
+    fn bytes_to_f32s(dtype: Dtype, payload: &[u8]) -> Result<Vec<f32>> {
+        TensorRef::from_le_bytes(dtype, payload)
+            .map(|t| t.to_f32_vec())
+            .map_err(|e| Error::protocol(format!("raw payload: {e}")))
     }
 
     fn infer_vision(&self, model: &str, sl: usize, batch: usize, payload: &[u8]) -> Result<FrameKind> {
         let exec = self.vision_exec(model, sl, batch)?;
         let sw = Stopwatch::new();
-        let (symbols, params) =
-            self.codec.get().decompress_to_symbols(payload, self.parallel_decode)?;
+        let (symbols, params) = self.codec.get().decompress_to_symbols(payload)?;
         let decode_ms = sw.elapsed_ms();
         let sw = Stopwatch::new();
         let logits = exec.run_tail(&symbols, &params)?;
@@ -118,10 +114,17 @@ impl CloudNode {
         Ok(FrameKind::Logits { data: logits, decode_ms: decode_ms as f32, compute_ms: compute_ms as f32 })
     }
 
-    fn infer_vision_raw(&self, model: &str, sl: usize, batch: usize, payload: &[u8]) -> Result<FrameKind> {
+    fn infer_vision_raw(
+        &self,
+        model: &str,
+        sl: usize,
+        batch: usize,
+        dtype: Dtype,
+        payload: &[u8],
+    ) -> Result<FrameKind> {
         let exec = self.vision_exec(model, sl, batch)?;
         let sw = Stopwatch::new();
-        let feat = Self::bytes_to_f32s(payload)?;
+        let feat = Self::bytes_to_f32s(dtype, payload)?;
         let decode_ms = sw.elapsed_ms();
         let sw = Stopwatch::new();
         let logits = exec.run_tail_raw(&feat)?;
@@ -133,8 +136,7 @@ impl CloudNode {
     fn infer_lm(&self, model: &str, payload: &[u8]) -> Result<FrameKind> {
         let exec = self.lm_exec(model)?;
         let sw = Stopwatch::new();
-        let (symbols, params) =
-            self.codec.get().decompress_to_symbols(payload, self.parallel_decode)?;
+        let (symbols, params) = self.codec.get().decompress_to_symbols(payload)?;
         let decode_ms = sw.elapsed_ms();
         let sw = Stopwatch::new();
         let logits = exec.run_tail(&symbols, &params)?;
@@ -145,9 +147,9 @@ impl CloudNode {
         Ok(FrameKind::Logits { data: logits, decode_ms: decode_ms as f32, compute_ms: compute_ms as f32 })
     }
 
-    fn infer_lm_raw(&self, model: &str, payload: &[u8]) -> Result<FrameKind> {
+    fn infer_lm_raw(&self, model: &str, dtype: Dtype, payload: &[u8]) -> Result<FrameKind> {
         let exec = self.lm_exec(model)?;
-        let hidden = Self::bytes_to_f32s(payload)?;
+        let hidden = Self::bytes_to_f32s(dtype, payload)?;
         let sw = Stopwatch::new();
         let logits = exec.run_tail_raw(&hidden)?;
         let compute_ms = sw.elapsed_ms();
@@ -163,11 +165,13 @@ impl CloudNode {
             FrameKind::InferVision { model, sl, batch, payload } => {
                 self.infer_vision(model, *sl, *batch, payload)
             }
-            FrameKind::InferVisionRaw { model, sl, batch, payload } => {
-                self.infer_vision_raw(model, *sl, *batch, payload)
+            FrameKind::InferVisionRaw { model, sl, batch, dtype, payload } => {
+                self.infer_vision_raw(model, *sl, *batch, *dtype, payload)
             }
             FrameKind::InferLm { model, payload } => self.infer_lm(model, payload),
-            FrameKind::InferLmRaw { model, payload } => self.infer_lm_raw(model, payload),
+            FrameKind::InferLmRaw { model, dtype, payload } => {
+                self.infer_lm_raw(model, *dtype, payload)
+            }
             FrameKind::Stats => Ok(FrameKind::StatsReply {
                 json: self.metrics.snapshot().to_string_compact(),
             }),

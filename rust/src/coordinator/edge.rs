@@ -15,8 +15,10 @@ use crate::channel::OutageChannel;
 use crate::engine::{Engine, EngineHandle};
 use crate::error::{Error, Result};
 use crate::pipeline::{CompressStats, PipelineConfig, StreamLayout};
+use crate::quant::{self, QuantParams};
 use crate::runtime::{LmSplitExec, VisionSplitExec};
 use crate::telemetry::{LatencyBreakdown, Registry};
+use crate::tensor::{Dtype, TensorRef};
 use crate::util::timer::Stopwatch;
 
 use super::protocol::{Frame, FrameKind};
@@ -43,6 +45,12 @@ pub struct EdgeConfig {
     /// [`StreamLayout`]). The cloud side needs no matching knob — the
     /// stream is self-describing.
     pub layout: StreamLayout,
+    /// Element type of the features this edge ships
+    /// ([`Dtype::F32`] default). The feature-level entry points
+    /// ([`LmEdgeNode::infer_features`], [`LmEdgeNode::infer_raw_features`])
+    /// validate their tensors against it; containers carry the tag on
+    /// the wire, so the cloud side again needs no knob.
+    pub dtype: Dtype,
 }
 
 impl EdgeConfig {
@@ -56,7 +64,14 @@ impl EdgeConfig {
             lanes: 8,
             parallel: crate::pipeline::codec::default_parallelism(),
             layout: StreamLayout::V1,
+            dtype: Dtype::F32,
         }
+    }
+
+    /// This configuration shipping `dtype` features (the Llama2-style
+    /// LM path uses `bf16`).
+    pub fn with_dtype(self, dtype: Dtype) -> Self {
+        EdgeConfig { dtype, ..self }
     }
 }
 
@@ -202,6 +217,7 @@ impl<T: Transport> EdgeNode<T> {
             model: self.cfg.model.clone(),
             sl: self.cfg.sl,
             batch: self.cfg.batch,
+            dtype: Dtype::F32,
             payload,
         })?;
         let (logits, decode_ms, compute_ms) = expect_logits(reply)?;
@@ -282,11 +298,58 @@ impl<T: Transport> LmEdgeNode<T> {
         Ok(reply)
     }
 
-    /// Compressed LM inference over one tokenized choice batch.
-    pub fn infer(&self, tokens: &[i32]) -> Result<InferOutcome> {
-        let sw = Stopwatch::new();
-        let (symbols, params) = self.exec.run_head(tokens, self.cfg.q)?;
-        let reshape = self.plan_cache.strategy(&symbols, &params)?;
+    /// Reject tensors whose dtype disagrees with [`EdgeConfig::dtype`]
+    /// (shared by both feature-level entry points).
+    fn check_dtype(&self, features: &TensorRef<'_>) -> Result<()> {
+        if features.dtype() != self.cfg.dtype {
+            return Err(Error::invalid(format!(
+                "edge configured for {} features, got {}",
+                self.cfg.dtype,
+                features.dtype()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Ship one request frame (whose link payload is `payload_bytes`
+    /// long) and fold the logits reply into an [`InferOutcome`] — the
+    /// single definition of the outcome/breakdown assembly all four
+    /// inference entry points share.
+    fn ship(
+        &self,
+        kind: FrameKind,
+        encode_ms: f64,
+        payload_bytes: usize,
+        stats: Option<CompressStats>,
+    ) -> Result<InferOutcome> {
+        let transfer_ms = self.channel.comm_latency_ms(payload_bytes);
+        let reply = self.roundtrip(kind)?;
+        let (logits, decode_ms, compute_ms) = expect_logits(reply)?;
+        Ok(InferOutcome {
+            logits,
+            breakdown: LatencyBreakdown {
+                queue_ms: 0.0,
+                encode_ms,
+                transfer_ms,
+                decode_ms: decode_ms as f64,
+                compute_ms: compute_ms as f64,
+            },
+            stats,
+            payload_bytes,
+        })
+    }
+
+    /// Compress `symbols` (originating from a `dtype` tensor) through
+    /// the plan cache + engine and ship the container. `sw` was started
+    /// before the head/quantize step so `encode_ms` covers it.
+    fn compress_and_ship(
+        &self,
+        symbols: &[u16],
+        params: QuantParams,
+        dtype: Dtype,
+        sw: Stopwatch,
+    ) -> Result<InferOutcome> {
+        let reshape = self.plan_cache.strategy(symbols, &params)?;
         let pcfg = PipelineConfig {
             q: self.cfg.q,
             lanes: self.cfg.lanes,
@@ -295,56 +358,82 @@ impl<T: Transport> LmEdgeNode<T> {
             layout: self.cfg.layout,
         };
         let (container, stats) =
-            self.engine.get().compress_quantized(&symbols, params, &pcfg)?;
+            self.engine.get().compress_quantized_dtype(symbols, params, dtype, &pcfg)?;
         let encode_ms = sw.elapsed_ms();
         let payload_bytes = container.len();
-        let transfer_ms = self.channel.comm_latency_ms(payload_bytes);
-        let reply = self.roundtrip(FrameKind::InferLm {
-            model: self.cfg.model.clone(),
-            payload: container,
-        })?;
-        let (logits, decode_ms, compute_ms) = expect_logits(reply)?;
-        Ok(InferOutcome {
-            logits,
-            breakdown: LatencyBreakdown {
-                queue_ms: 0.0,
-                encode_ms,
-                transfer_ms,
-                decode_ms: decode_ms as f64,
-                compute_ms: compute_ms as f64,
-            },
-            stats: Some(stats),
+        self.ship(
+            FrameKind::InferLm { model: self.cfg.model.clone(), payload: container },
+            encode_ms,
             payload_bytes,
-        })
+            Some(stats),
+        )
     }
 
-    /// Uncompressed baseline LM inference.
+    /// Compressed LM inference over one tokenized choice batch (the
+    /// head artifact emits f32-derived AIQ symbols).
+    pub fn infer(&self, tokens: &[i32]) -> Result<InferOutcome> {
+        let sw = Stopwatch::new();
+        let (symbols, params) = self.exec.run_head(tokens, self.cfg.q)?;
+        self.compress_and_ship(&symbols, params, Dtype::F32, sw)
+    }
+
+    /// Compressed LM inference over a caller-provided feature tensor —
+    /// the dtype-generic edge entry point for half-precision (Llama2-
+    /// style) hidden states. The borrowed tensor is quantized with
+    /// conversion fused into the load
+    /// ([`quant::fit_and_quantize_tensor`]): **no intermediate `f32`
+    /// `Vec` is allocated on the quantize path for any dtype**. The
+    /// emitted container carries the tensor's dtype tag, which the
+    /// cloud decoder sniffs. Errors when the tensor's dtype disagrees
+    /// with [`EdgeConfig::dtype`].
+    pub fn infer_features(&self, features: TensorRef<'_>) -> Result<InferOutcome> {
+        self.check_dtype(&features)?;
+        let sw = Stopwatch::new();
+        let (params, symbols) = quant::fit_and_quantize_tensor(self.cfg.q, &features)?;
+        self.compress_and_ship(&symbols, params, features.dtype(), sw)
+    }
+
+    /// Uncompressed baseline over a caller-provided feature tensor: the
+    /// raw little-endian bytes of the tensor's dtype cross the link
+    /// (half-precision halves the baseline's wire bytes). Errors when
+    /// the tensor's dtype disagrees with [`EdgeConfig::dtype`], so the
+    /// baseline measures the same deployment the compressed path does.
+    pub fn infer_raw_features(&self, features: TensorRef<'_>) -> Result<InferOutcome> {
+        self.check_dtype(&features)?;
+        let sw = Stopwatch::new();
+        let payload = features.to_le_bytes();
+        let encode_ms = sw.elapsed_ms();
+        let payload_bytes = payload.len();
+        self.ship(
+            FrameKind::InferLmRaw {
+                model: self.cfg.model.clone(),
+                dtype: features.dtype(),
+                payload,
+            },
+            encode_ms,
+            payload_bytes,
+            None,
+        )
+    }
+
+    /// Uncompressed baseline LM inference (f32 hidden states from the
+    /// head artifact; `encode_ms` covers head compute + serialization,
+    /// matching the compressed path's head + pipeline timing).
     pub fn infer_raw(&self, tokens: &[i32]) -> Result<InferOutcome> {
         let sw = Stopwatch::new();
         let hidden = self.exec.run_head_raw(tokens)?;
-        let mut payload = Vec::with_capacity(hidden.len() * 4);
-        for &x in &hidden {
-            payload.extend_from_slice(&x.to_le_bytes());
-        }
+        let payload = TensorRef::from_f32(&hidden).to_le_bytes();
         let encode_ms = sw.elapsed_ms();
         let payload_bytes = payload.len();
-        let transfer_ms = self.channel.comm_latency_ms(payload_bytes);
-        let reply = self.roundtrip(FrameKind::InferLmRaw {
-            model: self.cfg.model.clone(),
-            payload,
-        })?;
-        let (logits, decode_ms, compute_ms) = expect_logits(reply)?;
-        Ok(InferOutcome {
-            logits,
-            breakdown: LatencyBreakdown {
-                queue_ms: 0.0,
-                encode_ms,
-                transfer_ms,
-                decode_ms: decode_ms as f64,
-                compute_ms: compute_ms as f64,
+        self.ship(
+            FrameKind::InferLmRaw {
+                model: self.cfg.model.clone(),
+                dtype: Dtype::F32,
+                payload,
             },
-            stats: None,
+            encode_ms,
             payload_bytes,
-        })
+            None,
+        )
     }
 }

@@ -9,10 +9,18 @@
 //!
 //! Strings are varint-length-prefixed UTF-8; byte blobs are
 //! varint-length-prefixed. The compressed IF payload is the
-//! self-describing pipeline container, so the cloud side needs no
-//! per-request metadata beyond the model route.
+//! self-describing pipeline container (including its dtype tag), so the
+//! cloud side needs no per-request metadata beyond the model route.
+//!
+//! Raw (uncompressed) frames carry a one-byte element-type tag
+//! ([`Dtype::tag`]) ahead of the payload. When that byte was added the
+//! raw frame tags were retired and reissued (3 → 11, 5 → 12), so a
+//! mixed-version edge/cloud pair fails with an explicit
+//! "peer predates dtype tagging" error instead of misparsing the
+//! shifted body.
 
 use crate::error::{Error, Result};
+use crate::tensor::Dtype;
 use crate::util::{crc32, varint};
 
 /// Maximum accepted frame body (64 MiB) — guards the allocator against
@@ -37,7 +45,8 @@ pub enum FrameKind {
         /// Pipeline container bytes.
         payload: Vec<u8>,
     },
-    /// Vision inference, uncompressed baseline: raw f32 feature bytes.
+    /// Vision inference, uncompressed baseline: raw feature bytes of
+    /// the declared element type.
     InferVisionRaw {
         /// Manifest model name.
         model: String,
@@ -45,10 +54,15 @@ pub enum FrameKind {
         sl: usize,
         /// Batch.
         batch: usize,
-        /// Little-endian f32 feature tensor.
+        /// Element type of `payload` (f32 for the classic baseline;
+        /// f16/bf16 halve the raw link bytes for half-precision heads).
+        dtype: Dtype,
+        /// Little-endian feature tensor.
         payload: Vec<u8>,
     },
-    /// LM inference: compressed hidden-state container.
+    /// LM inference: compressed hidden-state container. The container
+    /// is self-describing (including its dtype tag), so no per-request
+    /// metadata rides here.
     InferLm {
         /// Manifest model name.
         model: String,
@@ -59,7 +73,10 @@ pub enum FrameKind {
     InferLmRaw {
         /// Manifest model name.
         model: String,
-        /// Little-endian f32 hidden states.
+        /// Element type of `payload` — bf16 is the Llama2-style wire
+        /// format for raw hidden states.
+        dtype: Dtype,
+        /// Little-endian hidden states.
         payload: Vec<u8>,
     },
     /// Successful inference reply: logits plus the cloud-side latency
@@ -119,6 +136,14 @@ fn write_bytes(buf: &mut Vec<u8>, b: &[u8]) {
     buf.extend_from_slice(b);
 }
 
+fn read_dtype(buf: &[u8], pos: &mut usize) -> Result<Dtype> {
+    let tag = *buf
+        .get(*pos)
+        .ok_or_else(|| Error::protocol("dtype tag truncated"))?;
+    *pos += 1;
+    Dtype::from_tag(tag).map_err(|_| Error::protocol(format!("bad dtype tag {tag}")))
+}
+
 fn read_bytes(buf: &[u8], pos: &mut usize) -> Result<Vec<u8>> {
     let len = varint::read_usize(buf, pos)?;
     let end = pos.checked_add(len).filter(|&e| e <= buf.len())
@@ -143,11 +168,12 @@ impl Frame {
                 varint::write_usize(&mut body, *batch);
                 write_bytes(&mut body, payload);
             }
-            FrameKind::InferVisionRaw { model, sl, batch, payload } => {
-                body.push(3);
+            FrameKind::InferVisionRaw { model, sl, batch, dtype, payload } => {
+                body.push(11);
                 write_str(&mut body, model);
                 varint::write_usize(&mut body, *sl);
                 varint::write_usize(&mut body, *batch);
+                body.push(dtype.tag());
                 write_bytes(&mut body, payload);
             }
             FrameKind::InferLm { model, payload } => {
@@ -155,9 +181,10 @@ impl Frame {
                 write_str(&mut body, model);
                 write_bytes(&mut body, payload);
             }
-            FrameKind::InferLmRaw { model, payload } => {
-                body.push(5);
+            FrameKind::InferLmRaw { model, dtype, payload } => {
+                body.push(12);
                 write_str(&mut body, model);
+                body.push(dtype.tag());
                 write_bytes(&mut body, payload);
             }
             FrameKind::Logits { data, decode_ms, compute_ms } => {
@@ -200,25 +227,40 @@ impl Frame {
         let kind = match tag {
             0 => FrameKind::Ping,
             1 => FrameKind::Pong,
-            2 | 3 => {
+            2 => {
                 let model = read_str(body, &mut pos)?;
                 let sl = varint::read_usize(body, &mut pos)?;
                 let batch = varint::read_usize(body, &mut pos)?;
                 let payload = read_bytes(body, &mut pos)?;
-                if tag == 2 {
-                    FrameKind::InferVision { model, sl, batch, payload }
-                } else {
-                    FrameKind::InferVisionRaw { model, sl, batch, payload }
-                }
+                FrameKind::InferVision { model, sl, batch, payload }
             }
-            4 | 5 => {
+            11 => {
+                let model = read_str(body, &mut pos)?;
+                let sl = varint::read_usize(body, &mut pos)?;
+                let batch = varint::read_usize(body, &mut pos)?;
+                let dtype = read_dtype(body, &mut pos)?;
+                let payload = read_bytes(body, &mut pos)?;
+                FrameKind::InferVisionRaw { model, sl, batch, dtype, payload }
+            }
+            4 => {
                 let model = read_str(body, &mut pos)?;
                 let payload = read_bytes(body, &mut pos)?;
-                if tag == 4 {
-                    FrameKind::InferLm { model, payload }
-                } else {
-                    FrameKind::InferLmRaw { model, payload }
-                }
+                FrameKind::InferLm { model, payload }
+            }
+            12 => {
+                let model = read_str(body, &mut pos)?;
+                let dtype = read_dtype(body, &mut pos)?;
+                let payload = read_bytes(body, &mut pos)?;
+                FrameKind::InferLmRaw { model, dtype, payload }
+            }
+            // The pre-dtype raw-frame tags: rejected explicitly so a
+            // mixed-version edge/cloud pair fails with a clear message
+            // instead of misparsing the shifted body.
+            3 | 5 => {
+                return Err(Error::protocol(
+                    "raw frame from a peer that predates dtype tagging \
+                     (frame tags 3/5 were retired; upgrade the peer)",
+                ))
             }
             6 => {
                 if pos + 8 > body.len() {
@@ -314,10 +356,17 @@ mod tests {
             model: "m".into(),
             sl: 4,
             batch: 8,
+            dtype: Dtype::F32,
             payload: vec![],
         });
         roundtrip(FrameKind::InferLm { model: "llama_mini_s".into(), payload: vec![9; 100] });
-        roundtrip(FrameKind::InferLmRaw { model: "llama_mini_m".into(), payload: vec![0] });
+        for dtype in [Dtype::F32, Dtype::F16, Dtype::Bf16] {
+            roundtrip(FrameKind::InferLmRaw {
+                model: "llama_mini_m".into(),
+                dtype,
+                payload: vec![0, 1, 2, 3],
+            });
+        }
         roundtrip(FrameKind::Logits {
             data: vec![1.5, -2.5, f32::MIN, f32::MAX],
             decode_ms: 0.25,
@@ -345,6 +394,50 @@ mod tests {
             let mut bad = wire.clone();
             bad[i] ^= 0x01;
             assert!(Frame::from_wire(&bad).is_err(), "flip at {i}");
+        }
+    }
+
+    #[test]
+    fn bad_raw_dtype_tag_rejected() {
+        let f = Frame {
+            request_id: 3,
+            kind: FrameKind::InferLmRaw {
+                model: "m".into(),
+                dtype: Dtype::Bf16,
+                payload: vec![1, 2],
+            },
+        };
+        let mut wire = f.to_wire();
+        // The dtype byte sits right after the varint-framed model name;
+        // corrupt it to an unknown tag and refresh the CRC so only the
+        // dtype validation can object.
+        let body_len = u32::from_le_bytes(wire[0..4].try_into().unwrap()) as usize;
+        let dtype_pos = 4 + 8 + 1 + 1 + 1; // len prefix + id + kind + strlen + "m"
+        assert_eq!(wire[dtype_pos], Dtype::Bf16.tag());
+        wire[dtype_pos] = 9;
+        let crc = crc32::hash(&wire[4..4 + body_len]);
+        wire[4 + body_len..].copy_from_slice(&crc.to_le_bytes());
+        assert!(Frame::from_wire(&wire).is_err());
+    }
+
+    #[test]
+    fn retired_pre_dtype_raw_tags_rejected_explicitly() {
+        // A frame body using the retired tag 5 (old InferLmRaw layout,
+        // no dtype byte) must produce the explicit version-mismatch
+        // error, not a shifted-field misparse.
+        for tag in [3u8, 5] {
+            let mut body = Vec::new();
+            body.extend_from_slice(&7u64.to_le_bytes());
+            body.push(tag);
+            varint::write_usize(&mut body, 1);
+            body.push(b'm');
+            varint::write_usize(&mut body, 4); // old payload length field
+            body.extend_from_slice(&[1, 2, 3, 4]);
+            let err = Frame::from_body(&body).unwrap_err();
+            assert!(
+                err.to_string().contains("predates dtype tagging"),
+                "tag {tag}: {err}"
+            );
         }
     }
 

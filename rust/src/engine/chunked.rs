@@ -10,8 +10,9 @@
 //!
 //! ```text
 //! magic  "RSC2"                    4 bytes
-//! version                         1 byte  (currently 2)
+//! version                         1 byte  (2 = f32, 3 = dtype-tagged)
 //! q                               1 byte
+//! dtype tag                       1 byte  (version 3 only)
 //! scale                           4 bytes f32 LE
 //! zero                            varint (zigzag)
 //! orig_len  T                     varint
@@ -32,16 +33,24 @@
 //! receiver can validate the header as soon as it arrives, then decode
 //! and verify each chunk independently (and in parallel) as payload
 //! bytes stream in, without buffering the whole container first.
+//!
+//! **Dtype tagging** mirrors the v1 container: `f32` tensors keep the
+//! legacy version-2 header byte-identically; f16/bf16 tensors emit
+//! version 3 with a one-byte [`Dtype`] tag after `q`, sniffed by the
+//! decoder.
 
 use crate::error::{Error, Result};
 use crate::quant::QuantParams;
 use crate::rans::FreqTable;
+use crate::tensor::Dtype;
 use crate::util::{crc32, varint};
 
 /// v2 container magic bytes.
 pub const MAGIC_V2: &[u8; 4] = b"RSC2";
-/// v2 container version byte.
+/// Legacy v2 container version byte (implicit `f32` dtype, no tag).
 pub const VERSION_V2: u8 = 2;
+/// Dtype-tagged v2 container version: a [`Dtype::tag`] byte follows `q`.
+pub const VERSION_V2_DTYPED: u8 = 3;
 /// Upper bound on chunks per container (header sanity check).
 pub const MAX_CHUNKS: usize = 1 << 20;
 
@@ -79,6 +88,8 @@ impl Chunk {
 /// Parsed v2 container: shared header + side information + chunk list.
 #[derive(Debug, Clone)]
 pub struct ChunkedContainer {
+    /// Element type of the original tensor (reconstruction target).
+    pub dtype: Dtype,
     /// Quantization parameters used by the encoder.
     pub params: QuantParams,
     /// Original flat length `T`.
@@ -114,6 +125,7 @@ impl ChunkedContainer {
     /// Serialize to bytes.
     pub fn to_bytes(&self) -> Vec<u8> {
         serialize_chunked(
+            self.dtype,
             self.params,
             self.orig_len,
             self.n_rows,
@@ -136,11 +148,24 @@ impl ChunkedContainer {
         if &bytes[0..4] != MAGIC_V2 {
             return Err(Error::corrupt("bad v2 magic"));
         }
-        if bytes[4] != VERSION_V2 {
+        if bytes[4] != VERSION_V2 && bytes[4] != VERSION_V2_DTYPED {
             return Err(Error::corrupt(format!("unsupported v2 version {}", bytes[4])));
         }
         let q = bytes[5];
         let mut pos = 6usize;
+        let dtype = if bytes[4] == VERSION_V2_DTYPED {
+            if pos >= bytes.len() {
+                return Err(Error::corrupt("dtype-tagged v2 header truncated"));
+            }
+            let d = Dtype::from_tag(bytes[pos])?;
+            pos += 1;
+            d
+        } else {
+            Dtype::F32
+        };
+        if pos + 4 > bytes.len() {
+            return Err(Error::corrupt("v2 header truncated"));
+        }
         let scale =
             f32::from_le_bytes([bytes[pos], bytes[pos + 1], bytes[pos + 2], bytes[pos + 3]]);
         pos += 4;
@@ -242,7 +267,7 @@ impl ChunkedContainer {
             return Err(Error::corrupt("trailing bytes after last chunk"));
         }
         let params = QuantParams { q, scale, zero };
-        Ok(ChunkedContainer { params, orig_len, n_rows, nnz, alphabet, table, chunks })
+        Ok(ChunkedContainer { dtype, params, orig_len, n_rows, nnz, alphabet, table, chunks })
     }
 
     /// Decode a single chunk's symbols, verifying its checksum first —
@@ -266,6 +291,7 @@ impl ChunkedContainer {
 /// table (with its 32 KiB fused decode table).
 #[allow(clippy::too_many_arguments)]
 pub fn serialize_chunked(
+    dtype: Dtype,
     params: QuantParams,
     orig_len: usize,
     n_rows: usize,
@@ -276,8 +302,16 @@ pub fn serialize_chunked(
 ) -> Vec<u8> {
     let mut head = Vec::with_capacity(64 + 10 * chunks.len());
     head.extend_from_slice(MAGIC_V2);
-    head.push(VERSION_V2);
-    head.push(params.q);
+    // f32 keeps the legacy version-2 header (byte-identical wire
+    // format); non-f32 tensors emit version 3 with a dtype tag.
+    if dtype == Dtype::F32 {
+        head.push(VERSION_V2);
+        head.push(params.q);
+    } else {
+        head.push(VERSION_V2_DTYPED);
+        head.push(params.q);
+        head.push(dtype.tag());
+    }
     head.extend_from_slice(&params.scale.to_le_bytes());
     varint::write_i64(&mut head, params.zero as i64);
     varint::write_usize(&mut head, orig_len);
@@ -298,6 +332,14 @@ pub fn serialize_chunked(
         out.extend_from_slice(&c.payload);
     }
     out
+}
+
+/// Cheap `(dtype, orig_len)` header peek for the chunked container —
+/// the shared `peek_header` specialized to `RSC2` (both formats carry
+/// the same header prefix, so the parse logic lives in exactly one
+/// place: `pipeline::container`).
+pub(crate) fn peek_dtype_and_len(bytes: &[u8]) -> Result<(Dtype, usize)> {
+    crate::pipeline::container::peek_header(bytes, MAGIC_V2, VERSION_V2, VERSION_V2_DTYPED)
 }
 
 #[cfg(test)]
@@ -329,6 +371,7 @@ mod tests {
             .map(|s| Chunk::new(s.len(), encode(&d[s.clone()], &table).unwrap()))
             .collect();
         let c = ChunkedContainer {
+            dtype: Dtype::F32,
             params: QuantParams { q: 4, scale: 0.5, zero: 0 },
             orig_len: n_rows * 8,
             n_rows,
@@ -338,6 +381,33 @@ mod tests {
             chunks,
         };
         (c, d)
+    }
+
+    #[test]
+    fn dtyped_roundtrip_and_f32_header_unchanged() {
+        let (c32, _) = sample_container(9, 2);
+        let f32_bytes = c32.to_bytes();
+        assert_eq!(f32_bytes[4], VERSION_V2, "f32 keeps the legacy version byte");
+        for dtype in [Dtype::F16, Dtype::Bf16] {
+            let (mut c, d) = sample_container(9, 2);
+            c.dtype = dtype;
+            let bytes = c.to_bytes();
+            assert_eq!(bytes[4], VERSION_V2_DTYPED);
+            assert_eq!(bytes[6], dtype.tag());
+            assert_eq!(bytes.len(), f32_bytes.len() + 1);
+            let back = ChunkedContainer::from_bytes(&bytes).unwrap();
+            assert_eq!(back.dtype, dtype);
+            assert_eq!(peek_dtype_and_len(&bytes).unwrap(), (dtype, c.orig_len));
+            let mut decoded = Vec::new();
+            for i in 0..back.chunks.len() {
+                decoded.extend(back.decode_chunk(i).unwrap());
+            }
+            assert_eq!(decoded, d);
+            // Dtyped truncations error cleanly too.
+            for cut in 0..24 {
+                assert!(ChunkedContainer::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+            }
+        }
     }
 
     #[test]

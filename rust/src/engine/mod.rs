@@ -31,6 +31,17 @@
 //! ILP/SIMD decode — 4- and 8-state lanes pick up the SSE4.1/AVX2
 //! gather decoder where the host has it). Decoders need no knob — the
 //! stream is self-describing.
+//!
+//! The public codec surface is **dtype-generic and zero-copy**:
+//! [`Engine::compress_tensor`] takes a borrowed
+//! [`crate::tensor::TensorRef`] (f32, f16, or bf16) and fuses the
+//! half→f32 conversion into the quantize passes, so half-precision LM
+//! features never materialize an `f32` copy; [`Engine::decompress_into`]
+//! dequantizes straight into a caller-owned
+//! [`crate::tensor::TensorMut`] of the container's (sniffed) dtype,
+//! removing the per-request output allocation. Decode-side threading is
+//! config-carried ([`EngineConfig::decode_parallel`]) instead of a
+//! `parallel: bool` argument on every call.
 
 pub mod chunked;
 pub mod plan_cache;
@@ -41,8 +52,8 @@ pub use plan_cache::PlanCache;
 use std::sync::{Arc, OnceLock};
 
 use crate::error::{Error, Result};
-use crate::pipeline::codec::{CompressStats, PipelineConfig, ReshapeStrategy};
-use crate::pipeline::container::{Container, ContainerRef};
+use crate::pipeline::codec::{CompressStats, DecodeInfo, PipelineConfig, ReshapeStrategy};
+use crate::pipeline::container::{self, Container, ContainerRef};
 use crate::quant::{self, QuantParams};
 use crate::rans::freq::FreqTable;
 use crate::rans::interleaved::{
@@ -51,6 +62,7 @@ use crate::rans::interleaved::{
 use crate::rans::multistate::{decode_multistate, encode_multistate, supported_states};
 use crate::reshape::{self, optimizer::OptimizerConfig};
 use crate::sparse::ModCsr;
+use crate::tensor::{Dtype, TensorMut, TensorRef};
 use crate::util::stats;
 use crate::util::threadpool::ThreadPool;
 
@@ -75,11 +87,22 @@ pub struct EngineConfig {
     pub format: ContainerFormat,
     /// Target symbols per chunk for [`ContainerFormat::ChunkedV2`].
     pub chunk_symbols: usize,
+    /// Decode-side lane/chunk threading. The loose `parallel: bool`
+    /// that used to ride on every `decompress*` call now lives here:
+    /// `None` (the default) adapts to the pool size — threaded exactly
+    /// when the pool has more than one worker — while `Some(b)` forces
+    /// it (tests and latency-sensitive single-request paths).
+    pub decode_parallel: Option<bool>,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { workers: 0, format: ContainerFormat::V1, chunk_symbols: 1 << 16 }
+        EngineConfig {
+            workers: 0,
+            format: ContainerFormat::V1,
+            chunk_symbols: 1 << 16,
+            decode_parallel: None,
+        }
     }
 }
 
@@ -94,6 +117,7 @@ pub struct Engine {
     plans: PlanCache,
     format: ContainerFormat,
     chunk_symbols: usize,
+    decode_parallel: bool,
 }
 
 impl Default for Engine {
@@ -111,6 +135,7 @@ impl Engine {
             plans: PlanCache::new(),
             format: cfg.format,
             chunk_symbols: cfg.chunk_symbols.max(1),
+            decode_parallel: cfg.decode_parallel.unwrap_or(workers > 1),
         }
     }
 
@@ -155,6 +180,14 @@ impl Engine {
     pub fn format(&self) -> ContainerFormat {
         self.format
     }
+
+    /// Whether this engine threads lane/chunk fan-out on decode
+    /// ([`EngineConfig::decode_parallel`], defaulting to "pool has more
+    /// than one worker"). Decode entry points take no per-call flag —
+    /// this is the config-carried setting they consult.
+    pub fn decode_parallel(&self) -> bool {
+        self.decode_parallel
+    }
 }
 
 /// A codec handle held by long-lived components (coordinator nodes):
@@ -192,11 +225,27 @@ impl EngineHandle {
 impl Engine {
     // ------------------------------------------------------------ encode
 
-    /// Compress pre-quantized symbols (the serving hot path).
+    /// Compress pre-quantized symbols (the serving hot path). The
+    /// container is tagged `f32`; symbol producers for half-precision
+    /// models use [`Engine::compress_quantized_dtype`] (or the fused
+    /// [`Engine::compress_tensor`]).
     pub fn compress_quantized(
         &self,
         symbols: &[u16],
         params: QuantParams,
+        cfg: &PipelineConfig,
+    ) -> Result<(Vec<u8>, CompressStats)> {
+        self.compress_quantized_dtype(symbols, params, Dtype::F32, cfg)
+    }
+
+    /// Compress pre-quantized symbols into a container tagged with the
+    /// original tensor's `dtype` (the reconstruction target decoders
+    /// sniff). `f32` emits the legacy byte-identical header.
+    pub fn compress_quantized_dtype(
+        &self,
+        symbols: &[u16],
+        params: QuantParams,
+        dtype: Dtype,
         cfg: &PipelineConfig,
     ) -> Result<(Vec<u8>, CompressStats)> {
         let t = symbols.len();
@@ -246,6 +295,7 @@ impl Engine {
                 // behind its `Arc` (shared with any pooled lane jobs) and
                 // is never deep-copied just to emit bytes.
                 let bytes = ContainerRef {
+                    dtype,
                     params,
                     orig_len: t,
                     n_rows,
@@ -289,7 +339,7 @@ impl Engine {
                 // Borrowed-parts serialization: same no-deep-copy story
                 // as the v1 path above.
                 let bytes = chunked::serialize_chunked(
-                    params, t, n_rows, nnz, alphabet, table.as_ref(), &chunks,
+                    dtype, params, t, n_rows, nnz, alphabet, table.as_ref(), &chunks,
                 );
                 let stats = CompressStats {
                     n_rows,
@@ -306,16 +356,30 @@ impl Engine {
         }
     }
 
-    /// Compress a float tensor (quantization inside): fused min/max fit
-    /// plus divide-free quantize ([`quant::fit_and_quantize`]), then the
-    /// symbol pipeline.
+    /// Compress a dtype-tagged tensor view (quantization inside). This
+    /// is the dtype-generic entry point: the fused
+    /// [`quant::fit_and_quantize_tensor`] converts f16/bf16 elements to
+    /// `f32` on load — two passes over the borrowed storage, **no
+    /// intermediate `f32` `Vec` for any dtype** — then the symbol
+    /// pipeline runs and the container is tagged with the view's dtype.
+    pub fn compress_tensor(
+        &self,
+        tensor: TensorRef<'_>,
+        cfg: &PipelineConfig,
+    ) -> Result<(Vec<u8>, CompressStats)> {
+        let (params, symbols) = quant::fit_and_quantize_tensor(cfg.q, &tensor)?;
+        self.compress_quantized_dtype(&symbols, params, tensor.dtype(), cfg)
+    }
+
+    /// Compress an `f32` tensor — a thin shim over
+    /// [`Engine::compress_tensor`] kept so pre-dtype call sites keep
+    /// compiling (and keep their byte-identical output).
     pub fn compress(
         &self,
         data: &[f32],
         cfg: &PipelineConfig,
     ) -> Result<(Vec<u8>, CompressStats)> {
-        let (params, symbols) = quant::fit_and_quantize(cfg.q, data)?;
-        self.compress_quantized(&symbols, params, cfg)
+        self.compress_tensor(TensorRef::from_f32(data), cfg)
     }
 
     /// Compress with the engine's plan cache resolving the reshape:
@@ -383,26 +447,69 @@ impl Engine {
     // ------------------------------------------------------------ decode
 
     /// Decompress a container (v1 or v2, detected by magic) to quantized
-    /// symbols plus the quantization parameters.
-    pub fn decompress_to_symbols(
-        &self,
-        bytes: &[u8],
-        parallel: bool,
-    ) -> Result<(Vec<u16>, QuantParams)> {
-        if bytes.len() >= 4 && &bytes[0..4] == chunked::MAGIC_V2 {
-            self.decompress_v2(bytes, parallel)
-        } else {
-            self.decompress_v1(bytes, parallel)
-        }
+    /// symbols plus the quantization parameters. Lane/chunk threading
+    /// follows the engine's config-carried setting
+    /// ([`Engine::decode_parallel`]); there is no per-call knob.
+    pub fn decompress_to_symbols(&self, bytes: &[u8]) -> Result<(Vec<u16>, QuantParams)> {
+        let (symbols, params, _) = self.decode_symbols(bytes)?;
+        Ok((symbols, params))
     }
 
-    /// Decompress all the way to floats.
-    pub fn decompress(&self, bytes: &[u8], parallel: bool) -> Result<Vec<f32>> {
-        let (symbols, params) = self.decompress_to_symbols(bytes, parallel)?;
+    /// Decompress all the way to an `f32` vector, whatever the
+    /// container's dtype tag (the quantization grid is dtype-agnostic;
+    /// this is the lossy-reconstruction view of any container). For
+    /// zero-copy decode into a caller buffer of the container's own
+    /// dtype, use [`Engine::decompress_into`].
+    pub fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>> {
+        let (symbols, params) = self.decompress_to_symbols(bytes)?;
         Ok(quant::dequantize(&symbols, &params))
     }
 
-    fn decompress_v1(&self, bytes: &[u8], parallel: bool) -> Result<(Vec<u16>, QuantParams)> {
+    /// Decompress a container straight into a caller-owned output
+    /// buffer — the zero-copy decode path. The buffer's dtype must
+    /// match the container's dtype tag and its capacity must cover the
+    /// decoded element count (both are rejected from the header alone,
+    /// before any rANS work); elements `0..info.elements` are written
+    /// and any tail is left untouched. Returns what was decoded.
+    pub fn decompress_into(
+        &self,
+        bytes: &[u8],
+        mut out: TensorMut<'_>,
+    ) -> Result<DecodeInfo> {
+        // Cheap header peek: reject dtype/capacity mismatches before
+        // paying for CRC validation and the full symbol decode.
+        let (dtype, elements) = if bytes.len() >= 4 && &bytes[0..4] == chunked::MAGIC_V2 {
+            chunked::peek_dtype_and_len(bytes)?
+        } else {
+            container::peek_dtype_and_len(bytes)?
+        };
+        if dtype != out.dtype() {
+            return Err(Error::invalid(format!(
+                "container holds {dtype} elements but the output buffer is {}",
+                out.dtype()
+            )));
+        }
+        if out.len() < elements {
+            return Err(Error::invalid(format!(
+                "output buffer of {} elements too small for {elements} decoded elements",
+                out.len()
+            )));
+        }
+        let (symbols, params, dtype) = self.decode_symbols(bytes)?;
+        quant::dequantize_into(&symbols, &params, &mut out)?;
+        Ok(DecodeInfo { elements: symbols.len(), dtype, params })
+    }
+
+    fn decode_symbols(&self, bytes: &[u8]) -> Result<(Vec<u16>, QuantParams, Dtype)> {
+        if bytes.len() >= 4 && &bytes[0..4] == chunked::MAGIC_V2 {
+            self.decompress_v2(bytes)
+        } else {
+            self.decompress_v1(bytes)
+        }
+    }
+
+    fn decompress_v1(&self, bytes: &[u8]) -> Result<(Vec<u16>, QuantParams, Dtype)> {
+        let parallel = self.decode_parallel;
         let c = Container::from_bytes(bytes)?;
         let parsed = parse_stream_spans(&c.payload)?;
         // The stream's declared symbol count must equal ℓ_D *before* any
@@ -444,7 +551,8 @@ impl Engine {
         shape.reassemble(decoded)
     }
 
-    fn decompress_v2(&self, bytes: &[u8], parallel: bool) -> Result<(Vec<u16>, QuantParams)> {
+    fn decompress_v2(&self, bytes: &[u8]) -> Result<(Vec<u16>, QuantParams, Dtype)> {
+        let parallel = self.decode_parallel;
         let c = ChunkedContainer::from_bytes(bytes)?;
         let shape = DecodedShape::of_v2(&c);
         let use_pool = parallel && c.chunks.len() > 1 && self.pool_size() > 1;
@@ -470,6 +578,7 @@ impl Engine {
 /// between formats.
 #[derive(Clone, Copy)]
 struct DecodedShape {
+    dtype: Dtype,
     params: QuantParams,
     nnz: usize,
     n_rows: usize,
@@ -480,6 +589,7 @@ struct DecodedShape {
 impl DecodedShape {
     fn of_v1(c: &Container) -> Self {
         DecodedShape {
+            dtype: c.dtype,
             params: c.params,
             nnz: c.nnz,
             n_rows: c.n_rows,
@@ -490,6 +600,7 @@ impl DecodedShape {
 
     fn of_v2(c: &ChunkedContainer) -> Self {
         DecodedShape {
+            dtype: c.dtype,
             params: c.params,
             nnz: c.nnz,
             n_rows: c.n_rows,
@@ -499,7 +610,7 @@ impl DecodedShape {
     }
 
     /// Concatenate decoded lane/chunk symbols and rebuild the tensor.
-    fn reassemble(self, decoded: Vec<Vec<u32>>) -> Result<(Vec<u16>, QuantParams)> {
+    fn reassemble(self, decoded: Vec<Vec<u32>>) -> Result<(Vec<u16>, QuantParams, Dtype)> {
         let mut d = Vec::with_capacity(self.ell_d.min(1 << 20));
         for part in decoded {
             d.extend(part);
@@ -513,7 +624,7 @@ impl DecodedShape {
         }
         let csr =
             ModCsr::from_concat(&d, self.nnz, self.n_rows, self.n_cols, self.params.zero_symbol())?;
-        Ok((csr.decode()?, self.params))
+        Ok((csr.decode()?, self.params, self.dtype))
     }
 }
 
@@ -583,7 +694,7 @@ mod tests {
             let (b_ser, s_ser) = engine.compress(&data, &ser).unwrap();
             assert_eq!(b_par, b_ser, "q={q}");
             assert_eq!(s_par.total_bytes, s_ser.total_bytes);
-            let back = engine.decompress(&b_par, true).unwrap();
+            let back = engine.decompress(&b_par).unwrap();
             assert_eq!(back.len(), data.len());
         }
     }
@@ -596,17 +707,22 @@ mod tests {
             workers: 2,
             format: ContainerFormat::ChunkedV2,
             chunk_symbols: 512,
+            // Exercise the forced-serial decode override alongside v1's
+            // pool-adaptive default.
+            decode_parallel: Some(false),
         });
         let cfg = PipelineConfig::paper(4);
         let (b1, _) = v1.compress(&data, &cfg).unwrap();
         let (b2, _) = v2.compress(&data, &cfg).unwrap();
         assert_eq!(&b2[0..4], chunked::MAGIC_V2);
+        assert!(v1.decode_parallel());
+        assert!(!v2.decode_parallel());
         // Either engine decodes either container (magic sniffing).
-        let (s1, p1) = v1.decompress_to_symbols(&b1, true).unwrap();
-        let (s2, p2) = v1.decompress_to_symbols(&b2, true).unwrap();
+        let (s1, p1) = v1.decompress_to_symbols(&b1).unwrap();
+        let (s2, p2) = v1.decompress_to_symbols(&b2).unwrap();
         assert_eq!(s1, s2);
         assert_eq!(p1, p2);
-        let (s3, _) = v2.decompress_to_symbols(&b1, false).unwrap();
+        let (s3, _) = v2.decompress_to_symbols(&b1).unwrap();
         assert_eq!(s1, s3);
     }
 
@@ -617,6 +733,7 @@ mod tests {
             workers: 2,
             format: ContainerFormat::ChunkedV2,
             chunk_symbols: 1000,
+            decode_parallel: None,
         });
         let (bytes, stats) = engine.compress(&data, &PipelineConfig::paper(4)).unwrap();
         let c = ChunkedContainer::from_bytes(&bytes).unwrap();
@@ -638,7 +755,7 @@ mod tests {
             layout: StreamLayout::V1,
         };
         let (bytes, _) = engine.compress(&data, &cfg).unwrap();
-        let back = engine.decompress(&bytes, true).unwrap();
+        let back = engine.decompress(&bytes).unwrap();
         assert_eq!(back.len(), data.len());
     }
 
@@ -666,6 +783,11 @@ mod tests {
     #[test]
     fn multistate_roundtrip_parallel_and_serial_identical() {
         let engine = Engine::new(EngineConfig { workers: 4, ..EngineConfig::default() });
+        let serial = Engine::new(EngineConfig {
+            workers: 4,
+            decode_parallel: Some(false),
+            ..EngineConfig::default()
+        });
         let data = synth(6, 16_384);
         for q in [2u8, 4, 8] {
             for states in [2usize, 4, 8] {
@@ -680,10 +802,10 @@ mod tests {
                 let (b_par, _) = engine.compress(&data, &par).unwrap();
                 let (b_ser, _) = engine.compress(&data, &ser).unwrap();
                 assert_eq!(b_par, b_ser, "q={q} states={states}");
-                // Decoders need no layout knob: both parallel and serial
-                // paths sniff the stream marker.
-                for parallel in [true, false] {
-                    let back = engine.decompress(&b_par, parallel).unwrap();
+                // Decoders need no layout knob: both the threaded and
+                // the forced-serial engines sniff the stream marker.
+                for eng in [&engine, &serial] {
+                    let back = eng.decompress(&b_par).unwrap();
                     assert_eq!(back.len(), data.len());
                 }
             }
@@ -703,8 +825,8 @@ mod tests {
         assert_ne!(b1, b2, "multi-state payload must differ from scalar");
         // Same symbols decode from both; side info is identical.
         assert_eq!(s1.nnz, s2.nnz);
-        let (d1, p1) = engine.decompress_to_symbols(&b1, true).unwrap();
-        let (d2, p2) = engine.decompress_to_symbols(&b2, true).unwrap();
+        let (d1, p1) = engine.decompress_to_symbols(&b1).unwrap();
+        let (d2, p2) = engine.decompress_to_symbols(&b2).unwrap();
         assert_eq!(d1, d2);
         assert_eq!(p1, p2);
     }
@@ -718,13 +840,89 @@ mod tests {
             workers: 2,
             format: ContainerFormat::ChunkedV2,
             chunk_symbols: 512,
+            decode_parallel: None,
         });
         let v1 = engine.compress(&data, &PipelineConfig::paper(4)).unwrap().0;
         let ms =
             engine.compress(&data, &PipelineConfig::paper(4).with_states(4)).unwrap().0;
         assert_eq!(v1, ms, "chunked output must not depend on the lane layout");
-        let back = engine.decompress(&ms, true).unwrap();
+        let back = engine.decompress(&ms).unwrap();
         assert_eq!(back.len(), data.len());
+    }
+
+    #[test]
+    fn dtyped_tensor_roundtrip_through_both_container_formats() {
+        use crate::tensor::half;
+        let data = synth(10, 8192);
+        let bf16: Vec<u16> = data.iter().map(|&x| half::f32_to_bf16(x)).collect();
+        let f16: Vec<u16> = data.iter().map(|&x| half::f32_to_f16(x)).collect();
+        let cfg = PipelineConfig::paper(4);
+        for format in [ContainerFormat::V1, ContainerFormat::ChunkedV2] {
+            let engine = Engine::new(EngineConfig {
+                workers: 2,
+                format,
+                chunk_symbols: 1024,
+                decode_parallel: None,
+            });
+            for (dtype, bits) in [(Dtype::Bf16, &bf16), (Dtype::F16, &f16)] {
+                let tensor = match dtype {
+                    Dtype::Bf16 => TensorRef::from_bf16_bits(bits),
+                    _ => TensorRef::from_f16_bits(bits),
+                };
+                let (bytes, stats) = engine.compress_tensor(tensor, &cfg).unwrap();
+                assert_eq!(stats.total_bytes, bytes.len());
+                let mut out = vec![0u16; bits.len()];
+                let view = match dtype {
+                    Dtype::Bf16 => TensorMut::from_bf16_bits(&mut out),
+                    _ => TensorMut::from_f16_bits(&mut out),
+                };
+                let info = engine.decompress_into(&bytes, view).unwrap();
+                assert_eq!(info.dtype, dtype);
+                assert_eq!(info.elements, bits.len());
+                // Reconstruction error bounded by one quantization step
+                // plus half-dtype rounding.
+                for (i, &b) in out.iter().enumerate() {
+                    let orig = match dtype {
+                        Dtype::Bf16 => half::bf16_to_f32(bits[i]),
+                        _ => half::f16_to_f32(bits[i]),
+                    };
+                    let got = match dtype {
+                        Dtype::Bf16 => half::bf16_to_f32(b),
+                        _ => half::f16_to_f32(b),
+                    };
+                    let tol = info.params.scale * 1.01 + orig.abs() * 0.01 + 1e-5;
+                    assert!((orig - got).abs() <= tol, "{format:?} {dtype} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decompress_into_rejects_mismatch_and_short_buffers() {
+        let engine = Engine::new(EngineConfig { workers: 1, ..EngineConfig::default() });
+        let data = synth(11, 2048);
+        let bf16: Vec<u16> =
+            data.iter().map(|&x| crate::tensor::half::f32_to_bf16(x)).collect();
+        let (bytes, _) = engine
+            .compress_tensor(TensorRef::from_bf16_bits(&bf16), &PipelineConfig::paper(4))
+            .unwrap();
+        // Wrong dtype buffer.
+        let mut f32_out = vec![0.0f32; data.len()];
+        assert!(engine.decompress_into(&bytes, TensorMut::from_f32(&mut f32_out)).is_err());
+        // Short buffer.
+        let mut short = vec![0u16; data.len() - 1];
+        assert!(engine
+            .decompress_into(&bytes, TensorMut::from_bf16_bits(&mut short))
+            .is_err());
+        // Exact-size buffer succeeds; oversize writes a prefix.
+        let mut exact = vec![0u16; data.len()];
+        engine.decompress_into(&bytes, TensorMut::from_bf16_bits(&mut exact)).unwrap();
+        let mut wide = vec![0xFFFFu16; data.len() + 7];
+        let info =
+            engine.decompress_into(&bytes, TensorMut::from_bf16_bits(&mut wide)).unwrap();
+        assert_eq!(info.elements, data.len());
+        assert_eq!(&wide[..data.len()], exact.as_slice());
+        assert!(wide[data.len()..].iter().all(|&x| x == 0xFFFF));
     }
 
     #[test]

@@ -78,7 +78,7 @@ pub fn codec_comparison(
             pipeline::compress(data, &fixed_cfg).expect("compress")
         });
         let dec = measure(warmup, trials, || {
-            pipeline::decompress(&bytes, pipeline::codec::default_parallelism()).expect("decompress")
+            pipeline::decompress(&bytes).expect("decompress")
         });
         rows.push(CodecRow {
             name: format!("Ours (Q={q})"),
@@ -97,8 +97,7 @@ pub fn codec_comparison(
             pipeline::compress(data, &ms_cfg).expect("compress")
         });
         let dec = measure(warmup, trials, || {
-            pipeline::decompress(&ms_bytes, pipeline::codec::default_parallelism())
-                .expect("decompress")
+            pipeline::decompress(&ms_bytes).expect("decompress")
         });
         rows.push(CodecRow {
             name: format!("Ours (Q={q}, 4-state)"),

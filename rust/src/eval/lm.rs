@@ -3,12 +3,22 @@
 //! Per (model, task, Q): accuracy, `T_comm(Ñ)` under the ε-outage
 //! channel, mean container size, and encode/decode timing — the exact
 //! columns of Table 3, with the baseline row using the raw float path.
+//!
+//! The driver is dtype-generic: with [`Dtype::Bf16`] (or `F16`) it
+//! simulates the Llama2-style half-precision deployment — the head's
+//! hidden states are narrowed to the wire dtype once (standing in for a
+//! model that computes in bf16), then compressed through the zero-copy
+//! [`pipeline::compress_tensor`] path (conversion fused into quantize;
+//! no intermediate f32 `Vec`) and shipped with the dtype tag the cloud
+//! decoder sniffs. The baseline row's raw payload shrinks accordingly
+//! (2 bytes/element instead of 4).
 
 use crate::channel::OutageChannel;
 use crate::data::{lm_tasks::score_choices, McTask};
 use crate::error::Result;
-use crate::pipeline::{self, PipelineConfig, ReshapeStrategy};
+use crate::pipeline::{self, PipelineConfig, ReshapeStrategy, TensorRef};
 use crate::runtime::LmSplitExec;
+use crate::tensor::{self, Dtype};
 use crate::util::stats::Summary;
 use crate::util::timer::Stopwatch;
 
@@ -19,6 +29,8 @@ pub struct LmRow {
     pub task: String,
     /// Bit-width; `None` = uncompressed baseline.
     pub q: Option<u8>,
+    /// Element type the features crossed the link as.
+    pub dtype: Dtype,
     /// Multiple-choice accuracy.
     pub accuracy: f64,
     /// Mean payload bytes per item.
@@ -31,7 +43,9 @@ pub struct LmRow {
     pub dec_ms: Summary,
 }
 
-/// Evaluate one task at the baseline and each Q.
+
+/// Evaluate one task at the baseline and each Q, shipping features of
+/// `dtype` over the simulated link.
 pub fn lm_task_sweep(
     exec: &LmSplitExec,
     task: &McTask,
@@ -39,11 +53,17 @@ pub fn lm_task_sweep(
     qs: &[u8],
     n_items: usize,
     channel: &OutageChannel,
+    dtype: Dtype,
 ) -> Result<Vec<LmRow>> {
     let n = n_items.min(task.items.len()).max(1);
     let mut rows = Vec::new();
 
-    // Baseline (raw hidden states over the link).
+    // Baseline (raw hidden states of `dtype` over the link). For
+    // half-precision the hidden states are narrowed — edge-side work,
+    // inside the enc window — and then widened back for the tail (the
+    // cloud's job in the real deployment, so *outside* the enc window);
+    // the accuracy column thereby reflects the same rounding the
+    // claimed wire bytes imply.
     {
         let mut correct = 0usize;
         let mut payload = Summary::new();
@@ -51,9 +71,13 @@ pub fn lm_task_sweep(
         for item in task.items.iter().take(n) {
             let tokens = task.item_batch(item);
             let t0 = Stopwatch::new();
-            let hidden = exec.run_head_raw(&tokens)?;
+            let mut hidden = exec.run_head_raw(&tokens)?;
+            let bits = dtype.is_half().then(|| tensor::narrow_to_half_bits(&hidden, dtype));
             enc.add(t0.elapsed_ms());
-            payload.add((hidden.len() * 4) as f64);
+            if let Some(bits) = &bits {
+                hidden = TensorRef::from_half_bits(dtype, bits).to_f32_vec();
+            }
+            payload.add((hidden.len() * dtype.size_bytes()) as f64);
             let logits = exec.run_tail_raw(&hidden)?;
             if score_choices(&logits, task, item) == item.correct {
                 correct += 1;
@@ -62,6 +86,7 @@ pub fn lm_task_sweep(
         rows.push(LmRow {
             task: task_name.to_string(),
             q: None,
+            dtype,
             accuracy: correct as f64 / n as f64,
             mean_payload_bytes: payload.mean(),
             t_comm_ms: channel.comm_latency_ms(payload.mean() as usize),
@@ -79,7 +104,6 @@ pub fn lm_task_sweep(
         for item in task.items.iter().take(n) {
             let tokens = task.item_batch(item);
             let t0 = Stopwatch::new();
-            let (symbols, params) = exec.run_head(&tokens, q)?;
             let reshape = match plan {
                 Some(np) => ReshapeStrategy::Fixed(np),
                 None => ReshapeStrategy::Optimize,
@@ -91,15 +115,23 @@ pub fn lm_task_sweep(
                 reshape,
                 layout: pipeline::StreamLayout::V1,
             };
-            let (container, stats) = pipeline::compress_quantized(&symbols, params, &cfg)?;
+            let (container, stats) = if dtype == Dtype::F32 {
+                // Artifact hot path: the head emits AIQ symbols.
+                let (symbols, params) = exec.run_head(&tokens, q)?;
+                pipeline::compress_quantized(&symbols, params, &cfg)?
+            } else {
+                // Half-precision path: narrow the hidden states to the
+                // wire dtype, then the zero-copy dtype-generic entry
+                // point (quantize fuses the half→f32 conversion).
+                let hidden = exec.run_head_raw(&tokens)?;
+                let bits = tensor::narrow_to_half_bits(&hidden, dtype);
+                pipeline::compress_tensor(TensorRef::from_half_bits(dtype, &bits), &cfg)?
+            };
             plan.get_or_insert(stats.n_rows);
             enc.add(t0.elapsed_ms());
             payload.add(container.len() as f64);
             let t1 = Stopwatch::new();
-            let (dec_syms, dec_params) = pipeline::decompress_to_symbols(
-                &container,
-                crate::pipeline::codec::default_parallelism(),
-            )?;
+            let (dec_syms, dec_params) = pipeline::decompress_to_symbols(&container)?;
             dec.add(t1.elapsed_ms());
             let logits = exec.run_tail(&dec_syms, &dec_params)?;
             if score_choices(&logits, task, item) == item.correct {
@@ -109,6 +141,7 @@ pub fn lm_task_sweep(
         rows.push(LmRow {
             task: task_name.to_string(),
             q: Some(q),
+            dtype,
             accuracy: correct as f64 / n as f64,
             mean_payload_bytes: payload.mean(),
             t_comm_ms: channel.comm_latency_ms(payload.mean() as usize),

@@ -91,7 +91,7 @@ pub fn latency_vs_n(data: &[f32], q: u8, trials: usize) -> Result<Vec<LatencyRow
         let enc = measure(1, trials, || {
             pipeline::compress_quantized(&symbols, params, &cfg).expect("enc")
         });
-        let dec = measure(1, trials, || pipeline::decompress(&bytes, pipeline::codec::default_parallelism()).expect("dec"));
+        let dec = measure(1, trials, || pipeline::decompress(&bytes).expect("dec"));
         rows.push(LatencyRow { n, enc, dec });
     }
     Ok(rows)
@@ -183,7 +183,7 @@ pub fn measured_latency_terms(data: &[f32], q: u8) -> Result<LatencyTerms> {
         ..cfg
     };
     let enc = measure(1, 5, || pipeline::compress(data, &fixed).expect("enc"));
-    let dec = measure(1, 5, || pipeline::decompress(&bytes, pipeline::codec::default_parallelism()).expect("dec"));
+    let dec = measure(1, 5, || pipeline::decompress(&bytes).expect("dec"));
     Ok(LatencyTerms {
         alpha_enc: 1.0,
         alpha_dec: 1.0,

@@ -105,10 +105,7 @@ pub fn accuracy_sweep(
             payload.add(container.len() as f64);
 
             let t1 = crate::util::timer::Stopwatch::new();
-            let (dec_syms, dec_params) = pipeline::decompress_to_symbols(
-                &container,
-                crate::pipeline::codec::default_parallelism(),
-            )?;
+            let (dec_syms, dec_params) = pipeline::decompress_to_symbols(&container)?;
             dec.add(t1.elapsed_ms());
             let logits = exec.run_tail(&dec_syms, &dec_params)?;
             if argmax(&logits[0..classes]) == ys[0] as usize {

@@ -10,6 +10,9 @@
 //! * [`rans`] — the core range-ANS entropy codec (Eqs. 2–4), including an
 //!   N-way interleaved variant used for multi-lane (GPU-style) throughput.
 //! * [`quant`] — asymmetric integer quantization, AIQ (Eq. 6).
+//! * [`tensor`] — dtype-tagged zero-copy tensor views ([`tensor::TensorRef`] /
+//!   [`tensor::TensorMut`]) with hand-rolled f16/bf16 conversions, so
+//!   half-precision LM features compress without an intermediate f32 copy.
 //! * [`sparse`] — the *modified* CSR format with non-cumulative row counts.
 //! * [`reshape`] — the entropy/cost model `T_tot(N) = ℓ_D · H(p(N))` and
 //!   Algorithm 1 (approximate enumeration for the optimal reshape `Ñ`).
@@ -51,6 +54,7 @@ pub mod runtime;
 pub mod sparse;
 pub mod tans;
 pub mod telemetry;
+pub mod tensor;
 pub mod testutil;
 pub mod util;
 

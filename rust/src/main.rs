@@ -24,6 +24,7 @@ use rans_sc::error::Result;
 use rans_sc::eval;
 use rans_sc::pipeline::{self, PipelineConfig};
 use rans_sc::runtime::{Engine, ExecPool, Manifest, VisionSplitExec};
+use rans_sc::tensor::{Dtype, TensorRef};
 
 struct Args {
     cmd: String,
@@ -84,6 +85,15 @@ fn cmd_serve_cloud(cfg: &AppConfig) -> Result<()> {
 }
 
 fn cmd_infer(cfg: &AppConfig) -> Result<()> {
+    if cfg.dtype != Dtype::F32 {
+        // The vision infer path runs the head artifact, whose symbols
+        // are f32-derived; the dtype knob drives `compress` and the LM
+        // feature-level API (`LmEdgeNode::infer_features`).
+        eprintln!(
+            "note: dtype={} is ignored by the vision infer path (ships f32 symbols)",
+            cfg.dtype
+        );
+    }
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
     let engine = Arc::new(Engine::cpu()?);
     let pool = ExecPool::new(engine, &cfg.artifacts_dir);
@@ -101,6 +111,7 @@ fn cmd_infer(cfg: &AppConfig) -> Result<()> {
             lanes: cfg.lanes,
             parallel: cfg.parallel,
             layout: layout_of(cfg),
+            dtype: cfg.dtype,
         },
     );
     let (xs, ys) = set.batch(0, cfg.batch);
@@ -129,22 +140,40 @@ fn cmd_infer(cfg: &AppConfig) -> Result<()> {
 
 fn cmd_compress(cfg: &AppConfig) -> Result<()> {
     let (data, source) = eval::feature_tensor(&cfg.artifacts_dir, &cfg.model, cfg.sl)?;
-    println!("feature source: {source:?}, {} elements", data.len());
-    let (bytes, stats) =
-        pipeline::compress(&data, &PipelineConfig::paper(cfg.q).with_states(cfg.states))?;
+    println!(
+        "feature source: {source:?}, {} elements ({} on the wire)",
+        data.len(),
+        cfg.dtype
+    );
+    // Non-f32 dtypes narrow the feature to the configured element type
+    // first (the stand-in for a half-precision head), then compress
+    // through the zero-copy dtype-generic entry point.
+    let pcfg = PipelineConfig::paper(cfg.q).with_states(cfg.states);
+    let bits: Vec<u16> = if cfg.dtype.is_half() {
+        rans_sc::tensor::narrow_to_half_bits(&data, cfg.dtype)
+    } else {
+        Vec::new()
+    };
+    let tensor = if cfg.dtype.is_half() {
+        TensorRef::from_half_bits(cfg.dtype, &bits)
+    } else {
+        TensorRef::from_f32(&data)
+    };
+    let raw_bytes = tensor.byte_len();
+    let (bytes, stats) = pipeline::compress_tensor(tensor, &pcfg)?;
     println!(
         "Q={} reshape {}x{} nnz={} entropy={:.3} b/sym",
         cfg.q, stats.n_rows, stats.n_cols, stats.nnz, stats.entropy
     );
     println!(
         "raw {} B -> {} B ({:.2}x), payload {} B + side {} B",
-        data.len() * 4,
+        raw_bytes,
         bytes.len(),
-        (data.len() * 4) as f64 / bytes.len() as f64,
+        raw_bytes as f64 / bytes.len() as f64,
         stats.payload_bytes,
         stats.side_info_bytes
     );
-    let back = pipeline::decompress(&bytes, cfg.parallel)?;
+    let back = pipeline::decompress(&bytes)?;
     println!("roundtrip ok: {} elements", back.len());
     Ok(())
 }
@@ -219,6 +248,7 @@ COMMANDS:
   serve-cloud        run the cloud node (binds --set addr=HOST:PORT)
   infer              one edge inference against a running cloud node
   compress           compress an IF tensor and print pipeline stats
+                     (--set dtype=bf16 ships half-precision features)
   optimize           run Algorithm 1 (reshape search) and print Ñ vs N*
   accuracy [N]       accuracy sweep over Q for the configured model
   stats              fetch cloud metrics snapshot

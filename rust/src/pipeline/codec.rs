@@ -1,15 +1,24 @@
 //! Pipeline compress/decompress drivers.
 //!
-//! Since the engine refactor these entry points are thin wrappers over
-//! the process-wide [`crate::engine::Engine::shared`] instance: the
-//! signatures (and, for the v1 container, the output bytes) are
-//! unchanged, but lane fan-out runs on the engine's persistent worker
-//! pool instead of per-call scoped threads. Callers that want their own
-//! pool size, the chunked v2 container, or plan caching construct an
-//! [`crate::engine::Engine`] directly.
+//! These entry points are thin wrappers over the process-wide
+//! [`crate::engine::Engine::shared`] instance; callers that want their
+//! own pool size, the chunked v2 container, plan caching, or a forced
+//! decode-threading mode construct an [`crate::engine::Engine`]
+//! directly.
+//!
+//! The primary surface is **dtype-generic and zero-copy**:
+//! [`compress_tensor`] borrows any [`TensorRef`] (f32/f16/bf16) and
+//! quantizes with conversion fused into the load, and
+//! [`decompress_into`] dequantizes into a caller-owned [`TensorMut`] of
+//! the container's dtype. The `&[f32]` forms ([`compress`],
+//! [`decompress`]) remain as shims with byte-identical output, and
+//! decode entry points carry no `parallel: bool` — decode threading is
+//! the engine's config-carried setting
+//! ([`crate::engine::EngineConfig::decode_parallel`]).
 
 use crate::error::Result;
 use crate::quant::{self, QuantParams};
+use crate::tensor::{Dtype, TensorMut, TensorRef};
 
 pub use crate::rans::interleaved::StreamLayout;
 
@@ -33,7 +42,9 @@ pub struct PipelineConfig {
     pub q: u8,
     /// rANS lanes.
     pub lanes: usize,
-    /// Thread the lanes.
+    /// Thread the lanes on **encode**. (Decode threading has no
+    /// per-call knob; it is carried by the engine —
+    /// [`crate::engine::EngineConfig::decode_parallel`].)
     pub parallel: bool,
     /// Reshape selection.
     pub reshape: ReshapeStrategy,
@@ -104,7 +115,22 @@ pub struct CompressStats {
     pub reshape_evaluated: usize,
 }
 
-/// Compress pre-quantized symbols (hot path; see module docs).
+/// What one [`decompress_into`] call decoded: the element count and
+/// dtype sniffed from the container header, plus the quantization
+/// parameters the reconstruction used.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecodeInfo {
+    /// Decoded (and written) element count.
+    pub elements: usize,
+    /// The container's dtype tag — also the output buffer's dtype.
+    pub dtype: Dtype,
+    /// Quantization parameters from the container header.
+    pub params: QuantParams,
+}
+
+/// Compress pre-quantized symbols (hot path; see module docs). The
+/// container is tagged `f32`; symbol producers for half-precision
+/// models use [`crate::engine::Engine::compress_quantized_dtype`].
 pub fn compress_quantized(
     symbols: &[u16],
     params: QuantParams,
@@ -113,26 +139,46 @@ pub fn compress_quantized(
     crate::engine::Engine::shared().compress_quantized(symbols, params, cfg)
 }
 
-/// Compress a float tensor (quantization inside). The float input is
-/// traversed exactly twice — fused min/max fit, then the divide-free
-/// quantize pass ([`quant::fit_and_quantize`]) — before the symbol
-/// pipeline takes over.
+/// Compress a dtype-tagged tensor view (quantization inside). The
+/// borrowed storage is traversed exactly twice — fused min/max fit,
+/// then the divide-free quantize pass
+/// ([`quant::fit_and_quantize_tensor`]) — converting f16/bf16 elements
+/// to `f32` on load, with no intermediate `f32` `Vec` for any dtype.
+pub fn compress_tensor(
+    tensor: TensorRef<'_>,
+    cfg: &PipelineConfig,
+) -> Result<(Vec<u8>, CompressStats)> {
+    crate::engine::Engine::shared().compress_tensor(tensor, cfg)
+}
+
+/// Compress an `f32` tensor — a thin shim over [`compress_tensor`]
+/// with byte-identical output to every pre-dtype release.
 pub fn compress(data: &[f32], cfg: &PipelineConfig) -> Result<(Vec<u8>, CompressStats)> {
-    let (params, symbols) = quant::fit_and_quantize(cfg.q, data)?;
-    compress_quantized(&symbols, params, cfg)
+    compress_tensor(TensorRef::from_f32(data), cfg)
 }
 
 /// Decompress to quantized symbols plus the quantization parameters
 /// (cloud hot path — the tail artifact dequantizes on-device). Accepts
-/// both the v1 and the chunked v2 container (magic-sniffed).
-pub fn decompress_to_symbols(bytes: &[u8], parallel: bool) -> Result<(Vec<u16>, QuantParams)> {
-    crate::engine::Engine::shared().decompress_to_symbols(bytes, parallel)
+/// both the v1 and the chunked v2 container (magic-sniffed), in both
+/// their f32 and dtype-tagged forms.
+pub fn decompress_to_symbols(bytes: &[u8]) -> Result<(Vec<u16>, QuantParams)> {
+    crate::engine::Engine::shared().decompress_to_symbols(bytes)
 }
 
-/// Decompress all the way to floats.
-pub fn decompress(bytes: &[u8], parallel: bool) -> Result<Vec<f32>> {
-    let (symbols, params) = decompress_to_symbols(bytes, parallel)?;
+/// Decompress all the way to an `f32` vector, whatever the container's
+/// dtype tag. For zero-copy decode into a caller buffer of the
+/// container's own dtype, use [`decompress_into`].
+pub fn decompress(bytes: &[u8]) -> Result<Vec<f32>> {
+    let (symbols, params) = decompress_to_symbols(bytes)?;
     Ok(quant::dequantize(&symbols, &params))
+}
+
+/// Decompress straight into a caller-owned output buffer (zero-copy
+/// decode). The buffer's dtype must match the container's dtype tag and
+/// its capacity must cover the decoded element count; see
+/// [`crate::engine::Engine::decompress_into`].
+pub fn decompress_into(bytes: &[u8], out: TensorMut<'_>) -> Result<DecodeInfo> {
+    crate::engine::Engine::shared().decompress_into(bytes, out)
 }
 
 #[cfg(test)]
@@ -163,7 +209,7 @@ mod tests {
             let params = QuantParams::fit(q, &data).unwrap();
             let symbols = quant::quantize(&data, &params);
             let (bytes, _) = compress_quantized(&symbols, params, &cfg).unwrap();
-            let (back, back_params) = decompress_to_symbols(&bytes, true).unwrap();
+            let (back, back_params) = decompress_to_symbols(&bytes).unwrap();
             assert_eq!(back, symbols, "q={q}");
             assert_eq!(back_params, params);
         }
@@ -174,7 +220,7 @@ mod tests {
         let data = synth_if(2, 16, 8, 8);
         let cfg = PipelineConfig::paper(6);
         let (bytes, _) = compress(&data, &cfg).unwrap();
-        let back = decompress(&bytes, true).unwrap();
+        let back = decompress(&bytes).unwrap();
         let params = QuantParams::fit(6, &data).unwrap();
         let tol = params.scale + 1e-6;
         for (a, b) in data.iter().zip(&back) {
@@ -216,7 +262,7 @@ mod tests {
                 layout: StreamLayout::V1,
             };
             let (bytes, _) = compress(&data, &cfg).unwrap();
-            let back = decompress(&bytes, false).unwrap();
+            let back = decompress(&bytes).unwrap();
             assert_eq!(back.len(), t, "{strat:?}");
         }
     }
@@ -271,7 +317,7 @@ mod tests {
                 let (bytes, stats) = compress_quantized(&symbols, params, &cfg).unwrap();
                 assert_eq!(&bytes[0..4], b"RSC1");
                 assert_eq!(stats.total_bytes, bytes.len());
-                let (back, back_params) = decompress_to_symbols(&bytes, true).unwrap();
+                let (back, back_params) = decompress_to_symbols(&bytes).unwrap();
                 assert_eq!(back, symbols, "q={q} states={states}");
                 assert_eq!(back_params, params);
             }
@@ -290,6 +336,40 @@ mod tests {
         let a = compress(&data, &PipelineConfig::paper(4)).unwrap().0;
         let b = compress(&data, &PipelineConfig::paper(4).with_states(1)).unwrap().0;
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn f32_shim_is_byte_identical_to_tensor_entry_point() {
+        let data = synth_if(11, 16, 8, 8);
+        let cfg = PipelineConfig::paper(4);
+        let (a, _) = compress(&data, &cfg).unwrap();
+        let (b, _) = compress_tensor(TensorRef::from_f32(&data), &cfg).unwrap();
+        assert_eq!(a, b);
+        // Zero-copy decode into a caller buffer matches the Vec path.
+        let via_vec = decompress(&a).unwrap();
+        let mut buf = vec![0.0f32; data.len()];
+        let info = decompress_into(&a, TensorMut::from_f32(&mut buf)).unwrap();
+        assert_eq!(info.dtype, Dtype::F32);
+        assert_eq!(info.elements, data.len());
+        assert_eq!(buf, via_vec);
+    }
+
+    #[test]
+    fn half_tensor_roundtrips_through_shared_engine() {
+        use crate::tensor::half;
+        let data = synth_if(12, 8, 8, 8);
+        let f16: Vec<u16> = data.iter().map(|&x| half::f32_to_f16(x)).collect();
+        let (bytes, _) =
+            compress_tensor(TensorRef::from_f16_bits(&f16), &PipelineConfig::paper(6)).unwrap();
+        let mut out = vec![0u16; f16.len()];
+        let info = decompress_into(&bytes, TensorMut::from_f16_bits(&mut out)).unwrap();
+        assert_eq!(info.dtype, Dtype::F16);
+        // Exact zeros survive (sparsity preservation holds per dtype).
+        for (a, b) in f16.iter().zip(&out) {
+            if half::f16_to_f32(*a) == 0.0 {
+                assert_eq!(half::f16_to_f32(*b), 0.0);
+            }
+        }
     }
 
     #[test]

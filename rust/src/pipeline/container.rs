@@ -4,8 +4,9 @@
 //!
 //! ```text
 //! magic  "RSC1"                 4 bytes
-//! version                       1 byte  (currently 1)
+//! version                       1 byte  (1 = f32, 2 = dtype-tagged)
 //! q                             1 byte
+//! dtype tag                     1 byte  (version 2 only; see Dtype::tag)
 //! scale                         4 bytes f32 LE
 //! zero                          varint (zigzag)
 //! orig_len  T                   varint
@@ -22,6 +23,12 @@
 //! corruption (including rANS streams that happen to decode) into a
 //! clean [`Error::Corrupt`] instead of silent garbage at the tail model.
 //!
+//! **Dtype tagging.** `f32` tensors serialize as version 1 with no tag
+//! byte, so every pre-dtype container stays byte-identical on the wire.
+//! Half-precision tensors (f16/bf16 — the Llama2-style LM path) emit
+//! version 2, which inserts a one-byte [`Dtype`] tag after `q`;
+//! decoders sniff the version byte, so no caller-side knob exists.
+//!
 //! The payload is an interleaved rANS stream in either layout — v1
 //! scalar lanes or v2 multi-state lanes (see
 //! [`crate::rans::interleaved`]). The stream is self-describing, so the
@@ -31,12 +38,15 @@
 use crate::error::{Error, Result};
 use crate::quant::QuantParams;
 use crate::rans::FreqTable;
+use crate::tensor::Dtype;
 use crate::util::{crc32, varint};
 
 /// Container magic bytes.
 pub const MAGIC: &[u8; 4] = b"RSC1";
-/// Current container version.
+/// Legacy container version: implicit `f32` payload dtype, no tag byte.
 pub const VERSION: u8 = 1;
+/// Dtype-tagged container version: a [`Dtype::tag`] byte follows `q`.
+pub const VERSION_DTYPED: u8 = 2;
 
 /// Plausibility cap on the declared tensor length `T` accepted by the
 /// decoders (v1 and v2). Headers are CRC-checked but not authenticated,
@@ -50,6 +60,8 @@ pub const MAX_DECODE_SYMBOLS: usize = 1 << 28;
 /// Parsed container header + payload.
 #[derive(Debug, Clone)]
 pub struct Container {
+    /// Element type of the original tensor (reconstruction target).
+    pub dtype: Dtype,
     /// Quantization parameters used by the encoder.
     pub params: QuantParams,
     /// Original flat length `T`.
@@ -73,6 +85,8 @@ pub struct Container {
 /// table (with its 32 KiB fused decode table) just to emit bytes.
 #[derive(Debug, Clone, Copy)]
 pub struct ContainerRef<'a> {
+    /// Element type of the original tensor (reconstruction target).
+    pub dtype: Dtype,
     /// Quantization parameters used by the encoder.
     pub params: QuantParams,
     /// Original flat length `T`.
@@ -96,8 +110,16 @@ impl ContainerRef<'_> {
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.payload.len() + 64);
         out.extend_from_slice(MAGIC);
-        out.push(VERSION);
-        out.push(self.params.q);
+        // f32 keeps the legacy version-1 header (byte-identical wire
+        // format); non-f32 tensors emit version 2 with a dtype tag.
+        if self.dtype == Dtype::F32 {
+            out.push(VERSION);
+            out.push(self.params.q);
+        } else {
+            out.push(VERSION_DTYPED);
+            out.push(self.params.q);
+            out.push(self.dtype.tag());
+        }
         out.extend_from_slice(&self.params.scale.to_le_bytes());
         varint::write_i64(&mut out, self.params.zero as i64);
         varint::write_usize(&mut out, self.orig_len);
@@ -127,6 +149,7 @@ impl Container {
     /// Borrowed view for serialization.
     pub fn view(&self) -> ContainerRef<'_> {
         ContainerRef {
+            dtype: self.dtype,
             params: self.params,
             orig_len: self.orig_len,
             n_rows: self.n_rows,
@@ -158,11 +181,24 @@ impl Container {
         if &body[0..4] != MAGIC {
             return Err(Error::corrupt("bad magic"));
         }
-        if body[4] != VERSION {
+        if body[4] != VERSION && body[4] != VERSION_DTYPED {
             return Err(Error::corrupt(format!("unsupported version {}", body[4])));
         }
         let q = body[5];
         let mut pos = 6usize;
+        let dtype = if body[4] == VERSION_DTYPED {
+            if pos >= body.len() {
+                return Err(Error::corrupt("dtype-tagged header truncated"));
+            }
+            let d = Dtype::from_tag(body[pos])?;
+            pos += 1;
+            d
+        } else {
+            Dtype::F32
+        };
+        if pos + 4 > body.len() {
+            return Err(Error::corrupt("container header truncated"));
+        }
         let scale = f32::from_le_bytes([body[pos], body[pos + 1], body[pos + 2], body[pos + 3]]);
         pos += 4;
         let zero = varint::read_i64(body, &mut pos)?;
@@ -204,8 +240,51 @@ impl Container {
             return Err(Error::corrupt("alphabet / table size mismatch"));
         }
         let params = QuantParams { q, scale, zero };
-        Ok(Container { params, orig_len, n_rows, nnz, alphabet, table, payload })
+        Ok(Container { dtype, params, orig_len, n_rows, nnz, alphabet, table, payload })
     }
+}
+
+/// Cheaply read `(dtype, orig_len)` from an RSC1/RSC2-shaped header
+/// (both formats share the `magic · version · q · [dtype] · scale ·
+/// zero · orig_len` prefix) without CRC validation or payload parsing —
+/// `decompress_into` uses this to reject dtype mismatches and short
+/// output buffers before paying for a full decode. The single
+/// definition for both container formats; corrupt headers that survive
+/// this peek are still caught by the real parse.
+pub(crate) fn peek_header(
+    bytes: &[u8],
+    magic: &[u8; 4],
+    legacy_version: u8,
+    dtyped_version: u8,
+) -> Result<(Dtype, usize)> {
+    if bytes.len() < 10 || &bytes[0..4] != magic {
+        return Err(Error::corrupt(format!(
+            "not an {} container",
+            String::from_utf8_lossy(magic)
+        )));
+    }
+    let mut pos = 6usize;
+    let dtype = match bytes[4] {
+        v if v == legacy_version => Dtype::F32,
+        v if v == dtyped_version => {
+            let d = Dtype::from_tag(bytes[6])?;
+            pos += 1;
+            d
+        }
+        v => return Err(Error::corrupt(format!("unsupported version {v}"))),
+    };
+    pos += 4; // scale
+    if pos > bytes.len() {
+        return Err(Error::corrupt("container header truncated"));
+    }
+    varint::read_i64(bytes, &mut pos)?; // zero point
+    let orig_len = varint::read_usize(bytes, &mut pos)?;
+    Ok((dtype, orig_len))
+}
+
+/// [`peek_header`] specialized to the v1 `RSC1` container.
+pub(crate) fn peek_dtype_and_len(bytes: &[u8]) -> Result<(Dtype, usize)> {
+    peek_header(bytes, MAGIC, VERSION, VERSION_DTYPED)
 }
 
 #[cfg(test)]
@@ -217,6 +296,7 @@ mod tests {
         let table = FreqTable::from_symbols(&syms, 8);
         let payload = crate::rans::encode_interleaved(&syms, &table, 2, false).unwrap();
         Container {
+            dtype: Dtype::F32,
             params: QuantParams { q: 4, scale: 0.25, zero: 3 },
             orig_len: 64,
             n_rows: 8,
@@ -232,6 +312,7 @@ mod tests {
         let c = sample_container();
         let bytes = c.to_bytes();
         let back = Container::from_bytes(&bytes).unwrap();
+        assert_eq!(back.dtype, Dtype::F32);
         assert_eq!(back.params, c.params);
         assert_eq!(back.orig_len, c.orig_len);
         assert_eq!(back.n_rows, c.n_rows);
@@ -239,6 +320,54 @@ mod tests {
         assert_eq!(back.payload, c.payload);
         assert_eq!(back.n_cols(), 8);
         assert_eq!(back.ell_d(), 2 + 8);
+    }
+
+    #[test]
+    fn dtyped_roundtrip_and_f32_header_unchanged() {
+        let f32_bytes = sample_container().to_bytes();
+        assert_eq!(f32_bytes[4], VERSION, "f32 containers keep the legacy version byte");
+        for dtype in [Dtype::F16, Dtype::Bf16] {
+            let mut c = sample_container();
+            c.dtype = dtype;
+            let bytes = c.to_bytes();
+            assert_eq!(bytes[4], VERSION_DTYPED);
+            assert_eq!(bytes[6], dtype.tag());
+            // Exactly one extra header byte relative to the f32 form.
+            assert_eq!(bytes.len(), f32_bytes.len() + 1);
+            let back = Container::from_bytes(&bytes).unwrap();
+            assert_eq!(back.dtype, dtype);
+            assert_eq!(back.params, c.params);
+            assert_eq!(back.payload, c.payload);
+            assert_eq!(peek_dtype_and_len(&bytes).unwrap(), (dtype, c.orig_len));
+        }
+        assert_eq!(
+            peek_dtype_and_len(&f32_bytes).unwrap(),
+            (Dtype::F32, sample_container().orig_len)
+        );
+    }
+
+    #[test]
+    fn dtyped_bad_tag_and_truncations_rejected() {
+        let mut c = sample_container();
+        c.dtype = Dtype::Bf16;
+        let bytes = c.to_bytes();
+        // Unknown dtype tag behind a recomputed CRC is still rejected.
+        let (mut body, _) = {
+            let (b, _) = bytes.split_at(bytes.len() - 4);
+            (b.to_vec(), ())
+        };
+        body[6] = 7;
+        let crc = crc32::hash(&body);
+        body.extend_from_slice(&crc.to_le_bytes());
+        assert!(Container::from_bytes(&body).is_err());
+        // Every truncation of the dtyped header errors cleanly, in both
+        // the full parse and the header peek.
+        for cut in 0..bytes.len().min(24) {
+            assert!(Container::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+            if cut <= 11 {
+                assert!(peek_dtype_and_len(&bytes[..cut]).is_err(), "peek cut {cut}");
+            }
+        }
     }
 
     #[test]

@@ -6,9 +6,11 @@
 //! ```
 //!
 //! Two entry levels mirror the deployment split:
-//! * [`compress`] / [`decompress`] — float tensor in, float tensor out
-//!   (quantization inside the pipeline; used by the baselines bench and
-//!   the standalone examples).
+//! * [`compress_tensor`] / [`decompress_into`] — dtype-tagged zero-copy
+//!   tensor views in ([`TensorRef`]: f32, f16, or bf16, converted on
+//!   load), caller-owned output buffers out ([`TensorMut`]). The
+//!   `&[f32]` forms [`compress`] / [`decompress`] remain as
+//!   byte-identical shims.
 //! * [`compress_quantized`] / [`decompress_to_symbols`] — integer
 //!   symbols in/out. This is the L3 hot path: the AOT'd head artifact
 //!   already emits AIQ symbols (the Pallas quantize epilogue), and the
@@ -18,8 +20,10 @@
 pub mod codec;
 pub mod container;
 
+pub use crate::tensor::{Dtype, TensorMut, TensorRef};
 pub use codec::{
-    compress, compress_quantized, decompress, decompress_to_symbols, CompressStats,
-    PipelineConfig, ReshapeStrategy, StreamLayout,
+    compress, compress_quantized, compress_tensor, decompress, decompress_into,
+    decompress_to_symbols, CompressStats, DecodeInfo, PipelineConfig, ReshapeStrategy,
+    StreamLayout,
 };
 pub use container::Container;

@@ -1,6 +1,7 @@
 //! AIQ quantizer/dequantizer.
 
 use crate::error::{Error, Result};
+use crate::tensor::{TensorMut, TensorRef};
 
 /// Minimum supported bit-width.
 pub const MIN_Q: u8 = 1;
@@ -122,16 +123,72 @@ pub fn quantize(data: &[f32], params: &QuantParams) -> Vec<u16> {
 
 /// Fit quantization parameters and quantize in one call: the tensor is
 /// traversed exactly twice (one fused min/max/finite scan, one
-/// divide-free quantize pass). This is the entry point the
-/// compression pipeline uses for float tensors.
+/// divide-free quantize pass). A thin shim over
+/// [`fit_and_quantize_tensor`], so the scan/quantize arithmetic exists
+/// in exactly one place.
 pub fn fit_and_quantize(q: u8, data: &[f32]) -> Result<(QuantParams, Vec<u16>)> {
-    let params = QuantParams::fit(q, data)?;
-    Ok((params, quantize(data, &params)))
+    fit_and_quantize_tensor(q, &TensorRef::from_f32(data))
+}
+
+/// Fit quantization parameters and quantize a dtype-tagged tensor view
+/// in one call, converting f16/bf16 elements to `f32` **on load** —
+/// exactly two fused passes over the borrowed storage (min/max/finite
+/// scan, then the divide-free quantize), with no intermediate `f32`
+/// `Vec` for any dtype. For `f32` views this computes bit-identical
+/// parameters and symbols to [`fit_and_quantize`].
+pub fn fit_and_quantize_tensor(q: u8, t: &TensorRef<'_>) -> Result<(QuantParams, Vec<u16>)> {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    let mut finite = true;
+    t.for_each_f32(|x| {
+        finite &= x.is_finite();
+        lo = lo.min(x);
+        hi = hi.max(x);
+    });
+    if !finite {
+        return Err(Error::invalid("non-finite value in tensor"));
+    }
+    if t.is_empty() {
+        lo = 0.0;
+        hi = 0.0;
+    }
+    let params = QuantParams::from_min_max(q, lo, hi)?;
+    let inv = params.inv_scale();
+    let zero = params.zero as f32;
+    let max_sym = (params.alphabet() - 1) as f32;
+    let mut symbols = Vec::with_capacity(t.len());
+    t.for_each_f32(|x| {
+        symbols.push((x * inv + zero).round_ties_even().clamp(0.0, max_sym) as u16)
+    });
+    Ok((params, symbols))
 }
 
 /// Dequantize symbols back to f32.
 pub fn dequantize(symbols: &[u16], params: &QuantParams) -> Vec<f32> {
     symbols.iter().map(|&s| params.dequantize_one(s)).collect()
+}
+
+/// Dequantize `symbols` straight into a caller-owned output buffer,
+/// converting each reconstructed `f32` to the buffer's dtype — the
+/// zero-allocation tail of [`crate::engine::Engine::decompress_into`].
+/// Elements `0..symbols.len()` of `out` are written; errors when the
+/// buffer is shorter than the symbol count.
+pub fn dequantize_into(
+    symbols: &[u16],
+    params: &QuantParams,
+    out: &mut TensorMut<'_>,
+) -> Result<()> {
+    if out.len() < symbols.len() {
+        return Err(Error::invalid(format!(
+            "output buffer of {} elements too small for {} decoded elements",
+            out.len(),
+            symbols.len()
+        )));
+    }
+    let zero = params.zero;
+    let scale = params.scale;
+    out.store_prefix_f32(symbols.len(), |i| (symbols[i] as i32 - zero) as f32 * scale);
+    Ok(())
 }
 
 #[cfg(test)]
@@ -274,6 +331,74 @@ mod tests {
             assert_eq!(syms, quantize(&data, &params));
         }
         assert!(fit_and_quantize(4, &[1.0, f32::NAN]).is_err());
+    }
+
+    #[test]
+    fn tensor_fit_matches_f32_path_bit_exactly() {
+        // The dtype-generic fused path must agree with the legacy f32
+        // entry point on both parameters and symbols for every storage.
+        let mut rng = Rng::new(14);
+        let data: Vec<f32> = (0..4000)
+            .map(|_| if rng.next_f64() < 0.5 { 0.0 } else { rng.normal() as f32 * 2.0 })
+            .collect();
+        for q in [2u8, 4, 8] {
+            let (p_ref, s_ref) = fit_and_quantize(q, &data).unwrap();
+            let (p, s) = fit_and_quantize_tensor(q, &TensorRef::from_f32(&data)).unwrap();
+            assert_eq!(p, p_ref, "q={q}");
+            assert_eq!(s, s_ref, "q={q}");
+            let le = TensorRef::from_f32(&data).to_le_bytes();
+            let (p, s) = fit_and_quantize_tensor(
+                q,
+                &TensorRef::from_le_bytes(crate::tensor::Dtype::F32, &le).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(p, p_ref);
+            assert_eq!(s, s_ref);
+        }
+    }
+
+    #[test]
+    fn tensor_fit_converts_halves_on_load() {
+        use crate::tensor::half;
+        let mut rng = Rng::new(15);
+        let data: Vec<f32> = (0..2000).map(|_| rng.normal() as f32).collect();
+        let bf16: Vec<u16> = data.iter().map(|&x| half::f32_to_bf16(x)).collect();
+        let widened: Vec<f32> = bf16.iter().map(|&b| half::bf16_to_f32(b)).collect();
+        let (p_ref, s_ref) = fit_and_quantize(4, &widened).unwrap();
+        let (p, s) = fit_and_quantize_tensor(4, &TensorRef::from_bf16_bits(&bf16)).unwrap();
+        assert_eq!(p, p_ref);
+        assert_eq!(s, s_ref);
+        // Non-finite halves are rejected like non-finite f32s.
+        let bad = [half::f32_to_f16(1.0), 0x7C00 /* +inf */];
+        assert!(fit_and_quantize_tensor(4, &TensorRef::from_f16_bits(&bad)).is_err());
+    }
+
+    #[test]
+    fn dequantize_into_converts_and_checks_capacity() {
+        let data = [0.0f32, 0.75, -1.5, 2.0];
+        let (params, symbols) = fit_and_quantize(4, &data).unwrap();
+        let reference = dequantize(&symbols, &params);
+        let mut out = vec![0.0f32; 4];
+        dequantize_into(&symbols, &params, &mut TensorMut::from_f32(&mut out)).unwrap();
+        assert_eq!(out, reference);
+        // Larger buffers keep their tail untouched.
+        let mut wide = vec![9.0f32; 6];
+        dequantize_into(&symbols, &params, &mut TensorMut::from_f32(&mut wide)).unwrap();
+        assert_eq!(&wide[..4], reference.as_slice());
+        assert_eq!(&wide[4..], &[9.0, 9.0]);
+        // Short buffers error.
+        let mut short = vec![0.0f32; 3];
+        assert!(
+            dequantize_into(&symbols, &params, &mut TensorMut::from_f32(&mut short)).is_err()
+        );
+        // Half-precision outputs reconstruct within half dtype ULP of
+        // the f32 reconstruction.
+        let mut bits = vec![0u16; 4];
+        dequantize_into(&symbols, &params, &mut TensorMut::from_bf16_bits(&mut bits)).unwrap();
+        for (i, &b) in bits.iter().enumerate() {
+            let got = crate::tensor::half::bf16_to_f32(b);
+            assert!((got - reference[i]).abs() <= reference[i].abs() * 0.01 + 1e-6);
+        }
     }
 
     #[test]

@@ -18,4 +18,7 @@
 
 pub mod aiq;
 
-pub use aiq::{dequantize, fit_and_quantize, quantize, QuantParams, MAX_Q, MIN_Q};
+pub use aiq::{
+    dequantize, dequantize_into, fit_and_quantize, fit_and_quantize_tensor, quantize,
+    QuantParams, MAX_Q, MIN_Q,
+};

@@ -1,0 +1,241 @@
+//! Hand-rolled IEEE 754 binary16 (f16) and bfloat16 conversions.
+//!
+//! The container is offline (no `half` crate), so the four conversions
+//! the dtype-generic codec API needs are implemented here at the bit
+//! level, with no floating-point environment dependence:
+//!
+//! * widening (`f16`/`bf16` → `f32`) is exact — every half value is
+//!   representable in `f32`;
+//! * narrowing (`f32` → `f16`/`bf16`) rounds to nearest, ties to even,
+//!   matching both hardware `vcvtps2ph`/`bfloat` semantics and the
+//!   Python oracle (`gen_golden.py` cross-checks against `struct`'s
+//!   native binary16 codec and pins all four tables by CRC under
+//!   `rust/tests/golden/half_conv_crcs.hex`).
+//!
+//! NaN handling is round-trip safe: a NaN that originated as a half
+//! keeps its payload through `f32` and back bit-for-bit (the exhaustive
+//! 65,536-pattern sweep in `rust/tests/dtype_tensor.rs` relies on
+//! this); an `f32` NaN whose payload lives entirely below the kept bits
+//! gets a quiet bit forced so it cannot collapse to infinity.
+
+/// Widen an f16 bit pattern to the equivalent f32 bit pattern (exact).
+pub const fn f16_bits_to_f32_bits(h: u16) -> u32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    if exp == 0 {
+        if man == 0 {
+            return sign; // ±0
+        }
+        // Subnormal: renormalize. `man` has 22..=31 leading zeros as a
+        // u32, so `shift` ∈ [1, 10] and the top set bit lands on the
+        // implicit-one position.
+        let shift = man.leading_zeros() - 21;
+        let exp32 = 113 - shift; // 127 − 15 + 1 − shift, biased
+        let man32 = (man << (shift + 13)) & 0x007F_FFFF;
+        return sign | (exp32 << 23) | man32;
+    }
+    if exp == 0x1F {
+        // ±inf / NaN; payload widens into the top mantissa bits.
+        return sign | 0x7F80_0000 | (man << 13);
+    }
+    sign | ((exp + 112) << 23) | (man << 13)
+}
+
+/// Narrow an f32 bit pattern to f16, rounding to nearest-even.
+pub const fn f32_bits_to_f16_bits(bits: u32) -> u16 {
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7FFF_FFFF;
+    if abs >= 0x7F80_0000 {
+        if abs == 0x7F80_0000 {
+            return sign | 0x7C00; // ±inf
+        }
+        // NaN: keep the top 10 payload bits; if they are all zero the
+        // payload lived below the kept range — force the quiet bit so
+        // the result stays a NaN.
+        let payload = ((abs >> 13) & 0x03FF) as u16;
+        return sign | 0x7C00 | if payload == 0 { 0x0200 } else { payload };
+    }
+    let exp32 = ((abs >> 23) as i32) - 127;
+    let man32 = abs & 0x007F_FFFF;
+    if exp32 >= 16 {
+        return sign | 0x7C00; // above the f16 range even before rounding
+    }
+    if exp32 >= -14 {
+        // Normal f16 range: drop 13 mantissa bits with RN-even. A carry
+        // out of the mantissa propagates into the exponent, which also
+        // rounds 65520.. up to +inf, exactly as IEEE requires.
+        let base = (((exp32 + 15) as u32) << 10) | (man32 >> 13);
+        let round = man32 & 0x1000;
+        let sticky = man32 & 0x0FFF;
+        let lsb = man32 & 0x2000;
+        let inc = if round != 0 && (sticky != 0 || lsb != 0) { 1 } else { 0 };
+        return sign | (base + inc) as u16;
+    }
+    if exp32 < -25 {
+        // Below half the smallest subnormal (this also catches every
+        // f32 subnormal, whose biased exponent field is 0): round to ±0.
+        return sign;
+    }
+    // f16 subnormal: shift the 24-bit significand (implicit one
+    // restored) right by 14..=24 bits with RN-even. Rounding up from
+    // the largest subnormal naturally carries into the smallest normal.
+    let man = man32 | 0x0080_0000;
+    let shift = (-exp32 - 1) as u32;
+    let out = man >> shift;
+    let rem = man & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    let inc = if rem > half || (rem == half && (out & 1) != 0) { 1 } else { 0 };
+    sign | (out + inc) as u16
+}
+
+/// Widen a bf16 bit pattern to the equivalent f32 bit pattern (exact).
+pub const fn bf16_bits_to_f32_bits(b: u16) -> u32 {
+    (b as u32) << 16
+}
+
+/// Narrow an f32 bit pattern to bf16, rounding to nearest-even.
+pub const fn f32_bits_to_bf16_bits(bits: u32) -> u16 {
+    let abs = bits & 0x7FFF_FFFF;
+    if abs > 0x7F80_0000 {
+        // NaN: truncating keeps the top 7 payload bits; when they are
+        // all zero, force the quiet bit so the result stays a NaN. A
+        // bf16-originated NaN always keeps its bits (its payload *is*
+        // the top 7 bits), which the round-trip sweep relies on.
+        let out = (bits >> 16) as u16;
+        return if out & 0x007F == 0 { out | 0x0040 } else { out };
+    }
+    // RN-even by addition: 0x7FFF + LSB-of-result, then truncate. The
+    // carry propagates through the exponent, rounding values above the
+    // bf16 range to ±inf.
+    let round = 0x7FFF + ((bits >> 16) & 1);
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// Widen an f16 bit pattern to an `f32` value (exact).
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    f32::from_bits(f16_bits_to_f32_bits(h))
+}
+
+/// Narrow an `f32` value to an f16 bit pattern (round to nearest-even).
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    f32_bits_to_f16_bits(x.to_bits())
+}
+
+/// Widen a bf16 bit pattern to an `f32` value (exact).
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits(bf16_bits_to_f32_bits(b))
+}
+
+/// Narrow an `f32` value to a bf16 bit pattern (round to nearest-even).
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    f32_bits_to_bf16_bits(x.to_bits())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_known_values() {
+        assert_eq!(f16_to_f32(0x0000), 0.0);
+        assert!(f16_to_f32(0x8000).is_sign_negative());
+        assert_eq!(f16_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_to_f32(0xC000), -2.0);
+        assert_eq!(f16_to_f32(0x7BFF), 65504.0); // max finite
+        assert_eq!(f16_to_f32(0x0001), 2.0f32.powi(-24)); // min subnormal
+        assert_eq!(f16_to_f32(0x0400), 2.0f32.powi(-14)); // min normal
+        assert_eq!(f16_to_f32(0x7C00), f32::INFINITY);
+        assert_eq!(f16_to_f32(0xFC00), f32::NEG_INFINITY);
+        assert!(f16_to_f32(0x7E00).is_nan());
+    }
+
+    #[test]
+    fn f16_narrowing_rounds_to_nearest_even() {
+        assert_eq!(f32_to_f16(1.0), 0x3C00);
+        assert_eq!(f32_to_f16(65504.0), 0x7BFF);
+        assert_eq!(f32_to_f16(65520.0), 0x7C00); // ties up to inf
+        assert_eq!(f32_to_f16(65519.99), 0x7BFF); // just under the tie
+        assert_eq!(f32_to_f16(1e30), 0x7C00); // far overflow
+        assert_eq!(f32_to_f16(-1e30), 0xFC00);
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16;
+        // ties-to-even keeps the even mantissa (1.0).
+        assert_eq!(f32_to_f16(1.0 + 2.0f32.powi(-11)), 0x3C00);
+        // The next representable f32 above the tie rounds up.
+        assert_eq!(f32_to_f16(f32::from_bits((1.0f32 + 2.0f32.powi(-11)).to_bits() + 1)), 0x3C01);
+        // Halfway between the first and second f16 step above 1.0
+        // (odd mantissa) rounds up to even.
+        assert_eq!(f32_to_f16(1.0 + 3.0 * 2.0f32.powi(-11)), 0x3C02);
+        // Underflow: half the smallest subnormal ties to even (zero);
+        // anything above it rounds to the smallest subnormal.
+        assert_eq!(f32_to_f16(2.0f32.powi(-25)), 0x0000);
+        assert_eq!(f32_to_f16(2.0f32.powi(-25) * 1.0001), 0x0001);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        // f32 subnormals flush to signed zero.
+        assert_eq!(f32_to_f16(f32::from_bits(0x0000_0001)), 0x0000);
+        assert_eq!(f32_to_f16(f32::from_bits(0x8000_0001)), 0x8000);
+    }
+
+    #[test]
+    fn bf16_known_values_and_rounding() {
+        assert_eq!(bf16_to_f32(0x3F80), 1.0);
+        assert_eq!(bf16_to_f32(0xC000), -2.0);
+        assert_eq!(bf16_to_f32(0x7F80), f32::INFINITY);
+        assert!(bf16_to_f32(0x7FC0).is_nan());
+        assert_eq!(f32_to_bf16(1.0), 0x3F80);
+        // Truncation boundary: 1 + 2^-8 is halfway; even stays.
+        assert_eq!(f32_to_bf16(1.0 + 2.0f32.powi(-8)), 0x3F80);
+        assert_eq!(f32_to_bf16(1.0 + 3.0 * 2.0f32.powi(-8)), 0x3F82);
+        assert_eq!(f32_to_bf16(f32::MAX), 0x7F80); // rounds up to inf
+        assert_eq!(f32_to_bf16(f32::NEG_INFINITY), 0xFF80);
+    }
+
+    #[test]
+    fn exhaustive_f16_roundtrip_is_identity() {
+        for h in 0..=u16::MAX {
+            let back = f32_bits_to_f16_bits(f16_bits_to_f32_bits(h));
+            assert_eq!(back, h, "f16 pattern {h:#06x} drifted to {back:#06x}");
+        }
+    }
+
+    #[test]
+    fn exhaustive_bf16_roundtrip_is_identity() {
+        for b in 0..=u16::MAX {
+            let back = f32_bits_to_bf16_bits(bf16_bits_to_f32_bits(b));
+            assert_eq!(back, b, "bf16 pattern {b:#06x} drifted to {back:#06x}");
+        }
+    }
+
+    #[test]
+    fn nan_payloads_from_f32_stay_nan() {
+        // f32 NaNs whose payload sits below the kept bits must not
+        // collapse to ±inf on narrowing.
+        for bits in [0x7F80_0001u32, 0x7F80_1000, 0xFF80_0001, 0x7FC0_0000] {
+            let h = f32_bits_to_f16_bits(bits);
+            assert_eq!(h & 0x7C00, 0x7C00);
+            assert_ne!(h & 0x03FF, 0, "f32 NaN {bits:#010x} became inf as f16");
+            let b = f32_bits_to_bf16_bits(bits);
+            assert_eq!(b & 0x7F80, 0x7F80);
+            assert_ne!(b & 0x007F, 0, "f32 NaN {bits:#010x} became inf as bf16");
+        }
+    }
+
+    #[test]
+    fn widening_is_value_exact_for_finite_patterns() {
+        // Spot-check against decimal expansions across the range.
+        let cases: [(u16, f32); 5] = [
+            (0x3555, 0.333251953125), // ~1/3 in f16
+            (0x0401, 6.103515625e-05 * (1.0 + 1.0 / 1024.0)),
+            (0x7800, 32768.0),
+            (0x8401, -6.103515625e-05 * (1.0 + 1.0 / 1024.0)),
+            (0x0010, 2.0f32.powi(-20)),
+        ];
+        for (h, want) in cases {
+            assert_eq!(f16_to_f32(h), want, "pattern {h:#06x}");
+        }
+    }
+}

@@ -1,0 +1,522 @@
+//! Dtype-tagged, zero-copy tensor views for the codec API.
+//!
+//! The paper validates the framework on Llama2-class models whose
+//! intermediate features are half-precision, so the public codec
+//! surface is dtype-generic: a [`TensorRef`] borrows the caller's
+//! storage (f32 slices, f16/bf16 bit-pattern slices, or raw
+//! little-endian wire bytes) without copying, and quantization converts
+//! **on load** — an f16/bf16 tensor is never materialized as an `f32`
+//! `Vec` on the compress path. Symmetrically, [`TensorMut`] lets
+//! `decompress_into` dequantize straight into a caller-owned buffer of
+//! the container's dtype, removing the per-request output allocation
+//! from the serving hot path.
+//!
+//! Half-precision conversions are hand-rolled in [`half`] (the build is
+//! fully offline — no `half` crate) and pinned against the Python
+//! oracle's reference implementation by exhaustive sweeps and CRC
+//! golden vectors.
+
+pub mod half;
+
+use std::fmt;
+
+use crate::error::{Error, Result};
+
+/// Element type of a feature tensor.
+///
+/// The discriminant doubles as the on-wire dtype tag in the dtyped
+/// RSC1/RSC2 container headers ([`Dtype::tag`]); `F32` containers keep
+/// the legacy header with no tag byte, so pre-dtype containers remain
+/// byte-identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    /// IEEE 754 binary32.
+    F32,
+    /// IEEE 754 binary16.
+    F16,
+    /// bfloat16 (truncated binary32 exponent range).
+    Bf16,
+}
+
+impl Dtype {
+    /// Bytes per element.
+    #[inline]
+    pub const fn size_bytes(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F16 | Dtype::Bf16 => 2,
+        }
+    }
+
+    /// The wire tag stored in dtyped container headers.
+    #[inline]
+    pub const fn tag(self) -> u8 {
+        match self {
+            Dtype::F32 => 0,
+            Dtype::F16 => 1,
+            Dtype::Bf16 => 2,
+        }
+    }
+
+    /// Parse a wire tag back into a dtype.
+    pub fn from_tag(tag: u8) -> Result<Self> {
+        match tag {
+            0 => Ok(Dtype::F32),
+            1 => Ok(Dtype::F16),
+            2 => Ok(Dtype::Bf16),
+            t => Err(Error::corrupt(format!("unknown dtype tag {t}"))),
+        }
+    }
+
+    /// True for the two half-precision element types.
+    pub const fn is_half(self) -> bool {
+        matches!(self, Dtype::F16 | Dtype::Bf16)
+    }
+
+    /// Canonical lowercase name (`"f32"`, `"f16"`, `"bf16"`).
+    pub const fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::F16 => "f16",
+            Dtype::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse a canonical name (as accepted by the `dtype` config key).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "f16" => Ok(Dtype::F16),
+            "bf16" => Ok(Dtype::Bf16),
+            other => Err(Error::config(format!(
+                "unknown dtype '{other}' (expected f32, f16, or bf16)"
+            ))),
+        }
+    }
+}
+
+impl fmt::Display for Dtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Borrowed storage behind a [`TensorRef`] / [`TensorMut`].
+///
+/// Typed slices keep their native in-memory representation; `Bytes` is
+/// the little-endian wire representation (what the coordinator's raw
+/// frames carry), decoded element-wise on access.
+enum Storage<'a> {
+    F32(&'a [f32]),
+    Bits16(&'a [u16]),
+    Bytes(&'a [u8]),
+}
+
+/// A borrowed, dtype-tagged view of one flat feature tensor.
+///
+/// `TensorRef` is the input half of the zero-copy codec API:
+/// [`crate::engine::Engine::compress_tensor`] quantizes any dtype with
+/// conversion fused into the load, so non-f32 tensors never produce an
+/// intermediate `f32` `Vec`. Construction is free — no bytes are copied
+/// or converted until the codec iterates.
+pub struct TensorRef<'a> {
+    dtype: Dtype,
+    data: Storage<'a>,
+}
+
+impl<'a> TensorRef<'a> {
+    /// View an `f32` slice.
+    pub fn from_f32(data: &'a [f32]) -> Self {
+        TensorRef { dtype: Dtype::F32, data: Storage::F32(data) }
+    }
+
+    /// View a slice of f16 bit patterns (one `u16` per element).
+    pub fn from_f16_bits(data: &'a [u16]) -> Self {
+        TensorRef { dtype: Dtype::F16, data: Storage::Bits16(data) }
+    }
+
+    /// View a slice of bf16 bit patterns (one `u16` per element).
+    pub fn from_bf16_bits(data: &'a [u16]) -> Self {
+        TensorRef { dtype: Dtype::Bf16, data: Storage::Bits16(data) }
+    }
+
+    /// View half-precision bit patterns as a `dtype`-tagged tensor —
+    /// the dtype-dispatching form of
+    /// [`TensorRef::from_f16_bits`]/[`TensorRef::from_bf16_bits`] the
+    /// eval drivers and CLI share. Panics on [`Dtype::F32`] (a `u16`
+    /// slice cannot hold f32 elements; see [`Dtype::is_half`]).
+    pub fn from_half_bits(dtype: Dtype, bits: &'a [u16]) -> Self {
+        match dtype {
+            Dtype::F16 => TensorRef::from_f16_bits(bits),
+            Dtype::Bf16 => TensorRef::from_bf16_bits(bits),
+            Dtype::F32 => panic!("from_half_bits needs a half-precision dtype"),
+        }
+    }
+
+    /// View raw little-endian bytes (the wire representation of `dtype`
+    /// elements, e.g. a raw coordinator frame payload). Errors when the
+    /// byte count is not a whole number of elements.
+    pub fn from_le_bytes(dtype: Dtype, bytes: &'a [u8]) -> Result<Self> {
+        if bytes.len() % dtype.size_bytes() != 0 {
+            return Err(Error::invalid(format!(
+                "{} bytes is not a whole number of {} elements",
+                bytes.len(),
+                dtype
+            )));
+        }
+        Ok(TensorRef { dtype, data: Storage::Bytes(bytes) })
+    }
+
+    /// Element type of the view.
+    #[inline]
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match &self.data {
+            Storage::F32(s) => s.len(),
+            Storage::Bits16(s) => s.len(),
+            Storage::Bytes(b) => b.len() / self.dtype.size_bytes(),
+        }
+    }
+
+    /// True when the tensor has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total storage bytes behind the view.
+    pub fn byte_len(&self) -> usize {
+        self.len() * self.dtype.size_bytes()
+    }
+
+    /// Visit every element as `f32`, in index order, converting on load
+    /// (the dispatch on storage/dtype is hoisted out of the loop). This
+    /// is the primitive the fused quantizer is built on.
+    pub fn for_each_f32(&self, mut f: impl FnMut(f32)) {
+        match (&self.data, self.dtype) {
+            (Storage::F32(s), _) => {
+                for &x in *s {
+                    f(x);
+                }
+            }
+            (Storage::Bits16(s), Dtype::F16) => {
+                for &h in *s {
+                    f(half::f16_to_f32(h));
+                }
+            }
+            (Storage::Bits16(s), _) => {
+                for &b in *s {
+                    f(half::bf16_to_f32(b));
+                }
+            }
+            (Storage::Bytes(b), Dtype::F32) => {
+                for c in b.chunks_exact(4) {
+                    f(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                }
+            }
+            (Storage::Bytes(b), Dtype::F16) => {
+                for c in b.chunks_exact(2) {
+                    f(half::f16_to_f32(u16::from_le_bytes([c[0], c[1]])));
+                }
+            }
+            (Storage::Bytes(b), Dtype::Bf16) => {
+                for c in b.chunks_exact(2) {
+                    f(half::bf16_to_f32(u16::from_le_bytes([c[0], c[1]])));
+                }
+            }
+        }
+    }
+
+    /// Element `i` converted to `f32`. Loop-heavy code should prefer
+    /// [`TensorRef::for_each_f32`], which hoists the dispatch.
+    pub fn get_f32(&self, i: usize) -> f32 {
+        match (&self.data, self.dtype) {
+            (Storage::F32(s), _) => s[i],
+            (Storage::Bits16(s), Dtype::F16) => half::f16_to_f32(s[i]),
+            (Storage::Bits16(s), _) => half::bf16_to_f32(s[i]),
+            (Storage::Bytes(b), Dtype::F32) => {
+                f32::from_le_bytes([b[4 * i], b[4 * i + 1], b[4 * i + 2], b[4 * i + 3]])
+            }
+            (Storage::Bytes(b), Dtype::F16) => {
+                half::f16_to_f32(u16::from_le_bytes([b[2 * i], b[2 * i + 1]]))
+            }
+            (Storage::Bytes(b), Dtype::Bf16) => {
+                half::bf16_to_f32(u16::from_le_bytes([b[2 * i], b[2 * i + 1]]))
+            }
+        }
+    }
+
+    /// Copy the elements out as their little-endian wire bytes (the
+    /// representation raw coordinator frames carry). Allocates; the
+    /// codec paths never call this.
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.byte_len());
+        match (&self.data, self.dtype) {
+            (Storage::Bytes(b), _) => out.extend_from_slice(b),
+            (Storage::F32(s), _) => {
+                for &x in *s {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            (Storage::Bits16(s), _) => {
+                for &b in *s {
+                    out.extend_from_slice(&b.to_le_bytes());
+                }
+            }
+        }
+        out
+    }
+
+    /// Materialize as `f32` values. Allocates — provided for tests and
+    /// display paths, not the codec hot path (which converts on load).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len());
+        self.for_each_f32(|x| out.push(x));
+        out
+    }
+}
+
+impl fmt::Debug for TensorRef<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "TensorRef({} × {})", self.len(), self.dtype)
+    }
+}
+
+/// Narrow `f32` values to the bit patterns of a half-precision dtype
+/// (round to nearest-even) — the single definition of the "stand-in
+/// for a half-precision head" conversion the eval drivers, CLI, and
+/// benches share. Panics on [`Dtype::F32`] (narrowing to f32 is the
+/// identity and needs no bit vector; see [`Dtype::is_half`]).
+pub fn narrow_to_half_bits(values: &[f32], dtype: Dtype) -> Vec<u16> {
+    match dtype {
+        Dtype::F16 => values.iter().map(|&x| half::f32_to_f16(x)).collect(),
+        Dtype::Bf16 => values.iter().map(|&x| half::f32_to_bf16(x)).collect(),
+        Dtype::F32 => panic!("narrow_to_half_bits needs a half-precision dtype"),
+    }
+}
+
+/// Mutable storage behind a [`TensorMut`].
+enum StorageMut<'a> {
+    F32(&'a mut [f32]),
+    Bits16(&'a mut [u16]),
+    Bytes(&'a mut [u8]),
+}
+
+/// A mutable, dtype-tagged view of a caller-owned output buffer.
+///
+/// `TensorMut` is the output half of the zero-copy codec API:
+/// [`crate::engine::Engine::decompress_into`] dequantizes straight into
+/// it (converting `f32` → dtype element-wise), so steady-state decode
+/// reuses one arena instead of allocating a fresh `Vec` per request.
+pub struct TensorMut<'a> {
+    dtype: Dtype,
+    data: StorageMut<'a>,
+}
+
+impl<'a> TensorMut<'a> {
+    /// View a mutable `f32` slice.
+    pub fn from_f32(data: &'a mut [f32]) -> Self {
+        TensorMut { dtype: Dtype::F32, data: StorageMut::F32(data) }
+    }
+
+    /// View a mutable slice of f16 bit patterns.
+    pub fn from_f16_bits(data: &'a mut [u16]) -> Self {
+        TensorMut { dtype: Dtype::F16, data: StorageMut::Bits16(data) }
+    }
+
+    /// View a mutable slice of bf16 bit patterns.
+    pub fn from_bf16_bits(data: &'a mut [u16]) -> Self {
+        TensorMut { dtype: Dtype::Bf16, data: StorageMut::Bits16(data) }
+    }
+
+    /// View raw little-endian output bytes for `dtype` elements. Errors
+    /// when the byte count is not a whole number of elements.
+    pub fn from_le_bytes(dtype: Dtype, bytes: &'a mut [u8]) -> Result<Self> {
+        if bytes.len() % dtype.size_bytes() != 0 {
+            return Err(Error::invalid(format!(
+                "{} bytes is not a whole number of {} elements",
+                bytes.len(),
+                dtype
+            )));
+        }
+        Ok(TensorMut { dtype, data: StorageMut::Bytes(bytes) })
+    }
+
+    /// Element type of the view.
+    #[inline]
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    /// Element capacity of the buffer.
+    pub fn len(&self) -> usize {
+        match &self.data {
+            StorageMut::F32(s) => s.len(),
+            StorageMut::Bits16(s) => s.len(),
+            StorageMut::Bytes(b) => b.len() / self.dtype.size_bytes(),
+        }
+    }
+
+    /// True when the buffer has no element capacity.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Write elements `0..n` from `value(i)`, converting each `f32` to
+    /// the buffer's dtype (the dispatch is hoisted out of the loop).
+    /// Panics if `n` exceeds the capacity — callers validate first.
+    pub fn store_prefix_f32(&mut self, n: usize, mut value: impl FnMut(usize) -> f32) {
+        assert!(n <= self.len(), "store_prefix_f32 past buffer capacity");
+        match (&mut self.data, self.dtype) {
+            (StorageMut::F32(s), _) => {
+                for (i, slot) in s[..n].iter_mut().enumerate() {
+                    *slot = value(i);
+                }
+            }
+            (StorageMut::Bits16(s), Dtype::F16) => {
+                for (i, slot) in s[..n].iter_mut().enumerate() {
+                    *slot = half::f32_to_f16(value(i));
+                }
+            }
+            (StorageMut::Bits16(s), _) => {
+                for (i, slot) in s[..n].iter_mut().enumerate() {
+                    *slot = half::f32_to_bf16(value(i));
+                }
+            }
+            (StorageMut::Bytes(b), Dtype::F32) => {
+                for (i, c) in b.chunks_exact_mut(4).take(n).enumerate() {
+                    c.copy_from_slice(&value(i).to_le_bytes());
+                }
+            }
+            (StorageMut::Bytes(b), Dtype::F16) => {
+                for (i, c) in b.chunks_exact_mut(2).take(n).enumerate() {
+                    c.copy_from_slice(&half::f32_to_f16(value(i)).to_le_bytes());
+                }
+            }
+            (StorageMut::Bytes(b), Dtype::Bf16) => {
+                for (i, c) in b.chunks_exact_mut(2).take(n).enumerate() {
+                    c.copy_from_slice(&half::f32_to_bf16(value(i)).to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// Re-borrow as an immutable [`TensorRef`] (e.g. to read back what
+    /// a decode just wrote).
+    pub fn as_tensor_ref(&self) -> TensorRef<'_> {
+        match &self.data {
+            StorageMut::F32(s) => TensorRef::from_f32(&s[..]),
+            StorageMut::Bits16(s) => {
+                TensorRef { dtype: self.dtype, data: Storage::Bits16(&s[..]) }
+            }
+            StorageMut::Bytes(b) => {
+                TensorRef { dtype: self.dtype, data: Storage::Bytes(&b[..]) }
+            }
+        }
+    }
+}
+
+impl fmt::Debug for TensorMut<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "TensorMut({} × {})", self.len(), self.dtype)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_tags_roundtrip() {
+        for d in [Dtype::F32, Dtype::F16, Dtype::Bf16] {
+            assert_eq!(Dtype::from_tag(d.tag()).unwrap(), d);
+            assert_eq!(Dtype::parse(d.name()).unwrap(), d);
+        }
+        assert!(Dtype::from_tag(3).is_err());
+        assert!(Dtype::parse("f64").is_err());
+    }
+
+    #[test]
+    fn ref_views_agree_across_storages() {
+        let values = [0.0f32, 1.5, -2.25, 1e-3, 300.0];
+        let f16_bits: Vec<u16> = values.iter().map(|&x| half::f32_to_f16(x)).collect();
+        let as_bits = TensorRef::from_f16_bits(&f16_bits);
+        let le = as_bits.to_le_bytes();
+        let as_bytes = TensorRef::from_le_bytes(Dtype::F16, &le).unwrap();
+        assert_eq!(as_bits.len(), as_bytes.len());
+        assert_eq!(as_bits.byte_len(), le.len());
+        for i in 0..values.len() {
+            assert_eq!(as_bits.get_f32(i), as_bytes.get_f32(i), "i={i}");
+        }
+        assert_eq!(as_bits.to_f32_vec(), as_bytes.to_f32_vec());
+
+        let f32_ref = TensorRef::from_f32(&values);
+        let le32 = f32_ref.to_le_bytes();
+        let f32_bytes = TensorRef::from_le_bytes(Dtype::F32, &le32).unwrap();
+        assert_eq!(f32_bytes.to_f32_vec(), values.to_vec());
+    }
+
+    #[test]
+    fn narrow_helper_matches_per_dtype_paths() {
+        let values = [0.0f32, 1.0, -2.5, 1e-4];
+        for dtype in [Dtype::F16, Dtype::Bf16] {
+            assert!(dtype.is_half());
+            let bits = narrow_to_half_bits(&values, dtype);
+            let manual: Vec<u16> = values
+                .iter()
+                .map(|&x| match dtype {
+                    Dtype::F16 => half::f32_to_f16(x),
+                    _ => half::f32_to_bf16(x),
+                })
+                .collect();
+            assert_eq!(bits, manual);
+            let view = TensorRef::from_half_bits(dtype, &bits);
+            assert_eq!(view.dtype(), dtype);
+            assert_eq!(view.len(), values.len());
+        }
+        assert!(!Dtype::F32.is_half());
+    }
+
+    #[test]
+    fn ragged_byte_views_rejected() {
+        let bytes = [0u8; 7];
+        assert!(TensorRef::from_le_bytes(Dtype::F32, &bytes).is_err());
+        assert!(TensorRef::from_le_bytes(Dtype::F16, &bytes).is_err());
+        let mut bytes = [0u8; 7];
+        assert!(TensorMut::from_le_bytes(Dtype::Bf16, &mut bytes).is_err());
+    }
+
+    #[test]
+    fn mut_views_store_with_conversion() {
+        let src = [1.0f32, -0.5, 0.0, 1.0 / 3.0];
+        let mut bits = [0u16; 4];
+        let mut view = TensorMut::from_bf16_bits(&mut bits);
+        assert_eq!(view.dtype(), Dtype::Bf16);
+        view.store_prefix_f32(4, |i| src[i]);
+        let back = view.as_tensor_ref().to_f32_vec();
+        for (a, b) in src.iter().zip(&back) {
+            assert!((a - b).abs() <= a.abs() * 0.01 + 1e-6, "{a} vs {b}");
+        }
+        assert_eq!(bits[0], half::f32_to_bf16(1.0));
+
+        let mut raw = [0u8; 8];
+        let mut view = TensorMut::from_le_bytes(Dtype::F16, &mut raw).unwrap();
+        view.store_prefix_f32(2, |i| src[i]);
+        let r = TensorRef::from_le_bytes(Dtype::F16, &raw).unwrap();
+        assert_eq!(r.get_f32(0), 1.0);
+        assert_eq!(r.get_f32(1), -0.5);
+        assert_eq!(u16::from_le_bytes([raw[4], raw[5]]), 0);
+    }
+
+    #[test]
+    fn empty_views_behave() {
+        let v: [f32; 0] = [];
+        let r = TensorRef::from_f32(&v);
+        assert!(r.is_empty());
+        assert_eq!(r.len(), 0);
+        assert!(r.to_f32_vec().is_empty());
+    }
+}

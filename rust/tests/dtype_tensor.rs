@@ -1,0 +1,285 @@
+//! Dtype-generic codec API integration tests.
+//!
+//! Three walls:
+//! * **Converter wall** — every one of the 65,536 f16 bit patterns (and
+//!   the full bf16 sweep, NaN/inf/subnormals included) round-trips
+//!   through f32 bit-identically, and all four conversion directions
+//!   are pinned by CRC against the independent Python reference in
+//!   `gen_golden.py` (committed as `golden/half_conv_crcs.hex`; the
+//!   Python side additionally cross-checks `struct`'s native binary16
+//!   codec).
+//! * **API wall** — `compress_tensor`/`decompress_into` round-trips per
+//!   dtype and storage form, plus the error paths (dtype mismatch,
+//!   short buffer).
+//! * **Coordinator wall** — a bf16 tensor compresses and decompresses
+//!   end-to-end through the coordinator's in-proc transport: quantize
+//!   fuses the bf16→f32 conversion into its loads
+//!   (`quant::fit_and_quantize_tensor`), so no intermediate `f32` `Vec`
+//!   is ever allocated on the quantize path, and the cloud side decodes
+//!   zero-copy into a reused bf16 arena.
+
+use rans_sc::coordinator::{Frame, FrameKind, InProcTransport, Transport};
+use rans_sc::engine::{Engine, EngineConfig};
+use rans_sc::pipeline::{self, PipelineConfig};
+use rans_sc::tensor::{half, Dtype, TensorMut, TensorRef};
+use rans_sc::util::crc32;
+use rans_sc::util::prng::Rng;
+
+// ----------------------------------------------------- converter wall
+
+/// The deterministic f32 bit-pattern sweep the narrowing CRCs cover;
+/// mirrors `narrowing_sweep_inputs()` in gen_golden.py exactly.
+fn narrowing_sweep() -> impl Iterator<Item = u32> {
+    let structured = (0..256u32).flat_map(|e| {
+        [0u32, 1, 0x1000, 0x0FFF, 0x2000, 0x003F_FFFF, 0x0040_0000, 0x007F_FFFF]
+            .into_iter()
+            .flat_map(move |m| [0u32, 1].into_iter().map(move |s| (s << 31) | (e << 23) | m))
+    });
+    let mut lcg: u64 = 0x0D_D015_EA5E;
+    let random = (0..1usize << 18).map(move |_| {
+        lcg = lcg
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        (lcg >> 32) as u32
+    });
+    structured.chain(random)
+}
+
+/// The four reference CRCs from gen_golden.py, in emission order:
+/// f16→f32 table, bf16→f32 table, f32→f16 sweep, f32→bf16 sweep.
+fn golden_crcs() -> [u32; 4] {
+    let hex = include_str!("golden/half_conv_crcs.hex").trim();
+    assert_eq!(hex.len(), 32, "half_conv_crcs.hex must hold four LE u32 CRCs");
+    let bytes: Vec<u8> = (0..16)
+        .map(|i| u8::from_str_radix(&hex[2 * i..2 * i + 2], 16).unwrap())
+        .collect();
+    [0, 1, 2, 3].map(|i| u32::from_le_bytes(bytes[4 * i..4 * i + 4].try_into().unwrap()))
+}
+
+#[test]
+fn exhaustive_f16_and_bf16_roundtrip_through_f32() {
+    for bits in 0..=u16::MAX {
+        assert_eq!(
+            half::f32_bits_to_f16_bits(half::f16_bits_to_f32_bits(bits)),
+            bits,
+            "f16 {bits:#06x}"
+        );
+        assert_eq!(
+            half::f32_bits_to_bf16_bits(half::bf16_bits_to_f32_bits(bits)),
+            bits,
+            "bf16 {bits:#06x}"
+        );
+    }
+}
+
+#[test]
+fn widening_tables_match_python_reference_crcs() {
+    let [want_f16, want_bf16, _, _] = golden_crcs();
+    let mut table = Vec::with_capacity(4 << 16);
+    for h in 0..=u16::MAX {
+        table.extend_from_slice(&half::f16_bits_to_f32_bits(h).to_le_bytes());
+    }
+    assert_eq!(crc32::hash(&table), want_f16, "f16→f32 table drifted from gen_golden.py");
+    let mut table = Vec::with_capacity(4 << 16);
+    for b in 0..=u16::MAX {
+        table.extend_from_slice(&half::bf16_bits_to_f32_bits(b).to_le_bytes());
+    }
+    assert_eq!(crc32::hash(&table), want_bf16, "bf16→f32 table drifted from gen_golden.py");
+}
+
+#[test]
+fn narrowing_sweeps_match_python_reference_crcs() {
+    let [_, _, want_f16, want_bf16] = golden_crcs();
+    let mut t16 = Vec::new();
+    let mut tbf = Vec::new();
+    for bits in narrowing_sweep() {
+        t16.extend_from_slice(&half::f32_bits_to_f16_bits(bits).to_le_bytes());
+        tbf.extend_from_slice(&half::f32_bits_to_bf16_bits(bits).to_le_bytes());
+    }
+    assert_eq!(crc32::hash(&t16), want_f16, "f32→f16 sweep drifted from gen_golden.py");
+    assert_eq!(crc32::hash(&tbf), want_bf16, "f32→bf16 sweep drifted from gen_golden.py");
+}
+
+// ----------------------------------------------------------- API wall
+
+fn synth_tensor(seed: u64, len: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..len)
+        .map(|_| if rng.next_f64() < 0.55 { 0.0 } else { rng.normal().abs() as f32 * 1.5 })
+        .collect()
+}
+
+#[test]
+fn every_dtype_and_storage_roundtrips_through_the_public_api() {
+    let data = synth_tensor(1, 6000);
+    let cfg = PipelineConfig::paper(6);
+    let f16: Vec<u16> = data.iter().map(|&x| half::f32_to_f16(x)).collect();
+    let bf16: Vec<u16> = data.iter().map(|&x| half::f32_to_bf16(x)).collect();
+    for dtype in [Dtype::F32, Dtype::F16, Dtype::Bf16] {
+        let tensor = match dtype {
+            Dtype::F32 => TensorRef::from_f32(&data),
+            Dtype::F16 => TensorRef::from_f16_bits(&f16),
+            Dtype::Bf16 => TensorRef::from_bf16_bits(&bf16),
+        };
+        let wire = tensor.to_le_bytes();
+        let (a, _) = pipeline::compress_tensor(tensor, &cfg).unwrap();
+        // The raw-bytes storage form of the same tensor compresses to
+        // the same container.
+        let (b, _) = pipeline::compress_tensor(
+            TensorRef::from_le_bytes(dtype, &wire).unwrap(),
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(a, b, "{dtype}: typed and raw-byte views must agree");
+        // Zero-copy decode into a raw little-endian byte buffer matches
+        // the typed buffer element-for-element.
+        let mut raw_out = vec![0u8; wire.len()];
+        let info = pipeline::decompress_into(
+            &a,
+            TensorMut::from_le_bytes(dtype, &mut raw_out).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(info.dtype, dtype);
+        assert_eq!(info.elements, data.len());
+        let restored = TensorRef::from_le_bytes(dtype, &raw_out).unwrap().to_f32_vec();
+        let widened = TensorRef::from_le_bytes(dtype, &wire).unwrap().to_f32_vec();
+        for (i, (orig, got)) in widened.iter().zip(&restored).enumerate() {
+            let tol = info.params.scale * 1.01 + orig.abs() * 0.01 + 1e-5;
+            assert!((orig - got).abs() <= tol, "{dtype} i={i}: {orig} vs {got}");
+            if *orig == 0.0 {
+                assert_eq!(*got, 0.0, "{dtype} i={i}: sparsity must survive");
+            }
+        }
+    }
+}
+
+#[test]
+fn decompress_into_error_paths() {
+    let data = synth_tensor(2, 2048);
+    let f16: Vec<u16> = data.iter().map(|&x| half::f32_to_f16(x)).collect();
+    let (bytes, _) =
+        pipeline::compress_tensor(TensorRef::from_f16_bits(&f16), &PipelineConfig::paper(4))
+            .unwrap();
+    // Dtype mismatch against the header tag.
+    let mut bf16_out = vec![0u16; f16.len()];
+    assert!(
+        pipeline::decompress_into(&bytes, TensorMut::from_bf16_bits(&mut bf16_out)).is_err()
+    );
+    let mut f32_out = vec![0.0f32; f16.len()];
+    assert!(pipeline::decompress_into(&bytes, TensorMut::from_f32(&mut f32_out)).is_err());
+    // Short output buffer.
+    let mut short = vec![0u16; f16.len() - 1];
+    assert!(
+        pipeline::decompress_into(&bytes, TensorMut::from_f16_bits(&mut short)).is_err()
+    );
+    // Empty buffer, nonempty container.
+    let mut empty: Vec<u16> = Vec::new();
+    assert!(
+        pipeline::decompress_into(&bytes, TensorMut::from_f16_bits(&mut empty)).is_err()
+    );
+    // The happy path still works after all those rejections.
+    let mut ok = vec![0u16; f16.len()];
+    pipeline::decompress_into(&bytes, TensorMut::from_f16_bits(&mut ok)).unwrap();
+}
+
+// --------------------------------------------------- coordinator wall
+
+/// A bf16 tensor end-to-end through the coordinator's in-proc
+/// transport: edge-side `compress_tensor` (quantize fuses the bf16→f32
+/// conversion into its loads — no intermediate `f32` `Vec` exists on
+/// the quantize path, by construction of
+/// `quant::fit_and_quantize_tensor`), the `InferLm` frame over the
+/// wire, and a cloud-side zero-copy `decompress_into` a reused bf16
+/// arena.
+#[test]
+fn bf16_end_to_end_through_inproc_transport() {
+    let hidden = synth_tensor(3, 4096);
+    let bf16: Vec<u16> = hidden.iter().map(|&x| half::f32_to_bf16(x)).collect();
+    let n = bf16.len();
+
+    let (mut edge_end, mut cloud_end) = InProcTransport::pair();
+    let server = std::thread::spawn(move || {
+        let engine = Engine::new(EngineConfig { workers: 2, ..EngineConfig::default() });
+        // The decode arena is allocated once and reused across requests
+        // (sized generously; decompress_into writes a prefix).
+        let mut arena = vec![0u16; 1 << 16];
+        loop {
+            let frame = match cloud_end.recv() {
+                Ok(f) => f,
+                Err(_) => return,
+            };
+            match frame.kind {
+                FrameKind::InferLm { payload, .. } => {
+                    let info = engine
+                        .decompress_into(&payload, TensorMut::from_bf16_bits(&mut arena))
+                        .unwrap();
+                    assert_eq!(info.dtype, Dtype::Bf16, "header dtype tag must survive");
+                    // Stand-in tail compute: widen the decoded features.
+                    let logits =
+                        TensorRef::from_bf16_bits(&arena[..info.elements]).to_f32_vec();
+                    cloud_end
+                        .send(&Frame {
+                            request_id: frame.request_id,
+                            kind: FrameKind::Logits {
+                                data: logits,
+                                decode_ms: 0.0,
+                                compute_ms: 0.0,
+                            },
+                        })
+                        .unwrap();
+                }
+                FrameKind::Shutdown => {
+                    let _ = cloud_end.send(&Frame {
+                        request_id: frame.request_id,
+                        kind: FrameKind::Pong,
+                    });
+                    return;
+                }
+                other => panic!("unexpected frame {other:?}"),
+            }
+        }
+    });
+
+    // Edge side: compress the borrowed bf16 tensor and ship it. Two
+    // requests exercise arena reuse on the cloud side.
+    for req in 1..=2u64 {
+        let (container, stats) = pipeline::compress_tensor(
+            TensorRef::from_bf16_bits(&bf16),
+            &PipelineConfig::paper(6),
+        )
+        .unwrap();
+        assert!(container.len() < 2 * n, "must beat raw bf16 bytes");
+        assert_eq!(stats.total_bytes, container.len());
+        edge_end
+            .send(&Frame {
+                request_id: req,
+                kind: FrameKind::InferLm { model: "llama_mini_s".into(), payload: container },
+            })
+            .unwrap();
+        let reply = edge_end.recv().unwrap();
+        assert_eq!(reply.request_id, req);
+        let FrameKind::Logits { data, .. } = reply.kind else {
+            panic!("expected logits, got {:?}", reply.kind)
+        };
+        assert_eq!(data.len(), n);
+        // Reconstruction error bounded by the quantization step on the
+        // widened values.
+        let widened: Vec<f32> = bf16.iter().map(|&b| half::bf16_to_f32(b)).collect();
+        let params = rans_sc::quant::fit_and_quantize_tensor(
+            6,
+            &TensorRef::from_bf16_bits(&bf16),
+        )
+        .unwrap()
+        .0;
+        for (i, (orig, got)) in widened.iter().zip(&data).enumerate() {
+            let tol = params.scale * 1.01 + orig.abs() * 0.01 + 1e-5;
+            assert!((orig - got).abs() <= tol, "i={i}: {orig} vs {got}");
+            if *orig == 0.0 {
+                assert_eq!(*got, 0.0, "i={i}: sparsity must survive the link");
+            }
+        }
+    }
+    edge_end.send(&Frame { request_id: 99, kind: FrameKind::Shutdown }).unwrap();
+    let _ = edge_end.recv();
+    server.join().unwrap();
+}

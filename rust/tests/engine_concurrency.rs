@@ -42,6 +42,7 @@ fn serial_reference(symbols: &[u16], params: QuantParams, cfg: &PipelineConfig) 
     };
     let payload = encode_interleaved(&d, &table, cfg.lanes, false).unwrap();
     Container {
+        dtype: rans_sc::tensor::Dtype::F32,
         params,
         orig_len: symbols.len(),
         n_rows,
@@ -90,7 +91,7 @@ fn pipeline_wrappers_route_through_shared_engine() {
     assert_eq!(a, b);
     assert_eq!(&a[0..4], b"RSC1");
     assert_eq!(stats.total_bytes, a.len());
-    let back = pipeline::decompress(&a, true).unwrap();
+    let back = pipeline::decompress(&a).unwrap();
     assert_eq!(back.len(), data.len());
 }
 
@@ -137,7 +138,7 @@ fn concurrent_roundtrips_through_one_shared_engine() {
                         "thread {t} item {i}: pooled vs serial bytes diverged"
                     );
                     let (back, back_params) =
-                        engine.decompress_to_symbols(&bytes_par, true).unwrap();
+                        engine.decompress_to_symbols(&bytes_par).unwrap();
                     assert_eq!(back, symbols, "thread {t} item {i}");
                     assert_eq!(back_params, params);
                 }
@@ -152,6 +153,7 @@ fn concurrent_v2_roundtrips() {
         workers: 4,
         format: ContainerFormat::ChunkedV2,
         chunk_symbols: 700,
+        decode_parallel: None,
     }));
     std::thread::scope(|s| {
         for t in 0..6usize {
@@ -163,7 +165,7 @@ fn concurrent_v2_roundtrips() {
                 let (bytes, _) = engine
                     .compress_quantized(&symbols, params, &PipelineConfig::paper(4))
                     .unwrap();
-                let (back, _) = engine.decompress_to_symbols(&bytes, true).unwrap();
+                let (back, _) = engine.decompress_to_symbols(&bytes).unwrap();
                 assert_eq!(back, symbols, "thread {t}");
             });
         }
@@ -176,6 +178,7 @@ fn chunked_v2_every_byte_flip_rejected() {
         workers: 2,
         format: ContainerFormat::ChunkedV2,
         chunk_symbols: 400,
+        decode_parallel: None,
     });
     let data = synth_tensor(21, 3000);
     let (bytes, _) = engine.compress(&data, &PipelineConfig::paper(4)).unwrap();
@@ -186,7 +189,7 @@ fn chunked_v2_every_byte_flip_rejected() {
         let mut bad = bytes.clone();
         bad[i] ^= 0x40;
         assert!(
-            engine.decompress_to_symbols(&bad, false).is_err(),
+            engine.decompress_to_symbols(&bad).is_err(),
             "flip at byte {i} undetected"
         );
     }
@@ -198,12 +201,13 @@ fn chunked_v2_truncation_rejected() {
         workers: 2,
         format: ContainerFormat::ChunkedV2,
         chunk_symbols: 512,
+        decode_parallel: None,
     });
     let data = synth_tensor(22, 4096);
     let (bytes, _) = engine.compress(&data, &PipelineConfig::paper(4)).unwrap();
     for cut in [0, 3, 16, bytes.len() / 3, bytes.len() / 2, bytes.len() - 1] {
         assert!(
-            engine.decompress_to_symbols(&bytes[..cut], true).is_err(),
+            engine.decompress_to_symbols(&bytes[..cut]).is_err(),
             "cut at {cut} undetected"
         );
     }
@@ -217,6 +221,7 @@ fn chunked_v2_partial_decode_survives_unrelated_corruption() {
         workers: 2,
         format: ContainerFormat::ChunkedV2,
         chunk_symbols: 300,
+        decode_parallel: None,
     });
     let data = synth_tensor(23, 4000);
     let (mut bytes, _) = engine.compress(&data, &PipelineConfig::paper(4)).unwrap();

@@ -248,6 +248,157 @@ def rans_decode_multistate(data, count, freq, cdf, n):
     return out
 
 
+# ------------------------------------------- f16 / bf16 reference conversions
+#
+# Mirrors rust/src/tensor/half.rs bit for bit. Widening is exact;
+# narrowing is round-to-nearest-even; NaNs keep their top payload bits
+# (quiet bit forced if the payload would vanish), which makes every
+# half -> f32 -> half round trip the identity. Validated here against
+# CPython's native binary16 codec (struct '<e') for all finite values,
+# and pinned for the Rust side by the CRC table in half_conv_crcs.hex.
+
+
+def f16_bits_to_f32_bits(h):
+    sign = (h & 0x8000) << 16
+    exp = (h >> 10) & 0x1F
+    man = h & 0x03FF
+    if exp == 0:
+        if man == 0:
+            return sign
+        shift = 0
+        m = man
+        while m < 0x400:  # renormalize the subnormal significand
+            m <<= 1
+            shift += 1
+        exp32 = 113 - shift
+        man32 = (man << (shift + 13)) & 0x007FFFFF
+        return sign | (exp32 << 23) | man32
+    if exp == 0x1F:
+        return sign | 0x7F800000 | (man << 13)
+    return sign | ((exp + 112) << 23) | (man << 13)
+
+
+def f32_bits_to_f16_bits(bits):
+    sign = (bits >> 16) & 0x8000
+    absb = bits & 0x7FFFFFFF
+    if absb >= 0x7F800000:
+        if absb == 0x7F800000:
+            return sign | 0x7C00
+        payload = (absb >> 13) & 0x3FF
+        return sign | 0x7C00 | (payload if payload else 0x200)
+    exp32 = (absb >> 23) - 127
+    man32 = absb & 0x007FFFFF
+    if exp32 >= 16:
+        return sign | 0x7C00
+    if exp32 >= -14:
+        base = ((exp32 + 15) << 10) | (man32 >> 13)
+        rnd = man32 & 0x1000
+        sticky = man32 & 0x0FFF
+        lsb = man32 & 0x2000
+        if rnd and (sticky or lsb):
+            base += 1
+        return sign | base
+    if exp32 < -25:
+        return sign
+    man = man32 | 0x00800000
+    shift = -exp32 - 1
+    out = man >> shift
+    rem = man & ((1 << shift) - 1)
+    half = 1 << (shift - 1)
+    if rem > half or (rem == half and (out & 1)):
+        out += 1
+    return sign | out
+
+
+def bf16_bits_to_f32_bits(b):
+    return b << 16
+
+
+def f32_bits_to_bf16_bits(bits):
+    absb = bits & 0x7FFFFFFF
+    if absb > 0x7F800000:
+        out = (bits >> 16) & 0xFFFF
+        if out & 0x7F == 0:
+            out |= 0x40
+        return out
+    rnd = 0x7FFF + ((bits >> 16) & 1)
+    return ((bits + rnd) >> 16) & 0xFFFF
+
+
+def narrowing_sweep_inputs():
+    """The deterministic f32 bit-pattern sweep the f32->f16/bf16 CRC
+    goldens cover; mirrored exactly in rust/tests/dtype_tensor.rs.
+    Structured part: every exponent x {empty, min, round-bit, sticky,
+    lsb, near-full, implicit-carry, full} mantissas x both signs.
+    Random part: 2^18 LCG draws (high 32 bits of a 64-bit LCG)."""
+    for e in range(256):
+        for m in (0, 1, 0x1000, 0x0FFF, 0x2000, 0x3FFFFF, 0x400000, 0x7FFFFF):
+            for s in (0, 1):
+                yield (s << 31) | (e << 23) | m
+    lcg = 0x0DD015EA5E
+    for _ in range(1 << 18):
+        lcg = (lcg * 6364136223846793005 + 1442695040888963407) % (1 << 64)
+        yield lcg >> 32
+
+
+def validate_half_conversions():
+    """Exhaustive checks of the reference conversions against CPython's
+    native binary16 codec, plus the round-trip identities the Rust test
+    wall relies on."""
+    for h in range(1 << 16):
+        w = f16_bits_to_f32_bits(h)
+        if (h & 0x7C00) == 0x7C00 and (h & 0x03FF):
+            assert w & 0x7FFFFFFF > 0x7F800000, f"f16 NaN {h:#06x} widened non-NaN"
+        else:
+            # struct's binary16 codec is the independent oracle for all
+            # non-NaN values (payloads do not survive float()).
+            val = struct.unpack("<e", struct.pack("<H", h))[0]
+            assert struct.unpack("<I", struct.pack("<f", val))[0] == w, f"h={h:#06x}"
+        assert f32_bits_to_f16_bits(w) == h, f"f16 roundtrip {h:#06x}"
+    for b in range(1 << 16):
+        assert f32_bits_to_bf16_bits(bf16_bits_to_f32_bits(b)) == b, f"bf16 {b:#06x}"
+    # Narrowing vs struct on the structured sweep (finite results only).
+    checked = 0
+    for bits in narrowing_sweep_inputs():
+        absb = bits & 0x7FFFFFFF
+        if absb > 0x7F800000:
+            out = f32_bits_to_f16_bits(bits)
+            assert (out & 0x7C00) == 0x7C00 and (out & 0x3FF), "NaN lost"
+            continue
+        val = struct.unpack("<f", struct.pack("<I", bits))[0]
+        try:
+            want = struct.unpack("<H", struct.pack("<e", val))[0]
+        except OverflowError:
+            want = 0x7C00 | ((bits >> 16) & 0x8000)
+        assert f32_bits_to_f16_bits(bits) == want, f"bits={bits:#010x}"
+        checked += 1
+    print(f"half conversions OK (f16/bf16 exhaustive; {checked} narrowing patterns vs struct)")
+
+
+def emit_half_conv_crcs():
+    """Four CRC-32s pinning the conversion tables for the Rust side:
+    f16->f32 (all 2^16), bf16->f32 (all 2^16), f32->f16 and f32->bf16
+    over narrowing_sweep_inputs(). Each table is the LE byte stream of
+    the outputs in input order."""
+    t = bytearray()
+    for h in range(1 << 16):
+        t.extend(struct.pack("<I", f16_bits_to_f32_bits(h)))
+    crc_f16_w = zlib.crc32(bytes(t))
+    t = bytearray()
+    for b in range(1 << 16):
+        t.extend(struct.pack("<I", bf16_bits_to_f32_bits(b)))
+    crc_bf16_w = zlib.crc32(bytes(t))
+    t16 = bytearray()
+    tbf = bytearray()
+    for bits in narrowing_sweep_inputs():
+        t16.extend(struct.pack("<H", f32_bits_to_f16_bits(bits)))
+        tbf.extend(struct.pack("<H", f32_bits_to_bf16_bits(bits)))
+    crc_f16_n = zlib.crc32(bytes(t16))
+    crc_bf16_n = zlib.crc32(bytes(tbf))
+    out = struct.pack("<IIII", crc_f16_w, crc_bf16_w, crc_f16_n, crc_bf16_n)
+    emit("half_conv_crcs.hex", out)
+
+
 # -------------------------------------------------- reciprocal validation
 
 
@@ -411,10 +562,19 @@ def golden_symbols(q, t):
     return out
 
 
-def container_v1(q, scale_bytes, zero, orig_len, n_rows, nnz, alphabet, freq, payload):
+def container_v1(q, scale_bytes, zero, orig_len, n_rows, nnz, alphabet, freq, payload,
+                 dtype=0):
+    """RSC1 container. dtype 0 (f32) keeps the legacy version-1 header
+    byte-identically; dtype 1 (f16) / 2 (bf16) emit version 2 with a
+    dtype tag byte after q — mirroring pipeline/container.rs."""
     out = bytearray(b"RSC1")
-    out.append(1)
-    out.append(q)
+    if dtype == 0:
+        out.append(1)
+        out.append(q)
+    else:
+        out.append(2)
+        out.append(q)
+        out.append(dtype)
     out.extend(scale_bytes)
     write_zigzag(out, zero)
     write_varint(out, orig_len)
@@ -428,10 +588,19 @@ def container_v1(q, scale_bytes, zero, orig_len, n_rows, nnz, alphabet, freq, pa
     return bytes(out)
 
 
-def container_v2(q, scale_bytes, zero, orig_len, n_rows, nnz, alphabet, freq, chunks):
+def container_v2(q, scale_bytes, zero, orig_len, n_rows, nnz, alphabet, freq, chunks,
+                 dtype=0):
+    """RSC2 chunked container. dtype 0 keeps the legacy version-2
+    header; non-zero dtypes emit version 3 with a tag byte after q —
+    mirroring engine/chunked.rs."""
     head = bytearray(b"RSC2")
-    head.append(2)
-    head.append(q)
+    if dtype == 0:
+        head.append(2)
+        head.append(q)
+    else:
+        head.append(3)
+        head.append(q)
+        head.append(dtype)
     head.extend(scale_bytes)
     write_zigzag(head, zero)
     write_varint(head, orig_len)
@@ -538,6 +707,60 @@ def generate_goldens():
             container_v2(q, scale_bytes, zero, t, n_rows, nnz, alphabet, freq, chunks),
         )
 
+    # Dtype-tagged containers (the f16/bf16 LM wire format): the same
+    # Q=4 golden symbol stream under every non-f32 header shape — v1
+    # single- and multi-lane, a v2 multi-state stream inside a dtyped
+    # RSC1, and both dtypes through the chunked RSC2. Symbols and
+    # payloads are dtype-independent by design (the tag only names the
+    # reconstruction target), so these pin exactly the header bytes.
+    q = 4
+    symbols = golden_symbols(q, t)
+    values, cols, row_counts = mod_csr(symbols, n_rows, n_cols, zero)
+    nnz = len(values)
+    d = values + cols + row_counts
+    alphabet = max(1 << q, n_cols, max(row_counts) + 1)
+    counts = [0] * alphabet
+    for s in d:
+        counts[s] += 1
+    freq = from_counts(counts)
+    cdf = cdf_of(freq)
+    F16, BF16 = 1, 2
+    for dtype, name in ((F16, "f16"), (BF16, "bf16")):
+        payloads = [
+            rans_encode_recip(d[lo:hi], freq, cdf) for lo, hi in lane_spans(len(d), 8)
+        ]
+        stream = assemble_stream(8, len(d), payloads)
+        emit(
+            f"v1{name}_q4_lanes8.hex",
+            container_v1(q, scale_bytes, zero, t, n_rows, nnz, alphabet, freq, stream,
+                         dtype=dtype),
+        )
+        n_chunks = max(min((len(d) + chunk_symbols - 1) // chunk_symbols, 1 << 20), 1)
+        chunks = []
+        for lo, hi in lane_spans(len(d), n_chunks):
+            chunks.append((hi - lo, rans_encode_recip(d[lo:hi], freq, cdf)))
+        emit(
+            f"v2c{name}_q4.hex",
+            container_v2(q, scale_bytes, zero, t, n_rows, nnz, alphabet, freq, chunks,
+                         dtype=dtype),
+        )
+    # Single-lane bf16 v1, and bf16 with a 4-state v2 stream layout
+    # (dtype tag and stream layout are orthogonal axes).
+    stream = assemble_stream(1, len(d), [rans_encode_recip(d, freq, cdf)])
+    emit(
+        "v1bf16_q4_lanes1.hex",
+        container_v1(q, scale_bytes, zero, t, n_rows, nnz, alphabet, freq, stream,
+                     dtype=BF16),
+    )
+    p = rans_encode_multistate(d, freq, cdf, 4)
+    assert rans_decode_multistate(p, len(d), freq, cdf, 4) == d
+    stream = assemble_stream_v2(1, 4, len(d), [p])
+    emit(
+        "v1bf16s4_q4.hex",
+        container_v1(q, scale_bytes, zero, t, n_rows, nnz, alphabet, freq, stream,
+                     dtype=BF16),
+    )
+
     # Raw single-lane scalar streams: the codec layer alone, no container.
     for q in (2, 4, 8):
         alphabet = 1 << q
@@ -568,9 +791,11 @@ def generate_goldens():
 
 
 def main():
+    validate_half_conversions()
     validate_reciprocal()
     validate_encoders()
     validate_multistate()
+    emit_half_conv_crcs()
     generate_goldens()
     print("all golden vectors written")
 

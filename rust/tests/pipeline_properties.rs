@@ -62,7 +62,7 @@ fn prop_pipeline_symbol_roundtrip() {
                 Ok(x) => x,
                 Err(_) => return false,
             };
-            match pipeline::decompress_to_symbols(&bytes, false) {
+            match pipeline::decompress_to_symbols(&bytes) {
                 Ok((back, back_params)) => back == symbols && back_params == params,
                 Err(_) => false,
             }
@@ -86,7 +86,7 @@ fn prop_pipeline_rejects_any_single_corruption() {
         |(bytes, pos, bit)| {
             let mut bad = bytes.clone();
             bad[*pos] ^= bit;
-            pipeline::decompress(&bad, false).is_err()
+            pipeline::decompress(&bad).is_err()
         },
     );
 }

@@ -131,6 +131,7 @@ fn fuzz_mutated_chunked_v2_container_rejected() {
         workers: 1,
         format: ContainerFormat::ChunkedV2,
         chunk_symbols: 300,
+        decode_parallel: None,
     });
     let data = fuzz_tensor(11, 6000);
     let (bytes, _) = engine.compress(&data, &PipelineConfig::paper(4)).unwrap();
@@ -143,7 +144,7 @@ fn fuzz_mutated_chunked_v2_container_rejected() {
             b[i] ^= 1 << rng.below(8);
             b
         },
-        |b| rans_sc::pipeline::decompress_to_symbols(b, false).is_err(),
+        |b| rans_sc::pipeline::decompress_to_symbols(b).is_err(),
     );
 }
 
@@ -167,7 +168,7 @@ fn fuzz_mutated_v2_multistate_container_rejected() {
                 b[i] ^= 1 << rng.below(8);
                 b
             },
-            |b| rans_sc::pipeline::decompress_to_symbols(b, false).is_err(),
+            |b| rans_sc::pipeline::decompress_to_symbols(b).is_err(),
         );
     }
 }
@@ -182,7 +183,7 @@ fn fuzz_v2_stream_header_garbage_behind_valid_crc() {
     let data = fuzz_tensor(13, 4096);
     let cfg = PipelineConfig::paper(4).with_states(4);
     let (bytes, _) = engine.compress(&data, &cfg).unwrap();
-    let (symbols, _) = engine.decompress_to_symbols(&bytes, false).unwrap();
+    let (symbols, _) = engine.decompress_to_symbols(&bytes).unwrap();
     testutil::check(
         "garbled v2 stream header, CRC fixed up",
         150,
@@ -197,11 +198,69 @@ fn fuzz_v2_stream_header_garbage_behind_valid_crc() {
             }
             c.to_bytes() // fresh CRC over the garbled payload
         },
-        |garbled| match rans_sc::pipeline::decompress_to_symbols(garbled, false) {
+        |garbled| match rans_sc::pipeline::decompress_to_symbols(garbled) {
             Err(_) => true,
             Ok((back, _)) => back != symbols || *garbled == bytes,
         },
     );
+}
+
+/// Dtype-tagged headers (RSC1 version 2 / RSC2 version 3): every
+/// truncation point must produce a clean error from both the symbol
+/// decoder and `decompress_into` — including cuts inside the
+/// one-byte-longer dtyped header region — and any single-bit flip is
+/// still CRC-rejected (the dtype byte sits under the same checksums as
+/// the rest of the header).
+#[test]
+fn fuzz_truncated_and_mutated_dtyped_headers() {
+    use rans_sc::tensor::{half, TensorMut, TensorRef};
+
+    let data = fuzz_tensor(14, 3000);
+    let bf16: Vec<u16> = data.iter().map(|&x| half::f32_to_bf16(x)).collect();
+    let v1 = Engine::new(EngineConfig { workers: 1, ..EngineConfig::default() });
+    let v2 = Engine::new(EngineConfig {
+        workers: 1,
+        format: ContainerFormat::ChunkedV2,
+        chunk_symbols: 500,
+        decode_parallel: None,
+    });
+    let cfg = PipelineConfig::paper(4);
+    for engine in [&v1, &v2] {
+        let (bytes, _) =
+            engine.compress_tensor(TensorRef::from_bf16_bits(&bf16), &cfg).unwrap();
+        // Version byte + dtype tag present as expected.
+        assert!(bytes[4] == 2 || bytes[4] == 3);
+        assert_eq!(bytes[6], rans_sc::tensor::Dtype::Bf16.tag());
+        // Every truncation errors — exhaustive over the header region,
+        // sampled beyond it.
+        let cuts = (0..64.min(bytes.len()))
+            .chain([bytes.len() / 2, bytes.len() - 1]);
+        for cut in cuts {
+            assert!(
+                engine.decompress_to_symbols(&bytes[..cut]).is_err(),
+                "cut {cut} undetected"
+            );
+            let mut out = vec![0u16; data.len()];
+            assert!(
+                engine
+                    .decompress_into(&bytes[..cut], TensorMut::from_bf16_bits(&mut out))
+                    .is_err(),
+                "decompress_into cut {cut} undetected"
+            );
+        }
+        // Bitflips anywhere (dtype byte included) are rejected.
+        testutil::check(
+            "bitflipped dtyped container",
+            150,
+            |rng| {
+                let mut b = bytes.clone();
+                let i = rng.below_usize(b.len());
+                b[i] ^= 1 << rng.below(8);
+                b
+            },
+            |b| engine.decompress_to_symbols(b).is_err(),
+        );
+    }
 }
 
 #[test]

@@ -54,7 +54,7 @@ fn vision_head_tail_roundtrip_matches_raw_path() {
     assert_eq!(symbols.len(), split.feature_len);
     let (container, _) =
         pipeline::compress_quantized(&symbols, params, &PipelineConfig::paper(8)).unwrap();
-    let (dec_syms, dec_params) = pipeline::decompress_to_symbols(&container, true).unwrap();
+    let (dec_syms, dec_params) = pipeline::decompress_to_symbols(&container).unwrap();
     assert_eq!(dec_syms, symbols);
     let logits_q = exec.run_tail(&dec_syms, &dec_params).unwrap();
     assert_eq!(logits_q.len(), logits_raw.len());
@@ -160,6 +160,53 @@ fn cloud_rejects_corrupt_container_gracefully() {
         },
     };
     assert!(matches!(cloud.handle(&frame).kind, FrameKind::ServerError { .. }));
+}
+
+/// The Llama2-style half-precision path over real artifacts: hidden
+/// states narrowed to bf16 on the edge, shipped through
+/// `LmEdgeNode::infer_features` (fused conversion-on-load quantize, no
+/// intermediate f32 Vec), decoded and consumed by the cloud node.
+#[test]
+fn lm_bf16_features_end_to_end() {
+    use rans_sc::tensor::{half, Dtype, TensorRef};
+
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    if manifest.lm.is_empty() {
+        eprintln!("skipping: no LM artifacts");
+        return;
+    }
+    let cloud = Arc::new(CloudNode::new(&dir).unwrap());
+    let (edge_end, mut cloud_end) = InProcTransport::pair();
+    let server = {
+        let cloud = Arc::clone(&cloud);
+        std::thread::spawn(move || cloud.serve_transport(&mut cloud_end as &mut dyn Transport))
+    };
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let pool = ExecPool::new(engine, dir.as_str());
+    let lm_name = manifest.lm[0].name.clone();
+    let exec = Arc::new(LmSplitExec::load(&pool, &manifest, &lm_name).unwrap());
+    let lm = exec.entry.clone();
+    let task = McTask::load(manifest.resolve(&lm.tasks[0].path)).unwrap();
+    let edge = LmEdgeNode::new(
+        Arc::clone(&exec),
+        edge_end,
+        EdgeConfig::paper(&lm_name, lm.split, lm.batch, 6).with_dtype(Dtype::Bf16),
+    );
+    let item = &task.items[0];
+    let hidden = exec.run_head_raw(&task.item_batch(item)).unwrap();
+    let bf16: Vec<u16> = hidden.iter().map(|&x| half::f32_to_bf16(x)).collect();
+    // Wrong dtype is rejected against the edge config…
+    assert!(edge.infer_features(TensorRef::from_f32(&hidden)).is_err());
+    // …the configured bf16 path goes end to end.
+    let out = edge.infer_features(TensorRef::from_bf16_bits(&bf16)).unwrap();
+    assert_eq!(out.logits.len(), lm.batch * lm.seq_len * lm.vocab);
+    assert!(out.payload_bytes < bf16.len() * 2, "must beat raw bf16");
+    // The raw bf16 baseline halves the f32 baseline's wire bytes.
+    let raw = edge.infer_raw_features(TensorRef::from_bf16_bits(&bf16)).unwrap();
+    assert_eq!(raw.payload_bytes, bf16.len() * 2);
+    drop(edge);
+    server.join().unwrap().unwrap();
 }
 
 #[test]

@@ -32,6 +32,13 @@ fn cfg(q: u8, lanes: usize, states: usize, parallel: bool) -> PipelineConfig {
 #[test]
 fn roundtrip_states_by_lanes_by_q() {
     let engine = Engine::new(EngineConfig { workers: 4, ..EngineConfig::default() });
+    // Decode threading is engine config now; a forced-serial twin keeps
+    // both decode paths covered.
+    let serial = Engine::new(EngineConfig {
+        workers: 4,
+        decode_parallel: Some(false),
+        ..EngineConfig::default()
+    });
     let data = synth_tensor(1, 12_288);
     for q in [2u8, 4, 8] {
         let params = QuantParams::fit(q, &data).unwrap();
@@ -41,8 +48,8 @@ fn roundtrip_states_by_lanes_by_q() {
                 let (bytes, _) = engine
                     .compress_quantized(&symbols, params, &cfg(q, lanes, states, true))
                     .unwrap();
-                for parallel in [false, true] {
-                    let (back, p) = engine.decompress_to_symbols(&bytes, parallel).unwrap();
+                for eng in [&engine, &serial] {
+                    let (back, p) = eng.decompress_to_symbols(&bytes).unwrap();
                     assert_eq!(back, symbols, "q={q} states={states} lanes={lanes}");
                     assert_eq!(p, params);
                 }
@@ -67,7 +74,7 @@ fn tiny_tensors_where_lanes_outnumber_symbols() {
                 layout: StreamLayout::MultiState(states),
             };
             let (bytes, _) = engine.compress(&data, &c).unwrap();
-            let back = engine.decompress(&bytes, false).unwrap();
+            let back = engine.decompress(&bytes).unwrap();
             assert_eq!(back.len(), len, "len={len} states={states}");
         }
     }
@@ -117,7 +124,7 @@ fn corrupt_v2_stream_headers_rejected() {
         c.payload[1] = b;
         let garbled = c.to_bytes(); // fresh CRC over the garbled payload
         assert!(
-            engine.decompress_to_symbols(&garbled, false).is_err(),
+            engine.decompress_to_symbols(&garbled).is_err(),
             "states byte {b} must be rejected"
         );
     };
@@ -157,7 +164,7 @@ fn corrupt_v2_stream_headers_rejected() {
         c.payload = payload;
         let garbled = c.to_bytes();
         assert!(
-            engine.decompress_to_symbols(&garbled, false).is_err(),
+            engine.decompress_to_symbols(&garbled).is_err(),
             "truncated per-state payload must be rejected"
         );
     }
@@ -173,7 +180,7 @@ fn pipeline_wrappers_accept_v2_streams() {
         let c = PipelineConfig::paper(4).with_states(states);
         let (bytes, stats) = pipeline::compress(&data, &c).unwrap();
         assert_eq!(stats.total_bytes, bytes.len());
-        let back = pipeline::decompress(&bytes, true).unwrap();
+        let back = pipeline::decompress(&bytes).unwrap();
         assert_eq!(back.len(), data.len(), "states={states}");
     }
 }

@@ -72,7 +72,7 @@ impl Report {
         fast: bool,
         warmup: usize,
         trials: usize,
-        simd_backends: (&str, &str),
+        simd_backends: (&str, &str, &str),
     ) -> Value {
         let rows: Vec<Value> = self
             .rows
@@ -121,6 +121,15 @@ impl Report {
             .field("simd_backend", simd_backends.0)
             .field("simd8_decode_msym_s", self.msym_of("rans_decode_simd8"))
             .field("simd8_backend", simd_backends.1)
+            // Headline NEON numbers: 4-/8-state decode force-pinned to
+            // the NEON backend. The keys are present on every ISA so
+            // the bench-smoke schema never forks: on hosts without NEON
+            // the rows are skipped, the throughputs report 0.0, and
+            // `neon_backend` records "n/a" (CI checks presence, not
+            // truthiness, for exactly this reason).
+            .field("neon_decode_msym_s", self.msym_of("rans_decode_neon4"))
+            .field("neon8_decode_msym_s", self.msym_of("rans_decode_neon8"))
+            .field("neon_backend", simd_backends.2)
             .field("rows", rows)
             .build()
     }
@@ -295,11 +304,12 @@ fn main() {
         );
     }
 
-    // SIMD gather decode (runtime dispatch: SSE4.1 for 4 states, AVX2
-    // for 8; falls back to the scalar loop on hosts without them —
-    // the printed backend records which path actually ran).
+    // SIMD gather decode (runtime dispatch through the backend seam:
+    // SSE4.1/AVX2 on x86_64, NEON on aarch64; falls back to the scalar
+    // loop on hosts without them — the printed backend records which
+    // path actually ran).
     for n in [4usize, 8] {
-        let backend = simd::backend_for(n);
+        let backend = simd::backend_for(n).expect("backend dispatch");
         let ms_stream = encode_multistate(&d, &table, n).unwrap();
         let m = report.add_syms(
             &format!("rans_decode_simd{n}"),
@@ -315,13 +325,39 @@ fn main() {
             backend.name()
         );
     }
-    let simd4_backend = simd::backend_for(4);
-    let simd8_backend = simd::backend_for(8);
+    let simd4_backend = simd::backend_for(4).expect("backend dispatch");
+    let simd8_backend = simd::backend_for(8).expect("backend dispatch");
     if simd4_backend == Backend::Scalar {
-        println!("# note: no SSE4.1 on this host — simd4 row measured the scalar fallback");
+        println!("# note: no 4-state SIMD on this host — simd4 row measured the scalar fallback");
     }
     if simd8_backend == Backend::Scalar {
-        println!("# note: no AVX2 on this host — simd8 row measured the scalar fallback");
+        println!("# note: no 8-state SIMD on this host — simd8 row measured the scalar fallback");
+    }
+
+    // NEON rows, force-pinned through the backend seam where the host
+    // has it (the aarch64 CI leg records real numbers). Elsewhere the
+    // rows are skipped but the JSON headline keys stay present
+    // (0.0 / "n/a"), keeping the bench-smoke schema ISA-independent.
+    let neon_backend = if simd::backend_available(Backend::Neon) { "neon" } else { "n/a" };
+    if simd::backend_available(Backend::Neon) {
+        for n in [4usize, 8] {
+            let ms_stream = encode_multistate(&d, &table, n).unwrap();
+            let m = report.add_syms(
+                &format!("rans_decode_neon{n}"),
+                measure(warmup, trials, || {
+                    simd::decode_multistate_with(&ms_stream, d.len(), &table, n, Backend::Neon)
+                        .unwrap()
+                }),
+                d.len(),
+            );
+            println!(
+                "rANS decode neon {n}st {:>12}  ({:>8.1} Msym/s, forced)",
+                m.fmt_mean_std(),
+                d.len() as f64 / 1e6 / (m.mean_ms() / 1e3)
+            );
+        }
+    } else {
+        println!("# note: no NEON on this host — neon rows reported n/a");
     }
 
     // Scoped-thread fan-out baseline: what the pre-engine hot path paid
@@ -416,7 +452,7 @@ fn main() {
     let json_path =
         std::env::var("RANS_SC_BENCH_JSON").unwrap_or_else(|_| "BENCH_perf_hotpath.json".into());
     if json_path != "0" {
-        let backends = (simd4_backend.name(), simd8_backend.name());
+        let backends = (simd4_backend.name(), simd8_backend.name(), neon_backend);
         let json = report.to_json(t, q, fast, warmup, trials, backends).to_string_pretty();
         match std::fs::write(&json_path, &json) {
             Ok(()) => println!("# wrote {json_path}"),

@@ -39,6 +39,11 @@ pub struct AppConfig {
     pub dtype: Dtype,
     /// Thread the rANS lanes on encode.
     pub parallel: bool,
+    /// Run the one-shot `lanes × states` microbenchmark autotuner
+    /// ([`crate::engine::autotune`]) at first use and adopt its pick
+    /// for any knob not explicitly set (`--set autotune=off` to
+    /// disable).
+    pub autotune: bool,
     /// Cloud listen / connect address.
     pub addr: String,
     /// Wireless channel parameters.
@@ -47,6 +52,12 @@ pub struct AppConfig {
     pub buckets: Vec<usize>,
     /// Batcher max wait, microseconds.
     pub batch_wait_us: u64,
+    /// True once `lanes` was set explicitly (file or override) — the
+    /// autotuner never overrides an explicit choice. Recorded configs
+    /// re-pin on load, so experiment records reproduce cross-machine.
+    lanes_pinned: bool,
+    /// True once `states` was set explicitly (see `lanes_pinned`).
+    states_pinned: bool,
 }
 
 impl Default for AppConfig {
@@ -61,10 +72,13 @@ impl Default for AppConfig {
             states: 1,
             dtype: Dtype::F32,
             parallel: true,
+            autotune: true,
             addr: "127.0.0.1:7439".into(),
             channel: ChannelParams::default(),
             buckets: vec![1, 8],
             batch_wait_us: 2000,
+            lanes_pinned: false,
+            states_pinned: false,
         }
     }
 }
@@ -105,7 +119,10 @@ impl AppConfig {
                 }
                 self.q = q as u8;
             }
-            "lanes" => self.lanes = val.as_usize().ok_or_else(bad)?,
+            "lanes" => {
+                self.lanes = val.as_usize().ok_or_else(bad)?;
+                self.lanes_pinned = true;
+            }
             "states" => {
                 let s = val.as_usize().ok_or_else(bad)?;
                 if !crate::rans::multistate::supported_states(s) {
@@ -114,12 +131,24 @@ impl AppConfig {
                     )));
                 }
                 self.states = s;
+                self.states_pinned = true;
             }
             "dtype" => {
                 let s = val.as_str().ok_or_else(bad)?;
                 self.dtype = Dtype::parse(s)?;
             }
             "parallel" => self.parallel = val.as_bool().ok_or_else(bad)?,
+            // Accepts JSON booleans (config files, `--set autotune=false`)
+            // and the on/off spelling the CLI escape hatch documents
+            // (`--set autotune=off`, which arrives as a string).
+            "autotune" => {
+                self.autotune = match (val.as_bool(), val.as_str()) {
+                    (Some(b), _) => b,
+                    (None, Some("on")) => true,
+                    (None, Some("off")) => false,
+                    _ => return Err(bad()),
+                }
+            }
             "addr" => self.addr = val.as_str().ok_or_else(bad)?.into(),
             "buckets" => {
                 let arr = val.as_arr().ok_or_else(bad)?;
@@ -154,6 +183,17 @@ impl AppConfig {
         self.apply_value(key, &val)
     }
 
+    /// True iff `lanes` was set explicitly (file or override) — the
+    /// autotuner leaves pinned knobs alone.
+    pub fn lanes_pinned(&self) -> bool {
+        self.lanes_pinned
+    }
+
+    /// True iff `states` was set explicitly (see [`Self::lanes_pinned`]).
+    pub fn states_pinned(&self) -> bool {
+        self.states_pinned
+    }
+
     /// Serialize the effective config (for experiment records).
     pub fn to_json(&self) -> Value {
         ObjBuilder::new()
@@ -166,6 +206,7 @@ impl AppConfig {
             .field("states", self.states)
             .field("dtype", self.dtype.name())
             .field("parallel", self.parallel)
+            .field("autotune", self.autotune)
             .field("addr", self.addr.as_str())
             .field("buckets", self.buckets.clone())
             .field("batch_wait_us", self.batch_wait_us as usize)
@@ -229,6 +270,19 @@ mod tests {
         assert_eq!(c.states, 4);
         c.apply_override("states=8").unwrap();
         assert_eq!(c.states, 8);
+        assert!(c.states_pinned());
+        assert!(!c.lanes_pinned());
+        c.apply_override("lanes=4").unwrap();
+        assert!(c.lanes_pinned());
+        assert!(c.autotune);
+        c.apply_override("autotune=off").unwrap();
+        assert!(!c.autotune);
+        c.apply_override("autotune=on").unwrap();
+        assert!(c.autotune);
+        c.apply_override("autotune=false").unwrap();
+        assert!(!c.autotune);
+        c.apply_override("autotune=true").unwrap();
+        assert!(c.autotune);
         assert_eq!(c.dtype, Dtype::F32);
         c.apply_override("dtype=bf16").unwrap();
         assert_eq!(c.dtype, Dtype::Bf16);
@@ -254,5 +308,25 @@ mod tests {
         assert!(c.apply_override("dtype=half").is_err());
         assert!(c.apply_override("unknown_key=1").is_err());
         assert!(c.apply_override("sl=x").is_err());
+        assert!(c.apply_override("autotune=maybe").is_err());
+        assert!(c.apply_override("autotune=1").is_err());
+    }
+
+    /// Recorded configs must reproduce cross-machine: serializing pins
+    /// lanes/states on re-load, so the autotuner cannot change them.
+    #[test]
+    fn json_roundtrip_pins_tunable_knobs() {
+        let c = AppConfig::default();
+        assert!(!c.lanes_pinned() && !c.states_pinned());
+        let text = c.to_json().to_string_pretty();
+        let mut c2 = AppConfig::default();
+        c2.apply_json(&json::parse(&text).unwrap()).unwrap();
+        assert!(c2.lanes_pinned() && c2.states_pinned());
+        assert!(c2.autotune);
+        c2.apply_override("autotune=off").unwrap();
+        let text = c2.to_json().to_string_pretty();
+        let mut c3 = AppConfig::default();
+        c3.apply_json(&json::parse(&text).unwrap()).unwrap();
+        assert!(!c3.autotune);
     }
 }

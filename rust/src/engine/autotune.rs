@@ -1,0 +1,167 @@
+//! One-shot `lanes × states` microbenchmark autotuner.
+//!
+//! The best stream shape is a property of the *machine*, not the model:
+//! an 8-state lane only pays off where a SIMD backend covers it (AVX2
+//! on x86_64, NEON on aarch64), thread-level lanes only pay off with
+//! cores to fan out to, and the crossover points differ between a Xeon
+//! and a Jetson. Rather than shipping x86-tuned defaults to every edge
+//! device, the tuner times one round-trip of each candidate
+//! `lanes × states` shape on a synthetic feature-shaped workload at
+//! first use, picks the fastest decode, and caches the pick for the
+//! life of the process ([`tuned`]).
+//!
+//! [`apply`] is the config hook: it adopts the pick into an
+//! [`AppConfig`] unless the user pinned the knob (`--set lanes=…` /
+//! `--set states=…` always win) or disabled tuning
+//! (`--set autotune=off`). Recorded experiment configs re-pin both
+//! knobs on load, so a JSON config replayed on a different machine
+//! reproduces the recorded shape instead of re-tuning.
+//!
+//! The workload is deliberately small (a few milliseconds total): Zipf
+//! symbols at the alphabet size the paper's Q=4 pipeline produces after
+//! AIQ, long enough that per-round-trip cost is dominated by the steady
+//! state of the coders, short enough that first-request latency stays
+//! negligible. The pick only changes *performance*, never bytes: every
+//! candidate shape is a self-describing wire format any decoder
+//! accepts.
+
+use std::sync::OnceLock;
+
+use crate::config::AppConfig;
+use crate::rans::freq::FreqTable;
+use crate::rans::interleaved::{decode_interleaved, encode_interleaved_with_layout, StreamLayout};
+use crate::rans::simd;
+use crate::util::prng::Rng;
+use crate::util::timer;
+
+/// Symbols in the tuning workload — feature-map sized (a 64×8×8
+/// activation block), big enough to amortize per-call setup.
+const TUNE_SYMBOLS: usize = 32 * 1024;
+
+/// Alphabet of the tuning workload: 6-bit, the upper end of the
+/// paper's AIQ bit-widths.
+const TUNE_ALPHABET: usize = 64;
+
+/// The shape the tuner picked for this machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tuning {
+    /// Thread-level lanes.
+    pub lanes: usize,
+    /// Interleaved rANS states per lane.
+    pub states: usize,
+    /// Decode backend the winning shape dispatches to (diagnostics).
+    pub backend: simd::Backend,
+}
+
+/// Time one candidate shape; `None` if the shape fails outright (it
+/// never should — all candidates are supported layouts — but a tuner
+/// must not be able to take the pipeline down).
+fn time_candidate(
+    symbols: &[u32],
+    table: &FreqTable,
+    lanes: usize,
+    states: usize,
+) -> Option<f64> {
+    let layout = if states == 1 { StreamLayout::V1 } else { StreamLayout::MultiState(states) };
+    let bytes = encode_interleaved_with_layout(symbols, table, lanes, layout, lanes > 1).ok()?;
+    let decoded = decode_interleaved(&bytes, table, lanes > 1).ok()?;
+    if decoded != symbols {
+        return None;
+    }
+    // Decode-side throughput is what the shape choice actually moves
+    // (the edge device decodes on the critical path), so that is what
+    // scores a candidate. Best-of-3 after one warmup absorbs first-use
+    // table builds and cold caches.
+    let m = timer::measure(1, 3, || decode_interleaved(&bytes, table, lanes > 1));
+    let best = m.samples_ms.iter().copied().fold(f64::INFINITY, f64::min);
+    if best.is_finite() {
+        Some(best)
+    } else {
+        None
+    }
+}
+
+fn run_tuner() -> Tuning {
+    let mut rng = Rng::new(0xA070);
+    let symbols: Vec<u32> =
+        (0..TUNE_SYMBOLS).map(|_| rng.zipf(TUNE_ALPHABET, 1.2) as u32).collect();
+    let table = FreqTable::from_symbols(&symbols, TUNE_ALPHABET);
+
+    // The safe default if every candidate fails: the config defaults.
+    let mut best = (f64::INFINITY, AppConfig::default().lanes, AppConfig::default().states);
+    for &states in &[1usize, 2, 4, 8] {
+        for &lanes in &[1usize, 2, 4, 8] {
+            if let Some(ms) = time_candidate(&symbols, &table, lanes, states) {
+                if ms < best.0 {
+                    best = (ms, lanes, states);
+                }
+            }
+        }
+    }
+    let (_, lanes, states) = best;
+    Tuning { lanes, states, backend: simd::backend_for(states).unwrap_or(simd::Backend::Scalar) }
+}
+
+/// The machine's tuned shape, measured once per process and cached.
+pub fn tuned() -> Tuning {
+    static TUNED: OnceLock<Tuning> = OnceLock::new();
+    *TUNED.get_or_init(run_tuner)
+}
+
+/// Adopt the tuned shape into `cfg`, honoring the escape hatches:
+/// no-op when `autotune=off`, and explicitly set knobs
+/// ([`AppConfig::lanes_pinned`] / [`AppConfig::states_pinned`]) are
+/// never overridden. Returns the tuning when it was consulted.
+pub fn apply(cfg: &mut AppConfig) -> Option<Tuning> {
+    if !cfg.autotune || (cfg.lanes_pinned() && cfg.states_pinned()) {
+        return None;
+    }
+    let t = tuned();
+    if !cfg.lanes_pinned() {
+        cfg.lanes = t.lanes;
+    }
+    if !cfg.states_pinned() {
+        cfg.states = t.states;
+    }
+    Some(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The tuner must always land on a valid, supported shape and be
+    /// stable within a process (OnceLock semantics).
+    #[test]
+    fn tuner_picks_a_supported_shape() {
+        let t = tuned();
+        assert!(matches!(t.lanes, 1 | 2 | 4 | 8), "lanes {}", t.lanes);
+        assert!(crate::rans::multistate::supported_states(t.states), "states {}", t.states);
+        assert!(t.backend.supports(t.states));
+        assert_eq!(tuned(), t);
+    }
+
+    #[test]
+    fn apply_honors_pins_and_escape_hatch() {
+        // autotune=off is a strict no-op.
+        let mut off = AppConfig::default();
+        off.apply_override("autotune=off").unwrap();
+        let (lanes, states) = (off.lanes, off.states);
+        assert_eq!(apply(&mut off), None);
+        assert_eq!((off.lanes, off.states), (lanes, states));
+
+        // Pinned knobs survive tuning; unpinned ones adopt the pick.
+        let mut pinned = AppConfig::default();
+        pinned.apply_override("states=2").unwrap();
+        let t = apply(&mut pinned).expect("tuner consulted");
+        assert_eq!(pinned.states, 2, "explicit states must win");
+        assert_eq!(pinned.lanes, t.lanes);
+
+        // Fully pinned: the tuner is not even consulted.
+        let mut both = AppConfig::default();
+        both.apply_override("lanes=2").unwrap();
+        both.apply_override("states=2").unwrap();
+        assert_eq!(apply(&mut both), None);
+        assert_eq!((both.lanes, both.states), (2, 2));
+    }
+}

@@ -28,9 +28,12 @@
 //! ([`crate::rans::StreamLayout`]) selects the per-lane stream layout
 //! inside the v1 container's payload: v1 scalar lanes (default) or v2
 //! multi-state lanes (2–8 interleaved rANS states per lane for
-//! ILP/SIMD decode — 4- and 8-state lanes pick up the SSE4.1/AVX2
-//! gather decoder where the host has it). Decoders need no knob — the
-//! stream is self-describing.
+//! ILP/SIMD decode — 4- and 8-state lanes pick up the vectorized
+//! gather decoder through the cross-ISA backend seam: SSE4.1/AVX2 on
+//! x86_64, NEON on aarch64). Decoders need no knob — the stream is
+//! self-describing. The [`autotune`] module picks the `lanes × states`
+//! shape per machine with a one-shot microbenchmark when the config
+//! doesn't pin it.
 //!
 //! The public codec surface is **dtype-generic and zero-copy**:
 //! [`Engine::compress_tensor`] takes a borrowed
@@ -43,6 +46,7 @@
 //! config-carried ([`EngineConfig::decode_parallel`]) instead of a
 //! `parallel: bool` argument on every call.
 
+pub mod autotune;
 pub mod chunked;
 pub mod plan_cache;
 

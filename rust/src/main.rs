@@ -148,7 +148,8 @@ fn cmd_compress(cfg: &AppConfig) -> Result<()> {
     // Non-f32 dtypes narrow the feature to the configured element type
     // first (the stand-in for a half-precision head), then compress
     // through the zero-copy dtype-generic entry point.
-    let pcfg = PipelineConfig::paper(cfg.q).with_states(cfg.states);
+    let pcfg = PipelineConfig { lanes: cfg.lanes, ..PipelineConfig::paper(cfg.q) }
+        .with_states(cfg.states);
     let bits: Vec<u16> = if cfg.dtype.is_half() {
         rans_sc::tensor::narrow_to_half_bits(&data, cfg.dtype)
     } else {
@@ -244,6 +245,12 @@ fn help() {
 
 USAGE: rans-sc <command> [--config file.json] [--set key=value]...
 
+Encode-side commands autotune the rANS `lanes`/`states` shape for this
+machine with a one-shot microbenchmark; `--set lanes=…` / `--set
+states=…` pin a knob and `--set autotune=off` disables tuning. The
+decode backend can be pinned with RANS_SC_FORCE_BACKEND=
+scalar|sse4.1|avx2|neon.
+
 COMMANDS:
   serve-cloud        run the cloud node (binds --set addr=HOST:PORT)
   infer              one edge inference against a running cloud node
@@ -259,13 +266,27 @@ COMMANDS:
 }
 
 fn main() -> ExitCode {
-    let args = match parse_args() {
+    let mut args = match parse_args() {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
             return ExitCode::FAILURE;
         }
     };
+    // Encode-side commands pick up the machine-tuned `lanes × states`
+    // shape unless the config pins it (`--set lanes=…` / `--set
+    // states=…` always win; `--set autotune=off` disables tuning).
+    // Decode side needs nothing: the stream is self-describing.
+    if matches!(args.cmd.as_str(), "infer" | "compress") {
+        if let Some(t) = rans_sc::engine::autotune::apply(&mut args.cfg) {
+            eprintln!(
+                "autotune: lanes={} states={} (decode backend {}; --set autotune=off to disable)",
+                t.lanes,
+                t.states,
+                t.backend.name()
+            );
+        }
+    }
     let result = match args.cmd.as_str() {
         "serve-cloud" => cmd_serve_cloud(&args.cfg),
         "infer" => cmd_infer(&args.cfg),

@@ -37,7 +37,11 @@
 //! The two axes of parallelism compose: `lane_count` is the
 //! thread-level split (contiguous chunks, one coder per chunk) and
 //! `states_per_lane` is the instruction-level split *within* each lane
-//! (round-robin interleaved states, no extra metadata).
+//! (round-robin interleaved states, no extra metadata). Per-lane
+//! decode additionally dispatches through the cross-ISA backend seam
+//! ([`super::simd`]): 4- and 8-state lanes run the vectorized gather
+//! rounds (SSE4.1/AVX2 on x86_64, NEON on aarch64) with no change to
+//! the bytes on the wire.
 
 use crate::error::{Error, Result};
 use crate::util::varint;

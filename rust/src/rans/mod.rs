@@ -31,11 +31,19 @@
 //!   dependency chain so the out-of-order core overlaps 2–8 independent
 //!   multiply/refill chains (the v2 lane payload format).
 //! * [`simd`] — data-level parallelism over those independent states:
-//!   one vectorized decode round per iteration (SSE4.1 for 4-state
-//!   lanes, AVX2 for 8-state lanes), runtime-dispatched with the
-//!   const-generic scalar loop as the portable fallback. No wire-format
-//!   change; pinned symbol-identical to the scalar path by
+//!   one vectorized decode round per iteration, with every
+//!   implementation behind the cross-ISA [`simd::DecodeBackend`] trait
+//!   seam (SSE4.1 for 4-state lanes and AVX2 for 8-state lanes on
+//!   x86_64), runtime-dispatched with the const-generic scalar loop as
+//!   the portable fallback and a validated `RANS_SC_FORCE_BACKEND`
+//!   process-wide override. No wire-format change; pinned
+//!   symbol-identical to the scalar path by
 //!   `rust/tests/rans_differential.rs`.
+//! * [`neon`] — the aarch64 backend behind the same seam: NEON 4- and
+//!   8-state decode rounds (scalar-load-and-pack gathers, `vmlaq_u32`
+//!   transitions, `vqtbl1q_u8` refill routing through the shared
+//!   control table), covering the ISA the paper's edge devices actually
+//!   run.
 //!
 //! The state is 32-bit with 16-bit renormalization windows
 //! (`state ∈ [2^16, 2^32)`), the layout used by production rANS coders;
@@ -46,6 +54,7 @@ pub mod encode;
 pub mod freq;
 pub mod interleaved;
 pub mod multistate;
+pub mod neon;
 pub mod simd;
 pub mod symbol;
 

@@ -106,11 +106,13 @@ pub fn encode_multistate(symbols: &[u32], table: &FreqTable, n_states: usize) ->
 /// last symbol, and the stream must be fully consumed — truncation,
 /// trailing bytes, or a forged state word all yield `Error::Corrupt`.
 ///
-/// For 4- and 8-state streams this dispatches to the SIMD gather
-/// decoder ([`super::simd`]) when the host supports it (SSE4.1 / AVX2,
-/// detected at runtime), falling back to the const-generic scalar loop
-/// otherwise. Both paths are symbol-identical on valid streams and
-/// agree on rejection of corrupt ones (pinned by
+/// For 4- and 8-state streams this dispatches through the cross-ISA
+/// backend seam ([`super::simd::backend_for`]) to the SIMD gather
+/// decoder the host supports — SSE4.1 / AVX2 on x86_64 (detected at
+/// runtime), NEON on aarch64 — falling back to the const-generic
+/// scalar loop otherwise, and honoring the validated
+/// `RANS_SC_FORCE_BACKEND` override. All paths are symbol-identical on
+/// valid streams and agree on rejection of corrupt ones (pinned by
 /// `rust/tests/rans_differential.rs`).
 pub fn decode_multistate(
     bytes: &[u8],
@@ -118,11 +120,7 @@ pub fn decode_multistate(
     table: &FreqTable,
     n_states: usize,
 ) -> Result<Vec<u32>> {
-    match n_states {
-        4 => super::simd::decode4(bytes, count, table),
-        8 => super::simd::decode8(bytes, count, table),
-        _ => decode_multistate_scalar(bytes, count, table, n_states),
-    }
+    super::simd::dispatch_decode(bytes, count, table, n_states)
 }
 
 /// [`decode_multistate`] pinned to the portable scalar loop for every

@@ -1,0 +1,351 @@
+//! AArch64 NEON backend for the v2 multi-state gather decode.
+//!
+//! The edge half of the paper's split-computing pipeline runs on
+//! aarch64 devices (phones, Jetsons, Pis), so this is the ISA where the
+//! SIMD decode actually earns its keep. The rounds mirror the x86 paths
+//! in [`super::simd`] stage for stage — gather, packed transition,
+//! movemask-driven refill — with the NEON translations:
+//!
+//! * **Gather.** AArch64 has no gather instruction, so the fused 8-byte
+//!   [`DecEntry`] slots are fetched exactly like the SSE4.1 path: `N`
+//!   scalar `u64` loads packed into vectors
+//!   (`vcreate_u64`/`vcombine_u64`), then one `vuzp1q`/`vuzp2q` pair
+//!   per four entries splits them into the `sym | freq << 16` and
+//!   `bias` dword vectors (the role `shufps` plays on x86).
+//! * **Transition.** `state ← freq · (state >> SCALE_BITS) + bias` is a
+//!   single fused `vmlaq_u32` per four states.
+//! * **Refill.** NEON has no `movmskps`, so the 4-bit `need-refill`
+//!   lane mask is rebuilt by narrowing the `state < 2^16` compare to
+//!   16-bit lanes (`vmovn_u32`) and picking one bit per lane out of the
+//!   resulting `u64`. The mask then drives the *same* 16-entry
+//!   [`REFILL_SHUF`] control table as x86: `vqtbl1q_u8` zeroes any
+//!   destination byte whose control byte is out of range, which is
+//!   precisely `pshufb`'s high-bit convention, so one table serves both
+//!   ISAs. A `vbslq_u32` blend merges the routed stream words into the
+//!   refilling lanes and the shared cursor advances `2·popcount` bytes
+//!   in state order — the wire contract.
+//!
+//! The 8-state round runs the same stages over two `uint32x4_t` halves,
+//! the upper half's stream words starting after the bytes the lower
+//! half consumes (mirroring the AVX2 split-half refill).
+//!
+//! The vector loop keeps the worst-case refill for one round (`2·N`
+//! bytes) in bounds and hands the stream tail, the `count mod N`
+//! symbols, and all end-of-stream validation to the shared scalar
+//! helpers [`multistate::scalar_rounds`] / [`multistate::finish`] — so
+//! the NEON path cannot diverge from the scalar loop on acceptance, by
+//! construction. Symbol-identity of the vector rounds is pinned by the
+//! differential fuzz wall and the committed golden vectors, which CI
+//! replays on aarch64 under QEMU with the backend force-pinned.
+//!
+//! NEON (ASIMD) is mandatory in the AArch64 ABI, so availability is the
+//! compile target itself — no runtime feature detection.
+//!
+//! [`DecEntry`]: super::symbol::DecEntry
+//! [`REFILL_SHUF`]: super::simd::REFILL_SHUF
+//! [`multistate::scalar_rounds`]: super::multistate::scalar_rounds
+//! [`multistate::finish`]: super::multistate::finish
+
+use crate::error::Result;
+
+use super::freq::FreqTable;
+use super::simd::{unavailable_error, width_error, Backend, DecodeBackend};
+
+/// The NEON 4-/8-state gather decoder as a
+/// [`DecodeBackend`](super::simd::DecodeBackend). Available exactly on
+/// aarch64 builds (NEON is baseline there); covers both SIMD stream
+/// widths, unlike the one-width x86 backends.
+pub(crate) struct NeonBackend;
+
+impl DecodeBackend for NeonBackend {
+    fn id(&self) -> Backend {
+        Backend::Neon
+    }
+
+    fn available(&self) -> bool {
+        cfg!(target_arch = "aarch64")
+    }
+
+    fn supports_states(&self, n_states: usize) -> bool {
+        matches!(n_states, 4 | 8)
+    }
+
+    fn decode(
+        &self,
+        bytes: &[u8],
+        count: usize,
+        table: &FreqTable,
+        n_states: usize,
+    ) -> Result<Vec<u32>> {
+        if !self.supports_states(n_states) {
+            return Err(width_error(self.id(), n_states));
+        }
+        if !self.available() {
+            return Err(unavailable_error(self.id()));
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            // SAFETY: NEON is part of the aarch64 baseline ABI, so on
+            // this compile target the target-feature precondition of
+            // the decode functions always holds.
+            if n_states == 4 {
+                unsafe { aarch64::decode4(bytes, count, table) }
+            } else {
+                unsafe { aarch64::decode8(bytes, count, table) }
+            }
+        }
+        #[cfg(not(target_arch = "aarch64"))]
+        {
+            let _ = (bytes, count, table);
+            unreachable!("neon reported available on a non-aarch64 build")
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod aarch64 {
+    #![deny(unsafe_op_in_unsafe_fn)]
+
+    use core::arch::aarch64::*;
+
+    use crate::error::Result;
+    use crate::rans::freq::{FreqTable, SCALE, SCALE_BITS};
+    use crate::rans::multistate::{decode_n, finish, read_states, scalar_rounds};
+    use crate::rans::simd::REFILL_SHUF;
+
+    /// Gather four fused 8-byte entries by the slot indices in `slots`
+    /// and split them into `(sym | freq << 16, bias)` dword vectors —
+    /// the scalar-load-and-pack shape the SSE4.1 path uses, since
+    /// AArch64 has no gather instruction.
+    ///
+    /// # Safety
+    ///
+    /// Every lane of `slots` must be `< SCALE` and `entries` must point
+    /// at `SCALE` fully initialized 8-byte entries ([`DecEntry`]'s
+    /// explicit zero padding makes the raw `u64` reads defined).
+    ///
+    /// [`DecEntry`]: crate::rans::symbol::DecEntry
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn gather_entries(entries: *const u64, slots: uint32x4_t) -> (uint32x4_t, uint32x4_t) {
+        let mut idx = [0u32; 4];
+        // SAFETY: `idx` is a `[u32; 4]` — exactly 16 writable bytes.
+        unsafe { vst1q_u32(idx.as_mut_ptr(), slots) };
+        // SAFETY: caller guarantees every index is `< SCALE` and the
+        // table holds exactly SCALE initialized 8-byte entries, so the
+        // four u64 loads are in bounds and read initialized memory.
+        let (e0, e1, e2, e3) = unsafe {
+            (
+                *entries.add(idx[0] as usize),
+                *entries.add(idx[1] as usize),
+                *entries.add(idx[2] as usize),
+                *entries.add(idx[3] as usize),
+            )
+        };
+        // Pack into vectors (lane order [e0, e1] / [e2, e3]) and
+        // de-interleave the entry dwords: even dwords carry
+        // sym | freq << 16, odd dwords carry bias (little-endian
+        // DecEntry layout).
+        let lo = vreinterpretq_u32_u64(vcombine_u64(vcreate_u64(e0), vcreate_u64(e1)));
+        let hi = vreinterpretq_u32_u64(vcombine_u64(vcreate_u64(e2), vcreate_u64(e3)));
+        (vuzp1q_u32(lo, hi), vuzp2q_u32(lo, hi))
+    }
+
+    /// One packed transition over four states:
+    /// `state ← freq · (state >> SCALE_BITS) + bias`. Returns the new
+    /// states and the decoded symbols (in state order).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    fn transition(sv: uint32x4_t, sf: uint32x4_t, bp: uint32x4_t) -> (uint32x4_t, uint32x4_t) {
+        let low16 = vdupq_n_u32(0xFFFF);
+        let freq = vshrq_n_u32::<16>(sf);
+        let sym = vandq_u32(sf, low16);
+        let bias = vandq_u32(bp, low16);
+        let shifted = vshrq_n_u32::<{ SCALE_BITS as i32 }>(sv);
+        // vmlaq_u32(a, b, c) = a + b·c; the product provably fits
+        // 32 bits (see the scalar decoder).
+        (vmlaq_u32(bias, freq, shifted), sym)
+    }
+
+    /// Refill the lanes of `sv` that dropped below `2^16` with 16-bit
+    /// stream words from `src`, routed in state order through
+    /// [`REFILL_SHUF`]. Returns the refilled states and the number of
+    /// stream bytes consumed (`2·popcount` of the lane mask).
+    ///
+    /// # Safety
+    ///
+    /// At least 8 bytes must be readable at `src` (one round's
+    /// worst-case refill for four states).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn refill(sv: uint32x4_t, src: *const u8) -> (uint32x4_t, usize) {
+        let need = vceqq_u32(vshrq_n_u32::<16>(sv), vdupq_n_u32(0));
+        // Movemask emulation: narrow the all-ones/all-zeros compare to
+        // 16-bit lanes, view the result as one u64 (lane j occupies
+        // bits 16j..16j+16), and pick one bit per lane.
+        let bits = vget_lane_u64::<0>(vreinterpret_u64_u16(vmovn_u32(need)));
+        let m =
+            ((bits & 1) | ((bits >> 15) & 2) | ((bits >> 30) & 4) | ((bits >> 45) & 8)) as usize;
+        // SAFETY: caller guarantees 8 readable bytes at `src`.
+        let words_raw = vcombine_u8(unsafe { vld1_u8(src) }, vdup_n_u8(0));
+        // `m` is a 4-bit mask, so the control-table index is in bounds;
+        // SAFETY (load): each control entry is a 16-byte array.
+        let ctrl = unsafe { vld1q_u8(REFILL_SHUF[m].as_ptr()) };
+        // vqtbl1q_u8 zeroes destination bytes whose control byte is out
+        // of range — pshufb's 0x80 convention, so the shared table
+        // routes the next popcount(m) words to their lanes unchanged.
+        let words = vreinterpretq_u32_u8(vqtbl1q_u8(words_raw, ctrl));
+        let refilled = vorrq_u32(vshlq_n_u32::<16>(sv), words);
+        // vbslq_u32(mask, a, b) = (mask & a) | (!mask & b): keep
+        // non-refilling lanes as they were.
+        (vbslq_u32(need, refilled, sv), 2 * m.count_ones() as usize)
+    }
+
+    /// Decode a 4-state stream, vectorizing one round (4 symbols) per
+    /// iteration with NEON.
+    ///
+    /// # Safety
+    ///
+    /// The build target must support NEON — always true on aarch64,
+    /// where this module is compiled.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn decode4(
+        bytes: &[u8],
+        count: usize,
+        table: &FreqTable,
+    ) -> Result<Vec<u32>> {
+        let dec = table.dec_table();
+        // Same release-mode gather-index guard as the x86 paths: the
+        // raw u64 entry loads index with `state & (SCALE−1)`, so the
+        // fused table must span the full slot space — take the
+        // bounds-checked scalar loop otherwise.
+        if dec.len() != SCALE as usize {
+            return decode_n::<4>(bytes, count, table);
+        }
+        let mut states = read_states::<4>(bytes)?;
+        let mut pos = 16usize;
+        // Same untrusted-header reservation cap as the scalar decoder.
+        let mut out: Vec<u32> = Vec::with_capacity(count.min(1 << 20));
+        let entries = dec.as_ptr().cast::<u64>();
+
+        let full_rounds = count / 4;
+        let mut rounds_done = 0usize;
+
+        // SAFETY: `states` is a `[u32; 4]` — exactly 16 readable bytes.
+        let mut sv = unsafe { vld1q_u32(states.as_ptr()) };
+        let slot_mask = vdupq_n_u32(SCALE - 1);
+
+        // One round's refill consumes at most 2 bytes per state; run
+        // the vector loop only while that worst case (8 bytes) is in
+        // bounds and let the scalar finisher handle the stream tail.
+        while rounds_done < full_rounds && pos + 8 <= bytes.len() {
+            let slots = vandq_u32(sv, slot_mask);
+            // SAFETY: every slot lane is masked `< SCALE` and the table
+            // spans SCALE entries (checked on entry).
+            let (sf, bp) = unsafe { gather_entries(entries, slots) };
+            let (next, sym) = transition(sv, sf, bp);
+            // SAFETY: the loop guard holds pos + 8 <= bytes.len().
+            let (refilled, consumed) = unsafe { refill(next, bytes.as_ptr().add(pos)) };
+            sv = refilled;
+            pos += consumed;
+
+            // Emit the round's symbols in state order (the schedule).
+            let mut sy = [0u32; 4];
+            // SAFETY: `sy` is a `[u32; 4]` — exactly 16 writable bytes.
+            unsafe { vst1q_u32(sy.as_mut_ptr(), sym) };
+            out.extend_from_slice(&sy);
+            rounds_done += 1;
+        }
+
+        // SAFETY: `states` is a `[u32; 4]` — exactly 16 writable bytes.
+        unsafe { vst1q_u32(states.as_mut_ptr(), sv) };
+        // Remaining rounds, tail symbols, and all validation run
+        // through the scalar helpers — shared code, shared failure
+        // behavior.
+        let remaining = full_rounds - rounds_done;
+        scalar_rounds::<4>(bytes, &mut pos, &mut states, &mut out, remaining, dec)?;
+        finish::<4>(bytes, &mut pos, &mut states, &mut out, count % 4, dec)?;
+        Ok(out)
+    }
+
+    /// Decode an 8-state stream, vectorizing one round (8 symbols) per
+    /// iteration as two four-lane NEON halves.
+    ///
+    /// # Safety
+    ///
+    /// The build target must support NEON — always true on aarch64,
+    /// where this module is compiled.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn decode8(
+        bytes: &[u8],
+        count: usize,
+        table: &FreqTable,
+    ) -> Result<Vec<u32>> {
+        let dec = table.dec_table();
+        // Same release-mode gather-index guard as `decode4` above.
+        if dec.len() != SCALE as usize {
+            return decode_n::<8>(bytes, count, table);
+        }
+        let mut states = read_states::<8>(bytes)?;
+        let mut pos = 32usize;
+        let mut out: Vec<u32> = Vec::with_capacity(count.min(1 << 20));
+        let entries = dec.as_ptr().cast::<u64>();
+
+        let full_rounds = count / 8;
+        let mut rounds_done = 0usize;
+
+        // SAFETY: `states` is a `[u32; 8]` — two in-bounds 16-byte
+        // loads.
+        let mut sv_lo = unsafe { vld1q_u32(states.as_ptr()) };
+        // SAFETY: as above, upper four states.
+        let mut sv_hi = unsafe { vld1q_u32(states.as_ptr().add(4)) };
+        let slot_mask = vdupq_n_u32(SCALE - 1);
+
+        // Worst-case refill per round is 2 bytes × 8 states = 16 bytes.
+        while rounds_done < full_rounds && pos + 16 <= bytes.len() {
+            let slots_lo = vandq_u32(sv_lo, slot_mask);
+            let slots_hi = vandq_u32(sv_hi, slot_mask);
+            // SAFETY: every slot lane is masked `< SCALE` and the table
+            // spans SCALE entries (checked on entry).
+            let (sf_lo, bp_lo) = unsafe { gather_entries(entries, slots_lo) };
+            // SAFETY: as above.
+            let (sf_hi, bp_hi) = unsafe { gather_entries(entries, slots_hi) };
+            let (next_lo, sym_lo) = transition(sv_lo, sf_lo, bp_lo);
+            let (next_hi, sym_hi) = transition(sv_hi, sf_hi, bp_hi);
+
+            // Split-half refill: the lower states consume first, the
+            // upper half's stream words start after them — preserving
+            // the state-order wire contract.
+            // SAFETY: the loop guard holds pos + 16 <= bytes.len(), so
+            // the lower half's 8-byte window is in bounds.
+            let (refilled_lo, lo_bytes) = unsafe { refill(next_lo, bytes.as_ptr().add(pos)) };
+            // SAFETY: lo_bytes ≤ 8 and pos + 16 <= bytes.len(), so the
+            // upper half's 8-byte window at pos + lo_bytes is in
+            // bounds.
+            let (refilled_hi, hi_bytes) =
+                unsafe { refill(next_hi, bytes.as_ptr().add(pos + lo_bytes)) };
+            sv_lo = refilled_lo;
+            sv_hi = refilled_hi;
+            pos += lo_bytes + hi_bytes;
+
+            let mut sy = [0u32; 8];
+            // SAFETY: `sy` is a `[u32; 8]` — two in-bounds 16-byte
+            // stores.
+            unsafe { vst1q_u32(sy.as_mut_ptr(), sym_lo) };
+            // SAFETY: as above, upper four symbols.
+            unsafe { vst1q_u32(sy.as_mut_ptr().add(4), sym_hi) };
+            out.extend_from_slice(&sy);
+            rounds_done += 1;
+        }
+
+        // SAFETY: `states` is a `[u32; 8]` — two in-bounds 16-byte
+        // stores.
+        unsafe { vst1q_u32(states.as_mut_ptr(), sv_lo) };
+        // SAFETY: as above, upper four states.
+        unsafe { vst1q_u32(states.as_mut_ptr().add(4), sv_hi) };
+        let remaining = full_rounds - rounds_done;
+        scalar_rounds::<8>(bytes, &mut pos, &mut states, &mut out, remaining, dec)?;
+        finish::<8>(bytes, &mut pos, &mut states, &mut out, count % 8, dec)?;
+        Ok(out)
+    }
+}

@@ -1,4 +1,5 @@
-//! SIMD gather decode for v2 multi-state streams.
+//! SIMD gather decode for v2 multi-state streams, behind a cross-ISA
+//! backend seam.
 //!
 //! The const-generic scalar loop in [`super::multistate`] already gives
 //! the out-of-order core `N` independent multiply/refill chains; this
@@ -13,20 +14,22 @@
 //!    the four slots are emulated with four scalar `u64` loads packed
 //!    into vectors (`vpgatherqq`-shaped, materialized as `_mm_set_epi64x`
 //!    pairs); on AVX2 two `vpgatherdd`s fetch the per-entry dword halves
-//!    of all eight slots directly. Either way one `_mm_shuffle_ps`-class
-//!    permute per field splits the entries into `freq`, `bias`, and
-//!    `sym` vectors — [`DecEntry`]'s explicit zeroed padding is what
-//!    makes the raw 8-byte loads defined behavior.
+//!    of all eight slots directly; NEON ([`super::neon`]) mirrors the
+//!    SSE4.1 scalar-load-and-pack shape (AArch64 has no gather either).
+//!    Either way one permute per field splits the entries into `freq`,
+//!    `bias`, and `sym` vectors — [`DecEntry`]'s explicit zeroed padding
+//!    is what makes the raw 8-byte loads defined behavior.
 //! 2. **Transition** all states at once with a packed 32-bit multiply:
 //!    `state ← freq · (state >> SCALE_BITS) + bias`
-//!    (`_mm_mullo_epi32` / `_mm256_mullo_epi32`; the product provably
-//!    fits 32 bits, see [`super::decode`]).
+//!    (`_mm_mullo_epi32` / `_mm256_mullo_epi32` / `vmlaq_u32`; the
+//!    product provably fits 32 bits, see [`super::decode`]).
 //! 3. **Refill** the states that dropped below `2^16` from the shared
 //!    byte cursor: a movemask turns the per-lane `state < 2^16` compare
-//!    into an `N`-bit mask, a 16-entry `pshufb` control table
-//!    ([`REFILL_SHUF`]) routes the next `popcount` 16-bit words to their
-//!    lanes in state order (the wire contract: state 0 refills first),
-//!    and a blend merges them in. `2·popcount` bytes advance the cursor.
+//!    into an `N`-bit mask, a 16-entry byte-shuffle control table
+//!    ([`REFILL_SHUF`], `pshufb` on x86, `vqtbl1q_u8` on NEON) routes
+//!    the next `popcount` 16-bit words to their lanes in state order
+//!    (the wire contract: state 0 refills first), and a blend merges
+//!    them in. `2·popcount` bytes advance the cursor.
 //!
 //! The vector loop runs while a full round's worst-case refill
 //! (`2·N` bytes) is guaranteed in bounds; the tail of the stream — plus
@@ -36,19 +39,50 @@
 //! paths cannot diverge on validation. Symbol-identity of the vector
 //! rounds themselves is pinned by `rust/tests/rans_differential.rs`
 //! (differential fuzz vs. the scalar loop) and by decoding the
-//! committed golden vectors through every available backend.
+//! committed golden vectors through every compiled-in backend.
 //!
-//! Dispatch is at runtime via `is_x86_feature_detected!` — no wire
-//! format change, no build flags required: 4-state streams use SSE4.1,
-//! 8-state streams use AVX2, and everything falls back to the scalar
-//! loop (non-x86_64 builds compile only the fallback). Forcing a
-//! specific backend (for the differential tests and benchmarks) goes
-//! through [`decode_multistate_with`].
+//! # The backend seam
+//!
+//! Every decode implementation lives behind the object-safe
+//! [`DecodeBackend`] trait; the [`Backend`] enum names them and
+//! [`Backend::implementation`] resolves to the `'static` trait object.
+//! All four impls are compiled on every target — `cfg(target_arch)`
+//! lives *only inside* the impl bodies, never at call sites — so
+//! dispatch logic, tests, and benches are ISA-independent, and a new
+//! backend (AVX-512, a GPU offload stub) is a new impl plus an enum
+//! variant, not another `cfg` thicket.
+//!
+//! Dispatch is at runtime ([`backend_for`]): 4-state streams use SSE4.1
+//! (x86_64) or NEON (aarch64), 8-state streams use AVX2 or NEON, and
+//! everything falls back to the scalar loop. No wire format change, no
+//! build flags. Forcing a specific backend goes through
+//! [`decode_multistate_with`] (the seam the differential tests and
+//! benchmarks pin the dispatcher through) or the process-wide
+//! [`FORCE_BACKEND_ENV`] environment override, which rejects unknown or
+//! unavailable backends loudly instead of silently falling back.
+//!
+//! [`DecEntry`]: super::symbol::DecEntry
+
+use std::sync::OnceLock;
 
 use crate::error::{Error, Result};
 
 use super::freq::{FreqTable, SCALE};
 use super::multistate;
+use super::neon::NeonBackend;
+
+/// Environment variable force-selecting a decode backend process-wide:
+/// `scalar`, `sse4.1`, `avx2`, or `neon` (empty or `auto` keeps runtime
+/// dispatch). The CI matrix legs and benches use it to pin which path
+/// actually ran. An unknown name, or a backend this host cannot run, is
+/// a loud [`Error::Invalid`] from every dispatch — never a silent
+/// scalar fallback. Streams whose width the forced backend does not
+/// cover (e.g. v1 scalar streams under `neon`) still decode through the
+/// scalar loop, so mixed-layout traffic keeps working.
+///
+/// The variable is read once per process and cached; changing it after
+/// the first decode has no effect.
+pub const FORCE_BACKEND_ENV: &str = "RANS_SC_FORCE_BACKEND";
 
 /// A decode implementation the dispatcher can select.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -61,7 +95,16 @@ pub enum Backend {
     /// AVX2 8-state path: `vpgatherdd` slot fetch + `vpmulld` +
     /// split-half movemask/`pshufb` refill.
     Avx2,
+    /// NEON 4- and 8-state path (aarch64): scalar-load-and-pack entry
+    /// gathers + `vmlaq_u32` + `vqtbl1q_u8` refill routing.
+    Neon,
 }
+
+/// Every backend compiled into this build, in dispatch-preference order
+/// (the auto dispatcher picks the first available entry covering the
+/// stream's width; scalar is the universal fallback).
+pub const ALL_BACKENDS: [Backend; 4] =
+    [Backend::Sse41, Backend::Avx2, Backend::Neon, Backend::Scalar];
 
 impl Backend {
     /// Human-readable name (benchmark reports, CI job summaries).
@@ -70,72 +113,290 @@ impl Backend {
             Backend::Scalar => "scalar",
             Backend::Sse41 => "sse4.1",
             Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
         }
     }
 
-    /// The state count this backend's vector width covers (`None` for
-    /// the scalar loop, which handles every supported count).
-    pub fn states(&self) -> Option<usize> {
+    /// Parse a backend name (the [`FORCE_BACKEND_ENV`] value syntax).
+    pub fn parse(name: &str) -> Result<Backend> {
+        match name {
+            "scalar" => Ok(Backend::Scalar),
+            "sse4.1" | "sse41" => Ok(Backend::Sse41),
+            "avx2" => Ok(Backend::Avx2),
+            "neon" => Ok(Backend::Neon),
+            other => Err(Error::invalid(format!(
+                "unknown decode backend '{other}' (expected scalar, sse4.1, avx2, or neon)"
+            ))),
+        }
+    }
+
+    /// The implementation behind this name. Always resolves — whether
+    /// the impl can *run* here is [`DecodeBackend::available`].
+    pub fn implementation(&self) -> &'static dyn DecodeBackend {
         match self {
-            Backend::Scalar => None,
-            Backend::Sse41 => Some(4),
-            Backend::Avx2 => Some(8),
+            Backend::Scalar => &ScalarBackend,
+            Backend::Sse41 => &Sse41Backend,
+            Backend::Avx2 => &Avx2Backend,
+            Backend::Neon => &NeonBackend,
+        }
+    }
+
+    /// True iff this backend decodes `n_states`-state streams. Unlike a
+    /// single fixed width, this is a predicate: NEON covers both 4- and
+    /// 8-state streams, scalar covers every supported count.
+    pub fn supports(&self, n_states: usize) -> bool {
+        self.implementation().supports_states(n_states)
+    }
+}
+
+/// The object-safe surface every decode backend implements — the seam
+/// that keeps `cfg(target_arch)` out of dispatch logic, tests, and
+/// benches. All impls are compiled on every target; target-gated code
+/// lives only inside method bodies.
+pub trait DecodeBackend: Send + Sync {
+    /// The [`Backend`] name this implementation answers to.
+    fn id(&self) -> Backend;
+
+    /// True iff this implementation can run on this host (compile
+    /// target + runtime feature detection).
+    fn available(&self) -> bool;
+
+    /// True iff this implementation decodes `n_states`-state streams.
+    fn supports_states(&self, n_states: usize) -> bool;
+
+    /// Decode exactly `count` symbols from an `n_states`-state stream.
+    ///
+    /// Self-validating: errors with [`Error::Invalid`] when the backend
+    /// is unavailable on this host or does not cover `n_states`, so a
+    /// direct call can never execute an ISA the CPU lacks. (The
+    /// dispatch wrappers check the same preconditions first for
+    /// friendlier errors.)
+    fn decode(
+        &self,
+        bytes: &[u8],
+        count: usize,
+        table: &FreqTable,
+        n_states: usize,
+    ) -> Result<Vec<u32>>;
+}
+
+/// [`Error::Invalid`] for a backend asked to decode a width it does not
+/// cover.
+pub(crate) fn width_error(backend: Backend, n_states: usize) -> Error {
+    Error::invalid(format!(
+        "backend {} does not decode {n_states}-state streams",
+        backend.name()
+    ))
+}
+
+/// [`Error::Invalid`] for a backend this host cannot run.
+pub(crate) fn unavailable_error(backend: Backend) -> Error {
+    Error::invalid(format!("backend {} is not available on this host", backend.name()))
+}
+
+/// The portable const-generic scalar loop as a [`DecodeBackend`].
+struct ScalarBackend;
+
+impl DecodeBackend for ScalarBackend {
+    fn id(&self) -> Backend {
+        Backend::Scalar
+    }
+
+    fn available(&self) -> bool {
+        true
+    }
+
+    fn supports_states(&self, n_states: usize) -> bool {
+        multistate::supported_states(n_states)
+    }
+
+    fn decode(
+        &self,
+        bytes: &[u8],
+        count: usize,
+        table: &FreqTable,
+        n_states: usize,
+    ) -> Result<Vec<u32>> {
+        multistate::decode_multistate_scalar(bytes, count, table, n_states)
+    }
+}
+
+/// The SSE4.1 4-state gather decoder as a [`DecodeBackend`].
+struct Sse41Backend;
+
+impl DecodeBackend for Sse41Backend {
+    fn id(&self) -> Backend {
+        Backend::Sse41
+    }
+
+    fn available(&self) -> bool {
+        #[cfg(target_arch = "x86_64")]
+        {
+            is_x86_feature_detected!("sse4.1")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    }
+
+    fn supports_states(&self, n_states: usize) -> bool {
+        n_states == 4
+    }
+
+    fn decode(
+        &self,
+        bytes: &[u8],
+        count: usize,
+        table: &FreqTable,
+        n_states: usize,
+    ) -> Result<Vec<u32>> {
+        if n_states != 4 {
+            return Err(width_error(self.id(), n_states));
+        }
+        if !self.available() {
+            return Err(unavailable_error(self.id()));
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            // SAFETY: the sse4.1 target feature was verified present at
+            // runtime by `available()` above — `x86::decode4`'s only
+            // precondition.
+            unsafe { x86::decode4(bytes, count, table) }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = (bytes, count, table);
+            unreachable!("sse4.1 reported available on a non-x86_64 build")
+        }
+    }
+}
+
+/// The AVX2 8-state gather decoder as a [`DecodeBackend`].
+struct Avx2Backend;
+
+impl DecodeBackend for Avx2Backend {
+    fn id(&self) -> Backend {
+        Backend::Avx2
+    }
+
+    fn available(&self) -> bool {
+        #[cfg(target_arch = "x86_64")]
+        {
+            is_x86_feature_detected!("avx2")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    }
+
+    fn supports_states(&self, n_states: usize) -> bool {
+        n_states == 8
+    }
+
+    fn decode(
+        &self,
+        bytes: &[u8],
+        count: usize,
+        table: &FreqTable,
+        n_states: usize,
+    ) -> Result<Vec<u32>> {
+        if n_states != 8 {
+            return Err(width_error(self.id(), n_states));
+        }
+        if !self.available() {
+            return Err(unavailable_error(self.id()));
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            // SAFETY: avx2 verified present at runtime by `available()`
+            // above — `x86::decode8`'s only precondition.
+            unsafe { x86::decode8(bytes, count, table) }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = (bytes, count, table);
+            unreachable!("avx2 reported available on a non-x86_64 build")
         }
     }
 }
 
 /// True iff `backend` can run on this host (compile target + runtime
-/// CPUID detection).
+/// feature detection).
 pub fn backend_available(backend: Backend) -> bool {
-    match backend {
-        Backend::Scalar => true,
-        #[cfg(target_arch = "x86_64")]
-        Backend::Sse41 => is_x86_feature_detected!("sse4.1"),
-        #[cfg(target_arch = "x86_64")]
-        Backend::Avx2 => is_x86_feature_detected!("avx2"),
-        #[cfg(not(target_arch = "x86_64"))]
-        _ => false,
+    backend.implementation().available()
+}
+
+/// Resolve a [`FORCE_BACKEND_ENV`] value: empty / `auto` means no
+/// forcing; anything else must name a backend this host can run.
+fn resolve_forced(spec: &str) -> Result<Option<Backend>> {
+    if spec.is_empty() || spec == "auto" {
+        return Ok(None);
     }
+    let backend =
+        Backend::parse(spec).map_err(|e| Error::invalid(format!("{FORCE_BACKEND_ENV}: {e}")))?;
+    if !backend_available(backend) {
+        return Err(Error::invalid(format!(
+            "{FORCE_BACKEND_ENV}={spec}: backend is not available on this host"
+        )));
+    }
+    Ok(Some(backend))
+}
+
+/// The process-wide forced backend from [`FORCE_BACKEND_ENV`], if any.
+/// Read once and cached (the override is process configuration, not
+/// per-call state); an invalid value errors on *every* dispatch so a
+/// misspelled CI matrix leg cannot silently measure the wrong path.
+pub fn forced_backend() -> Result<Option<Backend>> {
+    static FORCED: OnceLock<std::result::Result<Option<Backend>, String>> = OnceLock::new();
+    FORCED
+        .get_or_init(|| match std::env::var(FORCE_BACKEND_ENV) {
+            Ok(spec) => resolve_forced(&spec).map_err(|e| e.to_string()),
+            Err(_) => Ok(None),
+        })
+        .clone()
+        .map_err(Error::invalid)
 }
 
 /// The backend [`super::multistate::decode_multistate`] dispatches to
-/// for `n_states`-state streams on this host.
-pub fn backend_for(n_states: usize) -> Backend {
-    #[cfg(target_arch = "x86_64")]
-    {
-        if n_states == 4 && is_x86_feature_detected!("sse4.1") {
-            return Backend::Sse41;
-        }
-        if n_states == 8 && is_x86_feature_detected!("avx2") {
-            return Backend::Avx2;
+/// for `n_states`-state streams on this host: the [`FORCE_BACKEND_ENV`]
+/// override when set (scalar for widths it does not cover), otherwise
+/// the first available entry of [`ALL_BACKENDS`] covering the width.
+///
+/// Errors only when the override names an unknown or unavailable
+/// backend.
+pub fn backend_for(n_states: usize) -> Result<Backend> {
+    if let Some(forced) = forced_backend()? {
+        // A forced backend applies wherever it covers the stream's
+        // width; other widths still run scalar (a CI leg forcing neon
+        // must not reject the v1 scalar streams in the same container).
+        return Ok(if forced.supports(n_states) { forced } else { Backend::Scalar });
+    }
+    for backend in ALL_BACKENDS {
+        if backend.supports(n_states) && backend_available(backend) {
+            return Ok(backend);
         }
     }
-    let _ = n_states;
-    Backend::Scalar
+    Ok(Backend::Scalar)
 }
 
-/// Decode a 4-state stream with the best available path (SSE4.1 when
-/// the host has it, the scalar loop otherwise).
-pub fn decode4(bytes: &[u8], count: usize, table: &FreqTable) -> Result<Vec<u32>> {
-    #[cfg(target_arch = "x86_64")]
-    if is_x86_feature_detected!("sse4.1") {
-        // SAFETY: the sse4.1 target feature was just verified present
-        // at runtime, which is the only precondition of `x86::decode4`.
-        return unsafe { x86::decode4(bytes, count, table) };
+/// Decode through the backend [`backend_for`] picks — the
+/// implementation behind [`super::multistate::decode_multistate`].
+pub(crate) fn dispatch_decode(
+    bytes: &[u8],
+    count: usize,
+    table: &FreqTable,
+    n_states: usize,
+) -> Result<Vec<u32>> {
+    let backend = backend_for(n_states)?;
+    if backend == Backend::Scalar {
+        return multistate::decode_multistate_scalar(bytes, count, table, n_states);
     }
-    multistate::decode_n::<4>(bytes, count, table)
-}
-
-/// Decode an 8-state stream with the best available path (AVX2 when the
-/// host has it, the scalar loop otherwise).
-pub fn decode8(bytes: &[u8], count: usize, table: &FreqTable) -> Result<Vec<u32>> {
-    #[cfg(target_arch = "x86_64")]
-    if is_x86_feature_detected!("avx2") {
-        // SAFETY: the avx2 target feature was just verified present at
-        // runtime, which is the only precondition of `x86::decode8`.
-        return unsafe { x86::decode8(bytes, count, table) };
-    }
-    multistate::decode_n::<8>(bytes, count, table)
+    // Auto dispatch (unlike forcing) tolerates a fused table that does
+    // not span the slot space: the SIMD impls take their internal
+    // bounds-checked scalar fallback in that case.
+    backend.implementation().decode(bytes, count, table, n_states)
 }
 
 /// Decode forcing a specific `backend` — the seam the differential
@@ -143,8 +404,8 @@ pub fn decode8(bytes: &[u8], count: usize, table: &FreqTable) -> Result<Vec<u32>
 /// without SSE can never silently compare scalar against scalar.
 ///
 /// Errors with `Error::Invalid` when the backend is unavailable on this
-/// host or does not cover `n_states` (the SIMD widths are fixed:
-/// SSE4.1 ⇒ 4 states, AVX2 ⇒ 8 states).
+/// host or does not cover `n_states` (SSE4.1 ⇒ 4 states, AVX2 ⇒ 8,
+/// NEON ⇒ 4 or 8, scalar ⇒ any supported count).
 pub fn decode_multistate_with(
     bytes: &[u8],
     count: usize,
@@ -152,18 +413,13 @@ pub fn decode_multistate_with(
     n_states: usize,
     backend: Backend,
 ) -> Result<Vec<u32>> {
-    if let Some(required) = backend.states() {
-        if required != n_states {
-            return Err(Error::invalid(format!(
-                "backend {} decodes {required}-state streams, not {n_states}",
-                backend.name()
-            )));
-        }
-        if !backend_available(backend) {
-            return Err(Error::invalid(format!(
-                "backend {} is not available on this host",
-                backend.name()
-            )));
+    let imp = backend.implementation();
+    if !imp.supports_states(n_states) {
+        return Err(width_error(backend, n_states));
+    }
+    if backend != Backend::Scalar {
+        if !imp.available() {
+            return Err(unavailable_error(backend));
         }
         // The SIMD paths guard their unsafe gathers by falling back to
         // the scalar loop if the fused table ever failed to span the
@@ -173,23 +429,16 @@ pub fn decode_multistate_with(
             return Err(Error::invalid("fused decode table does not span the slot space"));
         }
     }
-    match backend {
-        Backend::Scalar => multistate::decode_multistate_scalar(bytes, count, table, n_states),
-        #[cfg(target_arch = "x86_64")]
-        // SAFETY: availability (runtime CPUID) was checked above for
-        // both SIMD backends; that is their only precondition.
-        Backend::Sse41 => unsafe { x86::decode4(bytes, count, table) },
-        #[cfg(target_arch = "x86_64")]
-        // SAFETY: as above — avx2 verified present by backend_available.
-        Backend::Avx2 => unsafe { x86::decode8(bytes, count, table) },
-        #[cfg(not(target_arch = "x86_64"))]
-        _ => unreachable!("non-scalar backends are rejected above on non-x86_64"),
-    }
+    imp.decode(bytes, count, table, n_states)
 }
 
-/// `pshufb` control table for the movemask-driven refill, indexed by
-/// the `need-refill` lane mask `m` (4 bits, so 16 entries — the AVX2
-/// path indexes it twice, once per 128-bit half).
+/// Byte-shuffle control table for the movemask-driven refill, indexed
+/// by the `need-refill` lane mask `m` (4 bits, so 16 entries — the AVX2
+/// path indexes it twice, once per 128-bit half, and the NEON 8-state
+/// path does the same per `uint32x4_t` half). Drives `pshufb` on x86
+/// and `vqtbl1q_u8` on NEON: both zero any destination byte whose
+/// control byte is out of range (`0x80`), so one table serves both
+/// ISAs.
 ///
 /// For each 32-bit lane `j` with bit `j` set in `m`, the control routes
 /// source bytes `2k` and `2k+1` (the `k`-th 16-bit stream word, where
@@ -198,7 +447,7 @@ pub fn decode_multistate_with(
 /// (`0x80` control bytes) and the subsequent blend keeps their state.
 /// This reproduces the wire contract that refills consume the shared
 /// cursor in state order, `2·popcount(m)` bytes per round.
-#[cfg(any(target_arch = "x86_64", test))]
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64", test))]
 const fn refill_shuffles() -> [[u8; 16]; 16] {
     let mut table = [[0x80u8; 16]; 16];
     let mut m = 0usize;
@@ -219,8 +468,8 @@ const fn refill_shuffles() -> [[u8; 16]; 16] {
 }
 
 /// See [`refill_shuffles`].
-#[cfg(any(target_arch = "x86_64", test))]
-static REFILL_SHUF: [[u8; 16]; 16] = refill_shuffles();
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64", test))]
+pub(crate) static REFILL_SHUF: [[u8; 16]; 16] = refill_shuffles();
 
 #[cfg(target_arch = "x86_64")]
 mod x86 {
@@ -503,22 +752,65 @@ mod tests {
     #[test]
     fn backend_metadata_is_consistent() {
         assert!(backend_available(Backend::Scalar));
-        assert_eq!(Backend::Scalar.states(), None);
-        assert_eq!(Backend::Sse41.states(), Some(4));
-        assert_eq!(Backend::Avx2.states(), Some(8));
-        assert_eq!(Backend::Sse41.name(), "sse4.1");
-        // The auto dispatcher only ever picks available backends whose
-        // width matches the stream.
+        // Width coverage: scalar takes every supported count, the x86
+        // backends one width each, NEON both SIMD widths.
         for n in [1usize, 2, 4, 8] {
-            let b = backend_for(n);
+            assert!(Backend::Scalar.supports(n), "scalar n={n}");
+        }
+        assert!(!Backend::Scalar.supports(3));
+        assert!(Backend::Sse41.supports(4) && !Backend::Sse41.supports(8));
+        assert!(Backend::Avx2.supports(8) && !Backend::Avx2.supports(4));
+        assert!(Backend::Neon.supports(4) && Backend::Neon.supports(8));
+        assert!(!Backend::Neon.supports(1) && !Backend::Neon.supports(2));
+        // Names and the id() round trip through the trait objects.
+        for backend in ALL_BACKENDS {
+            assert_eq!(backend.implementation().id(), backend);
+        }
+        assert_eq!(Backend::Sse41.name(), "sse4.1");
+        assert_eq!(Backend::Neon.name(), "neon");
+        // The auto dispatcher only ever picks available backends that
+        // cover the stream's width.
+        for n in [1usize, 2, 4, 8] {
+            let b = backend_for(n).unwrap();
             assert!(backend_available(b), "n={n}");
-            if let Some(w) = b.states() {
-                assert_eq!(w, n);
+            assert!(b.supports(n), "n={n} picked {}", b.name());
+        }
+        // Exactly one of the SIMD families can exist on one target.
+        assert!(!(backend_available(Backend::Sse41) && backend_available(Backend::Neon)));
+    }
+
+    #[test]
+    fn backend_names_parse_and_reject() {
+        assert_eq!(Backend::parse("scalar").unwrap(), Backend::Scalar);
+        assert_eq!(Backend::parse("sse4.1").unwrap(), Backend::Sse41);
+        assert_eq!(Backend::parse("sse41").unwrap(), Backend::Sse41);
+        assert_eq!(Backend::parse("avx2").unwrap(), Backend::Avx2);
+        assert_eq!(Backend::parse("neon").unwrap(), Backend::Neon);
+        assert!(Backend::parse("AVX2").is_err());
+        assert!(Backend::parse("sse").is_err());
+        assert!(Backend::parse("").is_err());
+    }
+
+    /// The env-override resolver: empty/auto disable forcing, valid
+    /// available names resolve, unknown or unavailable names are loud
+    /// errors (never a silent fallback).
+    #[test]
+    fn force_spec_resolution() {
+        assert_eq!(resolve_forced("").unwrap(), None);
+        assert_eq!(resolve_forced("auto").unwrap(), None);
+        assert_eq!(resolve_forced("scalar").unwrap(), Some(Backend::Scalar));
+        assert!(resolve_forced("bogus").is_err());
+        for backend in ALL_BACKENDS {
+            let resolved = resolve_forced(backend.name());
+            if backend_available(backend) {
+                assert_eq!(resolved.unwrap(), Some(backend), "{}", backend.name());
+            } else {
+                assert!(resolved.is_err(), "{}", backend.name());
             }
         }
-        // Scalar-only state counts never dispatch to SIMD.
-        assert_eq!(backend_for(1), Backend::Scalar);
-        assert_eq!(backend_for(2), Backend::Scalar);
+        // Whatever the suite's environment forces must itself be valid —
+        // otherwise every dispatch in this test process errors.
+        assert!(forced_backend().is_ok(), "{FORCE_BACKEND_ENV} names an unusable backend");
     }
 
     #[test]
@@ -528,19 +820,34 @@ mod tests {
         // Width mismatch is always an error, available or not.
         assert!(decode_multistate_with(&bytes, 64, &table, 8, Backend::Sse41).is_err());
         assert!(decode_multistate_with(&bytes, 64, &table, 4, Backend::Avx2).is_err());
+        assert!(decode_multistate_with(&bytes, 64, &table, 2, Backend::Neon).is_err());
         // Scalar backend accepts every supported count.
         assert_eq!(
             decode_multistate_with(&bytes, 64, &table, 4, Backend::Scalar).unwrap(),
             symbols
         );
         // An unavailable SIMD backend is a loud error, not a silent
-        // scalar fallback.
-        if !backend_available(Backend::Sse41) {
-            assert!(decode_multistate_with(&bytes, 64, &table, 4, Backend::Sse41).is_err());
-        }
-        if !backend_available(Backend::Avx2) {
-            let b8 = encode_multistate(&symbols, &table, 8).unwrap();
-            assert!(decode_multistate_with(&b8, 64, &table, 8, Backend::Avx2).is_err());
+        // scalar fallback — both through the wrapper and through a
+        // direct trait-object call.
+        let b8 = encode_multistate(&symbols, &table, 8).unwrap();
+        for (backend, stream, n) in [
+            (Backend::Sse41, &bytes, 4usize),
+            (Backend::Avx2, &b8, 8),
+            (Backend::Neon, &bytes, 4),
+            (Backend::Neon, &b8, 8),
+        ] {
+            if !backend_available(backend) {
+                assert!(
+                    decode_multistate_with(stream, 64, &table, n, backend).is_err(),
+                    "{} n={n}",
+                    backend.name()
+                );
+                assert!(
+                    backend.implementation().decode(stream, 64, &table, n).is_err(),
+                    "direct {} n={n}",
+                    backend.name()
+                );
+            }
         }
     }
 
@@ -548,7 +855,9 @@ mod tests {
     /// lengths straddling the round-robin and refill-guard edges.
     #[test]
     fn simd_matches_scalar_on_valid_streams() {
-        for (states, backend) in [(4usize, Backend::Sse41), (8, Backend::Avx2)] {
+        for (states, backend) in
+            [(4usize, Backend::Sse41), (8, Backend::Avx2), (4, Backend::Neon), (8, Backend::Neon)]
+        {
             for len in [0usize, 1, 3, 7, 8, 9, 31, 1000, 20_011] {
                 for alphabet in [2usize, 64, 300] {
                     let seed = 41 ^ ((len as u64) << 4) ^ states as u64;
@@ -576,7 +885,9 @@ mod tests {
     #[test]
     fn simd_matches_scalar_on_corrupt_streams() {
         let mut rng = Rng::new(0x51D);
-        for (states, backend) in [(4usize, Backend::Sse41), (8, Backend::Avx2)] {
+        for (states, backend) in
+            [(4usize, Backend::Sse41), (8, Backend::Avx2), (4, Backend::Neon), (8, Backend::Neon)]
+        {
             if !backend_available(backend) {
                 continue;
             }

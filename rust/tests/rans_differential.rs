@@ -1,9 +1,10 @@
 //! Differential fuzz wall for the SIMD gather decoder.
 //!
-//! `rust/src/rans/simd.rs` promises that the SSE4.1 (4-state) and AVX2
-//! (8-state) decode paths are *symbol-identical* to the const-generic
-//! scalar loop — on valid streams and on corrupt ones. This suite pins
-//! that promise from outside the crate:
+//! `rust/src/rans/simd.rs` promises that every backend behind the
+//! cross-ISA seam — SSE4.1 (4-state) and AVX2 (8-state) on x86_64,
+//! NEON (both widths) on aarch64 — is *symbol-identical* to the
+//! const-generic scalar loop, on valid streams and on corrupt ones.
+//! This suite pins that promise from outside the crate:
 //!
 //! * seeded-LCG tensors swept over states × lanes × Q × tail counts
 //!   (count < N, count = 0, single-symbol alphabets), decoded through
@@ -44,11 +45,11 @@ fn lcg_symbols(seed: u64, len: usize, alphabet: usize) -> Vec<u32> {
         .collect()
 }
 
-/// The SIMD backends of matching width that are runnable on this host.
+/// The SIMD backends covering `states` that are runnable on this host.
 fn simd_backends(states: usize) -> Vec<Backend> {
-    [Backend::Sse41, Backend::Avx2]
+    [Backend::Sse41, Backend::Avx2, Backend::Neon]
         .into_iter()
-        .filter(|b| b.states() == Some(states) && simd::backend_available(*b))
+        .filter(|b| b.supports(states) && simd::backend_available(*b))
         .collect()
 }
 
@@ -173,30 +174,53 @@ fn lanes_by_states_sweep_through_layout_layer() {
 /// checked in `rans::simd`'s unit tests.)
 #[test]
 fn dispatch_selects_simd_on_capable_hosts() {
+    // A RANS_SC_FORCE_BACKEND override rewires dispatch by design (the
+    // aarch64 CI leg pins neon this way): assert the forced semantics
+    // and skip the auto-dispatch pins below.
+    let forced = simd::forced_backend().expect("force override must name a usable backend");
+    if let Some(forced) = forced {
+        for n in [1usize, 2, 4, 8] {
+            let expect = if forced.supports(n) { forced } else { Backend::Scalar };
+            assert_eq!(simd::backend_for(n).unwrap(), expect, "forced, n={n}");
+        }
+        return;
+    }
+    // The anti-scalar-vs-scalar property itself, ISA-independently:
+    // wherever some SIMD backend can run, auto dispatch picks one.
+    for n in [4usize, 8] {
+        let picked = simd::backend_for(n).unwrap();
+        let runnable = simd_backends(n);
+        if runnable.is_empty() {
+            assert_eq!(picked, Backend::Scalar, "n={n}");
+        } else {
+            assert!(runnable.contains(&picked), "n={n} picked {}", picked.name());
+        }
+    }
+    // Arch-specific pins so a capable CI builder can't silently regress
+    // to the scalar fallback.
     #[cfg(target_arch = "x86_64")]
     {
         if is_x86_feature_detected!("sse4.1") {
-            assert_eq!(simd::backend_for(4), Backend::Sse41);
+            assert_eq!(simd::backend_for(4).unwrap(), Backend::Sse41);
             assert_eq!(simd_backends(4), vec![Backend::Sse41]);
-        } else {
-            assert_eq!(simd::backend_for(4), Backend::Scalar);
         }
         if is_x86_feature_detected!("avx2") {
-            assert_eq!(simd::backend_for(8), Backend::Avx2);
+            assert_eq!(simd::backend_for(8).unwrap(), Backend::Avx2);
             assert_eq!(simd_backends(8), vec![Backend::Avx2]);
-        } else {
-            assert_eq!(simd::backend_for(8), Backend::Scalar);
         }
     }
-    #[cfg(not(target_arch = "x86_64"))]
+    #[cfg(target_arch = "aarch64")]
     {
-        assert_eq!(simd::backend_for(4), Backend::Scalar);
-        assert_eq!(simd::backend_for(8), Backend::Scalar);
-        assert!(simd_backends(4).is_empty() && simd_backends(8).is_empty());
+        // NEON is baseline on aarch64 — both SIMD widths must dispatch
+        // to it unconditionally.
+        assert_eq!(simd::backend_for(4).unwrap(), Backend::Neon);
+        assert_eq!(simd::backend_for(8).unwrap(), Backend::Neon);
+        assert_eq!(simd_backends(4), vec![Backend::Neon]);
+        assert_eq!(simd_backends(8), vec![Backend::Neon]);
     }
     // Scalar-only widths never dispatch to SIMD anywhere.
-    assert_eq!(simd::backend_for(1), Backend::Scalar);
-    assert_eq!(simd::backend_for(2), Backend::Scalar);
+    assert_eq!(simd::backend_for(1).unwrap(), Backend::Scalar);
+    assert_eq!(simd::backend_for(2).unwrap(), Backend::Scalar);
 }
 
 /// Encoder byte-identity against the committed golden vectors (the

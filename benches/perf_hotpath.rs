@@ -39,11 +39,26 @@ fn mbps(bytes: usize, ms: f64) -> f64 {
 /// in Msym/s — the unit the perf trajectory is tracked in.
 struct Report {
     rows: Vec<(String, Measurement, Option<f64>)>,
+    robustness: Option<RobustnessSmoke>,
+}
+
+/// Outcome of the session-layer robustness smoke: a seeded soak over a
+/// lossy in-proc link, driven through [`rans_sc::coordinator::Session`]
+/// so the resilience counters in the JSON artifact reflect the real
+/// retry/shed machinery rather than a simulation of it.
+struct RobustnessSmoke {
+    requests: usize,
+    ok: usize,
+    rejected: usize,
+    retry_total: u64,
+    shed_total: u64,
+    reconnect_total: u64,
+    wall_ms: f64,
 }
 
 impl Report {
     fn new() -> Self {
-        Report { rows: Vec::new() }
+        Report { rows: Vec::new(), robustness: None }
     }
 
     fn add(&mut self, name: &str, m: Measurement) -> &Measurement {
@@ -88,7 +103,7 @@ impl Report {
                 row.build()
             })
             .collect();
-        ObjBuilder::new()
+        let mut top = ObjBuilder::new()
             .field("bench", "perf_hotpath")
             .field("t", t)
             .field("q", q as usize)
@@ -129,9 +144,88 @@ impl Report {
             // truthiness, for exactly this reason).
             .field("neon_decode_msym_s", self.msym_of("rans_decode_neon4"))
             .field("neon8_decode_msym_s", self.msym_of("rans_decode_neon8"))
-            .field("neon_backend", simd_backends.2)
-            .field("rows", rows)
-            .build()
+            .field("neon_backend", simd_backends.2);
+        // Session-layer robustness counters from the seeded lossy-link
+        // soak. CI bench-smoke fails if `retry_total` / `shed_total` go
+        // missing or report zero — a zero means the fault schedule (or
+        // the retry machinery) silently stopped exercising the session.
+        if let Some(s) = &self.robustness {
+            top = top
+                .field("retry_total", s.retry_total as usize)
+                .field("shed_total", s.shed_total as usize)
+                .field("reconnect_total", s.reconnect_total as usize)
+                .field("soak_requests", s.requests)
+                .field("soak_ok", s.ok)
+                .field("soak_rejected", s.rejected)
+                .field("soak_wall_ms", s.wall_ms);
+        }
+        top.field("rows", rows).build()
+    }
+}
+
+/// Drive a seeded burst of requests through a [`Session`] over a
+/// dropping [`FaultyTransport`] whose responder sheds every seventh
+/// request with `Busy`, and report the session's resilience counters.
+fn robustness_smoke(fast: bool) -> RobustnessSmoke {
+    use rans_sc::coordinator::{
+        FaultSpec, FaultyTransport, Frame, FrameKind, Session, SessionConfig, Transport,
+    };
+    use rans_sc::telemetry::Registry;
+    use std::sync::Arc;
+
+    let requests = if fast { 200 } else { 500 };
+    let spec = FaultSpec::drops(0.15);
+    let (client, mut server) = FaultyTransport::pair(0xB0B0, spec, spec);
+    let srv = std::thread::spawn(move || {
+        let mut seen = 0u64;
+        loop {
+            let frame = match server.recv() {
+                Ok(f) => f,
+                Err(e) if e.to_string().contains("injected link fault") => continue,
+                Err(_) => return, // peer closed
+            };
+            seen += 1;
+            let kind = if seen % 7 == 0 {
+                FrameKind::Busy { retry_after_ms: 1, message: "smoke shed".into() }
+            } else {
+                FrameKind::Pong
+            };
+            if server.send(&Frame::new(frame.request_id, kind)).is_err() {
+                return;
+            }
+        }
+    });
+    let registry = Arc::new(Registry::new());
+    let cfg = SessionConfig {
+        deadline_ms: 2_000,
+        try_timeout_ms: 40,
+        max_retries: 10,
+        base_backoff_ms: 1,
+        max_backoff_ms: 4,
+        heartbeat_ms: 0,
+        seed: 0xB0B0,
+    };
+    let mut session = Session::new(client, cfg).with_metrics(Arc::clone(&registry));
+    let sw = std::time::Instant::now();
+    let (mut ok, mut rejected) = (0usize, 0usize);
+    for _ in 0..requests {
+        match session.call(FrameKind::Ping) {
+            Ok(_) => ok += 1,
+            Err(rans_sc::Error::Rejected { .. }) => rejected += 1,
+            Err(_) => {}
+        }
+    }
+    let wall_ms = sw.elapsed().as_secs_f64() * 1e3;
+    drop(session);
+    let _ = srv.join();
+    RobustnessSmoke {
+        requests,
+        ok,
+        rejected,
+        retry_total: registry.get("session.retry_total"),
+        shed_total: registry.get("session.shed_total"),
+        reconnect_total: registry.get("session.reconnect_total"),
+        wall_ms,
     }
 }
 
@@ -447,6 +541,22 @@ fn main() {
         }),
     );
     println!("Algorithm 1 (cold)   {:>12}", m.fmt_mean_std());
+
+    // Session-layer robustness smoke: same binary, same JSON artifact,
+    // so the resilience trajectory rides next to the perf trajectory.
+    let smoke = robustness_smoke(fast);
+    println!(
+        "robustness smoke     {} req over 15% lossy link: {} ok / {} rejected, \
+         {} retries, {} sheds, {} reconnects ({:.0} ms)",
+        smoke.requests,
+        smoke.ok,
+        smoke.rejected,
+        smoke.retry_total,
+        smoke.shed_total,
+        smoke.reconnect_total,
+        smoke.wall_ms
+    );
+    report.robustness = Some(smoke);
 
     // JSON artifact for the CI perf-trajectory record.
     let json_path =

@@ -140,6 +140,7 @@ fn main() -> rans_sc::Result<()> {
         let batcher: Batcher<Vec<f32>, Vec<f32>> = Batcher::new(BatcherConfig {
             buckets: vec![1, 8],
             max_wait: std::time::Duration::from_millis(3),
+            ..Default::default()
         });
         let worker = {
             let batcher = batcher.clone();

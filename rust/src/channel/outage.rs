@@ -199,6 +199,21 @@ mod tests {
     }
 
     #[test]
+    fn budget_exhaustion_is_retryable() {
+        // Driving ε toward 1 makes every attempt an outage; exhausting
+        // the ARQ budget must surface as a *retryable* transport error
+        // so the session layer can back off and try again, rather than
+        // treating a bad radio interval as fatal.
+        let ch = OutageChannel::new(ChannelParams { epsilon: 0.999, ..Default::default() })
+            .unwrap();
+        let mut rng = Rng::new(7);
+        let err = (0..32)
+            .find_map(|_| ch.transmit(1000, &mut rng, 0).err())
+            .expect("ε=0.999 must produce an outage within 32 single-attempt sends");
+        assert!(err.is_retryable(), "{err}");
+    }
+
+    #[test]
     fn transmit_latency_includes_retries() {
         let ch = OutageChannel::new(ChannelParams { epsilon: 0.5, ..Default::default() })
             .unwrap();

@@ -8,6 +8,7 @@
 use std::path::Path;
 
 use crate::channel::ChannelParams;
+use crate::coordinator::session::SessionConfig;
 use crate::error::{Error, Result};
 use crate::tensor::Dtype;
 use crate::util::json::{self, ObjBuilder, Value};
@@ -52,6 +53,14 @@ pub struct AppConfig {
     pub buckets: Vec<usize>,
     /// Batcher max wait, microseconds.
     pub batch_wait_us: u64,
+    /// TCP read/write timeout, milliseconds (`0` disables, restoring
+    /// blocking sockets).
+    pub io_timeout_ms: u64,
+    /// Cloud-side in-flight cap; excess requests are shed with `Busy`.
+    pub max_inflight: usize,
+    /// Session-layer retry/deadline/heartbeat policy
+    /// (`session.deadline_ms`, `session.max_retries`, … as dotted keys).
+    pub session: SessionConfig,
     /// True once `lanes` was set explicitly (file or override) — the
     /// autotuner never overrides an explicit choice. Recorded configs
     /// re-pin on load, so experiment records reproduce cross-machine.
@@ -77,6 +86,9 @@ impl Default for AppConfig {
             channel: ChannelParams::default(),
             buckets: vec![1, 8],
             batch_wait_us: 2000,
+            io_timeout_ms: 5_000,
+            max_inflight: 32,
+            session: SessionConfig::default(),
             lanes_pinned: false,
             states_pinned: false,
         }
@@ -158,6 +170,33 @@ impl AppConfig {
                     .collect::<Result<_>>()?;
             }
             "batch_wait_us" => self.batch_wait_us = val.as_usize().ok_or_else(bad)? as u64,
+            "io_timeout_ms" => self.io_timeout_ms = val.as_usize().ok_or_else(bad)? as u64,
+            "max_inflight" => self.max_inflight = val.as_usize().ok_or_else(bad)?,
+            "session" => {
+                let obj = val.as_obj().ok_or_else(bad)?;
+                for (sk, sv) in obj {
+                    self.apply_value(&format!("session.{sk}"), sv)?;
+                }
+            }
+            "session.deadline_ms" => {
+                self.session.deadline_ms = val.as_usize().ok_or_else(bad)? as u64
+            }
+            "session.try_timeout_ms" => {
+                self.session.try_timeout_ms = val.as_usize().ok_or_else(bad)? as u64
+            }
+            "session.max_retries" => {
+                self.session.max_retries = val.as_usize().ok_or_else(bad)? as u32
+            }
+            "session.base_backoff_ms" => {
+                self.session.base_backoff_ms = val.as_usize().ok_or_else(bad)? as u64
+            }
+            "session.max_backoff_ms" => {
+                self.session.max_backoff_ms = val.as_usize().ok_or_else(bad)? as u64
+            }
+            "session.heartbeat_ms" => {
+                self.session.heartbeat_ms = val.as_usize().ok_or_else(bad)? as u64
+            }
+            "session.seed" => self.session.seed = val.as_usize().ok_or_else(bad)? as u64,
             "channel" => {
                 let obj = val.as_obj().ok_or_else(bad)?;
                 for (ck, cv) in obj {
@@ -210,6 +249,20 @@ impl AppConfig {
             .field("addr", self.addr.as_str())
             .field("buckets", self.buckets.clone())
             .field("batch_wait_us", self.batch_wait_us as usize)
+            .field("io_timeout_ms", self.io_timeout_ms as usize)
+            .field("max_inflight", self.max_inflight)
+            .field(
+                "session",
+                ObjBuilder::new()
+                    .field("deadline_ms", self.session.deadline_ms as usize)
+                    .field("try_timeout_ms", self.session.try_timeout_ms as usize)
+                    .field("max_retries", self.session.max_retries as usize)
+                    .field("base_backoff_ms", self.session.base_backoff_ms as usize)
+                    .field("max_backoff_ms", self.session.max_backoff_ms as usize)
+                    .field("heartbeat_ms", self.session.heartbeat_ms as usize)
+                    .field("seed", self.session.seed as usize)
+                    .build(),
+            )
             .field(
                 "channel",
                 ObjBuilder::new()
@@ -246,6 +299,30 @@ mod tests {
         assert_eq!(c2.buckets, c.buckets);
         assert_eq!(c2.channel, c.channel);
         assert_eq!(c2.dtype, c.dtype);
+        assert_eq!(c2.session, c.session);
+        assert_eq!(c2.io_timeout_ms, c.io_timeout_ms);
+        assert_eq!(c2.max_inflight, c.max_inflight);
+    }
+
+    #[test]
+    fn session_overrides_and_roundtrip() {
+        let mut c = AppConfig::default();
+        c.apply_override("session.deadline_ms=1500").unwrap();
+        c.apply_override("session.max_retries=7").unwrap();
+        c.apply_override("session.heartbeat_ms=250").unwrap();
+        c.apply_override("io_timeout_ms=900").unwrap();
+        c.apply_override("max_inflight=4").unwrap();
+        assert_eq!(c.session.deadline_ms, 1500);
+        assert_eq!(c.session.max_retries, 7);
+        assert_eq!(c.session.heartbeat_ms, 250);
+        assert_eq!(c.io_timeout_ms, 900);
+        assert_eq!(c.max_inflight, 4);
+        let text = c.to_json().to_string_pretty();
+        let mut c2 = AppConfig::default();
+        c2.apply_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(c2.session, c.session);
+        assert_eq!(c2.io_timeout_ms, 900);
+        assert_eq!(c2.max_inflight, 4);
     }
 
     #[test]
@@ -310,6 +387,9 @@ mod tests {
         assert!(c.apply_override("sl=x").is_err());
         assert!(c.apply_override("autotune=maybe").is_err());
         assert!(c.apply_override("autotune=1").is_err());
+        assert!(c.apply_override("session.deadline_ms=x").is_err());
+        assert!(c.apply_override("session.nonsense=1").is_err());
+        assert!(c.apply_override("max_inflight=no").is_err());
     }
 
     /// Recorded configs must reproduce cross-machine: serializing pins

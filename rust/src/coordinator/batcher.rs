@@ -8,7 +8,7 @@
 //! latency/throughput dial.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -22,11 +22,19 @@ pub struct BatcherConfig {
     pub buckets: Vec<usize>,
     /// Max time a request waits for batch-mates.
     pub max_wait: Duration,
+    /// Queue-depth bound: a `submit` finding this many requests already
+    /// pending is shed immediately with [`Error::Rejected`] instead of
+    /// growing an unbounded backlog. Unbounded by default.
+    pub max_queue: usize,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { buckets: vec![1, 8], max_wait: Duration::from_millis(2) }
+        BatcherConfig {
+            buckets: vec![1, 8],
+            max_wait: Duration::from_millis(2),
+            max_queue: usize::MAX,
+        }
     }
 }
 
@@ -40,6 +48,7 @@ struct Shared<Req, Resp> {
     queue: Mutex<VecDeque<Pending<Req, Resp>>>,
     available: Condvar,
     stopped: AtomicBool,
+    shed: AtomicU64,
 }
 
 /// A bucketed dynamic batcher.
@@ -70,6 +79,7 @@ impl<Req: Send + 'static, Resp: Send + 'static> Batcher<Req, Resp> {
                 queue: Mutex::new(VecDeque::new()),
                 available: Condvar::new(),
                 stopped: AtomicBool::new(false),
+                shed: AtomicU64::new(0),
             }),
             cfg,
         }
@@ -80,13 +90,37 @@ impl<Req: Send + 'static, Resp: Send + 'static> Batcher<Req, Resp> {
         *self.cfg.buckets.last().unwrap()
     }
 
-    /// Enqueue one request.
+    /// Requests shed so far (queue full or submitted after stop).
+    pub fn shed_total(&self) -> u64 {
+        self.shared.shed.load(Ordering::Relaxed)
+    }
+
+    /// Shed one request through its own reply channel, so callers see
+    /// the same `(Result, queue_ms)` shape whether the request ran or
+    /// was rejected at the door.
+    fn shed(&self, tx: Sender<(Result<Resp>, f64)>, why: String) {
+        self.shared.shed.fetch_add(1, Ordering::Relaxed);
+        let retry_after_ms = (self.cfg.max_wait.as_millis() as u64).max(1);
+        let _ = tx.send((Err(Error::rejected(retry_after_ms, why)), 0.0));
+    }
+
+    /// Enqueue one request; sheds with [`Error::Rejected`] (delivered
+    /// through the returned receiver) when the batcher is stopped or the
+    /// queue is at [`BatcherConfig::max_queue`].
     pub fn submit(&self, req: Req) -> Receiver<(Result<Resp>, f64)> {
         let (tx, rx) = channel();
-        let pending = Pending { req, enqueued: Instant::now(), reply: tx };
+        if self.shared.stopped.load(Ordering::SeqCst) {
+            self.shed(tx, "batcher is stopped".into());
+            return rx;
+        }
         {
             let mut q = self.shared.queue.lock().unwrap();
-            q.push_back(pending);
+            if q.len() >= self.cfg.max_queue {
+                drop(q);
+                self.shed(tx, format!("batch queue full ({} pending)", self.cfg.max_queue));
+                return rx;
+            }
+            q.push_back(Pending { req, enqueued: Instant::now(), reply: tx });
         }
         self.shared.available.notify_one();
         rx
@@ -203,6 +237,7 @@ mod tests {
         let b: Batcher<u32, u32> = Batcher::new(BatcherConfig {
             buckets: vec![1, 4],
             max_wait: Duration::from_millis(1),
+            ..Default::default()
         });
         let worker = {
             let b = b.clone();
@@ -221,6 +256,7 @@ mod tests {
         let b: Batcher<u32, u32> = Batcher::new(BatcherConfig {
             buckets: vec![1, 4],
             max_wait: Duration::from_secs(10), // would stall partial batches
+            ..Default::default()
         });
         let sizes = Arc::new(Mutex::new(Vec::new()));
         let worker = {
@@ -251,6 +287,7 @@ mod tests {
         let b: Batcher<u32, u32> = Batcher::new(BatcherConfig {
             buckets: vec![2],
             max_wait: Duration::from_millis(1),
+            ..Default::default()
         });
         let worker = {
             let b = b.clone();
@@ -272,6 +309,7 @@ mod tests {
         let b: Batcher<Vec<f32>, usize> = Batcher::new(BatcherConfig {
             buckets: vec![1, 4],
             max_wait: Duration::from_micros(500),
+            ..Default::default()
         });
         let worker = {
             let b = b.clone();
@@ -304,6 +342,7 @@ mod tests {
         let b: Batcher<u64, u64> = Batcher::new(BatcherConfig {
             buckets: vec![1, 8],
             max_wait: Duration::from_micros(500),
+            ..Default::default()
         });
         let worker = {
             let b = b.clone();
@@ -323,5 +362,105 @@ mod tests {
         });
         b.stop();
         worker.join().unwrap();
+    }
+
+    #[test]
+    fn queue_full_sheds_with_rejected() {
+        // No worker running: the queue fills and the bound trips.
+        let b: Batcher<u32, u32> = Batcher::new(BatcherConfig {
+            buckets: vec![1],
+            max_wait: Duration::from_millis(40),
+            max_queue: 2,
+        });
+        let _held1 = b.submit(1);
+        let _held2 = b.submit(2);
+        let rx = b.submit(3);
+        let (resp, queue_ms) = rx.recv().unwrap();
+        let err = resp.unwrap_err();
+        assert!(matches!(err, Error::Rejected { retry_after_ms: 40, .. }), "{err}");
+        assert!(err.is_retryable());
+        assert_eq!(queue_ms, 0.0, "a shed request never queued");
+        assert_eq!(b.shed_total(), 1);
+    }
+
+    #[test]
+    fn submit_after_stop_is_rejected() {
+        let b: Batcher<u32, u32> = Batcher::new(BatcherConfig::default());
+        b.stop();
+        let (resp, _) = b.submit(7).recv().unwrap();
+        assert!(matches!(resp.unwrap_err(), Error::Rejected { .. }));
+        assert_eq!(b.shed_total(), 1);
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_requests() {
+        let b: Batcher<u32, u32> = Batcher::new(BatcherConfig {
+            buckets: vec![1],
+            max_wait: Duration::ZERO,
+            ..Default::default()
+        });
+        // Enqueue before the worker starts, then stop immediately: the
+        // drain-then-exit contract must still answer every request.
+        let rxs: Vec<_> = (0..4).map(|i| b.submit(i)).collect();
+        b.stop();
+        let worker = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                b.run(|reqs, _| {
+                    std::thread::sleep(Duration::from_millis(5));
+                    reqs.into_iter().map(|r| Ok(r * 10)).collect()
+                })
+            })
+        };
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let (resp, _) = rx.recv().unwrap();
+            assert_eq!(resp.unwrap(), i as u32 * 10);
+        }
+        worker.join().unwrap();
+        assert_eq!(b.shed_total(), 0);
+    }
+
+    #[test]
+    fn dispatch_is_oldest_first_under_concurrent_submitters() {
+        let b: Batcher<(u64, u64), (u64, u64)> = Batcher::new(BatcherConfig {
+            buckets: vec![1, 4],
+            max_wait: Duration::from_micros(200),
+            ..Default::default()
+        });
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let worker = {
+            let b = b.clone();
+            let seen = Arc::clone(&seen);
+            std::thread::spawn(move || {
+                b.run(move |reqs, _| {
+                    seen.lock().unwrap().extend(reqs.iter().copied());
+                    reqs.into_iter().map(Ok).collect()
+                })
+            })
+        };
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let b = b.clone();
+                s.spawn(move || {
+                    let rxs: Vec<_> = (0..25u64).map(|i| b.submit((t, i))).collect();
+                    for rx in rxs {
+                        rx.recv().unwrap().0.unwrap();
+                    }
+                });
+            }
+        });
+        b.stop();
+        worker.join().unwrap();
+        // The queue is FIFO, so each submitter's requests must be
+        // dispatched in its own submission order regardless of how the
+        // four interleave globally.
+        let seen = seen.lock().unwrap();
+        assert_eq!(seen.len(), 100);
+        for t in 0..4u64 {
+            let order: Vec<u64> = seen.iter().filter(|(tt, _)| *tt == t).map(|(_, i)| *i).collect();
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(order, sorted, "submitter {t} dispatched out of order");
+        }
     }
 }

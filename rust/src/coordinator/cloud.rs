@@ -1,9 +1,19 @@
 //! Cloud node: decompress → tail compute → reply.
+//!
+//! Inference frames pass through a bounded **admission** gate before
+//! touching the decoder: when the in-flight count hits
+//! [`ServerLimits::max_inflight`], or the request's deadline header is
+//! provably unmeetable given the observed service-time EWMA, the node
+//! sheds the request explicitly with a [`FrameKind::Busy`] reply
+//! carrying a retry-after hint instead of queueing it into a timeout.
+//! Control frames (Ping/Stats/Shutdown) always bypass admission so
+//! liveness probes keep working under overload.
 
 use std::collections::HashMap;
 use std::net::TcpListener;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::engine::{Engine as CodecEngine, EngineHandle};
 use crate::error::{Error, Result};
@@ -14,6 +24,87 @@ use crate::util::timer::Stopwatch;
 
 use super::protocol::{Frame, FrameKind};
 use super::transport::{TcpTransport, Transport};
+
+/// Bounds on concurrent work the serving loops will accept.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerLimits {
+    /// Maximum inference frames being handled at once across all
+    /// connections; requests beyond this are shed with `Busy`.
+    pub max_inflight: usize,
+}
+
+impl Default for ServerLimits {
+    fn default() -> Self {
+        ServerLimits { max_inflight: 32 }
+    }
+}
+
+/// Admission gate shared by all serving threads.
+///
+/// Tracks the in-flight count and an EWMA of observed service times so
+/// shed decisions (and the retry-after hint they carry) reflect the
+/// node's actual throughput rather than a hardcoded guess.
+struct Admission {
+    limits: ServerLimits,
+    inflight: AtomicUsize,
+    /// EWMA of service time in microseconds; `0` until the first
+    /// completion. Updated with α = 1/8 (racy read-modify-write is fine:
+    /// it is a smoothed hint, not an invariant).
+    ewma_service_us: AtomicU64,
+}
+
+impl Admission {
+    fn new(limits: ServerLimits) -> Self {
+        Admission { limits, inflight: AtomicUsize::new(0), ewma_service_us: AtomicU64::new(0) }
+    }
+
+    fn ewma_ms(&self) -> u64 {
+        self.ewma_service_us.load(Ordering::Relaxed) / 1_000
+    }
+
+    /// Admit one request, or return the suggested retry-after (ms).
+    ///
+    /// Sheds when the in-flight cap is hit, and — when the request
+    /// carries a deadline header — when the backlog ahead of it times
+    /// the service-time EWMA already exceeds that deadline (the request
+    /// is provably unmeetable, so failing fast beats a doomed decode).
+    fn try_admit(&self, deadline_ms: Option<u32>) -> std::result::Result<AdmitGuard<'_>, u64> {
+        let ewma_ms = self.ewma_ms();
+        let queued = self.inflight.fetch_add(1, Ordering::SeqCst);
+        if queued >= self.limits.max_inflight {
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+            return Err(ewma_ms.max(1));
+        }
+        if let (Some(deadline), true) = (deadline_ms, ewma_ms > 0) {
+            let est_ms = ewma_ms.saturating_mul(queued as u64 + 1);
+            if est_ms > deadline as u64 {
+                self.inflight.fetch_sub(1, Ordering::SeqCst);
+                return Err(ewma_ms.max(1));
+            }
+        }
+        Ok(AdmitGuard { admission: self, start: Instant::now() })
+    }
+
+    fn note_service(&self, observed_us: u64) {
+        let old = self.ewma_service_us.load(Ordering::Relaxed);
+        let new = if old == 0 { observed_us } else { old - old / 8 + observed_us / 8 };
+        self.ewma_service_us.store(new, Ordering::Relaxed);
+    }
+}
+
+/// Releases the in-flight slot and feeds the service-time EWMA on drop.
+struct AdmitGuard<'a> {
+    admission: &'a Admission,
+    start: Instant,
+}
+
+impl Drop for AdmitGuard<'_> {
+    fn drop(&mut self) {
+        self.admission.inflight.fetch_sub(1, Ordering::SeqCst);
+        let us = self.start.elapsed().as_micros().min(u64::MAX as u128) as u64;
+        self.admission.note_service(us);
+    }
+}
 
 /// The cloud-side serving node.
 ///
@@ -28,6 +119,7 @@ pub struct CloudNode {
     pool: ExecPool,
     codec: EngineHandle,
     metrics: Arc<Registry>,
+    admission: Admission,
     vision_cache: Mutex<HashMap<(String, usize, usize), Arc<VisionSplitExec>>>,
     lm_cache: Mutex<HashMap<String, Arc<LmSplitExec>>>,
 }
@@ -43,9 +135,16 @@ impl CloudNode {
             pool,
             codec: EngineHandle::shared(),
             metrics: Arc::new(Registry::new()),
+            admission: Admission::new(ServerLimits::default()),
             vision_cache: Mutex::new(HashMap::new()),
             lm_cache: Mutex::new(HashMap::new()),
         })
+    }
+
+    /// Replace the default admission bounds.
+    pub fn with_limits(mut self, limits: ServerLimits) -> Self {
+        self.admission = Admission::new(limits);
+        self
     }
 
     /// Decode on a dedicated compression engine instead of the shared
@@ -172,9 +271,7 @@ impl CloudNode {
             FrameKind::InferLmRaw { model, dtype, payload } => {
                 self.infer_lm_raw(model, *dtype, payload)
             }
-            FrameKind::Stats => Ok(FrameKind::StatsReply {
-                json: self.metrics.snapshot().to_string_compact(),
-            }),
+            FrameKind::Stats => Ok(FrameKind::StatsReply { json: self.metrics.snapshot_json() }),
             FrameKind::Shutdown => Ok(FrameKind::Pong),
             other => Err(Error::protocol(format!("unexpected frame {other:?}"))),
         };
@@ -185,23 +282,78 @@ impl CloudNode {
                 FrameKind::ServerError { message: e.to_string() }
             }
         };
-        Frame { request_id: frame.request_id, kind }
+        Frame::new(frame.request_id, kind)
+    }
+
+    /// [`CloudNode::handle`] behind the admission gate: inference frames
+    /// that would blow the in-flight cap — or whose deadline header is
+    /// already unmeetable — are shed with an explicit `Busy` reply;
+    /// control frames (Ping/Stats/Shutdown) always pass.
+    pub fn admit_and_handle(&self, frame: &Frame) -> Frame {
+        let needs_admission = matches!(
+            frame.kind,
+            FrameKind::InferVision { .. }
+                | FrameKind::InferVisionRaw { .. }
+                | FrameKind::InferLm { .. }
+                | FrameKind::InferLmRaw { .. }
+        );
+        if !needs_admission {
+            return self.handle(frame);
+        }
+        match self.admission.try_admit(frame.deadline_ms) {
+            Ok(_guard) => self.handle(frame),
+            Err(retry_after_ms) => {
+                self.metrics.incr("cloud.shed_total", 1);
+                let kind = FrameKind::Busy {
+                    retry_after_ms: retry_after_ms.min(u32::MAX as u64) as u32,
+                    message: format!(
+                        "inflight cap {} reached or deadline unmeetable",
+                        self.admission.limits.max_inflight
+                    ),
+                };
+                Frame::new(frame.request_id, kind)
+            }
+        }
+    }
+
+    /// Shared receive loop: handle frames until the peer goes away.
+    ///
+    /// Retryable receive errors (an injected garble on a lossy link, a
+    /// spurious timeout) are tolerated up to a short consecutive run so
+    /// one bad frame does not kill a message-framed connection; a dead
+    /// peer produces the same error back-to-back and exits promptly.
+    /// Returns `true` when the loop ended because a `Shutdown` frame
+    /// was served.
+    fn serve_loop(&self, t: &mut dyn Transport) -> bool {
+        let mut consecutive_errors = 0u32;
+        loop {
+            let frame = match t.recv() {
+                Ok(f) => {
+                    consecutive_errors = 0;
+                    f
+                }
+                Err(e) if e.is_retryable() && consecutive_errors < 8 => {
+                    consecutive_errors += 1;
+                    self.metrics.incr("cloud.recv_errors", 1);
+                    continue;
+                }
+                Err(_) => return false, // peer closed or stream is dead
+            };
+            let shutdown = matches!(frame.kind, FrameKind::Shutdown);
+            let reply = self.admit_and_handle(&frame);
+            if t.send(&reply).is_err() {
+                return shutdown;
+            }
+            if shutdown {
+                return true;
+            }
+        }
     }
 
     /// Serve a single transport until the peer shuts down or errors.
     pub fn serve_transport(&self, t: &mut dyn Transport) -> Result<()> {
-        loop {
-            let frame = match t.recv() {
-                Ok(f) => f,
-                Err(_) => return Ok(()), // peer closed
-            };
-            let shutdown = matches!(frame.kind, FrameKind::Shutdown);
-            let reply = self.handle(&frame);
-            t.send(&reply)?;
-            if shutdown {
-                return Ok(());
-            }
-        }
+        self.serve_loop(t);
+        Ok(())
     }
 
     /// Accept loop over TCP; one thread per connection. Returns when
@@ -225,18 +377,8 @@ impl CloudNode {
                             Ok(t) => t,
                             Err(_) => return,
                         };
-                        loop {
-                            let frame = match t.recv() {
-                                Ok(f) => f,
-                                Err(_) => return,
-                            };
-                            let is_shutdown = matches!(frame.kind, FrameKind::Shutdown);
-                            let reply = node.handle(&frame);
-                            let _ = t.send(&reply);
-                            if is_shutdown {
-                                stop.store(true, Ordering::SeqCst);
-                                return;
-                            }
+                        if node.serve_loop(&mut t) {
+                            stop.store(true, Ordering::SeqCst);
                         }
                     }));
                 }
@@ -250,5 +392,49 @@ impl CloudNode {
             let _ = w.join();
         }
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_sheds_above_cap_and_guard_releases() {
+        let adm = Admission::new(ServerLimits { max_inflight: 2 });
+        let g1 = adm.try_admit(None).unwrap();
+        let g2 = adm.try_admit(None).unwrap();
+        let retry_after = adm.try_admit(None).err().unwrap();
+        assert!(retry_after >= 1, "shed must carry a positive retry-after hint");
+        drop(g1);
+        let g3 = adm.try_admit(None).unwrap();
+        drop(g2);
+        drop(g3);
+        assert_eq!(adm.inflight.load(Ordering::SeqCst), 0, "guards must release their slots");
+    }
+
+    #[test]
+    fn admission_sheds_provably_unmeetable_deadline() {
+        let adm = Admission::new(ServerLimits { max_inflight: 64 });
+        // Teach the EWMA a 50 ms service time.
+        adm.note_service(50_000);
+        // 1 ms of budget cannot cover a 50 ms service: shed fast.
+        let retry_after = adm.try_admit(Some(1)).err().unwrap();
+        assert!(retry_after >= 1);
+        assert_eq!(adm.inflight.load(Ordering::SeqCst), 0, "a shed must not leak its slot");
+        // A generous deadline is admitted.
+        let g = adm.try_admit(Some(10_000)).unwrap();
+        drop(g);
+        // No deadline header → only the cap applies.
+        assert!(adm.try_admit(None).is_ok());
+    }
+
+    #[test]
+    fn ewma_smooths_rather_than_tracks() {
+        let adm = Admission::new(ServerLimits::default());
+        adm.note_service(8_000);
+        adm.note_service(80_000);
+        let ewma = adm.ewma_service_us.load(Ordering::Relaxed);
+        assert!(ewma > 8_000 && ewma < 80_000, "EWMA must smooth the spike, got {ewma}");
     }
 }

@@ -7,8 +7,17 @@
 //! Compression itself runs on the shared [`Engine`]'s persistent worker
 //! pool, so any number of edge nodes in one process fan lanes out onto
 //! one machine-sized pool instead of each spawning scoped threads.
+//!
+//! All round trips go through the [`Session`] layer: request IDs and
+//! deadlines ride the frame header, retryable failures back off and
+//! resend, a dead connection is redialed through the connector
+//! installed with `with_reconnect`, and a cloud-side `Busy` shed
+//! surfaces as a clean [`Error::Rejected`]. The vision node can
+//! additionally carry a [`DegradePolicy`]: consecutive retryable
+//! failures step the AIQ bit-width Q down toward the policy floor
+//! (fewer wire bytes → fewer link-budget failures), with an optional
+//! raw-frame fallback, and a run of successes climbs back up.
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::channel::OutageChannel;
@@ -22,9 +31,20 @@ use crate::tensor::{Dtype, TensorRef};
 use crate::util::timer::Stopwatch;
 
 use super::protocol::{Frame, FrameKind};
+use super::session::{DegradeEvent, DegradePolicy, DegradeState, Session, SessionConfig};
 use super::transport::Transport;
 
 pub use crate::engine::PlanCache;
+
+/// Session defaults for an edge node constructed without an explicit
+/// policy: no end-to-end deadline (so no deadline header is attached
+/// and in-process round trips behave like the old blocking path), a
+/// generous per-try budget, and a small retry allowance as the safety
+/// net. Deployments wanting real deadlines pass their own
+/// [`SessionConfig`] via `with_session_config`.
+fn default_session_config() -> SessionConfig {
+    SessionConfig { deadline_ms: 0, try_timeout_ms: 30_000, ..SessionConfig::default() }
+}
 
 /// Edge pipeline configuration.
 #[derive(Debug, Clone)]
@@ -92,36 +112,44 @@ fn expect_logits(frame: Frame) -> Result<(Vec<f32>, f32, f32)> {
     match frame.kind {
         FrameKind::Logits { data, decode_ms, compute_ms } => Ok((data, decode_ms, compute_ms)),
         FrameKind::ServerError { message } => Err(Error::protocol(format!("server: {message}"))),
+        // The session layer normally converts sheds to `Error::Rejected`
+        // before they get here; this arm covers direct `handle` callers.
+        FrameKind::Busy { retry_after_ms, message } => {
+            Err(Error::rejected(retry_after_ms as u64, message))
+        }
         other => Err(Error::protocol(format!("unexpected reply {other:?}"))),
     }
 }
 
-/// Vision edge node bound to one transport.
+/// Vision edge node bound to one transport (through the session layer).
 pub struct EdgeNode<T: Transport> {
     /// Configuration.
     pub cfg: EdgeConfig,
     exec: Arc<VisionSplitExec>,
-    transport: Mutex<T>,
+    session: Mutex<Session<T>>,
     engine: EngineHandle,
     plan_cache: PlanCache,
     channel: OutageChannel,
     metrics: Arc<Registry>,
-    next_id: AtomicU64,
+    degrade: Option<Mutex<DegradeState>>,
 }
 
 impl<T: Transport> EdgeNode<T> {
     /// Build an edge node over an established transport, compressing on
     /// the process-wide shared engine pool (resolved lazily).
     pub fn new(exec: Arc<VisionSplitExec>, transport: T, cfg: EdgeConfig) -> Self {
+        let metrics = Arc::new(Registry::new());
+        let session =
+            Session::new(transport, default_session_config()).with_metrics(Arc::clone(&metrics));
         EdgeNode {
             cfg,
             exec,
-            transport: Mutex::new(transport),
+            session: Mutex::new(session),
             engine: EngineHandle::shared(),
             plan_cache: PlanCache::default(),
             channel: OutageChannel::paper_default(),
-            metrics: Arc::new(Registry::new()),
-            next_id: AtomicU64::new(1),
+            metrics,
+            degrade: None,
         }
     }
 
@@ -139,6 +167,28 @@ impl<T: Transport> EdgeNode<T> {
         self
     }
 
+    /// Replace the session retry/deadline/heartbeat policy.
+    pub fn with_session_config(self, scfg: SessionConfig) -> Self {
+        self.session.lock().unwrap().set_config(scfg);
+        self
+    }
+
+    /// Install a dialer the session uses to replace a dead transport.
+    pub fn with_reconnect(mut self, connector: Box<dyn FnMut() -> Result<T> + Send>) -> Self {
+        let session = self.session.into_inner().unwrap().with_connector(connector);
+        self.session = Mutex::new(session);
+        self
+    }
+
+    /// Enable graceful degradation: after sustained retryable failures
+    /// the node encodes with a smaller Q (down to the policy floor, then
+    /// optionally raw frames); sustained successes recover toward
+    /// `cfg.q`.
+    pub fn with_degrade(mut self, policy: DegradePolicy) -> Self {
+        self.degrade = Some(Mutex::new(DegradeState::new(policy, self.cfg.q)));
+        self
+    }
+
     /// Node metrics.
     pub fn metrics(&self) -> &Arc<Registry> {
         &self.metrics
@@ -149,27 +199,74 @@ impl<T: Transport> EdgeNode<T> {
         self.plan_cache.stats()
     }
 
-    fn roundtrip(&self, kind: FrameKind) -> Result<Frame> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let mut t = self.transport.lock().unwrap();
-        t.send(&Frame { request_id: id, kind })?;
-        let reply = t.recv()?;
-        if reply.request_id != id {
-            return Err(Error::protocol(format!(
-                "reply id {} for request {id}",
-                reply.request_id
-            )));
+    /// The Q the next compressed request will encode with (differs from
+    /// `cfg.q` only while degraded).
+    pub fn effective_q(&self) -> u8 {
+        match &self.degrade {
+            Some(d) => d.lock().unwrap().effective_q(),
+            None => self.cfg.q,
         }
-        Ok(reply)
+    }
+
+    /// Current operating point under the degradation policy.
+    fn operating_point(&self) -> (u8, bool) {
+        match &self.degrade {
+            Some(d) => {
+                let st = d.lock().unwrap();
+                (st.effective_q(), st.raw_mode())
+            }
+            None => (self.cfg.q, false),
+        }
+    }
+
+    /// Feed one request outcome to the degradation state machine and
+    /// count the transitions. Fatal errors don't advance it: a resend at
+    /// a different Q cannot fix a corrupt artifact or a bad argument.
+    fn note_outcome<R>(&self, result: Result<R>) -> Result<R> {
+        let Some(d) = &self.degrade else {
+            return result;
+        };
+        let event = {
+            let mut st = d.lock().unwrap();
+            match &result {
+                Ok(_) => st.on_success(),
+                Err(e) if e.is_retryable() => st.on_retryable_failure(),
+                Err(_) => DegradeEvent::None,
+            }
+        };
+        match event {
+            DegradeEvent::SteppedDown(_) => self.metrics.incr("edge.degrade_total", 1),
+            DegradeEvent::RawFallback => {
+                self.metrics.incr("edge.degrade_total", 1);
+                self.metrics.incr("edge.raw_fallback_total", 1);
+            }
+            DegradeEvent::Recovered(_) => self.metrics.incr("edge.recover_total", 1),
+            DegradeEvent::None => {}
+        }
+        result
+    }
+
+    fn roundtrip(&self, kind: FrameKind) -> Result<Frame> {
+        self.session.lock().unwrap().call(kind)
     }
 
     /// Compressed inference: head → AIQ symbols → CSR+rANS → cloud.
+    ///
+    /// Under a degradation policy the encode Q may sit below `cfg.q`,
+    /// and in raw-fallback mode the request ships uncompressed.
     pub fn infer(&self, images: &[f32]) -> Result<InferOutcome> {
+        let (q, raw) = self.operating_point();
+        let result =
+            if raw { self.infer_raw_inner(images) } else { self.infer_compressed(images, q) };
+        self.note_outcome(result)
+    }
+
+    fn infer_compressed(&self, images: &[f32], q: u8) -> Result<InferOutcome> {
         let sw = Stopwatch::new();
-        let (symbols, params) = self.exec.run_head(images, self.cfg.q)?;
+        let (symbols, params) = self.exec.run_head(images, q)?;
         let reshape = self.plan_cache.strategy(&symbols, &params)?;
         let pcfg = PipelineConfig {
-            q: self.cfg.q,
+            q,
             lanes: self.cfg.lanes,
             parallel: self.cfg.parallel,
             reshape,
@@ -204,6 +301,10 @@ impl<T: Transport> EdgeNode<T> {
     /// Uncompressed baseline inference (E-1 shape): raw float IF over
     /// the link.
     pub fn infer_raw(&self, images: &[f32]) -> Result<InferOutcome> {
+        self.infer_raw_inner(images)
+    }
+
+    fn infer_raw_inner(&self, images: &[f32]) -> Result<InferOutcome> {
         let sw = Stopwatch::new();
         let feat = self.exec.run_head_raw(images)?;
         let mut payload = Vec::with_capacity(feat.len() * 4);
@@ -247,29 +348,32 @@ impl<T: Transport> EdgeNode<T> {
     }
 }
 
-/// LM edge node bound to one transport.
+/// LM edge node bound to one transport (through the session layer).
 pub struct LmEdgeNode<T: Transport> {
     /// Configuration (sl/batch come from the manifest entry).
     pub cfg: EdgeConfig,
     exec: Arc<LmSplitExec>,
-    transport: Mutex<T>,
+    session: Mutex<Session<T>>,
     engine: EngineHandle,
     plan_cache: PlanCache,
     channel: OutageChannel,
-    next_id: AtomicU64,
+    metrics: Arc<Registry>,
 }
 
 impl<T: Transport> LmEdgeNode<T> {
     /// Build an LM edge node on the shared engine pool (resolved lazily).
     pub fn new(exec: Arc<LmSplitExec>, transport: T, cfg: EdgeConfig) -> Self {
+        let metrics = Arc::new(Registry::new());
+        let session =
+            Session::new(transport, default_session_config()).with_metrics(Arc::clone(&metrics));
         LmEdgeNode {
             cfg,
             exec,
-            transport: Mutex::new(transport),
+            session: Mutex::new(session),
             engine: EngineHandle::shared(),
             plan_cache: PlanCache::default(),
             channel: OutageChannel::paper_default(),
-            next_id: AtomicU64::new(1),
+            metrics,
         }
     }
 
@@ -287,15 +391,26 @@ impl<T: Transport> LmEdgeNode<T> {
         self
     }
 
+    /// Replace the session retry/deadline/heartbeat policy.
+    pub fn with_session_config(self, scfg: SessionConfig) -> Self {
+        self.session.lock().unwrap().set_config(scfg);
+        self
+    }
+
+    /// Install a dialer the session uses to replace a dead transport.
+    pub fn with_reconnect(mut self, connector: Box<dyn FnMut() -> Result<T> + Send>) -> Self {
+        let session = self.session.into_inner().unwrap().with_connector(connector);
+        self.session = Mutex::new(session);
+        self
+    }
+
+    /// Node metrics (session robustness counters live here too).
+    pub fn metrics(&self) -> &Arc<Registry> {
+        &self.metrics
+    }
+
     fn roundtrip(&self, kind: FrameKind) -> Result<Frame> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let mut t = self.transport.lock().unwrap();
-        t.send(&Frame { request_id: id, kind })?;
-        let reply = t.recv()?;
-        if reply.request_id != id {
-            return Err(Error::protocol("reply id mismatch"));
-        }
-        Ok(reply)
+        self.session.lock().unwrap().call(kind)
     }
 
     /// Reject tensors whose dtype disagrees with [`EdgeConfig::dtype`]

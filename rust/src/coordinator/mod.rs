@@ -8,22 +8,38 @@
 //! concurrent edge requests into the bucket sizes the artifacts were
 //! compiled for.
 //!
+//! Between the nodes and the raw transport sits a **session layer**
+//! ([`session`]) that owns the failure semantics: per-request IDs and
+//! deadlines in the frame header, retry with capped exponential backoff
+//! and deterministic jitter, heartbeat liveness with automatic
+//! reconnect, explicit load-shed handling, and an edge-side
+//! graceful-degradation policy. [`fault`] provides the deterministic
+//! fault-injection transport the chaos soak drives.
+//!
 //! * [`protocol`] — length-prefixed, CRC-checked wire frames.
 //! * [`transport`] — TCP / in-proc duplex links + the simulated channel.
-//! * [`cloud`] — the cloud server loop.
+//! * [`session`] — retry/deadline/heartbeat/reconnect over a transport.
+//! * [`fault`] — seeded fault-injection transport for chaos testing.
+//! * [`cloud`] — the cloud server loop with bounded admission.
 //! * [`edge`] — the edge client pipeline with its reshape-plan cache.
 //! * [`batcher`] — bucketed dynamic batching.
 
 pub mod batcher;
 pub mod cloud;
 pub mod edge;
+pub mod fault;
 pub mod protocol;
 pub mod router;
+pub mod session;
 pub mod transport;
 
 pub use batcher::{Batcher, BatcherConfig};
-pub use cloud::CloudNode;
+pub use cloud::{CloudNode, ServerLimits};
 pub use edge::{EdgeConfig, EdgeNode, InferOutcome, LmEdgeNode};
+pub use fault::{FaultSpec, FaultStats, FaultyTransport};
 pub use protocol::{Frame, FrameKind};
 pub use router::{RouteInput, Router};
-pub use transport::{connect_tcp, InProcTransport, SimulatedLink, TcpTransport, Transport};
+pub use session::{DegradeEvent, DegradePolicy, DegradeState, Session, SessionConfig};
+pub use transport::{
+    connect_tcp, connect_tcp_timeout, InProcTransport, SimulatedLink, TcpTransport, Transport,
+};

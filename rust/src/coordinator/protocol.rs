@@ -18,6 +18,18 @@
 //! mixed-version edge/cloud pair fails with an explicit
 //! "peer predates dtype tagging" error instead of misparsing the
 //! shifted body.
+//!
+//! Two additive, version-gated extensions ride the same tag discipline:
+//!
+//! * **Deadline header (tag 13)** — a request may carry its remaining
+//!   latency budget. On the wire the header *wraps* the kind:
+//!   `[u64 request_id] [13] [u32 deadline_ms] [u8 kind] [fields]`.
+//!   Frames without a deadline encode byte-identically to every earlier
+//!   release; a pre-deadline peer receiving tag 13 fails with its
+//!   explicit "unknown frame tag" error rather than misparsing.
+//! * **[`FrameKind::Busy`] (tag 14)** — the explicit load-shed reply:
+//!   the cloud's bounded queues refuse work they provably cannot finish
+//!   inside the deadline and hint when to retry.
 
 use crate::error::{Error, Result};
 use crate::tensor::Dtype;
@@ -26,6 +38,9 @@ use crate::util::{crc32, varint};
 /// Maximum accepted frame body (64 MiB) — guards the allocator against
 /// corrupt length prefixes.
 pub const MAX_FRAME: usize = 64 << 20;
+
+/// Body tag of the optional deadline header that wraps a frame's kind.
+const DEADLINE_TAG: u8 = 13;
 
 /// Frame payload kinds.
 #[derive(Debug, Clone, PartialEq)]
@@ -104,6 +119,17 @@ pub enum FrameKind {
         /// Human-readable message.
         message: String,
     },
+    /// Explicit load-shed reply: the server's bounded queues cannot meet
+    /// the request's deadline (or are full) and the edge should back off
+    /// for at least `retry_after_ms` before retrying. Distinct from
+    /// [`FrameKind::ServerError`] so the session layer can classify it
+    /// as retryable without string matching.
+    Busy {
+        /// Suggested backoff before retrying, milliseconds.
+        retry_after_ms: u32,
+        /// Human-readable shed reason.
+        message: String,
+    },
 }
 
 /// One framed message.
@@ -111,6 +137,11 @@ pub enum FrameKind {
 pub struct Frame {
     /// Correlates replies with requests.
     pub request_id: u64,
+    /// Remaining end-to-end latency budget of the request, milliseconds
+    /// (`None` = no deadline; encodes byte-identically to the
+    /// pre-deadline wire format). Attached by the session layer so the
+    /// cloud's admission control can shed provably unmeetable work.
+    pub deadline_ms: Option<u32>,
     /// Payload.
     pub kind: FrameKind,
 }
@@ -154,44 +185,53 @@ fn read_bytes(buf: &[u8], pos: &mut usize) -> Result<Vec<u8>> {
 }
 
 impl Frame {
-    /// Serialize to the on-wire representation (length prefix + crc).
-    pub fn to_wire(&self) -> Vec<u8> {
-        let mut body = Vec::new();
-        body.extend_from_slice(&self.request_id.to_le_bytes());
-        match &self.kind {
+    /// A frame with no deadline header (byte-identical to the
+    /// pre-deadline wire format).
+    pub fn new(request_id: u64, kind: FrameKind) -> Self {
+        Frame { request_id, deadline_ms: None, kind }
+    }
+
+    /// Attach a deadline header (remaining budget in milliseconds).
+    pub fn with_deadline(mut self, deadline_ms: u32) -> Self {
+        self.deadline_ms = Some(deadline_ms);
+        self
+    }
+
+    fn write_kind(kind: &FrameKind, body: &mut Vec<u8>) {
+        match kind {
             FrameKind::Ping => body.push(0),
             FrameKind::Pong => body.push(1),
             FrameKind::InferVision { model, sl, batch, payload } => {
                 body.push(2);
-                write_str(&mut body, model);
-                varint::write_usize(&mut body, *sl);
-                varint::write_usize(&mut body, *batch);
-                write_bytes(&mut body, payload);
+                write_str(body, model);
+                varint::write_usize(body, *sl);
+                varint::write_usize(body, *batch);
+                write_bytes(body, payload);
             }
             FrameKind::InferVisionRaw { model, sl, batch, dtype, payload } => {
                 body.push(11);
-                write_str(&mut body, model);
-                varint::write_usize(&mut body, *sl);
-                varint::write_usize(&mut body, *batch);
+                write_str(body, model);
+                varint::write_usize(body, *sl);
+                varint::write_usize(body, *batch);
                 body.push(dtype.tag());
-                write_bytes(&mut body, payload);
+                write_bytes(body, payload);
             }
             FrameKind::InferLm { model, payload } => {
                 body.push(4);
-                write_str(&mut body, model);
-                write_bytes(&mut body, payload);
+                write_str(body, model);
+                write_bytes(body, payload);
             }
             FrameKind::InferLmRaw { model, dtype, payload } => {
                 body.push(12);
-                write_str(&mut body, model);
+                write_str(body, model);
                 body.push(dtype.tag());
-                write_bytes(&mut body, payload);
+                write_bytes(body, payload);
             }
             FrameKind::Logits { data, decode_ms, compute_ms } => {
                 body.push(6);
                 body.extend_from_slice(&decode_ms.to_le_bytes());
                 body.extend_from_slice(&compute_ms.to_le_bytes());
-                varint::write_usize(&mut body, data.len());
+                varint::write_usize(body, data.len());
                 for &x in data {
                     body.extend_from_slice(&x.to_le_bytes());
                 }
@@ -199,14 +239,30 @@ impl Frame {
             FrameKind::Stats => body.push(7),
             FrameKind::StatsReply { json } => {
                 body.push(8);
-                write_str(&mut body, json);
+                write_str(body, json);
             }
             FrameKind::Shutdown => body.push(9),
             FrameKind::ServerError { message } => {
                 body.push(10);
-                write_str(&mut body, message);
+                write_str(body, message);
+            }
+            FrameKind::Busy { retry_after_ms, message } => {
+                body.push(14);
+                body.extend_from_slice(&retry_after_ms.to_le_bytes());
+                write_str(body, message);
             }
         }
+    }
+
+    /// Serialize to the on-wire representation (length prefix + crc).
+    pub fn to_wire(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        body.extend_from_slice(&self.request_id.to_le_bytes());
+        if let Some(deadline) = self.deadline_ms {
+            body.push(DEADLINE_TAG);
+            body.extend_from_slice(&deadline.to_le_bytes());
+        }
+        Self::write_kind(&self.kind, &mut body);
         let crc = crc32::hash(&body);
         let mut out = Vec::with_capacity(body.len() + 8);
         out.extend_from_slice(&(body.len() as u32).to_le_bytes());
@@ -222,8 +278,20 @@ impl Frame {
             return Err(Error::protocol("frame body too short"));
         }
         let request_id = u64::from_le_bytes(body[0..8].try_into().unwrap());
-        let tag = body[8];
+        let mut tag = body[8];
         let mut pos = 9usize;
+        let mut deadline_ms = None;
+        if tag == DEADLINE_TAG {
+            if pos + 5 > body.len() {
+                return Err(Error::protocol("deadline header truncated"));
+            }
+            deadline_ms = Some(u32::from_le_bytes(body[pos..pos + 4].try_into().unwrap()));
+            tag = body[pos + 4];
+            pos += 5;
+            if tag == DEADLINE_TAG {
+                return Err(Error::protocol("nested deadline header"));
+            }
+        }
         let kind = match tag {
             0 => FrameKind::Ping,
             1 => FrameKind::Pong,
@@ -285,12 +353,20 @@ impl Frame {
             8 => FrameKind::StatsReply { json: read_str(body, &mut pos)? },
             9 => FrameKind::Shutdown,
             10 => FrameKind::ServerError { message: read_str(body, &mut pos)? },
+            14 => {
+                if pos + 4 > body.len() {
+                    return Err(Error::protocol("busy header truncated"));
+                }
+                let retry_after_ms = u32::from_le_bytes(body[pos..pos + 4].try_into().unwrap());
+                pos += 4;
+                FrameKind::Busy { retry_after_ms, message: read_str(body, &mut pos)? }
+            }
             t => return Err(Error::protocol(format!("unknown frame tag {t}"))),
         };
         if pos != body.len() {
             return Err(Error::protocol("trailing bytes in frame"));
         }
-        Ok(Frame { request_id, kind })
+        Ok(Frame { request_id, deadline_ms, kind })
     }
 
     /// Parse a full wire message (length prefix + body + crc). Returns
@@ -309,8 +385,13 @@ impl Frame {
         }
         let body = &buf[4..4 + body_len];
         let crc = u32::from_le_bytes(buf[4 + body_len..total].try_into().unwrap());
+        // CRC failure is the *corruption* class (fatal by default): on a
+        // reliable byte stream garbled framing means an implementation
+        // bug, not a link fault. Lossy transports that CAN garble bytes
+        // in flight (`FaultyTransport`) reclassify at their framing
+        // boundary, where a resend genuinely helps.
         if crc32::hash(body) != crc {
-            return Err(Error::protocol("frame crc mismatch"));
+            return Err(Error::corrupt("frame crc mismatch"));
         }
         Ok((Self::from_body(body)?, total))
     }
@@ -335,10 +416,14 @@ mod tests {
     use super::*;
 
     fn roundtrip(kind: FrameKind) {
-        let f = Frame { request_id: 77, kind };
+        let f = Frame::new(77, kind.clone());
         let wire = f.to_wire();
         let (back, used) = Frame::from_wire(&wire).unwrap();
         assert_eq!(used, wire.len());
+        assert_eq!(back, f);
+        // The same kind wrapped in a deadline header roundtrips too.
+        let f = Frame::new(78, kind).with_deadline(12_345);
+        let (back, _) = Frame::from_wire(&f.to_wire()).unwrap();
         assert_eq!(back, f);
     }
 
@@ -376,19 +461,68 @@ mod tests {
         roundtrip(FrameKind::StatsReply { json: "{\"a\":1}".into() });
         roundtrip(FrameKind::Shutdown);
         roundtrip(FrameKind::ServerError { message: "boom".into() });
+        roundtrip(FrameKind::Busy { retry_after_ms: 25, message: "inflight cap".into() });
+    }
+
+    #[test]
+    fn no_deadline_is_byte_identical_to_pre_deadline_format() {
+        // `deadline_ms: None` must not change a single wire byte: the
+        // old format is [u32 len][u64 id][u8 kind][crc], so a Ping body
+        // is exactly 9 bytes with tag 0 at offset 12.
+        let wire = Frame::new(5, FrameKind::Ping).to_wire();
+        assert_eq!(wire.len(), 4 + 9 + 4);
+        assert_eq!(u32::from_le_bytes(wire[0..4].try_into().unwrap()), 9);
+        assert_eq!(wire[12], 0);
+        // With a deadline the body grows by exactly the 5-byte header.
+        let wire = Frame::new(5, FrameKind::Ping).with_deadline(250).to_wire();
+        assert_eq!(wire.len(), 4 + 14 + 4);
+        assert_eq!(wire[12], 13);
+        assert_eq!(u32::from_le_bytes(wire[13..17].try_into().unwrap()), 250);
+    }
+
+    #[test]
+    fn nested_deadline_header_rejected() {
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.push(13);
+        body.extend_from_slice(&100u32.to_le_bytes());
+        body.push(13); // a second deadline header where the kind belongs
+        body.extend_from_slice(&100u32.to_le_bytes());
+        body.push(0);
+        let err = Frame::from_body(&body).unwrap_err();
+        assert!(err.to_string().contains("nested deadline"), "{err}");
+    }
+
+    #[test]
+    fn truncated_deadline_header_rejected() {
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.push(13);
+        body.extend_from_slice(&[0u8, 0]); // only 2 of the 5 header bytes
+        assert!(Frame::from_body(&body).is_err());
+    }
+
+    #[test]
+    fn crc_mismatch_classifies_as_fatal_corruption() {
+        let mut wire = Frame::new(1, FrameKind::Ping).to_wire();
+        let last = wire.len() - 1;
+        wire[last] ^= 0xFF; // break the CRC, keep the body parseable
+        let err = Frame::from_wire(&wire).unwrap_err();
+        assert!(matches!(err, crate::error::Error::Corrupt(_)), "{err}");
+        assert!(!err.is_retryable());
     }
 
     #[test]
     fn crc_detects_flips() {
-        let f = Frame {
-            request_id: 1,
-            kind: FrameKind::InferVision {
+        let f = Frame::new(
+            1,
+            FrameKind::InferVision {
                 model: "m".into(),
                 sl: 1,
                 batch: 1,
                 payload: vec![7; 64],
             },
-        };
+        );
         let wire = f.to_wire();
         for i in 4..wire.len() {
             let mut bad = wire.clone();
@@ -399,14 +533,14 @@ mod tests {
 
     #[test]
     fn bad_raw_dtype_tag_rejected() {
-        let f = Frame {
-            request_id: 3,
-            kind: FrameKind::InferLmRaw {
+        let f = Frame::new(
+            3,
+            FrameKind::InferLmRaw {
                 model: "m".into(),
                 dtype: Dtype::Bf16,
                 payload: vec![1, 2],
             },
-        };
+        );
         let mut wire = f.to_wire();
         // The dtype byte sits right after the varint-framed model name;
         // corrupt it to an unknown tag and refresh the CRC so only the
@@ -450,15 +584,17 @@ mod tests {
 
     #[test]
     fn payload_len_accounts_transfer_bytes() {
-        let f = Frame {
-            request_id: 0,
-            kind: FrameKind::InferVision { model: "m".into(), sl: 1, batch: 1, payload: vec![0; 123] },
-        };
+        let f = Frame::new(
+            0,
+            FrameKind::InferVision { model: "m".into(), sl: 1, batch: 1, payload: vec![0; 123] },
+        );
         assert_eq!(f.payload_len(), 123);
-        let f = Frame {
-            request_id: 0,
-            kind: FrameKind::Logits { data: vec![0.0; 10], decode_ms: 0.0, compute_ms: 0.0 },
-        };
+        let f = Frame::new(
+            0,
+            FrameKind::Logits { data: vec![0.0; 10], decode_ms: 0.0, compute_ms: 0.0 },
+        );
         assert_eq!(f.payload_len(), 40);
+        let f = Frame::new(0, FrameKind::Busy { retry_after_ms: 1, message: "full".into() });
+        assert_eq!(f.payload_len(), 0);
     }
 }

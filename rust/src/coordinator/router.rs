@@ -6,6 +6,12 @@
 //! names to replica sets of inference handlers (edge pipelines bound to
 //! transports), dispatches by name with round-robin replica selection,
 //! and keeps per-route metrics.
+//!
+//! Replica failures classify through [`Error::is_retryable`]: a
+//! retryable failure (transport fault, timeout, shed) fails over to the
+//! next replica in the rotation before surfacing, while a fatal error
+//! (bad argument, corruption) returns immediately — every replica would
+//! reject the same request identically.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -85,6 +91,9 @@ impl Router {
     }
 
     /// Dispatch a request. `model = None` uses the default route.
+    ///
+    /// Retryable replica failures fail over to the next replica in the
+    /// rotation (at most one full pass); fatal errors return at once.
     pub fn dispatch(&self, model: Option<&str>, input: &RouteInput) -> Result<InferOutcome> {
         let name = match model {
             Some(m) => m,
@@ -97,9 +106,19 @@ impl Router {
             self.metrics.incr("router.unknown_model", 1);
             Error::invalid(format!("unknown model '{name}'"))
         })?;
-        let idx = route.next.fetch_add(1, Ordering::Relaxed) % route.replicas.len();
+        let replicas = route.replicas.len();
+        let start = route.next.fetch_add(1, Ordering::Relaxed);
         let sw = crate::util::timer::Stopwatch::new();
-        let result = (route.replicas[idx])(input);
+        let mut result = Err(Error::invalid(format!("route '{name}' has no replicas")));
+        for hop in 0..replicas {
+            result = (route.replicas[(start + hop) % replicas])(input);
+            match &result {
+                Err(e) if e.is_retryable() && hop + 1 < replicas => {
+                    self.metrics.incr(&format!("router.{name}.failover_total"), 1);
+                }
+                _ => break,
+            }
+        }
         let ms = sw.elapsed_ms();
         self.metrics.incr(&format!("router.{name}.requests"), 1);
         self.metrics.histogram(&format!("router.{name}.latency_ms")).record_ms(ms);
@@ -177,5 +196,41 @@ mod tests {
     fn empty_router_rejects() {
         let r = Router::new();
         assert!(r.dispatch(None, &RouteInput::Vision(vec![])).is_err());
+    }
+
+    #[test]
+    fn retryable_failure_fails_over_to_next_replica() {
+        let mut r = Router::new();
+        r.register("a", Box::new(|_| Err(Error::timeout("replica 0 down"))));
+        r.register("a", handler(2.0));
+        let input = RouteInput::Vision(vec![]);
+        // Rotation starts at replica 0, which times out; the dispatch
+        // must land on replica 1 instead of surfacing the timeout.
+        let got = r.dispatch(Some("a"), &input).unwrap();
+        assert_eq!(got.logits, vec![2.0]);
+        assert_eq!(r.metrics().get("router.a.failover_total"), 1);
+        assert_eq!(r.metrics().get("router.a.errors"), 0);
+    }
+
+    #[test]
+    fn fatal_failure_does_not_fail_over() {
+        let mut r = Router::new();
+        r.register("a", Box::new(|_| Err(Error::invalid("bad shape"))));
+        r.register("a", handler(2.0));
+        let input = RouteInput::Vision(vec![]);
+        let err = r.dispatch(Some("a"), &input).unwrap_err();
+        assert!(!err.is_retryable(), "{err}");
+        assert_eq!(r.metrics().get("router.a.failover_total"), 0);
+        assert_eq!(r.metrics().get("router.a.errors"), 1);
+    }
+
+    #[test]
+    fn all_replicas_down_surfaces_last_error() {
+        let mut r = Router::new();
+        r.register("a", Box::new(|_| Err(Error::timeout("down 0"))));
+        r.register("a", Box::new(|_| Err(Error::timeout("down 1"))));
+        let err = r.dispatch(Some("a"), &RouteInput::Vision(vec![])).unwrap_err();
+        assert!(err.is_retryable());
+        assert_eq!(r.metrics().get("router.a.failover_total"), 1, "one hop, then give up");
     }
 }

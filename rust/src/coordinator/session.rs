@@ -1,0 +1,675 @@
+//! Resilient request/response session on top of a raw [`Transport`].
+//!
+//! [`Session`] owns the failure semantics the bare transports do not:
+//!
+//! * **per-request IDs** — every attempt gets a fresh id, and replies
+//!   whose id does not match the outstanding request (late answers to a
+//!   timed-out attempt, duplicate deliveries from a lossy link) are
+//!   counted and discarded instead of being handed to the caller;
+//! * **deadlines** — an end-to-end budget rides the frame header
+//!   (`Frame::with_deadline`) so the cloud can shed work it provably
+//!   cannot finish in time, and the edge stops retrying once the budget
+//!   is spent;
+//! * **retry with capped exponential backoff + deterministic jitter** —
+//!   only errors where [`Error::is_retryable`] holds are retried; the
+//!   jitter is drawn from a [`Rng`] seeded by [`SessionConfig::seed`],
+//!   so a failing schedule replays exactly;
+//! * **heartbeat liveness + reconnect** — an idle session probes the
+//!   peer with Ping/Pong before reusing the connection, and a
+//!   [`Session::with_connector`] closure lets it transparently dial a
+//!   fresh transport when the old one is dead;
+//! * **explicit shed handling** — a [`FrameKind::Busy`] reply is turned
+//!   into a bounded wait (honouring the peer's retry-after hint) or a
+//!   clean [`Error::Rejected`] once attempts are exhausted.
+//!
+//! The module also hosts the edge-side graceful-degradation policy
+//! ([`DegradePolicy`]/[`DegradeState`]): a pure state machine that steps
+//! the quantization parameter Q down after consecutive retryable
+//! failures (coarser features → fewer bytes → fewer link-budget
+//! failures, per the paper's ε-outage model) and climbs back up after a
+//! run of successes.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::telemetry::metrics::Registry;
+use crate::util::prng::Rng;
+
+use super::protocol::{Frame, FrameKind};
+use super::transport::Transport;
+
+/// Tunables for [`Session`] retry/backoff/heartbeat behaviour.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionConfig {
+    /// End-to-end budget per logical request, milliseconds. `0` means
+    /// no deadline: attempts are bounded by `max_retries` only and no
+    /// deadline header is attached to outgoing frames.
+    pub deadline_ms: u64,
+    /// Per-attempt receive budget, milliseconds (clamped to the
+    /// remaining deadline).
+    pub try_timeout_ms: u64,
+    /// Retries after the first attempt (`3` → up to 4 attempts).
+    pub max_retries: u32,
+    /// First backoff step, milliseconds; doubles per retry.
+    pub base_backoff_ms: u64,
+    /// Backoff ceiling, milliseconds.
+    pub max_backoff_ms: u64,
+    /// Idle threshold after which the connection is probed with a
+    /// Ping/Pong before carrying a real request. `0` disables the
+    /// heartbeat.
+    pub heartbeat_ms: u64,
+    /// Seed for the deterministic backoff jitter.
+    pub seed: u64,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            deadline_ms: 30_000,
+            try_timeout_ms: 2_000,
+            max_retries: 3,
+            base_backoff_ms: 10,
+            max_backoff_ms: 500,
+            heartbeat_ms: 0,
+            seed: 0x5e55_10f1,
+        }
+    }
+}
+
+/// Capped exponential backoff with equal jitter.
+///
+/// The raw step for `attempt` (0-based) is `base << attempt`, capped at
+/// `cap`; the returned delay is drawn uniformly from `[step/2, step]` so
+/// concurrent clients decorrelate instead of retrying in lockstep.
+/// Deterministic given the `rng` state.
+pub fn backoff_with_jitter(attempt: u32, base_ms: u64, cap_ms: u64, rng: &mut Rng) -> Duration {
+    let shift = attempt.min(62);
+    let step = base_ms.saturating_mul(1u64 << shift).min(cap_ms.max(1)).max(1);
+    let half = (step / 2).max(1);
+    let jittered = half + rng.below(step - half + 1);
+    Duration::from_millis(jittered)
+}
+
+/// A retrying, deadline-aware, reconnecting wrapper around a transport.
+///
+/// Telemetry (when wired via [`Session::with_metrics`]):
+/// `session.retry_total`, `session.reconnect_total`,
+/// `session.timeout_total`, `session.shed_total`,
+/// `session.stale_replies`, `session.giveup_total`, and the
+/// `session.attempt_ms` latency histogram.
+pub struct Session<T: Transport> {
+    transport: T,
+    connector: Option<Box<dyn FnMut() -> Result<T> + Send>>,
+    cfg: SessionConfig,
+    rng: Rng,
+    next_id: u64,
+    last_activity: Instant,
+    metrics: Option<Arc<Registry>>,
+}
+
+impl<T: Transport> Session<T> {
+    /// Wrap `transport` with the given retry/deadline policy.
+    pub fn new(transport: T, cfg: SessionConfig) -> Self {
+        let rng = Rng::new(cfg.seed);
+        Session {
+            transport,
+            connector: None,
+            cfg,
+            rng,
+            next_id: 1,
+            last_activity: Instant::now(),
+            metrics: None,
+        }
+    }
+
+    /// Record robustness counters into `registry`.
+    pub fn with_metrics(mut self, registry: Arc<Registry>) -> Self {
+        self.metrics = Some(registry);
+        self
+    }
+
+    /// Install a dialer used to replace the transport after a
+    /// connection-level failure (and after a failed heartbeat probe).
+    pub fn with_connector(mut self, connector: Box<dyn FnMut() -> Result<T> + Send>) -> Self {
+        self.connector = Some(connector);
+        self
+    }
+
+    /// Replace the retry/deadline policy.
+    pub fn set_config(&mut self, cfg: SessionConfig) {
+        self.rng = Rng::new(cfg.seed);
+        self.cfg = cfg;
+    }
+
+    /// Current policy.
+    pub fn config(&self) -> &SessionConfig {
+        &self.cfg
+    }
+
+    fn bump(&self, name: &str) {
+        if let Some(m) = &self.metrics {
+            m.incr(name, 1);
+        }
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Dial a replacement transport if a connector is installed.
+    /// Returns true when the transport was actually replaced.
+    fn reconnect(&mut self) -> bool {
+        let Some(connector) = self.connector.as_mut() else {
+            return false;
+        };
+        match connector() {
+            Ok(t) => {
+                self.transport = t;
+                self.bump("session.reconnect_total");
+                true
+            }
+            Err(_) => false, // keep the old transport; a later attempt retries
+        }
+    }
+
+    /// Probe an idle connection with Ping/Pong; on failure, reconnect.
+    fn heartbeat(&mut self) {
+        if self.cfg.heartbeat_ms == 0 {
+            return;
+        }
+        if self.last_activity.elapsed() < Duration::from_millis(self.cfg.heartbeat_ms) {
+            return;
+        }
+        let id = self.fresh_id();
+        let budget = Duration::from_millis(self.cfg.try_timeout_ms.max(1));
+        let alive = self.transport.send(&Frame::new(id, FrameKind::Ping)).is_ok()
+            && matches!(
+                self.transport.recv_timeout(budget),
+                Ok(Frame { request_id, kind: FrameKind::Pong, .. }) if request_id == id
+            );
+        if !alive {
+            self.reconnect();
+        }
+        self.last_activity = Instant::now();
+    }
+
+    /// Remaining end-to-end budget, or `None` when deadlines are off.
+    fn remaining(&self, started: Instant) -> Option<Duration> {
+        if self.cfg.deadline_ms == 0 {
+            return None;
+        }
+        let budget = Duration::from_millis(self.cfg.deadline_ms);
+        Some(budget.saturating_sub(started.elapsed()))
+    }
+
+    /// One send + receive attempt. Discards replies whose id does not
+    /// match (stale answers to earlier attempts, duplicate deliveries).
+    fn attempt(&mut self, kind: &FrameKind, budget: Duration) -> Result<Frame> {
+        let id = self.fresh_id();
+        let mut request = Frame::new(id, kind.clone());
+        if self.cfg.deadline_ms > 0 {
+            let ms = budget.as_millis().min(u32::MAX as u128) as u32;
+            request = request.with_deadline(ms.max(1));
+        }
+        self.transport.send(&request)?;
+        let per_try = Duration::from_millis(self.cfg.try_timeout_ms.max(1))
+            .min(budget)
+            .max(Duration::from_millis(1));
+        let recv_deadline = Instant::now() + per_try;
+        loop {
+            let left = recv_deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Err(Error::timeout(format!("no reply to request {id} within budget")));
+            }
+            let reply = self.transport.recv_timeout(left)?;
+            if reply.request_id != id {
+                self.bump("session.stale_replies");
+                continue;
+            }
+            return Ok(reply);
+        }
+    }
+
+    /// Issue `kind` as a request and return the matching reply.
+    ///
+    /// Retries on retryable errors with capped exponential backoff and
+    /// deterministic jitter, reconnects through the installed connector
+    /// on connection-level failures, honours the end-to-end deadline,
+    /// and converts a [`FrameKind::Busy`] shed into a bounded wait or a
+    /// clean [`Error::Rejected`].
+    pub fn call(&mut self, kind: FrameKind) -> Result<Frame> {
+        self.heartbeat();
+        let started = Instant::now();
+        let mut attempt_no: u32 = 0;
+        loop {
+            let budget = match self.remaining(started) {
+                Some(left) if left.is_zero() => {
+                    self.bump("session.timeout_total");
+                    self.bump("session.giveup_total");
+                    return Err(Error::timeout(format!(
+                        "deadline of {} ms exhausted after {} attempts",
+                        self.cfg.deadline_ms, attempt_no
+                    )));
+                }
+                Some(left) => left,
+                None => Duration::from_millis(self.cfg.try_timeout_ms.max(1)),
+            };
+            let t0 = Instant::now();
+            let outcome = self.attempt(&kind, budget);
+            if let Some(m) = &self.metrics {
+                m.histogram("session.attempt_ms").record_ms(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            self.last_activity = Instant::now();
+            let err = match outcome {
+                Ok(Frame { kind: FrameKind::Busy { retry_after_ms, message }, .. }) => {
+                    self.bump("session.shed_total");
+                    Error::rejected(retry_after_ms as u64, message)
+                }
+                Ok(reply) => return Ok(reply),
+                Err(e) => e,
+            };
+            if !err.is_retryable() || attempt_no >= self.cfg.max_retries {
+                if matches!(err, Error::Timeout(_)) {
+                    self.bump("session.timeout_total");
+                }
+                if err.is_retryable() {
+                    self.bump("session.giveup_total");
+                }
+                return Err(err);
+            }
+            self.bump("session.retry_total");
+            // A timed-out attempt may just mean a dropped frame, and a
+            // shed means the peer is healthy but loaded — keep the
+            // connection. Connection-class failures get a fresh dial.
+            if matches!(err, Error::Transport(_) | Error::Io(_)) {
+                self.reconnect();
+            }
+            let wait = match &err {
+                Error::Rejected { retry_after_ms, .. } => Duration::from_millis(*retry_after_ms),
+                _ => backoff_with_jitter(
+                    attempt_no,
+                    self.cfg.base_backoff_ms,
+                    self.cfg.max_backoff_ms,
+                    &mut self.rng,
+                ),
+            };
+            let wait = match self.remaining(started) {
+                Some(left) => wait.min(left),
+                None => wait,
+            };
+            if !wait.is_zero() {
+                std::thread::sleep(wait);
+            }
+            attempt_no += 1;
+        }
+    }
+}
+
+/// Tunables for the edge-side graceful-degradation policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DegradePolicy {
+    /// Consecutive retryable failures before stepping Q down.
+    pub timeouts_to_degrade: u32,
+    /// How many Q levels one degradation step removes.
+    pub q_step: u8,
+    /// Lowest Q the policy will degrade to.
+    pub q_floor: u8,
+    /// Consecutive successes before stepping Q back up.
+    pub successes_to_recover: u32,
+    /// When already at `q_floor`, allow falling back to raw
+    /// (uncompressed) frames as the last resort.
+    pub raw_fallback: bool,
+}
+
+impl Default for DegradePolicy {
+    fn default() -> Self {
+        DegradePolicy {
+            timeouts_to_degrade: 3,
+            q_step: 2,
+            q_floor: 2,
+            successes_to_recover: 16,
+            raw_fallback: false,
+        }
+    }
+}
+
+/// Observable outcome of feeding one request result to [`DegradeState`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DegradeEvent {
+    /// No state change.
+    None,
+    /// Q stepped down to the contained value.
+    SteppedDown(u8),
+    /// Entered raw-frame fallback (Q already at the floor).
+    RawFallback,
+    /// Q stepped back up to the contained value (or raw mode exited).
+    Recovered(u8),
+}
+
+/// Pure state machine implementing [`DegradePolicy`].
+///
+/// Feed it `on_success` / `on_retryable_failure` per completed request
+/// and read `effective_q` / `raw_mode` before building the next one.
+#[derive(Debug, Clone)]
+pub struct DegradeState {
+    policy: DegradePolicy,
+    base_q: u8,
+    q: u8,
+    raw: bool,
+    consecutive_failures: u32,
+    consecutive_successes: u32,
+}
+
+impl DegradeState {
+    /// Start at `base_q` (the configured operating point).
+    pub fn new(policy: DegradePolicy, base_q: u8) -> Self {
+        let q_floor = policy.q_floor.min(base_q);
+        DegradeState {
+            policy: DegradePolicy { q_floor, ..policy },
+            base_q,
+            q: base_q,
+            raw: false,
+            consecutive_failures: 0,
+            consecutive_successes: 0,
+        }
+    }
+
+    /// Q the edge should encode with right now.
+    pub fn effective_q(&self) -> u8 {
+        self.q
+    }
+
+    /// True when the policy has fallen back to raw (uncompressed)
+    /// frames.
+    pub fn raw_mode(&self) -> bool {
+        self.raw
+    }
+
+    /// True when any degradation (Q below base, or raw mode) is active.
+    pub fn degraded(&self) -> bool {
+        self.raw || self.q < self.base_q
+    }
+
+    /// Record a successful round trip.
+    pub fn on_success(&mut self) -> DegradeEvent {
+        self.consecutive_failures = 0;
+        if !self.degraded() {
+            return DegradeEvent::None;
+        }
+        self.consecutive_successes += 1;
+        if self.consecutive_successes < self.policy.successes_to_recover {
+            return DegradeEvent::None;
+        }
+        self.consecutive_successes = 0;
+        if self.raw {
+            self.raw = false;
+        } else {
+            self.q = self.q.saturating_add(self.policy.q_step).min(self.base_q);
+        }
+        DegradeEvent::Recovered(self.q)
+    }
+
+    /// Record a retryable failure (timeout / transport fault / shed)
+    /// that survived the session layer's own retries.
+    pub fn on_retryable_failure(&mut self) -> DegradeEvent {
+        self.consecutive_successes = 0;
+        self.consecutive_failures += 1;
+        if self.consecutive_failures < self.policy.timeouts_to_degrade {
+            return DegradeEvent::None;
+        }
+        self.consecutive_failures = 0;
+        if self.q > self.policy.q_floor {
+            self.q = self.q.saturating_sub(self.policy.q_step).max(self.policy.q_floor);
+            DegradeEvent::SteppedDown(self.q)
+        } else if self.policy.raw_fallback && !self.raw {
+            self.raw = true;
+            DegradeEvent::RawFallback
+        } else {
+            DegradeEvent::None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fault::{FaultSpec, FaultyTransport};
+    use crate::coordinator::transport::{InProcTransport, Transport};
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let mut rng = Rng::new(42);
+        for attempt in 0..20 {
+            let d = backoff_with_jitter(attempt, 10, 500, &mut rng);
+            let step = 10u64.saturating_mul(1u64 << attempt.min(62)).min(500);
+            let ms = d.as_millis() as u64;
+            assert!(ms >= (step / 2).max(1) && ms <= step, "attempt {attempt}: {ms} ms");
+        }
+        // Deterministic across runs with the same seed.
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for attempt in 0..8 {
+            assert_eq!(
+                backoff_with_jitter(attempt, 10, 500, &mut a),
+                backoff_with_jitter(attempt, 10, 500, &mut b)
+            );
+        }
+    }
+
+    fn fast_cfg() -> SessionConfig {
+        SessionConfig {
+            deadline_ms: 5_000,
+            try_timeout_ms: 50,
+            max_retries: 10,
+            base_backoff_ms: 1,
+            max_backoff_ms: 4,
+            heartbeat_ms: 0,
+            seed: 99,
+        }
+    }
+
+    /// Responder that answers every received frame with Pong, echoing
+    /// the request id. Tolerates a bounded run of garbled frames (so an
+    /// injected corruption does not kill the loop) but exits once errors
+    /// repeat back-to-back, which is what a closed channel produces.
+    fn pong_responder(mut server: impl Transport + Send + 'static) {
+        std::thread::spawn(move || {
+            let mut consecutive_errors = 0u32;
+            loop {
+                match server.recv() {
+                    Ok(f) => {
+                        consecutive_errors = 0;
+                        let _ = server.send(&Frame::new(f.request_id, FrameKind::Pong));
+                    }
+                    Err(_) if consecutive_errors < 64 => consecutive_errors += 1,
+                    Err(_) => break,
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn call_succeeds_over_clean_transport() {
+        let (client, server) = InProcTransport::pair();
+        pong_responder(server);
+        let mut s = Session::new(client, fast_cfg());
+        for _ in 0..10 {
+            let reply = s.call(FrameKind::Ping).unwrap();
+            assert_eq!(reply.kind, FrameKind::Pong);
+        }
+    }
+
+    #[test]
+    fn retries_through_drops_and_counts_them() {
+        let metrics = Arc::new(Registry::new());
+        let (client, server) = FaultyTransport::pair(11, FaultSpec::drops(0.4), FaultSpec::none());
+        pong_responder(server);
+        let mut s = Session::new(client, fast_cfg()).with_metrics(Arc::clone(&metrics));
+        for _ in 0..50 {
+            let reply = s.call(FrameKind::Ping).unwrap();
+            assert_eq!(reply.kind, FrameKind::Pong);
+        }
+        assert!(metrics.get("session.retry_total") > 0, "p=0.4 drops must force retries");
+    }
+
+    #[test]
+    fn duplicate_replies_are_discarded_as_stale() {
+        let metrics = Arc::new(Registry::new());
+        let (client, server) =
+            FaultyTransport::pair(13, FaultSpec::none(), FaultSpec::duplicates(1.0));
+        pong_responder(server);
+        let mut s = Session::new(client, fast_cfg()).with_metrics(Arc::clone(&metrics));
+        for _ in 0..20 {
+            let reply = s.call(FrameKind::Ping).unwrap();
+            assert_eq!(reply.kind, FrameKind::Pong);
+        }
+        // Every duplicate arrives with the *previous* request's id and
+        // must be skipped, not returned to the caller.
+        assert!(metrics.get("session.stale_replies") > 0);
+    }
+
+    #[test]
+    fn busy_reply_becomes_rejected_after_retries() {
+        let metrics = Arc::new(Registry::new());
+        let (client, mut server) = InProcTransport::pair();
+        std::thread::spawn(move || {
+            while let Ok(f) = server.recv() {
+                let kind = FrameKind::Busy { retry_after_ms: 1, message: "inflight cap".into() };
+                let _ = server.send(&Frame::new(f.request_id, kind));
+            }
+        });
+        let cfg = SessionConfig { max_retries: 2, ..fast_cfg() };
+        let mut s = Session::new(client, cfg).with_metrics(Arc::clone(&metrics));
+        let err = s.call(FrameKind::Ping).unwrap_err();
+        assert!(matches!(err, Error::Rejected { .. }), "{err}");
+        assert_eq!(metrics.get("session.shed_total"), 3, "initial attempt + 2 retries");
+    }
+
+    #[test]
+    fn deadline_exhaustion_is_a_clean_timeout() {
+        let (client, server) = InProcTransport::pair();
+        // Server never answers; drop it so nothing replies but the
+        // channel stays open via the responder-less pair.
+        let cfg = SessionConfig {
+            deadline_ms: 60,
+            try_timeout_ms: 25,
+            max_retries: 100,
+            base_backoff_ms: 1,
+            max_backoff_ms: 2,
+            heartbeat_ms: 0,
+            seed: 1,
+        };
+        let mut s = Session::new(client, cfg);
+        let t0 = Instant::now();
+        let err = s.call(FrameKind::Ping).unwrap_err();
+        assert!(matches!(err, Error::Timeout(_)), "{err}");
+        assert!(t0.elapsed() < Duration::from_secs(5), "deadline must bound the wait");
+        drop(server);
+    }
+
+    #[test]
+    fn reconnects_through_connector_after_peer_death() {
+        let metrics = Arc::new(Registry::new());
+        // First transport's peer is dropped immediately → dead link.
+        let (client, server) = InProcTransport::pair();
+        drop(server);
+        let mut s = Session::new(client, fast_cfg())
+            .with_metrics(Arc::clone(&metrics))
+            .with_connector(Box::new(|| {
+                let (c, srv) = InProcTransport::pair();
+                pong_responder(srv);
+                Ok(c)
+            }));
+        let reply = s.call(FrameKind::Ping).unwrap();
+        assert_eq!(reply.kind, FrameKind::Pong);
+        assert!(metrics.get("session.reconnect_total") >= 1);
+        assert!(metrics.get("session.retry_total") >= 1);
+    }
+
+    #[test]
+    fn heartbeat_probe_replaces_dead_connection() {
+        let metrics = Arc::new(Registry::new());
+        let (client, server) = InProcTransport::pair();
+        drop(server); // connection dies while the session is idle
+        let cfg = SessionConfig { heartbeat_ms: 1, ..fast_cfg() };
+        let mut s = Session::new(client, cfg)
+            .with_metrics(Arc::clone(&metrics))
+            .with_connector(Box::new(|| {
+                let (c, srv) = InProcTransport::pair();
+                pong_responder(srv);
+                Ok(c)
+            }));
+        std::thread::sleep(Duration::from_millis(5));
+        let reply = s.call(FrameKind::Ping).unwrap();
+        assert_eq!(reply.kind, FrameKind::Pong);
+        assert!(metrics.get("session.reconnect_total") >= 1);
+    }
+
+    #[test]
+    fn degrade_steps_down_then_recovers() {
+        let policy = DegradePolicy {
+            timeouts_to_degrade: 2,
+            q_step: 2,
+            q_floor: 2,
+            successes_to_recover: 3,
+            raw_fallback: true,
+        };
+        let mut st = DegradeState::new(policy, 8);
+        assert_eq!(st.effective_q(), 8);
+        assert!(!st.degraded());
+
+        // Two consecutive failures → one step down.
+        assert_eq!(st.on_retryable_failure(), DegradeEvent::None);
+        assert_eq!(st.on_retryable_failure(), DegradeEvent::SteppedDown(6));
+        // A success in between resets the failure streak.
+        assert_eq!(st.on_success(), DegradeEvent::None);
+        assert_eq!(st.on_retryable_failure(), DegradeEvent::None);
+        assert_eq!(st.on_retryable_failure(), DegradeEvent::SteppedDown(4));
+        // Down to the floor, then raw fallback as the last resort.
+        st.on_retryable_failure();
+        assert_eq!(st.on_retryable_failure(), DegradeEvent::SteppedDown(2));
+        assert_eq!(st.effective_q(), 2);
+        st.on_retryable_failure();
+        assert_eq!(st.on_retryable_failure(), DegradeEvent::RawFallback);
+        assert!(st.raw_mode());
+        // Recovery: raw mode exits first, then Q climbs back to base.
+        st.on_success();
+        st.on_success();
+        assert_eq!(st.on_success(), DegradeEvent::Recovered(2));
+        assert!(!st.raw_mode());
+        for _ in 0..2 {
+            st.on_success();
+            st.on_success();
+            st.on_success();
+        }
+        assert_eq!(st.effective_q(), 6);
+        st.on_success();
+        st.on_success();
+        assert_eq!(st.on_success(), DegradeEvent::Recovered(8));
+        assert_eq!(st.effective_q(), 8);
+        assert!(!st.degraded());
+    }
+
+    #[test]
+    fn degrade_floor_never_undershoots() {
+        let policy = DegradePolicy {
+            timeouts_to_degrade: 1,
+            q_step: 3,
+            q_floor: 2,
+            successes_to_recover: 1,
+            raw_fallback: false,
+        };
+        let mut st = DegradeState::new(policy, 4);
+        assert_eq!(st.on_retryable_failure(), DegradeEvent::SteppedDown(2));
+        // At the floor with raw fallback disabled: nothing more to shed.
+        assert_eq!(st.on_retryable_failure(), DegradeEvent::None);
+        assert_eq!(st.effective_q(), 2);
+        // Recovery never overshoots the base.
+        assert_eq!(st.on_success(), DegradeEvent::Recovered(4));
+        assert_eq!(st.effective_q(), 4);
+        assert_eq!(st.on_success(), DegradeEvent::None);
+    }
+}

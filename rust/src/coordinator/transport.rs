@@ -2,17 +2,23 @@
 //!
 //! * [`TcpTransport`] — framed over `std::net::TcpStream` (the real
 //!   deployment shape; the E2E example runs edge and cloud over
-//!   loopback TCP).
+//!   loopback TCP). Supports configurable read/write timeouts
+//!   ([`TcpTransport::with_io_timeout`]) so a silent peer surfaces as a
+//!   retryable [`Error::Timeout`] instead of hanging `recv` forever.
 //! * [`InProcTransport`] — mpsc channel pair for single-process tests
 //!   and benches.
 //! * [`SimulatedLink`] — wraps any transport with the ε-outage channel
 //!   model: accounts (and optionally sleeps) the wireless latency for
 //!   each payload and can inject outage-driven retransmissions.
+//!
+//! The deterministic fault-injection combinator lives in
+//! [`crate::coordinator::fault`].
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Mutex;
+use std::time::Duration;
 
 use crate::channel::OutageChannel;
 use crate::error::{Error, Result};
@@ -26,45 +32,69 @@ pub trait Transport: Send {
     fn send(&mut self, frame: &Frame) -> Result<()>;
     /// Block for the next frame.
     fn recv(&mut self) -> Result<Frame>;
+    /// Block at most `timeout` for the next frame; elapse surfaces as a
+    /// retryable [`Error::Timeout`]. The default implementation falls
+    /// back to a plain blocking [`Transport::recv`] for transports with
+    /// no native timeout support — the session layer treats those as
+    /// "trust the peer or the process supervisor".
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Frame> {
+        let _ = timeout;
+        self.recv()
+    }
 }
 
 // ------------------------------------------------------------------ tcp
 
+/// Classify an I/O error at the TCP framing boundary: elapsed read/write
+/// timeouts become the retryable [`Error::Timeout`] class (both
+/// `WouldBlock` and `TimedOut` appear, platform-dependent), everything
+/// else is a transport fault.
+fn classify_io(ctx: &str, e: std::io::Error) -> Error {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            Error::timeout(format!("{ctx}: {e}"))
+        }
+        _ => Error::transport(format!("{ctx}: {e}")),
+    }
+}
+
 /// Frame transport over a TCP stream.
 pub struct TcpTransport {
     stream: TcpStream,
+    io_timeout: Option<Duration>,
 }
 
 impl TcpTransport {
-    /// Wrap an accepted/connected stream (sets TCP_NODELAY).
+    /// Wrap an accepted/connected stream (sets TCP_NODELAY, no
+    /// timeouts — `recv` blocks until the peer sends or disconnects).
     pub fn new(stream: TcpStream) -> Result<Self> {
         stream
             .set_nodelay(true)
             .map_err(|e| Error::transport(format!("set_nodelay: {e}")))?;
-        Ok(TcpTransport { stream })
+        Ok(TcpTransport { stream, io_timeout: None })
     }
-}
 
-/// Connect to a cloud node at `addr`.
-pub fn connect_tcp(addr: &str) -> Result<TcpTransport> {
-    let stream = TcpStream::connect(addr)
-        .map_err(|e| Error::transport(format!("connect {addr}: {e}")))?;
-    TcpTransport::new(stream)
-}
-
-impl Transport for TcpTransport {
-    fn send(&mut self, frame: &Frame) -> Result<()> {
-        let wire = frame.to_wire();
+    /// Bound every read and write by `timeout` (a zero duration means
+    /// no timeout). An elapsed bound surfaces as a retryable
+    /// [`Error::Timeout`]; note the stream may then be mid-frame, so
+    /// the caller should reconnect rather than reuse it — the session
+    /// layer does exactly that.
+    pub fn with_io_timeout(self, timeout: Duration) -> Result<Self> {
+        let t = if timeout.is_zero() { None } else { Some(timeout) };
         self.stream
-            .write_all(&wire)
-            .map_err(|e| Error::transport(format!("send: {e}")))
+            .set_read_timeout(t)
+            .map_err(|e| Error::transport(format!("set_read_timeout: {e}")))?;
+        self.stream
+            .set_write_timeout(t)
+            .map_err(|e| Error::transport(format!("set_write_timeout: {e}")))?;
+        Ok(TcpTransport { io_timeout: t, ..self })
     }
 
-    fn recv(&mut self) -> Result<Frame> {
+    fn recv_wire(&mut self) -> Result<Frame> {
         let mut len_buf = [0u8; 4];
         self.stream
             .read_exact(&mut len_buf)
-            .map_err(|e| Error::transport(format!("recv len: {e}")))?;
+            .map_err(|e| classify_io("recv len", e))?;
         let body_len = u32::from_le_bytes(len_buf) as usize;
         if body_len > MAX_FRAME {
             return Err(Error::protocol(format!("frame of {body_len} bytes exceeds cap")));
@@ -72,12 +102,48 @@ impl Transport for TcpTransport {
         let mut rest = vec![0u8; body_len + 4];
         self.stream
             .read_exact(&mut rest)
-            .map_err(|e| Error::transport(format!("recv body: {e}")))?;
+            .map_err(|e| classify_io("recv body", e))?;
         let mut wire = Vec::with_capacity(body_len + 8);
         wire.extend_from_slice(&len_buf);
         wire.extend_from_slice(&rest);
         let (frame, _) = Frame::from_wire(&wire)?;
         Ok(frame)
+    }
+}
+
+/// Connect to a cloud node at `addr` (no I/O timeouts).
+pub fn connect_tcp(addr: &str) -> Result<TcpTransport> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| Error::transport(format!("connect {addr}: {e}")))?;
+    TcpTransport::new(stream)
+}
+
+/// Connect to a cloud node at `addr` with read/write bounds of
+/// `io_timeout` (zero = none) on the resulting transport.
+pub fn connect_tcp_timeout(addr: &str, io_timeout: Duration) -> Result<TcpTransport> {
+    connect_tcp(addr)?.with_io_timeout(io_timeout)
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        let wire = frame.to_wire();
+        self.stream.write_all(&wire).map_err(|e| classify_io("send", e))
+    }
+
+    fn recv(&mut self) -> Result<Frame> {
+        self.recv_wire()
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Frame> {
+        // Tighten the read bound for this call, then restore the
+        // configured steady-state timeout.
+        let bound = timeout.max(Duration::from_millis(1));
+        self.stream
+            .set_read_timeout(Some(bound))
+            .map_err(|e| Error::transport(format!("set_read_timeout: {e}")))?;
+        let out = self.recv_wire();
+        let _ = self.stream.set_read_timeout(self.io_timeout);
+        out
     }
 }
 
@@ -113,6 +179,15 @@ impl Transport for InProcTransport {
         let (frame, _) = Frame::from_wire(&wire)?;
         Ok(frame)
     }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Frame> {
+        let wire = self.rx.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => Error::timeout("recv deadline elapsed"),
+            RecvTimeoutError::Disconnected => Error::transport("peer closed"),
+        })?;
+        let (frame, _) = Frame::from_wire(&wire)?;
+        Ok(frame)
+    }
 }
 
 // --------------------------------------------------------------- simlink
@@ -133,6 +208,7 @@ pub struct SimulatedLink<T: Transport> {
     realtime: bool,
     max_retries: u32,
     accum_ms: f64,
+    retransmissions: u64,
 }
 
 impl<T: Transport> SimulatedLink<T> {
@@ -146,6 +222,7 @@ impl<T: Transport> SimulatedLink<T> {
             realtime: false,
             max_retries: 16,
             accum_ms: 0.0,
+            retransmissions: 0,
         }
     }
 
@@ -166,6 +243,11 @@ impl<T: Transport> SimulatedLink<T> {
         std::mem::replace(&mut self.accum_ms, 0.0)
     }
 
+    /// Total outage-triggered ARQ retransmissions so far.
+    pub fn retransmissions(&self) -> u64 {
+        self.retransmissions
+    }
+
     /// The underlying channel model.
     pub fn channel(&self) -> &OutageChannel {
         &self.channel
@@ -177,7 +259,21 @@ impl<T: Transport> Transport for SimulatedLink<T> {
         let bytes = frame.payload_len();
         let ms = if self.stochastic {
             let mut rng = self.rng.lock().unwrap();
-            self.channel.transmit(bytes, &mut rng, self.max_retries)?.latency_s * 1e3
+            match self.channel.transmit(bytes, &mut rng, self.max_retries) {
+                Ok(out) => {
+                    self.retransmissions += out.retries as u64;
+                    out.latency_s * 1e3
+                }
+                // Link-level ARQ ran out of budget on a *retryable*
+                // fault: reclassify as a timeout so the session layer's
+                // deadline/backoff owns the next attempt. Fatal errors
+                // (nothing the channel model emits today, but the
+                // classification is the contract) propagate untouched.
+                Err(e) if e.is_retryable() => {
+                    return Err(Error::timeout(format!("simulated link: {e}")));
+                }
+                Err(e) => return Err(e),
+            }
         } else {
             self.channel.comm_latency_ms(bytes)
         };
@@ -191,6 +287,10 @@ impl<T: Transport> Transport for SimulatedLink<T> {
     fn recv(&mut self) -> Result<Frame> {
         self.inner.recv()
     }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Frame> {
+        self.inner.recv_timeout(timeout)
+    }
 }
 
 #[cfg(test)]
@@ -199,7 +299,7 @@ mod tests {
     use crate::coordinator::protocol::FrameKind;
 
     fn ping(id: u64) -> Frame {
-        Frame { request_id: id, kind: FrameKind::Ping }
+        Frame::new(id, FrameKind::Ping)
     }
 
     #[test]
@@ -209,6 +309,16 @@ mod tests {
         assert_eq!(b.recv().unwrap(), ping(1));
         b.send(&ping(2)).unwrap();
         assert_eq!(a.recv().unwrap(), ping(2));
+    }
+
+    #[test]
+    fn inproc_recv_timeout_classifies() {
+        let (mut a, mut b) = InProcTransport::pair();
+        let err = a.recv_timeout(Duration::from_millis(5)).unwrap_err();
+        assert!(matches!(err, Error::Timeout(_)), "{err}");
+        assert!(err.is_retryable());
+        b.send(&ping(1)).unwrap();
+        assert_eq!(a.recv_timeout(Duration::from_millis(100)).unwrap(), ping(1));
     }
 
     #[test]
@@ -229,17 +339,37 @@ mod tests {
             t.send(&f).unwrap(); // echo
         });
         let mut client = connect_tcp(&addr.to_string()).unwrap();
-        let f = Frame {
-            request_id: 9,
-            kind: FrameKind::InferVision {
+        let f = Frame::new(
+            9,
+            FrameKind::InferVision {
                 model: "m".into(),
                 sl: 2,
                 batch: 1,
                 payload: vec![3; 1000],
             },
-        };
+        );
         client.send(&f).unwrap();
         assert_eq!(client.recv().unwrap(), f);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_silent_peer_times_out_retryably() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // Accept but never reply: pre-timeout code would hang here forever.
+        let server = std::thread::spawn(move || {
+            let (_stream, _) = listener.accept().unwrap();
+            std::thread::sleep(Duration::from_millis(200));
+        });
+        let mut client = connect_tcp_timeout(&addr.to_string(), Duration::from_millis(30)).unwrap();
+        let err = client.recv().unwrap_err();
+        assert!(matches!(err, Error::Timeout(_)), "{err}");
+        assert!(err.is_retryable());
+        // The one-shot bound works without a configured steady-state timeout.
+        let mut client2 = connect_tcp(&addr.to_string()).unwrap();
+        let err = client2.recv_timeout(Duration::from_millis(30)).unwrap_err();
+        assert!(matches!(err, Error::Timeout(_)), "{err}");
         server.join().unwrap();
     }
 
@@ -247,10 +377,7 @@ mod tests {
     fn simulated_link_accounts_latency() {
         let (a, mut b) = InProcTransport::pair();
         let mut sim = SimulatedLink::new(a, OutageChannel::paper_default(), 1);
-        let f = Frame {
-            request_id: 1,
-            kind: FrameKind::InferLm { model: "m".into(), payload: vec![0; 10_000] },
-        };
+        let f = Frame::new(1, FrameKind::InferLm { model: "m".into(), payload: vec![0; 10_000] });
         sim.send(&f).unwrap();
         let ms = sim.take_latency_ms();
         let expect = OutageChannel::paper_default().comm_latency_ms(10_000);
@@ -266,13 +393,35 @@ mod tests {
         let base = ch.comm_latency_ms(5_000);
         let mut sim = SimulatedLink::new(a, ch, 7).stochastic(true);
         for i in 0..50 {
-            sim.send(&Frame {
-                request_id: i,
-                kind: FrameKind::InferLm { model: "m".into(), payload: vec![0; 5_000] },
-            })
-            .unwrap();
+            let f = Frame::new(i, FrameKind::InferLm { model: "m".into(), payload: vec![0; 5_000] });
+            sim.send(&f).unwrap();
             let ms = sim.take_latency_ms();
             assert!(ms >= base - 1e-9);
         }
+    }
+
+    #[test]
+    fn exhausted_link_retries_surface_as_retryable_timeout() {
+        use crate::channel::ChannelParams;
+        // ε = 0.5 with zero ARQ budget: roughly half the sends fail, and
+        // each failure must classify as a retryable timeout (the session
+        // layer's cue to back off and resend), never a fatal error.
+        let ch = OutageChannel::new(ChannelParams { epsilon: 0.5, ..Default::default() }).unwrap();
+        let (a, _b) = InProcTransport::pair();
+        let mut sim = SimulatedLink::new(a, ch, 11).stochastic(true);
+        sim.max_retries = 0;
+        let mut failures = 0;
+        for i in 0..100 {
+            let f = Frame::new(i, FrameKind::InferLm { model: "m".into(), payload: vec![0; 100] });
+            match sim.send(&f) {
+                Ok(()) => {}
+                Err(e) => {
+                    assert!(matches!(e, Error::Timeout(_)), "{e}");
+                    assert!(e.is_retryable());
+                    failures += 1;
+                }
+            }
+        }
+        assert!(failures > 10, "expected frequent outage-budget exhaustion, saw {failures}");
     }
 }

@@ -4,6 +4,14 @@
 //! grouped by subsystem so callers can branch on the failure domain
 //! (codec vs. runtime vs. transport) without string matching.
 //!
+//! Errors additionally classify into **retryable** (a resend can
+//! plausibly succeed: transport faults, timeouts, explicit load sheds)
+//! vs. **fatal** (resending the same bytes reproduces the failure:
+//! corruption, codec invariants, protocol/version skew) — see
+//! [`Error::is_retryable`]. The session layer
+//! ([`crate::coordinator::session`]) and `SimulatedLink` retransmission
+//! branch on this classification instead of string matching.
+//!
 //! The `Display`/`Error` impls are hand-written: the offline build carries
 //! no `thiserror`, and the surface is small enough that the derive buys
 //! nothing.
@@ -40,6 +48,19 @@ pub enum Error {
     /// budget exhausted, channel closed).
     Transport(String),
 
+    /// A blocking operation exceeded its deadline (transport recv
+    /// timeout, session deadline exhausted). Always retryable.
+    Timeout(String),
+
+    /// The peer explicitly shed the request (bounded queue full or the
+    /// deadline was provably unmeetable) and hinted when to retry.
+    Rejected {
+        /// Suggested backoff before retrying, milliseconds.
+        retry_after_ms: u64,
+        /// Human-readable shed reason.
+        message: String,
+    },
+
     /// Configuration file / CLI parsing problems.
     Config(String),
 
@@ -65,6 +86,10 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Protocol(m) => write!(f, "protocol error: {m}"),
             Error::Transport(m) => write!(f, "transport error: {m}"),
+            Error::Timeout(m) => write!(f, "timeout: {m}"),
+            Error::Rejected { retry_after_ms, message } => {
+                write!(f, "rejected (retry after {retry_after_ms} ms): {message}")
+            }
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Json { offset, msg } => write!(f, "json error at byte {offset}: {msg}"),
             Error::Io(e) => write!(f, "io error: {e}"),
@@ -120,6 +145,48 @@ impl Error {
     pub fn config(msg: impl Into<String>) -> Self {
         Error::Config(msg.into())
     }
+    /// Shorthand constructor for [`Error::Timeout`].
+    pub fn timeout(msg: impl Into<String>) -> Self {
+        Error::Timeout(msg.into())
+    }
+    /// Shorthand constructor for [`Error::Rejected`].
+    pub fn rejected(retry_after_ms: u64, msg: impl Into<String>) -> Self {
+        Error::Rejected { retry_after_ms, message: msg.into() }
+    }
+
+    /// True when a retry of the same operation can plausibly succeed.
+    ///
+    /// Retryable: transport faults, timeouts, explicit load sheds, and
+    /// transient I/O kinds (a reset/aborted/broken connection heals by
+    /// reconnecting). Fatal: corruption, codec invariants, protocol
+    /// violations (including version skew — the peer will reject the
+    /// resent bytes identically), bad arguments, artifact/runtime/config
+    /// failures, and non-transient I/O.
+    pub fn is_retryable(&self) -> bool {
+        match self {
+            Error::Transport(_) | Error::Timeout(_) | Error::Rejected { .. } => true,
+            Error::Io(e) => matches!(
+                e.kind(),
+                std::io::ErrorKind::TimedOut
+                    | std::io::ErrorKind::WouldBlock
+                    | std::io::ErrorKind::ConnectionReset
+                    | std::io::ErrorKind::ConnectionAborted
+                    | std::io::ErrorKind::ConnectionRefused
+                    | std::io::ErrorKind::BrokenPipe
+                    | std::io::ErrorKind::UnexpectedEof
+                    | std::io::ErrorKind::NotConnected
+                    | std::io::ErrorKind::Interrupted
+            ),
+            Error::Corrupt(_)
+            | Error::Codec(_)
+            | Error::InvalidArg(_)
+            | Error::Artifact(_)
+            | Error::Runtime(_)
+            | Error::Protocol(_)
+            | Error::Config(_)
+            | Error::Json { .. } => false,
+        }
+    }
 }
 
 /// Crate-wide result alias.
@@ -135,6 +202,29 @@ mod tests {
         assert_eq!(e.to_string(), "codec error: state underflow");
         let e = Error::Json { offset: 12, msg: "bad literal".into() };
         assert!(e.to_string().contains("byte 12"));
+    }
+
+    #[test]
+    fn retryable_classification() {
+        assert!(Error::transport("peer closed").is_retryable());
+        assert!(Error::timeout("recv deadline").is_retryable());
+        assert!(Error::rejected(25, "queue full").is_retryable());
+        let transient = std::io::Error::new(std::io::ErrorKind::ConnectionReset, "rst");
+        assert!(Error::Io(transient).is_retryable());
+        let persistent = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        assert!(!Error::Io(persistent).is_retryable());
+        // Corruption and version skew are fatal: the peer deterministically
+        // rejects the same bytes again.
+        assert!(!Error::corrupt("crc mismatch").is_retryable());
+        assert!(!Error::protocol("peer predates dtype tagging").is_retryable());
+        assert!(!Error::codec("state underflow").is_retryable());
+        assert!(!Error::config("bad key").is_retryable());
+    }
+
+    #[test]
+    fn rejected_display_carries_hint() {
+        let e = Error::rejected(40, "cloud inflight cap");
+        assert_eq!(e.to_string(), "rejected (retry after 40 ms): cloud inflight cap");
     }
 
     #[test]

@@ -18,7 +18,9 @@ use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 use rans_sc::config::AppConfig;
-use rans_sc::coordinator::{connect_tcp, CloudNode, EdgeConfig, EdgeNode};
+use rans_sc::coordinator::{
+    connect_tcp, connect_tcp_timeout, CloudNode, EdgeConfig, EdgeNode, ServerLimits,
+};
 use rans_sc::data::VisionSet;
 use rans_sc::error::Result;
 use rans_sc::eval;
@@ -74,7 +76,10 @@ fn parse_args() -> Result<Args> {
 }
 
 fn cmd_serve_cloud(cfg: &AppConfig) -> Result<()> {
-    let node = Arc::new(CloudNode::new(&cfg.artifacts_dir)?);
+    let node = Arc::new(
+        CloudNode::new(&cfg.artifacts_dir)?
+            .with_limits(ServerLimits { max_inflight: cfg.max_inflight }),
+    );
     let listener = std::net::TcpListener::bind(&cfg.addr)
         .map_err(|e| rans_sc::Error::transport(format!("bind {}: {e}", cfg.addr)))?;
     println!("cloud node listening on {}", cfg.addr);
@@ -99,7 +104,9 @@ fn cmd_infer(cfg: &AppConfig) -> Result<()> {
     let pool = ExecPool::new(engine, &cfg.artifacts_dir);
     let exec = Arc::new(VisionSplitExec::load(&pool, &manifest, &cfg.model, cfg.sl, cfg.batch)?);
     let set = VisionSet::load(manifest.resolve(&exec.entry.test_data))?;
-    let transport = connect_tcp(&cfg.addr)?;
+    let io_timeout = std::time::Duration::from_millis(cfg.io_timeout_ms);
+    let transport = connect_tcp_timeout(&cfg.addr, io_timeout)?;
+    let redial_addr = cfg.addr.clone();
     let edge = EdgeNode::new(
         Arc::clone(&exec),
         transport,
@@ -113,7 +120,9 @@ fn cmd_infer(cfg: &AppConfig) -> Result<()> {
             layout: layout_of(cfg),
             dtype: cfg.dtype,
         },
-    );
+    )
+    .with_session_config(cfg.session.clone())
+    .with_reconnect(Box::new(move || connect_tcp_timeout(&redial_addr, io_timeout)));
     let (xs, ys) = set.batch(0, cfg.batch);
     let out = edge.infer(&xs)?;
     let classes = exec.entry.num_classes;
@@ -231,7 +240,7 @@ fn cmd_accuracy(cfg: &AppConfig, rest: &[String]) -> Result<()> {
 fn cmd_stats(cfg: &AppConfig) -> Result<()> {
     use rans_sc::coordinator::{Frame, FrameKind, Transport};
     let mut t = connect_tcp(&cfg.addr)?;
-    t.send(&Frame { request_id: 1, kind: FrameKind::Stats })?;
+    t.send(&Frame::new(1, FrameKind::Stats))?;
     match t.recv()?.kind {
         FrameKind::StatsReply { json } => println!("{json}"),
         other => println!("unexpected reply: {other:?}"),
@@ -250,6 +259,13 @@ machine with a one-shot microbenchmark; `--set lanes=…` / `--set
 states=…` pin a knob and `--set autotune=off` disables tuning. The
 decode backend can be pinned with RANS_SC_FORCE_BACKEND=
 scalar|sse4.1|avx2|neon.
+
+The TCP link is resilient by default: `infer` wraps its connection in
+a session with deadline-aware retry/backoff, heartbeat reconnect, and
+shed-aware error reporting. Tune it with `--set io_timeout_ms=…`,
+`--set session.deadline_ms=…`, `--set session.max_retries=…`, etc.;
+`serve-cloud` caps concurrent work with `--set max_inflight=…` and
+answers `Busy` (with a retry-after hint) when overloaded.
 
 COMMANDS:
   serve-cloud        run the cloud node (binds --set addr=HOST:PORT)

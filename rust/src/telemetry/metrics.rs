@@ -106,6 +106,15 @@ impl Registry {
             .build()
     }
 
+    /// [`Registry::snapshot`] rendered as a compact JSON string — the
+    /// machine-readable export the chaos soak and bench-smoke assert
+    /// robustness counters (`session.retry_total`, `session.shed_total`,
+    /// `cloud.shed_total`, `session.reconnect_total`, …) against without
+    /// scraping logs.
+    pub fn snapshot_json(&self) -> String {
+        self.snapshot().to_string_compact()
+    }
+
     /// Human-readable report.
     pub fn report(&self) -> String {
         let mut out = String::new();
@@ -130,6 +139,20 @@ mod tests {
         r.incr("requests", 2);
         assert_eq!(r.get("requests"), 5);
         assert_eq!(r.get("missing"), 0);
+    }
+
+    #[test]
+    fn snapshot_json_exposes_robustness_counters() {
+        let r = Registry::new();
+        r.incr("session.retry_total", 4);
+        r.incr("cloud.shed_total", 2);
+        let json = r.snapshot_json();
+        assert!(json.contains("\"session.retry_total\":4"), "{json}");
+        assert!(json.contains("\"cloud.shed_total\":2"), "{json}");
+        // Round-trips through the crate's own parser.
+        let v = crate::util::json::parse(&json).unwrap();
+        let counters = v.get("counters").unwrap();
+        assert_eq!(counters.get("session.retry_total").unwrap().as_f64().unwrap(), 4.0);
     }
 
     #[test]

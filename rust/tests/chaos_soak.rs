@@ -1,0 +1,303 @@
+//! Chaos soak: the resilient session layer against a deterministic
+//! hostile link.
+//!
+//! Thousands of requests are driven through [`Session`] over a
+//! [`FaultyTransport`] that drops, corrupts, duplicates, truncates and
+//! delays wire frames from a seeded schedule, while the responder sheds
+//! a deterministic subset of requests with `Busy`. The contract under
+//! test is the tentpole's acceptance bar:
+//!
+//! * **zero hangs** — an in-process watchdog aborts the test if a run
+//!   wedges, and each run asserts a wall-clock ceiling;
+//! * **zero panics** — any panic fails the test on its own;
+//! * **every outcome is explicit** — a verified correct reply, a clean
+//!   retryable error, or an explicit `Rejected` shed. Nothing else.
+//!
+//! CI shards the soak with `RANS_SC_CHAOS_FAULT` (one fault family) and
+//! `RANS_SC_CHAOS_SEED`; run without either and every family × two
+//! seeds executes (≥ 2,000 requests total). `RANS_SC_CHAOS_REQUESTS`
+//! scales the per-run volume.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use rans_sc::coordinator::{
+    FaultSpec, FaultyTransport, Frame, FrameKind, Session, SessionConfig, Transport,
+};
+use rans_sc::error::Error;
+use rans_sc::telemetry::Registry;
+
+/// First payload byte marking a request the responder must always shed.
+const SHED_MARK: u8 = 0xFF;
+
+/// Abort the whole process if `done` is not raised within `secs` — the
+/// soak's hang guard (a wedged channel or sleep would otherwise stall
+/// the harness until an external timeout).
+fn arm_watchdog(secs: u64, done: Arc<AtomicBool>) {
+    thread::spawn(move || {
+        for _ in 0..secs {
+            thread::sleep(Duration::from_secs(1));
+            if done.load(Ordering::Relaxed) {
+                return;
+            }
+        }
+        eprintln!("chaos soak watchdog fired after {secs}s — aborting");
+        std::process::abort();
+    });
+}
+
+/// The reply value the responder computes for a payload; the client
+/// recomputes it to verify end-to-end integrity of every `Ok` outcome.
+fn checksum(payload: &[u8]) -> f32 {
+    let sum: u64 = payload.iter().map(|&b| b as u64).sum();
+    sum as f32 + payload.len() as f32 * 0.5
+}
+
+/// Deterministic per-request payload. Requests with `i % 17 == 0` carry
+/// the shed mark; all others are guaranteed not to.
+fn payload_for(i: usize) -> Vec<u8> {
+    let len = 1 + (i % 97);
+    let mut p: Vec<u8> = (0..len).map(|j| ((i * 31 + j * 7) & 0xFF) as u8).collect();
+    if i % 17 == 0 {
+        p[0] = SHED_MARK;
+    } else if p[0] == SHED_MARK {
+        p[0] = 0;
+    }
+    p
+}
+
+/// Minimal cloud stand-in on the far end of a faulty link. Parse
+/// failures from injected faults are skipped (a real server would log
+/// and move on); a closed peer ends the thread.
+fn responder(mut t: FaultyTransport) {
+    loop {
+        let frame = match t.recv() {
+            Ok(f) => f,
+            Err(e) if e.to_string().contains("injected link fault") => continue,
+            Err(_) => return, // peer closed
+        };
+        let reply = match frame.kind {
+            FrameKind::Ping => FrameKind::Pong,
+            FrameKind::Shutdown => return,
+            FrameKind::InferLm { ref payload, .. } => {
+                if payload.first() == Some(&SHED_MARK) {
+                    FrameKind::Busy { retry_after_ms: 1, message: "soak overload".into() }
+                } else {
+                    FrameKind::Logits {
+                        data: vec![checksum(payload)],
+                        decode_ms: 0.0,
+                        compute_ms: 0.0,
+                    }
+                }
+            }
+            other => FrameKind::ServerError { message: format!("unexpected {other:?}") },
+        };
+        if t.send(&Frame::new(frame.request_id, reply)).is_err() {
+            return;
+        }
+    }
+}
+
+/// Outcome tallies for one (family, seed) run.
+#[derive(Debug, Default)]
+struct Tally {
+    ok: usize,
+    rejected: usize,
+    retryable_err: usize,
+}
+
+/// Drive `n` requests through a session whose link (both directions)
+/// injects `spec`-shaped faults seeded by `seed`. Every reconnect dials
+/// a fresh faulty pair and hands the far end to a new responder.
+fn run_soak(family: &str, seed: u64, n: usize, spec: FaultSpec) -> Tally {
+    let registry = Arc::new(Registry::new());
+    let (hand_tx, hand_rx) = mpsc::channel::<FaultyTransport>();
+    let spawner = thread::spawn(move || {
+        for t in hand_rx {
+            thread::spawn(move || responder(t));
+        }
+    });
+    let pair_seed = Arc::new(AtomicU64::new(seed));
+    let mut dial: Box<dyn FnMut() -> rans_sc::error::Result<FaultyTransport> + Send> = {
+        let pair_seed = Arc::clone(&pair_seed);
+        Box::new(move || {
+            let s = pair_seed.fetch_add(1, Ordering::Relaxed);
+            let (client, server) = FaultyTransport::pair(s, spec, spec);
+            hand_tx
+                .send(server)
+                .map_err(|_| Error::transport("responder spawner gone"))?;
+            Ok(client)
+        })
+    };
+    let cfg = SessionConfig {
+        deadline_ms: 4_000,
+        try_timeout_ms: 60,
+        max_retries: 20,
+        base_backoff_ms: 1,
+        max_backoff_ms: 8,
+        heartbeat_ms: 0,
+        seed,
+    };
+    let first = dial().expect("initial dial cannot fail");
+    let mut session = Session::new(first, cfg)
+        .with_metrics(Arc::clone(&registry))
+        .with_connector(dial);
+
+    let started = Instant::now();
+    let mut tally = Tally::default();
+    for i in 0..n {
+        let payload = payload_for(i);
+        let flagged = payload[0] == SHED_MARK;
+        let kind = if !flagged && i % 5 == 0 {
+            FrameKind::Ping
+        } else {
+            FrameKind::InferLm { model: "soak".into(), payload: payload.clone() }
+        };
+        let want_pong = matches!(kind, FrameKind::Ping);
+        match session.call(kind) {
+            Ok(reply) => {
+                assert!(!flagged, "req {i}: shed-marked request must never succeed");
+                match reply.kind {
+                    FrameKind::Pong => assert!(want_pong, "req {i}: unsolicited Pong"),
+                    FrameKind::Logits { ref data, .. } => {
+                        assert!(!want_pong, "req {i}: Logits for a Ping");
+                        assert_eq!(data.len(), 1, "req {i}");
+                        assert_eq!(data[0], checksum(&payload), "req {i}: reply integrity");
+                    }
+                    ref other => panic!("req {i}: unexpected reply kind {other:?}"),
+                }
+                tally.ok += 1;
+            }
+            Err(e @ Error::Rejected { .. }) => {
+                assert!(e.is_retryable(), "req {i}: shed must stay retryable ({e})");
+                tally.rejected += 1;
+            }
+            Err(e) => {
+                assert!(
+                    e.is_retryable(),
+                    "req {i} under '{family}' faults: non-retryable error escaped: {e}"
+                );
+                tally.retryable_err += 1;
+            }
+        }
+    }
+    let elapsed = started.elapsed();
+    assert!(
+        elapsed < Duration::from_secs(180),
+        "'{family}' seed {seed}: {n} requests took {elapsed:?} — treating as a hang"
+    );
+
+    // The session must have survived *through* retries, not around them.
+    assert!(tally.ok >= n / 2, "'{family}' seed {seed}: too few successes: {tally:?}");
+    assert!(
+        registry.get("session.retry_total") > 0,
+        "'{family}' seed {seed}: fault schedule produced no retries"
+    );
+    let snapshot = registry.snapshot_json();
+    for key in ["session.retry_total", "session.attempt_ms"] {
+        assert!(snapshot.contains(key), "metrics snapshot lost {key}: {snapshot}");
+    }
+    drop(session); // hangs up: responders and the spawner drain out
+    spawner.join().unwrap();
+    tally
+}
+
+fn fault_families() -> Vec<(&'static str, FaultSpec)> {
+    vec![
+        ("drop", FaultSpec::drops(0.25)),
+        ("corrupt", FaultSpec::corruption(0.25)),
+        ("delay", FaultSpec::delays(0.6, Duration::from_millis(4))),
+        ("disconnect", FaultSpec::truncations(0.2)),
+        ("duplicate", FaultSpec::duplicates(0.3)),
+    ]
+}
+
+fn env_u64(name: &str) -> Option<u64> {
+    std::env::var(name).ok().and_then(|v| v.parse().ok())
+}
+
+#[test]
+fn chaos_soak_every_outcome_is_explicit() {
+    let done = Arc::new(AtomicBool::new(false));
+    arm_watchdog(480, Arc::clone(&done));
+
+    let only_family = std::env::var("RANS_SC_CHAOS_FAULT").ok();
+    let seeds: Vec<u64> =
+        env_u64("RANS_SC_CHAOS_SEED").map(|s| vec![s]).unwrap_or_else(|| vec![1, 2]);
+    let n = env_u64("RANS_SC_CHAOS_REQUESTS").unwrap_or(200) as usize;
+
+    let families: Vec<_> = fault_families()
+        .into_iter()
+        .filter(|(name, _)| only_family.as_deref().map(|f| f == *name).unwrap_or(true))
+        .collect();
+    assert!(
+        !families.is_empty(),
+        "RANS_SC_CHAOS_FAULT={only_family:?} matches no fault family"
+    );
+
+    let mut total = Tally::default();
+    for &(name, spec) in &families {
+        for &seed in &seeds {
+            let t = run_soak(name, seed, n, spec);
+            println!("soak '{name}' seed {seed}: {t:?}");
+            total.ok += t.ok;
+            total.rejected += t.rejected;
+            total.retryable_err += t.retryable_err;
+            // On a link where replies always arrive (delays only bound
+            // latency), a shed-marked request deterministically burns
+            // its retry budget on Busy and surfaces as Rejected.
+            if name == "delay" {
+                assert!(t.rejected > 0, "delay seed {seed}: no explicit Rejected: {t:?}");
+            }
+        }
+    }
+    println!(
+        "soak total over {} requests: {total:?}",
+        families.len() * seeds.len() * n
+    );
+    done.store(true, Ordering::Relaxed);
+}
+
+/// A permanently overloaded peer: the session must surface the shed as
+/// an explicit `Rejected` carrying the server's retry-after hint, and
+/// the shed must be visible in the metrics snapshot.
+#[test]
+fn overload_shed_surfaces_as_explicit_rejected() {
+    let done = Arc::new(AtomicBool::new(false));
+    arm_watchdog(120, Arc::clone(&done));
+
+    let (client, mut server) = FaultyTransport::pair(42, FaultSpec::none(), FaultSpec::none());
+    let srv = thread::spawn(move || loop {
+        let frame = match server.recv() {
+            Ok(f) => f,
+            Err(_) => return,
+        };
+        let busy = FrameKind::Busy { retry_after_ms: 5, message: "always full".into() };
+        if server.send(&Frame::new(frame.request_id, busy)).is_err() {
+            return;
+        }
+    });
+    let registry = Arc::new(Registry::new());
+    let cfg = SessionConfig {
+        deadline_ms: 2_000,
+        try_timeout_ms: 200,
+        max_retries: 3,
+        base_backoff_ms: 1,
+        max_backoff_ms: 4,
+        heartbeat_ms: 0,
+        seed: 7,
+    };
+    let mut session = Session::new(client, cfg).with_metrics(Arc::clone(&registry));
+    let err = session.call(FrameKind::Ping).unwrap_err();
+    match err {
+        Error::Rejected { retry_after_ms, .. } => assert_eq!(retry_after_ms, 5),
+        other => panic!("expected Rejected, got {other}"),
+    }
+    assert_eq!(registry.get("session.shed_total"), 4, "initial attempt + 3 retries");
+    assert!(registry.snapshot_json().contains("session.shed_total"));
+    drop(session);
+    srv.join().unwrap();
+    done.store(true, Ordering::Relaxed);
+}

@@ -218,21 +218,18 @@ fn bf16_end_to_end_through_inproc_transport() {
                     let logits =
                         TensorRef::from_bf16_bits(&arena[..info.elements]).to_f32_vec();
                     cloud_end
-                        .send(&Frame {
-                            request_id: frame.request_id,
-                            kind: FrameKind::Logits {
+                        .send(&Frame::new(
+                            frame.request_id,
+                            FrameKind::Logits {
                                 data: logits,
                                 decode_ms: 0.0,
                                 compute_ms: 0.0,
                             },
-                        })
+                        ))
                         .unwrap();
                 }
                 FrameKind::Shutdown => {
-                    let _ = cloud_end.send(&Frame {
-                        request_id: frame.request_id,
-                        kind: FrameKind::Pong,
-                    });
+                    let _ = cloud_end.send(&Frame::new(frame.request_id, FrameKind::Pong));
                     return;
                 }
                 other => panic!("unexpected frame {other:?}"),
@@ -251,10 +248,10 @@ fn bf16_end_to_end_through_inproc_transport() {
         assert!(container.len() < 2 * n, "must beat raw bf16 bytes");
         assert_eq!(stats.total_bytes, container.len());
         edge_end
-            .send(&Frame {
-                request_id: req,
-                kind: FrameKind::InferLm { model: "llama_mini_s".into(), payload: container },
-            })
+            .send(&Frame::new(
+                req,
+                FrameKind::InferLm { model: "llama_mini_s".into(), payload: container },
+            ))
             .unwrap();
         let reply = edge_end.recv().unwrap();
         assert_eq!(reply.request_id, req);
@@ -279,7 +276,7 @@ fn bf16_end_to_end_through_inproc_transport() {
             }
         }
     }
-    edge_end.send(&Frame { request_id: 99, kind: FrameKind::Shutdown }).unwrap();
+    edge_end.send(&Frame::new(99, FrameKind::Shutdown)).unwrap();
     let _ = edge_end.recv();
     server.join().unwrap();
 }

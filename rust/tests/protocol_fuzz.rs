@@ -272,15 +272,15 @@ fn fuzz_mutated_valid_frames() {
         "mutated valid frames",
         200,
         |rng| {
-            let frame = Frame {
-                request_id: rng.next_u64(),
-                kind: FrameKind::InferVision {
+            let frame = Frame::new(
+                rng.next_u64(),
+                FrameKind::InferVision {
                     model: "m".into(),
                     sl: rng.below_usize(5),
                     batch: 1 + rng.below_usize(8),
                     payload: (0..rng.below_usize(256)).map(|_| rng.next_u64() as u8).collect(),
                 },
-            };
+            );
             let mut wire = frame.to_wire();
             let pos = rng.below_usize(wire.len());
             wire[pos] ^= 1 << rng.below(8);

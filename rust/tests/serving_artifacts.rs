@@ -137,28 +137,28 @@ fn cloud_rejects_corrupt_container_gracefully() {
     let manifest = cloud.manifest().clone();
     let entry = &manifest.vision[0];
     let split = &entry.splits[0];
-    let frame = Frame {
-        request_id: 5,
-        kind: FrameKind::InferVision {
+    let frame = Frame::new(
+        5,
+        FrameKind::InferVision {
             model: entry.name.clone(),
             sl: split.sl,
             batch: split.batch,
             payload: vec![0xAB; 256],
         },
-    };
+    );
     let reply = cloud.handle(&frame);
     assert_eq!(reply.request_id, 5);
     assert!(matches!(reply.kind, FrameKind::ServerError { .. }));
     // Unknown model is also a clean error.
-    let frame = Frame {
-        request_id: 6,
-        kind: FrameKind::InferVision {
+    let frame = Frame::new(
+        6,
+        FrameKind::InferVision {
             model: "not_a_model".into(),
             sl: 1,
             batch: 1,
             payload: vec![],
         },
-    };
+    );
     assert!(matches!(cloud.handle(&frame).kind, FrameKind::ServerError { .. }));
 }
 

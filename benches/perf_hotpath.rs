@@ -40,6 +40,18 @@ fn mbps(bytes: usize, ms: f64) -> f64 {
 struct Report {
     rows: Vec<(String, Measurement, Option<f64>)>,
     robustness: Option<RobustnessSmoke>,
+    registry: Option<RegistrySmoke>,
+}
+
+/// Outcome of the registry smoke: streaming verification throughput of
+/// a multi-chunk artifact plus a hot-swap churn loop through the real
+/// `ModelSlot` + `smoke_decode` machinery, so the registry's serving
+/// cost rides in the same JSON artifact as the codec's.
+struct RegistrySmoke {
+    artifact_bytes: usize,
+    verify_mbps: f64,
+    swap_total: u64,
+    rollback_total: u64,
 }
 
 /// Outcome of the session-layer robustness smoke: a seeded soak over a
@@ -58,7 +70,7 @@ struct RobustnessSmoke {
 
 impl Report {
     fn new() -> Self {
-        Report { rows: Vec::new(), robustness: None }
+        Report { rows: Vec::new(), robustness: None, registry: None }
     }
 
     fn add(&mut self, name: &str, m: Measurement) -> &Measurement {
@@ -159,6 +171,17 @@ impl Report {
                 .field("soak_rejected", s.rejected)
                 .field("soak_wall_ms", s.wall_ms);
         }
+        // Registry verification + hot-swap counters. CI bench-smoke
+        // fails if `registry_verify_mbps` or `swap_total` go missing or
+        // report zero — a zero means the streaming verifier (or the
+        // swap state machine) silently stopped being exercised.
+        if let Some(r) = &self.registry {
+            top = top
+                .field("registry_verify_mbps", r.verify_mbps)
+                .field("registry_artifact_bytes", r.artifact_bytes)
+                .field("swap_total", r.swap_total as usize)
+                .field("rollback_total", r.rollback_total as usize);
+        }
         top.field("rows", rows).build()
     }
 }
@@ -227,6 +250,42 @@ fn robustness_smoke(fast: bool) -> RobustnessSmoke {
         reconnect_total: registry.get("session.reconnect_total"),
         wall_ms,
     }
+}
+
+/// Publish a multi-chunk artifact to a scratch [`ChunkStore`] and time
+/// the streaming verifier over it, then churn a versioned [`ModelSlot`]
+/// through hot-swaps (including one deliberately failing candidate, so
+/// the rollback path is exercised too).
+fn registry_smoke(fast: bool, warmup: usize, trials: usize) -> RegistrySmoke {
+    use rans_sc::runtime::registry::{smoke_decode, ChunkStore, DeployParams, ModelSlot};
+
+    let dir = std::env::temp_dir()
+        .join(format!("rans_sc_bench_registry_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("scratch registry dir");
+    let store = ChunkStore::open(&dir);
+    let n: usize = if fast { 4 << 20 } else { 16 << 20 };
+    let mut rng = rans_sc::util::prng::Rng::new(0xBEEF);
+    let bytes: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+    let desc = store.put_artifact(&bytes, 1 << 20).expect("publish artifact");
+    let m = measure(warmup, trials, || store.verify_artifact(&desc).unwrap());
+    let verify_mbps = mbps(n, m.mean_ms());
+
+    let slot = ModelSlot::new(0u64, DeployParams::paper(4));
+    let (mut swap_total, mut rollback_total) = (0u64, 0u64);
+    let swaps = if fast { 4u64 } else { 8 };
+    for v in 1..=swaps {
+        slot.hot_swap(v, DeployParams::paper(4), smoke_decode).expect("hot swap");
+        swap_total += 1;
+    }
+    // A stale candidate must roll back (version unchanged).
+    if slot.hot_swap(swaps, DeployParams::paper(4), smoke_decode).is_err() {
+        rollback_total += 1;
+    }
+    assert_eq!(slot.version(), swaps, "rollback left the active version");
+
+    let _ = std::fs::remove_dir_all(&dir);
+    RegistrySmoke { artifact_bytes: n, verify_mbps, swap_total, rollback_total }
 }
 
 fn main() {
@@ -557,6 +616,19 @@ fn main() {
         smoke.wall_ms
     );
     report.robustness = Some(smoke);
+
+    // Registry smoke: streaming verification throughput + hot-swap
+    // churn, feeding the registry_verify_mbps / swap_total JSON keys.
+    let reg = registry_smoke(fast, warmup, trials);
+    println!(
+        "registry smoke       {:.0} MB verified at {:>8.1} MB/s, \
+         {} swaps, {} rollback",
+        reg.artifact_bytes as f64 / 1e6,
+        reg.verify_mbps,
+        reg.swap_total,
+        reg.rollback_total
+    );
+    report.registry = Some(reg);
 
     // JSON artifact for the CI perf-trajectory record.
     let json_path =

@@ -61,6 +61,9 @@ pub struct AppConfig {
     /// Session-layer retry/deadline/heartbeat policy
     /// (`session.deadline_ms`, `session.max_retries`, … as dotted keys).
     pub session: SessionConfig,
+    /// Model-registry settings (`registry.dir`, `registry.key`,
+    /// `registry.key_id`, `registry.model_version` as dotted keys).
+    pub registry: RegistryConfig,
     /// True once `lanes` was set explicitly (file or override) — the
     /// autotuner never overrides an explicit choice. Recorded configs
     /// re-pin on load, so experiment records reproduce cross-machine.
@@ -89,8 +92,38 @@ impl Default for AppConfig {
             io_timeout_ms: 5_000,
             max_inflight: 32,
             session: SessionConfig::default(),
+            registry: RegistryConfig::default(),
             lanes_pinned: false,
             states_pinned: false,
+        }
+    }
+}
+
+/// Settings for the signed, content-addressed model registry
+/// (`rans-sc registry …` subcommands and version-pinned serving).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RegistryConfig {
+    /// Registry root directory (chunk objects + signed manifests).
+    pub dir: String,
+    /// HMAC signing/verification key. The raw string bytes are the key;
+    /// empty means "not configured" and the registry subcommands refuse
+    /// to run rather than sign with a guessable default.
+    pub key: String,
+    /// Identifier of the key, bound into signed manifests so a verifier
+    /// rejects documents signed under a rotated-out key.
+    pub key_id: String,
+    /// Deployment version to pin serving to (0 = unversioned legacy:
+    /// no version headers, no skew checks).
+    pub model_version: u64,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> Self {
+        RegistryConfig {
+            dir: "registry".into(),
+            key: String::new(),
+            key_id: "default".into(),
+            model_version: 0,
         }
     }
 }
@@ -197,6 +230,18 @@ impl AppConfig {
                 self.session.heartbeat_ms = val.as_usize().ok_or_else(bad)? as u64
             }
             "session.seed" => self.session.seed = val.as_usize().ok_or_else(bad)? as u64,
+            "registry" => {
+                let obj = val.as_obj().ok_or_else(bad)?;
+                for (rk, rv) in obj {
+                    self.apply_value(&format!("registry.{rk}"), rv)?;
+                }
+            }
+            "registry.dir" => self.registry.dir = val.as_str().ok_or_else(bad)?.into(),
+            "registry.key" => self.registry.key = val.as_str().ok_or_else(bad)?.into(),
+            "registry.key_id" => self.registry.key_id = val.as_str().ok_or_else(bad)?.into(),
+            "registry.model_version" => {
+                self.registry.model_version = val.as_usize().ok_or_else(bad)? as u64
+            }
             "channel" => {
                 let obj = val.as_obj().ok_or_else(bad)?;
                 for (ck, cv) in obj {
@@ -264,6 +309,15 @@ impl AppConfig {
                     .build(),
             )
             .field(
+                "registry",
+                ObjBuilder::new()
+                    .field("dir", self.registry.dir.as_str())
+                    .field("key", self.registry.key.as_str())
+                    .field("key_id", self.registry.key_id.as_str())
+                    .field("model_version", self.registry.model_version as usize)
+                    .build(),
+            )
+            .field(
                 "channel",
                 ObjBuilder::new()
                     .field("epsilon", self.channel.epsilon)
@@ -302,6 +356,28 @@ mod tests {
         assert_eq!(c2.session, c.session);
         assert_eq!(c2.io_timeout_ms, c.io_timeout_ms);
         assert_eq!(c2.max_inflight, c.max_inflight);
+        assert_eq!(c2.registry, c.registry);
+    }
+
+    #[test]
+    fn registry_overrides_and_roundtrip() {
+        let mut c = AppConfig::default();
+        assert_eq!(c.registry.model_version, 0, "default serving is unversioned");
+        assert!(c.registry.key.is_empty(), "no guessable default signing key");
+        c.apply_override("registry.dir=/tmp/reg").unwrap();
+        c.apply_override("registry.key=super-secret").unwrap();
+        c.apply_override("registry.key_id=prod-2026").unwrap();
+        c.apply_override("registry.model_version=7").unwrap();
+        assert_eq!(c.registry.dir, "/tmp/reg");
+        assert_eq!(c.registry.key, "super-secret");
+        assert_eq!(c.registry.key_id, "prod-2026");
+        assert_eq!(c.registry.model_version, 7);
+        let text = c.to_json().to_string_pretty();
+        let mut c2 = AppConfig::default();
+        c2.apply_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(c2.registry, c.registry);
+        assert!(c.apply_override("registry.nonsense=1").is_err());
+        assert!(c.apply_override("registry.model_version=x").is_err());
     }
 
     #[test]

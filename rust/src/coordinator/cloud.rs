@@ -8,6 +8,16 @@
 //! carrying a retry-after hint instead of queueing it into a timeout.
 //! Control frames (Ping/Stats/Shutdown) always bypass admission so
 //! liveness probes keep working under overload.
+//!
+//! A registry-deployed node additionally pins a
+//! [`ModelSlot`](crate::runtime::registry::ModelSlot): requests whose
+//! model-version header disagrees with the active deployment are
+//! answered with [`FrameKind::VersionSkew`] **before** admission (a
+//! mismatched request must not consume an in-flight slot, and must
+//! never be decoded against the wrong tail), and
+//! [`CloudNode::hot_swap`] stages → smoke-verifies → atomically flips
+//! the active version while in-flight requests drain on the snapshot
+//! they started with.
 
 use std::collections::HashMap;
 use std::net::TcpListener;
@@ -17,6 +27,7 @@ use std::time::Instant;
 
 use crate::engine::{Engine as CodecEngine, EngineHandle};
 use crate::error::{Error, Result};
+use crate::runtime::registry::{smoke_decode, DeployParams, ModelSlot};
 use crate::runtime::{Engine, ExecPool, LmSplitExec, Manifest, VisionSplitExec};
 use crate::telemetry::Registry;
 use crate::tensor::{Dtype, TensorRef};
@@ -120,8 +131,26 @@ pub struct CloudNode {
     codec: EngineHandle,
     metrics: Arc<Registry>,
     admission: Admission,
+    /// Active registry deployment. Version 0 = unversioned legacy
+    /// serving: no skew checks run and version headers are ignored.
+    model_slot: ModelSlot<DeployParams>,
     vision_cache: Mutex<HashMap<(String, usize, usize), Arc<VisionSplitExec>>>,
     lm_cache: Mutex<HashMap<String, Arc<LmSplitExec>>>,
+}
+
+/// The pre-admission version check, as a pure function so it is
+/// testable without artifacts: `Some(reply)` when the request must be
+/// refused with a skew frame. `active == 0` (unversioned node) and
+/// headerless requests (legacy edges) always pass.
+fn skew_reply(active: u64, frame: &Frame) -> Option<FrameKind> {
+    match frame.model_version {
+        Some(offered) if active != 0 && offered != active => Some(FrameKind::VersionSkew {
+            active,
+            offered,
+            message: "cloud is serving a different deployment; resync from the registry".into(),
+        }),
+        _ => None,
+    }
 }
 
 impl CloudNode {
@@ -136,6 +165,7 @@ impl CloudNode {
             codec: EngineHandle::shared(),
             metrics: Arc::new(Registry::new()),
             admission: Admission::new(ServerLimits::default()),
+            model_slot: ModelSlot::new(0, DeployParams::paper(8)),
             vision_cache: Mutex::new(HashMap::new()),
             lm_cache: Mutex::new(HashMap::new()),
         })
@@ -145,6 +175,41 @@ impl CloudNode {
     pub fn with_limits(mut self, limits: ServerLimits) -> Self {
         self.admission = Admission::new(limits);
         self
+    }
+
+    /// Pin the node to a registry deployment: requests declaring a
+    /// different `model_version` are answered with `VersionSkew` before
+    /// admission. Version 0 keeps the unversioned legacy behaviour.
+    pub fn with_model_version(mut self, version: u64, deploy: DeployParams) -> Self {
+        self.model_slot = ModelSlot::new(version, deploy);
+        self
+    }
+
+    /// The active deployment version (0 = unversioned).
+    pub fn model_version(&self) -> u64 {
+        self.model_slot.version()
+    }
+
+    /// Stage → smoke-verify → atomically flip to `(version, deploy)`.
+    ///
+    /// The smoke check ([`smoke_decode`]) replays a synthetic
+    /// compress/decode roundtrip at the staged codec parameters while
+    /// the old version is still serving; any failure (or a
+    /// non-monotonic version) leaves the prior deployment active and
+    /// counts `cloud.rollback_total`. A successful flip counts
+    /// `cloud.swap_total`; in-flight requests drain on the snapshot
+    /// they admitted with.
+    pub fn hot_swap(&self, version: u64, deploy: DeployParams) -> Result<()> {
+        match self.model_slot.hot_swap(version, deploy, smoke_decode) {
+            Ok(_displaced) => {
+                self.metrics.incr("cloud.swap_total", 1);
+                Ok(())
+            }
+            Err(e) => {
+                self.metrics.incr("cloud.rollback_total", 1);
+                Err(e)
+            }
+        }
     }
 
     /// Decode on a dedicated compression engine instead of the shared
@@ -300,6 +365,13 @@ impl CloudNode {
         if !needs_admission {
             return self.handle(frame);
         }
+        // Version check BEFORE admission: a mismatched request must not
+        // consume an in-flight slot, and must never reach the decoder —
+        // features decoded against the wrong tail are silent garbage.
+        if let Some(kind) = skew_reply(self.model_slot.version(), frame) {
+            self.metrics.incr("cloud.skew_total", 1);
+            return Frame::new(frame.request_id, kind);
+        }
         match self.admission.try_admit(frame.deadline_ms) {
             Ok(_guard) => self.handle(frame),
             Err(retry_after_ms) => {
@@ -436,5 +508,28 @@ mod tests {
         adm.note_service(80_000);
         let ewma = adm.ewma_service_us.load(Ordering::Relaxed);
         assert!(ewma > 8_000 && ewma < 80_000, "EWMA must smooth the spike, got {ewma}");
+    }
+
+    #[test]
+    fn skew_check_refuses_mismatch_and_allows_legacy() {
+        let infer = |version: Option<u64>| {
+            let mut f = Frame::new(
+                1,
+                FrameKind::InferLm { model: "m".into(), payload: vec![1, 2, 3] },
+            );
+            f.model_version = version;
+            f
+        };
+        // Versioned node, matching request → admitted.
+        assert!(skew_reply(5, &infer(Some(5))).is_none());
+        // Versioned node, stale request → refused with both versions.
+        match skew_reply(5, &infer(Some(3))) {
+            Some(FrameKind::VersionSkew { active: 5, offered: 3, .. }) => {}
+            other => panic!("expected skew reply, got {other:?}"),
+        }
+        // Legacy (headerless) request is always admitted.
+        assert!(skew_reply(5, &infer(None)).is_none());
+        // Unversioned node ignores headers entirely.
+        assert!(skew_reply(0, &infer(Some(9))).is_none());
     }
 }

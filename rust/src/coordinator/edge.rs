@@ -17,6 +17,13 @@
 //! failures step the AIQ bit-width Q down toward the policy floor
 //! (fewer wire bytes → fewer link-budget failures), with an optional
 //! raw-frame fallback, and a run of successes climbs back up.
+//!
+//! Registry-deployed edges additionally pin their requests to a
+//! `model_version` (`with_model_version`) and install a resync hook
+//! (`with_resync`): a cloud that hot-swapped to a newer deployment
+//! answers `VersionSkew`, the hook re-fetches from the registry, and
+//! the request retries at the server's version — features are never
+//! silently decoded against a mismatched tail.
 
 use std::sync::{Arc, Mutex};
 
@@ -93,6 +100,23 @@ impl EdgeConfig {
     pub fn with_dtype(self, dtype: Dtype) -> Self {
         EdgeConfig { dtype, ..self }
     }
+
+    /// The registry-manifest view of this serving point: the codec
+    /// parameters a [`crate::runtime::registry::RegistryManifest`] binds
+    /// (and a hot-swap smoke check replays) for this edge.
+    pub fn deploy_params(&self) -> crate::runtime::registry::DeployParams {
+        crate::runtime::registry::DeployParams {
+            sl: self.sl,
+            batch: self.batch,
+            q: self.q,
+            lanes: self.lanes,
+            states: match self.layout {
+                StreamLayout::V1 => 1,
+                StreamLayout::MultiState(n) => n,
+            },
+            dtype: self.dtype.to_string(),
+        }
+    }
 }
 
 /// Result of one edge-driven inference.
@@ -112,10 +136,14 @@ fn expect_logits(frame: Frame) -> Result<(Vec<f32>, f32, f32)> {
     match frame.kind {
         FrameKind::Logits { data, decode_ms, compute_ms } => Ok((data, decode_ms, compute_ms)),
         FrameKind::ServerError { message } => Err(Error::protocol(format!("server: {message}"))),
-        // The session layer normally converts sheds to `Error::Rejected`
-        // before they get here; this arm covers direct `handle` callers.
+        // The session layer normally converts sheds and skews to their
+        // typed errors before they get here; these arms cover direct
+        // `handle` callers.
         FrameKind::Busy { retry_after_ms, message } => {
             Err(Error::rejected(retry_after_ms as u64, message))
+        }
+        FrameKind::VersionSkew { active, offered, message } => {
+            Err(Error::version_skew(active, offered, message))
         }
         other => Err(Error::protocol(format!("unexpected reply {other:?}"))),
     }
@@ -178,6 +206,28 @@ impl<T: Transport> EdgeNode<T> {
         let session = self.session.into_inner().unwrap().with_connector(connector);
         self.session = Mutex::new(session);
         self
+    }
+
+    /// Pin requests to a registry `model_version` (the tag-15 header);
+    /// a cloud serving a different version answers `VersionSkew`.
+    pub fn with_model_version(mut self, model_version: u64) -> Self {
+        let session = self.session.into_inner().unwrap().with_model_version(model_version);
+        self.session = Mutex::new(session);
+        self
+    }
+
+    /// Install the skew-recovery hook: on a `VersionSkew` reply the
+    /// session re-fetches through it (once per request) and retries at
+    /// the server's version instead of failing the call.
+    pub fn with_resync(mut self, resync: Box<dyn FnMut(u64) -> Result<u64> + Send>) -> Self {
+        let session = self.session.into_inner().unwrap().with_resync(resync);
+        self.session = Mutex::new(session);
+        self
+    }
+
+    /// The model version requests are currently pinned to, if any.
+    pub fn model_version(&self) -> Option<u64> {
+        self.session.lock().unwrap().model_version()
     }
 
     /// Enable graceful degradation: after sustained retryable failures
@@ -402,6 +452,28 @@ impl<T: Transport> LmEdgeNode<T> {
         let session = self.session.into_inner().unwrap().with_connector(connector);
         self.session = Mutex::new(session);
         self
+    }
+
+    /// Pin requests to a registry `model_version` (the tag-15 header);
+    /// a cloud serving a different version answers `VersionSkew`.
+    pub fn with_model_version(mut self, model_version: u64) -> Self {
+        let session = self.session.into_inner().unwrap().with_model_version(model_version);
+        self.session = Mutex::new(session);
+        self
+    }
+
+    /// Install the skew-recovery hook: on a `VersionSkew` reply the
+    /// session re-fetches through it (once per request) and retries at
+    /// the server's version instead of failing the call.
+    pub fn with_resync(mut self, resync: Box<dyn FnMut(u64) -> Result<u64> + Send>) -> Self {
+        let session = self.session.into_inner().unwrap().with_resync(resync);
+        self.session = Mutex::new(session);
+        self
+    }
+
+    /// The model version requests are currently pinned to, if any.
+    pub fn model_version(&self) -> Option<u64> {
+        self.session.lock().unwrap().model_version()
     }
 
     /// Node metrics (session robustness counters live here too).

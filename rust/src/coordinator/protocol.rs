@@ -19,7 +19,7 @@
 //! "peer predates dtype tagging" error instead of misparsing the
 //! shifted body.
 //!
-//! Two additive, version-gated extensions ride the same tag discipline:
+//! Additive, version-gated extensions ride the same tag discipline:
 //!
 //! * **Deadline header (tag 13)** — a request may carry its remaining
 //!   latency budget. On the wire the header *wraps* the kind:
@@ -30,6 +30,15 @@
 //! * **[`FrameKind::Busy`] (tag 14)** — the explicit load-shed reply:
 //!   the cloud's bounded queues refuse work they provably cannot finish
 //!   inside the deadline and hint when to retry.
+//! * **Model-version header (tag 15)** — the registry handshake: a
+//!   request may declare which `model_version` its features were
+//!   produced by (`[15] [u64 version]`, wrapping the kind like tag 13;
+//!   headers parse in any order, duplicates rejected). Absent = legacy
+//!   wire, byte-identical.
+//! * **[`FrameKind::VersionSkew`] (tag 16)** — the cloud's reply when a
+//!   declared version does not match its active deployment: fatal until
+//!   the edge resyncs from the registry, never a silent decode with the
+//!   wrong tail.
 
 use crate::error::{Error, Result};
 use crate::tensor::Dtype;
@@ -41,6 +50,9 @@ pub const MAX_FRAME: usize = 64 << 20;
 
 /// Body tag of the optional deadline header that wraps a frame's kind.
 const DEADLINE_TAG: u8 = 13;
+
+/// Body tag of the optional model-version header (registry handshake).
+const MODEL_VERSION_TAG: u8 = 15;
 
 /// Frame payload kinds.
 #[derive(Debug, Clone, PartialEq)]
@@ -130,6 +142,21 @@ pub enum FrameKind {
         /// Human-readable shed reason.
         message: String,
     },
+    /// Model-version mismatch reply: the request declared a
+    /// `model_version` (tag-15 header) the server is not serving. Fatal
+    /// until the edge resyncs from the registry — decoding features
+    /// against the wrong tail would silently produce garbage logits, so
+    /// the server refuses before admission. Distinct from
+    /// [`FrameKind::ServerError`] so the session layer maps it onto
+    /// [`crate::error::Error::VersionSkew`] without string matching.
+    VersionSkew {
+        /// The server's currently active model version.
+        active: u64,
+        /// The version the request declared and the server rejected.
+        offered: u64,
+        /// Human-readable context.
+        message: String,
+    },
 }
 
 /// One framed message.
@@ -142,6 +169,12 @@ pub struct Frame {
     /// pre-deadline wire format). Attached by the session layer so the
     /// cloud's admission control can shed provably unmeetable work.
     pub deadline_ms: Option<u32>,
+    /// Model version the request's features were produced against
+    /// (`None` = legacy wire, byte-identical to the pre-registry
+    /// format). Attached by the session layer; a server pinned to a
+    /// different version answers [`FrameKind::VersionSkew`] instead of
+    /// decoding against the wrong tail.
+    pub model_version: Option<u64>,
     /// Payload.
     pub kind: FrameKind,
 }
@@ -185,15 +218,21 @@ fn read_bytes(buf: &[u8], pos: &mut usize) -> Result<Vec<u8>> {
 }
 
 impl Frame {
-    /// A frame with no deadline header (byte-identical to the
-    /// pre-deadline wire format).
+    /// A frame with no optional headers (byte-identical to the
+    /// pre-deadline, pre-registry wire format).
     pub fn new(request_id: u64, kind: FrameKind) -> Self {
-        Frame { request_id, deadline_ms: None, kind }
+        Frame { request_id, deadline_ms: None, model_version: None, kind }
     }
 
     /// Attach a deadline header (remaining budget in milliseconds).
     pub fn with_deadline(mut self, deadline_ms: u32) -> Self {
         self.deadline_ms = Some(deadline_ms);
+        self
+    }
+
+    /// Attach a model-version header (registry handshake).
+    pub fn with_model_version(mut self, model_version: u64) -> Self {
+        self.model_version = Some(model_version);
         self
     }
 
@@ -251,6 +290,12 @@ impl Frame {
                 body.extend_from_slice(&retry_after_ms.to_le_bytes());
                 write_str(body, message);
             }
+            FrameKind::VersionSkew { active, offered, message } => {
+                body.push(16);
+                body.extend_from_slice(&active.to_le_bytes());
+                body.extend_from_slice(&offered.to_le_bytes());
+                write_str(body, message);
+            }
         }
     }
 
@@ -261,6 +306,10 @@ impl Frame {
         if let Some(deadline) = self.deadline_ms {
             body.push(DEADLINE_TAG);
             body.extend_from_slice(&deadline.to_le_bytes());
+        }
+        if let Some(version) = self.model_version {
+            body.push(MODEL_VERSION_TAG);
+            body.extend_from_slice(&version.to_le_bytes());
         }
         Self::write_kind(&self.kind, &mut body);
         let crc = crc32::hash(&body);
@@ -278,20 +327,42 @@ impl Frame {
             return Err(Error::protocol("frame body too short"));
         }
         let request_id = u64::from_le_bytes(body[0..8].try_into().unwrap());
-        let mut tag = body[8];
-        let mut pos = 9usize;
+        let mut pos = 8usize;
         let mut deadline_ms = None;
-        if tag == DEADLINE_TAG {
-            if pos + 5 > body.len() {
-                return Err(Error::protocol("deadline header truncated"));
+        let mut model_version = None;
+        // Optional headers wrap the kind and may appear in either order
+        // (a peer is free to reorder); duplicates are a framing error.
+        let tag = loop {
+            let tag = *body
+                .get(pos)
+                .ok_or_else(|| Error::protocol("frame body too short"))?;
+            pos += 1;
+            match tag {
+                DEADLINE_TAG => {
+                    if deadline_ms.is_some() {
+                        return Err(Error::protocol("nested deadline header"));
+                    }
+                    if pos + 4 > body.len() {
+                        return Err(Error::protocol("deadline header truncated"));
+                    }
+                    deadline_ms =
+                        Some(u32::from_le_bytes(body[pos..pos + 4].try_into().unwrap()));
+                    pos += 4;
+                }
+                MODEL_VERSION_TAG => {
+                    if model_version.is_some() {
+                        return Err(Error::protocol("nested model-version header"));
+                    }
+                    if pos + 8 > body.len() {
+                        return Err(Error::protocol("model-version header truncated"));
+                    }
+                    model_version =
+                        Some(u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap()));
+                    pos += 8;
+                }
+                other => break other,
             }
-            deadline_ms = Some(u32::from_le_bytes(body[pos..pos + 4].try_into().unwrap()));
-            tag = body[pos + 4];
-            pos += 5;
-            if tag == DEADLINE_TAG {
-                return Err(Error::protocol("nested deadline header"));
-            }
-        }
+        };
         let kind = match tag {
             0 => FrameKind::Ping,
             1 => FrameKind::Pong,
@@ -361,12 +432,21 @@ impl Frame {
                 pos += 4;
                 FrameKind::Busy { retry_after_ms, message: read_str(body, &mut pos)? }
             }
+            16 => {
+                if pos + 16 > body.len() {
+                    return Err(Error::protocol("version-skew body truncated"));
+                }
+                let active = u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
+                let offered = u64::from_le_bytes(body[pos + 8..pos + 16].try_into().unwrap());
+                pos += 16;
+                FrameKind::VersionSkew { active, offered, message: read_str(body, &mut pos)? }
+            }
             t => return Err(Error::protocol(format!("unknown frame tag {t}"))),
         };
         if pos != body.len() {
             return Err(Error::protocol("trailing bytes in frame"));
         }
-        Ok(Frame { request_id, deadline_ms, kind })
+        Ok(Frame { request_id, deadline_ms, model_version, kind })
     }
 
     /// Parse a full wire message (length prefix + body + crc). Returns
@@ -422,7 +502,15 @@ mod tests {
         assert_eq!(used, wire.len());
         assert_eq!(back, f);
         // The same kind wrapped in a deadline header roundtrips too.
-        let f = Frame::new(78, kind).with_deadline(12_345);
+        let f = Frame::new(78, kind.clone()).with_deadline(12_345);
+        let (back, _) = Frame::from_wire(&f.to_wire()).unwrap();
+        assert_eq!(back, f);
+        // And with a model-version header, alone and alongside the
+        // deadline header.
+        let f = Frame::new(79, kind.clone()).with_model_version(u64::MAX);
+        let (back, _) = Frame::from_wire(&f.to_wire()).unwrap();
+        assert_eq!(back, f);
+        let f = Frame::new(80, kind).with_deadline(250).with_model_version(3);
         let (back, _) = Frame::from_wire(&f.to_wire()).unwrap();
         assert_eq!(back, f);
     }
@@ -462,6 +550,11 @@ mod tests {
         roundtrip(FrameKind::Shutdown);
         roundtrip(FrameKind::ServerError { message: "boom".into() });
         roundtrip(FrameKind::Busy { retry_after_ms: 25, message: "inflight cap".into() });
+        roundtrip(FrameKind::VersionSkew {
+            active: 7,
+            offered: 3,
+            message: "resync from registry".into(),
+        });
     }
 
     #[test]
@@ -478,6 +571,80 @@ mod tests {
         assert_eq!(wire.len(), 4 + 14 + 4);
         assert_eq!(wire[12], 13);
         assert_eq!(u32::from_le_bytes(wire[13..17].try_into().unwrap()), 250);
+    }
+
+    #[test]
+    fn no_model_version_is_byte_identical_to_pre_registry_format() {
+        // `model_version: None` must not change a single wire byte.
+        let wire = Frame::new(5, FrameKind::Ping).to_wire();
+        assert_eq!(wire.len(), 4 + 9 + 4);
+        // With a version the body grows by exactly the 9-byte header.
+        let wire = Frame::new(5, FrameKind::Ping).with_model_version(42).to_wire();
+        assert_eq!(wire.len(), 4 + 18 + 4);
+        assert_eq!(wire[12], 15);
+        assert_eq!(u64::from_le_bytes(wire[13..21].try_into().unwrap()), 42);
+        assert_eq!(wire[21], 0, "kind tag follows the header");
+    }
+
+    #[test]
+    fn headers_parse_in_either_order() {
+        // We always emit deadline-then-version, but a peer may reorder;
+        // hand-build the opposite order and check it parses to the same
+        // frame.
+        let mut body = Vec::new();
+        body.extend_from_slice(&9u64.to_le_bytes());
+        body.push(15);
+        body.extend_from_slice(&4u64.to_le_bytes());
+        body.push(13);
+        body.extend_from_slice(&777u32.to_le_bytes());
+        body.push(1); // Pong
+        let f = Frame::from_body(&body).unwrap();
+        assert_eq!(f, Frame::new(9, FrameKind::Pong).with_deadline(777).with_model_version(4));
+    }
+
+    #[test]
+    fn nested_model_version_header_rejected() {
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u64.to_le_bytes());
+        for _ in 0..2 {
+            body.push(15);
+            body.extend_from_slice(&2u64.to_le_bytes());
+        }
+        body.push(0);
+        let err = Frame::from_body(&body).unwrap_err();
+        assert!(err.to_string().contains("nested model-version"), "{err}");
+    }
+
+    #[test]
+    fn truncated_model_version_header_rejected() {
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.push(15);
+        body.extend_from_slice(&[0u8, 0, 0]); // only 3 of the 8 version bytes
+        let err = Frame::from_body(&body).unwrap_err();
+        assert!(err.to_string().contains("model-version header truncated"), "{err}");
+    }
+
+    #[test]
+    fn truncated_version_skew_body_rejected() {
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.push(16);
+        body.extend_from_slice(&5u64.to_le_bytes()); // active only, offered missing
+        let err = Frame::from_body(&body).unwrap_err();
+        assert!(err.to_string().contains("version-skew body truncated"), "{err}");
+    }
+
+    #[test]
+    fn headers_without_kind_rejected() {
+        // A body that ends after the headers (no kind tag) must be a
+        // loud truncation error, not a panic or silent default.
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.push(15);
+        body.extend_from_slice(&2u64.to_le_bytes());
+        let err = Frame::from_body(&body).unwrap_err();
+        assert!(err.to_string().contains("frame body too short"), "{err}");
     }
 
     #[test]

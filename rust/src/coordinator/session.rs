@@ -20,7 +20,15 @@
 //!   fresh transport when the old one is dead;
 //! * **explicit shed handling** — a [`FrameKind::Busy`] reply is turned
 //!   into a bounded wait (honouring the peer's retry-after hint) or a
-//!   clean [`Error::Rejected`] once attempts are exhausted.
+//!   clean [`Error::Rejected`] once attempts are exhausted;
+//! * **model-version handshake** — when pinned via
+//!   [`Session::with_model_version`], every request carries the
+//!   registry's `model_version` header, and a [`FrameKind::VersionSkew`]
+//!   reply is **fatal until resync**: with a
+//!   [`Session::with_resync`] hook installed the session re-fetches
+//!   (once per call) and retries at the server's version; without one it
+//!   surfaces [`Error::VersionSkew`] — never a silent decode against the
+//!   wrong tail.
 //!
 //! The module also hosts the edge-side graceful-degradation policy
 //! ([`DegradePolicy`]/[`DegradeState`]): a pure state machine that steps
@@ -96,7 +104,8 @@ pub fn backoff_with_jitter(attempt: u32, base_ms: u64, cap_ms: u64, rng: &mut Rn
 /// Telemetry (when wired via [`Session::with_metrics`]):
 /// `session.retry_total`, `session.reconnect_total`,
 /// `session.timeout_total`, `session.shed_total`,
-/// `session.stale_replies`, `session.giveup_total`, and the
+/// `session.stale_replies`, `session.giveup_total`,
+/// `session.skew_total`, `session.resync_total`, and the
 /// `session.attempt_ms` latency histogram.
 pub struct Session<T: Transport> {
     transport: T,
@@ -106,6 +115,8 @@ pub struct Session<T: Transport> {
     next_id: u64,
     last_activity: Instant,
     metrics: Option<Arc<Registry>>,
+    model_version: Option<u64>,
+    resync: Option<Box<dyn FnMut(u64) -> Result<u64> + Send>>,
 }
 
 impl<T: Transport> Session<T> {
@@ -120,6 +131,8 @@ impl<T: Transport> Session<T> {
             next_id: 1,
             last_activity: Instant::now(),
             metrics: None,
+            model_version: None,
+            resync: None,
         }
     }
 
@@ -133,6 +146,34 @@ impl<T: Transport> Session<T> {
     /// connection-level failure (and after a failed heartbeat probe).
     pub fn with_connector(mut self, connector: Box<dyn FnMut() -> Result<T> + Send>) -> Self {
         self.connector = Some(connector);
+        self
+    }
+
+    /// Pin the session to a registry `model_version`: every request
+    /// carries the tag-15 header, and a mismatched server answers
+    /// [`FrameKind::VersionSkew`] instead of decoding.
+    pub fn with_model_version(mut self, model_version: u64) -> Self {
+        self.model_version = Some(model_version);
+        self
+    }
+
+    /// Re-pin (or unpin, with `None`) the declared model version —
+    /// typically after a hot-swap on the edge side.
+    pub fn set_model_version(&mut self, model_version: Option<u64>) {
+        self.model_version = model_version;
+    }
+
+    /// Currently pinned model version, if any.
+    pub fn model_version(&self) -> Option<u64> {
+        self.model_version
+    }
+
+    /// Install the resync hook run on a [`FrameKind::VersionSkew`]
+    /// reply: it receives the server's active version and returns the
+    /// version to re-pin to after re-fetching from the registry (at most
+    /// once per `call`; a second skew in the same call is fatal).
+    pub fn with_resync(mut self, resync: Box<dyn FnMut(u64) -> Result<u64> + Send>) -> Self {
+        self.resync = Some(resync);
         self
     }
 
@@ -214,6 +255,9 @@ impl<T: Transport> Session<T> {
             let ms = budget.as_millis().min(u32::MAX as u128) as u32;
             request = request.with_deadline(ms.max(1));
         }
+        if let Some(version) = self.model_version {
+            request = request.with_model_version(version);
+        }
         self.transport.send(&request)?;
         let per_try = Duration::from_millis(self.cfg.try_timeout_ms.max(1))
             .min(budget)
@@ -244,6 +288,7 @@ impl<T: Transport> Session<T> {
         self.heartbeat();
         let started = Instant::now();
         let mut attempt_no: u32 = 0;
+        let mut resynced = false;
         loop {
             let budget = match self.remaining(started) {
                 Some(left) if left.is_zero() => {
@@ -267,6 +312,28 @@ impl<T: Transport> Session<T> {
                 Ok(Frame { kind: FrameKind::Busy { retry_after_ms, message }, .. }) => {
                     self.bump("session.shed_total");
                     Error::rejected(retry_after_ms as u64, message)
+                }
+                Ok(Frame { kind: FrameKind::VersionSkew { active, offered, message }, .. }) => {
+                    // Skew is fatal until resync: retrying the same
+                    // version meets the same mismatched tail. At most
+                    // one registry re-fetch per call; a second skew (or
+                    // no hook) surfaces as Error::VersionSkew.
+                    self.bump("session.skew_total");
+                    if !resynced && self.resync.is_some() {
+                        resynced = true;
+                        let mut hook = self.resync.take().unwrap();
+                        let refetched = hook(active);
+                        self.resync = Some(hook);
+                        match refetched {
+                            Ok(version) => {
+                                self.model_version = Some(version);
+                                self.bump("session.resync_total");
+                                continue;
+                            }
+                            Err(e) => return Err(e),
+                        }
+                    }
+                    return Err(Error::version_skew(active, offered, message));
                 }
                 Ok(reply) => return Ok(reply),
                 Err(e) => e,
@@ -546,6 +613,102 @@ mod tests {
         let err = s.call(FrameKind::Ping).unwrap_err();
         assert!(matches!(err, Error::Rejected { .. }), "{err}");
         assert_eq!(metrics.get("session.shed_total"), 3, "initial attempt + 2 retries");
+    }
+
+    /// Responder pinned to an active model version: answers Pong only
+    /// when the request declares exactly that version, VersionSkew
+    /// otherwise (the cloud node's pre-admission check in miniature).
+    fn versioned_responder(mut server: impl Transport + Send + 'static, active: u64) {
+        std::thread::spawn(move || {
+            while let Ok(f) = server.recv() {
+                let kind = match f.model_version {
+                    Some(v) if v == active => FrameKind::Pong,
+                    offered => FrameKind::VersionSkew {
+                        active,
+                        offered: offered.unwrap_or(0),
+                        message: "serving a different deployment".into(),
+                    },
+                };
+                let _ = server.send(&Frame::new(f.request_id, kind));
+            }
+        });
+    }
+
+    #[test]
+    fn skew_without_resync_hook_is_fatal_not_retried() {
+        let metrics = Arc::new(Registry::new());
+        let (client, server) = InProcTransport::pair();
+        versioned_responder(server, 5);
+        let mut s = Session::new(client, fast_cfg())
+            .with_metrics(Arc::clone(&metrics))
+            .with_model_version(3);
+        let err = s.call(FrameKind::Ping).unwrap_err();
+        assert!(matches!(err, Error::VersionSkew { active: 5, offered: 3, .. }), "{err}");
+        assert!(!err.is_retryable());
+        assert_eq!(metrics.get("session.skew_total"), 1);
+        assert_eq!(metrics.get("session.retry_total"), 0, "skew must not burn retries");
+    }
+
+    #[test]
+    fn resync_hook_recovers_within_one_call() {
+        let metrics = Arc::new(Registry::new());
+        let (client, server) = InProcTransport::pair();
+        versioned_responder(server, 5);
+        let mut s = Session::new(client, fast_cfg())
+            .with_metrics(Arc::clone(&metrics))
+            .with_model_version(3)
+            .with_resync(Box::new(|active| Ok(active)));
+        let reply = s.call(FrameKind::Ping).unwrap();
+        assert_eq!(reply.kind, FrameKind::Pong);
+        assert_eq!(s.model_version(), Some(5), "session re-pinned to the server's version");
+        assert_eq!(metrics.get("session.skew_total"), 1);
+        assert_eq!(metrics.get("session.resync_total"), 1);
+        // Subsequent calls are already in sync: no further skew.
+        s.call(FrameKind::Ping).unwrap();
+        assert_eq!(metrics.get("session.skew_total"), 1);
+    }
+
+    #[test]
+    fn second_skew_in_same_call_is_fatal() {
+        let metrics = Arc::new(Registry::new());
+        let (client, server) = InProcTransport::pair();
+        versioned_responder(server, 5);
+        // A broken registry mirror hands back yet another stale version:
+        // the session must not resync-loop forever.
+        let mut s = Session::new(client, fast_cfg())
+            .with_metrics(Arc::clone(&metrics))
+            .with_model_version(3)
+            .with_resync(Box::new(|_active| Ok(4)));
+        let err = s.call(FrameKind::Ping).unwrap_err();
+        assert!(matches!(err, Error::VersionSkew { active: 5, offered: 4, .. }), "{err}");
+        assert_eq!(metrics.get("session.skew_total"), 2);
+        assert_eq!(metrics.get("session.resync_total"), 1);
+    }
+
+    #[test]
+    fn failed_resync_surfaces_the_registry_error() {
+        let (client, server) = InProcTransport::pair();
+        versioned_responder(server, 9);
+        let mut s = Session::new(client, fast_cfg())
+            .with_model_version(1)
+            .with_resync(Box::new(|_| Err(Error::artifact("registry unreachable"))));
+        let err = s.call(FrameKind::Ping).unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)), "{err}");
+    }
+
+    #[test]
+    fn legacy_session_sends_no_version_header() {
+        let (client, mut server) = InProcTransport::pair();
+        std::thread::spawn(move || {
+            while let Ok(f) = server.recv() {
+                assert!(f.model_version.is_none(), "unpinned session leaked a version header");
+                let _ = server.send(&Frame::new(f.request_id, FrameKind::Pong));
+            }
+        });
+        let mut s = Session::new(client, fast_cfg());
+        assert_eq!(s.model_version(), None);
+        let reply = s.call(FrameKind::Ping).unwrap();
+        assert_eq!(reply.kind, FrameKind::Pong);
     }
 
     #[test]

@@ -61,6 +61,19 @@ pub enum Error {
         message: String,
     },
 
+    /// Head/tail model deployment versions disagree (the wire's
+    /// `VersionSkew` reply, or a registry/hot-swap version conflict).
+    /// Fatal until the node resyncs from the registry: resending the
+    /// same features meets the same mismatched tail.
+    VersionSkew {
+        /// The peer's (or slot's) currently active model version.
+        active: u64,
+        /// The version that was offered/requested and rejected.
+        offered: u64,
+        /// Human-readable context.
+        message: String,
+    },
+
     /// Configuration file / CLI parsing problems.
     Config(String),
 
@@ -89,6 +102,9 @@ impl fmt::Display for Error {
             Error::Timeout(m) => write!(f, "timeout: {m}"),
             Error::Rejected { retry_after_ms, message } => {
                 write!(f, "rejected (retry after {retry_after_ms} ms): {message}")
+            }
+            Error::VersionSkew { active, offered, message } => {
+                write!(f, "model version skew (active v{active}, offered v{offered}): {message}")
             }
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Json { offset, msg } => write!(f, "json error at byte {offset}: {msg}"),
@@ -153,6 +169,10 @@ impl Error {
     pub fn rejected(retry_after_ms: u64, msg: impl Into<String>) -> Self {
         Error::Rejected { retry_after_ms, message: msg.into() }
     }
+    /// Shorthand constructor for [`Error::VersionSkew`].
+    pub fn version_skew(active: u64, offered: u64, msg: impl Into<String>) -> Self {
+        Error::VersionSkew { active, offered, message: msg.into() }
+    }
 
     /// True when a retry of the same operation can plausibly succeed.
     ///
@@ -183,6 +203,7 @@ impl Error {
             | Error::Artifact(_)
             | Error::Runtime(_)
             | Error::Protocol(_)
+            | Error::VersionSkew { .. }
             | Error::Config(_)
             | Error::Json { .. } => false,
         }
@@ -219,6 +240,16 @@ mod tests {
         assert!(!Error::protocol("peer predates dtype tagging").is_retryable());
         assert!(!Error::codec("state underflow").is_retryable());
         assert!(!Error::config("bad key").is_retryable());
+        assert!(!Error::version_skew(3, 2, "edge head is behind").is_retryable());
+    }
+
+    #[test]
+    fn version_skew_display_names_both_versions() {
+        let e = Error::version_skew(5, 4, "resync from registry");
+        assert_eq!(
+            e.to_string(),
+            "model version skew (active v5, offered v4): resync from registry"
+        );
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //! * `optimize`      — run Algorithm 1 on a feature tensor, print Ñ.
 //! * `accuracy`      — Table-2 style accuracy sweep for one model route.
 //! * `stats`         — fetch a cloud node's metrics snapshot.
+//! * `registry`      — publish/fetch/verify signed model deployments
+//!   (`registry publish|fetch|verify`, keyed by `--set registry.key=…`).
 //! * `version`       — print the version.
 //!
 //! Global flags: `--config <file.json>` and repeated `--set key=value`
@@ -237,6 +239,99 @@ fn cmd_accuracy(cfg: &AppConfig, rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_registry(cfg: &AppConfig, rest: &[String]) -> Result<()> {
+    use rans_sc::runtime::registry::{
+        ChunkStore, DeployParams, HmacSha256Signer, RegistryManifest, DEFAULT_CHUNK_LEN,
+    };
+    let usage = || {
+        rans_sc::Error::config(
+            "usage: registry publish <model> <version> <head-file> <tail-file> | \
+             registry fetch <model> [version] | registry verify <model> [version]",
+        )
+    };
+    let sub = rest.first().map(String::as_str).ok_or_else(usage)?;
+    if cfg.registry.key.is_empty() {
+        return Err(rans_sc::Error::config(
+            "registry.key is not set (--set registry.key=…): refusing to sign or \
+             verify with an empty key",
+        ));
+    }
+    let signer =
+        HmacSha256Signer::new(cfg.registry.key.as_bytes(), cfg.registry.key_id.clone());
+    let store = ChunkStore::open(&cfg.registry.dir);
+    let parse_version = |s: &String| {
+        s.parse::<u64>()
+            .map_err(|_| rans_sc::Error::config(format!("bad model version '{s}'")))
+    };
+    match sub {
+        "publish" => {
+            let (model, version, head_path, tail_path) =
+                match (rest.get(1), rest.get(2), rest.get(3), rest.get(4)) {
+                    (Some(m), Some(v), Some(h), Some(t)) => (m, parse_version(v)?, h, t),
+                    _ => return Err(usage()),
+                };
+            let read = |p: &String| {
+                std::fs::read(p)
+                    .map_err(|e| rans_sc::Error::artifact(format!("{p}: read failed: {e}")))
+            };
+            let head_bytes = read(head_path)?;
+            let tail_bytes = read(tail_path)?;
+            let manifest = RegistryManifest {
+                model: model.clone(),
+                model_version: version,
+                deploy: DeployParams {
+                    sl: cfg.sl,
+                    batch: cfg.batch,
+                    q: cfg.q,
+                    lanes: cfg.lanes,
+                    states: cfg.states,
+                    dtype: cfg.dtype.name().into(),
+                },
+                head: store.put_artifact(&head_bytes, DEFAULT_CHUNK_LEN)?,
+                tail: store.put_artifact(&tail_bytes, DEFAULT_CHUNK_LEN)?,
+            };
+            let path = store.publish(&manifest, &signer)?;
+            println!(
+                "published {model} v{version} ({} + {} bytes, {} chunks) -> {}",
+                head_bytes.len(),
+                tail_bytes.len(),
+                manifest.head.chunks.len() + manifest.tail.chunks.len(),
+                path.display()
+            );
+        }
+        "fetch" => {
+            let model = rest.get(1).ok_or_else(usage)?;
+            let version = rest.get(2).map(parse_version).transpose()?;
+            let dep = store.fetch(model, version, &signer)?;
+            println!(
+                "fetched {} v{}: head {} B, tail {} B (every byte verified)",
+                dep.manifest.model,
+                dep.manifest.model_version,
+                dep.head.len(),
+                dep.tail.len()
+            );
+            let d = &dep.manifest.deploy;
+            println!(
+                "deploy params: sl={} batch={} q={} lanes={} states={} dtype={}",
+                d.sl, d.batch, d.q, d.lanes, d.states, d.dtype
+            );
+        }
+        "verify" => {
+            let model = rest.get(1).ok_or_else(usage)?;
+            let version = rest.get(2).map(parse_version).transpose()?;
+            let manifest = store.load_manifest(model, version, &signer)?;
+            let head = store.verify_artifact(&manifest.head)?;
+            let tail = store.verify_artifact(&manifest.tail)?;
+            println!(
+                "verified {} v{}: signature ok, head {head} B ok, tail {tail} B ok",
+                manifest.model, manifest.model_version
+            );
+        }
+        _ => return Err(usage()),
+    }
+    Ok(())
+}
+
 fn cmd_stats(cfg: &AppConfig) -> Result<()> {
     use rans_sc::coordinator::{Frame, FrameKind, Transport};
     let mut t = connect_tcp(&cfg.addr)?;
@@ -275,6 +370,15 @@ COMMANDS:
   optimize           run Algorithm 1 (reshape search) and print Ñ vs N*
   accuracy [N]       accuracy sweep over Q for the configured model
   stats              fetch cloud metrics snapshot
+  registry publish <model> <version> <head> <tail>
+                     chunk, hash, sign, and store a deployment
+                     (key via --set registry.key=…, root via
+                     --set registry.dir=…)
+  registry fetch <model> [version]
+                     fetch a deployment, verifying signature and
+                     every chunk's SHA-256 while streaming
+  registry verify <model> [version]
+                     verify a stored deployment without keeping it
   version            print version
 ",
         rans_sc::version()
@@ -310,6 +414,7 @@ fn main() -> ExitCode {
         "optimize" => cmd_optimize(&args.cfg),
         "accuracy" => cmd_accuracy(&args.cfg, &args.rest),
         "stats" => cmd_stats(&args.cfg),
+        "registry" => cmd_registry(&args.cfg, &args.rest),
         "version" => {
             println!("rans-sc {}", rans_sc::version());
             Ok(())

@@ -130,7 +130,10 @@ pub struct Manifest {
 }
 
 impl Manifest {
-    /// Load `<dir>/manifest.json`.
+    /// Load `<dir>/manifest.json`. Every failure names the offending
+    /// file: "absent" (with the `make artifacts` hint), "malformed
+    /// JSON" (with the parser's position context), and schema errors
+    /// are three different problems and must read as such.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
@@ -140,8 +143,11 @@ impl Manifest {
                 path.display()
             ))
         })?;
-        let v = json::parse(&text)?;
+        let v = json::parse(&text).map_err(|e| {
+            Error::artifact(format!("{}: malformed JSON: {e}", path.display()))
+        })?;
         Self::from_value(&v, dir)
+            .map_err(|e| Error::artifact(format!("{}: {e}", path.display())))
     }
 
     /// Parse from a JSON value (tests use this directly).
@@ -299,5 +305,64 @@ mod tests {
     fn wrong_version_rejected() {
         let v = json::parse(r#"{"version": 9, "seed": 1, "vision": [], "lm": []}"#).unwrap();
         assert!(Manifest::from_value(&v, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn out_of_range_split_lookup_names_the_request() {
+        let v = json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_value(&v, PathBuf::new()).unwrap();
+        let ve = m.vision_entry("resnet_mini_synth_a").unwrap();
+        for (sl, batch) in [(3usize, 1usize), (2, 9), (0, 0)] {
+            let err = ve.split(sl, batch).unwrap_err().to_string();
+            assert!(
+                err.contains(&format!("SL{sl} batch {batch}"))
+                    && err.contains("resnet_mini_synth_a"),
+                "lookup ({sl},{batch}) must name itself and the entry: {err}"
+            );
+        }
+    }
+
+    /// A scratch dir for the `load` tests (no tempfile crate offline).
+    fn scratch(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("rans_sc_manifest_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn load_names_the_path_on_malformed_json() {
+        let dir = scratch("badjson");
+        std::fs::write(dir.join("manifest.json"), "{\"version\": 1, ").unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(
+            err.contains("manifest.json") && err.contains("malformed JSON"),
+            "must name the file and the failure class: {err}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_names_the_path_on_schema_errors() {
+        let dir = scratch("badschema");
+        // Valid JSON, but the manifest schema is incomplete.
+        std::fs::write(dir.join("manifest.json"), r#"{"version": 1, "seed": 1}"#).unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("manifest.json"), "schema errors must carry the path: {err}");
+        assert!(!err.contains("malformed JSON"), "schema != syntax: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_distinguishes_absent_from_corrupt() {
+        let dir = scratch("absent");
+        let err = Manifest::load(dir.join("nope")).unwrap_err().to_string();
+        assert!(
+            err.contains("cannot read") && err.contains("make artifacts"),
+            "absent manifest keeps the build hint: {err}"
+        );
+        assert!(!err.contains("malformed"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -9,14 +9,20 @@
 //! * [`split_model`] — typed head/tail pairs for vision and LM models,
 //!   including the quantized (Pallas epilogue/prologue) and raw float
 //!   variants.
+//! * [`registry`] — the signed, content-addressed deployment path:
+//!   chunked artifacts with streaming SHA-256 verification, signed
+//!   manifests binding halves + serving params + a monotonic
+//!   `model_version`, and the atomic hot-swap slot.
 
 pub mod executor;
 pub mod manifest;
 pub mod pool;
+pub mod registry;
 pub mod split_model;
 pub mod xla_stub;
 
 pub use executor::{Engine, Executable};
 pub use manifest::{LmEntry, Manifest, SplitEntry, VisionEntry};
 pub use pool::ExecPool;
+pub use registry::{ChunkStore, HmacSha256Signer, ModelSlot, RegistryManifest, SignedManifest};
 pub use split_model::{LmSplitExec, VisionSplitExec};

@@ -1,0 +1,386 @@
+//! The registry's deployable unit: a signed manifest binding the model
+//! halves, the serving parameters, and a monotonic `model_version`.
+//!
+//! Two layers:
+//!
+//! * [`RegistryManifest`] — the inner document: model name, version,
+//!   [`DeployParams`] (the `EdgeConfig`-shaped serving knobs both halves
+//!   were exported for), and one [`ArtifactDescriptor`] per half listing
+//!   the content-addressed chunks.
+//! * [`SignedManifest`] — the on-disk wrapper `{algo, key_id,
+//!   signature, manifest}`. The inner document travels as an **embedded
+//!   JSON string** and the HMAC covers exactly those raw string bytes,
+//!   so verification never depends on re-serializing JSON canonically —
+//!   what was signed is byte-for-byte what is checked.
+
+use crate::error::{Error, Result};
+use crate::runtime::registry::signer::Signer;
+use crate::util::json::{self, ObjBuilder, Value};
+use crate::util::sha256;
+
+/// Serving parameters a (head, tail) pair was exported for. Mirrors the
+/// `EdgeConfig` knobs that change the wire format or the tensor shapes;
+/// a fetched deployment reconstructs its edge/cloud config from these.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeployParams {
+    /// Split layer index.
+    pub sl: usize,
+    /// Batch size the halves were lowered for.
+    pub batch: usize,
+    /// AIQ bit-width `Q`.
+    pub q: u8,
+    /// rANS lanes.
+    pub lanes: usize,
+    /// Interleaved states per lane (1 = v1 scalar layout).
+    pub states: usize,
+    /// Feature dtype on the wire: `"f32"`, `"f16"` or `"bf16"`.
+    pub dtype: String,
+}
+
+impl DeployParams {
+    /// Paper-default parameters at bit-width `q`.
+    pub fn paper(q: u8) -> Self {
+        DeployParams { sl: 0, batch: 1, q, lanes: 8, states: 1, dtype: "f32".into() }
+    }
+
+    fn to_value(&self) -> Value {
+        ObjBuilder::new()
+            .field("sl", self.sl)
+            .field("batch", self.batch)
+            .field("q", self.q as usize)
+            .field("lanes", self.lanes)
+            .field("states", self.states)
+            .field("dtype", self.dtype.as_str())
+            .build()
+    }
+
+    fn from_value(v: &Value) -> Result<Self> {
+        let q = v.usize_field("q")?;
+        if q == 0 || q > 16 {
+            return Err(Error::corrupt(format!("deploy params: Q={q} out of range 1..=16")));
+        }
+        Ok(DeployParams {
+            sl: v.usize_field("sl")?,
+            batch: v.usize_field("batch")?,
+            q: q as u8,
+            lanes: v.usize_field("lanes")?,
+            states: v.usize_field("states")?,
+            dtype: v.str_field("dtype")?.to_string(),
+        })
+    }
+}
+
+/// One content-addressed chunk of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkRef {
+    /// Payload length in bytes.
+    pub len: u64,
+    /// Lowercase hex SHA-256 of the payload (also its store address).
+    pub sha256: String,
+}
+
+/// A whole model half: total length, whole-artifact digest, and the
+/// ordered chunk list. The double digesting (per chunk + whole) means a
+/// fetch rejects a corrupt chunk *before* requesting the next one and
+/// still proves end-to-end integrity of the reassembled artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactDescriptor {
+    pub len: u64,
+    pub sha256: String,
+    pub chunks: Vec<ChunkRef>,
+}
+
+impl ArtifactDescriptor {
+    /// Parse the hex digest, rejecting malformed addresses loudly.
+    pub fn digest(&self) -> Result<[u8; 32]> {
+        parse_digest(&self.sha256, "artifact digest")
+    }
+
+    fn to_value(&self) -> Value {
+        let chunks: Vec<Value> = self
+            .chunks
+            .iter()
+            .map(|c| {
+                ObjBuilder::new()
+                    .field("len", c.len as usize)
+                    .field("sha256", c.sha256.as_str())
+                    .build()
+            })
+            .collect();
+        ObjBuilder::new()
+            .field("len", self.len as usize)
+            .field("sha256", self.sha256.as_str())
+            .field("chunks", chunks)
+            .build()
+    }
+
+    fn from_value(v: &Value) -> Result<Self> {
+        let chunks = v
+            .req("chunks")?
+            .as_arr()
+            .ok_or_else(|| Error::corrupt("artifact descriptor: 'chunks' is not an array"))?
+            .iter()
+            .map(|c| {
+                Ok(ChunkRef {
+                    len: c.usize_field("len")? as u64,
+                    sha256: c.str_field("sha256")?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let desc = ArtifactDescriptor {
+            len: v.usize_field("len")? as u64,
+            sha256: v.str_field("sha256")?.to_string(),
+            chunks,
+        };
+        let sum: u64 = desc.chunks.iter().map(|c| c.len).sum();
+        if sum != desc.len {
+            return Err(Error::corrupt(format!(
+                "artifact descriptor: chunk lengths sum to {sum}, artifact says {}",
+                desc.len
+            )));
+        }
+        desc.digest()?;
+        for c in &desc.chunks {
+            parse_digest(&c.sha256, "chunk digest")?;
+        }
+        Ok(desc)
+    }
+}
+
+/// Parse a 64-hex-char SHA-256 digest field.
+pub fn parse_digest(hex: &str, what: &str) -> Result<[u8; 32]> {
+    let bytes = sha256::from_hex(hex)
+        .filter(|b| b.len() == 32)
+        .ok_or_else(|| Error::corrupt(format!("{what}: malformed sha256 hex '{hex}'")))?;
+    let mut out = [0u8; 32];
+    out.copy_from_slice(&bytes);
+    Ok(out)
+}
+
+/// The inner (signed) manifest document.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegistryManifest {
+    pub model: String,
+    /// Monotonically increasing deployment version; the protocol's
+    /// `ModelVersion` handshake field carries this number.
+    pub model_version: u64,
+    pub deploy: DeployParams,
+    pub head: ArtifactDescriptor,
+    pub tail: ArtifactDescriptor,
+}
+
+/// Registry manifest format version (independent of the artifact
+/// `manifest.json` loaded by [`crate::runtime::Manifest`]).
+pub const REGISTRY_FORMAT: usize = 1;
+
+impl RegistryManifest {
+    /// Serialize to the canonical-enough JSON text that gets signed.
+    /// Only this exact string is ever verified, so writer stability
+    /// across versions is a non-goal by design.
+    pub fn to_json_text(&self) -> String {
+        ObjBuilder::new()
+            .field("format", REGISTRY_FORMAT)
+            .field("model", self.model.as_str())
+            .field("model_version", self.model_version as usize)
+            .field("deploy", self.deploy.to_value())
+            .field("head", self.head.to_value())
+            .field("tail", self.tail.to_value())
+            .build()
+            .to_string_compact()
+    }
+
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let v = json::parse(text)
+            .map_err(|e| Error::corrupt(format!("registry manifest: {e}")))?;
+        let format = v.usize_field("format")?;
+        if format != REGISTRY_FORMAT {
+            return Err(Error::corrupt(format!(
+                "registry manifest format {format} unsupported (want {REGISTRY_FORMAT})"
+            )));
+        }
+        let version = v.f64_field("model_version")?;
+        if version < 1.0 || version.fract() != 0.0 {
+            return Err(Error::corrupt(format!(
+                "registry manifest: model_version {version} must be a positive integer"
+            )));
+        }
+        Ok(RegistryManifest {
+            model: v.str_field("model")?.to_string(),
+            model_version: version as u64,
+            deploy: DeployParams::from_value(v.req("deploy")?)?,
+            head: ArtifactDescriptor::from_value(v.req("head")?)?,
+            tail: ArtifactDescriptor::from_value(v.req("tail")?)?,
+        })
+    }
+}
+
+/// The signed on-disk wrapper. `manifest_text` is the exact byte string
+/// the signature covers.
+#[derive(Debug, Clone)]
+pub struct SignedManifest {
+    pub algo: String,
+    pub key_id: String,
+    pub signature: Vec<u8>,
+    pub manifest_text: String,
+}
+
+impl SignedManifest {
+    /// Sign `manifest` with `signer`, producing the wrapper to store.
+    pub fn seal(manifest: &RegistryManifest, signer: &dyn Signer) -> Self {
+        let text = manifest.to_json_text();
+        SignedManifest {
+            algo: signer.algo().to_string(),
+            key_id: signer.key_id().to_string(),
+            signature: signer.sign(text.as_bytes()),
+            manifest_text: text,
+        }
+    }
+
+    pub fn to_json_text(&self) -> String {
+        ObjBuilder::new()
+            .field("algo", self.algo.as_str())
+            .field("key_id", self.key_id.as_str())
+            .field("signature", sha256::to_hex(&self.signature))
+            .field("manifest", self.manifest_text.as_str())
+            .build()
+            .to_string_compact()
+    }
+
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let v = json::parse(text)
+            .map_err(|e| Error::corrupt(format!("signed manifest: {e}")))?;
+        let sig_hex = v.str_field("signature")?;
+        let signature = sha256::from_hex(sig_hex).ok_or_else(|| {
+            Error::corrupt(format!("signed manifest: malformed signature hex '{sig_hex}'"))
+        })?;
+        Ok(SignedManifest {
+            algo: v.str_field("algo")?.to_string(),
+            key_id: v.str_field("key_id")?.to_string(),
+            signature,
+            manifest_text: v.str_field("manifest")?.to_string(),
+        })
+    }
+
+    /// Check scheme, key id and signature, then parse the inner
+    /// document. Every failure is a fatal typed error — an unsigned or
+    /// tampered manifest must never be deployable.
+    pub fn verify(&self, signer: &dyn Signer) -> Result<RegistryManifest> {
+        if self.algo != signer.algo() {
+            return Err(Error::corrupt(format!(
+                "signed manifest: algo '{}' does not match verifier '{}'",
+                self.algo,
+                signer.algo()
+            )));
+        }
+        if self.key_id != signer.key_id() {
+            return Err(Error::corrupt(format!(
+                "signed manifest: key_id '{}' does not match verifier key '{}'",
+                self.key_id,
+                signer.key_id()
+            )));
+        }
+        if !signer.verify(self.manifest_text.as_bytes(), &self.signature) {
+            return Err(Error::corrupt(
+                "signed manifest: signature verification failed (tampered or wrong key)",
+            ));
+        }
+        RegistryManifest::from_json_text(&self.manifest_text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::registry::signer::HmacSha256Signer;
+
+    fn sample() -> RegistryManifest {
+        let chunk = |len: u64, seed: u8| ChunkRef {
+            len,
+            sha256: sha256::to_hex(&sha256::hash(&[seed])),
+        };
+        RegistryManifest {
+            model: "resnet50".into(),
+            model_version: 3,
+            deploy: DeployParams {
+                sl: 2,
+                batch: 8,
+                q: 4,
+                lanes: 8,
+                states: 4,
+                dtype: "bf16".into(),
+            },
+            head: ArtifactDescriptor {
+                len: 300,
+                sha256: sha256::to_hex(&sha256::hash(b"head")),
+                chunks: vec![chunk(100, 1), chunk(200, 2)],
+            },
+            tail: ArtifactDescriptor {
+                len: 50,
+                sha256: sha256::to_hex(&sha256::hash(b"tail")),
+                chunks: vec![chunk(50, 3)],
+            },
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips_through_json() {
+        let m = sample();
+        let back = RegistryManifest::from_json_text(&m.to_json_text()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn seal_verify_roundtrip() {
+        let signer = HmacSha256Signer::new(b"k".to_vec(), "fleet-1");
+        let sealed = SignedManifest::seal(&sample(), &signer);
+        let wire = sealed.to_json_text();
+        let back = SignedManifest::from_json_text(&wire).unwrap();
+        assert_eq!(back.verify(&signer).unwrap(), sample());
+    }
+
+    #[test]
+    fn every_wrapper_tamper_is_fatal() {
+        let signer = HmacSha256Signer::new(b"k".to_vec(), "fleet-1");
+        let sealed = SignedManifest::seal(&sample(), &signer);
+
+        // Flipped manifest byte (version 3 -> 4 inside the signed text).
+        let mut t = sealed.clone();
+        t.manifest_text = t.manifest_text.replace("\"model_version\":3", "\"model_version\":4");
+        assert_ne!(t.manifest_text, sealed.manifest_text);
+        let err = t.verify(&signer).unwrap_err();
+        assert!(matches!(err, Error::Corrupt { .. }) && !err.is_retryable(), "{err}");
+
+        // Flipped signature bit.
+        let mut t = sealed.clone();
+        t.signature[0] ^= 0x80;
+        assert!(t.verify(&signer).is_err());
+
+        // Wrong key.
+        let other = HmacSha256Signer::new(b"other".to_vec(), "fleet-1");
+        assert!(sealed.verify(&other).is_err());
+
+        // Wrong key id / algo labels.
+        let mut t = sealed.clone();
+        t.key_id = "rotated".into();
+        assert!(t.verify(&signer).is_err());
+        let mut t = sealed.clone();
+        t.algo = "ed25519".into();
+        assert!(t.verify(&signer).is_err());
+    }
+
+    #[test]
+    fn malformed_documents_are_typed_errors() {
+        assert!(RegistryManifest::from_json_text("{not json").is_err());
+        assert!(SignedManifest::from_json_text("[1,2]").is_err());
+        // Version 0 and fractional versions are rejected.
+        let m = sample();
+        let t = m.to_json_text().replace("\"model_version\":3", "\"model_version\":0");
+        assert!(RegistryManifest::from_json_text(&t).is_err());
+        // Chunk lengths must sum to the artifact length.
+        let t = m.to_json_text().replace("\"len\":300", "\"len\":301");
+        assert!(RegistryManifest::from_json_text(&t).is_err());
+        // Malformed digest hex.
+        let t = m.to_json_text().replace(&m.head.sha256, "zz");
+        assert!(RegistryManifest::from_json_text(&t).is_err());
+    }
+}

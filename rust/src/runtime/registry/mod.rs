@@ -1,0 +1,42 @@
+//! Signed, content-addressed split-model registry.
+//!
+//! Production split computing has a fleet-trust problem: thousands of
+//! edges must fetch the right model half, prove every byte of it, and
+//! hot-swap to new versions without dropping in-flight requests. This
+//! module is that deployment path, built failure-first like the PR 7
+//! request path:
+//!
+//! * [`store::ChunkStore`] — content-addressed chunk objects
+//!   (`objects/<aa>/<sha256>.chunk`, CRC-framed) plus signed manifests
+//!   (`manifests/<model>/<version>.json`). Fetches verify
+//!   **incrementally**: each chunk's CRC and SHA-256 address before the
+//!   next chunk is opened ([`sha256_reader::Sha256Reader`] hashes the
+//!   bytes as they stream), then the whole-artifact digest.
+//! * [`manifest::SignedManifest`] — the deployable unit: model halves +
+//!   [`manifest::DeployParams`] (dtype, Q, lanes, states) + a monotonic
+//!   `model_version`, HMAC-signed over the exact manifest bytes behind
+//!   the pluggable [`signer::Signer`] trait.
+//! * [`swap::ModelSlot`] — staged load → smoke verify → atomic pointer
+//!   flip → old version drained; rollback is the absence of a flip.
+//!
+//! The wire side lives in `coordinator`: frames carry an optional
+//! `ModelVersion` header, and a cloud serving a different version
+//! answers `VersionSkew`, which the edge treats as fatal-until-resync
+//! (re-fetch from the registry, never silently decode with the wrong
+//! tail). The tamper wall in `rust/tests/registry_tamper.rs` asserts
+//! every flipped bit and every mismatched pairing is a loud typed
+//! error.
+
+pub mod manifest;
+pub mod sha256_reader;
+pub mod signer;
+pub mod store;
+pub mod swap;
+
+pub use manifest::{
+    ArtifactDescriptor, ChunkRef, DeployParams, RegistryManifest, SignedManifest,
+};
+pub use sha256_reader::Sha256Reader;
+pub use signer::{hmac_sha256, HmacSha256Signer, Signer};
+pub use store::{ChunkStore, Deployment, DEFAULT_CHUNK_LEN};
+pub use swap::{smoke_decode, ModelSlot, SwapCell, Versioned};

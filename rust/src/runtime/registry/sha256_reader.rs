@@ -1,0 +1,167 @@
+//! Incremental digest verification for streaming reads.
+//!
+//! [`Sha256Reader`] wraps any [`Read`] source — a [`std::fs::File`], a
+//! transport-backed stream — and hashes every byte as it passes
+//! through, so an artifact's content address is verified *as the bytes
+//! stream in* rather than after a full buffer lands. Reading past the
+//! declared length fails immediately (a grown file can never sneak
+//! extra bytes past the digest), and [`finish`](Sha256Reader::finish)
+//! checks both the exact length and the digest, returning the typed
+//! [`Error::Corrupt`](crate::error::Error) the tamper wall asserts on.
+
+use std::io::{self, Read};
+
+use crate::error::{Error, Result};
+use crate::util::sha256::{self, Sha256};
+
+/// A [`Read`] adapter that SHA-256-hashes everything it yields and
+/// verifies the stream against an expected `(length, digest)` pair.
+pub struct Sha256Reader<R: Read> {
+    inner: R,
+    hasher: Sha256,
+    read: u64,
+    expect_len: u64,
+    expect: [u8; 32],
+    /// Human context for error messages (chunk address, file path…).
+    what: String,
+}
+
+impl<R: Read> Sha256Reader<R> {
+    pub fn new(inner: R, expect_len: u64, expect: [u8; 32], what: impl Into<String>) -> Self {
+        Sha256Reader {
+            inner,
+            hasher: Sha256::new(),
+            read: 0,
+            expect_len,
+            expect,
+            what: what.into(),
+        }
+    }
+
+    /// Bytes hashed so far.
+    pub fn bytes_read(&self) -> u64 {
+        self.read
+    }
+
+    /// Consume the reader, requiring that exactly `expect_len` bytes
+    /// were read and that they hash to the expected digest. Returns the
+    /// inner reader so callers can keep reading past the verified span
+    /// (e.g. a CRC trailer after a chunk payload).
+    pub fn finish(self) -> Result<R> {
+        let Sha256Reader { inner, hasher, read, expect_len, expect, what } = self;
+        if read != expect_len {
+            return Err(Error::corrupt(format!(
+                "{what}: length mismatch: read {read} bytes, manifest says {expect_len}"
+            )));
+        }
+        let got = hasher.finalize();
+        if !sha256::ct_eq(&got, &expect) {
+            return Err(Error::corrupt(format!(
+                "{what}: sha256 mismatch: streamed {} != expected {}",
+                sha256::to_hex(&got),
+                sha256::to_hex(&expect)
+            )));
+        }
+        Ok(inner)
+    }
+
+    /// Drain the remaining declared bytes into `buf` (appending), then
+    /// [`finish`](Self::finish). The convenience path for fixed-length
+    /// chunk payloads.
+    pub fn read_exact_to_end(mut self, buf: &mut Vec<u8>) -> Result<()> {
+        let want = (self.expect_len - self.read.min(self.expect_len)) as usize;
+        let start = buf.len();
+        buf.resize(start + want, 0);
+        let what = self.what.clone();
+        self.read_exact(&mut buf[start..])
+            .map_err(|e| Error::corrupt(format!("{what}: short read: {e}")))?;
+        self.finish().map(|_| ())
+    }
+}
+
+impl<R: Read> Read for Sha256Reader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.read += n as u64;
+        if self.read > self.expect_len {
+            // Over-length is detectable before the digest: fail now so
+            // a streaming consumer stops pulling corrupt data.
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "{}: stream longer than declared {} bytes",
+                    self.what, self.expect_len
+                ),
+            ));
+        }
+        self.hasher.update(&buf[..n]);
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload() -> Vec<u8> {
+        (0..1000u32).map(|i| (i * 37 + 5) as u8).collect()
+    }
+
+    #[test]
+    fn verifies_good_stream() {
+        let data = payload();
+        let digest = sha256::hash(&data);
+        let mut r = Sha256Reader::new(&data[..], data.len() as u64, digest, "chunk");
+        let mut out = Vec::new();
+        r.read_to_end(&mut out).unwrap();
+        assert_eq!(out, data);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn rejects_flipped_bit() {
+        let mut data = payload();
+        let digest = sha256::hash(&data);
+        data[123] ^= 0x10;
+        let mut r = Sha256Reader::new(&data[..], data.len() as u64, digest, "chunk");
+        let mut out = Vec::new();
+        r.read_to_end(&mut out).unwrap();
+        let err = r.finish().unwrap_err();
+        assert!(matches!(err, Error::Corrupt { .. }), "{err}");
+        assert!(!err.is_retryable());
+        assert!(err.to_string().contains("sha256 mismatch"), "{err}");
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let data = payload();
+        let digest = sha256::hash(&data);
+        let cut = &data[..data.len() - 7];
+        let mut r = Sha256Reader::new(cut, data.len() as u64, digest, "chunk");
+        let mut out = Vec::new();
+        r.read_to_end(&mut out).unwrap();
+        let err = r.finish().unwrap_err();
+        assert!(err.to_string().contains("length mismatch"), "{err}");
+    }
+
+    #[test]
+    fn rejects_overlong_stream_mid_read() {
+        let data = payload();
+        let digest = sha256::hash(&data[..100]);
+        let mut r = Sha256Reader::new(&data[..], 100, digest, "chunk");
+        let mut out = Vec::new();
+        let err = r.read_to_end(&mut out).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn read_exact_to_end_appends_and_verifies() {
+        let data = payload();
+        let digest = sha256::hash(&data);
+        let r = Sha256Reader::new(&data[..], data.len() as u64, digest, "chunk");
+        let mut buf = vec![9u8; 3];
+        r.read_exact_to_end(&mut buf).unwrap();
+        assert_eq!(&buf[..3], &[9, 9, 9]);
+        assert_eq!(&buf[3..], &data[..]);
+    }
+}

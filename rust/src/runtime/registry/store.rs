@@ -1,0 +1,357 @@
+//! Content-addressed chunk store with signed manifests.
+//!
+//! On-disk layout under the registry root:
+//!
+//! ```text
+//! objects/<aa>/<sha256-hex>.chunk      framed chunk, addressed by payload hash
+//! manifests/<model>/<version>.json     SignedManifest wrapper
+//! ```
+//!
+//! Chunk file framing (all little-endian):
+//!
+//! ```text
+//! [4B magic "RGC1"][u32 payload_len][payload bytes][u32 crc32(payload)]
+//! ```
+//!
+//! The CRC is the fast first-line check (same discipline as the RSC2
+//! container's per-chunk CRCs); the SHA-256 content address is the
+//! authenticated one, verified incrementally by
+//! [`Sha256Reader`](super::sha256_reader::Sha256Reader) **as the bytes
+//! stream in** — a corrupt chunk is rejected before the next chunk is
+//! even opened. Writes are atomic (temp file + rename), so a crashed
+//! publish can never leave a half-written object at a valid address.
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Error, Result};
+use crate::runtime::registry::manifest::{
+    ArtifactDescriptor, ChunkRef, RegistryManifest, SignedManifest,
+};
+use crate::runtime::registry::sha256_reader::Sha256Reader;
+use crate::runtime::registry::signer::Signer;
+use crate::util::{crc32, sha256};
+
+/// Chunk file magic.
+const CHUNK_MAGIC: [u8; 4] = *b"RGC1";
+
+/// Default chunk payload size for [`ChunkStore::put_artifact`]: large
+/// enough to amortize per-chunk overhead, small enough that a corrupt
+/// transfer is caught within one chunk of the flip.
+pub const DEFAULT_CHUNK_LEN: usize = 1 << 20;
+
+/// Everything a node needs to run one model version: the verified
+/// manifest plus both halves' bytes.
+#[derive(Debug, Clone)]
+pub struct Deployment {
+    pub manifest: RegistryManifest,
+    pub head: Vec<u8>,
+    pub tail: Vec<u8>,
+}
+
+/// A content-addressed artifact store rooted at one directory.
+pub struct ChunkStore {
+    root: PathBuf,
+}
+
+/// Process-unique suffix counter for atomic temp files.
+static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let dir = path
+        .parent()
+        .ok_or_else(|| Error::invalid(format!("{}: no parent directory", path.display())))?;
+    fs::create_dir_all(dir)
+        .map_err(|e| Error::artifact(format!("{}: mkdir failed: {e}", dir.display())))?;
+    let tmp = dir.join(format!(
+        ".tmp-{}-{}",
+        std::process::id(),
+        TEMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let mut f = fs::File::create(&tmp)
+        .map_err(|e| Error::artifact(format!("{}: create failed: {e}", tmp.display())))?;
+    f.write_all(bytes)
+        .and_then(|_| f.sync_all())
+        .map_err(|e| Error::artifact(format!("{}: write failed: {e}", tmp.display())))?;
+    drop(f);
+    fs::rename(&tmp, path).map_err(|e| {
+        let _ = fs::remove_file(&tmp);
+        Error::artifact(format!("{}: rename failed: {e}", path.display()))
+    })
+}
+
+impl ChunkStore {
+    pub fn open(root: impl Into<PathBuf>) -> Self {
+        ChunkStore { root: root.into() }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Path of the chunk object addressed by `hex`.
+    pub fn chunk_path(&self, hex: &str) -> PathBuf {
+        let shard = &hex[..hex.len().min(2)];
+        self.root.join("objects").join(shard).join(format!("{hex}.chunk"))
+    }
+
+    fn manifest_path(&self, model: &str, version: u64) -> PathBuf {
+        self.root.join("manifests").join(model).join(format!("{version}.json"))
+    }
+
+    /// Store one chunk payload, returning its content address. Already
+    /// stored chunks are deduplicated by address.
+    pub fn put_chunk(&self, payload: &[u8]) -> Result<String> {
+        let hex = sha256::to_hex(&sha256::hash(payload));
+        let path = self.chunk_path(&hex);
+        if path.exists() {
+            return Ok(hex);
+        }
+        let mut framed = Vec::with_capacity(payload.len() + 12);
+        framed.extend_from_slice(&CHUNK_MAGIC);
+        framed.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        framed.extend_from_slice(payload);
+        framed.extend_from_slice(&crc32::hash(payload).to_le_bytes());
+        atomic_write(&path, &framed)?;
+        Ok(hex)
+    }
+
+    /// Fetch and fully verify one chunk: magic and length framing, the
+    /// CRC-32 fast check, and the SHA-256 content address (hashed
+    /// incrementally while reading). Every failure is a typed fatal
+    /// error naming the chunk.
+    pub fn get_chunk(&self, expect: &ChunkRef) -> Result<Vec<u8>> {
+        let digest = super::manifest::parse_digest(&expect.sha256, "chunk address")?;
+        let path = self.chunk_path(&expect.sha256);
+        let file = fs::File::open(&path).map_err(|e| {
+            Error::artifact(format!("chunk {} absent from store: {e}", path.display()))
+        })?;
+        let mut reader = std::io::BufReader::new(file);
+
+        let mut header = [0u8; 8];
+        reader.read_exact(&mut header).map_err(|e| {
+            Error::corrupt(format!("chunk {}: truncated header: {e}", expect.sha256))
+        })?;
+        if header[..4] != CHUNK_MAGIC {
+            return Err(Error::corrupt(format!(
+                "chunk {}: bad magic {:02x?}",
+                expect.sha256,
+                &header[..4]
+            )));
+        }
+        let framed_len = u32::from_le_bytes(header[4..8].try_into().unwrap()) as u64;
+        if framed_len != expect.len {
+            return Err(Error::corrupt(format!(
+                "chunk {}: framed length {framed_len} != manifest length {}",
+                expect.sha256, expect.len
+            )));
+        }
+
+        // Stream the payload through the digest verifier: the hash is
+        // computed while the bytes come off the file, and the verdict
+        // lands before the CRC trailer is even read.
+        let mut hashed = Sha256Reader::new(
+            reader.take(framed_len),
+            framed_len,
+            digest,
+            format!("chunk {}", expect.sha256),
+        );
+        let mut payload = vec![0u8; framed_len as usize];
+        hashed.read_exact(&mut payload).map_err(|e| {
+            Error::corrupt(format!("chunk {}: truncated payload: {e}", expect.sha256))
+        })?;
+        let mut reader = hashed.finish()?.into_inner();
+
+        // The CRC fast check must agree with what was hashed.
+        let mut crc_bytes = [0u8; 4];
+        reader.read_exact(&mut crc_bytes).map_err(|e| {
+            Error::corrupt(format!("chunk {}: truncated crc trailer: {e}", expect.sha256))
+        })?;
+        if u32::from_le_bytes(crc_bytes) != crc32::hash(&payload) {
+            return Err(Error::corrupt(format!(
+                "chunk {}: crc mismatch (framing corrupt)",
+                expect.sha256
+            )));
+        }
+        let mut trailing = [0u8; 1];
+        if reader.read(&mut trailing).unwrap_or(0) != 0 {
+            return Err(Error::corrupt(format!(
+                "chunk {}: trailing bytes after crc",
+                expect.sha256
+            )));
+        }
+        Ok(payload)
+    }
+
+    /// Chunk `bytes` at `chunk_len`, store every chunk, and return the
+    /// descriptor binding the whole artifact.
+    pub fn put_artifact(&self, bytes: &[u8], chunk_len: usize) -> Result<ArtifactDescriptor> {
+        if chunk_len == 0 {
+            return Err(Error::invalid("chunk_len must be > 0"));
+        }
+        let mut chunks = Vec::new();
+        let mut off = 0;
+        while off < bytes.len() || (bytes.is_empty() && chunks.is_empty()) {
+            let end = (off + chunk_len).min(bytes.len());
+            let payload = &bytes[off..end];
+            let hex = self.put_chunk(payload)?;
+            chunks.push(ChunkRef { len: payload.len() as u64, sha256: hex });
+            if end == bytes.len() {
+                break;
+            }
+            off = end;
+        }
+        Ok(ArtifactDescriptor {
+            len: bytes.len() as u64,
+            sha256: sha256::to_hex(&sha256::hash(bytes)),
+            chunks,
+        })
+    }
+
+    /// Reassemble an artifact, verifying incrementally: each chunk's
+    /// CRC + content address before the next chunk is opened, then the
+    /// whole-artifact digest over the reassembly.
+    pub fn read_artifact(&self, desc: &ArtifactDescriptor) -> Result<Vec<u8>> {
+        let whole = desc.digest()?;
+        let mut out = Vec::with_capacity(desc.len as usize);
+        let mut hasher = sha256::Sha256::new();
+        for chunk in &desc.chunks {
+            let payload = self.get_chunk(chunk)?;
+            hasher.update(&payload);
+            out.extend_from_slice(&payload);
+        }
+        if out.len() as u64 != desc.len {
+            return Err(Error::corrupt(format!(
+                "artifact {}: reassembled {} bytes, manifest says {}",
+                desc.sha256,
+                out.len(),
+                desc.len
+            )));
+        }
+        if !sha256::ct_eq(&hasher.finalize(), &whole) {
+            return Err(Error::corrupt(format!(
+                "artifact {}: whole-artifact sha256 mismatch",
+                desc.sha256
+            )));
+        }
+        Ok(out)
+    }
+
+    /// [`read_artifact`](Self::read_artifact) without keeping the
+    /// bytes; returns the number of bytes verified (the CLI `verify`
+    /// path and the `registry_verify_mbps` bench).
+    pub fn verify_artifact(&self, desc: &ArtifactDescriptor) -> Result<u64> {
+        Ok(self.read_artifact(desc)?.len() as u64)
+    }
+
+    /// Highest published version for `model`, or `None` when the model
+    /// has no manifests yet.
+    pub fn latest_version(&self, model: &str) -> Result<Option<u64>> {
+        let dir = self.root.join("manifests").join(model);
+        let entries = match fs::read_dir(&dir) {
+            Ok(e) => e,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(Error::artifact(format!("{}: read_dir failed: {e}", dir.display())))
+            }
+        };
+        let mut latest = None;
+        for entry in entries {
+            let entry =
+                entry.map_err(|e| Error::artifact(format!("{}: {e}", dir.display())))?;
+            let name = entry.file_name();
+            let Some(stem) = name.to_str().and_then(|n| n.strip_suffix(".json")) else {
+                continue;
+            };
+            if let Ok(v) = stem.parse::<u64>() {
+                latest = Some(latest.map_or(v, |l: u64| l.max(v)));
+            }
+        }
+        Ok(latest)
+    }
+
+    /// Sign and store `manifest`, enforcing the monotonic version
+    /// contract: publishing a version at or below the registry's
+    /// current latest is a loud typed error, never an overwrite.
+    pub fn publish(&self, manifest: &RegistryManifest, signer: &dyn Signer) -> Result<PathBuf> {
+        if manifest.model_version == 0 {
+            return Err(Error::invalid("model_version 0 is reserved for unversioned serving"));
+        }
+        if let Some(latest) = self.latest_version(&manifest.model)? {
+            if manifest.model_version <= latest {
+                return Err(Error::invalid(format!(
+                    "stale model_version {} for '{}': registry is already at {latest}",
+                    manifest.model_version, manifest.model
+                )));
+            }
+        }
+        let sealed = SignedManifest::seal(manifest, signer);
+        let path = self.manifest_path(&manifest.model, manifest.model_version);
+        atomic_write(&path, sealed.to_json_text().as_bytes())?;
+        Ok(path)
+    }
+
+    /// Load and verify a manifest: signature, then inner parse, then
+    /// the filename/content binding (a stale signed manifest copied
+    /// over a newer version slot is caught here).
+    pub fn load_manifest(
+        &self,
+        model: &str,
+        version: Option<u64>,
+        signer: &dyn Signer,
+    ) -> Result<RegistryManifest> {
+        let version = match version {
+            Some(v) => v,
+            None => self.latest_version(model)?.ok_or_else(|| {
+                Error::artifact(format!(
+                    "no manifest published for model '{model}' in {}",
+                    self.root.display()
+                ))
+            })?,
+        };
+        let path = self.manifest_path(model, version);
+        let text = fs::read_to_string(&path).map_err(|e| {
+            Error::artifact(format!("manifest absent: {}: {e}", path.display()))
+        })?;
+        let manifest = SignedManifest::from_json_text(&text)
+            .map_err(|e| Error::corrupt(format!("{}: {e}", path.display())))?
+            .verify(signer)
+            .map_err(|e| Error::corrupt(format!("{}: {e}", path.display())))?;
+        if manifest.model != model {
+            return Err(Error::corrupt(format!(
+                "{}: manifest is for model '{}', expected '{model}'",
+                path.display(),
+                manifest.model
+            )));
+        }
+        if manifest.model_version != version {
+            return Err(Error::version_skew(
+                version,
+                manifest.model_version,
+                format!(
+                    "{}: embedded model_version {} does not match version slot {version} \
+                     (stale manifest?)",
+                    path.display(),
+                    manifest.model_version
+                ),
+            ));
+        }
+        Ok(manifest)
+    }
+
+    /// Full fetch: verified manifest + both halves, every byte checked
+    /// while streaming.
+    pub fn fetch(
+        &self,
+        model: &str,
+        version: Option<u64>,
+        signer: &dyn Signer,
+    ) -> Result<Deployment> {
+        let manifest = self.load_manifest(model, version, signer)?;
+        let head = self.read_artifact(&manifest.head)?;
+        let tail = self.read_artifact(&manifest.tail)?;
+        Ok(Deployment { manifest, head, tail })
+    }
+}

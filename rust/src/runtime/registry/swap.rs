@@ -1,0 +1,196 @@
+//! Atomic hot-swap: staged load → verify → pointer flip → drain.
+//!
+//! [`SwapCell`] is a hand-rolled `ArcSwap` (a `Mutex<Arc<T>>` — the
+//! offline container has no external crates): readers clone the `Arc`
+//! under a short lock and then run lock-free on their snapshot, so an
+//! in-flight request keeps serving the version it started on while a
+//! swap lands. The old version drains naturally as those `Arc`s drop.
+//!
+//! [`ModelSlot`] layers the deployment state machine on top: versions
+//! are strictly monotonic, and the smoke check runs on the **staged**
+//! value *before* the flip — on any verification or smoke failure the
+//! previous version simply keeps serving (rollback is the absence of a
+//! flip, so there is no window where a bad model is live).
+
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::runtime::registry::manifest::DeployParams;
+
+/// Atomic shared pointer with copy-on-swap semantics.
+pub struct SwapCell<T> {
+    cur: Mutex<Arc<T>>,
+}
+
+impl<T> SwapCell<T> {
+    pub fn new(value: T) -> Self {
+        SwapCell { cur: Mutex::new(Arc::new(value)) }
+    }
+
+    /// Snapshot the current value. The returned `Arc` stays valid (and
+    /// the value it points to stays alive) across any number of
+    /// subsequent swaps.
+    pub fn load(&self) -> Arc<T> {
+        Arc::clone(&self.cur.lock().unwrap())
+    }
+
+    /// Install `next`, returning the previous value.
+    pub fn swap(&self, next: Arc<T>) -> Arc<T> {
+        std::mem::replace(&mut *self.cur.lock().unwrap(), next)
+    }
+}
+
+/// One model version plus its payload.
+#[derive(Debug)]
+pub struct Versioned<T> {
+    /// Monotonic deployment version; 0 = unversioned (legacy serving,
+    /// no skew checks on the wire).
+    pub version: u64,
+    pub value: T,
+}
+
+/// The serving slot a node reads its active model from.
+pub struct ModelSlot<T> {
+    cell: SwapCell<Versioned<T>>,
+}
+
+impl<T> ModelSlot<T> {
+    pub fn new(version: u64, value: T) -> Self {
+        ModelSlot { cell: SwapCell::new(Versioned { version, value }) }
+    }
+
+    /// Snapshot the active deployment.
+    pub fn active(&self) -> Arc<Versioned<T>> {
+        self.cell.load()
+    }
+
+    /// Active version (0 = unversioned).
+    pub fn version(&self) -> u64 {
+        self.cell.load().version
+    }
+
+    /// Stage → verify → flip. `smoke` runs against the staged value
+    /// while the old version is still serving; only a clean result
+    /// flips the pointer. Returns the displaced deployment on success.
+    ///
+    /// Failure modes (all leave the prior version active):
+    /// * non-monotonic `version` → [`Error::VersionSkew`];
+    /// * `smoke` error → propagated as-is (rollback by construction).
+    pub fn hot_swap(
+        &self,
+        version: u64,
+        staged: T,
+        smoke: impl FnOnce(&T) -> Result<()>,
+    ) -> Result<Arc<Versioned<T>>> {
+        let active = self.version();
+        if version <= active {
+            return Err(Error::version_skew(
+                active,
+                version,
+                format!("hot-swap rejected: staged version {version} is not above active {active}"),
+            ));
+        }
+        smoke(&staged)?;
+        Ok(self.cell.swap(Arc::new(Versioned { version, value: staged })))
+    }
+}
+
+/// The registry's standard smoke check: a synthetic-tensor compress →
+/// decompress roundtrip at the deployment's exact codec parameters
+/// (Q, lanes, states). Runs without any model artifacts, so a node can
+/// gate a swap even in the offline container; a corrupt codec config
+/// (or a build that cannot decode its own output) fails loudly here
+/// instead of serving garbage.
+pub fn smoke_decode(deploy: &DeployParams) -> Result<()> {
+    use crate::pipeline::{self, PipelineConfig};
+
+    let cfg = PipelineConfig {
+        q: deploy.q,
+        lanes: deploy.lanes.max(1),
+        parallel: false,
+        ..PipelineConfig::paper(deploy.q)
+    }
+    .with_states(deploy.states.max(1));
+    let mut rng = crate::util::prng::Rng::new(0x5310_7E57 ^ u64::from(deploy.q));
+    let data: Vec<f32> = (0..2048)
+        .map(|_| if rng.next_f64() < 0.4 { 0.0 } else { rng.normal().abs() as f32 })
+        .collect();
+    let (bytes, _) = pipeline::compress(&data, &cfg)
+        .map_err(|e| Error::runtime(format!("smoke compress failed: {e}")))?;
+    let (symbols, params) = pipeline::decompress_to_symbols(&bytes)
+        .map_err(|e| Error::runtime(format!("smoke decode failed: {e}")))?;
+    if symbols.is_empty() {
+        return Err(Error::runtime("smoke decode returned no symbols"));
+    }
+    // Reconstruction must be finite everywhere.
+    let back = crate::quant::dequantize(&symbols, &params);
+    if back.iter().any(|x| !x.is_finite()) {
+        return Err(Error::runtime("smoke decode produced non-finite values"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn swap_cell_snapshots_survive_swaps() {
+        let cell = SwapCell::new(1u32);
+        let old = cell.load();
+        let displaced = cell.swap(Arc::new(2));
+        assert_eq!(*displaced, 1);
+        assert_eq!(*old, 1, "pre-swap snapshot still serves the old value");
+        assert_eq!(*cell.load(), 2);
+    }
+
+    #[test]
+    fn hot_swap_enforces_monotonic_versions() {
+        let slot = ModelSlot::new(3, "v3");
+        let err = slot.hot_swap(3, "again", |_| Ok(())).unwrap_err();
+        assert!(matches!(err, Error::VersionSkew { .. }), "{err}");
+        assert!(!err.is_retryable());
+        let err = slot.hot_swap(2, "older", |_| Ok(())).unwrap_err();
+        assert!(matches!(err, Error::VersionSkew { .. }), "{err}");
+        assert_eq!(slot.version(), 3, "failed swaps leave the active version");
+        slot.hot_swap(4, "v4", |_| Ok(())).unwrap();
+        assert_eq!(slot.version(), 4);
+        assert_eq!(slot.active().value, "v4");
+    }
+
+    #[test]
+    fn smoke_failure_rolls_back_to_prior() {
+        let slot = ModelSlot::new(1, 10u64);
+        let err = slot
+            .hot_swap(2, 20, |_| Err(Error::corrupt("staged model failed smoke decode")))
+            .unwrap_err();
+        assert!(err.to_string().contains("smoke decode"), "{err}");
+        assert_eq!(slot.version(), 1, "prior version restored (never left)");
+        assert_eq!(slot.active().value, 10);
+    }
+
+    #[test]
+    fn smoke_runs_before_flip() {
+        let slot = ModelSlot::new(1, 0u8);
+        let observed = AtomicUsize::new(0);
+        slot.hot_swap(2, 7, |staged| {
+            // During the smoke the slot still serves version 1.
+            observed.store(slot.version() as usize, Ordering::Relaxed);
+            assert_eq!(*staged, 7);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(observed.load(Ordering::Relaxed), 1);
+        assert_eq!(slot.version(), 2);
+    }
+
+    #[test]
+    fn smoke_decode_passes_paper_configs() {
+        for (q, states) in [(2u8, 1usize), (4, 4), (8, 8)] {
+            let mut d = DeployParams::paper(q);
+            d.states = states;
+            smoke_decode(&d).unwrap_or_else(|e| panic!("q={q} states={states}: {e}"));
+        }
+    }
+}

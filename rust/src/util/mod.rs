@@ -3,15 +3,17 @@
 //! The build environment for this reproduction is offline, so the crate
 //! carries its own implementations of the small utility layers it needs:
 //! a counter-based PRNG ([`prng`]), bit-level I/O ([`bitio`]), LEB128
-//! varints ([`varint`]), CRC-32 checksums ([`crc32`]), summary statistics
-//! ([`stats`]), a JSON parser/writer ([`json`]), wall-clock measurement
-//! helpers ([`timer`]), and a persistent thread pool ([`threadpool`]).
-//! Each module is unit- and property-tested like any other substrate.
+//! varints ([`varint`]), CRC-32 checksums ([`crc32`]), FIPS 180-4
+//! SHA-256 ([`sha256`]), summary statistics ([`stats`]), a JSON
+//! parser/writer ([`json`]), wall-clock measurement helpers ([`timer`]),
+//! and a persistent thread pool ([`threadpool`]). Each module is unit-
+//! and property-tested like any other substrate.
 
 pub mod bitio;
 pub mod crc32;
 pub mod json;
 pub mod prng;
+pub mod sha256;
 pub mod stats;
 pub mod threadpool;
 pub mod timer;

@@ -260,6 +260,138 @@ fn chaos_soak_every_outcome_is_explicit() {
     done.store(true, Ordering::Relaxed);
 }
 
+/// Versioned cloud stand-in: requests carrying a model-version header
+/// that disagrees with `active` get a `VersionSkew` reply; everything
+/// else is served normally. Injected-fault parse errors are skipped,
+/// as in [`responder`].
+fn versioned_responder(mut t: FaultyTransport, active: Arc<AtomicU64>) {
+    loop {
+        let frame = match t.recv() {
+            Ok(f) => f,
+            Err(e) if e.to_string().contains("injected link fault") => continue,
+            Err(_) => return, // peer closed
+        };
+        let now = active.load(Ordering::Relaxed);
+        let reply = match (frame.model_version, &frame.kind) {
+            (Some(v), _) if v != now => FrameKind::VersionSkew {
+                active: now,
+                offered: v,
+                message: "deployment flipped mid-soak; resync from the registry".into(),
+            },
+            (_, FrameKind::InferLm { payload, .. }) => FrameKind::Logits {
+                data: vec![checksum(payload)],
+                decode_ms: 0.0,
+                compute_ms: 0.0,
+            },
+            (_, FrameKind::Ping) => FrameKind::Pong,
+            (_, other) => FrameKind::ServerError { message: format!("unexpected {other:?}") },
+        };
+        if t.send(&Frame::new(frame.request_id, reply)).is_err() {
+            return;
+        }
+    }
+}
+
+/// The version-flip fault family: the cloud hot-swaps deployments twice
+/// while a pinned session keeps calling over a lossy link. Every skew
+/// must resolve through the resync hook *within the affected call* —
+/// resync, never hang, never a silently mis-decoded reply — and the
+/// session must end the run pinned to the final deployment.
+#[test]
+fn version_flip_mid_soak_resyncs_instead_of_hanging() {
+    let done = Arc::new(AtomicBool::new(false));
+    arm_watchdog(240, Arc::clone(&done));
+
+    let active = Arc::new(AtomicU64::new(1));
+    let registry = Arc::new(Registry::new());
+    let (hand_tx, hand_rx) = mpsc::channel::<FaultyTransport>();
+    let spawner = {
+        let active = Arc::clone(&active);
+        thread::spawn(move || {
+            for t in hand_rx {
+                let active = Arc::clone(&active);
+                thread::spawn(move || versioned_responder(t, active));
+            }
+        })
+    };
+    let pair_seed = Arc::new(AtomicU64::new(1000));
+    let dial: Box<dyn FnMut() -> rans_sc::error::Result<FaultyTransport> + Send> = {
+        let pair_seed = Arc::clone(&pair_seed);
+        Box::new(move || {
+            let s = pair_seed.fetch_add(1, Ordering::Relaxed);
+            // Drops only: a lost frame forces the retry/resync paths to
+            // compose, without duplicate stale skew replies muddying
+            // the once-per-call resync accounting.
+            let spec = FaultSpec::drops(0.15);
+            let (client, server) = FaultyTransport::pair(s, spec, spec);
+            hand_tx
+                .send(server)
+                .map_err(|_| Error::transport("responder spawner gone"))?;
+            Ok(client)
+        })
+    };
+    let cfg = SessionConfig {
+        deadline_ms: 4_000,
+        try_timeout_ms: 60,
+        max_retries: 20,
+        base_backoff_ms: 1,
+        max_backoff_ms: 8,
+        heartbeat_ms: 0,
+        seed: 17,
+    };
+    let mut dial = dial;
+    let first = dial().expect("initial dial cannot fail");
+    let resyncs = Arc::new(AtomicU64::new(0));
+    let hook_resyncs = Arc::clone(&resyncs);
+    let mut session = Session::new(first, cfg)
+        .with_metrics(Arc::clone(&registry))
+        .with_connector(dial)
+        .with_model_version(1)
+        .with_resync(Box::new(move |active_version| {
+            // Stands in for a registry re-fetch of the active version.
+            hook_resyncs.fetch_add(1, Ordering::Relaxed);
+            Ok(active_version)
+        }));
+
+    let n = 120usize;
+    let mut ok = 0usize;
+    for i in 0..n {
+        if i == n / 3 {
+            active.store(2, Ordering::Relaxed); // first hot-swap lands
+        }
+        if i == 2 * n / 3 {
+            active.store(3, Ordering::Relaxed); // and a second one
+        }
+        let payload: Vec<u8> = (0..1 + (i % 53)).map(|j| ((i * 13 + j) & 0x7F) as u8).collect();
+        match session.call(FrameKind::InferLm { model: "soak".into(), payload: payload.clone() })
+        {
+            Ok(reply) => match reply.kind {
+                FrameKind::Logits { ref data, .. } => {
+                    assert_eq!(data.len(), 1, "req {i}");
+                    assert_eq!(data[0], checksum(&payload), "req {i}: reply integrity");
+                    ok += 1;
+                }
+                ref other => panic!("req {i}: unexpected reply kind {other:?}"),
+            },
+            Err(e) => {
+                assert!(e.is_retryable(), "req {i}: non-retryable error escaped: {e}");
+            }
+        }
+    }
+    assert!(ok >= n * 2 / 3, "too few successes across the flips: {ok}/{n}");
+    assert!(registry.get("session.skew_total") >= 2, "both flips must surface as skew");
+    assert!(registry.get("session.resync_total") >= 2, "both flips must resync");
+    assert_eq!(
+        registry.get("session.resync_total"),
+        resyncs.load(Ordering::Relaxed),
+        "every counted resync came from the hook"
+    );
+    assert_eq!(session.model_version(), Some(3), "session ends on the final deployment");
+    drop(session); // hangs up: responders and the spawner drain out
+    spawner.join().unwrap();
+    done.store(true, Ordering::Relaxed);
+}
+
 /// A permanently overloaded peer: the session must surface the shed as
 /// an explicit `Rejected` carrying the server's retry-after hint, and
 /// the shed must be visible in the metrics snapshot.

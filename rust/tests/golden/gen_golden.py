@@ -399,6 +399,157 @@ def emit_half_conv_crcs():
     emit("half_conv_crcs.hex", out)
 
 
+# ------------------------------------------------------ SHA-256 / HMAC
+#
+# Pure-Python replica of rust/src/util/sha256.rs, differentially
+# validated against CPython's hashlib/hmac (the independent oracle) and
+# used to emit the committed digest vectors the Rust registry tests pin.
+
+SHA256_H0 = [
+    0x6A09E667, 0xBB67AE85, 0x3C6EF372, 0xA54FF53A,
+    0x510E527F, 0x9B05688C, 0x1F83D9AB, 0x5BE0CD19,
+]
+SHA256_K = [
+    0x428A2F98, 0x71374491, 0xB5C0FBCF, 0xE9B5DBA5,
+    0x3956C25B, 0x59F111F1, 0x923F82A4, 0xAB1C5ED5,
+    0xD807AA98, 0x12835B01, 0x243185BE, 0x550C7DC3,
+    0x72BE5D74, 0x80DEB1FE, 0x9BDC06A7, 0xC19BF174,
+    0xE49B69C1, 0xEFBE4786, 0x0FC19DC6, 0x240CA1CC,
+    0x2DE92C6F, 0x4A7484AA, 0x5CB0A9DC, 0x76F988DA,
+    0x983E5152, 0xA831C66D, 0xB00327C8, 0xBF597FC7,
+    0xC6E00BF3, 0xD5A79147, 0x06CA6351, 0x14292967,
+    0x27B70A85, 0x2E1B2138, 0x4D2C6DFC, 0x53380D13,
+    0x650A7354, 0x766A0ABB, 0x81C2C92E, 0x92722C85,
+    0xA2BFE8A1, 0xA81A664B, 0xC24B8B70, 0xC76C51A3,
+    0xD192E819, 0xD6990624, 0xF40E3585, 0x106AA070,
+    0x19A4C116, 0x1E376C08, 0x2748774C, 0x34B0BCB5,
+    0x391C0CB3, 0x4ED8AA4A, 0x5B9CCA4F, 0x682E6FF3,
+    0x748F82EE, 0x78A5636F, 0x84C87814, 0x8CC70208,
+    0x90BEFFFA, 0xA4506CEB, 0xBEF9A3F7, 0xC67178F2,
+]
+
+
+def _rotr32(x, n):
+    return ((x >> n) | (x << (32 - n))) & MASK32
+
+
+def sha256_ref(msg):
+    """FIPS 180-4 SHA-256, replicating util/sha256.rs compress()."""
+    h = list(SHA256_H0)
+    bit_len = len(msg) * 8
+    msg = msg + b"\x80" + b"\x00" * ((55 - len(msg)) % 64)
+    msg += bit_len.to_bytes(8, "big")
+    for off in range(0, len(msg), 64):
+        w = [int.from_bytes(msg[off + 4 * i:off + 4 * i + 4], "big") for i in range(16)]
+        for i in range(16, 64):
+            s0 = _rotr32(w[i - 15], 7) ^ _rotr32(w[i - 15], 18) ^ (w[i - 15] >> 3)
+            s1 = _rotr32(w[i - 2], 17) ^ _rotr32(w[i - 2], 19) ^ (w[i - 2] >> 10)
+            w.append((w[i - 16] + s0 + w[i - 7] + s1) & MASK32)
+        a, b, c, d, e, f, g, hh = h
+        for i in range(64):
+            s1 = _rotr32(e, 6) ^ _rotr32(e, 11) ^ _rotr32(e, 25)
+            ch = (e & f) ^ (~e & g)
+            t1 = (hh + s1 + ch + SHA256_K[i] + w[i]) & MASK32
+            s0 = _rotr32(a, 2) ^ _rotr32(a, 13) ^ _rotr32(a, 22)
+            maj = (a & b) ^ (a & c) ^ (b & c)
+            t2 = (s0 + maj) & MASK32
+            hh, g, f, e, d, c, b, a = g, f, e, (d + t1) & MASK32, c, b, a, (t1 + t2) & MASK32
+        h = [(x + y) & MASK32 for x, y in zip(h, (a, b, c, d, e, f, g, hh))]
+    return b"".join(x.to_bytes(4, "big") for x in h)
+
+
+def hmac_sha256_ref(key, msg):
+    """RFC 2104 HMAC over sha256_ref, replicating registry/signer.rs."""
+    if len(key) > 64:
+        key = sha256_ref(key)
+    key = key + b"\x00" * (64 - len(key))
+    ipad = bytes(k ^ 0x36 for k in key)
+    opad = bytes(k ^ 0x5C for k in key)
+    return sha256_ref(opad + sha256_ref(ipad + msg))
+
+
+def lcg_bytes(seed, n):
+    """Deterministic byte string; mirrored in golden_vectors.rs."""
+    lcg = seed
+    out = bytearray()
+    for _ in range(n):
+        lcg = (lcg * 6364136223846793005 + 1442695040888963407) % (1 << 64)
+        out.append((lcg >> 33) & 0xFF)
+    return bytes(out)
+
+
+# Lengths exercised by both the committed vectors and the Rust pin; they
+# straddle every padding boundary (55/56/63/64) plus multi-block sizes.
+SHA256_VECTOR_LENS = [0, 1, 3, 55, 56, 57, 63, 64, 65, 127, 128, 129, 1000, 4096]
+# (key_len, msg_len) pairs for HMAC: empty, short, block-sized, and
+# over-block keys (the key > 64 path hashes the key first).
+HMAC_VECTOR_SHAPES = [(0, 0), (1, 1), (20, 50), (32, 117), (64, 64), (65, 200), (131, 54)]
+
+
+def validate_sha256():
+    """Differential wall for the hand-rolled SHA-256/HMAC:
+
+    1. replica vs hashlib over every length 0..257 and LCG-chosen
+       lengths up to 4096 (covers all padding residues many times over);
+    2. FIPS 180-4 known answers, including the million-'a' vector;
+    3. HMAC replica vs CPython's hmac module across key shapes.
+    """
+    import hashlib
+    import hmac as hmac_mod
+
+    lcg = 0x5EED5EED
+    lens = list(range(258))
+    for _ in range(160):
+        lcg = (lcg * 6364136223846793005 + 1442695040888963407) % (1 << 64)
+        lens.append((lcg >> 33) % 4097)
+    for i, n in enumerate(lens):
+        m = lcg_bytes(0xD16E57 + i, n)
+        assert sha256_ref(m) == hashlib.sha256(m).digest(), f"len {n}"
+    assert sha256_ref(b"").hex() == (
+        "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+    )
+    assert sha256_ref(b"abc").hex() == (
+        "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+    )
+    assert sha256_ref(b"a" * 1_000_000).hex() == (
+        "cdc76e5c9914fb9281a1c7e284d73e67f1809a48a497200e046d39ccc7112cd0"
+    )
+    for i, (kl, ml) in enumerate(HMAC_VECTOR_SHAPES):
+        key = lcg_bytes(0x4B450000 + i, kl)
+        msg = lcg_bytes(0x6D560000 + i, ml)
+        want = hmac_mod.new(key, msg, hashlib.sha256).digest()
+        assert hmac_sha256_ref(key, msg) == want, f"hmac shape {kl}/{ml}"
+    # RFC 4231 test cases 1–2 (the ones the Rust signer pins).
+    assert hmac_sha256_ref(b"\x0b" * 20, b"Hi There").hex() == (
+        "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c2e32cff7"
+    )
+    assert hmac_sha256_ref(b"Jefe", b"what do ya want for nothing?").hex() == (
+        "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b964ec3843"
+    )
+    print(f"sha256/hmac OK ({len(lens)} lengths vs hashlib, "
+          f"{len(HMAC_VECTOR_SHAPES)} hmac shapes vs hmac)")
+
+
+def emit_sha256_vectors():
+    """Concatenated digests of LCG messages (and HMACs of LCG key/msg
+    pairs) that rust/tests/golden_vectors.rs recomputes and pins.
+    Emitted from hashlib/hmac directly so the committed bytes are
+    oracle-authored, not replica-authored."""
+    import hashlib
+    import hmac as hmac_mod
+
+    out = bytearray()
+    for i, n in enumerate(SHA256_VECTOR_LENS):
+        out.extend(hashlib.sha256(lcg_bytes(0x5A0000 + i, n)).digest())
+    emit("sha256_lcg.hex", bytes(out))
+    out = bytearray()
+    for i, (kl, ml) in enumerate(HMAC_VECTOR_SHAPES):
+        key = lcg_bytes(0x4B450000 + i, kl)
+        msg = lcg_bytes(0x6D560000 + i, ml)
+        out.extend(hmac_mod.new(key, msg, hashlib.sha256).digest())
+    emit("hmac_lcg.hex", bytes(out))
+
+
 # -------------------------------------------------- reciprocal validation
 
 
@@ -792,10 +943,12 @@ def generate_goldens():
 
 def main():
     validate_half_conversions()
+    validate_sha256()
     validate_reciprocal()
     validate_encoders()
     validate_multistate()
     emit_half_conv_crcs()
+    emit_sha256_vectors()
     generate_goldens()
     print("all golden vectors written")
 

@@ -263,6 +263,110 @@ fn fuzz_truncated_and_mutated_dtyped_headers() {
     }
 }
 
+/// Versioned frames (model-version header, tag 15) and the
+/// `VersionSkew` reply (kind 16) sit under the same body CRC as
+/// everything else: any single-bit flip anywhere — length prefix,
+/// headers, skew payload, the CRC itself — must be rejected.
+#[test]
+fn fuzz_mutated_versioned_frames() {
+    use rans_sc::coordinator::protocol::FrameKind;
+    testutil::check(
+        "mutated versioned frames",
+        200,
+        |rng| {
+            let frame = if rng.below(2) == 0 {
+                Frame::new(
+                    rng.next_u64(),
+                    FrameKind::InferVision {
+                        model: "m".into(),
+                        sl: rng.below_usize(5),
+                        batch: 1 + rng.below_usize(8),
+                        payload: (0..rng.below_usize(128))
+                            .map(|_| rng.next_u64() as u8)
+                            .collect(),
+                    },
+                )
+                .with_deadline(1 + rng.below(10_000) as u32)
+                .with_model_version(1 + rng.next_u64() % 1000)
+            } else {
+                Frame::new(
+                    rng.next_u64(),
+                    FrameKind::VersionSkew {
+                        active: 1 + rng.next_u64() % 1000,
+                        offered: rng.next_u64() % 1000,
+                        message: "resync from registry".into(),
+                    },
+                )
+            };
+            let mut wire = frame.to_wire();
+            let pos = rng.below_usize(wire.len());
+            wire[pos] ^= 1 << rng.below(8);
+            wire
+        },
+        |wire| Frame::from_wire(wire).is_err(),
+    );
+}
+
+/// Every truncation point of a versioned frame — including cuts inside
+/// the model-version header and the skew payload — errors cleanly.
+#[test]
+fn fuzz_truncated_versioned_frames() {
+    use rans_sc::coordinator::protocol::FrameKind;
+    for frame in [
+        Frame::new(7, FrameKind::Ping).with_deadline(250).with_model_version(3),
+        Frame::new(
+            8,
+            FrameKind::VersionSkew { active: 9, offered: 3, message: "stale".into() },
+        ),
+    ] {
+        let wire = frame.to_wire();
+        for cut in 0..wire.len() {
+            assert!(Frame::from_wire(&wire[..cut]).is_err(), "cut {cut} undetected");
+        }
+        let (back, used) = Frame::from_wire(&wire).unwrap();
+        assert_eq!(used, wire.len());
+        assert_eq!(back, frame);
+    }
+}
+
+/// Garble the header region *behind a recomputed CRC*: only the header
+/// loop's own validation is left to object. The parse must never panic,
+/// and when it errors the message is a typed framing error (nested /
+/// truncated header, unknown kind) — never a silent misparse of the
+/// model version into something else.
+#[test]
+fn fuzz_versioned_header_garbage_behind_valid_crc() {
+    use rans_sc::coordinator::protocol::FrameKind;
+    use rans_sc::util::crc32;
+    let frame = Frame::new(42, FrameKind::Ping).with_deadline(100).with_model_version(5);
+    let wire = frame.to_wire();
+    let body_len = wire.len() - 8;
+    testutil::check(
+        "garbled frame headers, CRC fixed up",
+        300,
+        |rng| {
+            let mut body = wire[4..4 + body_len].to_vec();
+            // Garble 1–3 bytes in the header region (after request_id).
+            for _ in 0..1 + rng.below_usize(3) {
+                let i = 8 + rng.below_usize(body.len() - 8);
+                body[i] = rng.next_u64() as u8;
+            }
+            let mut out = (body.len() as u32).to_le_bytes().to_vec();
+            out.extend_from_slice(&body);
+            out.extend_from_slice(&crc32::hash(&body).to_le_bytes());
+            out
+        },
+        |garbled| match Frame::from_wire(garbled) {
+            Err(e) => {
+                matches!(e, rans_sc::error::Error::Protocol(_) | rans_sc::error::Error::Corrupt(_))
+            }
+            // If it still parses, the headers must decode to *some*
+            // consistent frame that round-trips.
+            Ok((f, used)) => used == garbled.len() && Frame::from_wire(&f.to_wire()).is_ok(),
+        },
+    );
+}
+
 #[test]
 fn fuzz_mutated_valid_frames() {
     // Start from valid frames, flip a byte: parser must reject or

@@ -1,0 +1,297 @@
+//! Registry tamper wall: publish → tamper → fetch, exhaustively.
+//!
+//! The contract under test is the ISSUE's acceptance bar for the signed
+//! content-addressed registry: **any** flipped bit, truncation, wrong
+//! key, or stale-version replay must surface as a loud typed error
+//! (`Corrupt` / `Artifact` / `InvalidArg` / `VersionSkew`, all
+//! non-retryable) — never a silent success, panic, or hang. The
+//! hot-swap half asserts the other side of the contract: a swap under
+//! concurrent readers loses zero requests and a failed smoke check
+//! rolls back by never flipping.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use rans_sc::error::Error;
+use rans_sc::runtime::registry::{
+    ChunkStore, DeployParams, HmacSha256Signer, ModelSlot, RegistryManifest,
+};
+
+/// Self-cleaning scratch directory (no tempfile crate in the offline
+/// container).
+struct Scratch(PathBuf);
+
+impl Scratch {
+    fn new(name: &str) -> Self {
+        let dir = std::env::temp_dir()
+            .join(format!("rans_sc_registry_{}_{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        Scratch(dir)
+    }
+
+    fn path(&self) -> &Path {
+        &self.0
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.0);
+    }
+}
+
+fn signer() -> HmacSha256Signer {
+    HmacSha256Signer::new(b"tamper-wall-key".to_vec(), "test-key")
+}
+
+/// Deterministic pseudo-random artifact bytes.
+fn artifact_bytes(seed: u64, n: usize) -> Vec<u8> {
+    let mut rng = rans_sc::util::prng::Rng::new(seed);
+    (0..n).map(|_| rng.next_u64() as u8).collect()
+}
+
+/// Publish one multi-chunk deployment and return (store, manifest).
+/// Small chunks so the head spans several objects and per-chunk
+/// verification actually gets exercised.
+fn publish_v1(root: &Path) -> (ChunkStore, RegistryManifest) {
+    let store = ChunkStore::open(root);
+    let head = artifact_bytes(0xAB, 300);
+    let tail = artifact_bytes(0xCD, 150);
+    let manifest = RegistryManifest {
+        model: "resnet_mini_synth_a".into(),
+        model_version: 1,
+        deploy: DeployParams::paper(4),
+        head: store.put_artifact(&head, 64).unwrap(),
+        tail: store.put_artifact(&tail, 64).unwrap(),
+    };
+    store.publish(&manifest, &signer()).unwrap();
+    (store, manifest)
+}
+
+/// Every chunk object file under the registry root.
+fn chunk_files(root: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    let objects = root.join("objects");
+    for shard in fs::read_dir(&objects).unwrap() {
+        for f in fs::read_dir(shard.unwrap().path()).unwrap() {
+            out.push(f.unwrap().path());
+        }
+    }
+    out.sort();
+    assert!(out.len() >= 5, "expected a multi-chunk publish, got {} objects", out.len());
+    out
+}
+
+fn assert_fatal(err: &Error, what: &str) {
+    assert!(!err.is_retryable(), "{what}: {err} must be fatal (resend reproduces it)");
+    assert!(
+        matches!(
+            err,
+            Error::Corrupt(_) | Error::Artifact(_) | Error::InvalidArg(_) | Error::VersionSkew { .. }
+        ),
+        "{what}: {err} must be a typed registry error"
+    );
+}
+
+#[test]
+fn clean_publish_fetch_roundtrip() {
+    let scratch = Scratch::new("clean");
+    let (store, manifest) = publish_v1(scratch.path());
+    let dep = store.fetch("resnet_mini_synth_a", None, &signer()).unwrap();
+    assert_eq!(dep.manifest.model_version, 1);
+    assert_eq!(dep.head, artifact_bytes(0xAB, 300));
+    assert_eq!(dep.tail, artifact_bytes(0xCD, 150));
+    assert_eq!(dep.manifest.deploy, manifest.deploy);
+    // Explicit-version and verify-only paths agree.
+    store.fetch("resnet_mini_synth_a", Some(1), &signer()).unwrap();
+    assert_eq!(store.verify_artifact(&manifest.head).unwrap(), 300);
+}
+
+/// The headline property: flip EVERY byte of EVERY chunk object, one at
+/// a time, and fetch. Magic, length framing, payload, and CRC trailer
+/// are all covered — every single flip must be a typed fatal error.
+#[test]
+fn every_flipped_chunk_byte_is_a_loud_typed_error() {
+    let scratch = Scratch::new("bitflip");
+    let (store, _) = publish_v1(scratch.path());
+    for path in chunk_files(scratch.path()) {
+        let original = fs::read(&path).unwrap();
+        for offset in 0..original.len() {
+            let mut bad = original.clone();
+            bad[offset] ^= 0x01;
+            fs::write(&path, &bad).unwrap();
+            let err = store
+                .fetch("resnet_mini_synth_a", None, &signer())
+                .expect_err(&format!("flip at {}:{offset} must not verify", path.display()));
+            assert_fatal(&err, &format!("{}:{offset}", path.display()));
+        }
+        fs::write(&path, &original).unwrap();
+    }
+    // The wall left the store intact: a clean fetch still passes.
+    store.fetch("resnet_mini_synth_a", None, &signer()).unwrap();
+}
+
+#[test]
+fn truncated_chunk_is_rejected_before_later_chunks_are_read() {
+    let scratch = Scratch::new("truncate");
+    let (store, _) = publish_v1(scratch.path());
+    for path in chunk_files(scratch.path()) {
+        let original = fs::read(&path).unwrap();
+        for keep in [0, 7, 8, original.len() / 2, original.len() - 1] {
+            fs::write(&path, &original[..keep]).unwrap();
+            let err = store.fetch("resnet_mini_synth_a", None, &signer()).unwrap_err();
+            assert_fatal(&err, &format!("{} truncated to {keep}", path.display()));
+        }
+        fs::write(&path, &original).unwrap();
+    }
+}
+
+#[test]
+fn absent_chunk_is_a_typed_artifact_error() {
+    let scratch = Scratch::new("absent");
+    let (store, _) = publish_v1(scratch.path());
+    let victim = &chunk_files(scratch.path())[0];
+    fs::remove_file(victim).unwrap();
+    let err = store.fetch("resnet_mini_synth_a", None, &signer()).unwrap_err();
+    assert!(matches!(err, Error::Artifact(_)), "{err}");
+    assert!(err.to_string().contains("absent"), "{err}");
+}
+
+#[test]
+fn manifest_tampering_breaks_the_signature() {
+    let scratch = Scratch::new("manifest");
+    let (store, _) = publish_v1(scratch.path());
+    let path = scratch.path().join("manifests/resnet_mini_synth_a/1.json");
+    let original = fs::read_to_string(&path).unwrap();
+
+    // Any flipped byte in the wrapper document must fail: either the
+    // JSON breaks, or the signature / manifest text no longer match.
+    for offset in (0..original.len()).step_by(3) {
+        let mut bad = original.clone().into_bytes();
+        bad[offset] ^= 0x01;
+        fs::write(&path, &bad).unwrap();
+        let err = store.fetch("resnet_mini_synth_a", None, &signer()).unwrap_err();
+        assert_fatal(&err, &format!("manifest byte {offset}"));
+    }
+    fs::write(&path, original.as_bytes()).unwrap();
+}
+
+#[test]
+fn wrong_key_and_wrong_key_id_are_rejected() {
+    let scratch = Scratch::new("keys");
+    let (store, _) = publish_v1(scratch.path());
+    let wrong_key = HmacSha256Signer::new(b"some-other-key".to_vec(), "test-key");
+    let err = store.fetch("resnet_mini_synth_a", None, &wrong_key).unwrap_err();
+    assert!(matches!(err, Error::Corrupt(_)), "wrong key: {err}");
+    let rotated = HmacSha256Signer::new(b"tamper-wall-key".to_vec(), "rotated-key");
+    let err = store.fetch("resnet_mini_synth_a", None, &rotated).unwrap_err();
+    assert!(matches!(err, Error::Corrupt(_)), "rotated key id: {err}");
+}
+
+#[test]
+fn stale_and_zero_versions_cannot_publish() {
+    let scratch = Scratch::new("stale");
+    let (store, manifest) = publish_v1(scratch.path());
+    // Same version again → refused, never overwritten.
+    let err = store.publish(&manifest, &signer()).unwrap_err();
+    assert!(matches!(err, Error::InvalidArg(_)), "{err}");
+    assert!(err.to_string().contains("stale"), "{err}");
+    // Version 0 is reserved for unversioned serving.
+    let mut zero = manifest.clone();
+    zero.model_version = 0;
+    let err = store.publish(&zero, &signer()).unwrap_err();
+    assert!(matches!(err, Error::InvalidArg(_)), "{err}");
+    // Moving forward works, and latest-fetch follows.
+    let mut v2 = manifest.clone();
+    v2.model_version = 2;
+    store.publish(&v2, &signer()).unwrap();
+    let dep = store.fetch("resnet_mini_synth_a", None, &signer()).unwrap();
+    assert_eq!(dep.manifest.model_version, 2);
+}
+
+/// Replay attack: a validly-signed v1 wrapper copied over the v2 slot.
+/// The signature verifies, but the embedded version disagrees with the
+/// slot — classified as version skew, the fatal-until-resync class.
+#[test]
+fn stale_signed_manifest_in_newer_slot_is_version_skew() {
+    let scratch = Scratch::new("replay");
+    let (store, manifest) = publish_v1(scratch.path());
+    let mut v2 = manifest.clone();
+    v2.model_version = 2;
+    store.publish(&v2, &signer()).unwrap();
+    let dir = scratch.path().join("manifests/resnet_mini_synth_a");
+    fs::copy(dir.join("1.json"), dir.join("2.json")).unwrap();
+    let err = store.fetch("resnet_mini_synth_a", Some(2), &signer()).unwrap_err();
+    assert!(matches!(err, Error::VersionSkew { active: 2, offered: 1, .. }), "{err}");
+    assert!(!err.is_retryable());
+}
+
+#[test]
+fn absent_model_is_a_typed_artifact_error() {
+    let scratch = Scratch::new("nomodel");
+    let store = ChunkStore::open(scratch.path());
+    let err = store.fetch("never_published", None, &signer()).unwrap_err();
+    assert!(matches!(err, Error::Artifact(_)), "{err}");
+}
+
+#[test]
+fn identical_chunks_are_deduplicated_by_address() {
+    let scratch = Scratch::new("dedup");
+    let store = ChunkStore::open(scratch.path());
+    let bytes = artifact_bytes(0x11, 320);
+    let a = store.put_artifact(&bytes, 64).unwrap();
+    let b = store.put_artifact(&bytes, 64).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(chunk_files(scratch.path()).len(), a.chunks.len(), "no duplicate objects");
+    assert_eq!(store.read_artifact(&a).unwrap(), bytes);
+}
+
+/// Hot-swap under concurrent readers: every snapshot a reader takes is
+/// a consistent (version, value) pairing, versions never run backwards,
+/// and nothing panics — zero requests lost while versions 2..=6 land.
+/// A failed smoke check mid-sequence leaves the active version alone.
+#[test]
+fn hot_swap_under_concurrent_load_loses_nothing_and_rolls_back() {
+    let slot = Arc::new(ModelSlot::new(1u64, 100u64));
+    let stop = Arc::new(AtomicBool::new(false));
+    let readers: Vec<_> = (0..4)
+        .map(|_| {
+            let slot = Arc::clone(&slot);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut last = 0u64;
+                let mut reads = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let snap = slot.active();
+                    // Invariant: value is always version * 100 — a torn
+                    // or half-swapped deployment would break it.
+                    assert_eq!(snap.value, snap.version * 100, "torn deployment snapshot");
+                    assert!(snap.version >= last, "version ran backwards");
+                    last = snap.version;
+                    reads += 1;
+                }
+                reads
+            })
+        })
+        .collect();
+
+    for version in 2..=6u64 {
+        slot.hot_swap(version, version * 100, |_| Ok(())).unwrap();
+        // A bad candidate between good swaps must roll back (by never
+        // flipping) while readers keep going.
+        let err = slot
+            .hot_swap(version + 100, 0, |_| Err(Error::corrupt("smoke decode failed")))
+            .unwrap_err();
+        assert!(matches!(err, Error::Corrupt(_)));
+        assert_eq!(slot.version(), version, "failed swap left the active version");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    stop.store(true, Ordering::Relaxed);
+    let total: u64 = readers.into_iter().map(|r| r.join().unwrap()).sum();
+    assert!(total > 0, "readers must have made progress during the swaps");
+    assert_eq!(slot.version(), 6);
+    assert_eq!(slot.active().value, 600);
+}

@@ -14,12 +14,17 @@ use rans_sc::runtime::{Engine, ExecPool, LmSplitExec, Manifest, VisionSplitExec}
 
 fn artifacts_dir() -> Option<String> {
     let dir = std::env::var("RANS_SC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    if std::path::Path::new(&dir).join("manifest.json").exists() {
-        Some(dir)
-    } else {
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
         eprintln!("skipping: no artifacts at {dir} (run `make artifacts`)");
-        None
+        return None;
     }
+    // Absent artifacts are an expected skip; a manifest that is present
+    // but unreadable is a broken build and must fail loudly instead of
+    // silently skipping the whole suite.
+    if let Err(e) = Manifest::load(&dir) {
+        panic!("artifacts present at {dir} but the manifest is unusable: {e}");
+    }
+    Some(dir)
 }
 
 fn argmax(xs: &[f32]) -> usize {

@@ -52,6 +52,13 @@ struct RegistrySmoke {
     verify_mbps: f64,
     swap_total: u64,
     rollback_total: u64,
+    /// Two-version fleet sync: bytes a delta fetch of v2-given-v1 moves
+    /// vs a cold full fetch of v2 (unique chunks, CDC-chunked).
+    delta_bytes: usize,
+    full_bytes: usize,
+    delta_bytes_saved: usize,
+    delta_shared_chunks: usize,
+    delta_total_chunks: usize,
 }
 
 /// Outcome of the session-layer robustness smoke: a seeded soak over a
@@ -180,7 +187,16 @@ impl Report {
                 .field("registry_verify_mbps", r.verify_mbps)
                 .field("registry_artifact_bytes", r.artifact_bytes)
                 .field("swap_total", r.swap_total as usize)
-                .field("rollback_total", r.rollback_total as usize);
+                .field("rollback_total", r.rollback_total as usize)
+                // Delta-sync trajectory: CI bench-smoke fails if
+                // `delta_bytes_saved` goes missing or reports zero — a
+                // zero means two versions sharing almost all their
+                // weights stopped deduplicating over the sync path.
+                .field("delta_bytes", r.delta_bytes)
+                .field("full_bytes", r.full_bytes)
+                .field("delta_bytes_saved", r.delta_bytes_saved)
+                .field("delta_shared_chunks", r.delta_shared_chunks)
+                .field("delta_total_chunks", r.delta_total_chunks);
         }
         top.field("rows", rows).build()
     }
@@ -257,7 +273,10 @@ fn robustness_smoke(fast: bool) -> RobustnessSmoke {
 /// through hot-swaps (including one deliberately failing candidate, so
 /// the rollback path is exercised too).
 fn registry_smoke(fast: bool, warmup: usize, trials: usize) -> RegistrySmoke {
-    use rans_sc::runtime::registry::{smoke_decode, ChunkStore, DeployParams, ModelSlot};
+    use rans_sc::runtime::registry::{
+        smoke_decode, sync_deployment, CdcParams, ChunkStore, DeltaPlan, DeployParams,
+        HmacSha256Signer, ModelSlot, RegistryManifest, StoreSource, SyncOptions,
+    };
 
     let dir = std::env::temp_dir()
         .join(format!("rans_sc_bench_registry_{}", std::process::id()));
@@ -284,8 +303,78 @@ fn registry_smoke(fast: bool, warmup: usize, trials: usize) -> RegistrySmoke {
     }
     assert_eq!(slot.version(), swaps, "rollback left the active version");
 
+    // Two-version fleet delta sync: v2 is v1 with an early 13-byte
+    // insertion plus scattered single-byte edits — the fine-tune shape.
+    // CDC chunking resynchronizes addresses past the insertion, so the
+    // delta plan moves only the handful of touched chunks and the
+    // bench records how much of a full fetch the fleet avoids.
+    let signer = HmacSha256Signer::new(b"bench-fleet-key".as_slice(), "bench");
+    let publisher = ChunkStore::open(dir.join("pub"));
+    let head_n: usize = if fast { 2 << 20 } else { 8 << 20 };
+    let mut rng = rans_sc::util::prng::Rng::new(0xDE17A);
+    let head1: Vec<u8> = (0..head_n).map(|_| rng.next_u64() as u8).collect();
+    let tail1: Vec<u8> = (0..head_n / 4).map(|_| rng.next_u64() as u8).collect();
+    let mut head2 = Vec::with_capacity(head1.len() + 13);
+    head2.extend_from_slice(&head1[..4096]);
+    head2.extend_from_slice(&[0xA5; 13]);
+    head2.extend_from_slice(&head1[4096..]);
+    let step = head2.len() / 4;
+    for i in (step..head2.len() - 1).step_by(step) {
+        head2[i] ^= 0xFF;
+    }
+    let cdc = CdcParams::with_avg(1 << 14).expect("valid cdc params");
+    let manifest = |v: u64, head: &[u8], tail: &[u8]| RegistryManifest {
+        model: "fleet".into(),
+        model_version: v,
+        deploy: DeployParams::paper(4),
+        head: publisher.put_artifact_cdc(head, &cdc).expect("cdc publish head"),
+        tail: publisher.put_artifact_cdc(tail, &cdc).expect("cdc publish tail"),
+    };
+    let m1 = manifest(1, &head1, &tail1);
+    publisher.publish(&m1, &signer).expect("publish v1");
+    let m2 = manifest(2, &head2, &tail1);
+    publisher.publish(&m2, &signer).expect("publish v2");
+    let plan = DeltaPlan::plan(&m1, &m2);
+    assert!(
+        plan.shared_chunks * 10 >= plan.total_chunks * 9,
+        "synthetic versions must share >=90% of chunks, got {}/{}",
+        plan.shared_chunks,
+        plan.total_chunks
+    );
+    assert!(
+        plan.delta_bytes * 100 < plan.full_bytes * 15,
+        "delta fetch must move <15% of full bytes, got {}/{}",
+        plan.delta_bytes,
+        plan.full_bytes
+    );
+
+    // Prove the plan against the real sync path: cold-sync v1 to a
+    // fresh edge store, then delta-sync v2 — exactly the planned
+    // missing bytes may cross the source boundary.
+    let edge = ChunkStore::open(dir.join("edge"));
+    let mut source = StoreSource::open(dir.join("pub"));
+    sync_deployment(&edge, &mut source, &signer, "fleet", 1, &SyncOptions::default())
+        .expect("cold sync v1");
+    let (_, r2) =
+        sync_deployment(&edge, &mut source, &signer, "fleet", 2, &SyncOptions::default())
+            .expect("delta sync v2");
+    assert_eq!(
+        r2.bytes_fetched, plan.delta_bytes,
+        "delta sync must move exactly the planned missing bytes"
+    );
+
     let _ = std::fs::remove_dir_all(&dir);
-    RegistrySmoke { artifact_bytes: n, verify_mbps, swap_total, rollback_total }
+    RegistrySmoke {
+        artifact_bytes: n,
+        verify_mbps,
+        swap_total,
+        rollback_total,
+        delta_bytes: plan.delta_bytes as usize,
+        full_bytes: plan.full_bytes as usize,
+        delta_bytes_saved: plan.bytes_saved() as usize,
+        delta_shared_chunks: plan.shared_chunks,
+        delta_total_chunks: plan.total_chunks,
+    }
 }
 
 fn main() {
@@ -627,6 +716,15 @@ fn main() {
         reg.verify_mbps,
         reg.swap_total,
         reg.rollback_total
+    );
+    println!(
+        "delta-sync smoke     v1->v2 shares {}/{} chunks: {} B delta vs {} B full \
+         ({} B saved)",
+        reg.delta_shared_chunks,
+        reg.delta_total_chunks,
+        reg.delta_bytes,
+        reg.full_bytes,
+        reg.delta_bytes_saved
     );
     report.registry = Some(reg);
 

@@ -115,6 +115,17 @@ pub struct RegistryConfig {
     /// Deployment version to pin serving to (0 = unversioned legacy:
     /// no version headers, no skew checks).
     pub model_version: u64,
+    /// Directory `registry fetch` writes the verified halves into when
+    /// no explicit output paths are given on the command line.
+    pub out: String,
+    /// Chunking strategy for `registry publish`: `"fixed"` (1 MiB
+    /// boundaries) or `"cdc"` (content-defined gear-hash boundaries,
+    /// insertion-tolerant across versions).
+    pub chunking: String,
+    /// Source registry directory for `registry sync` / `registry delta`
+    /// (a mirror to pull missing chunks from). Empty = must be given on
+    /// the command line.
+    pub src: String,
 }
 
 impl Default for RegistryConfig {
@@ -124,6 +135,9 @@ impl Default for RegistryConfig {
             key: String::new(),
             key_id: "default".into(),
             model_version: 0,
+            out: "fetched".into(),
+            chunking: "fixed".into(),
+            src: String::new(),
         }
     }
 }
@@ -242,6 +256,17 @@ impl AppConfig {
             "registry.model_version" => {
                 self.registry.model_version = val.as_usize().ok_or_else(bad)? as u64
             }
+            "registry.out" => self.registry.out = val.as_str().ok_or_else(bad)?.into(),
+            "registry.chunking" => {
+                let v = val.as_str().ok_or_else(bad)?;
+                if v != "fixed" && v != "cdc" {
+                    return Err(Error::config(format!(
+                        "registry.chunking must be 'fixed' or 'cdc', got '{v}'"
+                    )));
+                }
+                self.registry.chunking = v.into();
+            }
+            "registry.src" => self.registry.src = val.as_str().ok_or_else(bad)?.into(),
             "channel" => {
                 let obj = val.as_obj().ok_or_else(bad)?;
                 for (ck, cv) in obj {
@@ -315,6 +340,9 @@ impl AppConfig {
                     .field("key", self.registry.key.as_str())
                     .field("key_id", self.registry.key_id.as_str())
                     .field("model_version", self.registry.model_version as usize)
+                    .field("out", self.registry.out.as_str())
+                    .field("chunking", self.registry.chunking.as_str())
+                    .field("src", self.registry.src.as_str())
                     .build(),
             )
             .field(
@@ -368,10 +396,17 @@ mod tests {
         c.apply_override("registry.key=super-secret").unwrap();
         c.apply_override("registry.key_id=prod-2026").unwrap();
         c.apply_override("registry.model_version=7").unwrap();
+        c.apply_override("registry.out=/tmp/deploy").unwrap();
+        c.apply_override("registry.chunking=cdc").unwrap();
+        c.apply_override("registry.src=/mnt/mirror").unwrap();
         assert_eq!(c.registry.dir, "/tmp/reg");
         assert_eq!(c.registry.key, "super-secret");
         assert_eq!(c.registry.key_id, "prod-2026");
         assert_eq!(c.registry.model_version, 7);
+        assert_eq!(c.registry.out, "/tmp/deploy");
+        assert_eq!(c.registry.chunking, "cdc");
+        assert_eq!(c.registry.src, "/mnt/mirror");
+        assert!(c.apply_override("registry.chunking=rolling").is_err());
         let text = c.to_json().to_string_pretty();
         let mut c2 = AppConfig::default();
         c2.apply_json(&json::parse(&text).unwrap()).unwrap();

@@ -27,7 +27,7 @@ use std::time::Instant;
 
 use crate::engine::{Engine as CodecEngine, EngineHandle};
 use crate::error::{Error, Result};
-use crate::runtime::registry::{smoke_decode, DeployParams, ModelSlot};
+use crate::runtime::registry::{smoke_decode, ChunkStore, DeployParams, ModelSlot};
 use crate::runtime::{Engine, ExecPool, LmSplitExec, Manifest, VisionSplitExec};
 use crate::telemetry::Registry;
 use crate::tensor::{Dtype, TensorRef};
@@ -134,8 +134,50 @@ pub struct CloudNode {
     /// Active registry deployment. Version 0 = unversioned legacy
     /// serving: no skew checks run and version headers are ignored.
     model_slot: ModelSlot<DeployParams>,
+    /// When present, the node also serves registry delta-sync frames
+    /// (FetchManifest/FetchChunk) out of this local store.
+    registry: Option<RegistryProvider>,
     vision_cache: Mutex<HashMap<(String, usize, usize), Arc<VisionSplitExec>>>,
     lm_cache: Mutex<HashMap<String, Arc<LmSplitExec>>>,
+}
+
+/// Serves the registry delta-sync frames (tags 17–20) out of a local
+/// [`ChunkStore`]. Standalone so it plugs into [`CloudNode`] *and*
+/// bare test/CI responders that have no inference artifacts at all.
+///
+/// Every chunk leaves the store fully verified ([`ChunkStore`] never
+/// hands out a corrupt payload), but the requester re-verifies anyway —
+/// the server is not in the trust boundary.
+pub struct RegistryProvider {
+    store: ChunkStore,
+}
+
+impl RegistryProvider {
+    pub fn new(store: ChunkStore) -> Self {
+        RegistryProvider { store }
+    }
+
+    /// Answer a registry frame; `None` when `kind` is not one. Failures
+    /// become `ServerError` replies (typed fatal on the client side —
+    /// re-requesting an absent chunk cannot help).
+    pub fn try_serve(&self, kind: &FrameKind) -> Option<FrameKind> {
+        match kind {
+            FrameKind::FetchManifest { model, version } => {
+                let slot = if *version == 0 { None } else { Some(*version) };
+                Some(match self.store.signed_manifest_text(model, slot) {
+                    Ok(json) => FrameKind::ManifestReply { json },
+                    Err(e) => FrameKind::ServerError { message: e.to_string() },
+                })
+            }
+            FrameKind::FetchChunk { sha256 } => {
+                Some(match self.store.get_chunk_by_addr(sha256) {
+                    Ok(payload) => FrameKind::ChunkReply { payload },
+                    Err(e) => FrameKind::ServerError { message: e.to_string() },
+                })
+            }
+            _ => None,
+        }
+    }
 }
 
 /// The pre-admission version check, as a pure function so it is
@@ -166,9 +208,19 @@ impl CloudNode {
             metrics: Arc::new(Registry::new()),
             admission: Admission::new(ServerLimits::default()),
             model_slot: ModelSlot::new(0, DeployParams::paper(8)),
+            registry: None,
             vision_cache: Mutex::new(HashMap::new()),
             lm_cache: Mutex::new(HashMap::new()),
         })
+    }
+
+    /// Also serve registry delta-sync frames out of `store`. Fetch
+    /// frames bypass the inference admission gate *and* the version
+    /// skew check — a skewed edge must be able to fetch the very
+    /// deployment that fixes its skew.
+    pub fn with_registry_store(mut self, store: ChunkStore) -> Self {
+        self.registry = Some(RegistryProvider::new(store));
+        self
     }
 
     /// Replace the default admission bounds.
@@ -338,6 +390,17 @@ impl CloudNode {
             }
             FrameKind::Stats => Ok(FrameKind::StatsReply { json: self.metrics.snapshot_json() }),
             FrameKind::Shutdown => Ok(FrameKind::Pong),
+            kind @ (FrameKind::FetchManifest { .. } | FrameKind::FetchChunk { .. }) => {
+                match self.registry.as_ref().and_then(|r| r.try_serve(kind)) {
+                    Some(reply) => {
+                        self.metrics.incr("cloud.registry_requests", 1);
+                        Ok(reply)
+                    }
+                    None => Err(Error::protocol(
+                        "this node does not serve registry frames (no registry store attached)",
+                    )),
+                }
+            }
             other => Err(Error::protocol(format!("unexpected frame {other:?}"))),
         };
         let kind = match reply {

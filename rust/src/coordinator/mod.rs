@@ -34,12 +34,14 @@ pub mod session;
 pub mod transport;
 
 pub use batcher::{Batcher, BatcherConfig};
-pub use cloud::{CloudNode, ServerLimits};
+pub use cloud::{CloudNode, RegistryProvider, ServerLimits};
 pub use edge::{EdgeConfig, EdgeNode, InferOutcome, LmEdgeNode};
 pub use fault::{FaultSpec, FaultStats, FaultyTransport};
 pub use protocol::{Frame, FrameKind};
 pub use router::{RouteInput, Router};
-pub use session::{DegradeEvent, DegradePolicy, DegradeState, Session, SessionConfig};
+pub use session::{
+    DegradeEvent, DegradePolicy, DegradeState, Session, SessionConfig, WireSource,
+};
 pub use transport::{
     connect_tcp, connect_tcp_timeout, InProcTransport, SimulatedLink, TcpTransport, Transport,
 };

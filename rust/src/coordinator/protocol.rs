@@ -39,6 +39,15 @@
 //!   declared version does not match its active deployment: fatal until
 //!   the edge resyncs from the registry, never a silent decode with the
 //!   wrong tail.
+//! * **Registry delta-sync frames (tags 17–20)** — chunk-level model
+//!   distribution over the same transport: [`FrameKind::FetchManifest`]
+//!   / [`FrameKind::ManifestReply`] move the *signed* manifest text
+//!   (the client verifies the HMAC itself — the wire is untrusted), and
+//!   [`FrameKind::FetchChunk`] / [`FrameKind::ChunkReply`] move one
+//!   content-addressed chunk payload (the client re-hashes the payload
+//!   against the requested address before storing it). A pre-delta peer
+//!   receiving any of these fails with its explicit "unknown frame tag"
+//!   error.
 
 use crate::error::{Error, Result};
 use crate::tensor::Dtype;
@@ -156,6 +165,33 @@ pub enum FrameKind {
         offered: u64,
         /// Human-readable context.
         message: String,
+    },
+    /// Request a model's signed manifest from a registry-serving peer.
+    FetchManifest {
+        /// Manifest model name.
+        model: String,
+        /// Version slot to fetch; `0` means "latest published".
+        version: u64,
+    },
+    /// Signed-manifest reply: the exact `SignedManifest` wrapper text.
+    /// The requester verifies the signature and parses the inner
+    /// document itself — nothing served over the wire is trusted.
+    ManifestReply {
+        /// SignedManifest wrapper JSON.
+        json: String,
+    },
+    /// Request one content-addressed chunk payload by SHA-256 address.
+    FetchChunk {
+        /// Lowercase hex SHA-256 address of the chunk payload.
+        sha256: String,
+    },
+    /// Chunk payload reply. Carries the raw payload only — the
+    /// requester recomputes SHA-256 and rejects the reply if it does
+    /// not match the address it asked for, so a tampering server (or
+    /// link) cannot poison the local store.
+    ChunkReply {
+        /// Raw chunk payload bytes.
+        payload: Vec<u8>,
     },
 }
 
@@ -295,6 +331,23 @@ impl Frame {
                 body.extend_from_slice(&active.to_le_bytes());
                 body.extend_from_slice(&offered.to_le_bytes());
                 write_str(body, message);
+            }
+            FrameKind::FetchManifest { model, version } => {
+                body.push(17);
+                write_str(body, model);
+                body.extend_from_slice(&version.to_le_bytes());
+            }
+            FrameKind::ManifestReply { json } => {
+                body.push(18);
+                write_str(body, json);
+            }
+            FrameKind::FetchChunk { sha256 } => {
+                body.push(19);
+                write_str(body, sha256);
+            }
+            FrameKind::ChunkReply { payload } => {
+                body.push(20);
+                write_bytes(body, payload);
             }
         }
     }
@@ -441,6 +494,18 @@ impl Frame {
                 pos += 16;
                 FrameKind::VersionSkew { active, offered, message: read_str(body, &mut pos)? }
             }
+            17 => {
+                let model = read_str(body, &mut pos)?;
+                if pos + 8 > body.len() {
+                    return Err(Error::protocol("fetch-manifest version truncated"));
+                }
+                let version = u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
+                pos += 8;
+                FrameKind::FetchManifest { model, version }
+            }
+            18 => FrameKind::ManifestReply { json: read_str(body, &mut pos)? },
+            19 => FrameKind::FetchChunk { sha256: read_str(body, &mut pos)? },
+            20 => FrameKind::ChunkReply { payload: read_bytes(body, &mut pos)? },
             t => return Err(Error::protocol(format!("unknown frame tag {t}"))),
         };
         if pos != body.len() {
@@ -486,6 +551,8 @@ impl Frame {
             | FrameKind::InferLmRaw { payload, .. } => payload.len(),
             FrameKind::Logits { data, .. } => data.len() * 4,
             FrameKind::StatsReply { json } => json.len(),
+            FrameKind::ManifestReply { json } => json.len(),
+            FrameKind::ChunkReply { payload } => payload.len(),
             _ => 0,
         }
     }
@@ -555,6 +622,66 @@ mod tests {
             offered: 3,
             message: "resync from registry".into(),
         });
+        roundtrip(FrameKind::FetchManifest { model: "resnet_mini_synth_a".into(), version: 0 });
+        roundtrip(FrameKind::FetchManifest { model: "m".into(), version: u64::MAX });
+        roundtrip(FrameKind::ManifestReply { json: "{\"algo\":\"hmac-sha256\"}".into() });
+        roundtrip(FrameKind::FetchChunk { sha256: "ab".repeat(32) });
+        roundtrip(FrameKind::ChunkReply { payload: vec![] });
+        roundtrip(FrameKind::ChunkReply { payload: vec![0xA5; 4096] });
+    }
+
+    #[test]
+    fn truncated_fetch_manifest_version_rejected() {
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.push(17);
+        varint::write_usize(&mut body, 1);
+        body.push(b'm');
+        body.extend_from_slice(&[0u8, 0, 0]); // only 3 of 8 version bytes
+        let err = Frame::from_body(&body).unwrap_err();
+        assert!(err.to_string().contains("fetch-manifest version truncated"), "{err}");
+    }
+
+    #[test]
+    fn delta_sync_frames_bitflip_wall() {
+        // Every single-bit flip anywhere in a delta-sync frame must be
+        // rejected (CRC or field validation), same wall the inference
+        // frames get.
+        for kind in [
+            FrameKind::FetchManifest { model: "m".into(), version: 3 },
+            FrameKind::ManifestReply { json: "{\"k\":1}".into() },
+            FrameKind::FetchChunk { sha256: "cd".repeat(32) },
+            FrameKind::ChunkReply { payload: vec![7; 33] },
+        ] {
+            let wire = Frame::new(11, kind).to_wire();
+            for i in 4..wire.len() {
+                let mut bad = wire.clone();
+                bad[i] ^= 0x01;
+                assert!(Frame::from_wire(&bad).is_err(), "flip at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn delta_sync_tags_are_unknown_to_a_pre_delta_parser_shape() {
+        // The additive-tag discipline: tag 21 (one past ChunkReply) is
+        // still a loud unknown, proving new tags didn't widen the
+        // accepted set beyond what was assigned.
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.push(21);
+        let err = Frame::from_body(&body).unwrap_err();
+        assert!(err.to_string().contains("unknown frame tag 21"), "{err}");
+    }
+
+    #[test]
+    fn chunk_reply_payload_counts_as_link_bytes() {
+        let f = Frame::new(0, FrameKind::ChunkReply { payload: vec![0; 777] });
+        assert_eq!(f.payload_len(), 777);
+        let f = Frame::new(0, FrameKind::ManifestReply { json: "x".repeat(20) });
+        assert_eq!(f.payload_len(), 20);
+        let f = Frame::new(0, FrameKind::FetchChunk { sha256: "ab".repeat(32) });
+        assert_eq!(f.payload_len(), 0);
     }
 
     #[test]

@@ -375,6 +375,68 @@ impl<T: Transport> Session<T> {
     }
 }
 
+/// A [`ChunkSource`](crate::runtime::registry::ChunkSource) that pulls
+/// manifests and chunks over a [`Session`] with the tag 17–20 registry
+/// frames — inheriting the session's retries, deadlines, backoff, and
+/// reconnect, so a delta sync rides the same failure semantics as
+/// inference traffic.
+///
+/// Nothing received is trusted: a `ChunkReply` payload is re-hashed
+/// against the requested address here, *before* the sync layer (which
+/// verifies again) ever sees it, and a mismatch is fatal corruption —
+/// retrying a tampering server cannot help.
+pub struct WireSource<T: Transport> {
+    session: Session<T>,
+}
+
+impl<T: Transport> WireSource<T> {
+    pub fn new(session: Session<T>) -> Self {
+        WireSource { session }
+    }
+
+    /// Hand the session back (e.g. to resume inference after a sync).
+    pub fn into_session(self) -> Session<T> {
+        self.session
+    }
+}
+
+impl<T: Transport> crate::runtime::registry::ChunkSource for WireSource<T> {
+    fn fetch_manifest(&mut self, model: &str, version: u64) -> Result<String> {
+        let kind = FrameKind::FetchManifest { model: model.to_string(), version };
+        match self.session.call(kind)?.kind {
+            FrameKind::ManifestReply { json } => Ok(json),
+            FrameKind::ServerError { message } => {
+                Err(Error::artifact(format!("registry peer refused manifest: {message}")))
+            }
+            other => Err(Error::protocol(format!(
+                "unexpected reply to FetchManifest: {other:?}"
+            ))),
+        }
+    }
+
+    fn fetch_chunk(&mut self, sha256: &str) -> Result<Vec<u8>> {
+        let kind = FrameKind::FetchChunk { sha256: sha256.to_string() };
+        match self.session.call(kind)?.kind {
+            FrameKind::ChunkReply { payload } => {
+                let got = crate::util::sha256::to_hex(&crate::util::sha256::hash(&payload));
+                if got != sha256 {
+                    return Err(Error::corrupt(format!(
+                        "chunk {sha256}: peer served payload hashing to {got} \
+                         (tampered server or link)"
+                    )));
+                }
+                Ok(payload)
+            }
+            FrameKind::ServerError { message } => {
+                Err(Error::artifact(format!("registry peer refused chunk: {message}")))
+            }
+            other => Err(Error::protocol(format!(
+                "unexpected reply to FetchChunk: {other:?}"
+            ))),
+        }
+    }
+}
+
 /// Tunables for the edge-side graceful-degradation policy.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DegradePolicy {

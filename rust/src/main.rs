@@ -8,13 +8,16 @@
 //! * `optimize`      — run Algorithm 1 on a feature tensor, print Ñ.
 //! * `accuracy`      — Table-2 style accuracy sweep for one model route.
 //! * `stats`         — fetch a cloud node's metrics snapshot.
-//! * `registry`      — publish/fetch/verify signed model deployments
-//!   (`registry publish|fetch|verify`, keyed by `--set registry.key=…`).
+//! * `registry`      — publish/fetch/verify signed model deployments,
+//!   diff versions, and delta-sync from a mirror
+//!   (`registry publish|fetch|verify|delta|sync`, keyed by
+//!   `--set registry.key=…`).
 //! * `version`       — print the version.
 //!
 //! Global flags: `--config <file.json>` and repeated `--set key=value`
 //! overrides (see `config::AppConfig`).
 
+use std::path::PathBuf;
 use std::process::ExitCode;
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
@@ -241,12 +244,16 @@ fn cmd_accuracy(cfg: &AppConfig, rest: &[String]) -> Result<()> {
 
 fn cmd_registry(cfg: &AppConfig, rest: &[String]) -> Result<()> {
     use rans_sc::runtime::registry::{
-        ChunkStore, DeployParams, HmacSha256Signer, RegistryManifest, DEFAULT_CHUNK_LEN,
+        sync_deployment, CdcParams, ChunkStore, DeltaPlan, DeployParams, HmacSha256Signer,
+        RegistryManifest, StoreSource, SyncOptions, DEFAULT_CHUNK_LEN,
     };
     let usage = || {
         rans_sc::Error::config(
             "usage: registry publish <model> <version> <head-file> <tail-file> | \
-             registry fetch <model> [version] | registry verify <model> [version]",
+             registry fetch <model> [version] [head-out tail-out] | \
+             registry verify <model> [version] | \
+             registry delta <model> <from> <to> | \
+             registry sync <model> [version]  (source via --set registry.src=DIR)",
         )
     };
     let sub = rest.first().map(String::as_str).ok_or_else(usage)?;
@@ -276,6 +283,15 @@ fn cmd_registry(cfg: &AppConfig, rest: &[String]) -> Result<()> {
             };
             let head_bytes = read(head_path)?;
             let tail_bytes = read(tail_path)?;
+            // CDC boundaries survive insertions across versions, so
+            // later `registry delta` transfers stay minimal.
+            let put = |bytes: &[u8]| {
+                if cfg.registry.chunking == "cdc" {
+                    store.put_artifact_cdc(bytes, &CdcParams::default())
+                } else {
+                    store.put_artifact(bytes, DEFAULT_CHUNK_LEN)
+                }
+            };
             let manifest = RegistryManifest {
                 model: model.clone(),
                 model_version: version,
@@ -287,28 +303,53 @@ fn cmd_registry(cfg: &AppConfig, rest: &[String]) -> Result<()> {
                     states: cfg.states,
                     dtype: cfg.dtype.name().into(),
                 },
-                head: store.put_artifact(&head_bytes, DEFAULT_CHUNK_LEN)?,
-                tail: store.put_artifact(&tail_bytes, DEFAULT_CHUNK_LEN)?,
+                head: put(&head_bytes)?,
+                tail: put(&tail_bytes)?,
             };
             let path = store.publish(&manifest, &signer)?;
             println!(
-                "published {model} v{version} ({} + {} bytes, {} chunks) -> {}",
+                "published {model} v{version} ({} + {} bytes, {} chunks, {} chunking) -> {}",
                 head_bytes.len(),
                 tail_bytes.len(),
                 manifest.head.chunks.len() + manifest.tail.chunks.len(),
+                cfg.registry.chunking,
                 path.display()
             );
         }
         "fetch" => {
             let model = rest.get(1).ok_or_else(usage)?;
-            let version = rest.get(2).map(parse_version).transpose()?;
+            // `fetch <model> [version] [head-out tail-out]`: an
+            // all-digits second operand is the version, anything else
+            // starts the output paths.
+            let has_version =
+                rest.get(2).is_some_and(|s| !s.is_empty() && s.bytes().all(|b| b.is_ascii_digit()));
+            let version = if has_version { Some(parse_version(&rest[2])?) } else { None };
+            let out_idx = if has_version { 3 } else { 2 };
             let dep = store.fetch(model, version, &signer)?;
+            let v = dep.manifest.model_version;
+            let (head_out, tail_out) = match (rest.get(out_idx), rest.get(out_idx + 1)) {
+                (Some(h), Some(t)) => (PathBuf::from(h), PathBuf::from(t)),
+                (Some(_), None) => {
+                    return Err(rans_sc::Error::config(
+                        "fetch output needs BOTH paths: <head-out> <tail-out>",
+                    ))
+                }
+                (None, _) => {
+                    let dir = PathBuf::from(&cfg.registry.out);
+                    (
+                        dir.join(format!("{model}-v{v}-head.bin")),
+                        dir.join(format!("{model}-v{v}-tail.bin")),
+                    )
+                }
+            };
+            dep.write_to(&head_out, &tail_out)?;
             println!(
-                "fetched {} v{}: head {} B, tail {} B (every byte verified)",
+                "fetched {} v{v}: head {} B -> {}, tail {} B -> {} (every byte verified)",
                 dep.manifest.model,
-                dep.manifest.model_version,
                 dep.head.len(),
-                dep.tail.len()
+                head_out.display(),
+                dep.tail.len(),
+                tail_out.display()
             );
             let d = &dep.manifest.deploy;
             println!(
@@ -326,6 +367,41 @@ fn cmd_registry(cfg: &AppConfig, rest: &[String]) -> Result<()> {
                 "verified {} v{}: signature ok, head {head} B ok, tail {tail} B ok",
                 manifest.model, manifest.model_version
             );
+        }
+        "delta" => {
+            let (model, from, to) = match (rest.get(1), rest.get(2), rest.get(3)) {
+                (Some(m), Some(f), Some(t)) => (m, parse_version(f)?, parse_version(t)?),
+                _ => return Err(usage()),
+            };
+            let from_m = store.load_manifest(model, Some(from), &signer)?;
+            let to_m = store.load_manifest(model, Some(to), &signer)?;
+            let plan = DeltaPlan::plan(&from_m, &to_m);
+            println!("{}", plan.to_json());
+        }
+        "sync" => {
+            let model = rest.get(1).ok_or_else(usage)?;
+            let version = rest.get(2).map(parse_version).transpose()?.unwrap_or(0);
+            if cfg.registry.src.is_empty() {
+                return Err(rans_sc::Error::config(
+                    "registry.src is not set (--set registry.src=DIR): nothing to sync from",
+                ));
+            }
+            // Deterministic mid-stream kill for the resume wall: CI
+            // sets this to abort after N chunk downloads, then re-runs
+            // the sync and asserts no completed chunk is re-fetched.
+            let abort_after = std::env::var("RANS_SC_SYNC_ABORT_AFTER")
+                .ok()
+                .and_then(|s| s.parse::<u64>().ok());
+            let mut source = StoreSource::open(&cfg.registry.src);
+            let (manifest, report) = sync_deployment(
+                &store,
+                &mut source,
+                &signer,
+                model,
+                version,
+                &SyncOptions { abort_after },
+            )?;
+            println!("synced {} v{}: {}", manifest.model, manifest.model_version, report.to_json());
         }
         _ => return Err(usage()),
     }
@@ -374,11 +450,20 @@ COMMANDS:
                      chunk, hash, sign, and store a deployment
                      (key via --set registry.key=…, root via
                      --set registry.dir=…)
-  registry fetch <model> [version]
+  registry fetch <model> [version] [head-out tail-out]
                      fetch a deployment, verifying signature and
-                     every chunk's SHA-256 while streaming
+                     every chunk's SHA-256 while streaming, then
+                     write both halves to the output paths (default:
+                     --set registry.out=DIR, ./fetched)
   registry verify <model> [version]
                      verify a stored deployment without keeping it
+  registry delta <model> <from> <to>
+                     diff two published versions' chunk sets; print
+                     missing addresses + delta_bytes vs full_bytes
+  registry sync <model> [version]
+                     delta-sync a version from a mirror registry
+                     (--set registry.src=DIR), resuming any
+                     interrupted fetch from its sidecar
   version            print version
 ",
         rans_sc::version()

@@ -1,0 +1,216 @@
+//! Content-defined chunking (gear rolling hash).
+//!
+//! Fixed-size chunking ([`DEFAULT_CHUNK_LEN`](super::DEFAULT_CHUNK_LEN))
+//! is simple but brittle across versions: one early insertion in a
+//! weight file shifts every later boundary, so chunks that are
+//! byte-identical in content no longer align and the delta planner sees
+//! a near-total rewrite. Content-defined chunking cuts where the *data*
+//! says to cut — a boundary lands wherever the rolling hash of the last
+//! few bytes matches a mask — so after an insertion the boundaries
+//! resynchronize within roughly one chunk and the unchanged tail dedups
+//! again.
+//!
+//! The rolling hash is the "gear" construction: one table lookup and a
+//! shift per byte (`h = (h << 1) + GEAR[b]`), with the boundary test
+//! `h & mask == 0` applied only once the chunk has reached `min_len`.
+//! The 256-entry gear table is derived deterministically from the
+//! repo's own seeded xoshiro256++ PRNG, so chunk boundaries — and
+//! therefore chunk *addresses* — are identical across builds, machines,
+//! and sessions. That determinism is load-bearing: two registries that
+//! chunk the same artifact must agree on every address or delta sync
+//! degenerates to a full fetch.
+
+use std::sync::OnceLock;
+
+use crate::error::{Error, Result};
+use crate::util::prng::Rng;
+
+/// Seed for the deterministic gear table. Changing it changes every
+/// CDC chunk address ever produced; treat it like a wire constant.
+const GEAR_SEED: u64 = 0x5243_4443_4745_4152; // "RCDCGEAR"
+
+fn gear_table() -> &'static [u64; 256] {
+    static TABLE: OnceLock<[u64; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut rng = Rng::new(GEAR_SEED);
+        let mut t = [0u64; 256];
+        for slot in t.iter_mut() {
+            *slot = rng.next_u64();
+        }
+        t
+    })
+}
+
+/// Boundary policy for content-defined chunking.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CdcParams {
+    /// No boundary before this many bytes (also the floor for the final
+    /// chunk's predecessors; the final chunk itself may be shorter).
+    pub min_len: usize,
+    /// Boundary mask: a cut lands where `hash & mask == 0`, so the
+    /// expected chunk length is roughly `min_len + 1/density(mask)`.
+    /// Must be one less than a power of two.
+    pub mask: u64,
+    /// Hard cap: force a boundary at this many bytes even if the hash
+    /// never matches (pathological inputs, e.g. all-zero weights).
+    pub max_len: usize,
+}
+
+impl CdcParams {
+    /// Params targeting an average chunk length of `avg` bytes (must be
+    /// a power of two ≥ 256): min = avg/4, mask = avg-1, max = 4·avg.
+    pub fn with_avg(avg: usize) -> Result<Self> {
+        if !avg.is_power_of_two() || avg < 256 {
+            return Err(Error::invalid(format!(
+                "cdc avg chunk length must be a power of two >= 256, got {avg}"
+            )));
+        }
+        Ok(CdcParams { min_len: avg / 4, mask: (avg - 1) as u64, max_len: avg * 4 })
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.min_len == 0 || self.max_len < self.min_len {
+            return Err(Error::invalid(format!(
+                "cdc params invalid: min_len {} max_len {}",
+                self.min_len, self.max_len
+            )));
+        }
+        if self.mask.wrapping_add(1) & self.mask != 0 {
+            return Err(Error::invalid(format!(
+                "cdc mask {:#x} must be one less than a power of two",
+                self.mask
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl Default for CdcParams {
+    /// 256 KiB average: min 64 KiB, max 1 MiB — small enough that one
+    /// flipped region re-fetches little, large enough to amortize the
+    /// 12-byte frame + one store object per chunk.
+    fn default() -> Self {
+        CdcParams::with_avg(1 << 18).expect("default cdc params are valid")
+    }
+}
+
+/// Split `bytes` into content-defined chunk lengths. The lengths sum to
+/// `bytes.len()` exactly; an empty input yields one empty chunk so the
+/// descriptor shape matches [`put_artifact`]'s empty-artifact contract.
+///
+/// [`put_artifact`]: super::ChunkStore::put_artifact
+pub fn split(bytes: &[u8], params: &CdcParams) -> Result<Vec<usize>> {
+    params.validate()?;
+    let gear = gear_table();
+    let mut lens = Vec::new();
+    let mut start = 0usize;
+    while start < bytes.len() {
+        let remain = &bytes[start..];
+        let mut cut = remain.len().min(params.max_len);
+        if remain.len() > params.min_len {
+            let mut h: u64 = 0;
+            let scan_end = remain.len().min(params.max_len);
+            for (i, &b) in remain[..scan_end].iter().enumerate() {
+                h = (h << 1).wrapping_add(gear[b as usize]);
+                if i + 1 >= params.min_len && h & params.mask == 0 {
+                    cut = i + 1;
+                    break;
+                }
+            }
+        }
+        lens.push(cut);
+        start += cut;
+    }
+    if lens.is_empty() {
+        lens.push(0);
+    }
+    Ok(lens)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic(seed: u64, n: usize) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (rng.next_u64() & 0xff) as u8).collect()
+    }
+
+    #[test]
+    fn lengths_partition_the_input() {
+        let params = CdcParams::with_avg(1 << 10).unwrap();
+        for n in [0usize, 1, 255, 4096, 100_000] {
+            let data = synthetic(7 + n as u64, n);
+            let lens = split(&data, &params).unwrap();
+            assert_eq!(lens.iter().sum::<usize>(), n, "n={n}");
+            assert!(!lens.is_empty());
+            for (i, &l) in lens.iter().enumerate() {
+                if n == 0 {
+                    assert_eq!(l, 0);
+                    continue;
+                }
+                assert!(l <= params.max_len, "chunk {i} over max: {l}");
+                assert!(l > 0, "zero-length chunk {i} in non-empty input");
+                if i + 1 < lens.len() {
+                    assert!(l >= params.min_len, "non-final chunk {i} under min: {l}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn boundaries_are_deterministic() {
+        let data = synthetic(42, 200_000);
+        let params = CdcParams::default();
+        assert_eq!(split(&data, &params).unwrap(), split(&data, &params).unwrap());
+    }
+
+    #[test]
+    fn max_len_forces_cut_on_pathological_input() {
+        let data = vec![0u8; 1 << 20];
+        let params = CdcParams::with_avg(1 << 12).unwrap();
+        let lens = split(&data, &params).unwrap();
+        assert!(lens.iter().all(|&l| l <= params.max_len));
+        assert!(lens.len() >= (1 << 20) / params.max_len);
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        assert!(CdcParams::with_avg(300).is_err());
+        assert!(CdcParams::with_avg(128).is_err());
+        let bad = CdcParams { min_len: 0, mask: 0xff, max_len: 10 };
+        assert!(split(b"abc", &bad).is_err());
+        let bad_mask = CdcParams { min_len: 1, mask: 0xfe, max_len: 10 };
+        assert!(split(b"abc", &bad_mask).is_err());
+    }
+
+    #[test]
+    fn early_insertion_resynchronizes_boundaries() {
+        // The CDC promise: insert a few bytes near the front and the
+        // chunking realigns, so most tail chunk payloads are identical.
+        let base = synthetic(99, 1 << 18);
+        let mut edited = base.clone();
+        for (i, b) in synthetic(100, 13).into_iter().enumerate() {
+            edited.insert(1000 + i, b);
+        }
+        let params = CdcParams::with_avg(1 << 12).unwrap();
+        let cuts = |d: &[u8]| -> Vec<Vec<u8>> {
+            let mut out = Vec::new();
+            let mut off = 0;
+            for l in split(d, &params).unwrap() {
+                out.push(d[off..off + l].to_vec());
+                off += l;
+            }
+            out
+        };
+        let a = cuts(&base);
+        let b = cuts(&edited);
+        let a_set: std::collections::HashSet<&Vec<u8>> = a.iter().collect();
+        let shared = b.iter().filter(|c| a_set.contains(c)).count();
+        assert!(
+            shared * 2 > b.len(),
+            "only {shared}/{} chunks survived a 13-byte early insertion",
+            b.len()
+        );
+    }
+}

@@ -1,0 +1,542 @@
+//! Delta-sync artifact distribution: chunk-set diffing, a
+//! store-consulting fetch path, and durable resume.
+//!
+//! The registry gives every artifact a content-addressed chunk list,
+//! which turns version N → N+1 distribution into a *set-difference*
+//! problem: an edge holding v(N) already has most of v(N+1)'s chunks
+//! (fine-tuned halves share the bulk of their weights), so a sync
+//! should transfer only the missing addresses. Three layers:
+//!
+//! * [`DeltaPlan`] — pure planner: diff two manifests' chunk sets and
+//!   report the missing addresses plus `delta_bytes` / `full_bytes`.
+//! * [`ChunkSource`] — where missing chunks come from:
+//!   [`StoreSource`] reads another on-disk registry (mirror /
+//!   USB-sneakernet sync), [`WireSource`](crate::coordinator::WireSource)
+//!   pulls them over a [`Session`](crate::coordinator::Session) with the
+//!   tag 17–20 frames. Nothing a source returns is trusted: the signed
+//!   manifest is verified against the local key, and every chunk
+//!   payload is re-hashed against the address it was requested by.
+//! * [`sync_deployment`] / [`sync_artifact`] — the fetch path. Each
+//!   chunk is looked up in the local [`ChunkStore`] first (safe because
+//!   dedup hits verify the on-disk object, see
+//!   [`ChunkStore::put_chunk`]), fetched only when absent or invalid,
+//!   and recorded in a sidecar (`state/<artifact-sha>.sync` under the
+//!   registry root) after each verified write — so a fetch dropped
+//!   mid-`Session` resumes from verified partial progress without
+//!   re-downloading a single completed chunk.
+
+use std::collections::HashSet;
+use std::fs;
+use std::path::PathBuf;
+
+use crate::error::{Error, Result};
+use crate::runtime::registry::manifest::{
+    ArtifactDescriptor, ChunkRef, RegistryManifest, SignedManifest,
+};
+use crate::runtime::registry::signer::Signer;
+use crate::runtime::registry::store::{atomic_write, ChunkStore};
+use crate::util::json::{self, ObjBuilder};
+use crate::util::sha256;
+
+/// The chunk-set difference between two versions of one model.
+#[derive(Debug, Clone)]
+pub struct DeltaPlan {
+    /// Version the edge already holds.
+    pub from_version: u64,
+    /// Version being synced to.
+    pub to_version: u64,
+    /// Chunks of `to` absent from `from`, deduplicated by address, in
+    /// fetch order (head chunks before tail chunks).
+    pub missing: Vec<ChunkRef>,
+    /// Bytes a delta fetch transfers (sum of `missing` lengths).
+    pub delta_bytes: u64,
+    /// Bytes a cold full fetch of `to` transfers (unique chunks only —
+    /// even a full fetch never pulls one address twice).
+    pub full_bytes: u64,
+    /// Unique chunks in `to`.
+    pub total_chunks: usize,
+    /// Unique chunks of `to` already present in `from`.
+    pub shared_chunks: usize,
+}
+
+impl DeltaPlan {
+    /// Diff `to`'s chunk set against `from`'s.
+    pub fn plan(from: &RegistryManifest, to: &RegistryManifest) -> DeltaPlan {
+        let have: HashSet<&str> = from.all_chunks().map(|c| c.sha256.as_str()).collect();
+        let mut seen: HashSet<&str> = HashSet::new();
+        let mut missing = Vec::new();
+        let mut delta_bytes = 0u64;
+        let mut full_bytes = 0u64;
+        let mut total_chunks = 0usize;
+        let mut shared_chunks = 0usize;
+        for chunk in to.all_chunks() {
+            if !seen.insert(chunk.sha256.as_str()) {
+                continue;
+            }
+            total_chunks += 1;
+            full_bytes += chunk.len;
+            if have.contains(chunk.sha256.as_str()) {
+                shared_chunks += 1;
+            } else {
+                delta_bytes += chunk.len;
+                missing.push(chunk.clone());
+            }
+        }
+        DeltaPlan {
+            from_version: from.model_version,
+            to_version: to.model_version,
+            missing,
+            delta_bytes,
+            full_bytes,
+            total_chunks,
+            shared_chunks,
+        }
+    }
+
+    /// Bytes a delta fetch avoids relative to a cold full fetch.
+    pub fn bytes_saved(&self) -> u64 {
+        self.full_bytes - self.delta_bytes
+    }
+
+    /// One-line JSON summary (the CLI `registry delta` output).
+    pub fn to_json(&self) -> String {
+        ObjBuilder::new()
+            .field("from_version", self.from_version as usize)
+            .field("to_version", self.to_version as usize)
+            .field("total_chunks", self.total_chunks)
+            .field("shared_chunks", self.shared_chunks)
+            .field("missing_chunks", self.missing.len())
+            .field("delta_bytes", self.delta_bytes as usize)
+            .field("full_bytes", self.full_bytes as usize)
+            .field("bytes_saved", self.bytes_saved() as usize)
+            .build()
+            .to_string_compact()
+    }
+}
+
+/// Where missing chunks come from. Implementations transport bytes;
+/// they do not authenticate them — the sync path verifies everything
+/// it receives against the signed manifest and the content addresses.
+pub trait ChunkSource {
+    /// The signed-manifest wrapper text for `model` at `version`
+    /// (`0` = latest published).
+    fn fetch_manifest(&mut self, model: &str, version: u64) -> Result<String>;
+    /// One chunk payload by SHA-256 address.
+    fn fetch_chunk(&mut self, sha256: &str) -> Result<Vec<u8>>;
+}
+
+/// A [`ChunkSource`] backed by another on-disk registry (a mirror
+/// directory, a mounted drive). Chunks come out of the source store
+/// fully verified — a corrupt mirror yields a typed error, not bytes.
+pub struct StoreSource {
+    store: ChunkStore,
+}
+
+impl StoreSource {
+    pub fn open(root: impl Into<PathBuf>) -> Self {
+        StoreSource { store: ChunkStore::open(root) }
+    }
+}
+
+impl ChunkSource for StoreSource {
+    fn fetch_manifest(&mut self, model: &str, version: u64) -> Result<String> {
+        let slot = if version == 0 { None } else { Some(version) };
+        self.store.signed_manifest_text(model, slot)
+    }
+
+    fn fetch_chunk(&mut self, sha256: &str) -> Result<Vec<u8>> {
+        self.store.get_chunk_by_addr(sha256)
+    }
+}
+
+/// Deterministic fault injection for the resume wall: abort the sync
+/// with a transport-class error after this many chunk *downloads*
+/// (local-store hits don't count). `None` = never.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SyncOptions {
+    pub abort_after: Option<u64>,
+}
+
+/// What one sync moved, and what it avoided moving.
+#[derive(Debug, Clone, Default)]
+pub struct SyncReport {
+    /// Chunks pulled from the source this run.
+    pub chunks_fetched: u64,
+    /// Chunks satisfied by the local store (cross-version dedup or a
+    /// previous partial sync). Includes `chunks_resumed`.
+    pub chunks_reused: u64,
+    /// Subset of `chunks_reused` recorded by an interrupted run's
+    /// sidecar — verified partial progress that survived the drop.
+    pub chunks_resumed: u64,
+    /// Bytes pulled from the source this run.
+    pub bytes_fetched: u64,
+    /// Bytes the local store already held.
+    pub bytes_reused: u64,
+    /// Poisoned local objects repaired along the way (see
+    /// [`ChunkStore::repair_count`]).
+    pub repairs: u64,
+}
+
+impl SyncReport {
+    pub fn to_json(&self) -> String {
+        ObjBuilder::new()
+            .field("chunks_fetched", self.chunks_fetched as usize)
+            .field("chunks_reused", self.chunks_reused as usize)
+            .field("chunks_resumed", self.chunks_resumed as usize)
+            .field("bytes_fetched", self.bytes_fetched as usize)
+            .field("bytes_reused", self.bytes_reused as usize)
+            .field("repairs", self.repairs as usize)
+            .build()
+            .to_string_compact()
+    }
+}
+
+/// Sidecar path for an artifact's in-progress sync state.
+fn sidecar_path(store: &ChunkStore, desc: &ArtifactDescriptor) -> PathBuf {
+    store.root().join("state").join(format!("{}.sync", desc.sha256))
+}
+
+/// Load the set of chunk addresses a previous (interrupted) sync
+/// recorded as verified-and-stored. A missing or unparseable sidecar
+/// just means "start from the store's own contents" — the sidecar is a
+/// progress record, never an authority.
+fn load_sidecar(store: &ChunkStore, desc: &ArtifactDescriptor) -> HashSet<String> {
+    let path = sidecar_path(store, desc);
+    let Ok(text) = fs::read_to_string(&path) else {
+        return HashSet::new();
+    };
+    let Ok(v) = json::parse(&text) else {
+        return HashSet::new();
+    };
+    if v.str_field("artifact").ok() != Some(desc.sha256.as_str()) {
+        return HashSet::new();
+    }
+    let Some(done) = v.get("done").and_then(|d| d.as_arr()) else {
+        return HashSet::new();
+    };
+    done.iter().filter_map(|d| d.as_str().map(str::to_string)).collect()
+}
+
+fn write_sidecar(
+    store: &ChunkStore,
+    desc: &ArtifactDescriptor,
+    done: &HashSet<String>,
+) -> Result<()> {
+    let mut sorted: Vec<String> = done.iter().cloned().collect();
+    sorted.sort();
+    let text = ObjBuilder::new()
+        .field("artifact", desc.sha256.as_str())
+        .field("done", sorted)
+        .build()
+        .to_string_compact();
+    atomic_write(&sidecar_path(store, desc), text.as_bytes())
+}
+
+/// Bring every chunk of `desc` into `store`, consulting the store
+/// before pulling each chunk from `source`, and finish with a full
+/// streaming verification of the artifact. Progress is durable: after
+/// every verified chunk the sidecar is rewritten atomically, and a
+/// sidecar from an interrupted run lets the next call skip local
+/// verification probes for chunks it already completed — a resumed
+/// fetch never re-downloads a verified chunk, by construction (the
+/// store lookup would satisfy it even without the sidecar).
+pub fn sync_artifact(
+    store: &ChunkStore,
+    source: &mut dyn ChunkSource,
+    desc: &ArtifactDescriptor,
+    opts: &SyncOptions,
+    report: &mut SyncReport,
+) -> Result<()> {
+    let recorded = load_sidecar(store, desc);
+    let mut done: HashSet<String> = HashSet::new();
+    for chunk in &desc.chunks {
+        if done.contains(&chunk.sha256) {
+            continue; // repeated address within one artifact
+        }
+        // The local store is consulted before the source, whatever the
+        // sidecar says: the sidecar's word is never trusted on its own
+        // — a chunk counts as done only if the on-disk object still
+        // fully verifies. A poisoned object is re-fetched.
+        if store.get_chunk(chunk).is_ok() {
+            report.chunks_reused += 1;
+            report.bytes_reused += chunk.len;
+            if recorded.contains(&chunk.sha256) {
+                report.chunks_resumed += 1;
+            }
+        } else {
+            if let Some(cap) = opts.abort_after {
+                if report.chunks_fetched >= cap {
+                    return Err(Error::transport(format!(
+                        "sync aborted by fault injection after {cap} downloads \
+                         (artifact {})",
+                        desc.sha256
+                    )));
+                }
+            }
+            let payload = source.fetch_chunk(&chunk.sha256)?;
+            if payload.len() as u64 != chunk.len {
+                return Err(Error::corrupt(format!(
+                    "chunk {}: source served {} bytes, manifest says {}",
+                    chunk.sha256,
+                    payload.len(),
+                    chunk.len
+                )));
+            }
+            let got = sha256::to_hex(&sha256::hash(&payload));
+            if got != chunk.sha256 {
+                return Err(Error::corrupt(format!(
+                    "chunk {}: source served payload hashing to {got} \
+                     (tampered source or link)",
+                    chunk.sha256
+                )));
+            }
+            store.put_chunk(&payload)?;
+            report.chunks_fetched += 1;
+            report.bytes_fetched += payload.len() as u64;
+        }
+        done.insert(chunk.sha256.clone());
+        write_sidecar(store, desc, &done)?;
+    }
+    // End-to-end proof over the assembled chunk list, O(chunk) memory.
+    store.verify_artifact(desc)?;
+    let _ = fs::remove_file(sidecar_path(store, desc));
+    Ok(())
+}
+
+/// Sync one model version end to end: fetch + verify the signed
+/// manifest, delta-sync both halves against the local store, adopt the
+/// manifest into the canonical version slot (only after every chunk
+/// verified), and report what moved.
+pub fn sync_deployment(
+    store: &ChunkStore,
+    source: &mut dyn ChunkSource,
+    signer: &dyn Signer,
+    model: &str,
+    version: u64,
+    opts: &SyncOptions,
+) -> Result<(RegistryManifest, SyncReport)> {
+    let signed_text = source.fetch_manifest(model, version)?;
+    let manifest = SignedManifest::from_json_text(&signed_text)?.verify(signer)?;
+    if manifest.model != model {
+        return Err(Error::corrupt(format!(
+            "source served manifest for model '{}', requested '{model}'",
+            manifest.model
+        )));
+    }
+    if version != 0 && manifest.model_version != version {
+        return Err(Error::version_skew(
+            manifest.model_version,
+            version,
+            format!(
+                "source served model_version {} for requested slot {version}",
+                manifest.model_version
+            ),
+        ));
+    }
+    let repairs_before = store.repair_count();
+    let mut report = SyncReport::default();
+    sync_artifact(store, source, &manifest.head, opts, &mut report)?;
+    sync_artifact(store, source, &manifest.tail, opts, &mut report)?;
+    store.adopt_manifest(model, &signed_text, signer)?;
+    report.repairs = store.repair_count() - repairs_before;
+    Ok((manifest, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::registry::manifest::DeployParams;
+    use crate::runtime::registry::signer::HmacSha256Signer;
+    use crate::util::prng::Rng;
+
+    struct Scratch(PathBuf);
+
+    impl Scratch {
+        fn new(tag: &str) -> Self {
+            let dir = std::env::temp_dir().join(format!(
+                "rans-sc-delta-{tag}-{}-{:x}",
+                std::process::id(),
+                Rng::new(0xD17A ^ tag.len() as u64).next_u64()
+            ));
+            fs::create_dir_all(&dir).unwrap();
+            Scratch(dir)
+        }
+    }
+
+    impl Drop for Scratch {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.0);
+        }
+    }
+
+    fn bytes(seed: u64, n: usize) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (rng.next_u64() & 0xff) as u8).collect()
+    }
+
+    fn manifest_for(
+        store: &ChunkStore,
+        version: u64,
+        head: &[u8],
+        tail: &[u8],
+    ) -> RegistryManifest {
+        RegistryManifest {
+            model: "m".into(),
+            model_version: version,
+            deploy: DeployParams::paper(4),
+            head: store.put_artifact(head, 64).unwrap(),
+            tail: store.put_artifact(tail, 64).unwrap(),
+        }
+    }
+
+    #[test]
+    fn plan_reports_set_difference_not_positions() {
+        let s = Scratch::new("plan");
+        let store = ChunkStore::open(s.0.join("reg"));
+        let head1 = bytes(1, 64 * 10);
+        let tail1 = bytes(2, 64 * 4);
+        // v2 appends one new chunk to the head and keeps the tail.
+        let mut head2 = head1.clone();
+        head2.extend_from_slice(&bytes(3, 64));
+        let m1 = manifest_for(&store, 1, &head1, &tail1);
+        let m2 = manifest_for(&store, 2, &head2, &tail1);
+        let plan = DeltaPlan::plan(&m1, &m2);
+        assert_eq!(plan.missing.len(), 1);
+        assert_eq!(plan.delta_bytes, 64);
+        assert_eq!(plan.full_bytes, 64 * 15);
+        assert_eq!(plan.shared_chunks + plan.missing.len(), plan.total_chunks);
+        assert_eq!(plan.bytes_saved(), 64 * 14);
+        // Identical versions: nothing to move.
+        let plan = DeltaPlan::plan(&m2, &m2);
+        assert!(plan.missing.is_empty());
+        assert_eq!(plan.delta_bytes, 0);
+        let json = plan.to_json();
+        assert!(json.contains("\"delta_bytes\":0"), "{json}");
+    }
+
+    #[test]
+    fn store_source_sync_moves_only_missing_chunks() {
+        let s = Scratch::new("sync");
+        let publisher = ChunkStore::open(s.0.join("pub"));
+        let signer = HmacSha256Signer::new(b"k".to_vec(), "fleet");
+        let head1 = bytes(10, 64 * 20);
+        let tail1 = bytes(11, 64 * 5);
+        let m1 = manifest_for(&publisher, 1, &head1, &tail1);
+        publisher.publish(&m1, &signer).unwrap();
+        // v2: one chunk's worth of head changes, tail unchanged.
+        let mut head2 = head1.clone();
+        head2[0] ^= 0xFF;
+        let m2 = manifest_for(&publisher, 2, &head2, &tail1);
+        publisher.publish(&m2, &signer).unwrap();
+
+        let edge = ChunkStore::open(s.0.join("edge"));
+        let mut source = StoreSource::open(s.0.join("pub"));
+        // Cold sync of v1: everything is fetched.
+        let (_, r1) = sync_deployment(
+            &edge, &mut source, &signer, "m", 1, &SyncOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(r1.chunks_reused, 0);
+        assert_eq!(r1.bytes_fetched, (head1.len() + tail1.len()) as u64);
+        // Delta sync to v2 (latest): only the flipped chunk moves.
+        let (m, r2) = sync_deployment(
+            &edge, &mut source, &signer, "m", 0, &SyncOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(m.model_version, 2);
+        assert_eq!(r2.chunks_fetched, 1);
+        assert_eq!(r2.bytes_fetched, 64);
+        // The edge can now serve v2 offline.
+        let dep = edge.fetch("m", Some(2), &signer).unwrap();
+        assert_eq!(dep.head, head2);
+        assert_eq!(dep.tail, tail1);
+    }
+
+    #[test]
+    fn aborted_sync_resumes_without_refetching_done_chunks() {
+        let s = Scratch::new("resume");
+        let publisher = ChunkStore::open(s.0.join("pub"));
+        let signer = HmacSha256Signer::new(b"k".to_vec(), "fleet");
+        let m1 = manifest_for(&publisher, 1, &bytes(20, 64 * 12), &bytes(21, 64 * 3));
+        publisher.publish(&m1, &signer).unwrap();
+
+        let edge = ChunkStore::open(s.0.join("edge"));
+        let mut source = StoreSource::open(s.0.join("pub"));
+        let err = sync_deployment(
+            &edge,
+            &mut source,
+            &signer,
+            "m",
+            1,
+            &SyncOptions { abort_after: Some(5) },
+        )
+        .unwrap_err();
+        assert!(err.is_retryable(), "injected abort must look like a link drop: {err}");
+        // Sidecar survives the drop and records the 5 completed chunks.
+        assert!(sidecar_path(&edge, &m1.head).exists());
+        assert_eq!(load_sidecar(&edge, &m1.head).len(), 5);
+        // Manifest must NOT be adopted for a half-synced deployment.
+        assert!(edge.load_manifest("m", Some(1), &signer).is_err());
+
+        let (_, r) = sync_deployment(
+            &edge, &mut source, &signer, "m", 1, &SyncOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(r.chunks_reused, 5, "completed chunks must not be re-downloaded");
+        assert_eq!(r.chunks_resumed, 5, "all reuse came from the interrupted run's sidecar");
+        assert_eq!(r.chunks_fetched, 10);
+        assert!(!sidecar_path(&edge, &m1.head).exists(), "sidecar cleaned up on completion");
+        edge.fetch("m", Some(1), &signer).unwrap();
+    }
+
+    #[test]
+    fn tampered_source_chunk_is_fatal_and_never_stored() {
+        struct LyingSource(StoreSource);
+        impl ChunkSource for LyingSource {
+            fn fetch_manifest(&mut self, model: &str, version: u64) -> Result<String> {
+                self.0.fetch_manifest(model, version)
+            }
+            fn fetch_chunk(&mut self, sha256: &str) -> Result<Vec<u8>> {
+                let mut p = self.0.fetch_chunk(sha256)?;
+                p[0] ^= 0x01;
+                Ok(p)
+            }
+        }
+        let s = Scratch::new("tamper");
+        let publisher = ChunkStore::open(s.0.join("pub"));
+        let signer = HmacSha256Signer::new(b"k".to_vec(), "fleet");
+        let m1 = manifest_for(&publisher, 1, &bytes(30, 256), &bytes(31, 64));
+        publisher.publish(&m1, &signer).unwrap();
+
+        let edge = ChunkStore::open(s.0.join("edge"));
+        let mut source = LyingSource(StoreSource::open(s.0.join("pub")));
+        let err = sync_deployment(
+            &edge, &mut source, &signer, "m", 1, &SyncOptions::default(),
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Corrupt(_)), "{err}");
+        assert!(!err.is_retryable());
+        // Nothing tainted landed in the local store.
+        for chunk in m1.all_chunks() {
+            assert!(!edge.chunk_path(&chunk.sha256).exists());
+        }
+    }
+
+    #[test]
+    fn wrong_key_manifest_rejected_before_any_chunk_moves() {
+        let s = Scratch::new("key");
+        let publisher = ChunkStore::open(s.0.join("pub"));
+        let signer = HmacSha256Signer::new(b"k".to_vec(), "fleet");
+        let m1 = manifest_for(&publisher, 1, &bytes(40, 128), &bytes(41, 64));
+        publisher.publish(&m1, &signer).unwrap();
+        let edge = ChunkStore::open(s.0.join("edge"));
+        let mut source = StoreSource::open(s.0.join("pub"));
+        let other = HmacSha256Signer::new(b"not-k".to_vec(), "fleet");
+        let err = sync_deployment(
+            &edge, &mut source, &other, "m", 1, &SyncOptions::default(),
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Corrupt(_)), "{err}");
+        assert!(!edge.root().join("objects").exists(), "no chunk may move under a bad key");
+    }
+}

@@ -189,6 +189,12 @@ impl RegistryManifest {
             .to_string_compact()
     }
 
+    /// Every chunk across both halves in fetch order (head, then
+    /// tail) — the unit the delta planner diffs over.
+    pub fn all_chunks(&self) -> impl Iterator<Item = &ChunkRef> {
+        self.head.chunks.iter().chain(self.tail.chunks.iter())
+    }
+
     pub fn from_json_text(text: &str) -> Result<Self> {
         let v = json::parse(text)
             .map_err(|e| Error::corrupt(format!("registry manifest: {e}")))?;

@@ -18,6 +18,15 @@
 //!   the pluggable [`signer::Signer`] trait.
 //! * [`swap::ModelSlot`] — staged load → smoke verify → atomic pointer
 //!   flip → old version drained; rollback is the absence of a flip.
+//! * [`delta`] — version N → N+1 distribution as a chunk-set
+//!   difference: [`delta::DeltaPlan`] diffs two manifests,
+//!   [`delta::sync_deployment`] consults the local store before pulling
+//!   each missing chunk from a [`delta::ChunkSource`] and records
+//!   durable progress in a sidecar so an interrupted fetch resumes from
+//!   verified partial state.
+//! * [`cdc`] — content-defined chunking (gear rolling hash) so an early
+//!   insertion in a weight file shifts only nearby chunk boundaries
+//!   instead of rewriting every later address.
 //!
 //! The wire side lives in `coordinator`: frames carry an optional
 //! `ModelVersion` header, and a cloud serving a different version
@@ -27,12 +36,18 @@
 //! every flipped bit and every mismatched pairing is a loud typed
 //! error.
 
+pub mod cdc;
+pub mod delta;
 pub mod manifest;
 pub mod sha256_reader;
 pub mod signer;
 pub mod store;
 pub mod swap;
 
+pub use cdc::CdcParams;
+pub use delta::{
+    sync_artifact, sync_deployment, ChunkSource, DeltaPlan, StoreSource, SyncOptions, SyncReport,
+};
 pub use manifest::{
     ArtifactDescriptor, ChunkRef, DeployParams, RegistryManifest, SignedManifest,
 };

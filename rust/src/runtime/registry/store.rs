@@ -51,15 +51,28 @@ pub struct Deployment {
     pub tail: Vec<u8>,
 }
 
+impl Deployment {
+    /// Write both verified halves to disk atomically (temp + rename),
+    /// so `registry fetch` produces deployable files rather than just
+    /// printing sizes.
+    pub fn write_to(&self, head_path: &Path, tail_path: &Path) -> Result<()> {
+        atomic_write(head_path, &self.head)?;
+        atomic_write(tail_path, &self.tail)
+    }
+}
+
 /// A content-addressed artifact store rooted at one directory.
 pub struct ChunkStore {
     root: PathBuf,
+    /// Poisoned objects found at a valid address on a dedup hit and
+    /// atomically rewritten with the good payload.
+    repairs: AtomicU64,
 }
 
 /// Process-unique suffix counter for atomic temp files.
 static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
 
-fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+pub(super) fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
     let dir = path
         .parent()
         .ok_or_else(|| Error::invalid(format!("{}: no parent directory", path.display())))?;
@@ -84,7 +97,14 @@ fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
 
 impl ChunkStore {
     pub fn open(root: impl Into<PathBuf>) -> Self {
-        ChunkStore { root: root.into() }
+        ChunkStore { root: root.into(), repairs: AtomicU64::new(0) }
+    }
+
+    /// Number of poisoned on-disk objects repaired by
+    /// [`put_chunk`](Self::put_chunk) dedup hits since this store
+    /// handle was opened.
+    pub fn repair_count(&self) -> u64 {
+        self.repairs.load(Ordering::Relaxed)
     }
 
     pub fn root(&self) -> &Path {
@@ -102,12 +122,25 @@ impl ChunkStore {
     }
 
     /// Store one chunk payload, returning its content address. Already
-    /// stored chunks are deduplicated by address.
+    /// stored chunks are deduplicated by address — but only after the
+    /// on-disk object passes the full frame check (magic, length, CRC,
+    /// content digest). A poisoned object squatting at a valid address
+    /// is atomically rewritten with the good payload instead of being
+    /// trusted, so publish can never "succeed" over a chunk that every
+    /// later fetch would reject.
     pub fn put_chunk(&self, payload: &[u8]) -> Result<String> {
         let hex = sha256::to_hex(&sha256::hash(payload));
         let path = self.chunk_path(&hex);
         if path.exists() {
-            return Ok(hex);
+            let probe = ChunkRef { len: payload.len() as u64, sha256: hex.clone() };
+            match self.get_chunk(&probe) {
+                Ok(_) => return Ok(hex),
+                Err(_) => {
+                    // Fall through to the atomic rewrite below: rename
+                    // replaces the poisoned object in one step.
+                    self.repairs.fetch_add(1, Ordering::Relaxed);
+                }
+            }
         }
         let mut framed = Vec::with_capacity(payload.len() + 12);
         framed.extend_from_slice(&CHUNK_MAGIC);
@@ -123,8 +156,20 @@ impl ChunkStore {
     /// incrementally while reading). Every failure is a typed fatal
     /// error naming the chunk.
     pub fn get_chunk(&self, expect: &ChunkRef) -> Result<Vec<u8>> {
-        let digest = super::manifest::parse_digest(&expect.sha256, "chunk address")?;
-        let path = self.chunk_path(&expect.sha256);
+        self.read_chunk_frame(&expect.sha256, Some(expect.len))
+    }
+
+    /// Fetch and fully verify a chunk by address alone, trusting the
+    /// framed length header for the size (the address still proves the
+    /// content). The chunk-serving wire path uses this: a server knows
+    /// only the requested address, not the requester's manifest.
+    pub fn get_chunk_by_addr(&self, sha256: &str) -> Result<Vec<u8>> {
+        self.read_chunk_frame(sha256, None)
+    }
+
+    fn read_chunk_frame(&self, sha256_hex: &str, expect_len: Option<u64>) -> Result<Vec<u8>> {
+        let digest = super::manifest::parse_digest(sha256_hex, "chunk address")?;
+        let path = self.chunk_path(sha256_hex);
         let file = fs::File::open(&path).map_err(|e| {
             Error::artifact(format!("chunk {} absent from store: {e}", path.display()))
         })?;
@@ -132,21 +177,21 @@ impl ChunkStore {
 
         let mut header = [0u8; 8];
         reader.read_exact(&mut header).map_err(|e| {
-            Error::corrupt(format!("chunk {}: truncated header: {e}", expect.sha256))
+            Error::corrupt(format!("chunk {sha256_hex}: truncated header: {e}"))
         })?;
         if header[..4] != CHUNK_MAGIC {
             return Err(Error::corrupt(format!(
-                "chunk {}: bad magic {:02x?}",
-                expect.sha256,
+                "chunk {sha256_hex}: bad magic {:02x?}",
                 &header[..4]
             )));
         }
         let framed_len = u32::from_le_bytes(header[4..8].try_into().unwrap()) as u64;
-        if framed_len != expect.len {
-            return Err(Error::corrupt(format!(
-                "chunk {}: framed length {framed_len} != manifest length {}",
-                expect.sha256, expect.len
-            )));
+        if let Some(expect) = expect_len {
+            if framed_len != expect {
+                return Err(Error::corrupt(format!(
+                    "chunk {sha256_hex}: framed length {framed_len} != manifest length {expect}"
+                )));
+            }
         }
 
         // Stream the payload through the digest verifier: the hash is
@@ -156,30 +201,28 @@ impl ChunkStore {
             reader.take(framed_len),
             framed_len,
             digest,
-            format!("chunk {}", expect.sha256),
+            format!("chunk {sha256_hex}"),
         );
         let mut payload = vec![0u8; framed_len as usize];
         hashed.read_exact(&mut payload).map_err(|e| {
-            Error::corrupt(format!("chunk {}: truncated payload: {e}", expect.sha256))
+            Error::corrupt(format!("chunk {sha256_hex}: truncated payload: {e}"))
         })?;
         let mut reader = hashed.finish()?.into_inner();
 
         // The CRC fast check must agree with what was hashed.
         let mut crc_bytes = [0u8; 4];
         reader.read_exact(&mut crc_bytes).map_err(|e| {
-            Error::corrupt(format!("chunk {}: truncated crc trailer: {e}", expect.sha256))
+            Error::corrupt(format!("chunk {sha256_hex}: truncated crc trailer: {e}"))
         })?;
         if u32::from_le_bytes(crc_bytes) != crc32::hash(&payload) {
             return Err(Error::corrupt(format!(
-                "chunk {}: crc mismatch (framing corrupt)",
-                expect.sha256
+                "chunk {sha256_hex}: crc mismatch (framing corrupt)"
             )));
         }
         let mut trailing = [0u8; 1];
         if reader.read(&mut trailing).unwrap_or(0) != 0 {
             return Err(Error::corrupt(format!(
-                "chunk {}: trailing bytes after crc",
-                expect.sha256
+                "chunk {sha256_hex}: trailing bytes after crc"
             )));
         }
         Ok(payload)
@@ -210,24 +253,59 @@ impl ChunkStore {
         })
     }
 
-    /// Reassemble an artifact, verifying incrementally: each chunk's
-    /// CRC + content address before the next chunk is opened, then the
-    /// whole-artifact digest over the reassembly.
-    pub fn read_artifact(&self, desc: &ArtifactDescriptor) -> Result<Vec<u8>> {
+    /// Like [`put_artifact`](Self::put_artifact) but with
+    /// content-defined boundaries: an early insertion in the next
+    /// version shifts only the chunks around the edit instead of
+    /// rewriting every later address. The descriptor format is
+    /// unchanged — chunk lengths were always per-chunk data — so CDC
+    /// and fixed-size artifacts coexist in one store and one manifest
+    /// schema.
+    pub fn put_artifact_cdc(
+        &self,
+        bytes: &[u8],
+        params: &super::cdc::CdcParams,
+    ) -> Result<ArtifactDescriptor> {
+        let mut chunks = Vec::new();
+        let mut off = 0usize;
+        for len in super::cdc::split(bytes, params)? {
+            let payload = &bytes[off..off + len];
+            let hex = self.put_chunk(payload)?;
+            chunks.push(ChunkRef { len: len as u64, sha256: hex });
+            off += len;
+        }
+        Ok(ArtifactDescriptor {
+            len: bytes.len() as u64,
+            sha256: sha256::to_hex(&sha256::hash(bytes)),
+            chunks,
+        })
+    }
+
+    /// Streaming core shared by [`read_artifact`](Self::read_artifact)
+    /// and [`verify_artifact`](Self::verify_artifact): walk the chunk
+    /// list in order, fully verify each chunk (CRC + content address)
+    /// before the next one is opened, feed the payload through the
+    /// whole-artifact hasher, and hand it to `sink`. Peak memory is one
+    /// chunk, never the whole artifact. Returns the verified byte
+    /// count; the length and whole-artifact digest checks run before
+    /// the call returns, so a caller never sees an unverified total.
+    pub fn stream_artifact(
+        &self,
+        desc: &ArtifactDescriptor,
+        mut sink: impl FnMut(&[u8]) -> Result<()>,
+    ) -> Result<u64> {
         let whole = desc.digest()?;
-        let mut out = Vec::with_capacity(desc.len as usize);
         let mut hasher = sha256::Sha256::new();
+        let mut total: u64 = 0;
         for chunk in &desc.chunks {
             let payload = self.get_chunk(chunk)?;
             hasher.update(&payload);
-            out.extend_from_slice(&payload);
+            total += payload.len() as u64;
+            sink(&payload)?;
         }
-        if out.len() as u64 != desc.len {
+        if total != desc.len {
             return Err(Error::corrupt(format!(
-                "artifact {}: reassembled {} bytes, manifest says {}",
-                desc.sha256,
-                out.len(),
-                desc.len
+                "artifact {}: reassembled {total} bytes, manifest says {}",
+                desc.sha256, desc.len
             )));
         }
         if !sha256::ct_eq(&hasher.finalize(), &whole) {
@@ -236,14 +314,26 @@ impl ChunkStore {
                 desc.sha256
             )));
         }
+        Ok(total)
+    }
+
+    /// Reassemble an artifact into memory: a thin collector over
+    /// [`stream_artifact`](Self::stream_artifact), inheriting its
+    /// incremental per-chunk and whole-artifact verification.
+    pub fn read_artifact(&self, desc: &ArtifactDescriptor) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(desc.len as usize);
+        self.stream_artifact(desc, |payload| {
+            out.extend_from_slice(payload);
+            Ok(())
+        })?;
         Ok(out)
     }
 
-    /// [`read_artifact`](Self::read_artifact) without keeping the
-    /// bytes; returns the number of bytes verified (the CLI `verify`
-    /// path and the `registry_verify_mbps` bench).
+    /// Verify every byte of an artifact with O(chunk) peak memory —
+    /// the bytes are hashed as they stream and dropped chunk by chunk
+    /// (the CLI `verify` path and the `registry_verify_mbps` bench).
     pub fn verify_artifact(&self, desc: &ArtifactDescriptor) -> Result<u64> {
-        Ok(self.read_artifact(desc)?.len() as u64)
+        self.stream_artifact(desc, |_| Ok(()))
     }
 
     /// Highest published version for `model`, or `None` when the model
@@ -265,9 +355,22 @@ impl ChunkStore {
             let Some(stem) = name.to_str().and_then(|n| n.strip_suffix(".json")) else {
                 continue;
             };
-            if let Ok(v) = stem.parse::<u64>() {
-                latest = Some(latest.map_or(v, |l: u64| l.max(v)));
+            let Ok(v) = stem.parse::<u64>() else {
+                continue;
+            };
+            // `manifest_path` writes canonical decimal stems only
+            // (`7.json`), so a numeric-but-non-canonical stem like
+            // `007.json` is an alias slot that would be reported latest
+            // yet be unloadable — and could shadow the real `7.json`.
+            // Reject it loudly instead of guessing.
+            if stem != v.to_string() {
+                return Err(Error::corrupt(format!(
+                    "{}: non-canonical manifest filename (version {v} canonical slot is \
+                     {v}.json); remove or rename the stray file",
+                    dir.join(name.to_str().unwrap_or("?")).display()
+                )));
             }
+            latest = Some(latest.map_or(v, |l: u64| l.max(v)));
         }
         Ok(latest)
     }
@@ -291,6 +394,62 @@ impl ChunkStore {
         let path = self.manifest_path(&manifest.model, manifest.model_version);
         atomic_write(&path, sealed.to_json_text().as_bytes())?;
         Ok(path)
+    }
+
+    /// Raw `SignedManifest` wrapper text for a version slot (latest
+    /// when `None`) — what a registry-serving node puts on the wire.
+    /// The text travels verbatim so the requester verifies the
+    /// *original* signature, not a re-serialization.
+    pub fn signed_manifest_text(&self, model: &str, version: Option<u64>) -> Result<String> {
+        let version = match version {
+            Some(v) => v,
+            None => self.latest_version(model)?.ok_or_else(|| {
+                Error::artifact(format!(
+                    "no manifest published for model '{model}' in {}",
+                    self.root.display()
+                ))
+            })?,
+        };
+        let path = self.manifest_path(model, version);
+        fs::read_to_string(&path)
+            .map_err(|e| Error::artifact(format!("manifest absent: {}: {e}", path.display())))
+    }
+
+    /// Adopt a signed manifest replicated from another registry: verify
+    /// the signature and the model binding, then store the wrapper text
+    /// byte-for-byte in the canonical version slot. Re-adopting an
+    /// identical manifest is a no-op; a *different* document squatting
+    /// in the slot is a loud corruption error. Unlike
+    /// [`publish`](Self::publish), adoption accepts any version —
+    /// replicating an older version is how a fleet rolls back.
+    pub fn adopt_manifest(
+        &self,
+        model: &str,
+        signed_text: &str,
+        signer: &dyn Signer,
+    ) -> Result<RegistryManifest> {
+        let manifest = SignedManifest::from_json_text(signed_text)?.verify(signer)?;
+        if manifest.model != model {
+            return Err(Error::corrupt(format!(
+                "adopted manifest is for model '{}', expected '{model}'",
+                manifest.model
+            )));
+        }
+        if manifest.model_version == 0 {
+            return Err(Error::invalid("model_version 0 is reserved for unversioned serving"));
+        }
+        let path = self.manifest_path(model, manifest.model_version);
+        if let Ok(existing) = fs::read_to_string(&path) {
+            if existing == signed_text {
+                return Ok(manifest);
+            }
+            return Err(Error::corrupt(format!(
+                "{}: version slot holds a different signed manifest; refusing to overwrite",
+                path.display()
+            )));
+        }
+        atomic_write(&path, signed_text.as_bytes())?;
+        Ok(manifest)
     }
 
     /// Load and verify a manifest: signature, then inner parse, then

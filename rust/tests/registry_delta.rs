@@ -1,0 +1,413 @@
+//! Delta-sync + store-hardening wall: the four PR-9 bugfix
+//! regressions, the wire-level delta-sync walls, and an
+//! integration-level CDC boundary-shift property.
+//!
+//! Contracts under test:
+//!
+//! * A dedup hit in `put_chunk` verifies the existing on-disk object
+//!   and atomically repairs a poisoned one (counted by
+//!   `repair_count`) — a crashed earlier write can never shadow good
+//!   bytes forever.
+//! * `verify_artifact` streams chunk-by-chunk: the sink surface of
+//!   `stream_artifact` never sees more than one chunk at a time.
+//! * A non-canonical manifest filename (`007.json` next to `7.json`'s
+//!   slot) is a loud typed error, not a silently shadowed version.
+//! * `registry fetch` produces bytes on disk (`Deployment::write_to`),
+//!   not just a printed size.
+//! * Over the wire (tags 17–20): a tampered chunk is a non-retryable
+//!   `Corrupt` and never lands in the local store; a sync killed
+//!   mid-stream over a lossy `FaultyTransport` resumes from its
+//!   sidecar without re-downloading a single completed chunk.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use rans_sc::coordinator::{
+    FaultSpec, FaultyTransport, Frame, FrameKind, InProcTransport, RegistryProvider, Session,
+    SessionConfig, Transport, WireSource,
+};
+use rans_sc::error::Error;
+use rans_sc::runtime::registry::{
+    cdc, sync_deployment, CdcParams, ChunkStore, DeployParams, HmacSha256Signer,
+    RegistryManifest, SyncOptions,
+};
+
+/// Self-cleaning scratch directory (no tempfile crate in the offline
+/// container).
+struct Scratch(PathBuf);
+
+impl Scratch {
+    fn new(name: &str) -> Self {
+        let dir = std::env::temp_dir()
+            .join(format!("rans_sc_delta_wall_{}_{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        Scratch(dir)
+    }
+
+    fn path(&self) -> &Path {
+        &self.0
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.0);
+    }
+}
+
+fn signer() -> HmacSha256Signer {
+    HmacSha256Signer::new(b"delta-wall-key".to_vec(), "test-key")
+}
+
+/// Deterministic pseudo-random artifact bytes.
+fn artifact_bytes(seed: u64, n: usize) -> Vec<u8> {
+    let mut rng = rans_sc::util::prng::Rng::new(seed);
+    (0..n).map(|_| rng.next_u64() as u8).collect()
+}
+
+/// Publish one multi-chunk deployment (64-byte chunks so artifacts
+/// span several objects) and return its manifest.
+fn publish(store: &ChunkStore, version: u64, head: &[u8], tail: &[u8]) -> RegistryManifest {
+    let manifest = RegistryManifest {
+        model: "resnet_mini_synth_a".into(),
+        model_version: version,
+        deploy: DeployParams::paper(4),
+        head: store.put_artifact(head, 64).unwrap(),
+        tail: store.put_artifact(tail, 64).unwrap(),
+    };
+    store.publish(&manifest, &signer()).unwrap();
+    manifest
+}
+
+// ---------------------------------------------------------------- //
+// Bugfix regressions                                                //
+// ---------------------------------------------------------------- //
+
+/// Satellite 1: a crashed or bit-rotted object under a chunk address
+/// must not survive a dedup hit. `put_chunk` of the same payload
+/// verifies the existing frame, rewrites it atomically, and counts
+/// the repair — and the artifact verifies end-to-end afterwards.
+#[test]
+fn poisoned_object_is_repaired_on_dedup_hit() {
+    let s = Scratch::new("repair");
+    let store = ChunkStore::open(s.path());
+    let head = artifact_bytes(0xA1, 300);
+    let desc = store.put_artifact(&head, 64).unwrap();
+    assert_eq!(store.repair_count(), 0);
+
+    // Poison one object on disk (payload byte inside the frame).
+    let victim = store.chunk_path(&desc.chunks[1].sha256);
+    let mut raw = fs::read(&victim).unwrap();
+    let mid = raw.len() / 2;
+    raw[mid] ^= 0xFF;
+    fs::write(&victim, &raw).unwrap();
+    assert!(store.verify_artifact(&desc).is_err(), "poison must be visible");
+
+    // Re-publishing the same bytes hits the dedup path for every
+    // chunk; the poisoned one is detected and rewritten in place.
+    let desc2 = store.put_artifact(&head, 64).unwrap();
+    assert_eq!(desc2.sha256, desc.sha256);
+    assert_eq!(store.repair_count(), 1, "exactly one object needed repair");
+    assert_eq!(store.verify_artifact(&desc).unwrap(), head.len() as u64);
+}
+
+/// Satellite 2: verification is streaming. The sink never sees a
+/// slice longer than one chunk, and the slices reassemble the exact
+/// artifact — O(chunk) peak memory instead of O(artifact).
+#[test]
+fn verify_streams_one_chunk_at_a_time() {
+    let s = Scratch::new("stream");
+    let store = ChunkStore::open(s.path());
+    let chunk_len = 4096usize;
+    let data = artifact_bytes(0xB2, chunk_len * 8 + 77);
+    let desc = store.put_artifact(&data, chunk_len).unwrap();
+
+    let mut max_slice = 0usize;
+    let mut reassembled = Vec::new();
+    let total = store
+        .stream_artifact(&desc, |slice| {
+            max_slice = max_slice.max(slice.len());
+            reassembled.extend_from_slice(slice);
+            Ok(())
+        })
+        .unwrap();
+    assert_eq!(total, data.len() as u64);
+    assert_eq!(reassembled, data);
+    assert!(
+        max_slice <= chunk_len,
+        "sink saw a {max_slice}-byte slice; streaming verify must be O(chunk)"
+    );
+    // verify_artifact is the same walk with a null sink.
+    assert_eq!(store.verify_artifact(&desc).unwrap(), data.len() as u64);
+}
+
+/// Satellite 3: `"007".parse::<u64>()` is `Ok(7)`, so a stray
+/// `007.json` used to shadow (or race) the canonical `7.json` slot in
+/// latest-version resolution. Non-canonical stems are now a loud
+/// typed error naming the file.
+#[test]
+fn non_canonical_manifest_filename_is_rejected() {
+    let s = Scratch::new("canon");
+    let store = ChunkStore::open(s.path());
+    publish(&store, 7, &artifact_bytes(0xC3, 200), &artifact_bytes(0xC4, 100));
+
+    let dir = s.path().join("manifests").join("resnet_mini_synth_a");
+    fs::copy(dir.join("7.json"), dir.join("007.json")).unwrap();
+
+    let err = store.latest_version("resnet_mini_synth_a").unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("non-canonical"), "{msg}");
+    assert!(msg.contains("007"), "error must name the stray file: {msg}");
+    // Latest-version fetch goes through the same resolution.
+    assert!(store.fetch("resnet_mini_synth_a", None, &signer()).is_err());
+    // An explicit version bypasses directory scanning and still works.
+    store.fetch("resnet_mini_synth_a", Some(7), &signer()).unwrap();
+}
+
+/// Satellite 4: a fetch must produce deployable bytes on disk, not
+/// just printed sizes. `Deployment::write_to` lands both halves
+/// atomically and byte-identically.
+#[test]
+fn fetched_deployment_writes_both_halves_to_disk() {
+    let s = Scratch::new("writeto");
+    let store = ChunkStore::open(s.path().join("reg"));
+    let head = artifact_bytes(0xD5, 300);
+    let tail = artifact_bytes(0xD6, 150);
+    publish(&store, 1, &head, &tail);
+
+    let dep = store.fetch("resnet_mini_synth_a", None, &signer()).unwrap();
+    let out = s.path().join("out");
+    fs::create_dir_all(&out).unwrap();
+    let head_out = out.join("head.bin");
+    let tail_out = out.join("tail.bin");
+    dep.write_to(&head_out, &tail_out).unwrap();
+    assert_eq!(fs::read(&head_out).unwrap(), head);
+    assert_eq!(fs::read(&tail_out).unwrap(), tail);
+}
+
+// ---------------------------------------------------------------- //
+// Wire-level delta sync                                             //
+// ---------------------------------------------------------------- //
+
+fn fast_session_cfg() -> SessionConfig {
+    SessionConfig {
+        deadline_ms: 10_000,
+        try_timeout_ms: 500,
+        max_retries: 8,
+        base_backoff_ms: 1,
+        max_backoff_ms: 4,
+        heartbeat_ms: 0,
+        seed: 0xF00D,
+    }
+}
+
+/// Serve registry frames (tags 17/19) from `root` on its own thread,
+/// optionally flipping a bit in every chunk payload. Counts chunks
+/// served. Exits when the peer hangs up; injected link faults from a
+/// `FaultyTransport` are skipped like a real accept loop would.
+fn serve_registry<T: Transport + 'static>(
+    mut transport: T,
+    root: PathBuf,
+    tamper_chunks: bool,
+    served: Arc<AtomicU64>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let provider = RegistryProvider::new(ChunkStore::open(&root));
+        loop {
+            let frame = match transport.recv() {
+                Ok(f) => f,
+                Err(e) if e.to_string().contains("injected link fault") => continue,
+                Err(_) => return, // peer closed
+            };
+            let mut reply = provider.try_serve(&frame.kind).unwrap_or_else(|| {
+                FrameKind::ServerError { message: "not a registry frame".into() }
+            });
+            if let FrameKind::ChunkReply { payload } = &mut reply {
+                served.fetch_add(1, Ordering::Relaxed);
+                if tamper_chunks && !payload.is_empty() {
+                    payload[0] ^= 0x01;
+                }
+            }
+            if transport.send(&Frame::new(frame.request_id, reply)).is_err() {
+                return;
+            }
+        }
+    })
+}
+
+/// End to end over a clean in-proc link: an edge with nothing syncs
+/// v1, then delta-syncs v2 moving only the changed chunk, and can
+/// serve both versions offline afterwards.
+#[test]
+fn wire_sync_end_to_end_moves_only_missing_chunks() {
+    let s = Scratch::new("wire");
+    let publisher = ChunkStore::open(s.path().join("pub"));
+    let head1 = artifact_bytes(0xE0, 64 * 16);
+    let tail1 = artifact_bytes(0xE1, 64 * 4);
+    publish(&publisher, 1, &head1, &tail1);
+    let mut head2 = head1.clone();
+    head2[0] ^= 0xFF; // one chunk's worth of fine-tune drift
+    publish(&publisher, 2, &head2, &tail1);
+
+    let (client, server) = InProcTransport::pair();
+    let served = Arc::new(AtomicU64::new(0));
+    let handle = serve_registry(server, s.path().join("pub"), false, served.clone());
+
+    let edge = ChunkStore::open(s.path().join("edge"));
+    let mut source = WireSource::new(Session::new(client, fast_session_cfg()));
+    let (m1, r1) =
+        sync_deployment(&edge, &mut source, &signer(), "resnet_mini_synth_a", 1,
+            &SyncOptions::default())
+        .unwrap();
+    assert_eq!(m1.model_version, 1);
+    assert_eq!(r1.bytes_fetched, (head1.len() + tail1.len()) as u64);
+    // Delta to latest (version 0): one 64-byte chunk crosses the wire.
+    let (m2, r2) =
+        sync_deployment(&edge, &mut source, &signer(), "resnet_mini_synth_a", 0,
+            &SyncOptions::default())
+        .unwrap();
+    assert_eq!(m2.model_version, 2);
+    assert_eq!(r2.chunks_fetched, 1);
+    assert_eq!(r2.bytes_fetched, 64);
+    assert_eq!(served.load(Ordering::Relaxed), 20 + 1);
+
+    drop(source); // hang up so the responder exits
+    handle.join().unwrap();
+
+    // Both versions now serve offline, every byte verified.
+    let dep1 = edge.fetch("resnet_mini_synth_a", Some(1), &signer()).unwrap();
+    assert_eq!(dep1.head, head1);
+    let dep2 = edge.fetch("resnet_mini_synth_a", Some(2), &signer()).unwrap();
+    assert_eq!(dep2.head, head2);
+    assert_eq!(dep2.tail, tail1);
+}
+
+/// A server (or link) flipping chunk bytes is a non-retryable
+/// `Corrupt` error, and the tainted payload never lands in the edge
+/// store.
+#[test]
+fn tampered_wire_chunk_is_typed_fatal_and_never_stored() {
+    let s = Scratch::new("wiretamper");
+    let publisher = ChunkStore::open(s.path().join("pub"));
+    let m = publish(&publisher, 1, &artifact_bytes(0xF0, 256), &artifact_bytes(0xF1, 64));
+
+    let (client, server) = InProcTransport::pair();
+    let served = Arc::new(AtomicU64::new(0));
+    let handle = serve_registry(server, s.path().join("pub"), true, served);
+
+    let edge = ChunkStore::open(s.path().join("edge"));
+    let mut source = WireSource::new(Session::new(client, fast_session_cfg()));
+    let err =
+        sync_deployment(&edge, &mut source, &signer(), "resnet_mini_synth_a", 1,
+            &SyncOptions::default())
+        .unwrap_err();
+    assert!(matches!(err, Error::Corrupt(_)), "{err}");
+    assert!(!err.is_retryable(), "tampering must not be retried into acceptance: {err}");
+    for chunk in m.all_chunks() {
+        assert!(!edge.chunk_path(&chunk.sha256).exists(), "tainted chunk stored");
+    }
+    // The manifest was never adopted either.
+    assert!(edge.load_manifest("resnet_mini_synth_a", Some(1), &signer()).is_err());
+
+    drop(source);
+    handle.join().unwrap();
+}
+
+/// The resume wall, over a lossy link: kill the sync after 5 chunk
+/// downloads (on top of a FaultyTransport dropping 10% of frames —
+/// the session's retries absorb those), then resume with a fresh
+/// session. The completed chunks are reused from the sidecar-backed
+/// local store; not one is re-downloaded.
+#[test]
+fn dropped_wire_sync_resumes_from_verified_partial_progress() {
+    let s = Scratch::new("wireresume");
+    let publisher = ChunkStore::open(s.path().join("pub"));
+    let head = artifact_bytes(0xAA, 64 * 12);
+    let tail = artifact_bytes(0xAB, 64 * 3);
+    publish(&publisher, 1, &head, &tail);
+
+    let spec = FaultSpec::drops(0.10);
+    let (client, server) = FaultyTransport::pair(0xC0FFEE, spec, spec);
+    let served = Arc::new(AtomicU64::new(0));
+    let handle = serve_registry(server, s.path().join("pub"), false, served.clone());
+
+    let edge = ChunkStore::open(s.path().join("edge"));
+    let mut source = WireSource::new(Session::new(client, fast_session_cfg()));
+    let err = sync_deployment(
+        &edge,
+        &mut source,
+        &signer(),
+        "resnet_mini_synth_a",
+        1,
+        &SyncOptions { abort_after: Some(5) },
+    )
+    .unwrap_err();
+    assert!(err.is_retryable(), "a mid-stream drop must look like a link fault: {err}");
+    // Half-synced: manifest not adopted yet.
+    assert!(edge.load_manifest("resnet_mini_synth_a", Some(1), &signer()).is_err());
+
+    let (m, r) =
+        sync_deployment(&edge, &mut source, &signer(), "resnet_mini_synth_a", 1,
+            &SyncOptions::default())
+        .unwrap();
+    assert_eq!(m.model_version, 1);
+    assert_eq!(r.chunks_reused, 5, "completed chunks must be reused, not re-downloaded");
+    assert_eq!(r.chunks_resumed, 5, "reuse must come from the interrupted run's sidecar");
+    assert_eq!(r.chunks_fetched, 10);
+
+    drop(source);
+    handle.join().unwrap();
+    edge.fetch("resnet_mini_synth_a", Some(1), &signer()).unwrap();
+}
+
+// ---------------------------------------------------------------- //
+// CDC boundary-shift property                                       //
+// ---------------------------------------------------------------- //
+
+/// Content-defined chunking must localize damage: inserting a few
+/// bytes anywhere in an artifact may only change chunk addresses near
+/// the insertion point — the bulk of the chunk set (and therefore the
+/// delta plan) is preserved. Fixed-size chunking fails this by
+/// construction for any insertion not at the tail.
+#[test]
+fn cdc_insertions_shift_boundaries_only_locally() {
+    let params = CdcParams::with_avg(1 << 12).unwrap();
+    let base = artifact_bytes(0x5EED, 192 * 1024);
+    let base_addrs: std::collections::HashSet<String> = chunk_addrs(&base, &params);
+
+    let mut rng = rans_sc::util::prng::Rng::new(0x175E);
+    for trial in 0..8u64 {
+        let offset = (rng.next_u64() as usize) % base.len();
+        let insert_len = 1 + (rng.next_u64() as usize) % 32;
+        let inserted: Vec<u8> = (0..insert_len).map(|_| rng.next_u64() as u8).collect();
+        let mut edited = Vec::with_capacity(base.len() + insert_len);
+        edited.extend_from_slice(&base[..offset]);
+        edited.extend_from_slice(&inserted);
+        edited.extend_from_slice(&base[offset..]);
+
+        let edited_addrs = chunk_addrs(&edited, &params);
+        let shared = edited_addrs.iter().filter(|a| base_addrs.contains(*a)).count();
+        assert!(
+            shared * 4 >= edited_addrs.len() * 3,
+            "trial {trial}: insertion of {insert_len} B at {offset} kept only \
+             {shared}/{} chunk addresses",
+            edited_addrs.len()
+        );
+    }
+}
+
+/// Chunk the bytes with `cdc::split` and address each chunk.
+fn chunk_addrs(bytes: &[u8], params: &CdcParams) -> std::collections::HashSet<String> {
+    let mut addrs = std::collections::HashSet::new();
+    let mut start = 0usize;
+    for len in cdc::split(bytes, params).unwrap() {
+        addrs.insert(rans_sc::util::sha256::to_hex(&rans_sc::util::sha256::hash(
+            &bytes[start..start + len],
+        )));
+        start += len;
+    }
+    addrs
+}

@@ -4,7 +4,10 @@
 //! regressions localize: AIQ quantize, CSR encode/decode, frequency
 //! table build, rANS encode/decode (per-lane, multi-state within one
 //! lane, and multi-lane), container framing, the scoped-thread fan-out
-//! baseline, and the persistent engine's pooled end-to-end path.
+//! baseline, and the persistent engine's pooled end-to-end path. Three
+//! serving smokes ride in the same artifact: the session-layer
+//! robustness soak, the registry verify/hot-swap churn, and the actor
+//! daemon's 500-session synthetic-fleet run (req_per_s / p50 / p99).
 //!
 //! Run: `cargo bench --bench perf_hotpath`
 //!
@@ -41,6 +44,7 @@ struct Report {
     rows: Vec<(String, Measurement, Option<f64>)>,
     robustness: Option<RobustnessSmoke>,
     registry: Option<RegistrySmoke>,
+    fleet: Option<rans_sc::coordinator::LoadReport>,
 }
 
 /// Outcome of the registry smoke: streaming verification throughput of
@@ -77,7 +81,7 @@ struct RobustnessSmoke {
 
 impl Report {
     fn new() -> Self {
-        Report { rows: Vec::new(), robustness: None, registry: None }
+        Report { rows: Vec::new(), robustness: None, registry: None, fleet: None }
     }
 
     fn add(&mut self, name: &str, m: Measurement) -> &Measurement {
@@ -198,6 +202,29 @@ impl Report {
                 .field("delta_shared_chunks", r.delta_shared_chunks)
                 .field("delta_total_chunks", r.delta_total_chunks);
         }
+        // Serving-daemon fleet smoke: a seeded synthetic fleet (hundreds
+        // of chaos-linked edge sessions) through the actor daemon. CI
+        // bench-smoke fails if `req_per_s` / `p50_ms` / `p99_ms` go
+        // missing, and `fleet_unanswered` must read zero — anything else
+        // means a request ended with no explicit outcome.
+        if let Some(f) = &self.fleet {
+            top = top
+                .field("req_per_s", f.req_per_s)
+                .field("p50_ms", f.p50_ms)
+                .field("p99_ms", f.p99_ms)
+                .field("fleet_edges", f.edges)
+                .field("fleet_requests", f.requests as usize)
+                .field("fleet_ok", f.ok as usize)
+                .field("fleet_rejected", f.rejected as usize)
+                .field("fleet_failed", f.failed as usize)
+                .field("fleet_unanswered", f.unanswered)
+                .field("fleet_dispatch_total", f.dispatch_total as usize)
+                .field("fleet_batch_grow_total", f.batch_grow_total as usize)
+                .field("fleet_batch_shrink_total", f.batch_shrink_total as usize)
+                .field("fleet_max_batch", f.max_batch)
+                .field("fleet_quota_shed_total", f.quota_shed_total as usize)
+                .field("fleet_tenants", f.tenants_seen);
+        }
         top.field("rows", rows).build()
     }
 }
@@ -266,6 +293,35 @@ fn robustness_smoke(fast: bool) -> RobustnessSmoke {
         reconnect_total: registry.get("session.reconnect_total"),
         wall_ms,
     }
+}
+
+/// Drive a seeded synthetic fleet through the actor serving daemon —
+/// ≥500 concurrent edge sessions, a tenth of them on chaos links — and
+/// return the loadgen's outcome accounting. The hard invariant is
+/// `unanswered == 0`: the daemon must give every request an explicit
+/// outcome even under link chaos, and the bench aborts if it doesn't.
+fn fleet_smoke(fast: bool) -> rans_sc::coordinator::LoadReport {
+    use rans_sc::coordinator::loadgen::{self, LoadgenConfig};
+
+    let cfg = LoadgenConfig {
+        edges: 500,
+        requests_per_edge: if fast { 2 } else { 4 },
+        tenants: 8,
+        faulty_share: 0.1,
+        service_us: if fast { 0 } else { 100 },
+        ..LoadgenConfig::default()
+    };
+    let report = loadgen::run(&cfg);
+    assert_eq!(
+        report.unanswered, 0,
+        "fleet smoke: {} of {} requests ended without an explicit outcome",
+        report.unanswered, report.requests
+    );
+    assert!(
+        report.ok > 0,
+        "fleet smoke: retrying sessions over mostly-clean links must land requests"
+    );
+    report
 }
 
 /// Publish a multi-chunk artifact to a scratch [`ChunkStore`] and time
@@ -727,6 +783,29 @@ fn main() {
         reg.delta_bytes_saved
     );
     report.registry = Some(reg);
+
+    // Fleet smoke: the actor serving daemon under a synthetic fleet of
+    // 500 chaos-linked edge sessions, feeding the req_per_s / p50_ms /
+    // p99_ms JSON keys (and proving unanswered == 0 at scale).
+    let fleet = fleet_smoke(fast);
+    println!(
+        "fleet smoke          {} edges x {} req: {} ok / {} rejected / {} failed, \
+         0 unanswered; {:.0} req/s, p50 {:.2} ms, p99 {:.2} ms, \
+         {} batches (max {:.0}), {} grow / {} shrink",
+        fleet.edges,
+        fleet.requests as usize / fleet.edges.max(1),
+        fleet.ok,
+        fleet.rejected,
+        fleet.failed,
+        fleet.req_per_s,
+        fleet.p50_ms,
+        fleet.p99_ms,
+        fleet.dispatch_total,
+        fleet.max_batch,
+        fleet.batch_grow_total,
+        fleet.batch_shrink_total
+    );
+    report.fleet = Some(fleet);
 
     // JSON artifact for the CI perf-trajectory record.
     let json_path =

@@ -64,6 +64,12 @@ pub struct AppConfig {
     /// Model-registry settings (`registry.dir`, `registry.key`,
     /// `registry.key_id`, `registry.model_version` as dotted keys).
     pub registry: RegistryConfig,
+    /// Serving-daemon settings (`daemon.tenant_quota`,
+    /// `daemon.max_queue`, `daemon.batch_max`, … as dotted keys). The
+    /// daemon additionally reuses the top-level `buckets`,
+    /// `batch_wait_us`, and `max_inflight` keys — see
+    /// [`AppConfig::daemon_config`].
+    pub daemon: DaemonSection,
     /// True once `lanes` was set explicitly (file or override) — the
     /// autotuner never overrides an explicit choice. Recorded configs
     /// re-pin on load, so experiment records reproduce cross-machine.
@@ -93,8 +99,46 @@ impl Default for AppConfig {
             max_inflight: 32,
             session: SessionConfig::default(),
             registry: RegistryConfig::default(),
+            daemon: DaemonSection::default(),
             lanes_pinned: false,
             states_pinned: false,
+        }
+    }
+}
+
+/// Settings for the actor-based serving daemon (`rans-sc serve-cloud
+/// --daemon` and `rans-sc loadgen`). All of these seed the daemon's
+/// live-reconfigurable [`ServingKnobs`](crate::coordinator::ServingKnobs)
+/// / controller; they are starting points, not hard-wired limits.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DaemonSection {
+    /// Per-tenant in-flight quota.
+    pub tenant_quota: usize,
+    /// Batch queue-depth bound (jobs beyond it shed with `Busy`).
+    pub max_queue: usize,
+    /// Executor actors (parallel batch lanes).
+    pub executors: usize,
+    /// Adaptive controller: batch-ceiling floor.
+    pub batch_min: usize,
+    /// Adaptive controller: batch-ceiling cap.
+    pub batch_max: usize,
+    /// Adaptive controller: p99 SLO in milliseconds ×1000 (stored as
+    /// integer micros so the config stays integer-typed; 25_000 = 25ms).
+    pub p99_target_us: u64,
+    /// Adaptive controller: observations per decision window.
+    pub window: usize,
+}
+
+impl Default for DaemonSection {
+    fn default() -> Self {
+        DaemonSection {
+            tenant_quota: 16,
+            max_queue: 256,
+            executors: 2,
+            batch_min: 1,
+            batch_max: 32,
+            p99_target_us: 25_000,
+            window: 64,
         }
     }
 }
@@ -267,6 +311,27 @@ impl AppConfig {
                 self.registry.chunking = v.into();
             }
             "registry.src" => self.registry.src = val.as_str().ok_or_else(bad)?.into(),
+            "daemon" => {
+                let obj = val.as_obj().ok_or_else(bad)?;
+                for (dk, dv) in obj {
+                    self.apply_value(&format!("daemon.{dk}"), dv)?;
+                }
+            }
+            "daemon.tenant_quota" => self.daemon.tenant_quota = val.as_usize().ok_or_else(bad)?,
+            "daemon.max_queue" => self.daemon.max_queue = val.as_usize().ok_or_else(bad)?,
+            "daemon.executors" => self.daemon.executors = val.as_usize().ok_or_else(bad)?,
+            "daemon.batch_min" => self.daemon.batch_min = val.as_usize().ok_or_else(bad)?,
+            "daemon.batch_max" => {
+                let m = val.as_usize().ok_or_else(bad)?;
+                if m == 0 {
+                    return Err(Error::config("daemon.batch_max must be >= 1"));
+                }
+                self.daemon.batch_max = m;
+            }
+            "daemon.p99_target_us" => {
+                self.daemon.p99_target_us = val.as_usize().ok_or_else(bad)? as u64
+            }
+            "daemon.window" => self.daemon.window = val.as_usize().ok_or_else(bad)?,
             "channel" => {
                 let obj = val.as_obj().ok_or_else(bad)?;
                 for (ck, cv) in obj {
@@ -301,6 +366,27 @@ impl AppConfig {
     /// True iff `states` was set explicitly (see [`Self::lanes_pinned`]).
     pub fn states_pinned(&self) -> bool {
         self.states_pinned
+    }
+
+    /// Assemble the serving-daemon config from the `daemon.*` section
+    /// plus the shared top-level serving keys (`buckets`,
+    /// `batch_wait_us`, `max_inflight`).
+    pub fn daemon_config(&self) -> crate::coordinator::DaemonConfig {
+        crate::coordinator::DaemonConfig {
+            buckets: self.buckets.clone(),
+            max_queue: self.daemon.max_queue,
+            max_wait: std::time::Duration::from_micros(self.batch_wait_us),
+            max_inflight: self.max_inflight,
+            tenant_quota: self.daemon.tenant_quota,
+            executors: self.daemon.executors,
+            controller: crate::coordinator::daemon::controller::ControllerConfig {
+                min_batch: self.daemon.batch_min,
+                max_batch: self.daemon.batch_max,
+                p99_target_ms: self.daemon.p99_target_us as f64 / 1e3,
+                window: self.daemon.window,
+                ..Default::default()
+            },
+        }
     }
 
     /// Serialize the effective config (for experiment records).
@@ -343,6 +429,18 @@ impl AppConfig {
                     .field("out", self.registry.out.as_str())
                     .field("chunking", self.registry.chunking.as_str())
                     .field("src", self.registry.src.as_str())
+                    .build(),
+            )
+            .field(
+                "daemon",
+                ObjBuilder::new()
+                    .field("tenant_quota", self.daemon.tenant_quota)
+                    .field("max_queue", self.daemon.max_queue)
+                    .field("executors", self.daemon.executors)
+                    .field("batch_min", self.daemon.batch_min)
+                    .field("batch_max", self.daemon.batch_max)
+                    .field("p99_target_us", self.daemon.p99_target_us as usize)
+                    .field("window", self.daemon.window)
                     .build(),
             )
             .field(
@@ -434,6 +532,43 @@ mod tests {
         assert_eq!(c2.session, c.session);
         assert_eq!(c2.io_timeout_ms, 900);
         assert_eq!(c2.max_inflight, 4);
+    }
+
+    #[test]
+    fn daemon_overrides_and_roundtrip() {
+        let mut c = AppConfig::default();
+        assert_eq!(c.daemon, DaemonSection::default());
+        c.apply_override("daemon.tenant_quota=4").unwrap();
+        c.apply_override("daemon.max_queue=512").unwrap();
+        c.apply_override("daemon.executors=8").unwrap();
+        c.apply_override("daemon.batch_min=2").unwrap();
+        c.apply_override("daemon.batch_max=64").unwrap();
+        c.apply_override("daemon.p99_target_us=10000").unwrap();
+        c.apply_override("daemon.window=128").unwrap();
+        assert_eq!(c.daemon.tenant_quota, 4);
+        assert_eq!(c.daemon.max_queue, 512);
+        assert_eq!(c.daemon.executors, 8);
+        assert_eq!(c.daemon.batch_min, 2);
+        assert_eq!(c.daemon.batch_max, 64);
+        assert_eq!(c.daemon.p99_target_us, 10_000);
+        assert_eq!(c.daemon.window, 128);
+        let text = c.to_json().to_string_pretty();
+        let mut c2 = AppConfig::default();
+        c2.apply_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(c2.daemon, c.daemon);
+        assert!(c.apply_override("daemon.nonsense=1").is_err());
+        assert!(c.apply_override("daemon.batch_max=0").is_err());
+        assert!(c.apply_override("daemon.window=x").is_err());
+        // The assembled DaemonConfig stitches daemon.* with the shared
+        // top-level serving keys.
+        c.apply_override("batch_wait_us=750").unwrap();
+        c.apply_override("max_inflight=9").unwrap();
+        let d = c.daemon_config();
+        assert_eq!(d.max_wait, std::time::Duration::from_micros(750));
+        assert_eq!(d.max_inflight, 9);
+        assert_eq!(d.tenant_quota, 4);
+        assert_eq!(d.controller.max_batch, 64);
+        assert!((d.controller.p99_target_ms - 10.0).abs() < 1e-9);
     }
 
     #[test]

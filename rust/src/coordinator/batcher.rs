@@ -6,13 +6,27 @@
 //! remainder by replication. Requests wait at most `max_wait` before a
 //! partial bucket is dispatched — the classic dynamic-batching
 //! latency/throughput dial.
+//!
+//! `max_queue`, `max_wait`, and the batch-size ceiling live in a shared
+//! [`ServingKnobs`] handle and are re-read per decision, so the
+//! adaptive controller (see [`daemon`](super::daemon)) and operators
+//! can retune a running batcher without a restart.
+//!
+//! Shutdown contract: every submitted request is *answered*, never
+//! silently dropped. The worker drains the queue after [`Batcher::stop`];
+//! [`Batcher::shutdown_now`] instead rejects the undispatched backlog
+//! with explicit [`Error::Rejected`]; and if the batcher is dropped (or
+//! the exec closure panics) with requests still queued, those requests
+//! are rejected rather than left with a dead reply channel.
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use super::knobs::ServingKnobs;
 use crate::error::{Error, Result};
 
 /// Batcher tuning.
@@ -49,6 +63,33 @@ struct Shared<Req, Resp> {
     available: Condvar,
     stopped: AtomicBool,
     shed: AtomicU64,
+    knobs: Arc<ServingKnobs>,
+}
+
+impl<Req, Resp> Shared<Req, Resp> {
+    /// Reject every queued-but-undispatched request through its reply
+    /// channel. Returns how many were answered this way.
+    fn reject_queued(&self, why: &str) -> usize {
+        let drained: Vec<Pending<Req, Resp>> =
+            self.queue.lock().unwrap().drain(..).collect();
+        let retry_after_ms = (self.knobs.max_wait().as_millis() as u64).max(1);
+        let n = drained.len();
+        for p in drained {
+            let _ = p.reply.send((Err(Error::rejected(retry_after_ms, why.to_string())), 0.0));
+        }
+        self.shed.fetch_add(n as u64, Ordering::Relaxed);
+        n
+    }
+}
+
+impl<Req, Resp> Drop for Shared<Req, Resp> {
+    /// Last line of the answer-everything contract: if the batcher is
+    /// dropped with requests still queued (no worker ever ran, or the
+    /// worker exited early), answer them with an explicit rejection so
+    /// waiting callers see `Rejected`, not a dead channel.
+    fn drop(&mut self) {
+        self.reject_queued("batcher dropped before dispatch");
+    }
 }
 
 /// A bucketed dynamic batcher.
@@ -70,8 +111,21 @@ impl<Req, Resp> Clone for Batcher<Req, Resp> {
 }
 
 impl<Req: Send + 'static, Resp: Send + 'static> Batcher<Req, Resp> {
-    /// Create a batcher with `cfg` (buckets sorted ascending).
-    pub fn new(mut cfg: BatcherConfig) -> Self {
+    /// Create a batcher with `cfg` (buckets sorted ascending). The
+    /// queue/wait bounds seed a fresh [`ServingKnobs`] handle, readable
+    /// via [`Batcher::knobs`] for live retuning.
+    pub fn new(cfg: BatcherConfig) -> Self {
+        let knobs = Arc::new(ServingKnobs::default());
+        knobs.set_max_queue(cfg.max_queue);
+        knobs.set_max_wait(cfg.max_wait);
+        Self::with_knobs(cfg, knobs)
+    }
+
+    /// Create a batcher that reads its queue/wait/batch bounds from an
+    /// existing shared `knobs` handle (the daemon shares one handle
+    /// between admission, batching, and the adaptive controller). The
+    /// handle's values win over `cfg.max_queue`/`cfg.max_wait`.
+    pub fn with_knobs(mut cfg: BatcherConfig, knobs: Arc<ServingKnobs>) -> Self {
         assert!(!cfg.buckets.is_empty(), "batcher needs at least one bucket");
         cfg.buckets.sort_unstable();
         Batcher {
@@ -80,9 +134,15 @@ impl<Req: Send + 'static, Resp: Send + 'static> Batcher<Req, Resp> {
                 available: Condvar::new(),
                 stopped: AtomicBool::new(false),
                 shed: AtomicU64::new(0),
+                knobs,
             }),
             cfg,
         }
+    }
+
+    /// The live-reconfigurable bounds this batcher reads per decision.
+    pub fn knobs(&self) -> Arc<ServingKnobs> {
+        Arc::clone(&self.shared.knobs)
     }
 
     /// Largest configured bucket.
@@ -90,7 +150,24 @@ impl<Req: Send + 'static, Resp: Send + 'static> Batcher<Req, Resp> {
         *self.cfg.buckets.last().unwrap()
     }
 
-    /// Requests shed so far (queue full or submitted after stop).
+    /// Largest bucket currently allowed by the adaptive batch ceiling
+    /// (`knobs.batch_limit()`); never below the smallest bucket.
+    fn effective_max_bucket(&self) -> usize {
+        let limit = self.shared.knobs.batch_limit();
+        self.cfg
+            .buckets
+            .iter()
+            .rev()
+            .find(|&&b| b <= limit)
+            .copied()
+            .unwrap_or(self.cfg.buckets[0])
+    }
+
+    fn max_wait(&self) -> Duration {
+        self.shared.knobs.max_wait()
+    }
+
+    /// Requests shed so far (queue full, stopped, or drained).
     pub fn shed_total(&self) -> u64 {
         self.shared.shed.load(Ordering::Relaxed)
     }
@@ -100,24 +177,31 @@ impl<Req: Send + 'static, Resp: Send + 'static> Batcher<Req, Resp> {
     /// was rejected at the door.
     fn shed(&self, tx: Sender<(Result<Resp>, f64)>, why: String) {
         self.shared.shed.fetch_add(1, Ordering::Relaxed);
-        let retry_after_ms = (self.cfg.max_wait.as_millis() as u64).max(1);
+        let retry_after_ms = (self.max_wait().as_millis() as u64).max(1);
         let _ = tx.send((Err(Error::rejected(retry_after_ms, why)), 0.0));
     }
 
     /// Enqueue one request; sheds with [`Error::Rejected`] (delivered
     /// through the returned receiver) when the batcher is stopped or the
-    /// queue is at [`BatcherConfig::max_queue`].
+    /// queue is at the `max_queue` knob.
     pub fn submit(&self, req: Req) -> Receiver<(Result<Resp>, f64)> {
         let (tx, rx) = channel();
-        if self.shared.stopped.load(Ordering::SeqCst) {
-            self.shed(tx, "batcher is stopped".into());
-            return rx;
-        }
+        let max_queue = self.shared.knobs.max_queue();
         {
+            // The stopped check must happen *under the queue lock*:
+            // checked outside, a submit racing `stop` can enqueue after
+            // the worker's final empty-queue check and never be
+            // answered. Under the lock the worker either sees this
+            // request before exiting or this submit sees `stopped`.
             let mut q = self.shared.queue.lock().unwrap();
-            if q.len() >= self.cfg.max_queue {
+            if self.shared.stopped.load(Ordering::SeqCst) {
                 drop(q);
-                self.shed(tx, format!("batch queue full ({} pending)", self.cfg.max_queue));
+                self.shed(tx, "batcher is stopped".into());
+                return rx;
+            }
+            if q.len() >= max_queue {
+                drop(q);
+                self.shed(tx, format!("batch queue full ({max_queue} pending)"));
                 return rx;
             }
             q.push_back(Pending { req, enqueued: Instant::now(), reply: tx });
@@ -126,26 +210,41 @@ impl<Req: Send + 'static, Resp: Send + 'static> Batcher<Req, Resp> {
         rx
     }
 
-    /// Stop the worker loop(s) after the queue drains.
+    /// Stop the worker loop(s) after the queue drains: already-queued
+    /// requests are still executed, new submits are shed.
     pub fn stop(&self) {
+        let _q = self.shared.queue.lock().unwrap();
         self.shared.stopped.store(true, Ordering::SeqCst);
+        drop(_q);
         self.shared.available.notify_all();
     }
 
-    /// Pick the bucket for `pending` requests: the largest bucket that
-    /// is fully covered, or the smallest bucket if the oldest request
-    /// has waited past `max_wait`.
+    /// Fast drain: stop accepting work *and* answer every
+    /// queued-but-undispatched request with [`Error::Rejected`] right
+    /// now instead of executing it. Already-dispatched batches finish
+    /// normally. Returns how many queued requests were rejected.
+    pub fn shutdown_now(&self, why: &str) -> usize {
+        self.stop();
+        self.shared.reject_queued(why)
+    }
+
+    /// Pick the bucket for `pending` requests: the largest admissible
+    /// bucket that is fully covered, or the smallest bucket if the
+    /// oldest request has waited past `max_wait`. "Admissible" respects
+    /// the live batch ceiling, so the adaptive controller shrinks
+    /// dispatch sizes mid-flight.
     fn pick_bucket(&self, pending: usize, oldest_wait: Duration) -> Option<usize> {
+        let effective_max = self.effective_max_bucket();
         let covered = self
             .cfg
             .buckets
             .iter()
             .rev()
-            .find(|&&b| pending >= b)
+            .find(|&&b| b <= effective_max && pending >= b)
             .copied();
         match covered {
-            Some(b) if b == self.max_bucket() => Some(b),
-            _ if oldest_wait >= self.cfg.max_wait && pending > 0 => {
+            Some(b) if b == effective_max => Some(b),
+            _ if oldest_wait >= self.max_wait() && pending > 0 => {
                 Some(covered.unwrap_or(self.cfg.buckets[0]))
             }
             _ => None,
@@ -197,7 +296,7 @@ impl<Req: Send + 'static, Resp: Send + 'static> Batcher<Req, Resp> {
                     let timeout = if q.is_empty() {
                         Duration::from_millis(50)
                     } else {
-                        self.cfg.max_wait.saturating_sub(oldest_wait).max(Duration::from_micros(100))
+                        self.max_wait().saturating_sub(oldest_wait).max(Duration::from_micros(100))
                     };
                     let (guard, _) = self
                         .shared
@@ -214,7 +313,22 @@ impl<Req: Send + 'static, Resp: Send + 'static> Batcher<Req, Resp> {
             let (reqs, replies): (Vec<Req>, Vec<Sender<(Result<Resp>, f64)>>) =
                 batch.into_iter().map(|p| (p.req, p.reply)).unzip();
             let n = reqs.len();
-            let mut results = exec(reqs, bucket);
+            // A panicking exec must not strand its batch: answer every
+            // request with an explicit rejection, then re-raise so a
+            // supervisor can restart the worker.
+            let mut results = match catch_unwind(AssertUnwindSafe(|| exec(reqs, bucket))) {
+                Ok(r) => r,
+                Err(payload) => {
+                    for tx in &replies {
+                        let _ = tx.send((
+                            Err(Error::rejected(1, "batch exec panicked".to_string())),
+                            0.0,
+                        ));
+                    }
+                    self.shared.shed.fetch_add(n as u64, Ordering::Relaxed);
+                    resume_unwind(payload);
+                }
+            };
             if results.len() != n {
                 // Contract violation: surface as errors rather than hang.
                 results = (0..n)
@@ -462,5 +576,131 @@ mod tests {
             sorted.sort_unstable();
             assert_eq!(order, sorted, "submitter {t} dispatched out of order");
         }
+    }
+
+    #[test]
+    fn shutdown_now_answers_queued_requests_with_rejected() {
+        // No worker running: shutdown_now must answer the backlog itself.
+        let b: Batcher<u32, u32> = Batcher::new(BatcherConfig::default());
+        let rxs: Vec<_> = (0..3).map(|i| b.submit(i)).collect();
+        let rejected = b.shutdown_now("draining for shutdown");
+        assert_eq!(rejected, 3);
+        for rx in rxs {
+            let (resp, _) = rx.recv().expect("drained request must be answered, not dropped");
+            assert!(matches!(resp.unwrap_err(), Error::Rejected { .. }));
+        }
+        assert_eq!(b.shed_total(), 3);
+        // And later submits are shed at the door.
+        let (resp, _) = b.submit(9).recv().unwrap();
+        assert!(matches!(resp.unwrap_err(), Error::Rejected { .. }));
+    }
+
+    #[test]
+    fn dropping_batcher_rejects_queued_requests_instead_of_hanging() {
+        let b: Batcher<u32, u32> = Batcher::new(BatcherConfig::default());
+        let rx = b.submit(1);
+        drop(b);
+        let (resp, _) = rx.recv().expect("drop must answer, not sever, the reply channel");
+        assert!(matches!(resp.unwrap_err(), Error::Rejected { .. }));
+    }
+
+    #[test]
+    fn zero_unanswered_requests_across_racy_shutdown() {
+        // Submitters race a mid-stream stop(): every single request must
+        // receive *some* answer (Ok or Rejected) — a disconnected reply
+        // channel would surface here as a recv() error.
+        for trial in 0..8 {
+            let b: Batcher<u32, u32> = Batcher::new(BatcherConfig {
+                buckets: vec![1, 4],
+                max_wait: Duration::from_micros(100),
+                ..Default::default()
+            });
+            let worker = {
+                let b = b.clone();
+                std::thread::spawn(move || {
+                    b.run(|reqs, _| reqs.into_iter().map(|r| Ok(r + 1)).collect())
+                })
+            };
+            std::thread::scope(|s| {
+                for t in 0..4u32 {
+                    let b = b.clone();
+                    s.spawn(move || {
+                        for i in 0..25u32 {
+                            let rx = b.submit(t * 100 + i);
+                            let (resp, _) = rx
+                                .recv()
+                                .unwrap_or_else(|_| panic!("trial {trial}: unanswered request"));
+                            match resp {
+                                Ok(v) => assert_eq!(v, t * 100 + i + 1),
+                                Err(e) => {
+                                    assert!(matches!(e, Error::Rejected { .. }), "{e}")
+                                }
+                            }
+                        }
+                    });
+                }
+                let b = b.clone();
+                s.spawn(move || {
+                    std::thread::sleep(Duration::from_micros(50 * trial));
+                    b.stop();
+                });
+            });
+            worker.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn panicking_exec_answers_its_batch_before_unwinding() {
+        let b: Batcher<u32, u32> = Batcher::new(BatcherConfig {
+            buckets: vec![1],
+            max_wait: Duration::ZERO,
+            ..Default::default()
+        });
+        let worker = {
+            let b = b.clone();
+            std::thread::spawn(move || b.run(|_reqs, _| -> Vec<Result<u32>> { panic!("exec bug") }))
+        };
+        let rx = b.submit(5);
+        let (resp, _) = rx.recv().expect("panicked batch must still be answered");
+        assert!(matches!(resp.unwrap_err(), Error::Rejected { .. }));
+        assert!(worker.join().is_err(), "the panic must propagate to the supervisor");
+    }
+
+    #[test]
+    fn batch_limit_knob_caps_bucket_choice_live() {
+        let b: Batcher<u32, u32> = Batcher::new(BatcherConfig {
+            buckets: vec![1, 4, 8],
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        });
+        // Unlimited ceiling: 8 pending fill the 8-bucket.
+        assert_eq!(b.pick_bucket(8, Duration::ZERO), Some(8));
+        // Ceiling 5 admits the 4-bucket at 8 pending.
+        b.knobs().set_batch_limit(5);
+        assert_eq!(b.pick_bucket(8, Duration::ZERO), Some(4));
+        // Ceiling below every bucket falls back to the smallest.
+        b.knobs().set_batch_limit(1);
+        assert_eq!(b.pick_bucket(8, Duration::ZERO), Some(1));
+        // Raising it back restores full batches without a restart.
+        b.knobs().set_batch_limit(usize::MAX);
+        assert_eq!(b.pick_bucket(8, Duration::ZERO), Some(8));
+    }
+
+    #[test]
+    fn max_queue_knob_reconfigures_live() {
+        let b: Batcher<u32, u32> = Batcher::new(BatcherConfig {
+            buckets: vec![1],
+            max_wait: Duration::from_millis(10),
+            max_queue: 1,
+        });
+        let _held = b.submit(1);
+        let (resp, _) = b.submit(2).recv().unwrap();
+        assert!(matches!(resp.unwrap_err(), Error::Rejected { .. }));
+        b.knobs().set_max_queue(10);
+        let rx = b.submit(3);
+        assert!(
+            matches!(rx.try_recv(), Err(std::sync::mpsc::TryRecvError::Empty)),
+            "after raising max_queue the submit must queue, not shed"
+        );
     }
 }

@@ -33,6 +33,7 @@ use crate::telemetry::Registry;
 use crate::tensor::{Dtype, TensorRef};
 use crate::util::timer::Stopwatch;
 
+use super::knobs::ServingKnobs;
 use super::protocol::{Frame, FrameKind};
 use super::transport::{TcpTransport, Transport};
 
@@ -54,9 +55,11 @@ impl Default for ServerLimits {
 ///
 /// Tracks the in-flight count and an EWMA of observed service times so
 /// shed decisions (and the retry-after hint they carry) reflect the
-/// node's actual throughput rather than a hardcoded guess.
-struct Admission {
-    limits: ServerLimits,
+/// node's actual throughput rather than a hardcoded guess. The cap is
+/// read per admission from a shared [`ServingKnobs`] handle, so it can
+/// be retuned on a live server ([`Admission::knobs`]).
+pub struct Admission {
+    knobs: Arc<ServingKnobs>,
     inflight: AtomicUsize,
     /// EWMA of service time in microseconds; `0` until the first
     /// completion. Updated with α = 1/8 (racy read-modify-write is fine:
@@ -65,24 +68,36 @@ struct Admission {
 }
 
 impl Admission {
-    fn new(limits: ServerLimits) -> Self {
-        Admission { limits, inflight: AtomicUsize::new(0), ewma_service_us: AtomicU64::new(0) }
+    /// Gate seeded from static limits (a private knobs handle).
+    pub fn new(limits: ServerLimits) -> Self {
+        Self::with_knobs(Arc::new(ServingKnobs::from_limits(&limits)))
+    }
+
+    /// Gate reading `max_inflight` from an existing shared handle.
+    pub fn with_knobs(knobs: Arc<ServingKnobs>) -> Self {
+        Admission { knobs, inflight: AtomicUsize::new(0), ewma_service_us: AtomicU64::new(0) }
+    }
+
+    /// The live-reconfigurable limits this gate reads per admission.
+    pub fn knobs(&self) -> &Arc<ServingKnobs> {
+        &self.knobs
+    }
+
+    /// Requests currently holding a slot.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
     }
 
     fn ewma_ms(&self) -> u64 {
         self.ewma_service_us.load(Ordering::Relaxed) / 1_000
     }
 
-    /// Admit one request, or return the suggested retry-after (ms).
-    ///
-    /// Sheds when the in-flight cap is hit, and — when the request
-    /// carries a deadline header — when the backlog ahead of it times
-    /// the service-time EWMA already exceeds that deadline (the request
-    /// is provably unmeetable, so failing fast beats a doomed decode).
-    fn try_admit(&self, deadline_ms: Option<u32>) -> std::result::Result<AdmitGuard<'_>, u64> {
+    /// The slot-acquisition decision shared by both guard flavours:
+    /// `Ok(())` with the slot held, or the suggested retry-after (ms).
+    fn admit_slot(&self, deadline_ms: Option<u32>) -> std::result::Result<(), u64> {
         let ewma_ms = self.ewma_ms();
         let queued = self.inflight.fetch_add(1, Ordering::SeqCst);
-        if queued >= self.limits.max_inflight {
+        if queued >= self.knobs.max_inflight() {
             self.inflight.fetch_sub(1, Ordering::SeqCst);
             return Err(ewma_ms.max(1));
         }
@@ -93,7 +108,36 @@ impl Admission {
                 return Err(ewma_ms.max(1));
             }
         }
+        Ok(())
+    }
+
+    fn release(&self, start: Instant) {
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+        let us = start.elapsed().as_micros().min(u64::MAX as u128) as u64;
+        self.note_service(us);
+    }
+
+    /// Admit one request, or return the suggested retry-after (ms).
+    ///
+    /// Sheds when the in-flight cap is hit, and — when the request
+    /// carries a deadline header — when the backlog ahead of it times
+    /// the service-time EWMA already exceeds that deadline (the request
+    /// is provably unmeetable, so failing fast beats a doomed decode).
+    pub fn try_admit(&self, deadline_ms: Option<u32>) -> std::result::Result<AdmitGuard<'_>, u64> {
+        self.admit_slot(deadline_ms)?;
         Ok(AdmitGuard { admission: self, start: Instant::now() })
+    }
+
+    /// Like [`Admission::try_admit`], but the returned permit owns an
+    /// `Arc` to the gate so it can travel with a queued job across
+    /// threads (the daemon holds the slot from ingress until the reply
+    /// is sent, so the EWMA observes queue + service time).
+    pub fn try_admit_owned(
+        self: &Arc<Self>,
+        deadline_ms: Option<u32>,
+    ) -> std::result::Result<AdmitPermit, u64> {
+        self.admit_slot(deadline_ms)?;
+        Ok(AdmitPermit { admission: Arc::clone(self), start: Instant::now() })
     }
 
     fn note_service(&self, observed_us: u64) {
@@ -104,16 +148,27 @@ impl Admission {
 }
 
 /// Releases the in-flight slot and feeds the service-time EWMA on drop.
-struct AdmitGuard<'a> {
+pub struct AdmitGuard<'a> {
     admission: &'a Admission,
     start: Instant,
 }
 
 impl Drop for AdmitGuard<'_> {
     fn drop(&mut self) {
-        self.admission.inflight.fetch_sub(1, Ordering::SeqCst);
-        let us = self.start.elapsed().as_micros().min(u64::MAX as u128) as u64;
-        self.admission.note_service(us);
+        self.admission.release(self.start);
+    }
+}
+
+/// Owned flavour of [`AdmitGuard`] for jobs that outlive the admitting
+/// stack frame (queued behind a batcher, executed on another thread).
+pub struct AdmitPermit {
+    admission: Arc<Admission>,
+    start: Instant,
+}
+
+impl Drop for AdmitPermit {
+    fn drop(&mut self) {
+        self.admission.release(self.start);
     }
 }
 
@@ -130,7 +185,7 @@ pub struct CloudNode {
     pool: ExecPool,
     codec: EngineHandle,
     metrics: Arc<Registry>,
-    admission: Admission,
+    admission: Arc<Admission>,
     /// Active registry deployment. Version 0 = unversioned legacy
     /// serving: no skew checks run and version headers are ignored.
     model_slot: ModelSlot<DeployParams>,
@@ -206,7 +261,7 @@ impl CloudNode {
             pool,
             codec: EngineHandle::shared(),
             metrics: Arc::new(Registry::new()),
-            admission: Admission::new(ServerLimits::default()),
+            admission: Arc::new(Admission::new(ServerLimits::default())),
             model_slot: ModelSlot::new(0, DeployParams::paper(8)),
             registry: None,
             vision_cache: Mutex::new(HashMap::new()),
@@ -225,8 +280,21 @@ impl CloudNode {
 
     /// Replace the default admission bounds.
     pub fn with_limits(mut self, limits: ServerLimits) -> Self {
-        self.admission = Admission::new(limits);
+        self.admission = Arc::new(Admission::new(limits));
         self
+    }
+
+    /// Share an existing knobs handle (daemon/operator retuning): the
+    /// admission gate re-reads `max_inflight` on every decision.
+    pub fn with_serving_knobs(mut self, knobs: Arc<ServingKnobs>) -> Self {
+        self.admission = Arc::new(Admission::with_knobs(knobs));
+        self
+    }
+
+    /// The node's admission gate (shared, hot-reconfigurable via
+    /// [`Admission::knobs`]).
+    pub fn admission(&self) -> &Arc<Admission> {
+        &self.admission
     }
 
     /// Pin the node to a registry deployment: requests declaring a
@@ -443,7 +511,7 @@ impl CloudNode {
                     retry_after_ms: retry_after_ms.min(u32::MAX as u64) as u32,
                     message: format!(
                         "inflight cap {} reached or deadline unmeetable",
-                        self.admission.limits.max_inflight
+                        self.admission.knobs().max_inflight()
                     ),
                 };
                 Frame::new(frame.request_id, kind)
@@ -562,6 +630,25 @@ mod tests {
         drop(g);
         // No deadline header → only the cap applies.
         assert!(adm.try_admit(None).is_ok());
+    }
+
+    #[test]
+    fn max_inflight_reconfigures_on_a_live_gate() {
+        let adm = Arc::new(Admission::new(ServerLimits { max_inflight: 1 }));
+        let g1 = adm.try_admit(None).unwrap();
+        assert!(adm.try_admit(None).is_err(), "cap 1 is full");
+        // Raise the cap without rebuilding the gate: the next admit wins.
+        adm.knobs().set_max_inflight(2);
+        let g2 = adm.try_admit(None).unwrap();
+        drop(g1);
+        drop(g2);
+        // Lower it below the default and verify owned permits respect it.
+        adm.knobs().set_max_inflight(1);
+        let p = adm.try_admit_owned(None).unwrap();
+        assert!(adm.try_admit_owned(None).is_err());
+        drop(p);
+        assert_eq!(adm.inflight(), 0, "owned permit must release its slot");
+        assert!(adm.try_admit_owned(None).is_ok());
     }
 
     #[test]

@@ -1,0 +1,281 @@
+//! Adaptive batch-size feedback controller.
+//!
+//! Static batching thresholds pick one point on the latency/throughput
+//! curve at config time; real fleets move around that curve all day.
+//! This controller closes the loop with an AIMD (additive-increase /
+//! multiplicative-decrease) law over two observed signals:
+//!
+//! * **Tail latency** — when the windowed p99 of end-to-end request
+//!   latency slips past `p99_target_ms`, the batch ceiling is *cut
+//!   multiplicatively* (`shrink_factor`). Over-target tails mean the
+//!   server is trading too much per-request latency for throughput;
+//!   backing off fast restores the SLO in one or two windows.
+//! * **Queue pressure** — when the tail is healthy but the average
+//!   queue depth exceeds `queue_pressure ×` the current ceiling, the
+//!   ceiling *grows additively* (`grow_step`). Deep queues with a
+//!   healthy tail mean there is free throughput on the table.
+//!
+//! Decisions fire once per `window` observations, so one slow request
+//! cannot whipsaw the dial. The controller is a **pure state machine**:
+//! no clocks, no randomness — feed it the same observation sequence and
+//! it emits the same decisions, which is exactly what the unit tests
+//! pin. The daemon feeds it from completed requests and writes its
+//! output into [`ServingKnobs::set_batch_limit`], which the batch
+//! former re-reads per dispatch.
+//!
+//! [`ServingKnobs::set_batch_limit`]: super::super::knobs::ServingKnobs::set_batch_limit
+
+/// Tuning for [`AdaptiveController`].
+#[derive(Debug, Clone)]
+pub struct ControllerConfig {
+    /// Floor for the batch ceiling (shrink never goes below).
+    pub min_batch: usize,
+    /// Hard cap for the batch ceiling (grow never exceeds).
+    pub max_batch: usize,
+    /// Tail-latency SLO: windowed p99 above this triggers a shrink.
+    pub p99_target_ms: f64,
+    /// Additive increase applied on a grow decision.
+    pub grow_step: usize,
+    /// Multiplicative decrease applied on a shrink decision (0 < f < 1).
+    pub shrink_factor: f64,
+    /// Observations per decision; also the p99 sample window.
+    pub window: usize,
+    /// Grow only when average queue depth exceeds `ceiling × this`.
+    pub queue_pressure: f64,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            min_batch: 1,
+            max_batch: 32,
+            p99_target_ms: 25.0,
+            grow_step: 2,
+            shrink_factor: 0.5,
+            window: 64,
+            queue_pressure: 1.5,
+        }
+    }
+}
+
+/// One control decision, emitted at window boundaries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Additive increase of the batch ceiling.
+    Grow { from: usize, to: usize },
+    /// Multiplicative decrease of the batch ceiling.
+    Shrink { from: usize, to: usize },
+    /// No change (mid-window, or both signals healthy/saturated).
+    Hold,
+}
+
+/// The AIMD feedback controller; see the module docs for the law.
+#[derive(Debug)]
+pub struct AdaptiveController {
+    cfg: ControllerConfig,
+    ceiling: usize,
+    window_lat_ms: Vec<f64>,
+    window_depth_sum: u64,
+}
+
+impl AdaptiveController {
+    /// Start at the floor: the controller must *earn* large batches
+    /// from observed queue pressure, so an idle daemon serves with
+    /// minimal batching latency.
+    pub fn new(mut cfg: ControllerConfig) -> Self {
+        cfg.min_batch = cfg.min_batch.max(1);
+        cfg.max_batch = cfg.max_batch.max(cfg.min_batch);
+        cfg.window = cfg.window.max(1);
+        cfg.grow_step = cfg.grow_step.max(1);
+        if !(cfg.shrink_factor > 0.0 && cfg.shrink_factor < 1.0) {
+            cfg.shrink_factor = 0.5;
+        }
+        let ceiling = cfg.min_batch;
+        AdaptiveController {
+            cfg,
+            ceiling,
+            window_lat_ms: Vec::new(),
+            window_depth_sum: 0,
+        }
+    }
+
+    /// The current batch ceiling (what dispatch should respect).
+    pub fn batch_limit(&self) -> usize {
+        self.ceiling
+    }
+
+    /// The controller's tuning.
+    pub fn config(&self) -> &ControllerConfig {
+        &self.cfg
+    }
+
+    /// Record one completed request: its end-to-end latency and the
+    /// queue depth observed when it was dispatched. Returns the
+    /// decision taken (non-`Hold` only at window boundaries).
+    pub fn observe(&mut self, latency_ms: f64, queue_depth: usize) -> Decision {
+        self.window_lat_ms.push(if latency_ms.is_finite() { latency_ms } else { 0.0 });
+        self.window_depth_sum += queue_depth as u64;
+        if self.window_lat_ms.len() < self.cfg.window {
+            return Decision::Hold;
+        }
+        let p99 = tail_quantile(&mut self.window_lat_ms, 0.99);
+        let avg_depth = self.window_depth_sum as f64 / self.cfg.window as f64;
+        self.window_lat_ms.clear();
+        self.window_depth_sum = 0;
+
+        let from = self.ceiling;
+        if p99 > self.cfg.p99_target_ms {
+            let to = (((from as f64) * self.cfg.shrink_factor).floor() as usize)
+                .max(self.cfg.min_batch);
+            self.ceiling = to;
+            if to < from {
+                return Decision::Shrink { from, to };
+            }
+        } else if avg_depth > from as f64 * self.cfg.queue_pressure {
+            let to = from.saturating_add(self.cfg.grow_step).min(self.cfg.max_batch);
+            self.ceiling = to;
+            if to > from {
+                return Decision::Grow { from, to };
+            }
+        }
+        Decision::Hold
+    }
+}
+
+/// Upper-tail quantile by sorting the (small) window in place. With
+/// windows below ~100 samples the 0.99 quantile is effectively the
+/// window max — fine for a shrink trigger, which *should* react to the
+/// worst request of a small window.
+fn tail_quantile(xs: &mut [f64], q: f64) -> f64 {
+    debug_assert!(!xs.is_empty());
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let idx = (((xs.len() - 1) as f64) * q).ceil() as usize;
+    xs[idx.min(xs.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ControllerConfig {
+        ControllerConfig {
+            min_batch: 1,
+            max_batch: 16,
+            p99_target_ms: 20.0,
+            grow_step: 2,
+            shrink_factor: 0.5,
+            window: 8,
+            queue_pressure: 1.5,
+        }
+    }
+
+    /// Feed one full window of identical observations; return the
+    /// boundary decision.
+    fn feed_window(c: &mut AdaptiveController, lat_ms: f64, depth: usize) -> Decision {
+        let mut last = Decision::Hold;
+        for _ in 0..c.config().window {
+            last = c.observe(lat_ms, depth);
+        }
+        last
+    }
+
+    #[test]
+    fn queue_pressure_grows_batches_additively_to_the_cap() {
+        let mut c = AdaptiveController::new(cfg());
+        assert_eq!(c.batch_limit(), 1, "starts at the floor");
+        // Healthy tail + deep queue: grow by +2 per window, 1 → 16.
+        let mut limits = vec![c.batch_limit()];
+        for _ in 0..12 {
+            match feed_window(&mut c, 5.0, 64) {
+                Decision::Grow { from, to } => assert_eq!(to, from + 2),
+                Decision::Hold => {} // saturated at max_batch
+                d => panic!("unexpected {d:?}"),
+            }
+            limits.push(c.batch_limit());
+        }
+        assert_eq!(
+            limits,
+            vec![1, 3, 5, 7, 9, 11, 13, 15, 16, 16, 16, 16, 16],
+            "deterministic additive ramp, clamped at max_batch"
+        );
+    }
+
+    #[test]
+    fn over_target_p99_shrinks_multiplicatively_to_the_floor() {
+        let mut c = AdaptiveController::new(cfg());
+        for _ in 0..8 {
+            feed_window(&mut c, 5.0, 64);
+        }
+        assert_eq!(c.batch_limit(), 16);
+        // Tail blows the SLO: halve per window, 16 → 8 → 4 → 2 → 1.
+        let mut limits = Vec::new();
+        for _ in 0..5 {
+            feed_window(&mut c, 80.0, 64);
+            limits.push(c.batch_limit());
+        }
+        assert_eq!(limits, vec![8, 4, 2, 1, 1], "multiplicative backoff, floored at min_batch");
+    }
+
+    #[test]
+    fn one_bad_request_in_a_window_triggers_the_shrink() {
+        // Small-window p99 is the max: a single SLO-busting request is
+        // enough. That is intentional — document-by-test.
+        let mut c = AdaptiveController::new(cfg());
+        feed_window(&mut c, 5.0, 64); // 1 → 3
+        assert_eq!(c.batch_limit(), 3);
+        for _ in 0..7 {
+            assert_eq!(c.observe(5.0, 64), Decision::Hold);
+        }
+        match c.observe(500.0, 64) {
+            Decision::Shrink { from: 3, to: 1 } => {}
+            d => panic!("expected shrink, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn healthy_tail_and_shallow_queue_holds() {
+        let mut c = AdaptiveController::new(cfg());
+        feed_window(&mut c, 5.0, 64); // 1 → 3
+        // Depth 4 < 3 × 1.5 = 4.5: no pressure, no SLO breach → hold.
+        assert_eq!(feed_window(&mut c, 5.0, 4), Decision::Hold);
+        assert_eq!(c.batch_limit(), 3);
+    }
+
+    #[test]
+    fn mid_window_observations_never_decide() {
+        let mut c = AdaptiveController::new(cfg());
+        for _ in 0..7 {
+            assert_eq!(c.observe(500.0, 1000), Decision::Hold, "decisions only at boundaries");
+        }
+        assert_eq!(c.batch_limit(), 1);
+    }
+
+    #[test]
+    fn identical_observation_streams_give_identical_decision_streams() {
+        let stream: Vec<(f64, usize)> = (0..200)
+            .map(|i| (((i * 37) % 50) as f64, (i * 13) % 40))
+            .collect();
+        let run = || {
+            let mut c = AdaptiveController::new(cfg());
+            stream.iter().map(|&(l, d)| c.observe(l, d)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run(), "pure state machine: no clocks, no randomness");
+    }
+
+    #[test]
+    fn degenerate_configs_are_sanitized() {
+        let c = AdaptiveController::new(ControllerConfig {
+            min_batch: 0,
+            max_batch: 0,
+            window: 0,
+            grow_step: 0,
+            shrink_factor: 7.5,
+            ..cfg()
+        });
+        assert_eq!(c.config().min_batch, 1);
+        assert_eq!(c.config().max_batch, 1);
+        assert_eq!(c.config().window, 1);
+        assert_eq!(c.config().grow_step, 1);
+        assert_eq!(c.config().shrink_factor, 0.5);
+    }
+}

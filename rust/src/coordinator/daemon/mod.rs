@@ -1,0 +1,842 @@
+//! Actor-based serving daemon with adaptive batching.
+//!
+//! The classic [`CloudNode::serve_tcp`](super::cloud::CloudNode::serve_tcp)
+//! loop is thread-per-connection with static limits — fine for a lab
+//! bench, not for a fleet. This module rebuilds the cloud side as a
+//! long-running daemon of supervised, message-passing actors:
+//!
+//! ```text
+//!  edge ──transport──▶ connection pump ──┐   (tenant quota, admission)
+//!  edge ──transport──▶ connection pump ──┤
+//!  edge ──transport──▶ connection pump ──┼─▶ [batch actor] ──▶ [exec actor 0]
+//!     …hundreds more…                    │     │    ▲     └──▶ [exec actor k]
+//!                                        │     ▼    │ Observed{latency, depth}
+//!                    ticker ─── Tick ────┘  AIMD controller
+//!                                           └─▶ ServingKnobs.batch_limit
+//! ```
+//!
+//! * **Connection pumps** (one lightweight thread per attached
+//!   transport) parse frames, answer control traffic inline, enforce
+//!   the per-tenant quota ([`TenantGovernor`]) and the global
+//!   admission gate, then submit jobs to the batch actor's mailbox and
+//!   relay the reply. Tenants are named at attach time — no wire
+//!   change.
+//! * **The batch actor** forms deadline-aware batches: dispatch fires
+//!   when the queue covers the current adaptive ceiling, or when the
+//!   oldest job has waited `max_wait` (ticker-driven), never later.
+//! * **Exec actors** run the request handler, answer each job's reply
+//!   channel, and report `(latency, depth)` observations back to the
+//!   batch actor, which feeds the [`AdaptiveController`] — growing the
+//!   ceiling under queue pressure, cutting it when the observed p99
+//!   slips past target, and publishing the result through
+//!   [`ServingKnobs`] for everyone to read.
+//! * **Supervision** ([`actor`]) restarts a panicked actor with fresh
+//!   state; jobs caught in the blast radius sever their reply channels
+//!   and the pump answers the edge with an explicit `ServerError`.
+//!
+//! Every request gets an explicit outcome — a reply, `Busy`, or
+//! `ServerError` — under load, chaos, restart, and shutdown alike.
+//! The [`loadgen`](super::loadgen) module drives hundreds of simulated
+//! edges against this daemon as the scale benchmark.
+
+pub mod actor;
+pub mod controller;
+pub mod tenant;
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::telemetry::Registry;
+
+use super::cloud::{Admission, AdmitPermit, CloudNode, ServerLimits};
+use super::knobs::ServingKnobs;
+use super::protocol::{Frame, FrameKind};
+use super::transport::{TcpTransport, Transport};
+
+use actor::{Actor, ActorHandle, Control, Mailbox, SupervisorPolicy};
+use controller::{AdaptiveController, ControllerConfig, Decision};
+use tenant::{TenantGovernor, TenantPermit};
+
+/// How often an idle connection pump wakes to check for shutdown.
+const PUMP_POLL: Duration = Duration::from_millis(25);
+
+/// Consecutive retryable receive errors tolerated per connection
+/// before the pump declares the link dead (mirrors `serve_loop`).
+const MAX_CONSECUTIVE_RECV_ERRORS: u32 = 8;
+
+/// Request handler the daemon executes per frame (e.g.
+/// [`CloudNode::handle`] or a synthetic responder in tests/benches).
+pub type ExecFn = Arc<dyn Fn(&Frame) -> Frame + Send + Sync>;
+
+/// Daemon tuning. Initial values for the queue/wait/inflight/quota
+/// bounds; all of them are live-reconfigurable afterwards through
+/// [`Daemon::knobs`].
+#[derive(Debug, Clone)]
+pub struct DaemonConfig {
+    /// Compiled batch sizes, ascending (same meaning as
+    /// [`BatcherConfig::buckets`](super::batcher::BatcherConfig)).
+    pub buckets: Vec<usize>,
+    /// Initial batch queue-depth bound (jobs beyond it are shed).
+    pub max_queue: usize,
+    /// Initial flush deadline for partial batches.
+    pub max_wait: Duration,
+    /// Initial global in-flight cap (admission gate).
+    pub max_inflight: usize,
+    /// Initial per-tenant in-flight quota.
+    pub tenant_quota: usize,
+    /// Executor actors (parallel batch lanes).
+    pub executors: usize,
+    /// Adaptive batch controller tuning.
+    pub controller: ControllerConfig,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig {
+            buckets: vec![1, 8],
+            max_queue: 256,
+            max_wait: Duration::from_millis(2),
+            max_inflight: 64,
+            tenant_quota: 16,
+            executors: 2,
+            controller: ControllerConfig::default(),
+        }
+    }
+}
+
+/// One admitted request travelling pump → batch actor → exec actor.
+/// Carries its permits so the tenant/admission slots are held until the
+/// reply is sent (the admission EWMA thus observes queue + service).
+struct Job {
+    frame: Frame,
+    enqueued: Instant,
+    reply: Sender<Frame>,
+    _tenant: TenantPermit,
+    _admit: AdmitPermit,
+}
+
+impl Job {
+    fn answer_busy(&self, retry_after_ms: u64, message: &str) {
+        let kind = FrameKind::Busy {
+            retry_after_ms: retry_after_ms.min(u32::MAX as u64) as u32,
+            message: message.to_string(),
+        };
+        let _ = self.reply.send(Frame::new(self.frame.request_id, kind));
+    }
+}
+
+enum BatchMsg {
+    Submit(Job),
+    /// Periodic flush check from the ticker thread.
+    Tick,
+    /// Feedback from an exec actor: per-request end-to-end latencies of
+    /// a finished batch and the queue depth seen at its dispatch.
+    Observed { latencies_ms: Vec<f64>, depth: usize },
+}
+
+enum ExecMsg {
+    Run { jobs: Vec<Job>, depth: usize },
+}
+
+/// The batch-forming actor: owns the job queue, the bucket choice, and
+/// the adaptive controller.
+struct BatchActor {
+    queue: std::collections::VecDeque<Job>,
+    buckets: Vec<usize>,
+    knobs: Arc<ServingKnobs>,
+    controller: AdaptiveController,
+    execs: Vec<Mailbox<ExecMsg>>,
+    next_exec: usize,
+    metrics: Arc<Registry>,
+}
+
+impl BatchActor {
+    /// Largest bucket under the live adaptive ceiling (floor: smallest
+    /// bucket).
+    fn effective_bucket(&self) -> usize {
+        let limit = self.knobs.batch_limit();
+        self.buckets.iter().rev().find(|&&b| b <= limit).copied().unwrap_or(self.buckets[0])
+    }
+
+    fn dispatch(&mut self, jobs: Vec<Job>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let depth = self.queue.len();
+        self.metrics.histogram("daemon.batch_size").record_ms(jobs.len() as f64);
+        for job in &jobs {
+            self.metrics
+                .histogram("daemon.queue_ms")
+                .record_ms(job.enqueued.elapsed().as_secs_f64() * 1e3);
+        }
+        self.metrics.incr("daemon.dispatch_total", 1);
+        let lane = self.next_exec % self.execs.len();
+        self.next_exec = self.next_exec.wrapping_add(1);
+        if self.execs[lane].send(ExecMsg::Run { jobs, depth }).is_err() {
+            // Exec lane gone for good (supervisor gave up): the jobs
+            // inside the failed send are dropped with the message and
+            // their reply channels sever — pumps answer ServerError.
+            self.metrics.incr("daemon.exec_lane_lost", 1);
+        }
+    }
+
+    /// Cut and dispatch every full batch; with `flush`, also push out a
+    /// partial batch whose oldest job has exceeded `max_wait`.
+    fn form_batches(&mut self, flush: bool) {
+        loop {
+            let bucket = self.effective_bucket();
+            if self.queue.len() >= bucket {
+                let batch: Vec<Job> = self.queue.drain(..bucket).collect();
+                self.dispatch(batch);
+                continue;
+            }
+            if flush && !self.queue.is_empty() {
+                let oldest = self.queue.front().map(|j| j.enqueued.elapsed()).unwrap_or_default();
+                if oldest >= self.knobs.max_wait() {
+                    let take = self
+                        .buckets
+                        .iter()
+                        .rev()
+                        .find(|&&b| b <= self.queue.len())
+                        .copied()
+                        .unwrap_or(self.buckets[0])
+                        .min(self.queue.len());
+                    let batch: Vec<Job> = self.queue.drain(..take).collect();
+                    self.dispatch(batch);
+                    continue;
+                }
+            }
+            return;
+        }
+    }
+}
+
+impl Actor for BatchActor {
+    type Msg = BatchMsg;
+
+    fn handle(&mut self, msg: BatchMsg) -> Control {
+        match msg {
+            BatchMsg::Submit(job) => {
+                if self.queue.len() >= self.knobs.max_queue() {
+                    let retry = (self.knobs.max_wait().as_millis() as u64).max(1);
+                    job.answer_busy(retry, "daemon batch queue full");
+                    self.metrics.incr("daemon.queue_shed_total", 1);
+                } else {
+                    self.queue.push_back(job);
+                    self.form_batches(false);
+                }
+            }
+            BatchMsg::Tick => self.form_batches(true),
+            BatchMsg::Observed { latencies_ms, depth } => {
+                for lat in latencies_ms {
+                    match self.controller.observe(lat, depth) {
+                        Decision::Grow { to, .. } => {
+                            self.knobs.set_batch_limit(to);
+                            self.metrics.incr("daemon.batch_grow_total", 1);
+                        }
+                        Decision::Shrink { to, .. } => {
+                            self.knobs.set_batch_limit(to);
+                            self.metrics.incr("daemon.batch_shrink_total", 1);
+                        }
+                        Decision::Hold => {}
+                    }
+                }
+            }
+        }
+        Control::Continue
+    }
+
+    fn on_drain(&mut self, msg: BatchMsg) {
+        if let BatchMsg::Submit(job) = msg {
+            job.answer_busy(1, "daemon draining");
+            self.metrics.incr("daemon.drain_shed_total", 1);
+        }
+    }
+
+    fn on_stop(&mut self) {
+        // The no-silent-drop contract at shutdown: everything still
+        // queued is answered with an explicit Busy.
+        for job in self.queue.drain(..) {
+            let kind = FrameKind::Busy { retry_after_ms: 1, message: "daemon draining".into() };
+            let _ = job.reply.send(Frame::new(job.frame.request_id, kind));
+            self.metrics.incr("daemon.drain_shed_total", 1);
+        }
+    }
+}
+
+/// An executor lane: runs the handler over a batch, answers each job,
+/// and reports observations to the batch actor.
+struct ExecActor {
+    exec: ExecFn,
+    feedback: Mailbox<BatchMsg>,
+    metrics: Arc<Registry>,
+}
+
+impl Actor for ExecActor {
+    type Msg = ExecMsg;
+
+    fn handle(&mut self, msg: ExecMsg) -> Control {
+        let ExecMsg::Run { jobs, depth } = msg;
+        let mut latencies = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let waited_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
+            let reply = match job.frame.deadline_ms {
+                // Deadline already blown in the queue: answering Busy
+                // beats burning exec time on a reply the edge will
+                // discard.
+                Some(d) if waited_ms > d as f64 => {
+                    self.metrics.incr("daemon.deadline_shed_total", 1);
+                    Frame::new(
+                        job.frame.request_id,
+                        FrameKind::Busy {
+                            retry_after_ms: 1,
+                            message: "deadline exceeded while queued".into(),
+                        },
+                    )
+                }
+                _ => (self.exec)(&job.frame),
+            };
+            let _ = job.reply.send(reply);
+            let total_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
+            self.metrics.histogram("daemon.latency_ms").record_ms(total_ms);
+            latencies.push(total_ms);
+        }
+        let _ = self.feedback.send(BatchMsg::Observed { latencies_ms: latencies, depth });
+        Control::Continue
+    }
+
+    fn on_drain(&mut self, msg: ExecMsg) {
+        let ExecMsg::Run { jobs, .. } = msg;
+        for job in jobs {
+            job.answer_busy(1, "daemon draining");
+            self.metrics.incr("daemon.drain_shed_total", 1);
+        }
+    }
+}
+
+/// Everything the connection pumps share.
+struct Inner {
+    knobs: Arc<ServingKnobs>,
+    admission: Arc<Admission>,
+    tenants: TenantGovernor,
+    metrics: Arc<Registry>,
+    batch: Mailbox<BatchMsg>,
+    stopping: AtomicBool,
+}
+
+/// The long-running serving daemon. Attach transports (or run
+/// [`Daemon::serve_tcp`]); drop or [`Daemon::shutdown`] to drain.
+pub struct Daemon {
+    inner: Arc<Inner>,
+    // Field order is drop order: the batch actor drains (answering its
+    // queue) before the exec handles join.
+    batch: Option<ActorHandle<BatchMsg>>,
+    execs: Vec<ActorHandle<ExecMsg>>,
+    ticker: Option<JoinHandle<()>>,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Daemon {
+    /// Build a daemon around an arbitrary request handler.
+    pub fn new(cfg: DaemonConfig, exec: ExecFn) -> Self {
+        let mut buckets = if cfg.buckets.is_empty() { vec![1] } else { cfg.buckets.clone() };
+        buckets.sort_unstable();
+
+        let knobs = Arc::new(ServingKnobs::from_limits(&ServerLimits {
+            max_inflight: cfg.max_inflight,
+        }));
+        knobs.set_max_queue(cfg.max_queue);
+        knobs.set_max_wait(cfg.max_wait);
+        knobs.set_tenant_quota(cfg.tenant_quota);
+        let controller = AdaptiveController::new(cfg.controller.clone());
+        knobs.set_batch_limit(controller.batch_limit());
+
+        let metrics = Arc::new(Registry::new());
+        let admission = Arc::new(Admission::with_knobs(Arc::clone(&knobs)));
+
+        // The batch actor and the exec lanes reference each other
+        // (jobs down, observations up), so the lane mailboxes arrive
+        // through a one-shot handshake the factory caches — a restart
+        // reuses the cached lanes instead of re-reading the channel.
+        let (lane_tx, lane_rx) = channel::<Vec<Mailbox<ExecMsg>>>();
+        let batch = {
+            let knobs = Arc::clone(&knobs);
+            let metrics = Arc::clone(&metrics);
+            let buckets = buckets.clone();
+            let controller_cfg = cfg.controller.clone();
+            let lane_rx = Mutex::new(lane_rx);
+            let lanes_cache: Mutex<Option<Vec<Mailbox<ExecMsg>>>> = Mutex::new(None);
+            actor::spawn("daemon-batch", SupervisorPolicy::default(), move || {
+                let mut cache = lanes_cache.lock().unwrap();
+                if cache.is_none() {
+                    *cache =
+                        Some(lane_rx.lock().unwrap().recv().expect("exec lanes handed over"));
+                }
+                BatchActor {
+                    queue: std::collections::VecDeque::new(),
+                    buckets: buckets.clone(),
+                    knobs: Arc::clone(&knobs),
+                    controller: AdaptiveController::new(controller_cfg.clone()),
+                    execs: cache.clone().expect("lanes cached"),
+                    next_exec: 0,
+                    metrics: Arc::clone(&metrics),
+                }
+            })
+        };
+        let execs: Vec<ActorHandle<ExecMsg>> = (0..cfg.executors.max(1))
+            .map(|i| {
+                let exec = Arc::clone(&exec);
+                let feedback = batch.mailbox();
+                let metrics = Arc::clone(&metrics);
+                actor::spawn(&format!("daemon-exec-{i}"), SupervisorPolicy::default(), move || {
+                    ExecActor {
+                        exec: Arc::clone(&exec),
+                        feedback: feedback.clone(),
+                        metrics: Arc::clone(&metrics),
+                    }
+                })
+            })
+            .collect();
+        lane_tx.send(execs.iter().map(|h| h.mailbox()).collect()).expect("batch actor alive");
+
+        let inner = Arc::new(Inner {
+            knobs: Arc::clone(&knobs),
+            admission,
+            tenants: TenantGovernor::new(Arc::clone(&knobs)),
+            metrics: Arc::clone(&metrics),
+            batch: batch.mailbox(),
+            stopping: AtomicBool::new(false),
+        });
+
+        let ticker = {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name("daemon-ticker".into())
+                .spawn(move || {
+                    while !inner.stopping.load(Ordering::SeqCst) {
+                        let wait = inner.knobs.max_wait();
+                        std::thread::sleep((wait / 2).clamp(
+                            Duration::from_micros(200),
+                            Duration::from_millis(20),
+                        ));
+                        if inner.batch.send(BatchMsg::Tick).is_err() {
+                            return;
+                        }
+                    }
+                })
+                .expect("spawn daemon ticker")
+        };
+
+        Daemon { inner, batch: Some(batch), execs, ticker: Some(ticker), conns: Mutex::new(Vec::new()) }
+    }
+
+    /// Daemon fronting a [`CloudNode`]: the node's pure `handle` runs
+    /// behind the daemon's own admission/quota/batching (the node-side
+    /// gate is bypassed so requests are not admitted twice).
+    pub fn for_node(cfg: DaemonConfig, node: Arc<CloudNode>) -> Self {
+        Self::new(cfg, Arc::new(move |frame: &Frame| node.handle(frame)))
+    }
+
+    /// The live-reconfigurable dials (inflight cap, queue bound, flush
+    /// wait, adaptive ceiling, tenant quota).
+    pub fn knobs(&self) -> Arc<ServingKnobs> {
+        Arc::clone(&self.inner.knobs)
+    }
+
+    /// The daemon's metrics registry (`daemon.*` and `tenant.<id>.*`).
+    pub fn metrics(&self) -> Arc<Registry> {
+        Arc::clone(&self.inner.metrics)
+    }
+
+    /// Tenants observed so far.
+    pub fn tenant_count(&self) -> usize {
+        self.inner.tenants.tenant_count()
+    }
+
+    /// Attach one edge connection under `tenant`: spawns a pump thread
+    /// that serves the transport until the peer goes away or the daemon
+    /// drains.
+    pub fn attach(&self, transport: Box<dyn Transport>, tenant: &str) {
+        let inner = Arc::clone(&self.inner);
+        let tenant = tenant.to_string();
+        let handle = std::thread::Builder::new()
+            .name(format!("daemon-conn-{tenant}"))
+            .spawn(move || pump(transport, tenant, inner))
+            .expect("spawn daemon connection pump");
+        self.conns.lock().unwrap().push(handle);
+    }
+
+    /// Accept loop over TCP: each connection becomes a pump under a
+    /// tenant named for the peer address. Returns when `stop` is
+    /// raised (checked between accepts).
+    pub fn serve_tcp(&self, listener: TcpListener, stop: Arc<AtomicBool>) -> Result<()> {
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::transport(format!("nonblocking: {e}")))?;
+        while !stop.load(Ordering::SeqCst) && !self.inner.stopping.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, addr)) => {
+                    stream
+                        .set_nonblocking(false)
+                        .map_err(|e| Error::transport(format!("blocking: {e}")))?;
+                    match TcpTransport::new(stream) {
+                        Ok(t) => self.attach(Box::new(t), &format!("ip-{}", addr.ip())),
+                        Err(_) => continue,
+                    }
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(Error::transport(format!("accept: {e}"))),
+            }
+        }
+        Ok(())
+    }
+
+    /// Graceful drain: stop accepting, finish in-flight work, answer
+    /// everything queued, join every thread. (Dropping the daemon does
+    /// the same.)
+    pub fn shutdown(self) {
+        drop(self);
+    }
+
+    fn stop_everything(&mut self) {
+        self.inner.stopping.store(true, Ordering::SeqCst);
+        // Pumps first, while the actors are still alive: their
+        // in-flight jobs complete (ticker still flushing partials) and
+        // each pump exits at its next poll.
+        let conns: Vec<JoinHandle<()>> = self.conns.lock().unwrap().drain(..).collect();
+        for c in conns {
+            let _ = c.join();
+        }
+        if let Some(t) = self.ticker.take() {
+            let _ = t.join();
+        }
+        // Batch actor drains (answering its queue), then the lanes.
+        if let Some(b) = self.batch.take() {
+            b.join();
+        }
+        self.execs.clear();
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        self.stop_everything();
+    }
+}
+
+fn busy_frame(request_id: u64, retry_after_ms: u64, message: &str) -> Frame {
+    Frame::new(
+        request_id,
+        FrameKind::Busy {
+            retry_after_ms: retry_after_ms.min(u32::MAX as u64) as u32,
+            message: message.to_string(),
+        },
+    )
+}
+
+/// One connection's serve loop: transport in, mailbox out.
+fn pump(mut t: Box<dyn Transport>, tenant: String, inner: Arc<Inner>) {
+    let mut consecutive_errors = 0u32;
+    // Per-tenant series: `tenant.<id>.requests` / `.ok` / `.shed` /
+    // `.errors` / `.quota_rejected`, all in the shared snapshot.
+    let scope = inner.metrics.scoped(&format!("tenant.{tenant}"));
+    loop {
+        if inner.stopping.load(Ordering::SeqCst) {
+            return;
+        }
+        let frame = match t.recv_timeout(PUMP_POLL) {
+            Ok(f) => {
+                consecutive_errors = 0;
+                f
+            }
+            // Idle poll: loop around and re-check the stop flag.
+            Err(Error::Timeout(_)) => continue,
+            Err(e) if e.is_retryable() && consecutive_errors < MAX_CONSECUTIVE_RECV_ERRORS => {
+                consecutive_errors += 1;
+                inner.metrics.incr("daemon.recv_errors", 1);
+                continue;
+            }
+            Err(_) => return, // peer closed or the link is dead
+        };
+        let needs_batching = matches!(
+            frame.kind,
+            FrameKind::InferVision { .. }
+                | FrameKind::InferVisionRaw { .. }
+                | FrameKind::InferLm { .. }
+                | FrameKind::InferLmRaw { .. }
+        );
+        if !needs_batching {
+            let reply = match frame.kind {
+                FrameKind::Ping => Frame::new(frame.request_id, FrameKind::Pong),
+                FrameKind::Stats => Frame::new(
+                    frame.request_id,
+                    FrameKind::StatsReply { json: inner.metrics.snapshot_json() },
+                ),
+                FrameKind::Shutdown => {
+                    let _ = t.send(&Frame::new(frame.request_id, FrameKind::Pong));
+                    return;
+                }
+                ref other => Frame::new(
+                    frame.request_id,
+                    FrameKind::ServerError {
+                        message: format!("daemon does not serve {other:?}"),
+                    },
+                ),
+            };
+            if t.send(&reply).is_err() {
+                return;
+            }
+            continue;
+        }
+
+        scope.incr("requests", 1);
+        inner.metrics.incr("daemon.requests_total", 1);
+        let retry_hint = (inner.knobs.max_wait().as_millis() as u64).max(1);
+
+        // Tenant quota before the global gate: a noisy tenant is shed
+        // on its own budget without ever touching shared slots.
+        let tenant_permit = match inner.tenants.try_acquire(&tenant) {
+            Ok(p) => p,
+            Err(_held) => {
+                scope.incr("quota_rejected", 1);
+                inner.metrics.incr("daemon.quota_shed_total", 1);
+                let reply =
+                    busy_frame(frame.request_id, retry_hint, "tenant quota exhausted");
+                if t.send(&reply).is_err() {
+                    return;
+                }
+                continue;
+            }
+        };
+        let admit_permit = match inner.admission.try_admit_owned(frame.deadline_ms) {
+            Ok(p) => p,
+            Err(retry_after_ms) => {
+                scope.incr("shed", 1);
+                inner.metrics.incr("daemon.shed_total", 1);
+                let reply = busy_frame(
+                    frame.request_id,
+                    retry_after_ms,
+                    "daemon inflight cap reached or deadline unmeetable",
+                );
+                if t.send(&reply).is_err() {
+                    return;
+                }
+                continue;
+            }
+        };
+
+        let request_id = frame.request_id;
+        let (reply_tx, reply_rx) = channel();
+        let job = Job {
+            frame,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+            _tenant: tenant_permit,
+            _admit: admit_permit,
+        };
+        if inner.batch.send(BatchMsg::Submit(job)).is_err() {
+            // Batch actor gone (drain or crash-loop): explicit answer.
+            let reply = busy_frame(request_id, retry_hint, "daemon draining");
+            if t.send(&reply).is_err() {
+                return;
+            }
+            continue;
+        }
+        let reply = match reply_rx.recv() {
+            Ok(r) => r,
+            Err(_) => {
+                // The job was lost to an actor restart mid-batch: the
+                // severed reply channel is the signal; answer loudly.
+                inner.metrics.incr("daemon.orphaned_total", 1);
+                Frame::new(
+                    request_id,
+                    FrameKind::ServerError {
+                        message: "request lost to an internal restart; safe to retry".into(),
+                    },
+                )
+            }
+        };
+        match reply.kind {
+            FrameKind::Busy { .. } => scope.incr("shed", 1),
+            FrameKind::ServerError { .. } => scope.incr("errors", 1),
+            _ => scope.incr("ok", 1),
+        }
+        if t.send(&reply).is_err() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::transport::InProcTransport;
+
+    fn echo_exec() -> ExecFn {
+        Arc::new(|frame: &Frame| {
+            let kind = match &frame.kind {
+                FrameKind::InferLm { payload, .. } => FrameKind::Logits {
+                    data: vec![payload.iter().map(|&b| b as u64).sum::<u64>() as f32],
+                    decode_ms: 0.0,
+                    compute_ms: 0.0,
+                },
+                other => FrameKind::ServerError { message: format!("unexpected {other:?}") },
+            };
+            Frame::new(frame.request_id, kind)
+        })
+    }
+
+    fn infer(id: u64, payload: Vec<u8>) -> Frame {
+        Frame::new(id, FrameKind::InferLm { model: "m".into(), payload })
+    }
+
+    #[test]
+    fn roundtrips_inference_and_control_frames() {
+        let daemon = Daemon::new(DaemonConfig::default(), echo_exec());
+        let (mut client, server) = InProcTransport::pair();
+        daemon.attach(Box::new(server), "t0");
+
+        client.send(&Frame::new(1, FrameKind::Ping)).unwrap();
+        assert!(matches!(client.recv().unwrap().kind, FrameKind::Pong));
+
+        client.send(&infer(2, vec![1, 2, 3])).unwrap();
+        let reply = client.recv().unwrap();
+        assert_eq!(reply.request_id, 2);
+        match reply.kind {
+            FrameKind::Logits { ref data, .. } => assert_eq!(data[0], 6.0),
+            ref other => panic!("unexpected {other:?}"),
+        }
+
+        client.send(&Frame::new(3, FrameKind::Stats)).unwrap();
+        match client.recv().unwrap().kind {
+            FrameKind::StatsReply { ref json } => {
+                assert!(json.contains("tenant.t0.ok"), "per-tenant counters in stats: {json}")
+            }
+            ref other => panic!("unexpected {other:?}"),
+        }
+        daemon.shutdown();
+    }
+
+    #[test]
+    fn many_edges_all_get_explicit_outcomes() {
+        let daemon = Daemon::new(
+            DaemonConfig { max_wait: Duration::from_micros(300), ..Default::default() },
+            echo_exec(),
+        );
+        let mut clients = Vec::new();
+        for i in 0..16 {
+            let (client, server) = InProcTransport::pair();
+            daemon.attach(Box::new(server), &format!("t{}", i % 4));
+            clients.push(client);
+        }
+        std::thread::scope(|s| {
+            for (i, client) in clients.iter_mut().enumerate() {
+                s.spawn(move || {
+                    for r in 0..20u64 {
+                        let payload = vec![(i as u8).wrapping_add(r as u8); 4];
+                        let want: f32 = payload.iter().map(|&b| b as u64).sum::<u64>() as f32;
+                        client.send(&infer(r, payload)).unwrap();
+                        let reply = client.recv().expect("every request answered");
+                        assert_eq!(reply.request_id, r);
+                        match reply.kind {
+                            FrameKind::Logits { ref data, .. } => assert_eq!(data[0], want),
+                            FrameKind::Busy { .. } => {} // explicit shed is a valid outcome
+                            ref other => panic!("unexpected {other:?}"),
+                        }
+                    }
+                });
+            }
+        });
+        let metrics = daemon.metrics();
+        assert_eq!(daemon.tenant_count(), 4);
+        assert!(metrics.get("daemon.dispatch_total") > 0);
+        daemon.shutdown();
+    }
+
+    #[test]
+    fn noisy_tenant_is_quota_shed_while_quiet_tenant_flows() {
+        // Slow exec + tiny quota: the noisy tenant's burst must be shed
+        // on its own budget, never starving the quiet tenant.
+        let slow: ExecFn = Arc::new(|frame: &Frame| {
+            std::thread::sleep(Duration::from_millis(2));
+            Frame::new(
+                frame.request_id,
+                FrameKind::Logits { data: vec![1.0], decode_ms: 0.0, compute_ms: 0.0 },
+            )
+        });
+        let daemon = Daemon::new(
+            DaemonConfig {
+                tenant_quota: 2,
+                max_inflight: 64,
+                max_wait: Duration::from_micros(200),
+                ..Default::default()
+            },
+            slow,
+        );
+        let quota_shed = {
+            // Noisy tenant: 8 connections firing concurrently.
+            let mut noisy = Vec::new();
+            for _ in 0..8 {
+                let (client, server) = InProcTransport::pair();
+                daemon.attach(Box::new(server), "noisy");
+                noisy.push(client);
+            }
+            let (mut quiet, server) = InProcTransport::pair();
+            daemon.attach(Box::new(server), "quiet");
+            std::thread::scope(|s| {
+                for client in noisy.iter_mut() {
+                    s.spawn(move || {
+                        for r in 0..10u64 {
+                            client.send(&infer(r, vec![1])).unwrap();
+                            let reply = client.recv().expect("noisy requests still answered");
+                            assert!(
+                                matches!(
+                                    reply.kind,
+                                    FrameKind::Logits { .. } | FrameKind::Busy { .. }
+                                ),
+                                "explicit outcome required"
+                            );
+                        }
+                    });
+                }
+                s.spawn(move || {
+                    for r in 0..10u64 {
+                        quiet.send(&infer(r, vec![2])).unwrap();
+                        let reply = quiet.recv().expect("quiet tenant must not starve");
+                        assert!(
+                            matches!(reply.kind, FrameKind::Logits { .. }),
+                            "quota 2 with one connection: quiet tenant never sheds, got {:?}",
+                            reply.kind
+                        );
+                    }
+                });
+            });
+            daemon.metrics().get("tenant.noisy.quota_rejected")
+        };
+        assert!(quota_shed > 0, "8 concurrent noisy connections over quota 2 must shed");
+        assert_eq!(daemon.metrics().get("tenant.quiet.quota_rejected"), 0);
+        daemon.shutdown();
+    }
+
+    #[test]
+    fn shutdown_answers_rather_than_drops() {
+        let daemon = Daemon::new(DaemonConfig::default(), echo_exec());
+        let (mut client, server) = InProcTransport::pair();
+        daemon.attach(Box::new(server), "t");
+        client.send(&infer(1, vec![9])).unwrap();
+        let reply = client.recv().unwrap();
+        assert!(matches!(reply.kind, FrameKind::Logits { .. }));
+        daemon.shutdown();
+        // The connection is closed after drain: a post-shutdown call
+        // fails loudly instead of hanging.
+        let _ = client.send(&infer(2, vec![9]));
+        assert!(client.recv().is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! Per-tenant in-flight quotas.
+//!
+//! The global admission gate caps total concurrent work, but says
+//! nothing about *who* holds the slots: one noisy tenant retrying hard
+//! can occupy the whole cap and starve everyone else. The
+//! [`TenantGovernor`] layers a per-tenant in-flight quota (the
+//! `tenant_quota` knob, read live per acquisition) on top: a tenant at
+//! quota is shed with `Busy` while other tenants' requests keep
+//! flowing. Tenants are identified at connection attach time (the
+//! daemon names each attached transport), not on the wire — no
+//! protocol change.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::super::knobs::ServingKnobs;
+
+#[derive(Debug, Default)]
+struct TenantState {
+    inflight: AtomicUsize,
+}
+
+/// Quota accountant shared by every connection pump.
+pub struct TenantGovernor {
+    knobs: Arc<ServingKnobs>,
+    tenants: Mutex<BTreeMap<String, Arc<TenantState>>>,
+}
+
+impl TenantGovernor {
+    /// Governor reading `tenant_quota` from the shared knobs handle.
+    pub fn new(knobs: Arc<ServingKnobs>) -> Self {
+        TenantGovernor { knobs, tenants: Mutex::new(BTreeMap::new()) }
+    }
+
+    fn state(&self, tenant: &str) -> Arc<TenantState> {
+        let mut map = self.tenants.lock().unwrap();
+        Arc::clone(map.entry(tenant.to_string()).or_default())
+    }
+
+    /// Acquire one in-flight slot for `tenant`, or return the tenant's
+    /// current in-flight count when it is at quota. The permit releases
+    /// on drop and may travel with a queued job across threads.
+    pub fn try_acquire(&self, tenant: &str) -> std::result::Result<TenantPermit, usize> {
+        let state = self.state(tenant);
+        let quota = self.knobs.tenant_quota();
+        let held = state.inflight.fetch_add(1, Ordering::SeqCst);
+        if held >= quota {
+            state.inflight.fetch_sub(1, Ordering::SeqCst);
+            return Err(held);
+        }
+        Ok(TenantPermit { state })
+    }
+
+    /// `tenant`'s current in-flight count (0 if unknown).
+    pub fn inflight(&self, tenant: &str) -> usize {
+        self.tenants
+            .lock()
+            .unwrap()
+            .get(tenant)
+            .map(|s| s.inflight.load(Ordering::SeqCst))
+            .unwrap_or(0)
+    }
+
+    /// Tenants seen so far.
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.lock().unwrap().len()
+    }
+}
+
+/// One tenant in-flight slot; released on drop.
+pub struct TenantPermit {
+    state: Arc<TenantState>,
+}
+
+impl Drop for TenantPermit {
+    fn drop(&mut self) {
+        self.state.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn governor(quota: usize) -> TenantGovernor {
+        let knobs = Arc::new(ServingKnobs::default());
+        knobs.set_tenant_quota(quota);
+        TenantGovernor::new(knobs)
+    }
+
+    #[test]
+    fn quota_is_per_tenant_not_global() {
+        let g = governor(2);
+        let _a1 = g.try_acquire("a").unwrap();
+        let _a2 = g.try_acquire("a").unwrap();
+        assert_eq!(g.try_acquire("a").unwrap_err(), 2, "tenant a is at quota");
+        // Tenant b is unaffected by a's saturation.
+        let _b1 = g.try_acquire("b").unwrap();
+        let _b2 = g.try_acquire("b").unwrap();
+        assert_eq!(g.tenant_count(), 2);
+    }
+
+    #[test]
+    fn permits_release_on_drop() {
+        let g = governor(1);
+        let p = g.try_acquire("a").unwrap();
+        assert!(g.try_acquire("a").is_err());
+        drop(p);
+        assert_eq!(g.inflight("a"), 0);
+        assert!(g.try_acquire("a").is_ok());
+    }
+
+    #[test]
+    fn quota_reconfigures_live() {
+        let g = governor(1);
+        let _p1 = g.try_acquire("a").unwrap();
+        assert!(g.try_acquire("a").is_err());
+        g.knobs.set_tenant_quota(2);
+        let _p2 = g.try_acquire("a").unwrap();
+        g.knobs.set_tenant_quota(1);
+        assert!(g.try_acquire("a").is_err(), "shrinking the quota takes effect immediately");
+    }
+}

@@ -1,0 +1,138 @@
+//! Hot-reconfigurable serving limits.
+//!
+//! PR 7 introduced the serving bounds — [`ServerLimits::max_inflight`]
+//! on the admission gate, `max_queue`/`max_wait` on the batcher — as
+//! construction-time-only values. A feedback controller (or an
+//! operator) cannot tune a running server that way, so this module
+//! lifts them into a shared atomic handle: every component reads its
+//! bound per decision, and whoever holds a clone of the [`Arc`] can
+//! move the dial mid-flight without a restart.
+//!
+//! All loads/stores are `Relaxed`: the knobs are tuning hints read at
+//! the top of each admission/dispatch decision, not synchronization
+//! edges. A momentarily stale read admits (or sheds) one extra request,
+//! which is exactly the tolerance any live-reconfigurable limit has.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+use super::cloud::ServerLimits;
+
+/// The shared dial box for a serving stack: admission cap, batch queue
+/// bound, batch flush delay, adaptive batch ceiling, and per-tenant
+/// quota. Cheap to clone behind an [`Arc`]; see
+/// [`daemon`](super::daemon) for the controller that drives
+/// `batch_limit` from observed tail latency.
+///
+/// [`Arc`]: std::sync::Arc
+#[derive(Debug)]
+pub struct ServingKnobs {
+    max_inflight: AtomicUsize,
+    max_queue: AtomicUsize,
+    max_wait_us: AtomicU64,
+    batch_limit: AtomicUsize,
+    tenant_quota: AtomicUsize,
+}
+
+impl Default for ServingKnobs {
+    fn default() -> Self {
+        ServingKnobs::from_limits(&ServerLimits::default())
+    }
+}
+
+impl ServingKnobs {
+    /// Knobs seeded from the static [`ServerLimits`]; queue and batch
+    /// bounds start unbounded, the flush delay at 2 ms.
+    pub fn from_limits(limits: &ServerLimits) -> Self {
+        ServingKnobs {
+            max_inflight: AtomicUsize::new(limits.max_inflight),
+            max_queue: AtomicUsize::new(usize::MAX),
+            max_wait_us: AtomicU64::new(2_000),
+            batch_limit: AtomicUsize::new(usize::MAX),
+            tenant_quota: AtomicUsize::new(usize::MAX),
+        }
+    }
+
+    /// Global concurrent-inference cap (admission gate).
+    pub fn max_inflight(&self) -> usize {
+        self.max_inflight.load(Ordering::Relaxed)
+    }
+
+    pub fn set_max_inflight(&self, v: usize) {
+        self.max_inflight.store(v.max(1), Ordering::Relaxed);
+    }
+
+    /// Batch queue-depth bound; submits beyond it are shed.
+    pub fn max_queue(&self) -> usize {
+        self.max_queue.load(Ordering::Relaxed)
+    }
+
+    pub fn set_max_queue(&self, v: usize) {
+        self.max_queue.store(v.max(1), Ordering::Relaxed);
+    }
+
+    /// Longest a request waits for batch-mates before a partial batch
+    /// is flushed.
+    pub fn max_wait(&self) -> Duration {
+        Duration::from_micros(self.max_wait_us.load(Ordering::Relaxed))
+    }
+
+    pub fn set_max_wait(&self, v: Duration) {
+        let us = v.as_micros().min(u64::MAX as u128) as u64;
+        self.max_wait_us.store(us.max(1), Ordering::Relaxed);
+    }
+
+    /// Current adaptive batch-size ceiling (the controller's output).
+    /// Dispatch picks the largest compiled bucket that fits under it.
+    pub fn batch_limit(&self) -> usize {
+        self.batch_limit.load(Ordering::Relaxed)
+    }
+
+    pub fn set_batch_limit(&self, v: usize) {
+        self.batch_limit.store(v.max(1), Ordering::Relaxed);
+    }
+
+    /// Per-tenant in-flight quota (on top of the global cap).
+    pub fn tenant_quota(&self) -> usize {
+        self.tenant_quota.load(Ordering::Relaxed)
+    }
+
+    pub fn set_tenant_quota(&self, v: usize) {
+        self.tenant_quota.store(v.max(1), Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeds_from_limits_and_reconfigures_live() {
+        let k = ServingKnobs::from_limits(&ServerLimits { max_inflight: 7 });
+        assert_eq!(k.max_inflight(), 7);
+        assert_eq!(k.max_queue(), usize::MAX);
+        k.set_max_inflight(3);
+        k.set_max_queue(64);
+        k.set_max_wait(Duration::from_millis(5));
+        k.set_batch_limit(8);
+        k.set_tenant_quota(2);
+        assert_eq!(k.max_inflight(), 3);
+        assert_eq!(k.max_queue(), 64);
+        assert_eq!(k.max_wait(), Duration::from_millis(5));
+        assert_eq!(k.batch_limit(), 8);
+        assert_eq!(k.tenant_quota(), 2);
+    }
+
+    #[test]
+    fn zero_clamps_to_one_instead_of_wedging_the_server() {
+        let k = ServingKnobs::default();
+        k.set_max_inflight(0);
+        k.set_max_queue(0);
+        k.set_batch_limit(0);
+        k.set_tenant_quota(0);
+        assert_eq!(k.max_inflight(), 1);
+        assert_eq!(k.max_queue(), 1);
+        assert_eq!(k.batch_limit(), 1);
+        assert_eq!(k.tenant_quota(), 1);
+    }
+}

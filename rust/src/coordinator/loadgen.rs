@@ -1,0 +1,367 @@
+//! Synthetic fleet load generator for the serving daemon.
+//!
+//! Spins up one [`Daemon`] and drives it with hundreds (CI) to
+//! thousands (manual) of simulated edge sessions: every edge gets its
+//! own in-process link — a seeded fraction of them wrapped in the
+//! [`FaultyTransport`] chaos model (drops, bit flips, duplicates,
+//! mid-frame truncation, delays) — and a retrying [`Session`] on top,
+//! exactly the stack a real edge runs. A bounded worker pool walks the
+//! fleet so thousands of *sessions* don't require thousands of
+//! *client* threads (the daemon still carries one pump per session).
+//!
+//! The invariant the generator proves is the daemon's no-silent-drop
+//! contract at scale: every issued request ends in exactly one explicit
+//! outcome — `ok` (verified payload checksum), `rejected` (explicit
+//! `Busy`/quota shed), or `failed` (link gave out / server error) — and
+//! [`LoadReport::unanswered`] counts anything unaccounted for, which
+//! must be zero. The report carries `req_per_s`, `p50_ms`, `p99_ms`
+//! for the BENCH line, plus the daemon's adaptive-batching counters so
+//! a run shows the controller actually moved.
+//!
+//! Reproducibility: the fleet layout, fault schedules, payloads, and
+//! session jitter all derive from [`LoadgenConfig::seed`]. Wall-clock
+//! figures vary run to run; outcome accounting does not.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::Error;
+use crate::telemetry::LogHistogram;
+use crate::util::json::ObjBuilder;
+use crate::util::prng::Rng;
+
+use super::daemon::{Daemon, DaemonConfig, ExecFn};
+use super::fault::{FaultSpec, FaultyTransport};
+use super::protocol::{Frame, FrameKind};
+use super::session::{Session, SessionConfig};
+
+/// Fleet shape and chaos mix for one load-generation run.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Simulated edge sessions (each is one attached daemon connection).
+    pub edges: usize,
+    /// Sequential requests issued per edge.
+    pub requests_per_edge: usize,
+    /// Distinct tenants the edges are spread across (round-robin).
+    pub tenants: usize,
+    /// Master seed for fleet layout, faults, payloads, and jitter.
+    pub seed: u64,
+    /// Fraction of edges whose link runs the chaos schedule.
+    pub faulty_share: f64,
+    /// Fault schedule applied (both directions) on faulty links.
+    pub chaos: FaultSpec,
+    /// Synthetic service time per request, microseconds (0 = pure echo).
+    pub service_us: u64,
+    /// Request payload size, bytes.
+    pub payload_bytes: usize,
+    /// Client worker threads walking the fleet (0 = `min(edges, 64)`).
+    pub workers: usize,
+    /// Daemon under test.
+    pub daemon: DaemonConfig,
+    /// Per-edge session retry/deadline policy (seed is re-derived per
+    /// edge).
+    pub session: SessionConfig,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            edges: 100,
+            requests_per_edge: 5,
+            tenants: 8,
+            seed: 0x10ad_6e4e,
+            faulty_share: 0.1,
+            chaos: FaultSpec::chaos(0.02, Duration::from_micros(500)),
+            service_us: 0,
+            payload_bytes: 32,
+            workers: 0,
+            daemon: DaemonConfig::default(),
+            session: SessionConfig {
+                deadline_ms: 5_000,
+                try_timeout_ms: 500,
+                max_retries: 3,
+                base_backoff_ms: 2,
+                max_backoff_ms: 40,
+                heartbeat_ms: 0,
+                seed: 0x10ad_6e4e,
+            },
+        }
+    }
+}
+
+/// Outcome accounting and latency tail of one run; see
+/// [`LoadReport::to_json`] for the BENCH export.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Sessions attached.
+    pub edges: usize,
+    /// Requests issued (`edges × requests_per_edge`).
+    pub requests: u64,
+    /// Verified successful replies.
+    pub ok: u64,
+    /// Explicit sheds (`Busy`: queue, quota, admission, or drain).
+    pub rejected: u64,
+    /// Explicit failures (link gave out, server error, bad checksum).
+    pub failed: u64,
+    /// Requests with *no* explicit outcome — must be zero; anything
+    /// else is a silent drop or a lost client worker.
+    pub unanswered: i64,
+    /// Wall-clock of the request phase, seconds.
+    pub elapsed_s: f64,
+    /// Answered requests per second.
+    pub req_per_s: f64,
+    /// Client-observed latency median, ms.
+    pub p50_ms: f64,
+    /// Client-observed latency 99th percentile, ms.
+    pub p99_ms: f64,
+    /// Client-observed latency max, ms.
+    pub max_ms: f64,
+    /// Daemon batches dispatched.
+    pub dispatch_total: u64,
+    /// Adaptive controller grow decisions.
+    pub batch_grow_total: u64,
+    /// Adaptive controller shrink decisions.
+    pub batch_shrink_total: u64,
+    /// Largest batch the daemon formed.
+    pub max_batch: f64,
+    /// Requests shed by per-tenant quota.
+    pub quota_shed_total: u64,
+    /// Distinct tenants the daemon observed.
+    pub tenants_seen: usize,
+}
+
+impl LoadReport {
+    /// Compact JSON with the BENCH keys (`req_per_s`, `p50_ms`,
+    /// `p99_ms`, `unanswered`) at top level.
+    pub fn to_json(&self) -> String {
+        ObjBuilder::new()
+            .field("edges", self.edges)
+            .field("requests", self.requests as usize)
+            .field("ok", self.ok as usize)
+            .field("rejected", self.rejected as usize)
+            .field("failed", self.failed as usize)
+            .field("unanswered", self.unanswered)
+            .field("elapsed_s", self.elapsed_s)
+            .field("req_per_s", self.req_per_s)
+            .field("p50_ms", self.p50_ms)
+            .field("p99_ms", self.p99_ms)
+            .field("max_ms", self.max_ms)
+            .field("dispatch_total", self.dispatch_total as usize)
+            .field("batch_grow_total", self.batch_grow_total as usize)
+            .field("batch_shrink_total", self.batch_shrink_total as usize)
+            .field("max_batch", self.max_batch)
+            .field("quota_shed_total", self.quota_shed_total as usize)
+            .field("tenants_seen", self.tenants_seen)
+            .build()
+            .to_string_compact()
+    }
+}
+
+/// Deterministic request payload for `(edge, request)`.
+fn payload_for(edge: usize, req: usize, bytes: usize) -> Vec<u8> {
+    (0..bytes.max(1)).map(|k| ((edge * 31 + req * 7 + k * 13) % 251) as u8).collect()
+}
+
+/// The checksum the synthetic exec echoes back (exact in f32 for any
+/// sane payload size).
+fn checksum(payload: &[u8]) -> f32 {
+    payload.iter().map(|&b| b as u64).sum::<u64>() as f32
+}
+
+/// Synthetic request handler: checksum echo with an optional busy-wait
+/// service time, standing in for decode + tail compute.
+pub fn synthetic_exec(service_us: u64) -> ExecFn {
+    Arc::new(move |frame: &Frame| {
+        if service_us > 0 {
+            std::thread::sleep(Duration::from_micros(service_us));
+        }
+        let kind = match &frame.kind {
+            FrameKind::InferLm { payload, .. }
+            | FrameKind::InferLmRaw { payload, .. }
+            | FrameKind::InferVision { payload, .. }
+            | FrameKind::InferVisionRaw { payload, .. } => FrameKind::Logits {
+                data: vec![checksum(payload)],
+                decode_ms: 0.0,
+                compute_ms: service_us as f32 / 1e3,
+            },
+            other => FrameKind::ServerError { message: format!("loadgen exec got {other:?}") },
+        };
+        Frame::new(frame.request_id, kind)
+    })
+}
+
+/// Run one synthetic fleet against a fresh daemon and account every
+/// request's outcome.
+pub fn run(cfg: &LoadgenConfig) -> LoadReport {
+    let daemon = Daemon::new(cfg.daemon.clone(), synthetic_exec(cfg.service_us));
+    let mut rng = Rng::new(cfg.seed);
+
+    // Lay out the fleet: per-edge link (seeded chaos on a faulty
+    // share), cloud half attached under a round-robin tenant.
+    let tenants = cfg.tenants.max(1);
+    let mut slots: Vec<Mutex<Option<FaultyTransport>>> = Vec::with_capacity(cfg.edges);
+    for i in 0..cfg.edges {
+        let spec = if rng.bool_with(cfg.faulty_share) { cfg.chaos } else { FaultSpec::none() };
+        let (edge_end, cloud_end) = FaultyTransport::pair(rng.fork(i as u64).next_u64(), spec, spec);
+        daemon.attach(Box::new(cloud_end), &format!("t{:02}", i % tenants));
+        slots.push(Mutex::new(Some(edge_end)));
+    }
+
+    let latency = Arc::new(LogHistogram::new());
+    let next_edge = AtomicUsize::new(0);
+    let ok = AtomicU64::new(0);
+    let rejected = AtomicU64::new(0);
+    let failed = AtomicU64::new(0);
+    let workers = if cfg.workers == 0 { cfg.edges.clamp(1, 64) } else { cfg.workers.max(1) };
+
+    let started = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                loop {
+                    let i = next_edge.fetch_add(1, Ordering::SeqCst);
+                    if i >= cfg.edges {
+                        return;
+                    }
+                    let transport = slots[i].lock().unwrap().take().expect("edge taken once");
+                    let mut session = Session::new(
+                        transport,
+                        SessionConfig {
+                            seed: cfg.seed ^ (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+                            ..cfg.session.clone()
+                        },
+                    );
+                    for r in 0..cfg.requests_per_edge {
+                        let payload = payload_for(i, r, cfg.payload_bytes);
+                        let want = checksum(&payload);
+                        let t0 = Instant::now();
+                        let outcome = session
+                            .call(FrameKind::InferLm { model: "loadgen".into(), payload });
+                        latency.record_ms(t0.elapsed().as_secs_f64() * 1e3);
+                        match outcome {
+                            Ok(frame) => match frame.kind {
+                                FrameKind::Logits { ref data, .. }
+                                    if data.first() == Some(&want) =>
+                                {
+                                    ok.fetch_add(1, Ordering::SeqCst);
+                                }
+                                FrameKind::Busy { .. } => {
+                                    rejected.fetch_add(1, Ordering::SeqCst);
+                                }
+                                _ => {
+                                    failed.fetch_add(1, Ordering::SeqCst);
+                                }
+                            },
+                            Err(Error::Rejected { .. }) => {
+                                rejected.fetch_add(1, Ordering::SeqCst);
+                            }
+                            Err(_) => {
+                                failed.fetch_add(1, Ordering::SeqCst);
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let elapsed_s = started.elapsed().as_secs_f64().max(1e-9);
+
+    let requests = (cfg.edges * cfg.requests_per_edge) as u64;
+    let (ok, rejected, failed) =
+        (ok.into_inner(), rejected.into_inner(), failed.into_inner());
+    let answered = ok + rejected + failed;
+    let metrics = daemon.metrics();
+    let report = LoadReport {
+        edges: cfg.edges,
+        requests,
+        ok,
+        rejected,
+        failed,
+        unanswered: requests as i64 - answered as i64,
+        elapsed_s,
+        req_per_s: answered as f64 / elapsed_s,
+        p50_ms: latency.quantile_ms(0.5),
+        p99_ms: latency.quantile_ms(0.99),
+        max_ms: latency.max_ms(),
+        dispatch_total: metrics.get("daemon.dispatch_total"),
+        batch_grow_total: metrics.get("daemon.batch_grow_total"),
+        batch_shrink_total: metrics.get("daemon.batch_shrink_total"),
+        max_batch: metrics.histogram("daemon.batch_size").max_ms(),
+        quota_shed_total: metrics.get("daemon.quota_shed_total"),
+        tenants_seen: daemon.tenant_count(),
+    };
+    daemon.shutdown();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_fleet_accounts_every_request() {
+        let cfg = LoadgenConfig {
+            edges: 40,
+            requests_per_edge: 3,
+            tenants: 4,
+            faulty_share: 0.0,
+            ..Default::default()
+        };
+        let report = run(&cfg);
+        assert_eq!(report.requests, 120);
+        assert_eq!(report.unanswered, 0, "every request needs an explicit outcome");
+        assert_eq!(report.ok, 120, "clean links and no quota pressure: all succeed");
+        assert!(report.req_per_s > 0.0);
+        assert_eq!(report.tenants_seen, 4);
+    }
+
+    #[test]
+    fn chaotic_fleet_still_accounts_every_request() {
+        let cfg = LoadgenConfig {
+            edges: 30,
+            requests_per_edge: 4,
+            tenants: 3,
+            faulty_share: 0.5,
+            chaos: FaultSpec::chaos(0.05, Duration::from_micros(200)),
+            ..Default::default()
+        };
+        let report = run(&cfg);
+        assert_eq!(report.unanswered, 0, "chaos may fail requests but never swallow them");
+        assert_eq!(report.ok + report.rejected + report.failed, report.requests);
+        assert!(report.ok > 0, "retrying sessions should land most requests");
+    }
+
+    #[test]
+    fn report_json_carries_the_bench_keys() {
+        let report = run(&LoadgenConfig {
+            edges: 8,
+            requests_per_edge: 2,
+            faulty_share: 0.0,
+            ..Default::default()
+        });
+        let json = report.to_json();
+        for key in ["req_per_s", "p50_ms", "p99_ms", "\"unanswered\":0"] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        let parsed = crate::util::json::parse(&json).unwrap();
+        assert!(parsed.get("req_per_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn identical_seeds_give_identical_fleet_layouts() {
+        // Outcome accounting (not wall-clock) is the reproducible part:
+        // same seed → same payloads, same fault schedule, same totals.
+        let cfg = LoadgenConfig {
+            edges: 20,
+            requests_per_edge: 2,
+            faulty_share: 0.3,
+            ..Default::default()
+        };
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.unanswered, 0);
+        assert_eq!(b.unanswered, 0);
+    }
+}

@@ -16,6 +16,14 @@
 //! graceful-degradation policy. [`fault`] provides the deterministic
 //! fault-injection transport the chaos soak drives.
 //!
+//! For fleet-scale serving, the [`daemon`] module rebuilds the cloud
+//! side as a long-running actor system — supervised connection pumps
+//! feeding an adaptively batching core with per-tenant quotas — whose
+//! queue/wait/inflight/quota dials live in the shared, hot-swappable
+//! [`knobs::ServingKnobs`] handle. [`loadgen`] drives that daemon with
+//! a seeded synthetic fleet (hundreds of sessions × chaos links) as
+//! the scale benchmark.
+//!
 //! * [`protocol`] — length-prefixed, CRC-checked wire frames.
 //! * [`transport`] — TCP / in-proc duplex links + the simulated channel.
 //! * [`session`] — retry/deadline/heartbeat/reconnect over a transport.
@@ -23,20 +31,29 @@
 //! * [`cloud`] — the cloud server loop with bounded admission.
 //! * [`edge`] — the edge client pipeline with its reshape-plan cache.
 //! * [`batcher`] — bucketed dynamic batching.
+//! * [`knobs`] — live-reconfigurable serving limits (atomics).
+//! * [`daemon`] — actor-based serving daemon with adaptive batching.
+//! * [`loadgen`] — synthetic fleet load generator for the daemon.
 
 pub mod batcher;
 pub mod cloud;
+pub mod daemon;
 pub mod edge;
 pub mod fault;
+pub mod knobs;
+pub mod loadgen;
 pub mod protocol;
 pub mod router;
 pub mod session;
 pub mod transport;
 
 pub use batcher::{Batcher, BatcherConfig};
-pub use cloud::{CloudNode, RegistryProvider, ServerLimits};
+pub use cloud::{Admission, AdmitPermit, CloudNode, RegistryProvider, ServerLimits};
+pub use daemon::{Daemon, DaemonConfig};
 pub use edge::{EdgeConfig, EdgeNode, InferOutcome, LmEdgeNode};
 pub use fault::{FaultSpec, FaultStats, FaultyTransport};
+pub use knobs::ServingKnobs;
+pub use loadgen::{LoadgenConfig, LoadReport};
 pub use protocol::{Frame, FrameKind};
 pub use router::{RouteInput, Router};
 pub use session::{

@@ -2,7 +2,11 @@
 //!
 //! Subcommands:
 //!
-//! * `serve-cloud`   — run the cloud node (TCP accept loop).
+//! * `serve-cloud`   — run the cloud node (TCP accept loop); with
+//!   `--daemon`, serve through the actor-based daemon (adaptive
+//!   batching, per-tenant quotas).
+//! * `loadgen`       — synthetic fleet load test against an in-process
+//!   daemon; prints the outcome/latency report JSON.
 //! * `infer`         — one-shot edge inference against a cloud node.
 //! * `compress`      — compress a synthetic/artifact IF, print stats.
 //! * `optimize`      — run Algorithm 1 on a feature tensor, print Ñ.
@@ -80,17 +84,67 @@ fn parse_args() -> Result<Args> {
     Ok(Args { cmd, cfg, rest })
 }
 
-fn cmd_serve_cloud(cfg: &AppConfig) -> Result<()> {
+fn cmd_serve_cloud(cfg: &AppConfig, rest: &[String]) -> Result<()> {
+    let listener = std::net::TcpListener::bind(&cfg.addr)
+        .map_err(|e| rans_sc::Error::transport(format!("bind {}: {e}", cfg.addr)))?;
+    let stop = Arc::new(AtomicBool::new(false));
+    if rest.iter().any(|a| a == "--daemon") {
+        // Actor-based daemon front: adaptive batching, per-tenant
+        // quotas (tenant = peer IP), live knobs seeded from `daemon.*`.
+        let node = Arc::new(CloudNode::new(&cfg.artifacts_dir)?);
+        let daemon = rans_sc::coordinator::Daemon::for_node(cfg.daemon_config(), node);
+        println!("serving daemon listening on {}", cfg.addr);
+        daemon.serve_tcp(listener, stop)?;
+        println!("{}", daemon.metrics().report());
+        daemon.shutdown();
+        return Ok(());
+    }
     let node = Arc::new(
         CloudNode::new(&cfg.artifacts_dir)?
             .with_limits(ServerLimits { max_inflight: cfg.max_inflight }),
     );
-    let listener = std::net::TcpListener::bind(&cfg.addr)
-        .map_err(|e| rans_sc::Error::transport(format!("bind {}: {e}", cfg.addr)))?;
     println!("cloud node listening on {}", cfg.addr);
-    let stop = Arc::new(AtomicBool::new(false));
     node.serve_tcp(listener, stop)?;
     println!("{}", node.metrics().report());
+    Ok(())
+}
+
+fn cmd_loadgen(cfg: &AppConfig, rest: &[String]) -> Result<()> {
+    use rans_sc::coordinator::loadgen::{self, LoadgenConfig};
+    let mut lg = LoadgenConfig { daemon: cfg.daemon_config(), ..Default::default() };
+    let mut i = 0;
+    while i < rest.len() {
+        let flag = rest[i].as_str();
+        let val = rest.get(i + 1).ok_or_else(|| {
+            rans_sc::Error::config(format!("loadgen flag '{flag}' needs a value"))
+        })?;
+        let bad = |what: &str| {
+            rans_sc::Error::config(format!("loadgen: bad {what} '{val}' for '{flag}'"))
+        };
+        match flag {
+            "--edges" => lg.edges = val.parse().map_err(|_| bad("count"))?,
+            "--requests" => lg.requests_per_edge = val.parse().map_err(|_| bad("count"))?,
+            "--tenants" => lg.tenants = val.parse().map_err(|_| bad("count"))?,
+            "--seed" => lg.seed = val.parse().map_err(|_| bad("seed"))?,
+            "--faulty" => lg.faulty_share = val.parse().map_err(|_| bad("fraction"))?,
+            "--service-us" => lg.service_us = val.parse().map_err(|_| bad("micros"))?,
+            "--workers" => lg.workers = val.parse().map_err(|_| bad("count"))?,
+            other => {
+                return Err(rans_sc::Error::config(format!(
+                    "unknown loadgen flag '{other}' (see `rans-sc help`)"
+                )))
+            }
+        }
+        i += 2;
+    }
+    let report = loadgen::run(&lg);
+    println!("{}", report.to_json());
+    if report.unanswered != 0 {
+        return Err(rans_sc::Error::runtime(format!(
+            "{} of {} requests got no explicit outcome",
+            report.unanswered, report.requests
+        )));
+    }
     Ok(())
 }
 
@@ -439,7 +493,15 @@ shed-aware error reporting. Tune it with `--set io_timeout_ms=…`,
 answers `Busy` (with a retry-after hint) when overloaded.
 
 COMMANDS:
-  serve-cloud        run the cloud node (binds --set addr=HOST:PORT)
+  serve-cloud        run the cloud node (binds --set addr=HOST:PORT);
+                     --daemon serves through the actor-based daemon:
+                     adaptive batching, per-tenant (peer-IP) quotas,
+                     live dials seeded from --set daemon.*
+  loadgen            drive a fresh in-process daemon with a synthetic
+                     fleet and print the outcome/latency report JSON
+                     (req_per_s, p50_ms, p99_ms, unanswered must be 0);
+                     --edges N --requests N --tenants N --seed N
+                     --faulty 0.1 --service-us N --workers N
   infer              one edge inference against a running cloud node
   compress           compress an IF tensor and print pipeline stats
                      (--set dtype=bf16 ships half-precision features)
@@ -493,7 +555,8 @@ fn main() -> ExitCode {
         }
     }
     let result = match args.cmd.as_str() {
-        "serve-cloud" => cmd_serve_cloud(&args.cfg),
+        "serve-cloud" => cmd_serve_cloud(&args.cfg, &args.rest),
+        "loadgen" => cmd_loadgen(&args.cfg, &args.rest),
         "infer" => cmd_infer(&args.cfg),
         "compress" => cmd_compress(&args.cfg),
         "optimize" => cmd_optimize(&args.cfg),

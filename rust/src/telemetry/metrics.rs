@@ -115,6 +115,20 @@ impl Registry {
         self.snapshot().to_string_compact()
     }
 
+    /// A name-prefixing view of this registry: every counter and
+    /// histogram touched through the returned handle lands under
+    /// `<prefix>.<name>` in the parent, so scoped series show up in
+    /// [`Registry::snapshot_json`] next to everything else with zero
+    /// extra plumbing.
+    ///
+    /// The serving daemon uses `scoped("tenant.<id>")` for its
+    /// per-tenant counters; the resulting key schema is
+    /// `tenant.<id>.requests` / `.ok` / `.shed` / `.errors` /
+    /// `.quota_rejected` (see the daemon module docs).
+    pub fn scoped(self: &Arc<Self>, prefix: &str) -> Scoped {
+        Scoped { registry: Arc::clone(self), prefix: prefix.to_string() }
+    }
+
     /// Human-readable report.
     pub fn report(&self) -> String {
         let mut out = String::new();
@@ -125,6 +139,51 @@ impl Registry {
             out.push_str(&format!("{k}: {}\n", h.summary()));
         }
         out
+    }
+}
+
+/// Prefixing handle returned by [`Registry::scoped`]. Cheap to clone;
+/// nested scopes concatenate (`scoped("tenant").scoped("a")` →
+/// `tenant.a.*`).
+#[derive(Debug, Clone)]
+pub struct Scoped {
+    registry: Arc<Registry>,
+    prefix: String,
+}
+
+impl Scoped {
+    /// The full prefix this handle writes under.
+    pub fn prefix(&self) -> &str {
+        &self.prefix
+    }
+
+    fn key(&self, name: &str) -> String {
+        format!("{}.{name}", self.prefix)
+    }
+
+    /// Get or create `<prefix>.<name>` in the parent registry.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        self.registry.counter(&self.key(name))
+    }
+
+    /// Increment `<prefix>.<name>` by `delta`.
+    pub fn incr(&self, name: &str, delta: u64) {
+        self.registry.incr(&self.key(name), delta);
+    }
+
+    /// Read `<prefix>.<name>` (0 if absent).
+    pub fn get(&self, name: &str) -> u64 {
+        self.registry.get(&self.key(name))
+    }
+
+    /// Get or create histogram `<prefix>.<name>`.
+    pub fn histogram(&self, name: &str) -> Arc<LogHistogram> {
+        self.registry.histogram(&self.key(name))
+    }
+
+    /// A deeper scope under this one.
+    pub fn scoped(&self, sub: &str) -> Scoped {
+        Scoped { registry: Arc::clone(&self.registry), prefix: self.key(sub) }
     }
 }
 
@@ -153,6 +212,27 @@ mod tests {
         let v = crate::util::json::parse(&json).unwrap();
         let counters = v.get("counters").unwrap();
         assert_eq!(counters.get("session.retry_total").unwrap().as_f64().unwrap(), 4.0);
+    }
+
+    #[test]
+    fn scoped_series_land_in_the_parent_snapshot() {
+        let r = Arc::new(Registry::new());
+        let tenant = r.scoped("tenant.edge-07");
+        tenant.incr("requests", 3);
+        tenant.incr("quota_rejected", 1);
+        tenant.histogram("latency_ms").record_ms(4.0);
+        // Scoped writes are plain prefixed keys in the parent.
+        assert_eq!(r.get("tenant.edge-07.requests"), 3);
+        assert_eq!(tenant.get("requests"), 3);
+        let json = r.snapshot_json();
+        assert!(json.contains("\"tenant.edge-07.requests\":3"), "{json}");
+        assert!(json.contains("\"tenant.edge-07.quota_rejected\":1"), "{json}");
+        assert!(json.contains("tenant.edge-07.latency_ms"), "{json}");
+        // Nested scopes concatenate.
+        let deep = tenant.scoped("model");
+        deep.incr("hits", 1);
+        assert_eq!(r.get("tenant.edge-07.model.hits"), 1);
+        assert_eq!(deep.prefix(), "tenant.edge-07.model");
     }
 
     #[test]

@@ -4,10 +4,13 @@
 //! (§2.2): edge encode, wireless transfer, cloud decode, and GPU
 //! integration + tail compute. [`LatencyBreakdown`] carries exactly that
 //! decomposition per request; [`Registry`] aggregates counters and
-//! log-bucketed histograms across the serving stack.
+//! log-bucketed histograms across the serving stack. [`Scoped`] is a
+//! name-prefixing view of a registry (the daemon's per-tenant
+//! `tenant.<id>.*` counters are scoped handles), so multi-tenant series
+//! appear in one `snapshot_json()` without separate registries.
 
 pub mod histogram;
 pub mod metrics;
 
 pub use histogram::LogHistogram;
-pub use metrics::{LatencyBreakdown, Registry};
+pub use metrics::{LatencyBreakdown, Registry, Scoped};

@@ -17,6 +17,12 @@
 //! `RANS_SC_CHAOS_SEED`; run without either and every family × two
 //! seeds executes (≥ 2,000 requests total). `RANS_SC_CHAOS_REQUESTS`
 //! scales the per-run volume.
+//!
+//! The **daemon fault family** turns the same chaos schedules against
+//! the actor serving daemon: whole synthetic fleets of concurrent
+//! chaos-linked edges against one daemon (no silent drops at fleet
+//! scale), and a noisy tenant hammering a tiny quota while a quiet
+//! tenant must keep flowing. `RANS_SC_CHAOS_FAULT` shards these too.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -389,6 +395,172 @@ fn version_flip_mid_soak_resyncs_instead_of_hanging() {
     assert_eq!(session.model_version(), Some(3), "session ends on the final deployment");
     drop(session); // hangs up: responders and the spawner drain out
     spawner.join().unwrap();
+    done.store(true, Ordering::Relaxed);
+}
+
+/// The daemon fleet fault family: every chaos schedule from
+/// [`fault_families`] is run as a whole synthetic fleet — dozens of
+/// concurrent chaos-linked edge sessions against one actor daemon —
+/// and the daemon's no-silent-drop contract is asserted per family:
+/// zero hangs (watchdog + per-family wall ceiling), every request ends
+/// in exactly one explicit outcome, and most land despite the faults.
+#[test]
+fn daemon_fleet_soak_every_outcome_is_explicit() {
+    use rans_sc::coordinator::loadgen::{self, LoadgenConfig};
+
+    let done = Arc::new(AtomicBool::new(false));
+    arm_watchdog(480, Arc::clone(&done));
+
+    let only_family = std::env::var("RANS_SC_CHAOS_FAULT").ok();
+    let families: Vec<_> = fault_families()
+        .into_iter()
+        .filter(|(name, _)| only_family.as_deref().map(|f| f == *name).unwrap_or(true))
+        .collect();
+    assert!(
+        !families.is_empty(),
+        "RANS_SC_CHAOS_FAULT={only_family:?} matches no fault family"
+    );
+
+    for &(name, spec) in &families {
+        let cfg = LoadgenConfig {
+            edges: 48,
+            requests_per_edge: 4,
+            tenants: 6,
+            seed: 0xDAE0 ^ name.len() as u64,
+            faulty_share: 1.0,
+            chaos: spec,
+            session: SessionConfig {
+                deadline_ms: 8_000,
+                try_timeout_ms: 100,
+                max_retries: 10,
+                base_backoff_ms: 1,
+                max_backoff_ms: 8,
+                heartbeat_ms: 0,
+                seed: 0xDAE0,
+            },
+            ..LoadgenConfig::default()
+        };
+        let started = Instant::now();
+        let report = loadgen::run(&cfg);
+        let elapsed = started.elapsed();
+        println!(
+            "daemon soak '{name}': {} ok / {} rejected / {} failed over {} req ({elapsed:?})",
+            report.ok, report.rejected, report.failed, report.requests
+        );
+        assert_eq!(
+            report.unanswered, 0,
+            "'{name}': a request ended with no explicit outcome"
+        );
+        assert_eq!(
+            report.ok + report.rejected + report.failed,
+            report.requests,
+            "'{name}': outcome accounting must close"
+        );
+        assert!(report.ok > 0, "'{name}': retrying sessions should land requests");
+        assert!(
+            elapsed < Duration::from_secs(120),
+            "'{name}': fleet of {} took {elapsed:?} — treating as a hang",
+            cfg.edges
+        );
+    }
+    done.store(true, Ordering::Relaxed);
+}
+
+/// A deliberately noisy tenant — eight chaos-linked connections
+/// hammering concurrently against a two-slot per-tenant quota — must be
+/// shed on its own budget while a quiet tenant's sequential requests
+/// all succeed. The starvation check is end-to-end: the quiet tenant
+/// runs *during* the noise, over the same daemon.
+#[test]
+fn daemon_noisy_tenant_cannot_starve_quiet_tenants() {
+    use rans_sc::coordinator::loadgen::synthetic_exec;
+    use rans_sc::coordinator::{Daemon, DaemonConfig};
+
+    let done = Arc::new(AtomicBool::new(false));
+    arm_watchdog(240, Arc::clone(&done));
+
+    let daemon = Daemon::new(
+        DaemonConfig { tenant_quota: 2, max_inflight: 64, ..DaemonConfig::default() },
+        synthetic_exec(2_000), // 2 ms service keeps the noisy tenant saturated
+    );
+
+    let noisy_conns = 8usize;
+    let per_conn = 25usize;
+    let mut noisy_ends = Vec::new();
+    for i in 0..noisy_conns {
+        let spec = FaultSpec::chaos(0.05, Duration::from_micros(300));
+        let (edge, cloud) = FaultyTransport::pair(0xBAD0 + i as u64, spec, spec);
+        daemon.attach(Box::new(cloud), "noisy");
+        noisy_ends.push(edge);
+    }
+    let (quiet_edge, quiet_cloud) =
+        FaultyTransport::pair(7, FaultSpec::none(), FaultSpec::none());
+    daemon.attach(Box::new(quiet_cloud), "quiet");
+
+    let quiet_ok = thread::scope(|s| {
+        for (i, edge) in noisy_ends.into_iter().enumerate() {
+            s.spawn(move || {
+                let mut session = Session::new(
+                    edge,
+                    SessionConfig {
+                        deadline_ms: 2_000,
+                        try_timeout_ms: 100,
+                        max_retries: 1,
+                        base_backoff_ms: 1,
+                        max_backoff_ms: 2,
+                        heartbeat_ms: 0,
+                        seed: i as u64,
+                    },
+                );
+                for r in 0..per_conn {
+                    let payload = vec![(i * 16 + r) as u8; 24];
+                    // Outcomes here don't matter (mostly quota sheds);
+                    // what matters is the sustained pressure.
+                    let _ =
+                        session.call(FrameKind::InferLm { model: "noisy".into(), payload });
+                }
+            });
+        }
+        // The quiet tenant's whole run happens while the noise is live.
+        let mut session = Session::new(
+            quiet_edge,
+            SessionConfig {
+                deadline_ms: 4_000,
+                try_timeout_ms: 500,
+                max_retries: 3,
+                base_backoff_ms: 2,
+                max_backoff_ms: 20,
+                heartbeat_ms: 0,
+                seed: 99,
+            },
+        );
+        let mut ok = 0usize;
+        for r in 0..40usize {
+            let payload = vec![r as u8; 24];
+            match session.call(FrameKind::InferLm { model: "quiet".into(), payload }) {
+                Ok(frame) => match frame.kind {
+                    FrameKind::Logits { .. } => ok += 1,
+                    ref other => panic!("quiet req {r}: unexpected reply {other:?}"),
+                },
+                Err(e) => panic!("quiet req {r}: explicit failure under noise: {e}"),
+            }
+        }
+        ok
+    });
+
+    assert_eq!(quiet_ok, 40, "quiet tenant must not be starved by the noisy one");
+    let metrics = daemon.metrics();
+    assert!(
+        metrics.get("tenant.noisy.quota_rejected") > 0,
+        "noisy tenant never hit its quota: {}",
+        metrics.snapshot_json()
+    );
+    assert_eq!(
+        metrics.get("tenant.quiet.quota_rejected"),
+        0,
+        "quota sheds must stay on the tenant that caused them"
+    );
+    daemon.shutdown();
     done.store(true, Ordering::Relaxed);
 }
 

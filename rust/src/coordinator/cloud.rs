@@ -441,6 +441,19 @@ impl CloudNode {
         Ok(FrameKind::Logits { data: logits, decode_ms: 0.0, compute_ms: compute_ms as f32 })
     }
 
+    /// The pre-admission version check exactly as [`Self::admit_and_handle`]
+    /// runs it: `Some(refusal)` when the frame declares a different
+    /// deployment than the active one (counting `cloud.skew_total`).
+    /// Public so alternative fronts — the serving daemon's connection
+    /// pumps — can refuse skewed requests before spending tenant quota,
+    /// admission slots, or batch space on them.
+    pub fn check_skew(&self, frame: &Frame) -> Option<Frame> {
+        skew_reply(self.model_slot.version(), frame).map(|kind| {
+            self.metrics.incr("cloud.skew_total", 1);
+            Frame::new(frame.request_id, kind)
+        })
+    }
+
     /// Handle one frame, producing the reply. Errors become
     /// `ServerError` replies rather than tearing the connection down.
     pub fn handle(&self, frame: &Frame) -> Frame {
@@ -499,9 +512,8 @@ impl CloudNode {
         // Version check BEFORE admission: a mismatched request must not
         // consume an in-flight slot, and must never reach the decoder —
         // features decoded against the wrong tail are silent garbage.
-        if let Some(kind) = skew_reply(self.model_slot.version(), frame) {
-            self.metrics.incr("cloud.skew_total", 1);
-            return Frame::new(frame.request_id, kind);
+        if let Some(reply) = self.check_skew(frame) {
+            return reply;
         }
         match self.admission.try_admit(frame.deadline_ms) {
             Ok(_guard) => self.handle(frame),

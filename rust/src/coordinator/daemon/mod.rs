@@ -16,11 +16,13 @@
 //! ```
 //!
 //! * **Connection pumps** (one lightweight thread per attached
-//!   transport) parse frames, answer control traffic inline, enforce
-//!   the per-tenant quota ([`TenantGovernor`]) and the global
-//!   admission gate, then submit jobs to the batch actor's mailbox and
-//!   relay the reply. Tenants are named at attach time — no wire
-//!   change.
+//!   transport) parse frames, answer control traffic inline (and
+//!   forward node-servable frames such as registry delta-sync to an
+//!   attached [`CloudNode`]), run the pre-admission preflight check
+//!   (version skew), enforce the per-tenant quota ([`TenantGovernor`])
+//!   and the global admission gate, then submit jobs to the batch
+//!   actor's mailbox and relay the reply. Tenants are named at attach
+//!   time — no wire change.
 //! * **The batch actor** forms deadline-aware batches: dispatch fires
 //!   when the queue covers the current adaptive ceiling, or when the
 //!   oldest job has waited `max_wait` (ticker-driven), never later.
@@ -43,6 +45,7 @@ pub mod actor;
 pub mod controller;
 pub mod tenant;
 
+use std::collections::HashSet;
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Sender};
@@ -51,7 +54,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
-use crate::telemetry::Registry;
+use crate::telemetry::{Registry, Scoped};
 
 use super::cloud::{Admission, AdmitPermit, CloudNode, ServerLimits};
 use super::knobs::ServingKnobs;
@@ -72,6 +75,20 @@ const MAX_CONSECUTIVE_RECV_ERRORS: u32 = 8;
 /// Request handler the daemon executes per frame (e.g.
 /// [`CloudNode::handle`] or a synthetic responder in tests/benches).
 pub type ExecFn = Arc<dyn Fn(&Frame) -> Frame + Send + Sync>;
+
+/// Pre-admission check a pump runs on each inference frame before any
+/// permit is taken: `Some(reply)` refuses the request outright.
+/// [`Daemon::for_node`] wires [`CloudNode::check_skew`] here so a
+/// version-skewed request is answered `VersionSkew` instead of being
+/// decoded against the wrong deployment — matching
+/// [`CloudNode::admit_and_handle`](super::cloud::CloudNode::admit_and_handle).
+pub type PreflightFn = Arc<dyn Fn(&Frame) -> Option<Frame> + Send + Sync>;
+
+/// Distinct per-tenant metric scopes the daemon will create before new
+/// tenants aggregate under `tenant.overflow`: with tenant identity
+/// derived from the peer address, an open listener must not be able to
+/// grow the metric registry without bound.
+const MAX_TENANT_SCOPES: usize = 1024;
 
 /// Daemon tuning. Initial values for the queue/wait/inflight/quota
 /// bounds; all of them are live-reconfigurable afterwards through
@@ -327,6 +344,15 @@ struct Inner {
     metrics: Arc<Registry>,
     batch: Mailbox<BatchMsg>,
     stopping: AtomicBool,
+    /// Handler for non-batched frames the pump does not answer itself
+    /// (registry delta-sync and other node-servable control traffic);
+    /// absent → `ServerError`.
+    inline: Option<ExecFn>,
+    /// Pre-admission refusal check (version skew for an attached node).
+    preflight: Option<PreflightFn>,
+    /// Tenants granted a dedicated metric scope so far (bounded by
+    /// [`MAX_TENANT_SCOPES`]).
+    scoped_tenants: Mutex<HashSet<String>>,
 }
 
 /// The long-running serving daemon. Attach transports (or run
@@ -344,6 +370,15 @@ pub struct Daemon {
 impl Daemon {
     /// Build a daemon around an arbitrary request handler.
     pub fn new(cfg: DaemonConfig, exec: ExecFn) -> Self {
+        Self::build(cfg, exec, None, None)
+    }
+
+    fn build(
+        cfg: DaemonConfig,
+        exec: ExecFn,
+        inline: Option<ExecFn>,
+        preflight: Option<PreflightFn>,
+    ) -> Self {
         let mut buckets = if cfg.buckets.is_empty() { vec![1] } else { cfg.buckets.clone() };
         buckets.sort_unstable();
 
@@ -411,22 +446,29 @@ impl Daemon {
             metrics: Arc::clone(&metrics),
             batch: batch.mailbox(),
             stopping: AtomicBool::new(false),
+            inline,
+            preflight,
+            scoped_tenants: Mutex::new(HashSet::new()),
         });
 
         let ticker = {
             let inner = Arc::clone(&inner);
             std::thread::Builder::new()
                 .name("daemon-ticker".into())
-                .spawn(move || {
-                    while !inner.stopping.load(Ordering::SeqCst) {
-                        let wait = inner.knobs.max_wait();
-                        std::thread::sleep((wait / 2).clamp(
-                            Duration::from_micros(200),
-                            Duration::from_millis(20),
-                        ));
-                        if inner.batch.send(BatchMsg::Tick).is_err() {
-                            return;
-                        }
+                .spawn(move || loop {
+                    let wait = inner.knobs.max_wait();
+                    std::thread::sleep((wait / 2).clamp(
+                        Duration::from_micros(200),
+                        Duration::from_millis(20),
+                    ));
+                    // The ticker deliberately outlives `stopping`:
+                    // partial batches must keep flushing while the
+                    // pumps drain, or a job younger than `max_wait` at
+                    // shutdown would strand its pump in reply-wait and
+                    // deadlock the join. It exits only once the batch
+                    // actor's mailbox closes.
+                    if inner.batch.send(BatchMsg::Tick).is_err() {
+                        return;
                     }
                 })
                 .expect("spawn daemon ticker")
@@ -437,9 +479,28 @@ impl Daemon {
 
     /// Daemon fronting a [`CloudNode`]: the node's pure `handle` runs
     /// behind the daemon's own admission/quota/batching (the node-side
-    /// gate is bypassed so requests are not admitted twice).
+    /// gate is bypassed so requests are not admitted twice), with the
+    /// node's semantics preserved at the pump:
+    ///
+    /// * the pre-admission version-skew check
+    ///   ([`CloudNode::check_skew`]) refuses mismatched requests with
+    ///   `VersionSkew` before they consume quota or batch space, and
+    /// * non-batched node-servable frames (registry delta-sync
+    ///   `FetchManifest`/`FetchChunk`) are forwarded to the node
+    ///   inline, off the batch path — fetch frames deliberately bypass
+    ///   admission *and* the skew check, so a stale edge can pull the
+    ///   very deployment that fixes its skew.
     pub fn for_node(cfg: DaemonConfig, node: Arc<CloudNode>) -> Self {
-        Self::new(cfg, Arc::new(move |frame: &Frame| node.handle(frame)))
+        let exec = {
+            let node = Arc::clone(&node);
+            Arc::new(move |frame: &Frame| node.handle(frame)) as ExecFn
+        };
+        let inline = {
+            let node = Arc::clone(&node);
+            Arc::new(move |frame: &Frame| node.handle(frame)) as ExecFn
+        };
+        let preflight = Arc::new(move |frame: &Frame| node.check_skew(frame)) as PreflightFn;
+        Self::build(cfg, exec, Some(inline), Some(preflight))
     }
 
     /// The live-reconfigurable dials (inflight cap, queue bound, flush
@@ -463,12 +524,21 @@ impl Daemon {
     /// drains.
     pub fn attach(&self, transport: Box<dyn Transport>, tenant: &str) {
         let inner = Arc::clone(&self.inner);
+        // New connections are the only source of pump threads and
+        // tenant state, so this is the natural bound point on a
+        // long-running daemon: evict tenants with nothing in flight and
+        // reap pumps that already exited, keeping memory proportional
+        // to the *live* connection set rather than every peer ever
+        // seen.
+        inner.tenants.evict_idle();
         let tenant = tenant.to_string();
         let handle = std::thread::Builder::new()
             .name(format!("daemon-conn-{tenant}"))
             .spawn(move || pump(transport, tenant, inner))
             .expect("spawn daemon connection pump");
-        self.conns.lock().unwrap().push(handle);
+        let mut conns = self.conns.lock().unwrap();
+        conns.retain(|h| !h.is_finished());
+        conns.push(handle);
     }
 
     /// Accept loop over TCP: each connection becomes a pump under a
@@ -507,19 +577,22 @@ impl Daemon {
 
     fn stop_everything(&mut self) {
         self.inner.stopping.store(true, Ordering::SeqCst);
-        // Pumps first, while the actors are still alive: their
-        // in-flight jobs complete (ticker still flushing partials) and
-        // each pump exits at its next poll.
+        // Pumps first, while the actors AND the ticker are still alive:
+        // ticks keep flushing partial batches, so a pump whose job is
+        // parked in a batch younger than `max_wait` still gets its
+        // reply (after at most `max_wait`) and exits at its next poll.
         let conns: Vec<JoinHandle<()>> = self.conns.lock().unwrap().drain(..).collect();
         for c in conns {
             let _ = c.join();
         }
-        if let Some(t) = self.ticker.take() {
-            let _ = t.join();
-        }
-        // Batch actor drains (answering its queue), then the lanes.
+        // Batch actor drains (answering its queue); its mailbox closing
+        // then stops the ticker at the next tick, and the lanes drain
+        // last.
         if let Some(b) = self.batch.take() {
             b.join();
+        }
+        if let Some(t) = self.ticker.take() {
+            let _ = t.join();
         }
         self.execs.clear();
     }
@@ -541,12 +614,27 @@ fn busy_frame(request_id: u64, retry_after_ms: u64, message: &str) -> Frame {
     )
 }
 
+/// Per-tenant metric scope, capped: beyond [`MAX_TENANT_SCOPES`]
+/// distinct tenants, new ones share the `tenant.overflow` scope instead
+/// of minting fresh registry keys forever.
+fn tenant_scope(inner: &Inner, tenant: &str) -> Scoped {
+    let mut seen = inner.scoped_tenants.lock().unwrap();
+    if seen.contains(tenant) || seen.len() < MAX_TENANT_SCOPES {
+        seen.insert(tenant.to_string());
+        inner.metrics.scoped(&format!("tenant.{tenant}"))
+    } else {
+        inner.metrics.incr("daemon.tenant_scope_overflow", 1);
+        inner.metrics.scoped("tenant.overflow")
+    }
+}
+
 /// One connection's serve loop: transport in, mailbox out.
 fn pump(mut t: Box<dyn Transport>, tenant: String, inner: Arc<Inner>) {
     let mut consecutive_errors = 0u32;
     // Per-tenant series: `tenant.<id>.requests` / `.ok` / `.shed` /
-    // `.errors` / `.quota_rejected`, all in the shared snapshot.
-    let scope = inner.metrics.scoped(&format!("tenant.{tenant}"));
+    // `.errors` / `.quota_rejected` / `.skew_rejected`, all in the
+    // shared snapshot.
+    let scope = tenant_scope(&inner, &tenant);
     loop {
         if inner.stopping.load(Ordering::SeqCst) {
             return;
@@ -583,12 +671,19 @@ fn pump(mut t: Box<dyn Transport>, tenant: String, inner: Arc<Inner>) {
                     let _ = t.send(&Frame::new(frame.request_id, FrameKind::Pong));
                     return;
                 }
-                ref other => Frame::new(
-                    frame.request_id,
-                    FrameKind::ServerError {
-                        message: format!("daemon does not serve {other:?}"),
-                    },
-                ),
+                // Anything else node-servable (registry delta-sync
+                // `FetchManifest`/`FetchChunk`, …) forwards to the
+                // attached node inline, off the batch path; without a
+                // node the refusal stays loud.
+                ref other => match inner.inline.as_deref() {
+                    Some(inline) => inline(&frame),
+                    None => Frame::new(
+                        frame.request_id,
+                        FrameKind::ServerError {
+                            message: format!("daemon does not serve {other:?}"),
+                        },
+                    ),
+                },
             };
             if t.send(&reply).is_err() {
                 return;
@@ -599,6 +694,20 @@ fn pump(mut t: Box<dyn Transport>, tenant: String, inner: Arc<Inner>) {
         scope.incr("requests", 1);
         inner.metrics.incr("daemon.requests_total", 1);
         let retry_hint = (inner.knobs.max_wait().as_millis() as u64).max(1);
+
+        // Pre-admission refusal (version skew against an attached
+        // node): runs before any permit so a mismatched request neither
+        // consumes quota nor ever reaches the decoder.
+        if let Some(preflight) = inner.preflight.as_deref() {
+            if let Some(reply) = preflight(&frame) {
+                scope.incr("skew_rejected", 1);
+                inner.metrics.incr("daemon.preflight_rejected_total", 1);
+                if t.send(&reply).is_err() {
+                    return;
+                }
+                continue;
+            }
+        }
 
         // Tenant quota before the global gate: a noisy tenant is shed
         // on its own budget without ever touching shared slots.
@@ -822,6 +931,124 @@ mod tests {
         };
         assert!(quota_shed > 0, "8 concurrent noisy connections over quota 2 must shed");
         assert_eq!(daemon.metrics().get("tenant.quiet.quota_rejected"), 0);
+        daemon.shutdown();
+    }
+
+    #[test]
+    fn shutdown_flushes_partial_batch_instead_of_deadlocking() {
+        // Regression: a request parked in a partial batch younger than
+        // `max_wait` at the moment shutdown starts. The ticker must
+        // keep flushing while the pumps drain — if it exits on
+        // `stopping` the pump wedges in reply-wait and the join hangs
+        // forever.
+        let daemon = Daemon::new(
+            DaemonConfig {
+                buckets: vec![4],                     // one request never fills a batch
+                max_wait: Duration::from_millis(150), // stays partial across shutdown()
+                ..Default::default()
+            },
+            echo_exec(),
+        );
+        let (mut client, server) = InProcTransport::pair();
+        daemon.attach(Box::new(server), "t");
+        client.send(&infer(1, vec![7])).unwrap();
+        // Let the job reach the batch actor's queue before stopping.
+        std::thread::sleep(Duration::from_millis(20));
+        let waiter = std::thread::spawn(move || client.recv());
+        daemon.shutdown(); // must complete, not hang
+        let reply = waiter.join().unwrap().expect("queued request answered across shutdown");
+        assert_eq!(reply.request_id, 1);
+        match reply.kind {
+            FrameKind::Logits { ref data, .. } => assert_eq!(data[0], 7.0),
+            FrameKind::Busy { .. } => {} // explicit shed is also a valid outcome
+            ref other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn preflight_rejects_before_any_permit_is_taken() {
+        // Emulates CloudNode::check_skew: active version 7.
+        let preflight: PreflightFn = Arc::new(|frame: &Frame| match frame.model_version {
+            Some(v) if v != 7 => Some(Frame::new(
+                frame.request_id,
+                FrameKind::VersionSkew { active: 7, offered: v, message: "resync".into() },
+            )),
+            _ => None,
+        });
+        let daemon = Daemon::build(DaemonConfig::default(), echo_exec(), None, Some(preflight));
+        let (mut client, server) = InProcTransport::pair();
+        daemon.attach(Box::new(server), "t");
+        client.send(&infer(1, vec![1, 2, 3]).with_model_version(3)).unwrap();
+        match client.recv().unwrap().kind {
+            FrameKind::VersionSkew { active, offered, .. } => {
+                assert_eq!((active, offered), (7, 3))
+            }
+            ref other => panic!("unexpected {other:?}"),
+        }
+        // A matching version flows through to the exec as before.
+        client.send(&infer(2, vec![1, 2, 3]).with_model_version(7)).unwrap();
+        assert!(matches!(client.recv().unwrap().kind, FrameKind::Logits { .. }));
+        let metrics = daemon.metrics();
+        assert_eq!(metrics.get("daemon.preflight_rejected_total"), 1);
+        assert_eq!(metrics.get("tenant.t.skew_rejected"), 1);
+        assert_eq!(daemon.inner.tenants.inflight("t"), 0, "no quota slot was consumed");
+        daemon.shutdown();
+    }
+
+    #[test]
+    fn inline_handler_serves_node_control_frames() {
+        let inline: ExecFn = Arc::new(|frame: &Frame| {
+            let kind = match &frame.kind {
+                FrameKind::FetchManifest { model, version } => FrameKind::ManifestReply {
+                    json: format!("{{\"model\":\"{model}\",\"version\":{version}}}"),
+                },
+                other => FrameKind::ServerError { message: format!("unexpected {other:?}") },
+            };
+            Frame::new(frame.request_id, kind)
+        });
+        let daemon = Daemon::build(DaemonConfig::default(), echo_exec(), Some(inline), None);
+        let (mut client, server) = InProcTransport::pair();
+        daemon.attach(Box::new(server), "t");
+        client
+            .send(&Frame::new(1, FrameKind::FetchManifest { model: "m".into(), version: 2 }))
+            .unwrap();
+        match client.recv().unwrap().kind {
+            FrameKind::ManifestReply { ref json } => assert!(json.contains("\"version\":2")),
+            ref other => panic!("unexpected {other:?}"),
+        }
+        daemon.shutdown();
+
+        // Without an attached node the same frame is still refused
+        // loudly instead of hanging or being dropped.
+        let bare = Daemon::new(DaemonConfig::default(), echo_exec());
+        let (mut client, server) = InProcTransport::pair();
+        bare.attach(Box::new(server), "t");
+        client
+            .send(&Frame::new(2, FrameKind::FetchManifest { model: "m".into(), version: 2 }))
+            .unwrap();
+        assert!(matches!(client.recv().unwrap().kind, FrameKind::ServerError { .. }));
+        bare.shutdown();
+    }
+
+    #[test]
+    fn finished_pumps_and_idle_tenants_are_reaped_at_attach() {
+        let daemon = Daemon::new(DaemonConfig::default(), echo_exec());
+        for i in 0..8 {
+            let (mut client, server) = InProcTransport::pair();
+            daemon.attach(Box::new(server), &format!("ephemeral-{i}"));
+            client.send(&infer(0, vec![1])).unwrap();
+            let _ = client.recv().unwrap();
+            // Dropping the client severs the link; the pump exits.
+        }
+        // Give the pumps a beat to observe their dead peers.
+        std::thread::sleep(Duration::from_millis(100));
+        let (_client, server) = InProcTransport::pair();
+        daemon.attach(Box::new(server), "live");
+        assert_eq!(daemon.tenant_count(), 0, "idle tenants evicted at attach");
+        assert!(
+            daemon.conns.lock().unwrap().len() < 9,
+            "finished pump handles reaped at attach"
+        );
         daemon.shutdown();
     }
 

@@ -66,6 +66,22 @@ impl TenantGovernor {
     pub fn tenant_count(&self) -> usize {
         self.tenants.lock().unwrap().len()
     }
+
+    /// Drop tenants with nothing in flight and no outstanding permits,
+    /// returning how many were evicted. A long-running daemon accepting
+    /// from the open internet sees one tenant per peer address; without
+    /// eviction that map grows without bound. Safe against racing
+    /// acquisitions: removal happens under the map lock and only when
+    /// the map holds the sole reference to the state — an acquire that
+    /// already cloned the `Arc` keeps its entry alive.
+    pub fn evict_idle(&self) -> usize {
+        let mut map = self.tenants.lock().unwrap();
+        let before = map.len();
+        map.retain(|_, s| {
+            Arc::strong_count(s) > 1 || s.inflight.load(Ordering::SeqCst) > 0
+        });
+        before - map.len()
+    }
 }
 
 /// One tenant in-flight slot; released on drop.
@@ -109,6 +125,22 @@ mod tests {
         drop(p);
         assert_eq!(g.inflight("a"), 0);
         assert!(g.try_acquire("a").is_ok());
+    }
+
+    #[test]
+    fn evicts_only_idle_unreferenced_tenants() {
+        let g = governor(2);
+        let busy = g.try_acquire("busy").unwrap();
+        drop(g.try_acquire("idle").unwrap());
+        assert_eq!(g.tenant_count(), 2);
+        assert_eq!(g.evict_idle(), 1, "only the idle tenant goes");
+        assert_eq!(g.tenant_count(), 1);
+        assert_eq!(g.inflight("busy"), 1, "held permit keeps its tenant");
+        drop(busy);
+        assert_eq!(g.evict_idle(), 1);
+        assert_eq!(g.tenant_count(), 0);
+        // Eviction never breaks a later acquisition.
+        assert!(g.try_acquire("busy").is_ok());
     }
 
     #[test]

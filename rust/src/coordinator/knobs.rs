@@ -42,10 +42,12 @@ impl Default for ServingKnobs {
 
 impl ServingKnobs {
     /// Knobs seeded from the static [`ServerLimits`]; queue and batch
-    /// bounds start unbounded, the flush delay at 2 ms.
+    /// bounds start unbounded, the flush delay at 2 ms. Seeds clamp
+    /// like the setters do — `max_inflight: 0` would otherwise wedge
+    /// the admission gate into permanent `Busy`.
     pub fn from_limits(limits: &ServerLimits) -> Self {
         ServingKnobs {
-            max_inflight: AtomicUsize::new(limits.max_inflight),
+            max_inflight: AtomicUsize::new(limits.max_inflight.max(1)),
             max_queue: AtomicUsize::new(usize::MAX),
             max_wait_us: AtomicU64::new(2_000),
             batch_limit: AtomicUsize::new(usize::MAX),
@@ -125,6 +127,8 @@ mod tests {
 
     #[test]
     fn zero_clamps_to_one_instead_of_wedging_the_server() {
+        let k = ServingKnobs::from_limits(&ServerLimits { max_inflight: 0 });
+        assert_eq!(k.max_inflight(), 1, "from_limits clamps like the setter");
         let k = ServingKnobs::default();
         k.set_max_inflight(0);
         k.set_max_queue(0);
